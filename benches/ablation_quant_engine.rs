@@ -1,0 +1,89 @@
+//! Ablation: host-native quantization vs the offloaded Pallas `quant_block`
+//! graph for bulk prefill-ingestion quantization.
+//!
+//! DESIGN.md calls this choice out: the cache manager quantizes demoted
+//! tokens host-side (SIMD-friendly scalar code); the alternative ships the
+//! whole block to the accelerator through the L1 Pallas quant kernel. On a
+//! CPU-PJRT testbed the host path wins (no serialization overhead); on a
+//! real accelerator the HLO path amortizes. The bench quantifies the
+//! crossover inputs-per-call.
+
+mod common;
+
+use mikv::bench::{fmt_duration, Bencher, Cell, Table};
+use mikv::quant::{quantize, Precision, QuantParams};
+use mikv::runtime::{Manifest, Runtime};
+use mikv::util::cli::Args;
+use mikv::util::rng::Pcg32;
+
+fn main() {
+    let args = Args::from_env();
+    let dir = common::artifacts_dir(&args);
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        println!("SKIP: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(&dir).unwrap();
+    let model = args.get_str("model", "cfg-s");
+    let entry = manifest.model(&model).unwrap().clone();
+    let rt = Runtime::new().unwrap();
+    let dims = entry.dims.clone();
+    let (rows, d, group) = (dims.max_seq, dims.d_head, dims.quant_group);
+
+    let mut t = Table::new(
+        "ablation_quant_engine",
+        "Bulk quantization: host-native vs HLO (Pallas quant_block) — DESIGN.md ablation",
+        &["Bits", "Engine", "p50 / block", "Melem/s"],
+    );
+    let mut rng = Pcg32::new(5);
+    let x: Vec<f32> = (0..rows * d).map(|_| rng.gen_normal() * 2.0).collect();
+    let n_elem = (rows * d) as f64;
+
+    for (&bits, file) in &entry.quant_graphs {
+        let prec = match bits {
+            2 => Precision::Int2,
+            3 => Precision::Int3,
+            4 => Precision::Int4,
+            8 => Precision::Int8,
+            _ => continue,
+        };
+        // host-native
+        let prm = QuantParams::new(prec, group);
+        let stats = Bencher::new(format!("native{bits}")).iters(20).run(|| {
+            for r in 0..rows {
+                std::hint::black_box(quantize(&x[r * d..(r + 1) * d], prm));
+            }
+        });
+        t.row(vec![
+            Cell::Int(bits as i64),
+            "host-native".into(),
+            fmt_duration(stats.p50).into(),
+            Cell::F(stats.per_second(n_elem) / 1e6, 1),
+        ]);
+
+        // HLO path
+        let g = mikv::runtime::GraphEntry {
+            file: file.clone(),
+            batch: 1,
+            inputs: vec![mikv::runtime::TensorSpec {
+                name: "x".into(),
+                dtype: mikv::runtime::artifacts::Dtype::F32,
+                shape: vec![rows, d],
+            }],
+            outputs: vec!["codes".into(), "scales".into(), "zeros".into()],
+        };
+        let exe = rt.load_executable(&manifest.path(file), g).unwrap();
+        let stats = Bencher::new(format!("hlo{bits}")).iters(20).run(|| {
+            let buf = rt.upload_f32(&x, &[rows, d]).unwrap();
+            std::hint::black_box(exe.execute(&[&buf]).unwrap());
+        });
+        t.row(vec![
+            Cell::Int(bits as i64),
+            "hlo (pallas)".into(),
+            fmt_duration(stats.p50).into(),
+            Cell::F(stats.per_second(n_elem) / 1e6, 1),
+        ]);
+    }
+    t.note(format!("block = [{rows}, {d}] f32, group {group}; HLO path includes host→device upload + tuple readback."));
+    t.emit().unwrap();
+}

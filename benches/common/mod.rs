@@ -1,0 +1,35 @@
+//! Shared helpers for the benchmark binaries (each regenerates one paper
+//! table/figure; `cargo bench` runs them all and writes `bench_out/*.md`).
+
+use mikv::model::Engine;
+use mikv::util::cli::Args;
+
+/// Artifacts directory: `--artifacts` flag or `./artifacts`.
+pub fn artifacts_dir(args: &Args) -> String {
+    args.get_str("artifacts", "artifacts")
+}
+
+/// Load the engine for the bench, or explain how to build artifacts.
+/// Returns `None` (after printing) when artifacts are missing so `cargo
+/// bench` stays green on a fresh checkout.
+pub fn load_engine(args: &Args) -> Option<Engine> {
+    let dir = artifacts_dir(args);
+    let model = args.get_str("model", "cfg-s");
+    if !std::path::Path::new(&dir).join("manifest.json").exists() {
+        println!("SKIP: no artifacts at '{dir}' — run `make artifacts` first");
+        return None;
+    }
+    match Engine::load(&dir, &model) {
+        Ok(e) => Some(e),
+        Err(e) => {
+            println!("SKIP: engine load failed: {e}");
+            None
+        }
+    }
+}
+
+/// Standard sample count: `--samples` flag with a bench-appropriate default
+/// (kept modest — the testbed is a single CPU core).
+pub fn n_samples(args: &Args, default: usize) -> usize {
+    args.get("samples", default).unwrap_or(default)
+}

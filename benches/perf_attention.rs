@@ -1,0 +1,94 @@
+//! §3.4 / §Perf: decode-step latency and serving throughput of the
+//! mixed-precision path vs the full-precision path.
+//!
+//! The paper's claim is that mixed-precision KV enables weight-only-quant
+//! kernels that beat fp batch-GEMV on memory-bound GPUs. On this CPU-PJRT
+//! testbed the analogous statement is: the MiKV decode step (two-tier
+//! fused attention + cache-manager bookkeeping + logically-compressed
+//! state) costs ≈ the full-cache decode step. This bench feeds
+//! EXPERIMENTS.md §Perf.
+
+mod common;
+
+use mikv::bench::{fmt_duration, Bencher, Cell, Table};
+use mikv::model::{CacheMode, Session};
+use mikv::quant::Precision;
+use mikv::util::cli::Args;
+use mikv::util::rng::Pcg32;
+
+fn main() {
+    let args = Args::from_env();
+    let Some(engine) = common::load_engine(&args) else { return };
+    let dims = engine.dims().clone();
+    let mut rng = Pcg32::new(1);
+    let prompt_len = args.get("prompt", 128usize).unwrap().min(dims.max_seq - 40);
+    let iters = args.get("iters", 12usize).unwrap();
+
+    let mk_prompt = |rng: &mut Pcg32| -> Vec<i64> {
+        (0..prompt_len)
+            .map(|_| 1 + rng.gen_below(dims.vocab as u32 - 1) as i64)
+            .collect()
+    };
+
+    let mut t = Table::new(
+        "perf_attention",
+        "Decode-step latency: mixed-precision vs full cache — §3.4 / §Perf",
+        &["Path", "Batch", "p50", "p99", "tokens/s", "Cache %"],
+    );
+
+    let cases: Vec<(&str, CacheMode)> = vec![
+        ("full fp", CacheMode::Full),
+        ("MiKV 20% int2", CacheMode::mikv(&dims, 0.2, Precision::Int2)),
+        ("MiKV 25% int4", CacheMode::mikv(&dims, 0.25, Precision::Int4)),
+        ("RTN int8", CacheMode::rtn(&dims, Precision::Int8)),
+        ("H2O 20% (evict)", CacheMode::h2o(&dims, 0.2)),
+    ];
+
+    for batch in engine.batches("decode_mikv") {
+        for (name, mode) in &cases {
+            // build `batch` prefilled sessions
+            let prompts: Vec<Vec<i64>> = (0..batch).map(|_| mk_prompt(&mut rng)).collect();
+            let mut sessions: Vec<Session> = (0..batch)
+                .map(|i| Session::new(i as u64, &dims, mode.clone()).unwrap())
+                .collect();
+            {
+                let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+                engine.prefill(&mut refs, &prompts).unwrap();
+            }
+            // bench decode steps (each iteration advances the cache by one
+            // token; plenty of headroom below max_seq)
+            let stats = Bencher::new(format!("{name}-b{batch}"))
+                .warmup(2)
+                .iters(iters)
+                .run(|| {
+                    let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+                    let rows = engine.decode_step(&mut refs).unwrap();
+                    for (sess, row) in refs.iter_mut().zip(rows) {
+                        let tok = mikv::model::sampler::greedy(&row);
+                        sess.last_token = tok;
+                        sess.tokens.push(tok);
+                    }
+                });
+            t.row(vec![
+                (*name).into(),
+                Cell::Int(batch as i64),
+                fmt_duration(stats.p50).into(),
+                fmt_duration(stats.p99).into(),
+                Cell::F(stats.per_second(batch as f64), 1),
+                Cell::F(sessions[0].cache.cache_size_pct(), 1),
+            ]);
+        }
+    }
+
+    // prefill latency reference
+    let prompts: Vec<Vec<i64>> = vec![mk_prompt(&mut rng)];
+    let stats = Bencher::new("prefill-b1").warmup(1).iters(5).run(|| {
+        engine.prefill_raw(&prompts).unwrap();
+    });
+    t.note(format!(
+        "prefill (len {prompt_len}, b=1): p50 {}",
+        fmt_duration(stats.p50)
+    ));
+    t.note("Target (§Perf): MiKV decode ≤ 1.15× full-cache decode at equal batch.");
+    t.emit().unwrap();
+}

@@ -1,0 +1,93 @@
+//! Paper Table 1: line-retrieval accuracy when the "evicted" KVs are
+//! retained in low precision, across importance ratios {50, 25, 20}% and
+//! retained precisions {INT4, INT3, INT2, evicted}.
+//!
+//! The paper's headline observation: retention at INT4/INT3 restores
+//! near-full accuracy where eviction collapses; INT2 degrades without the
+//! outlier balancer (Table 2 adds it — here we match Table 1's plain
+//! per-token quantizer, i.e. `nobal`).
+
+mod common;
+
+use mikv::bench::{Cell, Table};
+use mikv::eval::{EvalTask, Harness};
+use mikv::model::CacheMode;
+use mikv::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let Some(engine) = common::load_engine(&args) else { return };
+    let n = common::n_samples(&args, 30);
+    let harness = Harness::new(&engine);
+    let task = EvalTask::LineRet {
+        n_lines: args.get("lines", 20).unwrap(),
+        filler: 0,
+    };
+
+    let dims = engine.dims().clone();
+    let mut modes: Vec<(String, CacheMode)> = vec![(
+        "full".into(),
+        CacheMode::parse("full", &dims).unwrap(),
+    )];
+    for ratio in ["0.5", "0.25", "0.2"] {
+        for prec in ["int4", "int3", "int2"] {
+            // Table 1 uses the plain quantizer (outlier awareness is §3.2)
+            let s = format!("mikv:{ratio}:{prec}:nobal");
+            modes.push((s.clone(), CacheMode::parse(&s, &dims).unwrap()));
+        }
+        let s = format!("h2o:{ratio}");
+        modes.push((s.clone(), CacheMode::parse(&s, &dims).unwrap()));
+    }
+
+    let outcomes = harness.run(&task, &modes, n).unwrap();
+
+    let mut t = Table::new(
+        "table1",
+        "Line retrieval accuracy: retained low-precision vs evicted — paper Table 1",
+        &["Importance ratio", "Retained prec.", "Cache size", "Acc.", "Fidelity vs full"],
+    );
+    let paper: &[(&str, &str, f64, f64)] = &[
+        // (ratio, prec, paper cache %, paper acc %)
+        ("50%", "INT4", 63.0, 100.0),
+        ("50%", "INT3", 59.0, 99.8),
+        ("50%", "INT2", 56.0, 84.6),
+        ("50%", "evicted", 50.0, 43.2),
+        ("25%", "INT4", 45.0, 100.0),
+        ("25%", "INT3", 40.0, 99.8),
+        ("25%", "INT2", 35.0, 68.0),
+        ("25%", "evicted", 25.0, 10.6),
+        ("20%", "INT4", 41.0, 100.0),
+        ("20%", "INT3", 36.0, 100.0),
+        ("20%", "INT2", 32.0, 64.0),
+        ("20%", "evicted", 20.0, 4.0),
+    ];
+    // ours, aligned with the mode list (skipping the leading full row)
+    let full = &outcomes[0];
+    println!(
+        "(reference) full cache: acc {:.1}% at 100% cache\n",
+        100.0 * full.accuracy
+    );
+    for (o, (ratio, prec, paper_cache, paper_acc)) in outcomes[1..].iter().zip(paper) {
+        t.row(vec![
+            (*ratio).into(),
+            (*prec).into(),
+            Cell::Str(format!(
+                "{:.0}% (paper {paper_cache:.0}%)",
+                o.cache_pct
+            )),
+            Cell::Str(format!(
+                "{:.1}% (paper {paper_acc}%)",
+                100.0 * o.accuracy
+            )),
+            Cell::Pct(100.0 * o.fidelity, 1),
+        ]);
+    }
+    t.note(format!(
+        "n={n} samples, model cfg-s ({}M params, trained from scratch); full-cache reference acc {:.1}%.",
+        engine.dims().params as f64 / 1e6,
+        100.0 * full.accuracy
+    ));
+    t.note("Fidelity = token agreement with the full-cache generation (model-quality-independent compression signal).");
+    t.note("Shape to reproduce: retained INT4/INT3 ≈ full-cache accuracy; eviction collapses as the ratio shrinks; INT2 sits between (Table 2 rescues it with the balancer).");
+    t.emit().unwrap();
+}

@@ -1,0 +1,75 @@
+//! Paper Table 4: AlpacaEval win rate of MiKV vs the full cache.
+//!
+//! GPT-4 judging is unavailable offline; we report the deterministic
+//! analogue (see `mikv::eval::agreement`): token agreement between
+//! compressed-cache and full-cache greedy generations on mixed chat-like
+//! prompts, mapped to a proxy win rate where 50% ⇔ indistinguishable.
+
+mod common;
+
+use mikv::bench::{Cell, Table};
+use mikv::eval::agreement::AgreementStats;
+use mikv::eval::{EvalTask, Harness};
+use mikv::model::CacheMode;
+use mikv::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let Some(engine) = common::load_engine(&args) else { return };
+    let n = common::n_samples(&args, 20);
+    let dims = engine.dims().clone();
+    let harness = Harness::new(&engine);
+
+    // chat-like prompts: retrieval with filler, generating several tokens
+    let task = EvalTask::LineRet {
+        n_lines: 14,
+        filler: 2,
+    };
+    let samples = harness.samples(&task, n);
+    let prompts: Vec<Vec<i64>> = samples.iter().map(|s| s.prompt.clone()).collect();
+    let prefills = engine.prefill_raw(&prompts).unwrap();
+
+    let gen_len = args.get("gen", 8usize).unwrap();
+    let mut long_samples = samples.clone();
+    for s in &mut long_samples {
+        s.answer = vec![0; gen_len]; // only the length matters here
+    }
+
+    let (reference, _) = harness
+        .generate_mode(&long_samples, &prefills, &CacheMode::Full)
+        .unwrap();
+
+    let specs = [
+        ("100%", "full"),
+        ("50%", "mikv:0.5:int4"),
+        ("25%", "mikv:0.25:int2"),
+        ("20%", "mikv:0.2:int2"),
+    ];
+    let paper = [50.0, 50.9, 51.1, 48.6];
+
+    let mut t = Table::new(
+        "table4",
+        "Win rate of MiKV over the full cache — paper Table 4 (agreement proxy)",
+        &["Cache size", "Proxy win rate", "Token agreement", "Identical gens", "Paper win rate"],
+    );
+    for ((label, mode_s), p) in specs.iter().zip(&paper) {
+        let mode = CacheMode::parse(mode_s, &dims).unwrap();
+        let (gens, cache_pct) = harness
+            .generate_mode(&long_samples, &prefills, &mode)
+            .unwrap();
+        let mut stats = AgreementStats::default();
+        for (g, r) in gens.iter().zip(&reference) {
+            stats.add(g, r);
+        }
+        t.row(vec![
+            Cell::Str(format!("{label} ({cache_pct:.0}% measured)")),
+            Cell::Pct(stats.proxy_win_rate(), 1),
+            Cell::Pct(100.0 * stats.mean_agreement(), 1),
+            Cell::Pct(100.0 * stats.identical_rate(), 0),
+            Cell::Pct(*p, 1),
+        ]);
+    }
+    t.note(format!("n={n} prompts × {gen_len} greedy tokens; 50% ⇔ parity with the full cache."));
+    t.note("Shape to reproduce: win rate stays ≈50% down to 25% cache, dipping slightly at 20% (paper: 48.6%).");
+    t.emit().unwrap();
+}

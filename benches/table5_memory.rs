@@ -1,0 +1,77 @@
+//! Paper Table 5: KV cache memory footprint, batch 8 × seq 4096.
+//!
+//! Pure arithmetic over the published architectures — reproduced exactly,
+//! alongside the architecture-correct FP16 figures (the paper's numbers
+//! correspond to 4 bytes/value and, for Llama-2-70b, 64 layers; see
+//! `mikv::memory` docs and DESIGN.md).
+
+use mikv::bench::{Cell, Table};
+use mikv::kvcache::TierConfig;
+use mikv::memory::{
+    cache_bytes_at_pct, fmt_gb, full_cache_bytes, mikv_cache_bytes, paper_models,
+    paper_table5_claimed_bytes,
+};
+use mikv::quant::Precision;
+
+fn main() {
+    let (batch, seq) = (8, 4096);
+    let mut t = Table::new(
+        "table5",
+        "KV cache memory footprint (batch 8, seq 4096) — paper Table 5",
+        &[
+            "Model", "GQA", "Cache %", "Paper claim", "Ours (paper conv.)",
+            "Ours (FP16 exact)", "MiKV tiers (hi=FP16 + lo=INT2)",
+        ],
+    );
+    for m in paper_models() {
+        for pct in [100.0, 25.0, 20.0] {
+            let claim: &str = match (m.name, pct as i64) {
+                ("Llama-2-7b", 100) => "34.36GB",
+                ("Llama-2-7b", 25) => "8.59GB",
+                ("Llama-2-7b", 20) => "6.87GB",
+                ("Mistral-7b", 100) => "8.59GB",
+                ("Mistral-7b", 25) => "2.15GB",
+                ("Mistral-7b", 20) => "1.72GB",
+                ("Llama-2-13b", 100) => "53.69GB",
+                ("Llama-2-13b", 25) => "13.42GB",
+                ("Llama-2-13b", 20) => "10.74GB",
+                ("Llama-2-70b", 100) => "17.18GB",
+                ("Llama-2-70b", 25) => "4.30GB",
+                ("Llama-2-70b", 20) => "3.44GB",
+                _ => "-",
+            };
+            let ours_claimconv =
+                (paper_table5_claimed_bytes(&m, batch, seq) as f64 * pct / 100.0) as u64;
+            let ours_fp16 = cache_bytes_at_pct(&m, batch, seq, pct);
+            // a MiKV tier mix that actually lands at ~pct
+            let mikv = if pct < 100.0 {
+                let (hi_f, hi, lo) = mikv::memory::tiers_for_target_pct(pct, m.head_dim);
+                fmt_gb(mikv_cache_bytes(&m, batch, seq, &hi, &lo, hi_f))
+            } else {
+                fmt_gb(mikv_cache_bytes(
+                    &m,
+                    batch,
+                    seq,
+                    &TierConfig::fp16(),
+                    &TierConfig::quantized(Precision::Int2, m.head_dim / 2),
+                    1.0,
+                ))
+            };
+            t.row(vec![
+                m.name.into(),
+                if m.gqa() { "yes" } else { "no" }.into(),
+                Cell::Pct(pct, 0),
+                claim.into(),
+                fmt_gb(ours_claimconv).into(),
+                fmt_gb(ours_fp16).into(),
+                mikv.into(),
+            ]);
+        }
+    }
+    t.note("Paper claims match our reproduction under the paper's convention (4 bytes/value; Llama-2-70b computed with 64 layers — see DESIGN.md §Deviations).");
+    t.note(format!(
+        "FP16-exact column uses 2 bytes/value and true layer counts; e.g. Llama-2-7b full = {}.",
+        fmt_gb(full_cache_bytes(&paper_models()[0], batch, seq))
+    ));
+    t.emit().unwrap();
+}

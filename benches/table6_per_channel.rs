@@ -1,0 +1,166 @@
+//! Paper Table 6 (Appendix C): simulated per-channel key quantization.
+//!
+//! Exactly the paper's hypothetical scheme: quantize the prefix's key
+//! tensor per *channel* (group 64 along the sequence) as-is, keep the
+//! H2O-top-20% tokens in FP16, values per-token; no reordering/buffering.
+//! Decode then runs against the resulting (dequantized) cache via the
+//! full-cache graph — precision effects are entirely in the cached values,
+//! as in the paper's simulation.
+
+mod common;
+
+use mikv::bench::{Cell, Table};
+use mikv::eval::{EvalTask, Harness};
+use mikv::kvcache::accounting;
+use mikv::model::{CacheMode, Engine, PrefillOutput};
+use mikv::quant::perchannel::{per_channel_overhead_bits, quantize_dequantize_per_channel};
+use mikv::quant::{dequantize, quantize, Precision, QuantParams};
+use mikv::util::cli::Args;
+
+/// Apply the Table-6 simulation to one prefill output in place.
+fn simulate(
+    engine: &Engine,
+    pf: &mut PrefillOutput,
+    prec: Precision,
+    hi_ratio: f64,
+    per_channel: bool,
+    group_seq: usize,
+) {
+    let dims = engine.dims();
+    let planes = dims.planes();
+    let d = dims.d_head;
+    let t = pf.seq_len;
+    let keep = ((t as f64) * hi_ratio).ceil() as usize;
+
+    for p in 0..planes {
+        // H2O top-`keep` slots by prefill attention mass
+        let acc = &pf.attn_acc[p * t..(p + 1) * t];
+        let mut idx: Vec<usize> = (0..t).collect();
+        idx.sort_by(|&a, &b| acc[b].partial_cmp(&acc[a]).unwrap());
+        let hi: std::collections::HashSet<usize> = idx[..keep].iter().copied().collect();
+
+        let kblock = &mut pf.k[p * t * d..(p + 1) * t * d];
+        let orig = kblock.to_vec();
+        if per_channel {
+            let qdq = quantize_dequantize_per_channel(&orig, t, d, prec, group_seq);
+            kblock.copy_from_slice(&qdq);
+        } else {
+            // per-token baseline for the same comparison
+            let prm = QuantParams::new(prec, d / 2);
+            for s in 0..t {
+                let q = quantize(&orig[s * d..(s + 1) * d], prm);
+                kblock[s * d..(s + 1) * d].copy_from_slice(&dequantize(&q));
+            }
+        }
+        // restore the FP16 importance tokens
+        for &s in &hi {
+            kblock[s * d..(s + 1) * d].copy_from_slice(&orig[s * d..(s + 1) * d]);
+        }
+        // values: per-token quantization on lo slots (both variants)
+        let vblock = &mut pf.v[p * t * d..(p + 1) * t * d];
+        let prm = QuantParams::new(prec, d / 2);
+        for s in 0..t {
+            if !hi.contains(&s) {
+                let q = quantize(&vblock[s * d..(s + 1) * d], prm);
+                vblock[s * d..(s + 1) * d].copy_from_slice(&dequantize(&q));
+            }
+        }
+    }
+}
+
+fn main() {
+    let args = Args::from_env();
+    let Some(engine) = common::load_engine(&args) else { return };
+    let n = common::n_samples(&args, 30);
+    let dims = engine.dims().clone();
+    let harness = Harness::new(&engine);
+    let task = EvalTask::LineRet { n_lines: 20, filler: 0 };
+    let samples = harness.samples(&task, n);
+    let prompts: Vec<Vec<i64>> = samples.iter().map(|s| s.prompt.clone()).collect();
+    let base_prefills = engine.prefill_raw(&prompts).unwrap();
+
+    // balancer per-token variant comes from the real MiKV path
+    let bal_modes = [
+        ("INT3", "mikv:0.2:int3"),
+        ("INT2", "mikv:0.2:int2"),
+    ];
+
+    let mut t = Table::new(
+        "table6",
+        "Per-channel key quantization (simulated, ratio 20%) — paper Table 6",
+        &["Retained prec.", "Outlier handling", "Cache size", "Acc."],
+    );
+    let paper = [
+        ("INT3", "none (per-token)", 36.0, 100.0),
+        ("INT3", "channel balancer", 38.0, 99.8),
+        ("INT3", "per-channel", 38.0, 99.4),
+        ("INT2", "none (per-token)", 32.0, 64.0),
+        ("INT2", "channel balancer", 33.0, 92.6),
+        ("INT2", "per-channel", 33.0, 99.2),
+    ];
+    let mut rows: Vec<(String, String, f64, f64)> = Vec::new();
+
+    for (label, prec) in [("INT3", Precision::Int3), ("INT2", Precision::Int2)] {
+        // (a) per-token, no balancer — simulated on the full-cache graph for
+        // apples-to-apples with (c)
+        for (handling, per_channel) in [("none (per-token)", false), ("per-channel", true)] {
+            let mut pfs: Vec<PrefillOutput> = base_prefills
+                .iter()
+                .map(|p| PrefillOutput {
+                    seq_len: p.seq_len,
+                    k: p.k.clone(),
+                    v: p.v.clone(),
+                    attn_acc: p.attn_acc.clone(),
+                    qmax: p.qmax.clone(),
+                    kmax: p.kmax.clone(),
+                    last_logits: p.last_logits.clone(),
+                })
+                .collect();
+            for pf in &mut pfs {
+                simulate(&engine, pf, prec, 0.2, per_channel, 64);
+            }
+            let (gens, _) = harness
+                .generate_mode(&samples, &pfs, &CacheMode::Full)
+                .unwrap();
+            let acc = gens
+                .iter()
+                .zip(&samples)
+                .filter(|(g, s)| g[..] == s.answer[..])
+                .count() as f64
+                / n as f64;
+            // analytic cache %: 20% fp16 + 80% quantized w/ metadata
+            let mean_t = pfs.iter().map(|p| p.seq_len).sum::<usize>() / pfs.len();
+            let overhead = if per_channel {
+                per_channel_overhead_bits(mean_t, 64)
+            } else {
+                // per-token groups d/2: 2 groups × 2 × 16 bits / d elems
+                (2.0 * 2.0 * 16.0) / dims.d_head as f64
+            };
+            let lo_bits = prec.bits() as f64 + overhead;
+            let pct = 100.0 * (0.2 + 0.8 * (lo_bits / 16.0));
+            rows.push((label.to_string(), handling.to_string(), pct, 100.0 * acc));
+        }
+        // (b) channel balancer via the real mixed-precision path
+        let mode_s = bal_modes.iter().find(|(l, _)| *l == label).unwrap().1;
+        let mode = CacheMode::parse(mode_s, &dims).unwrap();
+        let o = &harness
+            .run(&task, &[(mode_s.to_string(), mode)], n)
+            .unwrap()[0];
+        rows.insert(
+            rows.len() - 1,
+            (label.to_string(), "channel balancer".to_string(), o.cache_pct, 100.0 * o.accuracy),
+        );
+    }
+
+    for ((prec, handling, pct, acc), (_, _, p_pct, p_acc)) in rows.iter().zip(&paper) {
+        t.row(vec![
+            prec.clone().into(),
+            handling.clone().into(),
+            Cell::Str(format!("{pct:.0}% (paper {p_pct:.0}%)")),
+            Cell::Str(format!("{acc:.1}% (paper {p_acc}%)")),
+        ]);
+    }
+    t.note(format!("n={n} samples; per-channel simulated exactly as App. C (group 64 along sequence, keys only, no reordering)."));
+    t.note("Shape to reproduce: per-channel isolates outliers and matches/beats the balancer at INT2; both far above plain per-token.");
+    t.emit().unwrap();
+}

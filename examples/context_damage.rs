@@ -1,0 +1,78 @@
+//! Context damage from eviction — the paper's Fig. 1/2 scenario at token
+//! level.
+//!
+//! A "protected fact" (key→value record) is planted early in the context,
+//! followed by a long stretch of unrelated material. Under aggressive
+//! H2O eviction the early record's KV entries are discarded and the model
+//! fails the later query — the token-level analogue of the paper's safety
+//! breach / context loss. MiKV retains the same budget but keeps the
+//! record in low precision, and the query still succeeds.
+//!
+//! ```sh
+//! cargo run --release --example context_damage
+//! ```
+
+use mikv::eval::corpus::{self, BOS, QUERY, REC};
+use mikv::model::{CacheMode, Engine, Session};
+use mikv::quant::Precision;
+use mikv::util::rng::Pcg32;
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::load("artifacts", "cfg-s")?;
+    let dims = engine.dims().clone();
+    let mut rng = Pcg32::new(2024);
+
+    let n_trials = 12;
+    let mut results: Vec<(String, usize)> = Vec::new();
+    let modes: Vec<(String, CacheMode)> = vec![
+        ("full cache".into(), CacheMode::Full),
+        ("H2O evict @15%".into(), CacheMode::h2o(&dims, 0.15)),
+        (
+            "MiKV @15% (int2)".into(),
+            CacheMode::mikv(&dims, 0.15, Precision::Int2),
+        ),
+    ];
+
+    for (name, mode) in &modes {
+        let mut rng_t = Pcg32::new(rng.next_u64());
+        let mut hits = 0;
+        for _ in 0..n_trials {
+            // The protected fact FIRST, then a wall of distractor records
+            // and filler, then the query about the protected fact.
+            let key: Vec<i64> =
+                vec![corpus::KEY_BASE + rng_t.gen_below(corpus::KEY_N as u32) as i64];
+            let val: Vec<i64> = vec![
+                corpus::VAL_BASE + rng_t.gen_below(corpus::VAL_N as u32) as i64,
+                corpus::VAL_BASE + rng_t.gen_below(corpus::VAL_N as u32) as i64,
+            ];
+            let mut prompt = vec![BOS, REC];
+            prompt.extend(&key);
+            prompt.extend(&val);
+            // distractors: many later records the policy will prefer
+            let distract = corpus::gen_lineret(&mut rng_t, 18, 2);
+            prompt.extend(&distract.prompt[1..distract.prompt.len() - 2]);
+            prompt.push(QUERY);
+            prompt.extend(&key);
+            if prompt.len() + 4 >= dims.max_seq {
+                prompt.truncate(dims.max_seq - 4);
+            }
+
+            let mut sess = Session::new(0, &dims, mode.clone())?;
+            let out = engine.generate_greedy(&mut sess, &prompt, val.len(), None)?;
+            if out == val {
+                hits += 1;
+            }
+        }
+        results.push((name.clone(), hits));
+    }
+
+    println!("\nProtected early fact retrieved after long distractor context:");
+    println!("(the paper's Fig. 1/2 mechanism: eviction silently drops early context)\n");
+    for (name, hits) in &results {
+        println!(
+            "  {name:<20} {hits}/{n_trials} retrieved {}",
+            if *hits * 2 >= n_trials { "" } else { "  ← context damage" }
+        );
+    }
+    Ok(())
+}

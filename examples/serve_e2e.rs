@@ -1,0 +1,143 @@
+//! End-to-end serving driver (the repo's headline validation run).
+//!
+//! Boots the full stack — engine (AOT artifacts trained by `make
+//! artifacts`), continuous-batching coordinator, TCP JSON-lines server —
+//! then drives a batched workload of line-retrieval requests through real
+//! sockets with a mix of cache modes, and reports accuracy, latency
+//! percentiles, throughput, and cache compression. Recorded in
+//! EXPERIMENTS.md §End-to-end.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example serve_e2e -- --requests 24
+//! ```
+
+use mikv::coordinator::{Coordinator, CoordinatorConfig, Request};
+use mikv::eval::corpus;
+use mikv::model::Engine;
+use mikv::util::cli::Args;
+use mikv::util::json::Json;
+use mikv::util::rng::Pcg32;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let artifacts = args.get_str("artifacts", "artifacts");
+    let model = args.get_str("model", "cfg-s");
+    let n_requests = args.get("requests", 24usize)?;
+    let port: u16 = args.get("port", 7791u16)?;
+
+    // --- boot the server stack ---
+    // PJRT handles are not Send, so the engine/coordinator stay on the MAIN
+    // thread; the TCP listener and the benchmark client run on workers.
+    let engine = Engine::load(&artifacts, &model)?;
+    let dims = engine.dims().clone();
+    let (tx, rx) = std::sync::mpsc::channel::<Request>();
+    let listener = std::net::TcpListener::bind(("127.0.0.1", port))?;
+    {
+        let dims = dims.clone();
+        std::thread::spawn(move || {
+            let _ = mikv::server::serve(listener, dims, tx);
+        });
+    }
+    std::thread::spawn(move || {
+        if let Err(e) = run_client(port, n_requests) {
+            eprintln!("client error: {e}");
+            std::process::exit(1);
+        }
+        std::process::exit(0);
+    });
+    Coordinator::new(
+        engine,
+        CoordinatorConfig {
+            max_active: 8,
+            prefill_chunk: 4,
+            ..Default::default()
+        },
+    )
+    .run(rx);
+    Ok(())
+}
+
+/// Drive the mixed-mode workload through a real socket and print the report.
+fn run_client(port: u16, n_requests: usize) -> anyhow::Result<()> {
+    // --- client: mixed-mode line-retrieval workload over the socket ---
+    let stream = TcpStream::connect(("127.0.0.1", port))?;
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+
+    let mut rng = Pcg32::new(99);
+    let mode_jsons = [
+        r#""mode":"full""#,
+        r#""mode":"mikv","ratio":0.25,"lo":"int2""#,
+        r#""mode":"mikv","ratio":0.2,"lo":"int2""#,
+        r#""mode":"h2o","ratio":0.25"#,
+    ];
+    let mut expected: Vec<Vec<i64>> = Vec::new();
+    let t0 = Instant::now();
+    for i in 0..n_requests {
+        let sample = corpus::gen_lineret(&mut rng, 14, 1);
+        let prompt: Vec<String> = sample.prompt.iter().map(|t| t.to_string()).collect();
+        let line = format!(
+            r#"{{"id":{i},"prompt":[{}],"max_new":{},{}}}"#,
+            prompt.join(","),
+            sample.answer.len(),
+            mode_jsons[i % mode_jsons.len()]
+        );
+        writer.write_all(line.as_bytes())?;
+        writer.write_all(b"\n")?;
+        expected.push(sample.answer);
+    }
+
+    // --- collect responses ---
+    let mut per_mode: Vec<(usize, usize, f64, f64)> = vec![(0, 0, 0.0, 0.0); mode_jsons.len()];
+    let mut latencies = Vec::new();
+    let mut got = 0usize;
+    for line in reader.lines() {
+        let v = Json::parse(&line?)?;
+        let id = (v.field_i64("id")? & 0xFFFF_FFFF) as usize;
+        let tokens: Vec<i64> = v
+            .field_arr("tokens")?
+            .iter()
+            .map(|t| t.as_i64().unwrap_or(-1))
+            .collect();
+        let m = id % mode_jsons.len();
+        per_mode[m].1 += 1;
+        if tokens == expected[id] {
+            per_mode[m].0 += 1;
+        }
+        per_mode[m].2 += v.field_f64("cache_pct")?;
+        per_mode[m].3 += v.field_f64("latency_ms")?;
+        latencies.push(v.field_f64("latency_ms")?);
+        got += 1;
+        if got == n_requests {
+            break;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    drop(writer);
+
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    println!("\n=== serve_e2e: {n_requests} requests over TCP, wall {wall:.2}s ===");
+    println!(
+        "throughput: {:.1} req/s | latency p50 {:.0}ms p99 {:.0}ms",
+        n_requests as f64 / wall,
+        latencies[latencies.len() / 2],
+        latencies[latencies.len() - 1],
+    );
+    let names = ["full", "mikv 25%", "mikv 20%", "h2o 25%"];
+    for (name, (hit, n, cache, lat)) in names.iter().zip(&per_mode) {
+        if *n == 0 {
+            continue;
+        }
+        println!(
+            "  {name:<10} acc {:>5.1}%  cache {:>5.1}%  mean latency {:>6.1}ms  (n={n})",
+            100.0 * *hit as f64 / *n as f64,
+            cache / *n as f64,
+            lat / *n as f64
+        );
+    }
+
+    Ok(())
+}

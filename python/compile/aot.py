@@ -1,0 +1,347 @@
+"""AOT pipeline: train → lower → dump goldens → write manifest.
+
+Python runs ONCE here (`make artifacts`); the rust binary is self-contained
+afterwards. For every (model config, batch size) this emits HLO **text**
+(not serialized protos — the image's xla_extension 0.5.1 rejects jax≥0.5's
+64-bit instruction ids; the text parser reassigns ids):
+
+    artifacts/
+      manifest.json                     index of everything below
+      weights-<cfg>.mikv                trained checkpoint (runtime inputs)
+      <cfg>-prefill-b<B>.hlo.txt
+      <cfg>-decode_mikv-b<B>.hlo.txt
+      <cfg>-decode_full-b<B>.hlo.txt
+      <cfg>-quant<bits>.hlo.txt         bulk quantization (ablation path)
+      golden-<cfg>.mikv                 parity fixtures for rust tests
+
+Usage: python -m compile.aot --out ../artifacts [--models a,b] [--steps N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+
+# The graph contracts use S64 scalars/ids (tokens, pos, oracle_k); without
+# x64 jax silently downcasts them to S32 and the rust-side literals would
+# mismatch the compiled parameter shapes.
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus
+from .kernels.quant import quantize_block
+from .model import (
+    CONFIGS,
+    ModelConfig,
+    decode_full,
+    decode_mikv,
+    init_params,
+    param_names,
+    param_shapes,
+    params_to_list,
+    prefill,
+)
+from .tensorio import read_tensors, write_tensors
+from .train import load_checkpoint, save_checkpoint, train
+
+# Batch sizes emitted per model.
+BATCHES = {"cfg-tiny": [1, 2], "cfg-s": [1, 4], "cfg-s-gqa": [1], "cfg-m": [1]}
+# Training steps per model (cfg-tiny stays random-init: goldens only).
+TRAIN_STEPS = {"cfg-tiny": 0, "cfg-s": 900, "cfg-s-gqa": 120, "cfg-m": 200}
+QUANT_BITS = [2, 3, 4, 8]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docs)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+# ----------------------------------------------------------------------
+# Graph input/output contracts (mirrored by rust/src/runtime/artifacts.rs)
+# ----------------------------------------------------------------------
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def weight_specs(cfg: ModelConfig):
+    shapes = param_shapes(cfg)
+    return [spec(shapes[n]) for n in param_names(cfg)]
+
+
+def cache_dims(cfg: ModelConfig, b: int):
+    return b, cfg.n_layers, cfg.n_kv_heads, cfg.max_seq, cfg.d_head
+
+
+def graph_io(cfg: ModelConfig, kind: str, b: int):
+    """(input name/shape/dtype list, output name list) for a graph kind."""
+    l, h, s, d = cfg.n_layers, cfg.n_kv_heads, cfg.max_seq, cfg.d_head
+    ng = cfg.n_groups
+    w_inputs = [
+        {"name": f"w.{n}", "dtype": "f32", "shape": list(param_shapes(cfg)[n])}
+        for n in param_names(cfg)
+    ]
+    f32 = lambda name, shape: {"name": name, "dtype": "f32", "shape": list(shape)}
+    i64 = lambda name, shape: {"name": name, "dtype": "i64", "shape": list(shape)}
+    if kind == "prefill":
+        ins = w_inputs + [i64("tokens", (b, s)), f32("len_mask", (b, s))]
+        outs = ["logits", "k", "v", "attn_acc", "qmax", "kmax"]
+    elif kind == "decode_mikv":
+        ins = w_inputs + [
+            i64("token", (b,)), i64("pos", (b,)),
+            f32("k_hi", (b, l, h, s, d)), f32("v_hi", (b, l, h, s, d)),
+            f32("hi_mask", (b, l, h, s)),
+            f32("k_lo_codes", (b, l, h, s, d)),
+            f32("k_lo_scale", (b, l, h, s, ng)), f32("k_lo_zero", (b, l, h, s, ng)),
+            f32("v_lo_codes", (b, l, h, s, d)),
+            f32("v_lo_scale", (b, l, h, s, ng)), f32("v_lo_zero", (b, l, h, s, ng)),
+            f32("lo_mask", (b, l, h, s)), f32("inv_b", (b, l, h, d)),
+        ]
+        outs = ["logits", "k_new", "v_new", "attn_prev", "attn_self"]
+    elif kind == "decode_full":
+        ins = w_inputs + [
+            i64("token", (b,)), i64("pos", (b,)),
+            f32("k_full", (b, l, h, s, d)), f32("v_full", (b, l, h, s, d)),
+            f32("mask", (b, l, h, s)), i64("oracle_k", ()),
+        ]
+        outs = ["logits", "k_new", "v_new", "attn_prev", "attn_self"]
+    else:
+        raise ValueError(kind)
+    return ins, outs
+
+
+def lower_graph(cfg: ModelConfig, kind: str, b: int) -> str:
+    ins, _ = graph_io(cfg, kind, b)
+    arg_specs = [
+        spec(i["shape"], jnp.int64 if i["dtype"] == "i64" else jnp.float32)
+        for i in ins
+    ]
+    nw = len(param_names(cfg))
+
+    if kind == "prefill":
+        fn = lambda *a: prefill(cfg, a[:nw], *a[nw:], use_pallas=True)
+    elif kind == "decode_mikv":
+        fn = lambda *a: decode_mikv(cfg, a[:nw], *a[nw:], use_pallas=True)
+    elif kind == "decode_full":
+        fn = lambda *a: decode_full(cfg, a[:nw], *a[nw:])
+    else:
+        raise ValueError(kind)
+
+    lowered = jax.jit(fn).lower(*arg_specs)
+    return to_hlo_text(lowered)
+
+
+def lower_quant(cfg: ModelConfig, bits: int) -> str:
+    """Bulk quantization graph: [max_seq, d_head] → codes/scales/zeros."""
+    fn = lambda x: quantize_block(x, bits=bits, group=cfg.quant_group, use_pallas=True)
+    lowered = jax.jit(fn).lower(spec((cfg.max_seq, cfg.d_head)))
+    return to_hlo_text(lowered)
+
+
+# ----------------------------------------------------------------------
+# Golden parity fixtures (rust integration tests replay these)
+# ----------------------------------------------------------------------
+
+
+def make_goldens(cfg: ModelConfig, params: dict, b: int, seed: int = 1234):
+    """Run prefill + one decode_mikv + one decode_full step in python and
+    record all inputs/outputs for bit-parity replay from rust."""
+    rng = np.random.default_rng(seed)
+    l, h, s, d = cfg.n_layers, cfg.n_kv_heads, cfg.max_seq, cfg.d_head
+    ng = cfg.n_groups
+    flat = params_to_list(cfg, params)
+
+    out: dict[str, np.ndarray] = {}
+
+    # ---- prefill ----
+    samples = [corpus.gen_lineret(rng, 4) for _ in range(b)]
+    tokens, len_mask, _ = corpus.batch_samples(samples, s)
+    pf = jax.jit(lambda *a: prefill(cfg, a[:len(flat)], *a[len(flat):], use_pallas=True))
+    logits, k, v, acc, qmax, kmax = pf(*flat, jnp.asarray(tokens), jnp.asarray(len_mask))
+    out["prefill.in.tokens"] = tokens
+    out["prefill.in.len_mask"] = len_mask
+    for name, val in [
+        ("logits", logits), ("k", k), ("v", v),
+        ("attn_acc", acc), ("qmax", qmax), ("kmax", kmax),
+    ]:
+        out[f"prefill.out.{name}"] = np.asarray(val)
+
+    # ---- decode_mikv with a synthetic cache state ----
+    f = lambda *shape: rng.standard_normal(shape).astype(np.float32)
+    hi_mask = (rng.random((b, l, h, s)) < 0.3).astype(np.float32)
+    lo_mask = ((rng.random((b, l, h, s)) < 0.5) * (1 - hi_mask)).astype(np.float32)
+    din = {
+        "token": rng.integers(1, cfg.vocab, size=(b,)).astype(np.int64),
+        "pos": np.full((b,), s // 2, dtype=np.int64),
+        "k_hi": f(b, l, h, s, d), "v_hi": f(b, l, h, s, d),
+        "hi_mask": hi_mask,
+        "k_lo_codes": rng.integers(0, 16, size=(b, l, h, s, d)).astype(np.float32),
+        "k_lo_scale": (0.01 + rng.random((b, l, h, s, ng))).astype(np.float32),
+        "k_lo_zero": f(b, l, h, s, ng),
+        "v_lo_codes": rng.integers(0, 16, size=(b, l, h, s, d)).astype(np.float32),
+        "v_lo_scale": (0.01 + rng.random((b, l, h, s, ng))).astype(np.float32),
+        "v_lo_zero": f(b, l, h, s, ng),
+        "lo_mask": lo_mask,
+        "inv_b": (0.5 + rng.random((b, l, h, d))).astype(np.float32),
+    }
+    dm = jax.jit(lambda *a: decode_mikv(cfg, a[:len(flat)], *a[len(flat):], use_pallas=True))
+    ins_order = ["token", "pos", "k_hi", "v_hi", "hi_mask", "k_lo_codes",
+                 "k_lo_scale", "k_lo_zero", "v_lo_codes", "v_lo_scale",
+                 "v_lo_zero", "lo_mask", "inv_b"]
+    res = dm(*flat, *[jnp.asarray(din[n]) for n in ins_order])
+    for n in ins_order:
+        out[f"decode_mikv.in.{n}"] = din[n]
+    for name, val in zip(["logits", "k_new", "v_new", "attn_prev", "attn_self"], res):
+        out[f"decode_mikv.out.{name}"] = np.asarray(val)
+
+    # ---- decode_full with oracle ----
+    mask = np.zeros((b, l, h, s), dtype=np.float32)
+    mask[:, :, :, : s // 2] = 1.0
+    fin = {
+        "token": din["token"], "pos": din["pos"],
+        "k_full": f(b, l, h, s, d), "v_full": f(b, l, h, s, d),
+        "mask": mask, "oracle_k": np.asarray(8, dtype=np.int64),
+    }
+    df = jax.jit(lambda *a: decode_full(cfg, a[:len(flat)], *a[len(flat):]))
+    fins_order = ["token", "pos", "k_full", "v_full", "mask", "oracle_k"]
+    res = df(*flat, *[jnp.asarray(fin[n]) for n in fins_order])
+    for n in fins_order:
+        out[f"decode_full.in.{n}"] = fin[n]
+    for name, val in zip(["logits", "k_new", "v_new", "attn_prev", "attn_self"], res):
+        out[f"decode_full.out.{name}"] = np.asarray(val)
+
+    return out
+
+
+# ----------------------------------------------------------------------
+# Main
+# ----------------------------------------------------------------------
+
+
+def corpus_constants() -> dict:
+    return {
+        "PAD": corpus.PAD, "BOS": corpus.BOS, "REC": corpus.REC,
+        "SEP": corpus.SEP, "QUERY": corpus.QUERY, "ANS": corpus.ANS,
+        "EOS": corpus.EOS, "HOP": corpus.HOP,
+        "KEY_BASE": corpus.KEY_BASE, "KEY_N": corpus.KEY_N,
+        "VAL_BASE": corpus.VAL_BASE, "VAL_N": corpus.VAL_N,
+        "FILL_BASE": corpus.FILL_BASE, "FILL_N": corpus.FILL_N,
+        "PAT_BASE": corpus.PAT_BASE, "PAT_N": corpus.PAT_N,
+        "VOCAB": corpus.VOCAB, "KEY_TOKS": corpus.KEY_TOKS,
+        "VAL_TOKS": corpus.VAL_TOKS,
+    }
+
+
+def get_or_train_weights(cfg: ModelConfig, out_dir: str, steps: int, log) -> tuple[dict, dict]:
+    path = os.path.join(out_dir, f"weights-{cfg.name}.mikv")
+    if os.path.exists(path):
+        params, meta = load_checkpoint(path)
+        if meta.get("train_steps", -1) == steps:
+            log(f"  weights cached: {path}")
+            return params, meta
+    if steps == 0:
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        meta = {"train_steps": 0, "loss_curve": []}
+    else:
+        params, curve = train(cfg, steps=steps, log=log)
+        meta = {"train_steps": steps, "loss_curve": curve}
+    save_checkpoint(path, cfg, {n: np.asarray(a) for n, a in params.items()}, meta)
+    log(f"  wrote {path}")
+    return params, meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="cfg-tiny,cfg-s,cfg-s-gqa")
+    ap.add_argument("--steps", type=int, default=-1, help="override train steps")
+    ap.add_argument("--skip-quant", action="store_true")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    log = lambda *a: print(*a, file=sys.stderr, flush=True)
+    manifest: dict = {"version": 1, "corpus": corpus_constants(), "models": {}}
+
+    for name in args.models.split(","):
+        cfg = CONFIGS[name]
+        log(f"[aot] model {name} ({cfg.param_count()/1e6:.2f}M params)")
+        steps = args.steps if args.steps >= 0 else TRAIN_STEPS[name]
+        params, meta = get_or_train_weights(cfg, args.out, steps, log)
+
+        entry: dict = {
+            "config": {
+                "vocab": cfg.vocab, "d_model": cfg.d_model,
+                "n_layers": cfg.n_layers, "n_q_heads": cfg.n_q_heads,
+                "n_kv_heads": cfg.n_kv_heads, "d_head": cfg.d_head,
+                "d_ff": cfg.d_ff, "max_seq": cfg.max_seq,
+                "rope_theta": cfg.rope_theta, "quant_group": cfg.quant_group,
+                "params": cfg.param_count(),
+            },
+            "weights": f"weights-{cfg.name}.mikv",
+            "train_steps": meta.get("train_steps", 0),
+            "loss_curve": meta.get("loss_curve", []),
+            "param_order": param_names(cfg),
+            "graphs": {},
+            "quant_graphs": {},
+        }
+
+        for b in BATCHES[name]:
+            for kind in ["prefill", "decode_mikv", "decode_full"]:
+                t0 = time.time()
+                text = lower_graph(cfg, kind, b)
+                fname = f"{name}-{kind}-b{b}.hlo.txt"
+                with open(os.path.join(args.out, fname), "w") as fh:
+                    fh.write(text)
+                ins, outs = graph_io(cfg, kind, b)
+                entry["graphs"][f"{kind}-b{b}"] = {
+                    "file": fname, "batch": b, "inputs": ins, "outputs": outs,
+                }
+                log(f"  lowered {fname} ({len(text)/1e6:.1f}MB, {time.time()-t0:.1f}s)")
+
+        if not args.skip_quant:
+            for bits in QUANT_BITS:
+                text = lower_quant(cfg, bits)
+                fname = f"{name}-quant{bits}.hlo.txt"
+                with open(os.path.join(args.out, fname), "w") as fh:
+                    fh.write(text)
+                entry["quant_graphs"][str(bits)] = {
+                    "file": fname,
+                    "rows": cfg.max_seq,
+                    "dim": cfg.d_head,
+                    "group": cfg.quant_group,
+                }
+
+        # Golden fixtures only for the smallest config (fast + sufficient).
+        if name == "cfg-tiny":
+            for b in BATCHES[name]:
+                gold = make_goldens(cfg, params, b)
+                gname = f"golden-{name}-b{b}.mikv"
+                write_tensors(
+                    os.path.join(args.out, gname), gold,
+                    {"model": name, "batch": b, "seed": 1234},
+                )
+                entry.setdefault("goldens", {})[str(b)] = gname
+                log(f"  wrote {gname}")
+
+        manifest["models"][name] = entry
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=2)
+    log(f"[aot] wrote {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,199 @@
+"""L1 Pallas kernel: fused mixed-precision decode attention.
+
+This is the MiKV hot spot — the TPU adaptation of the paper's §3.4 GPU
+weight-only-quant GEMV trick. One grid step processes one batch lane with
+ALL of its KV heads resident (block `[H, …]`):
+
+* the lo-tier K/V arrive as **integer codes + per-group scale/zero**, and
+  are dequantized *inside the kernel's VMEM block* — so in a real TPU
+  deployment the HBM→VMEM traffic is the compressed representation, the
+  exact analogue of the paper's "apply weight-only quantization kernels
+  instead of batch-GEMV";
+* the channel balancer inverse (`1/b`) is fused into the dequantized keys
+  as a free VPU element-wise multiply (paper eq. 3–4, runtime-inverse
+  formulation — queries stay untouched so hi-tier scores are bit-identical
+  to the unbalanced path);
+* hi and lo tiers are processed as two homogeneous batched-matmul loops
+  feeding one shared softmax — the paper's permutation-invariance argument
+  (§3.4) realized as tier grouping instead of per-token branching.
+
+Grid: `(B,)`. §Perf iteration #1 (EXPERIMENTS.md): the original grid was
+`(B, H_kv)`, one plane per step; under interpret mode the grid lowers to a
+sequential HLO loop, so per-head steps serialized 8–32 kernel bodies per
+layer. Folding heads into the block vectorizes them (einsums over the
+`h` axis) at a VMEM cost of H× per step — for the repro config that is
+8 × 51 KB ≈ 0.4 MB, still ≪ 16 MB VMEM (DESIGN.md §Perf-estimates).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO with identical numerics.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF, mikv_attention_ref
+
+
+def _mikv_attn_kernel(
+    # inputs (leading 1 block dim from the batch grid)
+    q_ref,        # [1, H, G, D]
+    k_new_ref,    # [1, H, D]
+    v_new_ref,    # [1, H, D]
+    k_hi_ref,     # [1, H, S, D]
+    v_hi_ref,     # [1, H, S, D]
+    hi_mask_ref,  # [1, H, S]
+    k_lo_c_ref,   # [1, H, S, D]
+    k_lo_s_ref,   # [1, H, S, NG]
+    k_lo_z_ref,   # [1, H, S, NG]
+    v_lo_c_ref,
+    v_lo_s_ref,
+    v_lo_z_ref,
+    lo_mask_ref,  # [1, H, S]
+    inv_b_ref,    # [1, H, D]
+    # outputs
+    out_ref,       # [1, H, G, D]
+    attn_prev_ref, # [1, H, S]
+    attn_self_ref, # [1, H, G]  (per-q-head self prob; summed host-side)
+    *,
+    group: int,
+):
+    q = q_ref[...]          # [B, H, G, D]
+    k_new = k_new_ref[...]  # [B, H, D]
+    v_new = v_new_ref[...]
+    k_hi = k_hi_ref[...]    # [B, H, S, D]
+    v_hi = v_hi_ref[...]
+    hi_mask = hi_mask_ref[...]  # [B, H, S]
+    lo_mask = lo_mask_ref[...]
+    inv_b = inv_b_ref[...]  # [B, H, D]
+
+    b, h, s, d = k_hi.shape
+    ng = d // group
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    # --- in-VMEM dequantization of the retained tier (codes → floats) ---
+    def dequant(c_ref, s_ref, z_ref):
+        codes = c_ref[...].reshape(b, h, s, ng, group)
+        return (s_ref[...][..., None] * codes + z_ref[...][..., None]).reshape(b, h, s, d)
+
+    k_lo = dequant(k_lo_c_ref, k_lo_s_ref, k_lo_z_ref) * inv_b[:, :, None, :]
+    v_lo = dequant(v_lo_c_ref, v_lo_s_ref, v_lo_z_ref)
+
+    # --- two homogeneous tier loops → one shared softmax (batched B×H) ---
+    s_hi = jnp.where(
+        hi_mask[:, :, None, :] > 0,
+        jnp.einsum("bhgd,bhsd->bhgs", q, k_hi) * scale,
+        NEG_INF,
+    )
+    s_lo = jnp.where(
+        lo_mask[:, :, None, :] > 0,
+        jnp.einsum("bhgd,bhsd->bhgs", q, k_lo) * scale,
+        NEG_INF,
+    )
+    s_self = jnp.einsum("bhgd,bhd->bhg", q, k_new) * scale  # [B, H, G]
+
+    logits = jnp.concatenate([s_hi, s_lo, s_self[..., None]], axis=3)
+    m = logits.max(axis=3, keepdims=True)
+    e = jnp.exp(logits - m)
+    p = e / e.sum(axis=3, keepdims=True)
+
+    p_hi, p_lo, p_self = p[..., :s], p[..., s : 2 * s], p[..., 2 * s]
+    out_ref[...] = (
+        jnp.einsum("bhgs,bhsd->bhgd", p_hi, v_hi)
+        + jnp.einsum("bhgs,bhsd->bhgd", p_lo, v_lo)
+        + p_self[..., None] * v_new[:, :, None, :]
+    )
+    attn_prev_ref[...] = (p_hi + p_lo).sum(axis=2)
+    attn_self_ref[...] = p_self
+
+
+def mikv_attention(
+    q,          # [B, H, G, D]
+    k_new,      # [B, H, D]
+    v_new,      # [B, H, D]
+    k_hi,       # [B, H, S, D]
+    v_hi,
+    hi_mask,    # [B, H, S]
+    k_lo_codes, # [B, H, S, D]
+    k_lo_scale, # [B, H, S, NG]
+    k_lo_zero,
+    v_lo_codes,
+    v_lo_scale,
+    v_lo_zero,
+    lo_mask,    # [B, H, S]
+    inv_b,      # [B, H, D]
+    *,
+    group: int,
+    use_pallas: bool = True,
+):
+    """Batched fused mixed-precision decode attention.
+
+    Returns (out [B, H, G, D], attn_prev [B, H, S], attn_self [B, H]).
+    """
+    b, h, g, d = q.shape
+    s = k_hi.shape[2]
+    ng = d // group
+
+    if not use_pallas:
+        fn = functools.partial(_ref_plane, group=group)
+        fn = jax.vmap(jax.vmap(fn))
+        out, attn_prev, attn_self = fn(
+            q, k_new, v_new, k_hi, v_hi, hi_mask,
+            k_lo_codes, k_lo_scale, k_lo_zero,
+            v_lo_codes, v_lo_scale, v_lo_zero, lo_mask, inv_b,
+        )
+        return out, attn_prev, attn_self
+
+    # §Perf iteration #2: fold the batch into the block as well — a single
+    # kernel invocation per decode step (grid (1,)). VMEM: B×H×~51 KB, still
+    # far under budget for the repro configs (DESIGN.md §Perf-estimates).
+    whole = lambda *shp: pl.BlockSpec(shp, lambda _: (0,) * len(shp))
+    out, attn_prev, attn_self_per_head = pl.pallas_call(
+        functools.partial(_mikv_attn_kernel, group=group),
+        grid=(1,),
+        in_specs=[
+            whole(b, h, g, d),   # q
+            whole(b, h, d),      # k_new
+            whole(b, h, d),      # v_new
+            whole(b, h, s, d),   # k_hi
+            whole(b, h, s, d),   # v_hi
+            whole(b, h, s),      # hi_mask
+            whole(b, h, s, d),   # k_lo_codes
+            whole(b, h, s, ng),  # k_lo_scale
+            whole(b, h, s, ng),  # k_lo_zero
+            whole(b, h, s, d),   # v_lo_codes
+            whole(b, h, s, ng),  # v_lo_scale
+            whole(b, h, s, ng),  # v_lo_zero
+            whole(b, h, s),      # lo_mask
+            whole(b, h, d),      # inv_b
+        ],
+        out_specs=[whole(b, h, g, d), whole(b, h, s), whole(b, h, g)],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, g, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, s), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, g), jnp.float32),
+        ],
+        interpret=True,
+    )(
+        q, k_new, v_new, k_hi, v_hi, hi_mask,
+        k_lo_codes, k_lo_scale, k_lo_zero,
+        v_lo_codes, v_lo_scale, v_lo_zero, lo_mask, inv_b,
+    )
+    return out, attn_prev, attn_self_per_head.sum(axis=-1)
+
+
+def _ref_plane(
+    q, k_new, v_new, k_hi, v_hi, hi_mask,
+    k_lo_codes, k_lo_scale, k_lo_zero,
+    v_lo_codes, v_lo_scale, v_lo_zero, lo_mask, inv_b,
+    *, group: int,
+):
+    return mikv_attention_ref(
+        q, k_new, v_new, k_hi, v_hi, hi_mask,
+        k_lo_codes, k_lo_scale, k_lo_zero,
+        v_lo_codes, v_lo_scale, v_lo_zero, lo_mask, inv_b, group=group,
+    )

@@ -1,0 +1,106 @@
+"""L1 Pallas kernel: prefill causal attention with importance side-outputs.
+
+Beyond the attention output itself, the prefill pass must produce the two
+statistics MiKV's cache manager needs (paper §3.1–3.2):
+
+* `attn_acc[s]` — total attention mass key `s` received from all live
+  queries (the H2O heavy-hitter seed);
+* `qmax` / `kmax` — per-channel absolute maxima of the (RoPE'd) queries and
+  keys over live positions, from which the rust side computes the channel
+  balancer `b = sqrt(qmax/kmax)` (paper eq. 2).
+
+Grid: `(B, H_kv)`, one plane per step; each plane's `[G, S, S]` score tile
+lives in VMEM (see DESIGN.md §Hardware-Adaptation for the footprint table;
+query-block tiling is the documented scale-up path for long prompts).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF, prefill_attention_ref
+
+
+def _prefill_kernel(
+    q_ref,    # [1, 1, G, S, D]
+    k_ref,    # [1, 1, S, D]
+    v_ref,    # [1, 1, S, D]
+    mask_ref, # [1, 1, S]
+    out_ref,  # [1, 1, G, S, D]
+    acc_ref,  # [1, 1, S]
+    qmax_ref, # [1, 1, D]
+    kmax_ref, # [1, 1, D]
+):
+    q = q_ref[0, 0]        # [G, S, D]
+    k = k_ref[0, 0]        # [S, D]
+    v = v_ref[0, 0]
+    len_mask = mask_ref[0, 0]  # [S]
+
+    g, s, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    scores = jnp.einsum("gqd,kd->gqk", q, k) * scale
+    row = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    causal = row >= col
+    valid = causal[None, :, :] & (len_mask[None, None, :] > 0)
+    scores = jnp.where(valid, scores, NEG_INF)
+    m = scores.max(axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    p = e / e.sum(axis=-1, keepdims=True)
+
+    out_ref[0, 0] = jnp.einsum("gqk,kd->gqd", p, v)
+    acc_ref[0, 0] = (p * len_mask[None, :, None]).sum(axis=(0, 1))
+    qmax_ref[0, 0] = jnp.abs(q * len_mask[None, :, None]).max(axis=(0, 1))
+    kmax_ref[0, 0] = jnp.abs(k * len_mask[:, None]).max(axis=0)
+
+
+def prefill_attention(
+    q,         # [B, H, G, S, D]
+    k,         # [B, H, S, D]
+    v,
+    len_mask,  # [B, S]
+    *,
+    use_pallas: bool = True,
+):
+    """Batched prefill attention.
+
+    Returns (out [B, H, G, S, D], attn_acc [B, H, S], qmax [B, H, D],
+    kmax [B, H, D]).
+    """
+    b, h, g, s, d = q.shape
+
+    if not use_pallas:
+        fn = jax.vmap(  # over B
+            jax.vmap(prefill_attention_ref, in_axes=(0, 0, 0, None)),  # over H
+            in_axes=(0, 0, 0, 0),
+        )
+        return fn(q, k, v, len_mask)
+
+    # broadcast the per-batch mask to planes so each grid step sees [S]
+    mask_bh = jnp.broadcast_to(len_mask[:, None, :], (b, h, s))
+
+    plane = lambda *shp: pl.BlockSpec((1, 1) + shp, lambda bi, hi: (bi, hi) + (0,) * len(shp))
+    out, acc, qmax, kmax = pl.pallas_call(
+        _prefill_kernel,
+        grid=(b, h),
+        in_specs=[
+            plane(g, s, d),
+            plane(s, d),
+            plane(s, d),
+            plane(s),
+        ],
+        out_specs=[plane(g, s, d), plane(s), plane(d), plane(d)],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, g, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, s), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, d), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v, mask_bh)
+    return out, acc, qmax, kmax

@@ -1,0 +1,130 @@
+"""L1 Pallas kernel: per-token asymmetric quantization (paper eq. 1).
+
+Used by the optional `quant_block` artifact — the bulk prefill-ingestion
+path where the rust engine offloads quantization of a whole `[N, D]` block
+of demoted KV vectors to the accelerator instead of quantizing token by
+token on the host (engine flag `quant_engine = hlo | native`; the ablation
+bench compares both).
+
+Grid: 1-D over row tiles of `block_n` tokens. Each grid step loads a
+`[block_n, D]` tile into VMEM, computes per-group min/max (VPU reduction),
+derives scale/zero, and emits integer codes — all without touching HBM
+again. FP16 metadata rounding is fused (astype round-trip).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, codes_ref, scale_ref, zero_ref, *, bits: int, group: int, f16_meta: bool):
+    x = x_ref[...]  # [block_n, D]
+    n, d = x.shape
+    ng = d // group
+    levels = (1 << bits) - 1
+
+    xg = x.reshape(n, ng, group)
+    lo = xg.min(axis=-1)
+    hi = xg.max(axis=-1)
+    scale = (hi - lo) / levels
+    zero = lo
+    if f16_meta:
+        scale = scale.astype(jnp.float16).astype(jnp.float32)
+        zero = zero.astype(jnp.float16).astype(jnp.float32)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    codes = jnp.clip(jnp.round((xg - zero[:, :, None]) / safe[:, :, None]), 0, levels)
+    codes = jnp.where(scale[:, :, None] > 0, codes, 0.0)
+
+    codes_ref[...] = codes.reshape(n, d)
+    scale_ref[...] = scale
+    zero_ref[...] = zero
+
+
+def quantize_block(
+    x,  # [N, D]
+    *,
+    bits: int,
+    group: int,
+    f16_meta: bool = True,
+    block_n: int = 64,
+    use_pallas: bool = True,
+):
+    """Quantize a block of token vectors. Returns (codes [N, D] float-held
+    integers, scales [N, NG], zeros [N, NG])."""
+    n, d = x.shape
+    assert d % group == 0
+    ng = d // group
+
+    if not use_pallas:
+        from .ref import quantize_ref
+
+        return quantize_ref(x, bits, group, f16_meta)
+
+    block_n = min(block_n, n)
+    # pad rows to a multiple of block_n
+    n_pad = (-n) % block_n
+    if n_pad:
+        x = jnp.concatenate([x, jnp.zeros((n_pad, d), x.dtype)], axis=0)
+    nt = x.shape[0] // block_n
+
+    codes, scales, zeros = pl.pallas_call(
+        functools.partial(_quant_kernel, bits=bits, group=group, f16_meta=f16_meta),
+        grid=(nt,),
+        in_specs=[pl.BlockSpec((block_n, d), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, ng), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, ng), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((x.shape[0], d), jnp.float32),
+            jax.ShapeDtypeStruct((x.shape[0], ng), jnp.float32),
+            jax.ShapeDtypeStruct((x.shape[0], ng), jnp.float32),
+        ],
+        interpret=True,
+    )(x)
+    return codes[:n], scales[:n], zeros[:n]
+
+
+def _dequant_kernel(c_ref, s_ref, z_ref, out_ref, *, group: int):
+    c = c_ref[...]
+    n, d = c.shape
+    ng = d // group
+    cg = c.reshape(n, ng, group)
+    out_ref[...] = (s_ref[...][:, :, None] * cg + z_ref[...][:, :, None]).reshape(n, d)
+
+
+def dequantize_block(codes, scales, zeros, *, group: int, block_n: int = 64, use_pallas: bool = True):
+    """Inverse of `quantize_block`."""
+    n, d = codes.shape
+    ng = d // group
+    if not use_pallas:
+        from .ref import dequantize_ref
+
+        return dequantize_ref(codes, scales, zeros, group)
+
+    block_n = min(block_n, n)
+    n_pad = (-n) % block_n
+    if n_pad:
+        codes = jnp.concatenate([codes, jnp.zeros((n_pad, d), codes.dtype)], axis=0)
+        scales = jnp.concatenate([scales, jnp.zeros((n_pad, ng), scales.dtype)], axis=0)
+        zeros = jnp.concatenate([zeros, jnp.zeros((n_pad, ng), zeros.dtype)], axis=0)
+    nt = codes.shape[0] // block_n
+
+    out = pl.pallas_call(
+        functools.partial(_dequant_kernel, group=group),
+        grid=(nt,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, ng), lambda i: (i, 0)),
+            pl.BlockSpec((block_n, ng), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((codes.shape[0], d), jnp.float32),
+        interpret=True,
+    )(codes, scales, zeros)
+    return out[:n]

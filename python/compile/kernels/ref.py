@@ -1,0 +1,211 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These are the correctness anchors of layer 1: each kernel in this package
+must match its `*_ref` twin to float tolerance under pytest/hypothesis
+sweeps (`python/tests/test_kernels.py`). They are also used directly by the
+L2 model when `use_pallas=False`, which gives an independent end-to-end
+check that the kernels compose correctly.
+
+Shape conventions (one attention *plane* = one KV head group):
+    G      query heads per KV head (GQA group size; G = Hq // Hkv)
+    S      max sequence slots (padded; masks select live slots)
+    D      head dim
+    NG     scale/zero groups per token (= D / group)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+# ----------------------------------------------------------------------
+# Per-token asymmetric quantization (paper eq. 1)
+# ----------------------------------------------------------------------
+
+
+def quantize_ref(x, bits: int, group: int, f16_meta: bool = True):
+    """Quantize the trailing dim of `x` in groups of `group` channels.
+
+    Returns (codes, scales, zeros): codes are float-held integers with the
+    same shape as `x`; scales/zeros have trailing dim `x.shape[-1] // group`.
+    """
+    d = x.shape[-1]
+    assert d % group == 0, f"group {group} must divide dim {d}"
+    levels = (1 << bits) - 1
+    xg = x.reshape(*x.shape[:-1], d // group, group)
+    lo = xg.min(axis=-1, keepdims=True)
+    hi = xg.max(axis=-1, keepdims=True)
+    scale = (hi - lo) / levels
+    zero = lo
+    if f16_meta:
+        scale = scale.astype(jnp.float16).astype(jnp.float32)
+        zero = zero.astype(jnp.float16).astype(jnp.float32)
+    safe = jnp.where(scale > 0, scale, 1.0)
+    codes = jnp.clip(jnp.round((xg - zero) / safe), 0, levels)
+    codes = jnp.where(scale > 0, codes, 0.0)
+    return (
+        codes.reshape(x.shape),
+        scale.squeeze(-1),
+        zero.squeeze(-1),
+    )
+
+
+def dequantize_ref(codes, scales, zeros, group: int):
+    """Inverse of `quantize_ref`: `x̂ = α·code + β` per group."""
+    d = codes.shape[-1]
+    cg = codes.reshape(*codes.shape[:-1], d // group, group)
+    out = scales[..., None] * cg + zeros[..., None]
+    return out.reshape(codes.shape)
+
+
+# ----------------------------------------------------------------------
+# Rotary positional embeddings (half-split convention)
+# ----------------------------------------------------------------------
+
+
+def rope_angles(positions, d: int, theta: float = 10000.0):
+    """cos/sin tables for `positions` (any shape) → shape (*pos, d/2)."""
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def rope_ref(x, cos, sin):
+    """Apply RoPE to the trailing dim of `x` (split-half rotation).
+
+    `cos`/`sin` broadcast against `x[..., : d/2]`.
+    """
+    d = x.shape[-1]
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+# ----------------------------------------------------------------------
+# Fused mixed-precision decode attention (the MiKV hot spot)
+# ----------------------------------------------------------------------
+
+
+def mikv_attention_ref(
+    q,            # [G, D]   query heads of one KV group (RoPE applied)
+    k_new, v_new, # [D]      current token's K/V for this KV head
+    k_hi, v_hi,   # [S, D]   hi-tier cache (fp values)
+    hi_mask,      # [S]      1.0 where slot is hi-resident
+    k_lo_codes,   # [S, D]   lo-tier codes (float-held integers)
+    k_lo_scale, k_lo_zero,   # [S, NG]
+    v_lo_codes, v_lo_scale, v_lo_zero,
+    lo_mask,      # [S]
+    inv_b,        # [D]      1/balancer; dequantized lo keys are scaled by it
+    group: int,
+):
+    """One decode step of mixed-precision attention for one plane.
+
+    Returns (out [G, D], attn_prev [S], attn_self []): `attn_prev` is the
+    per-slot attention mass summed over the group's query heads (hi and lo
+    tiers are disjoint, so their contributions add), feeding the H2O
+    importance accumulator on the rust side.
+    """
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+
+    k_lo = dequantize_ref(k_lo_codes, k_lo_scale, k_lo_zero, group) * inv_b[None, :]
+    v_lo = dequantize_ref(v_lo_codes, v_lo_scale, v_lo_zero, group)
+
+    s_hi = jnp.where(hi_mask[None, :] > 0, (q @ k_hi.T) * scale, NEG_INF)
+    s_lo = jnp.where(lo_mask[None, :] > 0, (q @ k_lo.T) * scale, NEG_INF)
+    s_self = (q @ k_new) * scale  # [G]
+
+    logits = jnp.concatenate([s_hi, s_lo, s_self[:, None]], axis=1)  # [G, 2S+1]
+    m = logits.max(axis=1, keepdims=True)
+    e = jnp.exp(logits - m)
+    p = e / e.sum(axis=1, keepdims=True)
+
+    s = k_hi.shape[0]
+    p_hi, p_lo, p_self = p[:, :s], p[:, s : 2 * s], p[:, 2 * s]
+    out = p_hi @ v_hi + p_lo @ v_lo + p_self[:, None] * v_new[None, :]
+    attn_prev = (p_hi + p_lo).sum(axis=0)
+    attn_self = p_self.sum()
+    return out, attn_prev, attn_self
+
+
+# ----------------------------------------------------------------------
+# Full-cache decode attention with post-softmax oracle top-k (Fig. 3b)
+# ----------------------------------------------------------------------
+
+
+def oracle_attention_ref(
+    q,            # [G, D]
+    k_new, v_new, # [D]
+    k, v,         # [S, D] full-precision cache
+    mask,         # [S]
+    oracle_k,     # scalar int: keep top-k attention weights (k > S+1 ⇒ all)
+):
+    """Full-cache attention; post-softmax top-k sparsification + renorm.
+
+    This is the paper's oracle eviction: the attention map is computed with
+    the FULL cache first, then top-k sparsity is imposed post-attention —
+    a proxy upper bound where future importance is predicted perfectly.
+    """
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    s_prev = jnp.where(mask[None, :] > 0, (q @ k.T) * scale, NEG_INF)
+    s_self = (q @ k_new) * scale
+    logits = jnp.concatenate([s_prev, s_self[:, None]], axis=1)  # [G, S+1]
+    m = logits.max(axis=1, keepdims=True)
+    e = jnp.exp(logits - m)
+    p = e / e.sum(axis=1, keepdims=True)
+
+    # Keep the top-k probabilities per head, renormalize.
+    n = logits.shape[1]
+    sorted_p = jnp.sort(p, axis=1)[:, ::-1]  # descending
+    idx = jnp.clip(oracle_k - 1, 0, n - 1)
+    thresh = sorted_p[:, idx][:, None]
+    keep = p >= thresh
+    p = jnp.where(keep, p, 0.0)
+    p = p / p.sum(axis=1, keepdims=True)
+
+    s = k.shape[0]
+    p_prev, p_self = p[:, :s], p[:, s]
+    out = p_prev @ v + p_self[:, None] * v_new[None, :]
+    attn_prev = p_prev.sum(axis=0)
+    attn_self = p_self.sum()
+    return out, attn_prev, attn_self
+
+
+# ----------------------------------------------------------------------
+# Prefill causal attention with importance column-sums
+# ----------------------------------------------------------------------
+
+
+def prefill_attention_ref(
+    q,         # [G, S, D]  query heads of one KV group (RoPE applied)
+    k, v,      # [S, D]
+    len_mask,  # [S] 1.0 for live positions
+):
+    """Causal attention over a full prompt for one plane.
+
+    Returns (out [G, S, D], attn_acc [S], qmax [D], kmax [D]):
+    `attn_acc[s]` is the total attention mass key `s` received from all
+    live queries in the group (H2O seed); qmax/kmax are per-channel absolute
+    maxima over live positions (balancer seed, paper eq. 2).
+    """
+    g, s, d = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(d))
+    scores = jnp.einsum("gqd,kd->gqk", q, k) * scale
+    causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+    valid = causal[None, :, :] & (len_mask[None, None, :] > 0)
+    scores = jnp.where(valid, scores, NEG_INF)
+    m = scores.max(axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    p = e / e.sum(axis=-1, keepdims=True)  # [G, S, S]
+    out = jnp.einsum("gqk,kd->gqd", p, v)
+
+    # Column sums over live query rows only.
+    qlive = len_mask[None, :, None]  # [1, S, 1]
+    attn_acc = (p * qlive).sum(axis=(0, 1))  # [S]
+
+    qmax = jnp.abs(q * len_mask[None, :, None]).max(axis=(0, 1))  # [D]
+    kmax = jnp.abs(k * len_mask[:, None]).max(axis=0)  # [D]
+    return out, attn_acc, qmax, kmax

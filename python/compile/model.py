@@ -1,0 +1,353 @@
+"""L2: the decoder-only transformer (JAX), calling the L1 Pallas kernels.
+
+Three graphs are AOT-lowered per model/batch configuration (see `aot.py`):
+
+* `prefill`   — full prompt pass; returns logits, per-layer K/V, the H2O
+                attention accumulator seed, and the balancer q/k maxima.
+* `decode_mikv` — one token step against the mixed-precision cache
+                (hi fp tensors + lo codes/scales/zeros + masks + 1/b),
+                attention fused in `kernels.mikv_attn`.
+* `decode_full` — one token step against a full-precision cache with the
+                post-softmax oracle top-k input (paper Fig. 3b); `oracle_k
+                >= S+1` makes it the exact uncompressed baseline.
+
+Weights are **runtime inputs**, not baked constants: the rust engine
+uploads them once as device-resident PJRT buffers and reuses them every
+step. Parameter order is fixed by `param_names()` and recorded in the
+artifact manifest.
+
+All tensor layouts are batch-outermost and plane-major —
+`[B, L, H_kv, S, D]` — so one session's cache block is contiguous on the
+rust side (single memcpy per input per step).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import mikv_attn, prefill_attn
+from .kernels import ref as kref
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_q_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    max_seq: int
+    rope_theta: float = 10000.0
+    # quant group size for the lo tier (paper: half the head dim, so a
+    # group never straddles the two RoPE-rotated halves)
+    quant_group: int = field(default=0)
+
+    def __post_init__(self):
+        assert self.n_q_heads % self.n_kv_heads == 0
+        if self.quant_group == 0:
+            object.__setattr__(self, "quant_group", max(1, self.d_head // 2))
+
+    @property
+    def gqa_group(self) -> int:
+        return self.n_q_heads // self.n_kv_heads
+
+    @property
+    def n_groups(self) -> int:
+        """Scale/zero groups per token per head."""
+        return self.d_head // self.quant_group
+
+    def param_count(self) -> int:
+        e, f, v = self.d_model, self.d_ff, self.vocab
+        hq = self.n_q_heads * self.d_head
+        hk = self.n_kv_heads * self.d_head
+        per_layer = 2 * e + e * hq + 2 * e * hk + hq * e + e * f + f * e
+        return v * e + self.n_layers * per_layer + e + e * v
+
+
+# Registry of reproduction configs (see DESIGN.md §Model).
+CONFIGS = {
+    "cfg-tiny": ModelConfig(
+        # vocab matches the corpus (512): out-of-range target ids make
+        # jnp gathers return NaN silently — every config must cover VOCAB.
+        name="cfg-tiny", vocab=512, d_model=64, n_layers=2, n_q_heads=4,
+        n_kv_heads=2, d_head=16, d_ff=128, max_seq=48,
+    ),
+    "cfg-s": ModelConfig(
+        name="cfg-s", vocab=512, d_model=256, n_layers=4, n_q_heads=8,
+        n_kv_heads=8, d_head=32, d_ff=1024, max_seq=320,
+    ),
+    "cfg-s-gqa": ModelConfig(
+        name="cfg-s-gqa", vocab=512, d_model=256, n_layers=4, n_q_heads=8,
+        n_kv_heads=2, d_head=32, d_ff=1024, max_seq=320,
+    ),
+    "cfg-m": ModelConfig(
+        name="cfg-m", vocab=512, d_model=512, n_layers=6, n_q_heads=8,
+        n_kv_heads=8, d_head=64, d_ff=2048, max_seq=384,
+    ),
+}
+
+
+# ----------------------------------------------------------------------
+# Parameters
+# ----------------------------------------------------------------------
+
+
+def param_names(cfg: ModelConfig) -> list[str]:
+    """Canonical flat parameter order (shared with the rust runtime)."""
+    names = ["embed"]
+    for i in range(cfg.n_layers):
+        names += [
+            f"l{i}.ln1", f"l{i}.wq", f"l{i}.wk", f"l{i}.wv", f"l{i}.wo",
+            f"l{i}.ln2", f"l{i}.w1", f"l{i}.w2",
+        ]
+    names += ["lnf", "unembed"]
+    return names
+
+
+def param_shapes(cfg: ModelConfig) -> dict[str, tuple[int, ...]]:
+    e, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    hq = cfg.n_q_heads * cfg.d_head
+    hk = cfg.n_kv_heads * cfg.d_head
+    shapes: dict[str, tuple[int, ...]] = {"embed": (v, e)}
+    for i in range(cfg.n_layers):
+        shapes.update({
+            f"l{i}.ln1": (e,), f"l{i}.wq": (e, hq), f"l{i}.wk": (e, hk),
+            f"l{i}.wv": (e, hk), f"l{i}.wo": (hq, e), f"l{i}.ln2": (e,),
+            f"l{i}.w1": (e, f), f"l{i}.w2": (f, e),
+        })
+    shapes.update({"lnf": (e,), "unembed": (e, v)})
+    return shapes
+
+
+def init_params(cfg: ModelConfig, key) -> dict[str, jax.Array]:
+    """He-style init; ln scales at 1."""
+    shapes = param_shapes(cfg)
+    params = {}
+    for name, shape in shapes.items():
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2")) or name == "lnf":
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[0]
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * (fan_in ** -0.5)
+    return params
+
+
+def params_to_list(cfg: ModelConfig, params: dict) -> list[jax.Array]:
+    return [params[n] for n in param_names(cfg)]
+
+
+def params_from_list(cfg: ModelConfig, flat: list) -> dict:
+    return dict(zip(param_names(cfg), flat))
+
+
+# ----------------------------------------------------------------------
+# Building blocks
+# ----------------------------------------------------------------------
+
+
+def rmsnorm(x, g, eps: float = 1e-5):
+    return x * jax.lax.rsqrt((x * x).mean(axis=-1, keepdims=True) + eps) * g
+
+
+def _qkv(cfg: ModelConfig, p: dict, i: int, x):
+    """Project x [..., E] to q [..., Hq, D], k/v [..., Hkv, D]."""
+    q = (x @ p[f"l{i}.wq"]).reshape(*x.shape[:-1], cfg.n_q_heads, cfg.d_head)
+    k = (x @ p[f"l{i}.wk"]).reshape(*x.shape[:-1], cfg.n_kv_heads, cfg.d_head)
+    v = (x @ p[f"l{i}.wv"]).reshape(*x.shape[:-1], cfg.n_kv_heads, cfg.d_head)
+    return q, k, v
+
+
+def _mlp(p: dict, i: int, x):
+    return jax.nn.gelu(x @ p[f"l{i}.w1"]) @ p[f"l{i}.w2"]
+
+
+# ----------------------------------------------------------------------
+# Prefill
+# ----------------------------------------------------------------------
+
+
+def prefill(cfg: ModelConfig, params_flat, tokens, len_mask, *, use_pallas: bool = True):
+    """Full prompt pass.
+
+    Args: `tokens` i64[B, S], `len_mask` f32[B, S] (1 = live position).
+    Returns (logits f32[B, S, V], k f32[B, L, Hkv, S, D], v …,
+    attn_acc f32[B, L, Hkv, S], qmax f32[B, L, Hkv, D], kmax …).
+    """
+    p = params_from_list(cfg, list(params_flat))
+    b, s = tokens.shape
+    g = cfg.gqa_group
+
+    x = p["embed"][tokens]  # [B, S, E]
+    positions = jnp.arange(s)
+    cos, sin = kref.rope_angles(positions, cfg.d_head, cfg.rope_theta)  # [S, D/2]
+
+    ks, vs, accs, qmaxs, kmaxs = [], [], [], [], []
+    for i in range(cfg.n_layers):
+        h = rmsnorm(x, p[f"l{i}.ln1"])
+        q, k, v = _qkv(cfg, p, i, h)  # [B, S, Hq/Hkv, D]
+        q = kref.rope_ref(q.transpose(0, 2, 1, 3), cos[None, None], sin[None, None])  # [B, Hq, S, D]
+        k = kref.rope_ref(k.transpose(0, 2, 1, 3), cos[None, None], sin[None, None])  # [B, Hkv, S, D]
+        v = v.transpose(0, 2, 1, 3)  # [B, Hkv, S, D]
+        qg = q.reshape(b, cfg.n_kv_heads, g, s, cfg.d_head)
+
+        out, acc, qmax, kmax = prefill_attn.prefill_attention(
+            qg, k, v, len_mask, use_pallas=use_pallas
+        )
+        out = out.reshape(b, cfg.n_q_heads, s, cfg.d_head).transpose(0, 2, 1, 3)
+        x = x + out.reshape(b, s, -1) @ p[f"l{i}.wo"]
+        x = x + _mlp(p, i, rmsnorm(x, p[f"l{i}.ln2"]))
+
+        ks.append(k)
+        vs.append(v)
+        accs.append(acc)
+        qmaxs.append(qmax)
+        kmaxs.append(kmax)
+
+    logits = rmsnorm(x, p["lnf"]) @ p["unembed"]  # [B, S, V]
+    stack = lambda xs: jnp.stack(xs, axis=1)  # → [B, L, ...]
+    return (
+        logits,
+        stack(ks),
+        stack(vs),
+        stack(accs),
+        stack(qmaxs),
+        stack(kmaxs),
+    )
+
+
+# ----------------------------------------------------------------------
+# Decode against the mixed-precision cache
+# ----------------------------------------------------------------------
+
+
+def decode_mikv(
+    cfg: ModelConfig,
+    params_flat,
+    token,       # i64[B]
+    pos,         # i64[B] current position per lane (= cached tokens)
+    k_hi,        # f32[B, L, H, S, D]
+    v_hi,
+    hi_mask,     # f32[B, L, H, S]
+    k_lo_codes,  # f32[B, L, H, S, D]
+    k_lo_scale,  # f32[B, L, H, S, NG]
+    k_lo_zero,
+    v_lo_codes,
+    v_lo_scale,
+    v_lo_zero,
+    lo_mask,     # f32[B, L, H, S]
+    inv_b,       # f32[B, L, H, D]
+    *,
+    use_pallas: bool = True,
+):
+    """One decode step against the MiKV cache.
+
+    Returns (logits f32[B, V], k_new f32[B, L, H, D], v_new …,
+    attn_prev f32[B, L, H, S], attn_self f32[B, L, H]).
+    """
+    p = params_from_list(cfg, list(params_flat))
+    b = token.shape[0]
+    g = cfg.gqa_group
+
+    x = p["embed"][token]  # [B, E]
+    # per-lane positions: lanes of a continuous batch decode at different
+    # sequence lengths
+    cos, sin = kref.rope_angles(pos.astype(jnp.float32), cfg.d_head, cfg.rope_theta)  # [B, D/2]
+
+    k_news, v_news, attn_prevs, attn_selfs = [], [], [], []
+    for i in range(cfg.n_layers):
+        h = rmsnorm(x, p[f"l{i}.ln1"])
+        q, k, v = _qkv(cfg, p, i, h)  # [B, Hq/Hkv, D]
+        q = kref.rope_ref(q, cos[:, None, :], sin[:, None, :])
+        k = kref.rope_ref(k, cos[:, None, :], sin[:, None, :])
+        qg = q.reshape(b, cfg.n_kv_heads, g, cfg.d_head)
+
+        out, attn_prev, attn_self = mikv_attn.mikv_attention(
+            qg, k, v,
+            k_hi[:, i], v_hi[:, i], hi_mask[:, i],
+            k_lo_codes[:, i], k_lo_scale[:, i], k_lo_zero[:, i],
+            v_lo_codes[:, i], v_lo_scale[:, i], v_lo_zero[:, i],
+            lo_mask[:, i], inv_b[:, i],
+            group=cfg.quant_group, use_pallas=use_pallas,
+        )
+        x = x + out.reshape(b, -1) @ p[f"l{i}.wo"]
+        x = x + _mlp(p, i, rmsnorm(x, p[f"l{i}.ln2"]))
+
+        k_news.append(k)
+        v_news.append(v)
+        attn_prevs.append(attn_prev)
+        attn_selfs.append(attn_self)
+
+    logits = rmsnorm(x, p["lnf"]) @ p["unembed"]  # [B, V]
+    stack = lambda xs: jnp.stack(xs, axis=1)
+    return logits, stack(k_news), stack(v_news), stack(attn_prevs), stack(attn_selfs)
+
+
+# ----------------------------------------------------------------------
+# Decode against the full cache (exact baseline + oracle eviction)
+# ----------------------------------------------------------------------
+
+
+def decode_full(
+    cfg: ModelConfig,
+    params_flat,
+    token,     # i64[B]
+    pos,       # i64[B]
+    k_full,    # f32[B, L, H, S, D]
+    v_full,
+    mask,      # f32[B, L, H, S]
+    oracle_k,  # i64[]  keep top-k attention weights; >= S+1 ⇒ exact full
+):
+    """One decode step against the uncompressed cache (Fig. 3b baselines)."""
+    p = params_from_list(cfg, list(params_flat))
+    b = token.shape[0]
+    g = cfg.gqa_group
+
+    x = p["embed"][token]
+    cos, sin = kref.rope_angles(pos.astype(jnp.float32), cfg.d_head, cfg.rope_theta)  # [B, D/2]
+
+    attn = jax.vmap(  # over B
+        jax.vmap(kref.oracle_attention_ref, in_axes=(0, 0, 0, 0, 0, 0, None)),
+        in_axes=(0, 0, 0, 0, 0, 0, None),
+    )
+
+    k_news, v_news, attn_prevs, attn_selfs = [], [], [], []
+    for i in range(cfg.n_layers):
+        h = rmsnorm(x, p[f"l{i}.ln1"])
+        q, k, v = _qkv(cfg, p, i, h)
+        q = kref.rope_ref(q, cos[:, None, :], sin[:, None, :])
+        k = kref.rope_ref(k, cos[:, None, :], sin[:, None, :])
+        qg = q.reshape(b, cfg.n_kv_heads, g, cfg.d_head)
+
+        out, attn_prev, attn_self = attn(
+            qg, k, v, k_full[:, i], v_full[:, i], mask[:, i], oracle_k
+        )
+        x = x + out.reshape(b, -1) @ p[f"l{i}.wo"]
+        x = x + _mlp(p, i, rmsnorm(x, p[f"l{i}.ln2"]))
+
+        k_news.append(k)
+        v_news.append(v)
+        attn_prevs.append(attn_prev)
+        attn_selfs.append(attn_self)
+
+    logits = rmsnorm(x, p["lnf"]) @ p["unembed"]
+    stack = lambda xs: jnp.stack(xs, axis=1)
+    return logits, stack(k_news), stack(v_news), stack(attn_prevs), stack(attn_selfs)
+
+
+# ----------------------------------------------------------------------
+# Plain training-time forward (no cache, no pallas — fast on CPU XLA)
+# ----------------------------------------------------------------------
+
+
+def train_forward(cfg: ModelConfig, params: dict, tokens, len_mask):
+    """Teacher-forced forward for training: logits f32[B, S, V]."""
+    flat = params_to_list(cfg, params)
+    logits, *_ = prefill(cfg, flat, tokens, len_mask, use_pallas=False)
+    return logits

@@ -1,0 +1,105 @@
+"""`.mikv` tensor container — the weight interchange format.
+
+Python (build path) writes trained checkpoints; the rust runtime
+(`rust/src/runtime/weights.rs`) reads them. The format is deliberately
+trivial so both sides stay dependency-free:
+
+    magic   : b"MIKV\\x01\\n"                      (6 bytes)
+    hdrlen  : u64 little-endian                    (8 bytes)
+    header  : UTF-8 JSON, `hdrlen` bytes:
+              {"meta": {...}, "tensors": [
+                  {"name": str, "dtype": "f32"|"i64",
+                   "shape": [int, ...], "offset": int, "nbytes": int}, ...]}
+    data    : raw little-endian blob; each tensor starts at
+              `offset` bytes into the data section, 64-byte aligned.
+"""
+
+from __future__ import annotations
+
+import json
+import struct
+from dataclasses import dataclass
+
+import numpy as np
+
+MAGIC = b"MIKV\x01\n"
+ALIGN = 64
+
+_DTYPES = {
+    "f32": np.dtype("<f4"),
+    "i64": np.dtype("<i8"),
+}
+
+
+def _dtype_name(arr: np.ndarray) -> str:
+    if arr.dtype == np.float32:
+        return "f32"
+    if arr.dtype == np.int64:
+        return "i64"
+    raise TypeError(f"unsupported dtype {arr.dtype}; cast to float32 or int64")
+
+
+def write_tensors(path: str, tensors: dict[str, np.ndarray], meta: dict | None = None) -> None:
+    """Write a named tensor dict to a .mikv file (order preserved)."""
+    entries = []
+    blobs = []
+    offset = 0
+    for name, arr in tensors.items():
+        arr = np.ascontiguousarray(arr)
+        dtype = _dtype_name(arr)
+        raw = arr.astype(_DTYPES[dtype], copy=False).tobytes()
+        pad = (-offset) % ALIGN
+        offset += pad
+        blobs.append((pad, raw))
+        entries.append(
+            {
+                "name": name,
+                "dtype": dtype,
+                "shape": list(arr.shape),
+                "offset": offset,
+                "nbytes": len(raw),
+            }
+        )
+        offset += len(raw)
+
+    header = json.dumps({"meta": meta or {}, "tensors": entries}).encode("utf-8")
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<Q", len(header)))
+        f.write(header)
+        for pad, raw in blobs:
+            f.write(b"\x00" * pad)
+            f.write(raw)
+
+
+@dataclass
+class TensorFile:
+    """Parsed .mikv file."""
+
+    meta: dict
+    tensors: dict[str, np.ndarray]
+
+    def __getitem__(self, name: str) -> np.ndarray:
+        return self.tensors[name]
+
+    def names(self) -> list[str]:
+        return list(self.tensors.keys())
+
+
+def read_tensors(path: str) -> TensorFile:
+    """Read a .mikv file back into numpy arrays."""
+    with open(path, "rb") as f:
+        magic = f.read(len(MAGIC))
+        if magic != MAGIC:
+            raise ValueError(f"{path}: bad magic {magic!r}")
+        (hdrlen,) = struct.unpack("<Q", f.read(8))
+        header = json.loads(f.read(hdrlen).decode("utf-8"))
+        data = f.read()
+
+    tensors: dict[str, np.ndarray] = {}
+    for e in header["tensors"]:
+        dt = _DTYPES[e["dtype"]]
+        raw = data[e["offset"] : e["offset"] + e["nbytes"]]
+        arr = np.frombuffer(raw, dtype=dt).reshape(e["shape"]).copy()
+        tensors[e["name"]] = arr
+    return TensorFile(meta=header["meta"], tensors=tensors)

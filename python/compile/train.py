@@ -1,0 +1,131 @@
+"""Train the reproduction transformer on the synthetic task mixture.
+
+Build-time only (invoked by `aot.py` / `make artifacts`). Adam + cosine
+schedule, teacher-forced next-token loss weighted by each sample's loss
+mask (answer spans weighted 1.0, context 0.1 — the model must *retrieve*,
+not memorize). Training uses the plain-jnp forward (`model.train_forward`);
+the Pallas kernels are only in the inference graphs.
+
+The checkpoint (.mikv) is cached: re-running `make artifacts` skips
+training when the file already exists with matching config + steps.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import corpus
+from .model import ModelConfig, init_params, train_forward
+from .tensorio import read_tensors, write_tensors
+
+
+def loss_fn(cfg: ModelConfig, params: dict, tokens, len_mask, loss_mask):
+    """Weighted next-token cross-entropy."""
+    logits = train_forward(cfg, params, tokens, len_mask)  # [B, S, V]
+    # predict token t+1 from position t
+    logp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    tgt = tokens[:, 1:]
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]  # [B, S-1]
+    w = loss_mask[:, 1:] * len_mask[:, 1:]
+    return (nll * w).sum() / jnp.maximum(w.sum(), 1.0)
+
+
+def retrieval_probe(cfg: ModelConfig, params: dict, seq_len: int, n: int = 32, seed: int = 10_007) -> float:
+    """Teacher-forced line-retrieval accuracy on held-out samples — the
+    signal that induction has emerged (logged during training)."""
+    rng = np.random.default_rng(seed)
+    # scale the record count so prompt+answer fits the probe window
+    n_lines = max(2, min(10, (seq_len - 10) // 6))
+    samples = [corpus.gen_lineret(rng, n_lines) for _ in range(n)]
+    samples = [s for s in samples if s.answer_start + corpus.VAL_TOKS < seq_len]
+    tokens, len_mask, _ = corpus.batch_samples(samples, seq_len)
+    logits = train_forward(cfg, params, jnp.asarray(tokens), jnp.asarray(len_mask))
+    pred = np.asarray(jnp.argmax(logits, -1))
+    ok = 0
+    for i, s in enumerate(samples):
+        a = s.answer_start
+        ok += all(pred[i, a - 1 + j] == s.tokens[a + j] for j in range(corpus.VAL_TOKS))
+    return ok / max(1, len(samples))
+
+
+def adam_init(params: dict):
+    z = lambda: jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": z(), "v": z(), "t": jnp.zeros((), jnp.int32)}
+
+
+def adam_step(params, grads, state, lr, b1=0.9, b2=0.98, eps=1e-9):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m: m / (1 - b1 ** t.astype(jnp.float32)), m)
+    vh = jax.tree_util.tree_map(lambda v: v / (1 - b2 ** t.astype(jnp.float32)), v)
+    new = jax.tree_util.tree_map(
+        lambda p, mh, vh: p - lr * mh / (jnp.sqrt(vh) + eps), params, mh, vh
+    )
+    return new, {"m": m, "v": v, "t": t}
+
+
+def train(
+    cfg: ModelConfig,
+    *,
+    steps: int = 400,
+    batch: int = 12,
+    seq_len: int | None = None,
+    lr: float = 1.5e-3,
+    seed: int = 0,
+    log_every: int = 25,
+    log=print,
+) -> tuple[dict, list[tuple[int, float]]]:
+    """Train and return (params, loss_curve)."""
+    seq_len = seq_len or min(cfg.max_seq, 160)
+    rng = np.random.default_rng(seed)
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    opt = adam_init(params)
+
+    @jax.jit
+    def step_fn(params, opt, tokens, len_mask, loss_mask, lr_now):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, tokens, len_mask, loss_mask))(params)
+        params, opt = adam_step(params, grads, opt, lr_now)
+        return params, opt, loss
+
+    curve = []
+    t0 = time.time()
+    for step in range(steps):
+        samples = [corpus.gen_mixture(rng, seq_len) for _ in range(batch)]
+        tokens, len_mask, loss_mask = corpus.batch_samples(samples, seq_len)
+        warm = min(1.0, (step + 1) / 40.0)
+        cos = 0.5 * (1 + np.cos(np.pi * step / steps))
+        lr_now = lr * warm * (0.1 + 0.9 * cos)
+        params, opt, loss = step_fn(
+            params, opt, jnp.asarray(tokens), jnp.asarray(len_mask),
+            jnp.asarray(loss_mask), jnp.float32(lr_now),
+        )
+        if step % log_every == 0 or step == steps - 1:
+            l = float(loss)
+            curve.append((step, l))
+            probe = retrieval_probe(cfg, params, seq_len) if step % (log_every * 4) == 0 or step == steps - 1 else None
+            log(f"  train[{cfg.name}] step {step:4d}/{steps} loss {l:.4f}"
+                + (f" lineret {probe:.2f}" if probe is not None else "")
+                + f" ({time.time() - t0:.0f}s)")
+    return params, curve
+
+
+def save_checkpoint(path: str, cfg: ModelConfig, params: dict, meta: dict):
+    tensors = {name: np.asarray(params[name]) for name in params}
+    meta = dict(meta)
+    meta.update({
+        "model": cfg.name, "vocab": cfg.vocab, "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers, "n_q_heads": cfg.n_q_heads,
+        "n_kv_heads": cfg.n_kv_heads, "d_head": cfg.d_head,
+        "d_ff": cfg.d_ff, "max_seq": cfg.max_seq,
+    })
+    write_tensors(path, tensors, meta)
+
+
+def load_checkpoint(path: str) -> tuple[dict, dict]:
+    tf = read_tensors(path)
+    return {n: jnp.asarray(a) for n, a in tf.tensors.items()}, tf.meta

@@ -1,0 +1,70 @@
+"""AOT pipeline contracts: graph I/O tables match the lowered functions."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import aot, corpus
+from compile.model import CONFIGS, param_names
+
+
+CFG = CONFIGS["cfg-tiny"]
+
+
+def test_graph_io_weight_prefix():
+    for kind in ["prefill", "decode_mikv", "decode_full"]:
+        ins, outs = aot.graph_io(CFG, kind, 1)
+        names = [i["name"] for i in ins]
+        # weights first, in param order
+        for i, p in enumerate(param_names(CFG)):
+            assert names[i] == f"w.{p}"
+        assert len(outs) >= 5 or kind == "prefill"
+
+
+def test_graph_io_shapes_consistent():
+    b = 2
+    ins, _ = aot.graph_io(CFG, "decode_mikv", b)
+    by_name = {i["name"]: i for i in ins}
+    l, h, s, d = CFG.n_layers, CFG.n_kv_heads, CFG.max_seq, CFG.d_head
+    assert by_name["token"]["shape"] == [b]
+    assert by_name["pos"]["shape"] == [b]
+    assert by_name["k_hi"]["shape"] == [b, l, h, s, d]
+    assert by_name["k_lo_scale"]["shape"] == [b, l, h, s, CFG.n_groups]
+    assert by_name["inv_b"]["shape"] == [b, l, h, d]
+    assert by_name["token"]["dtype"] == "i64"
+
+
+def test_lowered_graph_parameter_count_matches_io():
+    """The HLO text must declare exactly len(inputs) parameters."""
+    ins, _ = aot.graph_io(CFG, "decode_full", 1)
+    text = aot.lower_graph(CFG, "decode_full", 1)
+    import re
+
+    entry = text[text.index("ENTRY") :]
+    params = re.findall(r"parameter\(\d+\)", entry)
+    assert len(set(params)) == len(ins)
+
+
+def test_corpus_constants_complete():
+    consts = aot.corpus_constants()
+    for k in ["BOS", "ANS", "KEY_BASE", "KEY_N", "VAL_BASE", "VAL_N", "VOCAB"]:
+        assert k in consts
+    assert consts["VOCAB"] == corpus.VOCAB
+    assert consts["KEY_N"] == corpus.KEY_N
+
+
+def test_goldens_cover_all_graph_inputs():
+    """Golden fixtures must contain every non-weight input of each graph."""
+    from compile.model import init_params
+
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    gold = aot.make_goldens(CFG, params, b=1, seed=7)
+    nw = len(param_names(CFG))
+    for kind in ["prefill", "decode_mikv", "decode_full"]:
+        ins, outs = aot.graph_io(CFG, kind, 1)
+        for spec in ins[nw:]:
+            key = f"{kind}.in.{spec['name']}"
+            assert key in gold, key
+            assert list(gold[key].shape) == spec["shape"], key
+        for o in outs:
+            assert f"{kind}.out.{o}" in gold

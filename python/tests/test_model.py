@@ -1,0 +1,228 @@
+"""L2 model invariants: prefill/decode consistency, GQA, cache semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import corpus
+from compile.model import (
+    CONFIGS,
+    decode_full,
+    decode_mikv,
+    init_params,
+    param_names,
+    param_shapes,
+    params_to_list,
+    prefill,
+)
+
+CFG = CONFIGS["cfg-tiny"]
+
+
+def setup(seed=0):
+    params = init_params(CFG, jax.random.PRNGKey(seed))
+    return params_to_list(CFG, params)
+
+
+def prompt(b=1, n=10, seed=0):
+    rng = np.random.default_rng(seed)
+    s = CFG.max_seq
+    tokens = np.zeros((b, s), np.int64)
+    lm = np.zeros((b, s), np.float32)
+    for i in range(b):
+        tokens[i, :n] = rng.integers(1, CFG.vocab, n)
+        lm[i, :n] = 1
+    return jnp.asarray(tokens), jnp.asarray(lm)
+
+
+def test_param_shapes_and_count():
+    shapes = param_shapes(CFG)
+    assert set(shapes) == set(param_names(CFG))
+    total = sum(int(np.prod(s)) for s in shapes.values())
+    assert total == CFG.param_count()
+
+
+def test_prefill_shapes_and_padding_invariance():
+    flat = setup()
+    tokens, lm = prompt(n=8)
+    logits, k, v, acc, qmax, kmax = prefill(CFG, flat, tokens, lm, use_pallas=False)
+    s = CFG.max_seq
+    assert logits.shape == (1, s, CFG.vocab)
+    assert k.shape == (1, CFG.n_layers, CFG.n_kv_heads, s, CFG.d_head)
+    # garbage in the padding region must not change live logits
+    tokens2 = np.asarray(tokens).copy()
+    tokens2[0, 20:30] = 13
+    logits2, *_ = prefill(CFG, flat, jnp.asarray(tokens2), lm, use_pallas=False)
+    np.testing.assert_allclose(
+        np.asarray(logits)[0, :8], np.asarray(logits2)[0, :8], rtol=1e-4, atol=1e-5
+    )
+
+
+def test_decode_full_teacher_forcing_parity():
+    """decode_full(pos=t, full cache of 0..t-1) == prefill logits at t."""
+    flat = setup()
+    tokens, lm = prompt(n=12, seed=3)
+    logits_pf, k, v, *_ = prefill(CFG, flat, tokens, lm, use_pallas=False)
+    s = CFG.max_seq
+    for t in [1, 5, 11]:
+        mask = np.zeros((1, CFG.n_layers, CFG.n_kv_heads, s), np.float32)
+        mask[:, :, :, :t] = 1
+        res = decode_full(
+            CFG, flat, tokens[:, t], jnp.asarray([t], jnp.int64),
+            k, v, jnp.asarray(mask), jnp.asarray(s + 1, jnp.int64),
+        )
+        np.testing.assert_allclose(
+            np.asarray(res[0]), np.asarray(logits_pf)[:, t], rtol=3e-3, atol=3e-4,
+            err_msg=f"t={t}",
+        )
+
+
+def test_decode_mikv_all_hi_matches_decode_full():
+    """MiKV decode with everything in the hi tier (fp) == full decode."""
+    flat = setup()
+    tokens, lm = prompt(n=9, seed=4)
+    _, k, v, *_ = prefill(CFG, flat, tokens, lm, use_pallas=False)
+    s, l, h, d = CFG.max_seq, CFG.n_layers, CFG.n_kv_heads, CFG.d_head
+    ng = CFG.n_groups
+    t = 9
+    mask = np.zeros((1, l, h, s), np.float32)
+    mask[:, :, :, :t] = 1
+    z = lambda *shape: jnp.zeros(shape, jnp.float32)
+    res_mikv = decode_mikv(
+        CFG, flat, tokens[:, 0], jnp.asarray([t], jnp.int64),
+        k, v, jnp.asarray(mask),
+        z(1, l, h, s, d), z(1, l, h, s, ng) + 1.0, z(1, l, h, s, ng),
+        z(1, l, h, s, d), z(1, l, h, s, ng) + 1.0, z(1, l, h, s, ng),
+        z(1, l, h, s), jnp.ones((1, l, h, d), jnp.float32),
+        use_pallas=False,
+    )
+    res_full = decode_full(
+        CFG, flat, tokens[:, 0], jnp.asarray([t], jnp.int64),
+        k, v, jnp.asarray(mask), jnp.asarray(s + 1, jnp.int64),
+    )
+    for a, b, name in zip(res_mikv, res_full,
+                          ["logits", "k_new", "v_new", "attn_prev", "attn_self"]):
+        np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5, err_msg=name
+        )
+
+
+def test_decode_mikv_pallas_matches_ref_path():
+    flat = setup()
+    rng = np.random.default_rng(5)
+    s, l, h, d = CFG.max_seq, CFG.n_layers, CFG.n_kv_heads, CFG.d_head
+    ng = CFG.n_groups
+    f = lambda *shape: jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+    hi = (rng.random((1, l, h, s)) < 0.4).astype(np.float32)
+    lo = ((rng.random((1, l, h, s)) < 0.4) * (1 - hi)).astype(np.float32)
+    args = (
+        jnp.asarray([3], jnp.int64), jnp.asarray([s // 2], jnp.int64),
+        f(1, l, h, s, d), f(1, l, h, s, d), jnp.asarray(hi),
+        jnp.asarray(rng.integers(0, 4, (1, l, h, s, d)).astype(np.float32)),
+        jnp.asarray((0.1 + rng.random((1, l, h, s, ng))).astype(np.float32)),
+        f(1, l, h, s, ng),
+        jnp.asarray(rng.integers(0, 4, (1, l, h, s, d)).astype(np.float32)),
+        jnp.asarray((0.1 + rng.random((1, l, h, s, ng))).astype(np.float32)),
+        f(1, l, h, s, ng),
+        jnp.asarray(lo), jnp.asarray((0.5 + rng.random((1, l, h, d))).astype(np.float32)),
+    )
+    got = decode_mikv(CFG, flat, *args, use_pallas=True)
+    want = decode_mikv(CFG, flat, *args, use_pallas=False)
+    for a, b in zip(got, want):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-5)
+
+
+def test_oracle_topk_full_k_is_identity():
+    """oracle_k >= S+1 must equal the exact full-cache decode."""
+    flat = setup()
+    tokens, lm = prompt(n=7, seed=6)
+    _, k, v, *_ = prefill(CFG, flat, tokens, lm, use_pallas=False)
+    s, l, h = CFG.max_seq, CFG.n_layers, CFG.n_kv_heads
+    mask = np.zeros((1, l, h, s), np.float32)
+    mask[:, :, :, :7] = 1
+    full = decode_full(CFG, flat, tokens[:, 0], jnp.asarray([7], jnp.int64),
+                       k, v, jnp.asarray(mask), jnp.asarray(s + 1, jnp.int64))
+    # k = 8 live slots (7 prev + self) — also no sparsification
+    same = decode_full(CFG, flat, tokens[:, 0], jnp.asarray([7], jnp.int64),
+                       k, v, jnp.asarray(mask), jnp.asarray(8, jnp.int64))
+    np.testing.assert_allclose(np.asarray(full[0]), np.asarray(same[0]), rtol=1e-4, atol=1e-5)
+
+
+def test_oracle_topk_1_attends_single_slot():
+    flat = setup()
+    tokens, lm = prompt(n=7, seed=7)
+    _, k, v, *_ = prefill(CFG, flat, tokens, lm, use_pallas=False)
+    s, l, h = CFG.max_seq, CFG.n_layers, CFG.n_kv_heads
+    mask = np.zeros((1, l, h, s), np.float32)
+    mask[:, :, :, :7] = 1
+    res = decode_full(CFG, flat, tokens[:, 0], jnp.asarray([7], jnp.int64),
+                      k, v, jnp.asarray(mask), jnp.asarray(1, jnp.int64))
+    attn_prev, attn_self = np.asarray(res[3]), np.asarray(res[4])
+    # per (plane, q-head) exactly one slot holds probability 1, so the
+    # summed mass per plane equals the number of grouped q heads and every
+    # entry is integral
+    g = CFG.gqa_group
+    total = attn_prev.sum(-1) + attn_self
+    np.testing.assert_allclose(total, float(g), rtol=1e-5)
+    stacked = np.concatenate([attn_prev, attn_self[..., None]], axis=-1)
+    np.testing.assert_allclose(stacked, np.round(stacked), atol=1e-5)
+
+
+def test_gqa_grouping_consistency():
+    """A GQA model whose KV heads are replicated to all Q heads must match
+    the equivalent MHA model."""
+    gqa = CONFIGS["cfg-tiny"]  # 4 q heads, 2 kv heads
+    mha = type(gqa)(
+        name="tiny-mha", vocab=gqa.vocab, d_model=gqa.d_model,
+        n_layers=gqa.n_layers, n_q_heads=4, n_kv_heads=4,
+        d_head=gqa.d_head, d_ff=gqa.d_ff, max_seq=gqa.max_seq,
+    )
+    params_g = init_params(gqa, jax.random.PRNGKey(1))
+    params_m = {k: v.copy() for k, v in params_g.items()}
+    # replicate each kv head's projection to the two q heads of its group
+    d = gqa.d_head
+    for i in range(gqa.n_layers):
+        for w in ["wk", "wv"]:
+            pw = params_g[f"l{i}.{w}"]  # [E, 2*d]
+            params_m[f"l{i}.{w}"] = jnp.concatenate(
+                [pw[:, :d], pw[:, :d], pw[:, d:], pw[:, d:]], axis=1
+            )
+    tokens, lm = prompt(n=8, seed=8)
+    lg, *_ = prefill(gqa, params_to_list(gqa, params_g), tokens, lm, use_pallas=False)
+    lm_, *_ = prefill(mha, params_to_list(mha, params_m), tokens, lm, use_pallas=False)
+    np.testing.assert_allclose(
+        np.asarray(lg)[0, :8], np.asarray(lm_)[0, :8], rtol=2e-4, atol=1e-5
+    )
+
+
+def test_corpus_samples_are_well_formed():
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        s = corpus.gen_mixture(rng, 192)
+        assert len(s.tokens) <= 192
+        assert s.tokens.min() >= 0 and s.tokens.max() < corpus.VOCAB
+        assert len(s.loss_mask) == len(s.tokens)
+        if s.family in ("lineret", "multihop"):
+            # canonical induction: the token before the answer is the query key
+            qk = s.tokens[s.answer_start - 1]
+            assert corpus.KEY_BASE <= qk < corpus.KEY_BASE + corpus.KEY_N
+            np.testing.assert_array_equal(
+                s.tokens[s.answer_start : s.answer_start + len(s.answer)], s.answer
+            )
+
+
+def test_corpus_lineret_answer_is_retrievable():
+    """The queried key appears exactly once and its value is the answer."""
+    rng = np.random.default_rng(1)
+    s = corpus.gen_lineret(rng, 8)
+    toks = s.tokens.tolist()
+    qpos = toks.index(corpus.QUERY)
+    key = toks[qpos + 1 : qpos + 1 + corpus.KEY_TOKS]
+    # find the record with that key; its value follows immediately
+    found = 0
+    for i, t in enumerate(toks[:qpos]):
+        if t == corpus.REC and toks[i + 1 : i + 1 + corpus.KEY_TOKS] == key:
+            val = toks[i + 1 + corpus.KEY_TOKS : i + 1 + corpus.KEY_TOKS + corpus.VAL_TOKS]
+            np.testing.assert_array_equal(np.asarray(val), s.answer)
+            found += 1
+    assert found == 1

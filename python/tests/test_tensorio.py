@@ -1,0 +1,59 @@
+"""Round-trip tests for the .mikv tensor container."""
+
+import numpy as np
+import pytest
+
+from compile.tensorio import ALIGN, MAGIC, read_tensors, write_tensors
+
+
+def test_roundtrip_multiple_tensors(tmp_path):
+    path = str(tmp_path / "t.mikv")
+    tensors = {
+        "a": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "b": np.array([1, -2, 3], dtype=np.int64),
+        "scalar": np.array(7.5, dtype=np.float32),
+        "empty": np.zeros((0, 4), dtype=np.float32),
+    }
+    write_tensors(path, tensors, {"k": "v", "n": 3})
+    tf = read_tensors(path)
+    assert tf.meta == {"k": "v", "n": 3}
+    assert tf.names() == ["a", "b", "scalar", "empty"]
+    for name, arr in tensors.items():
+        np.testing.assert_array_equal(tf[name], arr)
+        assert tf[name].dtype == arr.dtype
+
+
+def test_alignment(tmp_path):
+    path = str(tmp_path / "t.mikv")
+    write_tensors(path, {"x": np.ones(3, np.float32), "y": np.ones(5, np.float32)})
+    with open(path, "rb") as f:
+        data = f.read()
+    import json
+    import struct
+
+    hdrlen = struct.unpack("<Q", data[len(MAGIC) : len(MAGIC) + 8])[0]
+    header = json.loads(data[len(MAGIC) + 8 : len(MAGIC) + 8 + hdrlen])
+    for e in header["tensors"]:
+        assert e["offset"] % ALIGN == 0
+
+
+def test_bad_magic_rejected(tmp_path):
+    path = str(tmp_path / "bad.mikv")
+    with open(path, "wb") as f:
+        f.write(b"NOTMIKV" + b"\x00" * 64)
+    with pytest.raises(ValueError, match="bad magic"):
+        read_tensors(path)
+
+
+def test_unsupported_dtype_rejected(tmp_path):
+    with pytest.raises(TypeError):
+        write_tensors(str(tmp_path / "x.mikv"), {"x": np.ones(2, np.float64)})
+
+
+def test_f32_bitexact(tmp_path):
+    path = str(tmp_path / "t.mikv")
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(1000).astype(np.float32)
+    write_tensors(path, {"x": x})
+    y = read_tensors(path)["x"]
+    assert np.array_equal(x.view(np.uint32), y.view(np.uint32))

@@ -1,0 +1,354 @@
+//! Benchmark harness (the offline image has no criterion).
+//!
+//! Provides what the `benches/` binaries need: warmup + timed repetitions
+//! with robust statistics, and table builders that render the paper's
+//! tables/figures as aligned markdown plus machine-readable JSON under
+//! `bench_out/`.
+
+use crate::util::json::{Json, JsonObj};
+use std::time::{Duration, Instant};
+
+/// Statistics over a set of timed iterations.
+#[derive(Debug, Clone)]
+pub struct Stats {
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub std_dev: Duration,
+}
+
+impl Stats {
+    fn from_samples(mut samples: Vec<Duration>) -> Stats {
+        assert!(!samples.is_empty());
+        samples.sort_unstable();
+        let n = samples.len();
+        let sum: f64 = samples.iter().map(|d| d.as_secs_f64()).sum();
+        let mean = sum / n as f64;
+        let var: f64 = samples
+            .iter()
+            .map(|d| (d.as_secs_f64() - mean).powi(2))
+            .sum::<f64>()
+            / n as f64;
+        let pct = |p: f64| samples[((n as f64 - 1.0) * p).round() as usize];
+        Stats {
+            iters: n,
+            mean: Duration::from_secs_f64(mean),
+            p50: pct(0.50),
+            p99: pct(0.99),
+            min: samples[0],
+            max: samples[n - 1],
+            std_dev: Duration::from_secs_f64(var.sqrt()),
+        }
+    }
+
+    /// Throughput given `units` of work per iteration.
+    pub fn per_second(&self, units: f64) -> f64 {
+        units / self.mean.as_secs_f64()
+    }
+}
+
+/// Benchmark runner: `Bencher::new("name").warmup(3).iters(20).run(|| ...)`.
+pub struct Bencher {
+    name: String,
+    warmup: usize,
+    iters: usize,
+    /// Optional wall-clock budget: stop early (after >= 3 iters) once spent.
+    max_total: Option<Duration>,
+}
+
+impl Bencher {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            warmup: 2,
+            iters: 10,
+            max_total: None,
+        }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup = n;
+        self
+    }
+
+    pub fn iters(mut self, n: usize) -> Self {
+        self.iters = n;
+        self
+    }
+
+    pub fn max_total(mut self, d: Duration) -> Self {
+        self.max_total = Some(d);
+        self
+    }
+
+    /// Run the closure and collect timing stats. The closure's return value
+    /// is passed through `std::hint::black_box` to keep the work alive.
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> Stats {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        let start = Instant::now();
+        for i in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+            if let Some(budget) = self.max_total {
+                if i >= 2 && start.elapsed() > budget {
+                    break;
+                }
+            }
+        }
+        let stats = Stats::from_samples(samples);
+        crate::log_debug!(
+            "bench {}: mean={:?} p50={:?} p99={:?} (n={})",
+            self.name,
+            stats.mean,
+            stats.p50,
+            stats.p99,
+            stats.iters
+        );
+        stats
+    }
+}
+
+/// A cell value in a result table.
+#[derive(Debug, Clone)]
+pub enum Cell {
+    Str(String),
+    Int(i64),
+    /// Float with display precision.
+    F(f64, usize),
+    /// Percentage with display precision (stored as fraction OR percent —
+    /// caller passes the already-scaled percent value).
+    Pct(f64, usize),
+}
+
+impl Cell {
+    fn render(&self) -> String {
+        match self {
+            Cell::Str(s) => s.clone(),
+            Cell::Int(i) => i.to_string(),
+            Cell::F(v, p) => format!("{v:.p$}", p = p),
+            Cell::Pct(v, p) => format!("{v:.p$}%", p = p),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        match self {
+            Cell::Str(s) => Json::Str(s.clone()),
+            Cell::Int(i) => Json::Int(*i),
+            Cell::F(v, _) | Cell::Pct(v, _) => Json::Num(*v),
+        }
+    }
+}
+
+impl From<&str> for Cell {
+    fn from(s: &str) -> Self {
+        Cell::Str(s.to_string())
+    }
+}
+impl From<String> for Cell {
+    fn from(s: String) -> Self {
+        Cell::Str(s)
+    }
+}
+impl From<i64> for Cell {
+    fn from(i: i64) -> Self {
+        Cell::Int(i)
+    }
+}
+impl From<usize> for Cell {
+    fn from(i: usize) -> Self {
+        Cell::Int(i as i64)
+    }
+}
+
+/// Result table mirroring one paper exhibit (table or figure series).
+#[derive(Debug, Clone)]
+pub struct Table {
+    /// e.g. "table1" — used as the output file stem.
+    pub id: String,
+    /// Human title, e.g. the paper caption.
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<Cell>>,
+    /// Free-form notes (seeds, config) recorded with the results.
+    pub notes: Vec<String>,
+}
+
+impl Table {
+    pub fn new(id: impl Into<String>, title: impl Into<String>, columns: &[&str]) -> Self {
+        Self {
+            id: id.into(),
+            title: title.into(),
+            columns: columns.iter().map(|c| c.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<Cell>) -> &mut Self {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn note(&mut self, n: impl Into<String>) -> &mut Self {
+        self.notes.push(n.into());
+        self
+    }
+
+    /// Render as aligned markdown.
+    pub fn to_markdown(&self) -> String {
+        let rendered: Vec<Vec<String>> = self
+            .rows
+            .iter()
+            .map(|r| r.iter().map(Cell::render).collect())
+            .collect();
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for r in &rendered {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("## {} — {}\n\n", self.id, self.title);
+        let hdr: Vec<String> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{c:<w$}", w = widths[i]))
+            .collect();
+        out.push_str(&format!("| {} |\n", hdr.join(" | ")));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&format!("|-{}-|\n", sep.join("-|-")));
+        for r in rendered {
+            let cells: Vec<String> = r
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{c:<w$}", w = widths[i]))
+                .collect();
+            out.push_str(&format!("| {} |\n", cells.join(" | ")));
+        }
+        for n in &self.notes {
+            out.push_str(&format!("\n> {n}\n"));
+        }
+        out
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.set("id", self.id.as_str());
+        o.set("title", self.title.as_str());
+        o.set(
+            "columns",
+            Json::Arr(self.columns.iter().map(|c| Json::Str(c.clone())).collect()),
+        );
+        o.set(
+            "rows",
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|r| Json::Arr(r.iter().map(Cell::to_json).collect()))
+                    .collect(),
+            ),
+        );
+        o.set(
+            "notes",
+            Json::Arr(self.notes.iter().map(|n| Json::Str(n.clone())).collect()),
+        );
+        Json::Obj(o)
+    }
+
+    /// Print to stdout and persist under `bench_out/<id>.{md,json}`.
+    pub fn emit(&self) -> std::io::Result<()> {
+        let md = self.to_markdown();
+        println!("{md}");
+        std::fs::create_dir_all("bench_out")?;
+        std::fs::write(format!("bench_out/{}.md", self.id), &md)?;
+        std::fs::write(
+            format!("bench_out/{}.json", self.id),
+            self.to_json().to_string_pretty(),
+        )?;
+        Ok(())
+    }
+}
+
+/// Format a Duration as a human-readable string with µs/ms/s autoscale.
+pub fn fmt_duration(d: Duration) -> String {
+    let us = d.as_secs_f64() * 1e6;
+    if us < 1000.0 {
+        format!("{us:.1}µs")
+    } else if us < 1_000_000.0 {
+        format!("{:.2}ms", us / 1000.0)
+    } else {
+        format!("{:.3}s", us / 1e6)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let samples = vec![
+            Duration::from_millis(10),
+            Duration::from_millis(20),
+            Duration::from_millis(30),
+        ];
+        let s = Stats::from_samples(samples);
+        assert_eq!(s.iters, 3);
+        assert_eq!(s.p50, Duration::from_millis(20));
+        assert_eq!(s.min, Duration::from_millis(10));
+        assert_eq!(s.max, Duration::from_millis(30));
+        assert!((s.mean.as_secs_f64() - 0.020).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bencher_runs_and_counts() {
+        let mut calls = 0usize;
+        let stats = Bencher::new("t").warmup(1).iters(5).run(|| {
+            calls += 1;
+            calls
+        });
+        assert_eq!(stats.iters, 5);
+        assert_eq!(calls, 6); // 1 warmup + 5 timed
+    }
+
+    #[test]
+    fn throughput_math() {
+        let s = Stats::from_samples(vec![Duration::from_millis(100)]);
+        let tput = s.per_second(50.0);
+        assert!((tput - 500.0).abs() < 1.0);
+    }
+
+    #[test]
+    fn table_markdown_shape() {
+        let mut t = Table::new("tX", "demo", &["a", "bb"]);
+        t.row(vec!["x".into(), Cell::Pct(92.6, 1)]);
+        t.row(vec!["longer".into(), Cell::F(0.5, 2)]);
+        t.note("seed=1");
+        let md = t.to_markdown();
+        assert!(md.contains("| a      | bb    |"), "got:\n{md}");
+        assert!(md.contains("92.6%"));
+        assert!(md.contains("> seed=1"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_arity_checked() {
+        let mut t = Table::new("t", "x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn fmt_duration_scales() {
+        assert_eq!(fmt_duration(Duration::from_micros(500)), "500.0µs");
+        assert_eq!(fmt_duration(Duration::from_millis(12)), "12.00ms");
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.000s");
+    }
+}

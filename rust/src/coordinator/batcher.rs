@@ -1,0 +1,239 @@
+//! The continuous-batching coordinator loop.
+//!
+//! Runs on the engine thread (PJRT handles are not `Send`). Each scheduler
+//! iteration:
+//!
+//! 1. drains newly arrived requests into the waiting queue (FCFS);
+//! 2. admits waiting requests up to `max_active` and prefills them in
+//!    chunks of the compiled prefill batch sizes;
+//! 3. forms decode batches from the active set, grouped by graph kind
+//!    (MiKV-cache sessions vs full/oracle-cache sessions — different
+//!    executables) and, within the oracle group, by `oracle_k`;
+//! 4. retires finished sessions (budget reached / stop token / cache full)
+//!    and replies on each request's channel.
+//!
+//! Short requests are never stuck behind long ones: batches are re-formed
+//! every step from whatever is active (the "continuous" in continuous
+//! batching, per Orca/vLLM).
+
+use super::request::{Request, RequestMetrics, Response};
+use crate::model::{sampler, CacheMode, Engine, Session};
+use std::collections::VecDeque;
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Coordinator tuning knobs.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Maximum sessions decoding concurrently.
+    pub max_active: usize,
+    /// Maximum requests prefilled per scheduler iteration.
+    pub prefill_chunk: usize,
+    /// Channel poll timeout when idle.
+    pub idle_poll: Duration,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        Self {
+            max_active: 8,
+            prefill_chunk: 4,
+            idle_poll: Duration::from_millis(20),
+        }
+    }
+}
+
+struct Active {
+    req: Request,
+    sess: Session,
+    prefill_done: Instant,
+    generated_budget: usize,
+}
+
+impl Active {
+    fn finished(&self, max_seq: usize) -> bool {
+        let gen = self.sess.tokens.len() - self.sess.prompt_len;
+        gen >= self.generated_budget
+            || self.req.stop == Some(self.sess.last_token)
+            || self.sess.cache.seq_len() + 1 >= max_seq
+    }
+}
+
+/// The coordinator. Owns the engine for the lifetime of [`Self::run`].
+pub struct Coordinator {
+    engine: Engine,
+    cfg: CoordinatorConfig,
+}
+
+impl Coordinator {
+    pub fn new(engine: Engine, cfg: CoordinatorConfig) -> Self {
+        Self { engine, cfg }
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Serve until the request channel closes and all work drains.
+    pub fn run(&self, rx: Receiver<Request>) {
+        self.run_until(rx, || false)
+    }
+
+    /// Like [`Self::run`], but also stops (after draining in-flight work)
+    /// once `stop()` returns true — used when the shutdown signal is
+    /// something other than channel closure (e.g. a finished test client).
+    pub fn run_until(&self, rx: Receiver<Request>, stop: impl Fn() -> bool) {
+        let mut waiting: VecDeque<Request> = VecDeque::new();
+        let mut active: Vec<Active> = Vec::new();
+        let mut closed = false;
+
+        while !((closed || stop()) && waiting.is_empty() && active.is_empty()) {
+            // 1. Drain the channel (block briefly when idle).
+            loop {
+                match if active.is_empty() && waiting.is_empty() && !closed {
+                    rx.recv_timeout(self.cfg.idle_poll).map_err(|e| e == RecvTimeoutError::Disconnected)
+                } else {
+                    rx.try_recv().map_err(|e| e == std::sync::mpsc::TryRecvError::Disconnected)
+                } {
+                    Ok(req) => waiting.push_back(req),
+                    Err(true) => {
+                        closed = true;
+                        break;
+                    }
+                    Err(false) => break,
+                }
+            }
+
+            // 2. Admit + prefill a chunk.
+            let room = self.cfg.max_active.saturating_sub(active.len());
+            let n_admit = room.min(self.cfg.prefill_chunk).min(waiting.len());
+            if n_admit > 0 {
+                let batch: Vec<Request> = waiting.drain(..n_admit).collect();
+                self.prefill_batch(batch, &mut active);
+            }
+
+            // 3. One decode step over the active set, grouped by graph.
+            if !active.is_empty() {
+                self.decode_round(&mut active);
+            }
+
+            // 4. Retire finished sessions.
+            let max_seq = self.engine.dims().max_seq;
+            let mut i = 0;
+            while i < active.len() {
+                if active[i].finished(max_seq) {
+                    let a = active.swap_remove(i);
+                    let tokens = a.sess.generated().to_vec();
+                    let resp = Response {
+                        id: a.req.id,
+                        metrics: RequestMetrics {
+                            ttft: a.prefill_done - a.req.submitted_at,
+                            latency: a.req.submitted_at.elapsed(),
+                            prompt_tokens: a.sess.prompt_len,
+                            generated_tokens: tokens.len(),
+                            cache_pct: a.sess.cache.cache_size_pct(),
+                        },
+                        tokens,
+                        error: None,
+                    };
+                    let _ = a.req.reply.send(resp); // receiver may be gone
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        crate::log_info!("coordinator drained, shutting down");
+    }
+
+    fn prefill_batch(&self, reqs: Vec<Request>, active: &mut Vec<Active>) {
+        let dims = self.engine.dims().clone();
+        let mut sessions = Vec::new();
+        let mut oks = Vec::new();
+        for req in reqs {
+            match Session::new(req.id, &dims, req.mode.clone()) {
+                Ok(s) => {
+                    sessions.push(s);
+                    oks.push(req);
+                }
+                Err(e) => {
+                    let _ = req.reply.send(Response::error(req.id, e.to_string()));
+                }
+            }
+        }
+        if sessions.is_empty() {
+            return;
+        }
+        let prompts: Vec<Vec<i64>> = oks.iter().map(|r| r.prompt.clone()).collect();
+        let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+        match self.engine.prefill(&mut refs, &prompts) {
+            Ok(_) => {
+                let now = Instant::now();
+                for (req, sess) in oks.into_iter().zip(sessions) {
+                    active.push(Active {
+                        generated_budget: req.max_new.max(1),
+                        req,
+                        sess,
+                        prefill_done: now,
+                    });
+                }
+            }
+            Err(e) => {
+                crate::log_error!("prefill failed: {e}");
+                for req in oks {
+                    let _ = req.reply.send(Response::error(req.id, e.to_string()));
+                }
+            }
+        }
+    }
+
+    fn decode_round(&self, active: &mut [Active]) {
+        // Group indices by (graph kind, oracle_k).
+        let mut groups: std::collections::BTreeMap<(String, i64), Vec<usize>> =
+            std::collections::BTreeMap::new();
+        for (i, a) in active.iter().enumerate() {
+            let key = match a.sess.mode {
+                CacheMode::Oracle { k } => ("decode_full".to_string(), k as i64),
+                CacheMode::Full => ("decode_full".to_string(), -1),
+                CacheMode::Mikv { .. } => ("decode_mikv".to_string(), 0),
+            };
+            groups.entry(key).or_default().push(i);
+        }
+        for (_, idxs) in groups {
+            // split_at_mut gymnastics: collect raw pointers safely via
+            // partition in index order (indices are distinct).
+            let mut refs: Vec<&mut Session> = Vec::with_capacity(idxs.len());
+            // SAFETY: idxs are unique indices into `active`; we create
+            // non-overlapping &mut borrows.
+            unsafe {
+                let base = active.as_mut_ptr();
+                for &i in &idxs {
+                    refs.push(&mut (*base.add(i)).sess);
+                }
+            }
+            match self.engine.decode_step(&mut refs) {
+                Ok(rows) => {
+                    for (sess, row) in refs.iter_mut().zip(rows) {
+                        let tok = sampler::greedy(&row);
+                        sess.last_token = tok;
+                        sess.tokens.push(tok);
+                    }
+                }
+                Err(e) => crate::log_error!("decode failed: {e}"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults_sane() {
+        let c = CoordinatorConfig::default();
+        assert!(c.max_active >= c.prefill_chunk);
+        assert!(c.idle_poll > Duration::ZERO);
+    }
+    // The full coordinator loop is exercised by rust/tests/ integration
+    // tests with real artifacts and by examples/serve_e2e.rs.
+}

@@ -1,0 +1,18 @@
+//! Serving coordinator: request queue, continuous batcher, metrics.
+//!
+//! PJRT handles are not `Send`, so the [`crate::model::Engine`] lives on a
+//! dedicated engine thread running [`Coordinator::run`]; other threads
+//! (TCP connection handlers, benchmark drivers) talk to it through
+//! [`std::sync::mpsc`] channels. The coordinator implements
+//! **continuous batching**: new requests are prefilled in chunks while
+//! active sessions keep decoding, and decode batches are re-formed every
+//! step from whatever is in flight (grouped by graph kind), so a long
+//! generation never blocks short ones behind it.
+
+pub mod batcher;
+pub mod request;
+pub mod stats;
+
+pub use batcher::{Coordinator, CoordinatorConfig};
+pub use request::{Reply, Request, RequestMetrics, Response};
+pub use stats::MetricsCollector;

@@ -1,0 +1,59 @@
+//! Request/response types crossing the coordinator boundary.
+
+use crate::model::CacheMode;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Reply channel for one request.
+pub type Reply = mpsc::Sender<Response>;
+
+/// A generation request.
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i64>,
+    /// Maximum new tokens to generate (including the prefill's first token).
+    pub max_new: usize,
+    /// Stop early when this token is produced.
+    pub stop: Option<i64>,
+    pub mode: CacheMode,
+    pub submitted_at: Instant,
+    pub reply: Reply,
+}
+
+/// Per-request latency/throughput metrics.
+#[derive(Debug, Clone)]
+pub struct RequestMetrics {
+    /// Time to first token (prefill completion).
+    pub ttft: Duration,
+    /// Total request latency.
+    pub latency: Duration,
+    pub prompt_tokens: usize,
+    pub generated_tokens: usize,
+    /// Logical cache size at completion (% of full FP16).
+    pub cache_pct: f64,
+}
+
+/// A completed generation.
+pub struct Response {
+    pub id: u64,
+    pub tokens: Vec<i64>,
+    pub metrics: RequestMetrics,
+    pub error: Option<String>,
+}
+
+impl Response {
+    pub fn error(id: u64, msg: impl Into<String>) -> Response {
+        Response {
+            id,
+            tokens: Vec::new(),
+            metrics: RequestMetrics {
+                ttft: Duration::ZERO,
+                latency: Duration::ZERO,
+                prompt_tokens: 0,
+                generated_tokens: 0,
+                cache_pct: 0.0,
+            },
+            error: Some(msg.into()),
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! Serving metrics aggregation.
+
+use super::request::RequestMetrics;
+use std::time::{Duration, Instant};
+
+/// Aggregates per-request metrics into the numbers the serving benches
+/// report: TTFT / latency percentiles and token throughput.
+#[derive(Debug)]
+pub struct MetricsCollector {
+    started: Instant,
+    ttfts: Vec<Duration>,
+    latencies: Vec<Duration>,
+    prompt_tokens: usize,
+    generated_tokens: usize,
+}
+
+impl Default for MetricsCollector {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetricsCollector {
+    pub fn new() -> Self {
+        Self {
+            started: Instant::now(),
+            ttfts: Vec::new(),
+            latencies: Vec::new(),
+            prompt_tokens: 0,
+            generated_tokens: 0,
+        }
+    }
+
+    pub fn record(&mut self, m: &RequestMetrics) {
+        self.ttfts.push(m.ttft);
+        self.latencies.push(m.latency);
+        self.prompt_tokens += m.prompt_tokens;
+        self.generated_tokens += m.generated_tokens;
+    }
+
+    pub fn n_requests(&self) -> usize {
+        self.latencies.len()
+    }
+
+    fn pct(sorted: &[Duration], p: f64) -> Duration {
+        if sorted.is_empty() {
+            return Duration::ZERO;
+        }
+        sorted[((sorted.len() as f64 - 1.0) * p).round() as usize]
+    }
+
+    /// (p50, p99) of time-to-first-token.
+    pub fn ttft(&self) -> (Duration, Duration) {
+        let mut v = self.ttfts.clone();
+        v.sort_unstable();
+        (Self::pct(&v, 0.5), Self::pct(&v, 0.99))
+    }
+
+    /// (p50, p99) of end-to-end latency.
+    pub fn latency(&self) -> (Duration, Duration) {
+        let mut v = self.latencies.clone();
+        v.sort_unstable();
+        (Self::pct(&v, 0.5), Self::pct(&v, 0.99))
+    }
+
+    /// Generated tokens per wall-clock second since collector creation.
+    pub fn throughput(&self) -> f64 {
+        self.generated_tokens as f64 / self.started.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    pub fn generated_tokens(&self) -> usize {
+        self.generated_tokens
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metrics(ttft_ms: u64, lat_ms: u64) -> RequestMetrics {
+        RequestMetrics {
+            ttft: Duration::from_millis(ttft_ms),
+            latency: Duration::from_millis(lat_ms),
+            prompt_tokens: 10,
+            generated_tokens: 5,
+            cache_pct: 50.0,
+        }
+    }
+
+    #[test]
+    fn aggregates_percentiles() {
+        let mut c = MetricsCollector::new();
+        for i in 1..=100 {
+            c.record(&metrics(i, i * 2));
+        }
+        assert_eq!(c.n_requests(), 100);
+        // index = round((n-1)·p): p50 of 1..=100 → index 50 → value 51
+        let (p50, p99) = c.ttft();
+        assert_eq!(p50, Duration::from_millis(51));
+        assert_eq!(p99, Duration::from_millis(99));
+        let (l50, l99) = c.latency();
+        assert_eq!(l50, Duration::from_millis(102));
+        assert_eq!(l99, Duration::from_millis(198));
+        assert_eq!(c.generated_tokens(), 500);
+    }
+
+    #[test]
+    fn empty_collector_is_safe() {
+        let c = MetricsCollector::new();
+        assert_eq!(c.ttft().0, Duration::ZERO);
+        assert_eq!(c.n_requests(), 0);
+    }
+}

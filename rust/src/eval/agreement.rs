@@ -1,0 +1,109 @@
+//! Generation-agreement metrics — the AlpacaEval proxy (paper Table 4).
+//!
+//! The paper measures a GPT-4-judged win rate of MiKV generations against
+//! full-cache generations (≈50% ⇒ no quality drop). Without a judge model,
+//! we report the deterministic analogue: token agreement between the
+//! compressed-cache generation and the full-cache generation from the same
+//! prompt under greedy decoding. A *proxy win rate* maps agreement onto the
+//! paper's 50%-means-parity scale: identical generations are a tie (0.5);
+//! divergent generations earn `0.5 × agreement`, so 50% ⇔ indistinguishable
+//! from the full cache.
+
+/// Fraction of positions where the two generations emit the same token
+/// (over the longer length; missing positions count as disagreement).
+pub fn token_agreement(a: &[i64], b: &[i64]) -> f64 {
+    let n = a.len().max(b.len());
+    if n == 0 {
+        return 1.0;
+    }
+    let same = a.iter().zip(b.iter()).filter(|(x, y)| x == y).count();
+    same as f64 / n as f64
+}
+
+/// Length of the longest common prefix.
+pub fn prefix_match(a: &[i64], b: &[i64]) -> usize {
+    a.iter().zip(b.iter()).take_while(|(x, y)| x == y).count()
+}
+
+/// Aggregated agreement over many prompt pairs.
+#[derive(Debug, Clone, Default)]
+pub struct AgreementStats {
+    pub n: usize,
+    pub identical: usize,
+    pub sum_agreement: f64,
+    pub sum_prefix_frac: f64,
+}
+
+impl AgreementStats {
+    pub fn add(&mut self, compressed: &[i64], full: &[i64]) {
+        self.n += 1;
+        let agree = token_agreement(compressed, full);
+        self.sum_agreement += agree;
+        let n = compressed.len().max(full.len()).max(1);
+        self.sum_prefix_frac += prefix_match(compressed, full) as f64 / n as f64;
+        if agree == 1.0 {
+            self.identical += 1;
+        }
+    }
+
+    pub fn mean_agreement(&self) -> f64 {
+        if self.n == 0 {
+            return 1.0;
+        }
+        self.sum_agreement / self.n as f64
+    }
+
+    pub fn identical_rate(&self) -> f64 {
+        if self.n == 0 {
+            return 1.0;
+        }
+        self.identical as f64 / self.n as f64
+    }
+
+    /// Proxy win rate on the paper's scale: 50% ⇔ parity with full cache.
+    pub fn proxy_win_rate(&self) -> f64 {
+        50.0 * self.mean_agreement()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn agreement_basics() {
+        assert_eq!(token_agreement(&[1, 2, 3], &[1, 2, 3]), 1.0);
+        assert_eq!(token_agreement(&[1, 2, 3], &[1, 9, 3]), 2.0 / 3.0);
+        assert_eq!(token_agreement(&[], &[]), 1.0);
+        // length mismatch counts against agreement
+        assert_eq!(token_agreement(&[1, 2], &[1, 2, 3, 4]), 0.5);
+    }
+
+    #[test]
+    fn prefix_basics() {
+        assert_eq!(prefix_match(&[1, 2, 3], &[1, 2, 9]), 2);
+        assert_eq!(prefix_match(&[5], &[1]), 0);
+        assert_eq!(prefix_match(&[], &[1]), 0);
+    }
+
+    #[test]
+    fn stats_aggregate() {
+        let mut s = AgreementStats::default();
+        s.add(&[1, 2, 3], &[1, 2, 3]); // identical
+        s.add(&[1, 0, 0], &[1, 2, 3]); // 1/3 agreement
+        assert_eq!(s.n, 2);
+        assert_eq!(s.identical, 1);
+        assert!((s.mean_agreement() - (1.0 + 1.0 / 3.0) / 2.0).abs() < 1e-9);
+        assert!((s.proxy_win_rate() - 50.0 * s.mean_agreement()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn perfect_parity_is_fifty_percent() {
+        let mut s = AgreementStats::default();
+        for _ in 0..10 {
+            s.add(&[4, 4, 4], &[4, 4, 4]);
+        }
+        assert_eq!(s.proxy_win_rate(), 50.0);
+        assert_eq!(s.identical_rate(), 1.0);
+    }
+}

@@ -1,0 +1,294 @@
+//! Synthetic task corpus — rust mirror of `python/compile/corpus.py`.
+//!
+//! The evaluation side generates *fresh held-out samples* from the same
+//! distribution the model was trained on. Token layout constants must match
+//! the python side bit-for-bit; [`check_manifest_constants`] verifies them
+//! against the constants recorded in `artifacts/manifest.json`.
+
+use crate::util::rng::Pcg32;
+use std::collections::BTreeMap;
+
+pub const PAD: i64 = 0;
+pub const BOS: i64 = 1;
+pub const REC: i64 = 2;
+pub const SEP: i64 = 3;
+pub const QUERY: i64 = 4;
+pub const ANS: i64 = 5;
+pub const EOS: i64 = 6;
+pub const HOP: i64 = 7;
+
+pub const KEY_BASE: i64 = 16;
+pub const KEY_N: i64 = 200;
+pub const VAL_BASE: i64 = 216;
+pub const VAL_N: i64 = 100;
+pub const FILL_BASE: i64 = 316;
+pub const FILL_N: i64 = 96;
+pub const PAT_BASE: i64 = 412;
+pub const PAT_N: i64 = 100;
+
+pub const VOCAB: i64 = 512;
+pub const KEY_TOKS: usize = 1;
+pub const VAL_TOKS: usize = 2;
+
+/// Verify the manifest's corpus constants match this module.
+pub fn check_manifest_constants(consts: &BTreeMap<String, i64>) -> crate::Result<()> {
+    let ours: &[(&str, i64)] = &[
+        ("PAD", PAD), ("BOS", BOS), ("REC", REC), ("SEP", SEP),
+        ("QUERY", QUERY), ("ANS", ANS), ("EOS", EOS), ("HOP", HOP),
+        ("KEY_BASE", KEY_BASE), ("KEY_N", KEY_N),
+        ("VAL_BASE", VAL_BASE), ("VAL_N", VAL_N),
+        ("FILL_BASE", FILL_BASE), ("FILL_N", FILL_N),
+        ("PAT_BASE", PAT_BASE), ("PAT_N", PAT_N),
+        ("VOCAB", VOCAB),
+        ("KEY_TOKS", KEY_TOKS as i64), ("VAL_TOKS", VAL_TOKS as i64),
+    ];
+    for (name, v) in ours {
+        match consts.get(*name) {
+            Some(m) if m == v => {}
+            Some(m) => anyhow::bail!("corpus constant {name}: rust {v} != manifest {m}"),
+            None => anyhow::bail!("corpus constant {name} missing from manifest"),
+        }
+    }
+    Ok(())
+}
+
+/// One evaluation sample: a prompt and its expected continuation.
+#[derive(Debug, Clone)]
+pub struct EvalSample {
+    pub prompt: Vec<i64>,
+    pub answer: Vec<i64>,
+    pub family: &'static str,
+}
+
+fn key(rng: &mut Pcg32) -> Vec<i64> {
+    (0..KEY_TOKS)
+        .map(|_| KEY_BASE + rng.gen_below(KEY_N as u32) as i64)
+        .collect()
+}
+
+fn val(rng: &mut Pcg32) -> Vec<i64> {
+    (0..VAL_TOKS)
+        .map(|_| VAL_BASE + rng.gen_below(VAL_N as u32) as i64)
+        .collect()
+}
+
+fn distinct_keys(rng: &mut Pcg32, n: usize) -> Vec<Vec<i64>> {
+    let mut seen = std::collections::HashSet::new();
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        let k = key(rng);
+        if seen.insert(k.clone()) {
+            out.push(k);
+        }
+    }
+    out
+}
+
+/// Order-2 Markov filler (same transition structure as the python side).
+pub fn gen_filler(rng: &mut Pcg32, n: usize) -> Vec<i64> {
+    let mut out = Vec::with_capacity(n);
+    let mut a = rng.gen_below(FILL_N as u32) as i64;
+    let mut b = rng.gen_below(FILL_N as u32) as i64;
+    for _ in 0..n {
+        let succ = (a * 7 + b * 13 + rng.gen_below(4) as i64 * 31) % FILL_N;
+        out.push(FILL_BASE + succ);
+        a = b;
+        b = succ;
+    }
+    out
+}
+
+/// The paper's line-retrieval task. Canonical-induction format (matches
+/// the python training corpus): records are `[REC, k, v…]` and the prompt
+/// ends right after the query key — the answer is its value.
+pub fn gen_lineret(rng: &mut Pcg32, n_lines: usize, filler_between: usize) -> EvalSample {
+    let keys = distinct_keys(rng, n_lines);
+    let vals: Vec<Vec<i64>> = (0..n_lines).map(|_| val(rng)).collect();
+    let mut prompt = vec![BOS];
+    for (k, v) in keys.iter().zip(&vals) {
+        prompt.push(REC);
+        prompt.extend(k);
+        prompt.extend(v);
+        if filler_between > 0 {
+            prompt.extend(gen_filler(rng, filler_between));
+        }
+    }
+    let qi = rng.gen_below(n_lines as u32) as usize;
+    prompt.push(QUERY);
+    prompt.extend(&keys[qi]);
+    EvalSample {
+        prompt,
+        answer: vals[qi].clone(),
+        family: "lineret",
+    }
+}
+
+/// 2-hop retrieval (GSM8k "reasoning" proxy).
+pub fn gen_multihop(rng: &mut Pcg32, n_lines: usize) -> EvalSample {
+    let n_chain = (n_lines / 2).max(2);
+    let keys_a = distinct_keys(rng, n_chain);
+    let keys_b = distinct_keys(rng, n_chain);
+    let vals: Vec<Vec<i64>> = (0..n_chain).map(|_| val(rng)).collect();
+    // records: hop `[REC, ka, HOP, kb]` and value `[REC, kb, v…]`, shuffled
+    let mut recs: Vec<(bool, &Vec<i64>, Vec<i64>)> = Vec::new();
+    for i in 0..n_chain {
+        recs.push((true, &keys_a[i], keys_b[i].clone()));
+        recs.push((false, &keys_b[i], vals[i].clone()));
+    }
+    let mut order: Vec<usize> = (0..recs.len()).collect();
+    rng.shuffle(&mut order);
+    let mut prompt = vec![BOS];
+    for &i in &order {
+        let (is_hop, lhs, rhs) = &recs[i];
+        prompt.push(REC);
+        prompt.extend(*lhs);
+        if *is_hop {
+            prompt.push(HOP);
+        }
+        prompt.extend(rhs);
+    }
+    let qi = rng.gen_below(n_chain as u32) as usize;
+    prompt.push(QUERY);
+    prompt.extend(&keys_a[qi]);
+    EvalSample {
+        prompt,
+        answer: vals[qi].clone(),
+        family: "multihop",
+    }
+}
+
+/// Exact motif continuation (HumanEval "syntactic agreement" proxy).
+pub fn gen_pattern(rng: &mut Pcg32, motif_len: usize, repeats: usize) -> EvalSample {
+    let motif: Vec<i64> = (0..motif_len)
+        .map(|_| PAT_BASE + rng.gen_below(PAT_N as u32) as i64)
+        .collect();
+    let mut full = Vec::with_capacity(motif_len * repeats);
+    for _ in 0..repeats {
+        full.extend(&motif);
+    }
+    let cut = full.len() - motif_len;
+    let mut prompt = vec![BOS];
+    prompt.extend(&full[..cut]);
+    EvalSample {
+        prompt,
+        answer: full[cut..].to_vec(),
+        family: "pattern",
+    }
+}
+
+/// Filler continuation (MMLU / perplexity proxy): predict the next chunk of
+/// a Markov stream. Scored as next-token agreement vs the full-cache model
+/// rather than exact match (the chain is stochastic).
+pub fn gen_lm(rng: &mut Pcg32, n_context: usize, n_answer: usize) -> EvalSample {
+    let stream = gen_filler(rng, n_context + n_answer);
+    let mut prompt = vec![BOS];
+    prompt.extend(&stream[..n_context]);
+    EvalSample {
+        prompt,
+        answer: stream[n_context..].to_vec(),
+        family: "filler",
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lineret_structure() {
+        let mut rng = Pcg32::new(1);
+        let s = gen_lineret(&mut rng, 6, 0);
+        assert_eq!(s.prompt[0], BOS);
+        // prompt ends with the query key
+        let qpos = s.prompt.iter().position(|&t| t == QUERY).unwrap();
+        assert_eq!(qpos + KEY_TOKS, s.prompt.len() - 1);
+        assert_eq!(s.answer.len(), VAL_TOKS);
+        assert!(s.answer.iter().all(|&t| (VAL_BASE..VAL_BASE + VAL_N).contains(&t)));
+        // queried key appears exactly once in the records; value follows it
+        let qkey = &s.prompt[qpos + 1..qpos + 1 + KEY_TOKS];
+        let mut found = 0;
+        for i in 0..qpos {
+            if s.prompt[i] == REC && &s.prompt[i + 1..i + 1 + KEY_TOKS] == qkey {
+                let v = &s.prompt[i + 1 + KEY_TOKS..i + 1 + KEY_TOKS + VAL_TOKS];
+                assert_eq!(v, &s.answer[..]);
+                found += 1;
+            }
+        }
+        assert_eq!(found, 1);
+    }
+
+    #[test]
+    fn multihop_chain_resolves() {
+        let mut rng = Pcg32::new(2);
+        let s = gen_multihop(&mut rng, 10);
+        let qpos = s.prompt.iter().position(|&t| t == QUERY).unwrap();
+        let ka = s.prompt[qpos + 1..qpos + 1 + KEY_TOKS].to_vec();
+        // hop record: [REC, lhs, HOP, kb]; value record: [REC, lhs, v...]
+        let find_hop = |lhs: &[i64]| -> Option<Vec<i64>> {
+            (0..qpos).find_map(|i| {
+                (s.prompt[i] == REC
+                    && &s.prompt[i + 1..i + 1 + KEY_TOKS] == lhs
+                    && s.prompt[i + 1 + KEY_TOKS] == HOP)
+                    .then(|| s.prompt[i + 2 + KEY_TOKS..i + 2 + 2 * KEY_TOKS].to_vec())
+            })
+        };
+        let find_val = |lhs: &[i64]| -> Option<Vec<i64>> {
+            (0..qpos).find_map(|i| {
+                (s.prompt[i] == REC
+                    && &s.prompt[i + 1..i + 1 + KEY_TOKS] == lhs
+                    && s.prompt[i + 1 + KEY_TOKS] != HOP)
+                    .then(|| s.prompt[i + 1 + KEY_TOKS..i + 1 + KEY_TOKS + VAL_TOKS].to_vec())
+            })
+        };
+        let kb = find_hop(&ka).expect("hop record");
+        let v = find_val(&kb).expect("value record");
+        assert_eq!(v, s.answer);
+    }
+
+    #[test]
+    fn pattern_answer_continues_motif() {
+        let mut rng = Pcg32::new(3);
+        let s = gen_pattern(&mut rng, 5, 4);
+        assert_eq!(s.answer.len(), 5);
+        // the answer equals the first 5 non-BOS prompt tokens (motif)
+        assert_eq!(&s.prompt[1..6], &s.answer[..]);
+    }
+
+    #[test]
+    fn filler_tokens_in_range() {
+        let mut rng = Pcg32::new(4);
+        let s = gen_lm(&mut rng, 30, 5);
+        for &t in s.prompt[1..].iter().chain(&s.answer) {
+            assert!((FILL_BASE..FILL_BASE + FILL_N).contains(&t));
+        }
+    }
+
+    #[test]
+    fn constants_check_catches_mismatch() {
+        let mut m: BTreeMap<String, i64> = [("PAD", 0i64), ("BOS", 1)]
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), v))
+            .collect();
+        assert!(check_manifest_constants(&m).is_err()); // missing keys
+        for (k, v) in [
+            ("REC", 2i64), ("SEP", 3), ("QUERY", 4), ("ANS", 5), ("EOS", 6),
+            ("HOP", 7), ("KEY_BASE", 16), ("KEY_N", 200), ("VAL_BASE", 216),
+            ("VAL_N", 100), ("FILL_BASE", 316), ("FILL_N", 96),
+            ("PAT_BASE", 412), ("PAT_N", 100), ("VOCAB", 512),
+            ("KEY_TOKS", 1), ("VAL_TOKS", 2),
+        ] {
+            m.insert(k.to_string(), v);
+        }
+        assert!(check_manifest_constants(&m).is_ok());
+        m.insert("VOCAB".into(), 1024);
+        assert!(check_manifest_constants(&m).is_err());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = gen_lineret(&mut Pcg32::new(9), 5, 1);
+        let b = gen_lineret(&mut Pcg32::new(9), 5, 1);
+        assert_eq!(a.prompt, b.prompt);
+        assert_eq!(a.answer, b.answer);
+    }
+}

@@ -1,0 +1,206 @@
+//! Shared experiment harness: one prefill, many cache configurations.
+//!
+//! Prefill is cache-agnostic — its outputs (K/V, attention accumulator,
+//! q/k maxima) feed *any* cache configuration. The harness exploits this:
+//! each sample is prefilled once, then fanned out to every strategy under
+//! test, so a Fig. 6-style sweep over N strategies costs `1× prefill +
+//! N× decode` instead of `N×` everything. Decode steps are batched across
+//! samples up to the compiled batch size.
+
+use super::corpus::{self, EvalSample};
+use crate::model::{sampler, CacheMode, Engine, PrefillOutput, Session};
+use crate::util::rng::Pcg32;
+
+/// A task family to evaluate, with its generation parameters.
+#[derive(Debug, Clone)]
+pub enum EvalTask {
+    /// Paper's line retrieval: `n_lines` records (+ filler tokens between).
+    LineRet { n_lines: usize, filler: usize },
+    /// 2-hop retrieval (GSM8k reasoning proxy).
+    MultiHop { n_lines: usize },
+    /// Exact motif continuation (HumanEval proxy).
+    Pattern { motif: usize, repeats: usize },
+    /// Markov continuation (MMLU proxy — scored by agreement vs full cache).
+    Lm { context: usize, answer: usize },
+}
+
+impl EvalTask {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EvalTask::LineRet { .. } => "lineret",
+            EvalTask::MultiHop { .. } => "multihop",
+            EvalTask::Pattern { .. } => "pattern",
+            EvalTask::Lm { .. } => "lm",
+        }
+    }
+
+    pub fn gen(&self, rng: &mut Pcg32) -> EvalSample {
+        match *self {
+            EvalTask::LineRet { n_lines, filler } => corpus::gen_lineret(rng, n_lines, filler),
+            EvalTask::MultiHop { n_lines } => corpus::gen_multihop(rng, n_lines),
+            EvalTask::Pattern { motif, repeats } => corpus::gen_pattern(rng, motif, repeats),
+            EvalTask::Lm { context, answer } => corpus::gen_lm(rng, context, answer),
+        }
+    }
+
+    /// LM-family tasks are scored by agreement against the full-cache
+    /// generation (their target is stochastic); the rest by exact match.
+    pub fn scored_by_agreement(&self) -> bool {
+        matches!(self, EvalTask::Lm { .. })
+    }
+}
+
+/// Result of evaluating one cache mode on one task.
+#[derive(Debug, Clone)]
+pub struct EvalOutcome {
+    pub mode_name: String,
+    pub task: &'static str,
+    pub n_samples: usize,
+    /// Mean per-sample score in [0, 1] (exact match or agreement).
+    pub accuracy: f64,
+    /// Mean token agreement with the FULL-cache generation in [0, 1] —
+    /// measures how faithfully the compressed cache preserves the model's
+    /// behaviour, independent of task accuracy.
+    pub fidelity: f64,
+    /// Mean logical cache size (% of full FP16) at the end of generation.
+    pub cache_pct: f64,
+    /// Per-sample generations (answer-length prefix).
+    pub generations: Vec<Vec<i64>>,
+}
+
+/// The experiment harness bound to one engine.
+pub struct Harness<'e> {
+    pub engine: &'e Engine,
+    pub seed: u64,
+}
+
+impl<'e> Harness<'e> {
+    pub fn new(engine: &'e Engine) -> Self {
+        Harness {
+            engine,
+            seed: 0xE7A1,
+        }
+    }
+
+    pub fn with_seed(engine: &'e Engine, seed: u64) -> Self {
+        Harness { engine, seed }
+    }
+
+    /// Generate `n_samples` of a task, bounded by the model's max_seq
+    /// (prompt + answer + slack must fit).
+    pub fn samples(&self, task: &EvalTask, n_samples: usize) -> Vec<EvalSample> {
+        let mut rng = Pcg32::new(self.seed ^ task.name().len() as u64);
+        let budget = self.engine.dims().max_seq - 1;
+        let mut out = Vec::with_capacity(n_samples);
+        while out.len() < n_samples {
+            let s = task.gen(&mut rng);
+            if s.prompt.len() + s.answer.len() < budget {
+                out.push(s);
+            }
+        }
+        out
+    }
+
+    /// Evaluate several cache modes on the same samples with shared
+    /// prefills. Returns one outcome per mode, in order.
+    pub fn run(
+        &self,
+        task: &EvalTask,
+        modes: &[(String, CacheMode)],
+        n_samples: usize,
+    ) -> crate::Result<Vec<EvalOutcome>> {
+        let samples = self.samples(task, n_samples);
+        let prompts: Vec<Vec<i64>> = samples.iter().map(|s| s.prompt.clone()).collect();
+        let prefills = self.engine.prefill_raw(&prompts)?;
+
+        // Full-cache reference generations: the fidelity anchor for every
+        // mode, and the accuracy target for agreement-scored tasks.
+        let reference = self.generate_mode(&samples, &prefills, &CacheMode::Full)?.0;
+
+        let mut outcomes = Vec::with_capacity(modes.len());
+        for (name, mode) in modes {
+            let (gens, cache_pct) = self.generate_mode(&samples, &prefills, mode)?;
+            let fidelity: f64 = gens
+                .iter()
+                .zip(&reference)
+                .map(|(g, r)| super::agreement::token_agreement(g, r))
+                .sum::<f64>()
+                / samples.len() as f64;
+            let accuracy: f64 = if task.scored_by_agreement() {
+                fidelity
+            } else {
+                gens.iter()
+                    .zip(&samples)
+                    .map(|(g, s)| if g[..] == s.answer[..] { 1.0 } else { 0.0 })
+                    .sum::<f64>()
+                    / samples.len() as f64
+            };
+            outcomes.push(EvalOutcome {
+                mode_name: name.clone(),
+                task: task.name(),
+                n_samples: samples.len(),
+                accuracy,
+                fidelity,
+                cache_pct,
+                generations: gens,
+            });
+            crate::log_info!(
+                "eval {} / {}: acc {:.1}% fidelity {:.1}% cache {:.1}%",
+                task.name(),
+                name,
+                100.0 * accuracy,
+                100.0 * fidelity,
+                cache_pct
+            );
+        }
+        Ok(outcomes)
+    }
+
+    /// Generate answer-length continuations for all samples under one mode,
+    /// reusing precomputed prefills. Returns (generations, mean cache %).
+    pub fn generate_mode(
+        &self,
+        samples: &[EvalSample],
+        prefills: &[PrefillOutput],
+        mode: &CacheMode,
+    ) -> crate::Result<(Vec<Vec<i64>>, f64)> {
+        let dims = self.engine.dims().clone();
+        let mut sessions: Vec<Session> = Vec::with_capacity(samples.len());
+        for (i, (s, pf)) in samples.iter().zip(prefills).enumerate() {
+            let mut sess = Session::new(i as u64, &dims, mode.clone())?;
+            self.engine.ingest_prefill(&mut sess, &s.prompt, pf);
+            sessions.push(sess);
+        }
+        let need: Vec<usize> = samples.iter().map(|s| s.answer.len()).collect();
+
+        // Batched decode until every session has its answer tokens.
+        loop {
+            let mut pending: Vec<&mut Session> = sessions
+                .iter_mut()
+                .enumerate()
+                .filter(|(i, s)| s.tokens.len() - s.prompt_len < need[*i])
+                .map(|(_, s)| s)
+                .collect();
+            if pending.is_empty() {
+                break;
+            }
+            let rows = self.engine.decode_step(&mut pending)?;
+            for (sess, row) in pending.iter_mut().zip(rows) {
+                let tok = sampler::greedy(&row);
+                sess.last_token = tok;
+                sess.tokens.push(tok);
+            }
+        }
+
+        let mut cache_sum = 0.0;
+        let gens = sessions
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                cache_sum += s.cache.cache_size_pct();
+                s.generated()[..need[i]].to_vec()
+            })
+            .collect();
+        Ok((gens, cache_sum / sessions.len() as f64))
+    }
+}

@@ -1,0 +1,17 @@
+//! Evaluation suites: synthetic benchmarks mirroring the paper's tasks.
+//!
+//! * [`corpus`] — the task/token definitions, mirroring
+//!   `python/compile/corpus.py` exactly (cross-checked against the
+//!   manifest's corpus constants at engine load).
+//! * [`harness`] — shared experiment runner: one prefill per sample fanned
+//!   out to many cache configurations (prefill is cache-agnostic, so
+//!   strategies share it — crucial on a 1-core testbed).
+//! * [`agreement`] — generation-agreement metric vs the full-cache output
+//!   (the deterministic stand-in for the paper's GPT-4-judged AlpacaEval
+//!   win rate, Table 4).
+
+pub mod agreement;
+pub mod corpus;
+pub mod harness;
+
+pub use harness::{EvalOutcome, EvalTask, Harness};

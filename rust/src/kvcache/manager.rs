@@ -1,0 +1,680 @@
+//! The MiKV cache manager: per-session mixed-precision tier state.
+//!
+//! One manager instance owns the cache of a single generation session across
+//! all `layers × kv_heads` planes. It maintains **two representations** of
+//! the retained tier:
+//!
+//! 1. the *physical* packed representation inside [`LoTier`] (bit-packed
+//!    codes + FP16 metadata) — this is what the logical memory accounting
+//!    charges, and what a real deployment would hold in device memory;
+//! 2. a *shadow* dense representation (codes as f32-held integers, scales,
+//!    zeros, masks) laid out exactly like the decode graph's inputs — kept
+//!    incrementally up to date on every admit/demote so a decode step's
+//!    input assembly is a handful of plane-contiguous `memcpy`s instead of
+//!    per-slot unpacking (see EXPERIMENTS.md §Perf).
+//!
+//! Lifecycle per session: [`CacheManager::ingest_prefill`] once, then
+//! [`CacheManager::append_token`] per generated token. The engine reads the
+//! dense blocks via [`CacheManager::decode_views`].
+
+use super::accounting::{self, Occupancy};
+use super::tier::{HiTier, LoTier};
+use super::{CacheConfig, Placement, RetentionMode};
+use crate::policies::ImportancePolicy;
+use crate::quant::Balancer;
+
+/// Dense per-session views over the decode-graph input blocks, all plane-
+/// major: `[planes, max_seq, ...]` where `planes = layers × kv_heads`.
+pub struct DecodeViews<'a> {
+    pub k_hi: &'a [f32],
+    pub v_hi: &'a [f32],
+    pub hi_mask: &'a [f32],
+    pub k_lo_codes: &'a [f32],
+    pub k_lo_scale: &'a [f32],
+    pub k_lo_zero: &'a [f32],
+    pub v_lo_codes: &'a [f32],
+    pub v_lo_scale: &'a [f32],
+    pub v_lo_zero: &'a [f32],
+    pub lo_mask: &'a [f32],
+    /// `[planes, head_dim]` — 1/b per channel (identity when outlier
+    /// awareness is off).
+    pub inv_balancer: &'a [f32],
+}
+
+/// Outputs of one decode step the manager needs to ingest.
+pub struct StepOutputs<'a> {
+    /// New token K, `[planes, head_dim]`.
+    pub k_new: &'a [f32],
+    /// New token V, `[planes, head_dim]`.
+    pub v_new: &'a [f32],
+    /// Attention the new query paid to previous slots, `[planes, max_seq]`
+    /// (only `0..seq_len` is meaningful).
+    pub attn_prev: &'a [f32],
+    /// Self-attention mass of the new token, `[planes]`.
+    pub attn_self: &'a [f32],
+}
+
+/// The mixed-precision cache manager (see module docs).
+pub struct CacheManager {
+    cfg: CacheConfig,
+    policy: Box<dyn ImportancePolicy>,
+    planes: usize,
+    d: usize,
+    s_max: usize,
+    groups: usize,
+
+    hi: Vec<HiTier>,
+    lo: Vec<LoTier>,
+    balancers: Vec<Balancer>,
+
+    // Shadow dense blocks (decode-graph input layout, plane-major).
+    k_hi_buf: Vec<f32>,
+    v_hi_buf: Vec<f32>,
+    hi_mask: Vec<f32>,
+    k_lo_codes: Vec<f32>,
+    k_lo_scale: Vec<f32>,
+    k_lo_zero: Vec<f32>,
+    v_lo_codes: Vec<f32>,
+    v_lo_scale: Vec<f32>,
+    v_lo_zero: Vec<f32>,
+    lo_mask: Vec<f32>,
+    inv_balancer: Vec<f32>,
+
+    placement: Vec<Placement>,
+    hi_count: Vec<usize>,
+    seq_len: usize,
+    scratch_u8: Vec<u8>,
+    scratch_f32: Vec<f32>,
+}
+
+impl CacheManager {
+    pub fn new(cfg: CacheConfig, policy: Box<dyn ImportancePolicy>) -> Self {
+        let planes = cfg.layers * cfg.kv_heads;
+        let d = cfg.head_dim;
+        let s = cfg.max_seq;
+        let lo_group = cfg.lo.group.min(d);
+        let groups = d / lo_group;
+        let hi = (0..planes).map(|_| HiTier::new(cfg.hi, d, s)).collect();
+        let lo = (0..planes).map(|_| LoTier::new(cfg.lo, d, s)).collect();
+        Self {
+            planes,
+            d,
+            s_max: s,
+            groups,
+            hi,
+            lo,
+            balancers: vec![Balancer::identity(d); planes],
+            k_hi_buf: vec![0.0; planes * s * d],
+            v_hi_buf: vec![0.0; planes * s * d],
+            hi_mask: vec![0.0; planes * s],
+            k_lo_codes: vec![0.0; planes * s * d],
+            k_lo_scale: vec![0.0; planes * s * groups],
+            k_lo_zero: vec![0.0; planes * s * groups],
+            v_lo_codes: vec![0.0; planes * s * d],
+            v_lo_scale: vec![0.0; planes * s * groups],
+            v_lo_zero: vec![0.0; planes * s * groups],
+            lo_mask: vec![0.0; planes * s],
+            inv_balancer: vec![1.0; planes * d],
+            placement: vec![Placement::Empty; planes * s],
+            hi_count: vec![0; planes],
+            seq_len: 0,
+            scratch_u8: vec![0; d],
+            scratch_f32: vec![0.0; d],
+            cfg,
+            policy,
+        }
+    }
+
+    pub fn config(&self) -> &CacheConfig {
+        &self.cfg
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.seq_len
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    fn slot_idx(&self, plane: usize, s: usize) -> usize {
+        plane * self.s_max + s
+    }
+
+    pub fn placement(&self, plane: usize, s: usize) -> Placement {
+        self.placement[self.slot_idx(plane, s)]
+    }
+
+    // ------------------------------------------------------------------
+    // Prefill ingestion
+    // ------------------------------------------------------------------
+
+    /// Ingest the prefill outputs for a prompt of length `seq_len`.
+    ///
+    /// Layouts (plane-major, padded to `max_seq` where noted):
+    /// `k`/`v`: `[planes, seq_len, d]` (unpadded), `attn_acc`:
+    /// `[planes, seq_len]`, `qmax`/`kmax`: `[planes, d]`.
+    pub fn ingest_prefill(
+        &mut self,
+        seq_len: usize,
+        k: &[f32],
+        v: &[f32],
+        attn_acc: &[f32],
+        qmax: &[f32],
+        kmax: &[f32],
+    ) {
+        assert!(seq_len <= self.s_max, "prompt longer than max_seq");
+        assert_eq!(k.len(), self.planes * seq_len * self.d);
+        assert_eq!(attn_acc.len(), self.planes * seq_len);
+        assert_eq!(qmax.len(), self.planes * self.d);
+        self.seq_len = seq_len;
+
+        // 1. Channel balancers from prefill q/k maxima (paper eq. 2).
+        for p in 0..self.planes {
+            let bal = if self.cfg.outlier_aware {
+                Balancer::from_maxima(&qmax[p * self.d..(p + 1) * self.d], &kmax[p * self.d..(p + 1) * self.d])
+            } else {
+                Balancer::identity(self.d)
+            };
+            self.inv_balancer[p * self.d..(p + 1) * self.d].copy_from_slice(&bal.inverse());
+            self.balancers[p] = bal;
+        }
+
+        // 2. Importance seeding + tier placement per plane.
+        let budget = self.cfg.hi_budget(seq_len);
+        for p in 0..self.planes {
+            let acc = &attn_acc[p * seq_len..(p + 1) * seq_len];
+            self.policy.init_prefill(p, acc);
+
+            // Rank slots: recency-protected slots are always hi; the rest of
+            // the budget goes to the highest-scoring slots.
+            let protect_from = seq_len.saturating_sub(self.cfg.recent_window);
+            let mut scored: Vec<(f32, usize)> = (0..protect_from)
+                .map(|s| (self.policy.score(p, s), s))
+                .collect();
+            scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+            let n_protected = seq_len - protect_from;
+            let n_scored_hi = budget.saturating_sub(n_protected).min(scored.len());
+
+            let mut is_hi = vec![false; seq_len];
+            for s in protect_from..seq_len {
+                is_hi[s] = true;
+            }
+            for &(_, s) in scored.iter().take(n_scored_hi) {
+                is_hi[s] = true;
+            }
+
+            for s in 0..seq_len {
+                let kv_off = (p * seq_len + s) * self.d;
+                let kt = &k[kv_off..kv_off + self.d];
+                let vt = &v[kv_off..kv_off + self.d];
+                if is_hi[s] {
+                    self.admit_hi(p, s, kt, vt);
+                } else {
+                    self.place_lo_or_evict(p, s, kt, vt);
+                }
+            }
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Decode-step ingestion
+    // ------------------------------------------------------------------
+
+    /// Ingest one decode step's outputs: update importance, admit the new
+    /// token to the hi tier, and demote/evict down to budget.
+    pub fn append_token(&mut self, out: StepOutputs<'_>) {
+        let t = self.seq_len;
+        assert!(t < self.s_max, "cache full");
+        assert_eq!(out.k_new.len(), self.planes * self.d);
+        assert_eq!(out.attn_prev.len(), self.planes * self.s_max);
+
+        let new_len = t + 1;
+        let budget = self.cfg.hi_budget(new_len);
+        for p in 0..self.planes {
+            // Importance update from this step's attention row (+ self mass).
+            let row = &out.attn_prev[p * self.s_max..p * self.s_max + t];
+            self.policy.observe(p, row);
+            self.policy.admit(p, t);
+            // Self-attention mass accrues to the new slot.
+            let self_row: Vec<f32> = (0..new_len)
+                .map(|s| if s == t { out.attn_self[p] } else { 0.0 })
+                .collect();
+            self.policy.observe(p, &self_row);
+
+            // The new token always enters hi (recent tokens are important).
+            let off = p * self.d;
+            // Split borrows: copy out the slices to avoid aliasing self.
+            let k_new = out.k_new[off..off + self.d].to_vec();
+            let v_new = out.v_new[off..off + self.d].to_vec();
+            self.admit_hi(p, t, &k_new, &v_new);
+
+            // Enforce the hi budget.
+            while self.hi_count[p] > budget {
+                let protect_from = new_len.saturating_sub(self.cfg.recent_window.max(1));
+                let candidates: Vec<usize> = (0..protect_from)
+                    .filter(|&s| self.placement(p, s) == Placement::Hi)
+                    .collect();
+                if candidates.is_empty() {
+                    break; // everything hi is recency-protected
+                }
+                let victim = self.policy.select_victim(p, &candidates);
+                self.demote(p, victim);
+            }
+        }
+        self.seq_len = new_len;
+    }
+
+    // ------------------------------------------------------------------
+    // Tier transitions
+    // ------------------------------------------------------------------
+
+    fn admit_hi(&mut self, p: usize, s: usize, k: &[f32], v: &[f32]) {
+        let prev = self.placement(p, s);
+        assert!(
+            prev == Placement::Empty,
+            "admit_hi into occupied slot {s} ({prev:?})"
+        );
+        self.hi[p].admit(s, k, v);
+        // Mirror the storage-rounded values into the dense block.
+        let off = (p * self.s_max + s) * self.d;
+        let idx = self.slot_idx(p, s);
+        self.k_hi_buf[off..off + self.d].copy_from_slice(self.hi[p].k_slot(s));
+        self.v_hi_buf[off..off + self.d].copy_from_slice(self.hi[p].v_slot(s));
+        self.hi_mask[idx] = 1.0;
+        self.hi_count[p] += 1;
+        self.placement[idx] = Placement::Hi;
+    }
+
+    /// Demote a hi-tier slot to the retained tier (or evict, per config).
+    fn demote(&mut self, p: usize, s: usize) {
+        debug_assert_eq!(self.placement(p, s), Placement::Hi);
+        let k = self.hi[p].k_slot(s).to_vec();
+        let v = self.hi[p].v_slot(s).to_vec();
+        // Clear hi state.
+        self.hi[p].clear(s);
+        let off = (p * self.s_max + s) * self.d;
+        let idx = self.slot_idx(p, s);
+        self.k_hi_buf[off..off + self.d].fill(0.0);
+        self.v_hi_buf[off..off + self.d].fill(0.0);
+        self.hi_mask[idx] = 0.0;
+        self.hi_count[p] -= 1;
+        self.placement[idx] = Placement::Empty;
+        self.place_lo_or_evict(p, s, &k, &v);
+    }
+
+    fn place_lo_or_evict(&mut self, p: usize, s: usize, k: &[f32], v: &[f32]) {
+        let idx = self.slot_idx(p, s);
+        match self.cfg.retention {
+            RetentionMode::Evict => {
+                self.placement[idx] = Placement::Evicted;
+            }
+            RetentionMode::Retain => {
+                // Balance the key before quantization (paper eq. 3).
+                let k_bal = self.balancers[p].balance_key(k);
+                self.lo[p].admit(s, &k_bal, v);
+                self.refresh_lo_shadow(p, s);
+                self.lo_mask[idx] = 1.0;
+                self.placement[idx] = Placement::Lo;
+            }
+        }
+    }
+
+    /// Rebuild the dense shadow of one lo slot from the packed tier.
+    fn refresh_lo_shadow(&mut self, p: usize, s: usize) {
+        let d = self.d;
+        let off = (p * self.s_max + s) * d;
+        let goff = (p * self.s_max + s) * self.groups;
+
+        self.lo[p].k_codes_f32_into(s, &mut self.scratch_u8, &mut self.scratch_f32);
+        self.k_lo_codes[off..off + d].copy_from_slice(&self.scratch_f32);
+        self.lo[p].v_codes_f32_into(s, &mut self.scratch_u8, &mut self.scratch_f32);
+        self.v_lo_codes[off..off + d].copy_from_slice(&self.scratch_f32);
+
+        let (ks, kz) = self.lo[p].k_meta_slot(s);
+        self.k_lo_scale[goff..goff + self.groups].copy_from_slice(ks);
+        self.k_lo_zero[goff..goff + self.groups].copy_from_slice(kz);
+        let (vs, vz) = self.lo[p].v_meta_slot(s);
+        self.v_lo_scale[goff..goff + self.groups].copy_from_slice(vs);
+        self.v_lo_zero[goff..goff + self.groups].copy_from_slice(vz);
+    }
+
+    // ------------------------------------------------------------------
+    // Views & diagnostics
+    // ------------------------------------------------------------------
+
+    /// Dense plane-major views over the decode-graph inputs.
+    pub fn decode_views(&self) -> DecodeViews<'_> {
+        DecodeViews {
+            k_hi: &self.k_hi_buf,
+            v_hi: &self.v_hi_buf,
+            hi_mask: &self.hi_mask,
+            k_lo_codes: &self.k_lo_codes,
+            k_lo_scale: &self.k_lo_scale,
+            k_lo_zero: &self.k_lo_zero,
+            v_lo_codes: &self.v_lo_codes,
+            v_lo_scale: &self.v_lo_scale,
+            v_lo_zero: &self.v_lo_zero,
+            lo_mask: &self.lo_mask,
+            inv_balancer: &self.inv_balancer,
+        }
+    }
+
+    /// Host-side reconstruction of what the attention kernel effectively
+    /// sees for `(plane, slot)`: hi values verbatim, lo values dequantized
+    /// with the balancer inverse applied to K. `None` if evicted/empty.
+    pub fn effective_kv(&self, p: usize, s: usize) -> Option<(Vec<f32>, Vec<f32>)> {
+        match self.placement(p, s) {
+            Placement::Hi => Some((self.hi[p].k_slot(s).to_vec(), self.hi[p].v_slot(s).to_vec())),
+            Placement::Lo => {
+                let (mut k, v) = self.lo[p].dequant_slot(s);
+                self.balancers[p].unbalance_key_into(&mut k);
+                Some((k, v))
+            }
+            _ => None,
+        }
+    }
+
+    /// Tier occupancy summed over planes.
+    pub fn occupancy(&self) -> Occupancy {
+        let mut occ = Occupancy::default();
+        for p in 0..self.planes {
+            for s in 0..self.seq_len {
+                match self.placement(p, s) {
+                    Placement::Hi => occ.hi_slots += 1,
+                    Placement::Lo => occ.lo_slots += 1,
+                    Placement::Evicted => occ.evicted_slots += 1,
+                    Placement::Empty => {}
+                }
+            }
+        }
+        occ
+    }
+
+    /// Current logical cache size as % of the uncompressed FP16 cache.
+    pub fn cache_size_pct(&self) -> f64 {
+        accounting::cache_size_pct(&self.cfg, &self.occupancy())
+    }
+
+    /// Invariant check used by tests and failure-injection: every slot below
+    /// `seq_len` is in exactly one state consistent with the masks, and
+    /// hi counts match.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        for p in 0..self.planes {
+            let mut hi_n = 0;
+            for s in 0..self.s_max {
+                let idx = p * self.s_max + s;
+                let pl = self.placement[idx];
+                let (hm, lm) = (self.hi_mask[idx], self.lo_mask[idx]);
+                if s >= self.seq_len && pl != Placement::Empty {
+                    return Err(format!("slot ({p},{s}) beyond seq_len is {pl:?}"));
+                }
+                match pl {
+                    Placement::Hi => {
+                        hi_n += 1;
+                        if hm != 1.0 || lm != 0.0 {
+                            return Err(format!("hi slot ({p},{s}) masks ({hm},{lm})"));
+                        }
+                    }
+                    Placement::Lo => {
+                        if hm != 0.0 || lm != 1.0 {
+                            return Err(format!("lo slot ({p},{s}) masks ({hm},{lm})"));
+                        }
+                    }
+                    Placement::Evicted | Placement::Empty => {
+                        if hm != 0.0 || lm != 0.0 {
+                            return Err(format!("empty slot ({p},{s}) masks ({hm},{lm})"));
+                        }
+                    }
+                }
+            }
+            if hi_n != self.hi_count[p] {
+                return Err(format!("plane {p}: hi_count {} != actual {hi_n}", self.hi_count[p]));
+            }
+            if self.seq_len > 0 && self.hi_count[p] == 0 {
+                return Err(format!("plane {p}: no hi tokens at seq_len {}", self.seq_len));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policies::{make_policy, H2oPolicy};
+    use crate::quant::Precision;
+    use crate::util::rng::Pcg32;
+
+    fn small_cfg(ratio: f64, retention: RetentionMode) -> CacheConfig {
+        let mut c = CacheConfig::mikv(2, 2, 8, 32, ratio, Precision::Int4);
+        c.retention = retention;
+        c.recent_window = 2;
+        c
+    }
+
+    /// Random prefill tensors for a config.
+    fn prefill_data(
+        cfg: &CacheConfig,
+        t: usize,
+        rng: &mut Pcg32,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let planes = cfg.layers * cfg.kv_heads;
+        let d = cfg.head_dim;
+        let k: Vec<f32> = (0..planes * t * d).map(|_| rng.gen_normal()).collect();
+        let v: Vec<f32> = (0..planes * t * d).map(|_| rng.gen_normal()).collect();
+        let acc: Vec<f32> = (0..planes * t).map(|_| rng.gen_f32()).collect();
+        let qmax: Vec<f32> = (0..planes * d).map(|_| rng.gen_f32() + 0.5).collect();
+        let kmax: Vec<f32> = (0..planes * d).map(|_| rng.gen_f32() + 0.5).collect();
+        (k, v, acc, qmax, kmax)
+    }
+
+    fn manager(ratio: f64, retention: RetentionMode) -> CacheManager {
+        let cfg = small_cfg(ratio, retention);
+        let planes = cfg.layers * cfg.kv_heads;
+        let policy = Box::new(H2oPolicy::new(planes, cfg.max_seq));
+        CacheManager::new(cfg, policy)
+    }
+
+    #[test]
+    fn prefill_respects_budget_and_invariants() {
+        let mut m = manager(0.25, RetentionMode::Retain);
+        let mut rng = Pcg32::new(1);
+        let t = 16;
+        let (k, v, acc, qmax, kmax) = prefill_data(m.config(), t, &mut rng);
+        m.ingest_prefill(t, &k, &v, &acc, &qmax, &kmax);
+        m.check_invariants().unwrap();
+        let occ = m.occupancy();
+        let planes = 4;
+        assert_eq!(occ.total_slots(), (planes * t) as u64);
+        // budget = ceil(0.25*16)=4 per plane
+        assert_eq!(occ.hi_slots, (planes * 4) as u64);
+        assert_eq!(occ.lo_slots, (planes * 12) as u64);
+        assert_eq!(occ.evicted_slots, 0);
+    }
+
+    #[test]
+    fn eviction_mode_discards() {
+        let mut m = manager(0.25, RetentionMode::Evict);
+        let mut rng = Pcg32::new(2);
+        let t = 16;
+        let (k, v, acc, qmax, kmax) = prefill_data(m.config(), t, &mut rng);
+        m.ingest_prefill(t, &k, &v, &acc, &qmax, &kmax);
+        let occ = m.occupancy();
+        assert_eq!(occ.lo_slots, 0);
+        assert_eq!(occ.evicted_slots, 4 * 12);
+        // evicted KVs are unrecoverable
+        for p in 0..4 {
+            for s in 0..t {
+                if m.placement(p, s) == Placement::Evicted {
+                    assert!(m.effective_kv(p, s).is_none());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn append_token_demotes_down_to_budget() {
+        let mut m = manager(0.25, RetentionMode::Retain);
+        let mut rng = Pcg32::new(3);
+        let t0 = 8;
+        let (k, v, acc, qmax, kmax) = prefill_data(m.config(), t0, &mut rng);
+        m.ingest_prefill(t0, &k, &v, &acc, &qmax, &kmax);
+        let planes = 4usize;
+        let d = 8usize;
+        let s_max = 32usize;
+        for step in 0..10 {
+            let k_new: Vec<f32> = (0..planes * d).map(|_| rng.gen_normal()).collect();
+            let v_new: Vec<f32> = (0..planes * d).map(|_| rng.gen_normal()).collect();
+            let attn_prev: Vec<f32> = (0..planes * s_max).map(|_| rng.gen_f32() * 0.1).collect();
+            let attn_self: Vec<f32> = (0..planes).map(|_| rng.gen_f32() * 0.1).collect();
+            m.append_token(StepOutputs {
+                k_new: &k_new,
+                v_new: &v_new,
+                attn_prev: &attn_prev,
+                attn_self: &attn_self,
+            });
+            m.check_invariants()
+                .unwrap_or_else(|e| panic!("step {step}: {e}"));
+            let budget = m.config().hi_budget(m.seq_len());
+            let occ = m.occupancy();
+            assert!(
+                occ.hi_slots <= (planes * budget) as u64 + planes as u64,
+                "hi {} > budget {}",
+                occ.hi_slots,
+                planes * budget
+            );
+        }
+        assert_eq!(m.seq_len(), 18);
+        // no token left behind: nothing evicted in Retain mode
+        assert_eq!(m.occupancy().evicted_slots, 0);
+    }
+
+    #[test]
+    fn recent_window_is_protected() {
+        let mut m = manager(0.1, RetentionMode::Retain);
+        let mut rng = Pcg32::new(4);
+        let t = 20;
+        let (k, v, acc, qmax, kmax) = prefill_data(m.config(), t, &mut rng);
+        m.ingest_prefill(t, &k, &v, &acc, &qmax, &kmax);
+        // last `recent_window` slots must be hi in every plane
+        for p in 0..4 {
+            for s in t - 2..t {
+                assert_eq!(m.placement(p, s), Placement::Hi, "plane {p} slot {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn full_config_keeps_everything_hi() {
+        let cfg = CacheConfig::full(2, 2, 8, 32);
+        let planes = 4;
+        let policy = make_policy("h2o", planes, 32, 0).unwrap();
+        let mut m = CacheManager::new(cfg, policy);
+        let mut rng = Pcg32::new(5);
+        let (k, v, acc, qmax, kmax) = prefill_data(m.config(), 12, &mut rng);
+        m.ingest_prefill(12, &k, &v, &acc, &qmax, &kmax);
+        let occ = m.occupancy();
+        assert_eq!(occ.hi_slots, 4 * 12);
+        assert_eq!(occ.lo_slots, 0);
+        assert!((m.cache_size_pct() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rtn_config_quantizes_almost_everything() {
+        let cfg = CacheConfig::rtn(2, 2, 8, 32, Precision::Int8);
+        let planes = 4;
+        let policy = make_policy("h2o", planes, 32, 0).unwrap();
+        let mut m = CacheManager::new(cfg, policy);
+        let mut rng = Pcg32::new(6);
+        let (k, v, acc, qmax, kmax) = prefill_data(m.config(), 16, &mut rng);
+        m.ingest_prefill(16, &k, &v, &acc, &qmax, &kmax);
+        let occ = m.occupancy();
+        assert_eq!(occ.hi_slots, 4); // one recent per plane
+        assert_eq!(occ.lo_slots, 4 * 15);
+    }
+
+    #[test]
+    fn effective_kv_hi_is_f16_exact() {
+        let mut m = manager(1.0, RetentionMode::Retain);
+        let mut rng = Pcg32::new(7);
+        let (k, v, acc, qmax, kmax) = prefill_data(m.config(), 4, &mut rng);
+        m.ingest_prefill(4, &k, &v, &acc, &qmax, &kmax);
+        let (ke, _) = m.effective_kv(0, 2).unwrap();
+        // plane 0, slot 2 of the original k
+        let orig = &k[2 * 8..3 * 8];
+        for (a, b) in ke.iter().zip(orig) {
+            assert!((a - b).abs() < 2e-3, "{a} vs {b}"); // f16 rounding only
+        }
+    }
+
+    #[test]
+    fn effective_kv_lo_roundtrips_balancer() {
+        // With outlier awareness on, dequantized lo K must approximate the
+        // ORIGINAL key (balance → quantize → dequantize → unbalance ≈ id).
+        let mut m = manager(0.1, RetentionMode::Retain);
+        let mut rng = Pcg32::new(8);
+        let t = 16;
+        let (k, v, acc, qmax, kmax) = prefill_data(m.config(), t, &mut rng);
+        m.ingest_prefill(t, &k, &v, &acc, &qmax, &kmax);
+        let d = 8;
+        let mut found_lo = false;
+        for s in 0..t {
+            if m.placement(0, s) == Placement::Lo {
+                found_lo = true;
+                let (ke, _) = m.effective_kv(0, s).unwrap();
+                let orig = &k[s * d..(s + 1) * d];
+                for (a, b) in ke.iter().zip(orig) {
+                    assert!((a - b).abs() < 0.8, "lo slot {s}: {a} vs {b}");
+                }
+            }
+        }
+        assert!(found_lo);
+    }
+
+    #[test]
+    fn views_match_masks() {
+        let mut m = manager(0.5, RetentionMode::Retain);
+        let mut rng = Pcg32::new(9);
+        let t = 10;
+        let (k, v, acc, qmax, kmax) = prefill_data(m.config(), t, &mut rng);
+        m.ingest_prefill(t, &k, &v, &acc, &qmax, &kmax);
+        let views = m.decode_views();
+        let d = 8;
+        for p in 0..4 {
+            for s in 0..t {
+                let idx = p * 32 + s;
+                let hi = views.hi_mask[idx] == 1.0;
+                let lo = views.lo_mask[idx] == 1.0;
+                assert!(hi ^ lo, "slot must be exactly one tier");
+                if lo {
+                    // lo codes are integer-valued
+                    let c = &views.k_lo_codes[idx * d..(idx + 1) * d];
+                    assert!(c.iter().all(|x| *x == x.trunc()));
+                }
+                if hi {
+                    // hi slot has zero lo metadata
+                    let sc = &views.k_lo_scale[idx * 2..(idx + 1) * 2];
+                    assert!(sc.iter().all(|&x| x == 0.0));
+                }
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "cache full")]
+    fn append_beyond_capacity_panics() {
+        let mut m = manager(1.0, RetentionMode::Retain);
+        let mut rng = Pcg32::new(10);
+        let (k, v, acc, qmax, kmax) = prefill_data(m.config(), 32, &mut rng);
+        m.ingest_prefill(32, &k, &v, &acc, &qmax, &kmax);
+        let z = vec![0.0f32; 4 * 8];
+        let a = vec![0.0f32; 4 * 32];
+        m.append_token(StepOutputs {
+            k_new: &z,
+            v_new: &z,
+            attn_prev: &a,
+            attn_self: &z[..4],
+        });
+    }
+}

@@ -1,0 +1,205 @@
+//! The mixed-precision KV cache — the paper's system contribution.
+//!
+//! A token's KV pair lives in exactly one of three states:
+//!
+//! * **Hi tier** — the *importance cache*: high precision (FP16 by default,
+//!   optionally INT8/INT4, paper §3.3 / Table 3).
+//! * **Lo tier** — the *retained cache*: the pairs an eviction policy would
+//!   have discarded, kept in low-bit per-token asymmetric quantization with
+//!   the outlier channel balancer (paper §3.1–3.2).
+//! * **Evicted** — gone. Only the eviction *baselines* (H2O, local window)
+//!   ever use this state; MiKV never fully discards a token
+//!   ("no token left behind").
+//!
+//! [`manager::CacheManager`] owns the per-session tier state, the importance
+//! policy bookkeeping, the channel balancers, and produces the dense padded
+//! tensors the decode HLO graph consumes. [`accounting`] computes the
+//! logical memory footprint — the paper's "KV cache size %" axis.
+
+pub mod accounting;
+pub mod manager;
+pub mod tier;
+
+pub use manager::{CacheManager, StepOutputs};
+
+use crate::quant::Precision;
+
+/// Precision + grouping of one tier.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TierConfig {
+    pub precision: Precision,
+    /// Channels per scale/zero group (quantized tiers only).
+    pub group: usize,
+}
+
+impl TierConfig {
+    pub fn fp16() -> Self {
+        Self {
+            precision: Precision::Fp16,
+            group: 0,
+        }
+    }
+
+    pub fn quantized(precision: Precision, group: usize) -> Self {
+        assert!(precision.is_quantized());
+        assert!(group > 0);
+        Self { precision, group }
+    }
+}
+
+/// How non-important tokens are handled.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RetentionMode {
+    /// MiKV: demoted tokens are quantized into the lo tier.
+    Retain,
+    /// Eviction baseline (H2O-style): demoted tokens are discarded.
+    Evict,
+}
+
+/// Where a token's KV currently lives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Placement {
+    Hi,
+    Lo,
+    Evicted,
+    /// Slot beyond the current sequence length.
+    Empty,
+}
+
+/// Full cache configuration for one model.
+#[derive(Debug, Clone)]
+pub struct CacheConfig {
+    pub layers: usize,
+    /// KV heads (≤ query heads under GQA).
+    pub kv_heads: usize,
+    pub head_dim: usize,
+    pub max_seq: usize,
+    pub hi: TierConfig,
+    pub lo: TierConfig,
+    /// Fraction of the context kept in the hi tier (the paper's
+    /// "importance ratio"): hi budget at sequence length `t` is
+    /// `max(ceil(ratio·t), recent_window)`.
+    pub importance_ratio: f64,
+    /// Most-recent tokens are always kept hi (H2O keeps a recency window
+    /// alongside the heavy hitters).
+    pub recent_window: usize,
+    pub retention: RetentionMode,
+    /// Apply the §3.2 outlier channel balancer to lo-tier keys.
+    pub outlier_aware: bool,
+}
+
+impl CacheConfig {
+    /// Hi-tier token budget at sequence length `t`.
+    pub fn hi_budget(&self, t: usize) -> usize {
+        let by_ratio = (self.importance_ratio * t as f64).ceil() as usize;
+        by_ratio.max(self.recent_window.min(t)).min(t)
+    }
+
+    /// A full-precision (no compression) configuration.
+    pub fn full(layers: usize, kv_heads: usize, head_dim: usize, max_seq: usize) -> Self {
+        Self {
+            layers,
+            kv_heads,
+            head_dim,
+            max_seq,
+            hi: TierConfig::fp16(),
+            lo: TierConfig::quantized(Precision::Int4, head_dim / 2),
+            importance_ratio: 1.0,
+            recent_window: 0,
+            retention: RetentionMode::Retain,
+            outlier_aware: true,
+        }
+    }
+
+    /// Paper-default MiKV: FP16 importance cache, INT2/INT4-style retained
+    /// cache with group = head_dim/2 and outlier awareness on.
+    pub fn mikv(
+        layers: usize,
+        kv_heads: usize,
+        head_dim: usize,
+        max_seq: usize,
+        importance_ratio: f64,
+        lo_precision: Precision,
+    ) -> Self {
+        Self {
+            layers,
+            kv_heads,
+            head_dim,
+            max_seq,
+            hi: TierConfig::fp16(),
+            lo: TierConfig::quantized(lo_precision, (head_dim / 2).max(1)),
+            importance_ratio,
+            recent_window: 4,
+            retention: RetentionMode::Retain,
+            outlier_aware: true,
+        }
+    }
+
+    /// H2O-style eviction baseline: same importance machinery, no lo tier.
+    pub fn h2o(
+        layers: usize,
+        kv_heads: usize,
+        head_dim: usize,
+        max_seq: usize,
+        importance_ratio: f64,
+    ) -> Self {
+        Self {
+            retention: RetentionMode::Evict,
+            ..Self::mikv(layers, kv_heads, head_dim, max_seq, importance_ratio, Precision::Int4)
+        }
+    }
+
+    /// Uniform round-to-nearest quantization baseline: no importance cache,
+    /// everything quantized at `precision`.
+    pub fn rtn(
+        layers: usize,
+        kv_heads: usize,
+        head_dim: usize,
+        max_seq: usize,
+        precision: Precision,
+    ) -> Self {
+        Self {
+            importance_ratio: 0.0,
+            recent_window: 1, // decode needs the current token visible hi
+            outlier_aware: false,
+            ..Self::mikv(layers, kv_heads, head_dim, max_seq, 0.0, precision)
+        }
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.layers * self.kv_heads * self.max_seq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hi_budget_math() {
+        let mut c = CacheConfig::mikv(2, 2, 8, 64, 0.25, Precision::Int2);
+        c.recent_window = 4;
+        assert_eq!(c.hi_budget(100), 25);
+        assert_eq!(c.hi_budget(8), 4);  // recent window floor
+        assert_eq!(c.hi_budget(2), 2);  // clamped to t
+        c.importance_ratio = 1.0;
+        assert_eq!(c.hi_budget(10), 10);
+    }
+
+    #[test]
+    fn presets_are_consistent() {
+        let f = CacheConfig::full(4, 8, 32, 128);
+        assert_eq!(f.hi_budget(128), 128);
+        let h = CacheConfig::h2o(4, 8, 32, 128, 0.2);
+        assert_eq!(h.retention, RetentionMode::Evict);
+        let r = CacheConfig::rtn(4, 8, 32, 128, Precision::Int8);
+        assert_eq!(r.hi_budget(100), 1);
+        assert!(!r.outlier_aware);
+    }
+
+    #[test]
+    #[should_panic]
+    fn quantized_tier_rejects_fp16() {
+        TierConfig::quantized(Precision::Fp16, 8);
+    }
+}

@@ -1,0 +1,314 @@
+//! Tier storage for one (layer, kv-head) plane of the cache.
+//!
+//! * [`HiTier`] — the importance cache. FP16 tiers store values rounded
+//!   through binary16; quantized hi tiers (paper §3.3) store the
+//!   quantize→dequantize image, so downstream attention sees exactly the
+//!   precision-limited values while accounting charges the logical bits.
+//! * [`LoTier`] — the retained cache. Stores *actual packed codes* plus
+//!   per-group FP16 scale/zero, because the decode graph dequantizes
+//!   in-kernel: the host hands codes (as f32-held integers), scales and
+//!   zeros straight to the HLO inputs.
+
+use super::TierConfig;
+use crate::quant::{
+    asym::{quantize, QuantParams},
+    f16::round_f16_slice,
+    packing::{pack, packed_words, unpack_into},
+    Precision,
+};
+
+/// High-precision tier plane: dense per-slot K/V vectors.
+#[derive(Debug, Clone)]
+pub struct HiTier {
+    cfg: TierConfig,
+    head_dim: usize,
+    /// `[slots × head_dim]`, storage-rounded.
+    k: Vec<f32>,
+    v: Vec<f32>,
+}
+
+impl HiTier {
+    pub fn new(cfg: TierConfig, head_dim: usize, slots: usize) -> Self {
+        Self {
+            cfg,
+            head_dim,
+            k: vec![0.0; slots * head_dim],
+            v: vec![0.0; slots * head_dim],
+        }
+    }
+
+    /// Round a vector through this tier's storage precision.
+    fn storage_round(cfg: &TierConfig, x: &mut [f32]) {
+        match cfg.precision {
+            Precision::Fp16 => round_f16_slice(x),
+            p => {
+                let prm = QuantParams::new(p, cfg.group.min(x.len()));
+                let q = quantize(x, prm);
+                let dq = crate::quant::dequantize(&q);
+                x.copy_from_slice(&dq);
+            }
+        }
+    }
+
+    /// Admit a token's K/V into slot `s` (values rounded to tier precision).
+    pub fn admit(&mut self, s: usize, k: &[f32], v: &[f32]) {
+        let d = self.head_dim;
+        debug_assert!(k.len() == d && v.len() == d);
+        let ks = &mut self.k[s * d..(s + 1) * d];
+        ks.copy_from_slice(k);
+        Self::storage_round(&self.cfg, ks);
+        let vs = &mut self.v[s * d..(s + 1) * d];
+        vs.copy_from_slice(v);
+        Self::storage_round(&self.cfg, vs);
+    }
+
+    /// Read back the stored K/V of slot `s`.
+    pub fn k_slot(&self, s: usize) -> &[f32] {
+        &self.k[s * self.head_dim..(s + 1) * self.head_dim]
+    }
+
+    pub fn v_slot(&self, s: usize) -> &[f32] {
+        &self.v[s * self.head_dim..(s + 1) * self.head_dim]
+    }
+
+    /// Clear a slot after demotion/eviction (keeps masked HLO inputs clean —
+    /// masked lanes must still be finite).
+    pub fn clear(&mut self, s: usize) {
+        let d = self.head_dim;
+        self.k[s * d..(s + 1) * d].fill(0.0);
+        self.v[s * d..(s + 1) * d].fill(0.0);
+    }
+
+    /// Dense K plane `[slots × head_dim]` for input assembly.
+    pub fn k_dense(&self) -> &[f32] {
+        &self.k
+    }
+
+    pub fn v_dense(&self) -> &[f32] {
+        &self.v
+    }
+}
+
+/// Low-precision tier plane: packed codes + per-group metadata per slot.
+#[derive(Debug, Clone)]
+pub struct LoTier {
+    prm: QuantParams,
+    head_dim: usize,
+    groups: usize,
+    words: usize,
+    /// `[slots × words]` packed K / V codes.
+    k_codes: Vec<u32>,
+    v_codes: Vec<u32>,
+    /// `[slots × groups]` scale / zero (FP16-rounded by the quantizer).
+    k_scales: Vec<f32>,
+    k_zeros: Vec<f32>,
+    v_scales: Vec<f32>,
+    v_zeros: Vec<f32>,
+}
+
+impl LoTier {
+    pub fn new(cfg: TierConfig, head_dim: usize, slots: usize) -> Self {
+        assert!(cfg.precision.is_quantized());
+        let group = cfg.group.min(head_dim);
+        let prm = QuantParams::new(cfg.precision, group);
+        let groups = head_dim / group;
+        let words = packed_words(head_dim, cfg.precision.bits());
+        Self {
+            prm,
+            head_dim,
+            groups,
+            words,
+            k_codes: vec![0; slots * words],
+            v_codes: vec![0; slots * words],
+            k_scales: vec![0.0; slots * groups],
+            k_zeros: vec![0.0; slots * groups],
+            v_scales: vec![0.0; slots * groups],
+            v_zeros: vec![0.0; slots * groups],
+        }
+    }
+
+    pub fn params(&self) -> QuantParams {
+        self.prm
+    }
+
+    pub fn groups(&self) -> usize {
+        self.groups
+    }
+
+    /// Quantize and store a token's K/V into slot `s`. `k` is expected to be
+    /// already balancer-multiplied when outlier awareness is on.
+    pub fn admit(&mut self, s: usize, k: &[f32], v: &[f32]) {
+        debug_assert!(k.len() == self.head_dim && v.len() == self.head_dim);
+        let qk = quantize(k, self.prm);
+        let qv = quantize(v, self.prm);
+        let bits = self.prm.precision.bits();
+        self.k_codes[s * self.words..(s + 1) * self.words]
+            .copy_from_slice(&pack(&qk.codes, bits));
+        self.v_codes[s * self.words..(s + 1) * self.words]
+            .copy_from_slice(&pack(&qv.codes, bits));
+        self.k_scales[s * self.groups..(s + 1) * self.groups].copy_from_slice(&qk.scales);
+        self.k_zeros[s * self.groups..(s + 1) * self.groups].copy_from_slice(&qk.zeros);
+        self.v_scales[s * self.groups..(s + 1) * self.groups].copy_from_slice(&qv.scales);
+        self.v_zeros[s * self.groups..(s + 1) * self.groups].copy_from_slice(&qv.zeros);
+    }
+
+    pub fn clear(&mut self, s: usize) {
+        self.k_codes[s * self.words..(s + 1) * self.words].fill(0);
+        self.v_codes[s * self.words..(s + 1) * self.words].fill(0);
+        self.k_scales[s * self.groups..(s + 1) * self.groups].fill(0.0);
+        self.k_zeros[s * self.groups..(s + 1) * self.groups].fill(0.0);
+        self.v_scales[s * self.groups..(s + 1) * self.groups].fill(0.0);
+        self.v_zeros[s * self.groups..(s + 1) * self.groups].fill(0.0);
+    }
+
+    /// Unpack slot `s`'s K codes into `out` as f32-held integer codes
+    /// (the decode graph's input representation).
+    pub fn k_codes_f32_into(&self, s: usize, scratch: &mut [u8], out: &mut [f32]) {
+        self.codes_f32_into(&self.k_codes, s, scratch, out)
+    }
+
+    pub fn v_codes_f32_into(&self, s: usize, scratch: &mut [u8], out: &mut [f32]) {
+        self.codes_f32_into(&self.v_codes, s, scratch, out)
+    }
+
+    fn codes_f32_into(&self, codes: &[u32], s: usize, scratch: &mut [u8], out: &mut [f32]) {
+        debug_assert!(scratch.len() == self.head_dim && out.len() == self.head_dim);
+        unpack_into(
+            &codes[s * self.words..(s + 1) * self.words],
+            self.prm.precision.bits(),
+            scratch,
+        );
+        for (o, &c) in out.iter_mut().zip(scratch.iter()) {
+            *o = c as f32;
+        }
+    }
+
+    pub fn k_meta_slot(&self, s: usize) -> (&[f32], &[f32]) {
+        (
+            &self.k_scales[s * self.groups..(s + 1) * self.groups],
+            &self.k_zeros[s * self.groups..(s + 1) * self.groups],
+        )
+    }
+
+    pub fn v_meta_slot(&self, s: usize) -> (&[f32], &[f32]) {
+        (
+            &self.v_scales[s * self.groups..(s + 1) * self.groups],
+            &self.v_zeros[s * self.groups..(s + 1) * self.groups],
+        )
+    }
+
+    /// Fully dequantize slot `s` (diagnostics / host-side reference path).
+    pub fn dequant_slot(&self, s: usize) -> (Vec<f32>, Vec<f32>) {
+        let d = self.head_dim;
+        let mut scratch = vec![0u8; d];
+        let mut kc = vec![0.0f32; d];
+        let mut vc = vec![0.0f32; d];
+        self.k_codes_f32_into(s, &mut scratch, &mut kc);
+        self.v_codes_f32_into(s, &mut scratch, &mut vc);
+        let g = self.prm.group;
+        let (ks, kz) = self.k_meta_slot(s);
+        let (vs, vz) = self.v_meta_slot(s);
+        for i in 0..d {
+            kc[i] = ks[i / g] * kc[i] + kz[i / g];
+            vc[i] = vs[i / g] * vc[i] + vz[i / g];
+        }
+        (kc, vc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::{forall, gen_vec_normal, Config};
+
+    #[test]
+    fn hi_fp16_rounds_storage() {
+        let mut t = HiTier::new(TierConfig::fp16(), 4, 2);
+        let k = [1.0f32, 1e-10, 3.14159265, -2.5];
+        let v = [0.1f32, 0.2, 0.3, 0.4];
+        t.admit(1, &k, &v);
+        let ks = t.k_slot(1);
+        assert_eq!(ks[0], 1.0);
+        assert_eq!(ks[1], 0.0); // f16 underflow
+        assert!((ks[2] - 3.14159265).abs() < 2e-3);
+        assert_eq!(ks[3], -2.5);
+        // untouched slot stays zero
+        assert!(t.k_slot(0).iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn hi_int8_storage_rounding() {
+        let mut t = HiTier::new(TierConfig::quantized(Precision::Int8, 4), 4, 1);
+        let k = [0.0f32, 1.0, 2.0, 3.0];
+        t.admit(0, &k, &k);
+        for (a, b) in t.k_slot(0).iter().zip(&k) {
+            assert!((a - b).abs() <= 3.0 / 255.0 / 2.0 + 1e-2, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn lo_roundtrip_within_quant_error() {
+        let cfg = TierConfig::quantized(Precision::Int4, 4);
+        let mut t = LoTier::new(cfg, 8, 3);
+        let k: Vec<f32> = (0..8).map(|i| (i as f32 * 0.9).sin() * 2.0).collect();
+        let v: Vec<f32> = (0..8).map(|i| (i as f32 * 0.4).cos()).collect();
+        t.admit(2, &k, &v);
+        let (kd, vd) = t.dequant_slot(2);
+        for (a, b) in kd.iter().zip(&k) {
+            assert!((a - b).abs() < 0.3, "{a} vs {b}");
+        }
+        for (a, b) in vd.iter().zip(&v) {
+            assert!((a - b).abs() < 0.15, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn clear_resets_slot() {
+        let mut hi = HiTier::new(TierConfig::fp16(), 4, 2);
+        hi.admit(0, &[1.0; 4], &[2.0; 4]);
+        hi.clear(0);
+        assert!(hi.k_slot(0).iter().all(|&x| x == 0.0));
+
+        let mut lo = LoTier::new(TierConfig::quantized(Precision::Int2, 2), 4, 2);
+        lo.admit(1, &[1.0, -1.0, 2.0, 0.5], &[0.0, 1.0, 2.0, 3.0]);
+        lo.clear(1);
+        let (kd, vd) = lo.dequant_slot(1);
+        assert!(kd.iter().chain(vd.iter()).all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn property_lo_tier_matches_direct_quantization() {
+        forall(Config::default().cases(150).name("lo tier fidelity"), |rng| {
+            let d = *rng.choose(&[8usize, 16, 32]);
+            let p = *rng.choose(&[Precision::Int2, Precision::Int3, Precision::Int4, Precision::Int8]);
+            let cfg = TierConfig::quantized(p, d / 2);
+            let mut t = LoTier::new(cfg, d, 1);
+            let k = gen_vec_normal(rng, d, 1.5, 0.05);
+            let v = gen_vec_normal(rng, d, 1.0, 0.0);
+            t.admit(0, &k, &v);
+            let (kd, _) = t.dequant_slot(0);
+            // reference: direct quantize→dequantize
+            let q = quantize(&k, t.params());
+            let expect = crate::quant::dequantize(&q);
+            for (a, b) in kd.iter().zip(&expect) {
+                prop_assert!((a - b).abs() < 1e-6, "tier {a} vs direct {b}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn codes_are_integers_in_range() {
+        let cfg = TierConfig::quantized(Precision::Int3, 4);
+        let mut t = LoTier::new(cfg, 8, 1);
+        t.admit(0, &[1.0, -3.0, 0.5, 2.0, -1.0, 0.0, 4.0, -2.0], &[0.0; 8]);
+        let mut scratch = vec![0u8; 8];
+        let mut codes = vec![0.0f32; 8];
+        t.k_codes_f32_into(0, &mut scratch, &mut codes);
+        for &c in &codes {
+            assert_eq!(c, c.trunc());
+            assert!((0.0..=7.0).contains(&c));
+        }
+    }
+}

@@ -1,0 +1,52 @@
+//! # MiKV — Mixed-precision KV cache compression
+//!
+//! Reproduction of *"No Token Left Behind: Reliable KV Cache Compression via
+//! Importance-Aware Mixed Precision Quantization"* (Yang, Kim, et al., 2024).
+//!
+//! MiKV replaces KV-cache **eviction** with **mixed-precision retention**:
+//! the KV pairs an importance policy would evict are kept in low-bit
+//! (INT2/3/4) per-token asymmetric quantization with a dynamic query/key
+//! outlier channel balancer, while the important ("heavy hitter") KV pairs
+//! stay in high precision. The result is an eviction-shaped memory budget
+//! without the context damage eviction causes.
+//!
+//! ## Crate layout (layer 3 of the three-layer stack)
+//!
+//! * [`util`] — substrates: JSON codec, deterministic RNG, mini property-test
+//!   harness, CLI parsing, logging (the offline image has no serde / clap /
+//!   proptest, so these are built in-tree).
+//! * [`tensor`] — minimal row-major host tensor used across the crate.
+//! * [`quant`] — per-token asymmetric quantization (paper eq. 1), INT2/3/4/8
+//!   bit-packing, and the dynamic outlier channel balancer (paper eq. 2–4).
+//! * [`kvcache`] — the mixed-precision cache manager: high-precision
+//!   importance tier + low-precision retained tier, logical memory
+//!   accounting (the paper's "cache size %" axis).
+//! * [`policies`] — importance policies: H2O accumulated attention, local
+//!   (recency) window, post-hoc oracle, random.
+//! * [`runtime`] — PJRT wrapper over the `xla` crate: loads the HLO-text
+//!   artifacts AOT-lowered by `python/compile/aot.py` and executes them.
+//! * [`model`] — engine orchestrating prefill/decode graphs against the
+//!   cache manager; greedy sampler; model/precision configuration.
+//! * [`coordinator`] — serving layer: request router, continuous batcher,
+//!   session manager, latency/throughput stats.
+//! * [`server`] — threaded TCP JSON-lines server + client.
+//! * [`eval`] — synthetic benchmark suites: line retrieval, proxy tasks for
+//!   MMLU/GSM8k/HumanEval, generation-agreement (AlpacaEval proxy).
+//! * [`memory`] — analytic KV footprint calculator (paper Table 5).
+//! * [`bench`] — timing harness used by the `benches/` binaries.
+
+pub mod bench;
+pub mod coordinator;
+pub mod eval;
+pub mod kvcache;
+pub mod memory;
+pub mod model;
+pub mod policies;
+pub mod quant;
+pub mod runtime;
+pub mod server;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,146 @@
+//! `mikv` — the L3 coordinator binary.
+//!
+//! Subcommands:
+//!   serve      start the TCP JSON-lines server
+//!   generate   one-shot generation from a token prompt
+//!   eval       run an evaluation task across cache modes
+//!   info       print the artifact manifest summary
+//!
+//! Run `mikv help` for flags.
+
+use mikv::coordinator::{Coordinator, CoordinatorConfig, Request};
+use mikv::eval::{EvalTask, Harness};
+use mikv::model::{CacheMode, Engine, Session};
+use mikv::runtime::Manifest;
+use mikv::util::cli::Args;
+use std::time::Instant;
+
+const USAGE: &str = "\
+mikv — mixed-precision KV cache serving (MiKV reproduction)
+
+USAGE: mikv <command> [--artifacts DIR] [--model NAME] [flags]
+
+COMMANDS:
+  serve      --port 7777 --max-active 8
+  generate   --prompt 1,2,3 --max-new 8 --mode mikv:0.25:int2
+  eval       --task lineret --samples 25 --modes full,mikv:0.25:int2,h2o:0.25
+  info       print manifest summary
+
+MODES (for --mode / --modes):
+  full | oracle:<k> | mikv:<ratio>:<lo> | h2o:<ratio> | rtn:<prec>
+";
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn run(args: &Args) -> anyhow::Result<()> {
+    let artifacts = args.get_str("artifacts", "artifacts");
+    let model = args.get_str("model", "cfg-s");
+
+    match args.subcommand() {
+        Some("info") => {
+            let m = Manifest::load(&artifacts)?;
+            for (name, e) in &m.models {
+                println!(
+                    "{name}: {:.2}M params, L={} Hq={} Hkv={} D={} S={}, trained {} steps",
+                    e.dims.params as f64 / 1e6,
+                    e.dims.n_layers,
+                    e.dims.n_q_heads,
+                    e.dims.n_kv_heads,
+                    e.dims.d_head,
+                    e.dims.max_seq,
+                    e.train_steps,
+                );
+                for (g, ge) in &e.graphs {
+                    println!("  graph {g}: {} ({} inputs)", ge.file, ge.inputs.len());
+                }
+            }
+            Ok(())
+        }
+        Some("generate") => {
+            let engine = Engine::load(&artifacts, &model)?;
+            let prompt: Vec<i64> = args.get_list("prompt", &[] as &[i64])?;
+            anyhow::ensure!(!prompt.is_empty(), "--prompt required (comma-separated ids)");
+            let max_new = args.get("max-new", 8usize)?;
+            let mode = CacheMode::parse(&args.get_str("mode", "full"), engine.dims())?;
+            let mut sess = Session::new(0, engine.dims(), mode)?;
+            let t0 = Instant::now();
+            let out = engine.generate_greedy(&mut sess, &prompt, max_new, None)?;
+            println!(
+                "generated {:?} in {:.1}ms (cache {:.1}%)",
+                out,
+                t0.elapsed().as_secs_f64() * 1e3,
+                sess.cache.cache_size_pct()
+            );
+            Ok(())
+        }
+        Some("eval") => {
+            let engine = Engine::load(&artifacts, &model)?;
+            let manifest = Manifest::load(&artifacts)?;
+            mikv::eval::corpus::check_manifest_constants(&manifest.corpus)?;
+            let task = match args.get_str("task", "lineret").as_str() {
+                "lineret" => EvalTask::LineRet {
+                    n_lines: args.get("lines", 20usize)?,
+                    filler: args.get("filler", 0usize)?,
+                },
+                "multihop" => EvalTask::MultiHop {
+                    n_lines: args.get("lines", 16usize)?,
+                },
+                "pattern" => EvalTask::Pattern {
+                    motif: args.get("motif", 6usize)?,
+                    repeats: args.get("repeats", 8usize)?,
+                },
+                "lm" => EvalTask::Lm {
+                    context: args.get("context", 96usize)?,
+                    answer: args.get("answer", 8usize)?,
+                },
+                other => anyhow::bail!("unknown task '{other}'"),
+            };
+            let names: Vec<String> =
+                args.get_list("modes", &["full".to_string(), "mikv:0.25:int2".to_string()])?;
+            let modes: Vec<(String, CacheMode)> = names
+                .iter()
+                .map(|n| Ok((n.clone(), CacheMode::parse(n, engine.dims())?)))
+                .collect::<anyhow::Result<_>>()?;
+            let n = args.get("samples", 25usize)?;
+            let harness = Harness::new(&engine);
+            for o in harness.run(&task, &modes, n)? {
+                println!(
+                    "{:<18} {:<9} acc {:>6.1}%  cache {:>6.1}%  (n={})",
+                    o.mode_name,
+                    o.task,
+                    100.0 * o.accuracy,
+                    o.cache_pct,
+                    o.n_samples
+                );
+            }
+            Ok(())
+        }
+        Some("serve") => {
+            let engine = Engine::load(&artifacts, &model)?;
+            let dims = engine.dims().clone();
+            let port: u16 = args.get("port", 7777u16)?;
+            let cfg = CoordinatorConfig {
+                max_active: args.get("max-active", 8usize)?,
+                prefill_chunk: args.get("prefill-chunk", 4usize)?,
+                ..Default::default()
+            };
+            let (tx, rx) = std::sync::mpsc::channel::<Request>();
+            let listener = std::net::TcpListener::bind(("127.0.0.1", port))?;
+            std::thread::spawn(move || {
+                let _ = mikv::server::serve(listener, dims, tx);
+            });
+            Coordinator::new(engine, cfg).run(rx);
+            Ok(())
+        }
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,227 @@
+//! Analytic KV-cache memory footprint calculator — reproduces paper Table 5.
+//!
+//! Table 5 is pure arithmetic over published model architectures: the KV
+//! cache of a decoder-only transformer holds, per token per layer,
+//! `2 × n_kv_heads × head_dim` values. At FP16 that is
+//! `4 × n_kv_heads × head_dim` bytes; MiKV's compressed cache is scaled by
+//! the logical cache-size fraction. This module carries the real Llama-2 /
+//! Mistral architectures so the numbers match the paper *exactly*.
+
+use crate::kvcache::{accounting::bits_per_token, TierConfig};
+use crate::quant::Precision;
+
+/// Decoder-only transformer architecture (the KV-relevant fields).
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub layers: usize,
+    pub q_heads: usize,
+    pub kv_heads: usize,
+    pub head_dim: usize,
+}
+
+impl ModelSpec {
+    pub fn gqa(&self) -> bool {
+        self.kv_heads < self.q_heads
+    }
+}
+
+/// The four backbones of paper Table 5.
+pub fn paper_models() -> Vec<ModelSpec> {
+    vec![
+        ModelSpec {
+            name: "Llama-2-7b",
+            layers: 32,
+            q_heads: 32,
+            kv_heads: 32,
+            head_dim: 128,
+        },
+        ModelSpec {
+            name: "Mistral-7b",
+            layers: 32,
+            q_heads: 32,
+            kv_heads: 8, // GQA
+            head_dim: 128,
+        },
+        ModelSpec {
+            name: "Llama-2-13b",
+            layers: 40,
+            q_heads: 40,
+            kv_heads: 40,
+            head_dim: 128,
+        },
+        ModelSpec {
+            name: "Llama-2-70b",
+            layers: 80,
+            q_heads: 64,
+            kv_heads: 8, // GQA
+            head_dim: 128,
+        },
+    ]
+}
+
+/// Full (FP16, uncompressed) KV cache size in bytes.
+pub fn full_cache_bytes(m: &ModelSpec, batch: usize, seq: usize) -> u64 {
+    // 2 (K+V) × 2 bytes (FP16) per value.
+    (batch * seq * m.layers * m.kv_heads * m.head_dim) as u64 * 2 * 2
+}
+
+/// The cache sizes *as claimed in paper Table 5* for batch 8, seq 4096.
+///
+/// Reverse-engineering the published figures shows they correspond to
+/// **4 bytes per value (FP32)** rather than the FP16 the text describes
+/// (Llama-2-7b: 34.36GB = 8·4096·32·4096·2·4 bytes; FP16 gives 17.18GB),
+/// and the Llama-2-70b row (17.18GB) additionally matches only with 64
+/// layers instead of the model's 80 (64 is its *head* count). We reproduce
+/// the claimed numbers exactly here so the Table 5 bench can print
+/// paper-vs-ours side by side; `full_cache_bytes` above is the
+/// architecture-correct FP16 calculation.
+pub fn paper_table5_claimed_bytes(m: &ModelSpec, batch: usize, seq: usize) -> u64 {
+    let layers = if m.name == "Llama-2-70b" { 64 } else { m.layers };
+    (batch * seq * layers * m.kv_heads * m.head_dim) as u64 * 2 * 4
+}
+
+/// Cache size under MiKV with the given tiers and hi fraction — exact
+/// logical bytes including quantization metadata.
+pub fn mikv_cache_bytes(
+    m: &ModelSpec,
+    batch: usize,
+    seq: usize,
+    hi: &TierConfig,
+    lo: &TierConfig,
+    hi_fraction: f64,
+) -> u64 {
+    let slots = (batch * seq * m.layers * m.kv_heads) as f64;
+    let hi_bits = bits_per_token(hi, m.head_dim) as f64;
+    let lo_bits = bits_per_token(lo, m.head_dim) as f64;
+    let total_bits = slots * (hi_fraction * hi_bits + (1.0 - hi_fraction) * lo_bits);
+    (total_bits / 8.0).round() as u64
+}
+
+/// Cache size at a *target* compressed percentage of full (the way the
+/// paper reports Table 5: "Cache Size 25%" rows are exactly full × 0.25).
+pub fn cache_bytes_at_pct(m: &ModelSpec, batch: usize, seq: usize, pct: f64) -> u64 {
+    (full_cache_bytes(m, batch, seq) as f64 * pct / 100.0).round() as u64
+}
+
+/// Format bytes as the paper does (GB with two decimals, GB = 10^9 per the
+/// paper's 34.36GB figure for Llama-2-7b @ b=8, s=4096).
+pub fn fmt_gb(bytes: u64) -> String {
+    format!("{:.2}GB", bytes as f64 / 1e9)
+}
+
+/// A configuration that achieves roughly a given cache % with MiKV tiers,
+/// for the Table 5 "25%/20%" rows: returns (hi_fraction, lo precision).
+pub fn tiers_for_target_pct(pct: f64, head_dim: usize) -> (f64, TierConfig, TierConfig) {
+    let hi = TierConfig::fp16();
+    let lo = TierConfig::quantized(Precision::Int2, head_dim / 2);
+    // solve hi_f·16 + (1−hi_f)·lo_bits_effective = pct·16 / 100 … but we just
+    // search the hi fraction numerically for exactness.
+    let lo_frac = bits_per_token(&lo, head_dim) as f64 / bits_per_token(&hi, head_dim) as f64;
+    let hi_f = ((pct / 100.0) - lo_frac) / (1.0 - lo_frac);
+    (hi_f.clamp(0.0, 1.0), hi, lo)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Paper Table 5, "100%" rows @ batch 8, seq 4096 — claimed figures.
+    #[test]
+    fn full_cache_matches_paper_table5_claims() {
+        let cases = [
+            ("Llama-2-7b", 34.36),
+            ("Mistral-7b", 8.59),
+            ("Llama-2-13b", 53.69),
+            ("Llama-2-70b", 17.18),
+        ];
+        for m in paper_models() {
+            let expect = cases.iter().find(|(n, _)| *n == m.name).unwrap().1;
+            let got = paper_table5_claimed_bytes(&m, 8, 4096) as f64 / 1e9;
+            assert!(
+                (got - expect).abs() < 0.01,
+                "{}: got {got:.2}GB, paper {expect}GB",
+                m.name
+            );
+        }
+    }
+
+    /// Architecture-correct FP16 sizes (what the text describes): exactly
+    /// half the claimed FP32-like figures, except the 70b layer-count slip.
+    #[test]
+    fn fp16_full_cache_is_half_the_claims() {
+        for m in paper_models() {
+            let fp16 = full_cache_bytes(&m, 8, 4096) as f64;
+            let claimed = paper_table5_claimed_bytes(&m, 8, 4096) as f64;
+            let expect_ratio = if m.name == "Llama-2-70b" {
+                2.0 * 64.0 / 80.0
+            } else {
+                2.0
+            };
+            assert!(
+                (claimed / fp16 - expect_ratio).abs() < 1e-9,
+                "{}: ratio {}",
+                m.name,
+                claimed / fp16
+            );
+        }
+    }
+
+    /// Paper Table 5, 25% / 20% rows (fractions of the claimed 100% rows).
+    #[test]
+    fn compressed_rows_match_paper_table5() {
+        let cases = [
+            ("Llama-2-7b", 25.0, 8.59),
+            ("Llama-2-7b", 20.0, 6.87),
+            ("Mistral-7b", 25.0, 2.15),
+            ("Mistral-7b", 20.0, 1.72),
+            ("Llama-2-13b", 25.0, 13.42),
+            ("Llama-2-13b", 20.0, 10.74),
+            ("Llama-2-70b", 25.0, 4.30),
+            ("Llama-2-70b", 20.0, 3.44),
+        ];
+        for (name, pct, expect) in cases {
+            let m = paper_models().into_iter().find(|m| m.name == name).unwrap();
+            let got =
+                (paper_table5_claimed_bytes(&m, 8, 4096) as f64 * pct / 100.0) / 1e9;
+            assert!(
+                (got - expect).abs() < 0.01,
+                "{name}@{pct}%: got {got:.2}GB, paper {expect}GB"
+            );
+        }
+    }
+
+    #[test]
+    fn gqa_flag() {
+        let models = paper_models();
+        assert!(!models[0].gqa()); // Llama-2-7b
+        assert!(models[1].gqa()); // Mistral
+        assert!(models[3].gqa()); // 70b
+    }
+
+    #[test]
+    fn mikv_bytes_close_to_target() {
+        // hi=FP16@20% + INT2 lo should land in the low-30s percent range
+        // (paper Table 1 reports 32% for importance 20% + INT2).
+        let m = &paper_models()[0];
+        let hi = TierConfig::fp16();
+        let lo = TierConfig::quantized(Precision::Int2, 64);
+        let bytes = mikv_cache_bytes(m, 8, 4096, &hi, &lo, 0.20);
+        let pct = 100.0 * bytes as f64 / full_cache_bytes(m, 8, 4096) as f64;
+        assert!((30.0..35.0).contains(&pct), "pct={pct:.1}");
+    }
+
+    #[test]
+    fn tiers_for_target_solves_fraction() {
+        let (hi_f, hi, lo) = tiers_for_target_pct(25.0, 128);
+        let m = &paper_models()[0];
+        let bytes = mikv_cache_bytes(m, 8, 4096, &hi, &lo, hi_f);
+        let pct = 100.0 * bytes as f64 / full_cache_bytes(m, 8, 4096) as f64;
+        assert!((pct - 25.0).abs() < 0.5, "pct={pct:.2}");
+    }
+
+    #[test]
+    fn fmt_gb_matches_paper_style() {
+        assert_eq!(fmt_gb(34_359_738_368), "34.36GB");
+    }
+}

@@ -1,0 +1,510 @@
+//! The inference engine: batched prefill/decode over the AOT graphs.
+//!
+//! One [`Engine`] owns a model's compiled executables and its weights as
+//! device-resident PJRT buffers (uploaded once at load). Each step:
+//!
+//! 1. assemble the batch host tensors from the sessions' cache managers
+//!    (plane-major blocks are contiguous per session — one memcpy each);
+//! 2. upload + execute the right graph (`decode_mikv` or `decode_full`);
+//! 3. scatter the outputs back: append the new token's K/V to each cache,
+//!    feed the attention row to the importance policy, return logits.
+//!
+//! Sessions with different cache *configurations* batch together freely on
+//! the MiKV graph (the config lives in the masks/codes, not the graph);
+//! Full and Oracle sessions share the `decode_full` graph when their
+//! `oracle_k` agrees.
+
+use super::sampler;
+use super::session::{CacheMode, Session, SessionCache};
+use crate::runtime::artifacts::{Manifest, ModelDims, ModelEntry};
+use crate::runtime::client::{Executable, HostInput, Runtime};
+use crate::runtime::weights::Weights;
+use std::collections::BTreeMap;
+use std::path::Path;
+use xla::PjRtBuffer;
+
+/// Raw prefill outputs for one session (used by the experiment harness to
+/// build many cache variants from one prefill — see `eval::runner`).
+pub struct PrefillOutput {
+    pub seq_len: usize,
+    /// `[planes, seq_len, d]`
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// `[planes, seq_len]`
+    pub attn_acc: Vec<f32>,
+    /// `[planes, d]`
+    pub qmax: Vec<f32>,
+    pub kmax: Vec<f32>,
+    /// Logits at the last live prompt position, `[vocab]`.
+    pub last_logits: Vec<f32>,
+}
+
+/// The per-model inference engine.
+pub struct Engine {
+    rt: Runtime,
+    pub entry: ModelEntry,
+    weight_bufs: Vec<PjRtBuffer>,
+    prefill: BTreeMap<usize, Executable>,
+    decode_mikv: BTreeMap<usize, Executable>,
+    decode_full: BTreeMap<usize, Executable>,
+}
+
+impl Engine {
+    /// Load a model's artifacts: compile all its graphs, upload weights.
+    pub fn load(artifacts_dir: impl AsRef<Path>, model: &str) -> crate::Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        Self::load_from_manifest(&manifest, model)
+    }
+
+    pub fn load_from_manifest(manifest: &Manifest, model: &str) -> crate::Result<Engine> {
+        let entry = manifest.model(model)?.clone();
+        let rt = Runtime::new()?;
+
+        let mut prefill = BTreeMap::new();
+        let mut decode_mikv = BTreeMap::new();
+        let mut decode_full = BTreeMap::new();
+        for (key, g) in &entry.graphs {
+            let exe = rt.load_executable(&manifest.path(&g.file), g.clone())?;
+            let map = if key.starts_with("prefill") {
+                &mut prefill
+            } else if key.starts_with("decode_mikv") {
+                &mut decode_mikv
+            } else {
+                &mut decode_full
+            };
+            map.insert(g.batch, exe);
+        }
+        anyhow::ensure!(!prefill.is_empty(), "model {model} has no prefill graph");
+
+        // Upload weights once (device-resident across all steps).
+        let w = Weights::load(manifest.path(&entry.weights_file))?;
+        let mut weight_bufs = Vec::with_capacity(entry.param_order.len());
+        for name in &entry.param_order {
+            let t = w.get_f32(name)?;
+            weight_bufs.push(rt.upload_f32(t.data(), t.shape())?);
+        }
+        crate::log_info!(
+            "engine ready: model={model} params={} graphs={} weights uploaded",
+            entry.dims.params,
+            entry.graphs.len()
+        );
+        Ok(Engine {
+            rt,
+            entry,
+            weight_bufs,
+            prefill,
+            decode_mikv,
+            decode_full,
+        })
+    }
+
+    pub fn dims(&self) -> &ModelDims {
+        &self.entry.dims
+    }
+
+    pub fn runtime(&self) -> &Runtime {
+        &self.rt
+    }
+
+    /// Compiled batch sizes for a graph kind.
+    pub fn batches(&self, kind: &str) -> Vec<usize> {
+        match kind {
+            "prefill" => self.prefill.keys().copied().collect(),
+            "decode_mikv" => self.decode_mikv.keys().copied().collect(),
+            "decode_full" => self.decode_full.keys().copied().collect(),
+            _ => vec![],
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Prefill
+    // ------------------------------------------------------------------
+
+    /// Run prefill for a set of prompts, returning raw outputs per prompt.
+    /// Chunks across the compiled batch sizes automatically.
+    pub fn prefill_raw(&self, prompts: &[Vec<i64>]) -> crate::Result<Vec<PrefillOutput>> {
+        let mut out = Vec::with_capacity(prompts.len());
+        let avail: Vec<usize> = self.prefill.keys().copied().collect();
+        let mut i = 0;
+        while i < prompts.len() {
+            let remaining = prompts.len() - i;
+            let b = pick_batch(remaining, &avail);
+            let chunk = &prompts[i..(i + b.min(remaining))];
+            out.extend(self.prefill_chunk(chunk, b)?);
+            i += chunk.len();
+        }
+        Ok(out)
+    }
+
+    fn prefill_chunk(&self, prompts: &[Vec<i64>], b: usize) -> crate::Result<Vec<PrefillOutput>> {
+        let exe = &self.prefill[&b];
+        let d = &self.entry.dims;
+        let (s, dh, v_sz) = (d.max_seq, d.d_head, d.vocab);
+        let planes = d.planes();
+
+        let mut tokens = vec![0i64; b * s];
+        let mut len_mask = vec![0.0f32; b * s];
+        for (lane, p) in prompts.iter().enumerate() {
+            anyhow::ensure!(p.len() <= s, "prompt len {} > max_seq {s}", p.len());
+            anyhow::ensure!(!p.is_empty(), "empty prompt");
+            tokens[lane * s..lane * s + p.len()].copy_from_slice(p);
+            len_mask[lane * s..lane * s + p.len()].fill(1.0);
+        }
+
+        let n_w = self.weight_bufs.len();
+        let bufs = vec![
+            self.rt.upload(&exe.entry.inputs[n_w], &HostInput::I64(&tokens))?,
+            self.rt.upload(&exe.entry.inputs[n_w + 1], &HostInput::F32(&len_mask))?,
+        ];
+        let mut args: Vec<&PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.extend(bufs.iter());
+        let outs = exe.execute(&args)?;
+
+        let logits = exe.output_f32(&outs, "logits")?; // [B, S, V]
+        let k = exe.output_f32(&outs, "k")?; // [B, L, H, S, D]
+        let v = exe.output_f32(&outs, "v")?;
+        let acc = exe.output_f32(&outs, "attn_acc")?; // [B, L, H, S]
+        let qmax = exe.output_f32(&outs, "qmax")?; // [B, L, H, D]
+        let kmax = exe.output_f32(&outs, "kmax")?;
+
+        let mut results = Vec::with_capacity(prompts.len());
+        for (lane, p) in prompts.iter().enumerate() {
+            let t = p.len();
+            // k/v: gather [planes, t, dh] from the padded [planes, s, dh]
+            let mut kk = vec![0.0f32; planes * t * dh];
+            let mut vv = vec![0.0f32; planes * t * dh];
+            let mut aa = vec![0.0f32; planes * t];
+            let base = lane * planes * s;
+            for pl in 0..planes {
+                let src = (base + pl * s) * dh..(base + pl * s + t) * dh;
+                kk[pl * t * dh..(pl + 1) * t * dh].copy_from_slice(&k[src.clone()]);
+                vv[pl * t * dh..(pl + 1) * t * dh].copy_from_slice(&v[src]);
+                aa[pl * t..(pl + 1) * t]
+                    .copy_from_slice(&acc[base + pl * s..base + pl * s + t]);
+            }
+            let mbase = lane * planes * dh;
+            results.push(PrefillOutput {
+                seq_len: t,
+                k: kk,
+                v: vv,
+                attn_acc: aa,
+                qmax: qmax[mbase..mbase + planes * dh].to_vec(),
+                kmax: kmax[mbase..mbase + planes * dh].to_vec(),
+                last_logits: logits[(lane * s + t - 1) * v_sz..(lane * s + t) * v_sz].to_vec(),
+            });
+        }
+        Ok(results)
+    }
+
+    /// Prefill + ingest into sessions. Sets `tokens`/`prompt_len` and the
+    /// first greedy `last_token`. Returns last-position logits per session.
+    pub fn prefill(
+        &self,
+        sessions: &mut [&mut Session],
+        prompts: &[Vec<i64>],
+    ) -> crate::Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(sessions.len() == prompts.len());
+        let raw = self.prefill_raw(prompts)?;
+        let mut logits_rows = Vec::with_capacity(raw.len());
+        for ((sess, prompt), out) in sessions.iter_mut().zip(prompts).zip(raw) {
+            self.ingest_prefill(sess, prompt, &out);
+            logits_rows.push(out.last_logits);
+        }
+        Ok(logits_rows)
+    }
+
+    /// Ingest precomputed prefill outputs into a fresh session (the
+    /// experiment harness fans one prefill out to many cache variants).
+    pub fn ingest_prefill(&self, sess: &mut Session, prompt: &[i64], out: &PrefillOutput) {
+        sess.tokens = prompt.to_vec();
+        sess.prompt_len = prompt.len();
+        match &mut sess.cache {
+            SessionCache::Mikv(m) => {
+                m.ingest_prefill(out.seq_len, &out.k, &out.v, &out.attn_acc, &out.qmax, &out.kmax)
+            }
+            SessionCache::Full(f) => f.ingest_prefill(out.seq_len, &out.k, &out.v),
+        }
+        sess.last_token = sampler::greedy(&out.last_logits);
+        sess.tokens.push(sess.last_token);
+    }
+
+    // ------------------------------------------------------------------
+    // Decode
+    // ------------------------------------------------------------------
+
+    /// One decode step for a homogeneous group of sessions (same graph
+    /// kind; Oracle sessions must share `k`). Feeds each session's
+    /// `last_token`, ingests the new KV + attention, returns logits rows.
+    pub fn decode_step(&self, sessions: &mut [&mut Session]) -> crate::Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(!sessions.is_empty());
+        let kind = sessions[0].mode.graph_kind();
+        anyhow::ensure!(
+            sessions.iter().all(|s| s.mode.graph_kind() == kind),
+            "decode batch mixes graph kinds"
+        );
+        let map = if kind == "decode_mikv" {
+            &self.decode_mikv
+        } else {
+            &self.decode_full
+        };
+        let avail: Vec<usize> = map.keys().copied().collect();
+        anyhow::ensure!(!avail.is_empty(), "no {kind} graph compiled");
+
+        let mut logits_rows = Vec::with_capacity(sessions.len());
+        let mut i = 0;
+        while i < sessions.len() {
+            let remaining = sessions.len() - i;
+            let b = pick_batch(remaining, &avail);
+            let n = b.min(remaining);
+            let chunk = &mut sessions[i..i + n];
+            let rows = if kind == "decode_mikv" {
+                self.decode_chunk_mikv(chunk, &map[&b])?
+            } else {
+                self.decode_chunk_full(chunk, &map[&b])?
+            };
+            logits_rows.extend(rows);
+            i += n;
+        }
+        Ok(logits_rows)
+    }
+
+    fn decode_chunk_mikv(
+        &self,
+        sessions: &mut [&mut Session],
+        exe: &Executable,
+    ) -> crate::Result<Vec<Vec<f32>>> {
+        let d = &self.entry.dims;
+        let b = exe.entry.batch;
+        let planes = d.planes();
+        let (s, dh) = (d.max_seq, d.d_head);
+        let ng = d.n_groups();
+        let n = sessions.len();
+
+        // Batch host tensors (padding lanes stay zero: masks 0 ⇒ the pad
+        // lane attends only to its own token; outputs are discarded).
+        let mut token = vec![0i64; b];
+        let mut pos = vec![0i64; b];
+        let big = planes * s * dh;
+        let med = planes * s * ng;
+        let sml = planes * s;
+        let mut k_hi = vec![0.0f32; b * big];
+        let mut v_hi = vec![0.0f32; b * big];
+        let mut hi_mask = vec![0.0f32; b * sml];
+        let mut k_lo_c = vec![0.0f32; b * big];
+        let mut k_lo_s = vec![0.0f32; b * med];
+        let mut k_lo_z = vec![0.0f32; b * med];
+        let mut v_lo_c = vec![0.0f32; b * big];
+        let mut v_lo_s = vec![0.0f32; b * med];
+        let mut v_lo_z = vec![0.0f32; b * med];
+        let mut lo_mask = vec![0.0f32; b * sml];
+        let mut inv_b = vec![1.0f32; b * planes * dh];
+
+        for (lane, sess) in sessions.iter().enumerate() {
+            token[lane] = sess.last_token;
+            pos[lane] = sess.cache.seq_len() as i64;
+            let m = match &sess.cache {
+                SessionCache::Mikv(m) => m,
+                _ => anyhow::bail!("session {} is not MiKV", sess.id),
+            };
+            let views = m.decode_views();
+            k_hi[lane * big..(lane + 1) * big].copy_from_slice(views.k_hi);
+            v_hi[lane * big..(lane + 1) * big].copy_from_slice(views.v_hi);
+            hi_mask[lane * sml..(lane + 1) * sml].copy_from_slice(views.hi_mask);
+            k_lo_c[lane * big..(lane + 1) * big].copy_from_slice(views.k_lo_codes);
+            k_lo_s[lane * med..(lane + 1) * med].copy_from_slice(views.k_lo_scale);
+            k_lo_z[lane * med..(lane + 1) * med].copy_from_slice(views.k_lo_zero);
+            v_lo_c[lane * big..(lane + 1) * big].copy_from_slice(views.v_lo_codes);
+            v_lo_s[lane * med..(lane + 1) * med].copy_from_slice(views.v_lo_scale);
+            v_lo_z[lane * med..(lane + 1) * med].copy_from_slice(views.v_lo_zero);
+            lo_mask[lane * sml..(lane + 1) * sml].copy_from_slice(views.lo_mask);
+            inv_b[lane * planes * dh..(lane + 1) * planes * dh]
+                .copy_from_slice(views.inv_balancer);
+        }
+
+        let n_w = self.weight_bufs.len();
+        let specs = &exe.entry.inputs;
+        let host: Vec<HostInput<'_>> = vec![
+            HostInput::I64(&token),
+            HostInput::I64(&pos),
+            HostInput::F32(&k_hi),
+            HostInput::F32(&v_hi),
+            HostInput::F32(&hi_mask),
+            HostInput::F32(&k_lo_c),
+            HostInput::F32(&k_lo_s),
+            HostInput::F32(&k_lo_z),
+            HostInput::F32(&v_lo_c),
+            HostInput::F32(&v_lo_s),
+            HostInput::F32(&v_lo_z),
+            HostInput::F32(&lo_mask),
+            HostInput::F32(&inv_b),
+        ];
+        let bufs = host
+            .iter()
+            .enumerate()
+            .map(|(j, h)| self.rt.upload(&specs[n_w + j], h))
+            .collect::<crate::Result<Vec<_>>>()?;
+        let mut args: Vec<&PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.extend(bufs.iter());
+        let outs = exe.execute(&args)?;
+        self.scatter_decode_outputs(sessions, exe, &outs, n)
+    }
+
+    fn decode_chunk_full(
+        &self,
+        sessions: &mut [&mut Session],
+        exe: &Executable,
+    ) -> crate::Result<Vec<Vec<f32>>> {
+        let d = &self.entry.dims;
+        let b = exe.entry.batch;
+        let planes = d.planes();
+        let (s, dh) = (d.max_seq, d.d_head);
+        let big = planes * s * dh;
+        let sml = planes * s;
+
+        let mut token = vec![0i64; b];
+        let mut pos = vec![0i64; b];
+        let mut k_full = vec![0.0f32; b * big];
+        let mut v_full = vec![0.0f32; b * big];
+        let mut mask = vec![0.0f32; b * sml];
+        let mut oracle_k: i64 = (s + 1) as i64;
+        for (lane, sess) in sessions.iter().enumerate() {
+            token[lane] = sess.last_token;
+            pos[lane] = sess.cache.seq_len() as i64;
+            if let CacheMode::Oracle { k } = sess.mode {
+                oracle_k = k as i64;
+            }
+            let f = match &sess.cache {
+                SessionCache::Full(f) => f,
+                _ => anyhow::bail!("session {} is not Full/Oracle", sess.id),
+            };
+            k_full[lane * big..(lane + 1) * big].copy_from_slice(&f.k);
+            v_full[lane * big..(lane + 1) * big].copy_from_slice(&f.v);
+            mask[lane * sml..(lane + 1) * sml].copy_from_slice(&f.mask);
+        }
+        // homogeneity check for oracle batches
+        for sess in sessions.iter() {
+            match sess.mode {
+                CacheMode::Oracle { k } => {
+                    anyhow::ensure!(k as i64 == oracle_k, "mixed oracle_k in batch")
+                }
+                CacheMode::Full => {
+                    anyhow::ensure!(oracle_k == (s + 1) as i64, "mixed Full/Oracle batch")
+                }
+                _ => {}
+            }
+        }
+
+        let n_w = self.weight_bufs.len();
+        let specs = &exe.entry.inputs;
+        let ok = [oracle_k];
+        let host: Vec<HostInput<'_>> = vec![
+            HostInput::I64(&token),
+            HostInput::I64(&pos),
+            HostInput::F32(&k_full),
+            HostInput::F32(&v_full),
+            HostInput::F32(&mask),
+            HostInput::I64(&ok),
+        ];
+        let bufs = host
+            .iter()
+            .enumerate()
+            .map(|(j, h)| self.rt.upload(&specs[n_w + j], h))
+            .collect::<crate::Result<Vec<_>>>()?;
+        let mut args: Vec<&PjRtBuffer> = self.weight_bufs.iter().collect();
+        args.extend(bufs.iter());
+        let outs = exe.execute(&args)?;
+        self.scatter_decode_outputs(sessions, exe, &outs, sessions.len())
+    }
+
+    /// Common decode output handling: per live lane, append KV + attention
+    /// to the cache and collect the logits row.
+    fn scatter_decode_outputs(
+        &self,
+        sessions: &mut [&mut Session],
+        exe: &Executable,
+        outs: &[xla::Literal],
+        n_live: usize,
+    ) -> crate::Result<Vec<Vec<f32>>> {
+        let d = &self.entry.dims;
+        let planes = d.planes();
+        let (s, dh, v_sz) = (d.max_seq, d.d_head, d.vocab);
+
+        let logits = exe.output_f32(outs, "logits")?; // [B, V]
+        let k_new = exe.output_f32(outs, "k_new")?; // [B, planes, D]
+        let v_new = exe.output_f32(outs, "v_new")?;
+        let attn_prev = exe.output_f32(outs, "attn_prev")?; // [B, planes, S]
+        let attn_self = exe.output_f32(outs, "attn_self")?; // [B, planes]
+
+        let mut rows = Vec::with_capacity(n_live);
+        for (lane, sess) in sessions.iter_mut().enumerate().take(n_live) {
+            sess.ingest_step(
+                &k_new[lane * planes * dh..(lane + 1) * planes * dh],
+                &v_new[lane * planes * dh..(lane + 1) * planes * dh],
+                &attn_prev[lane * planes * s..(lane + 1) * planes * s],
+                &attn_self[lane * planes..(lane + 1) * planes],
+            );
+            rows.push(logits[lane * v_sz..(lane + 1) * v_sz].to_vec());
+        }
+        Ok(rows)
+    }
+
+    /// Greedy autoregressive generation for one session.
+    pub fn generate_greedy(
+        &self,
+        sess: &mut Session,
+        prompt: &[i64],
+        max_new: usize,
+        stop: Option<i64>,
+    ) -> crate::Result<Vec<i64>> {
+        let mut group = [sess];
+        self.prefill(&mut group, std::slice::from_ref(&prompt.to_vec()))?;
+        for _ in 1..max_new {
+            if let Some(stop_tok) = stop {
+                if group[0].last_token == stop_tok {
+                    break;
+                }
+            }
+            if group[0].cache.seq_len() + 1 >= self.entry.dims.max_seq {
+                break;
+            }
+            let rows = self.decode_step(&mut group)?;
+            let tok = sampler::greedy(&rows[0]);
+            group[0].last_token = tok;
+            group[0].tokens.push(tok);
+        }
+        Ok(group[0].generated().to_vec())
+    }
+}
+
+/// Choose a compiled batch size: the largest ≤ `n`, else the smallest
+/// (padding).
+pub fn pick_batch(n: usize, avail: &[usize]) -> usize {
+    debug_assert!(!avail.is_empty());
+    avail
+        .iter()
+        .rev()
+        .find(|&&b| b <= n)
+        .or_else(|| avail.first())
+        .copied()
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pick_batch_prefers_largest_fitting() {
+        let avail = vec![1, 4];
+        assert_eq!(pick_batch(1, &avail), 1);
+        assert_eq!(pick_batch(3, &avail), 1);
+        assert_eq!(pick_batch(4, &avail), 4);
+        assert_eq!(pick_batch(9, &avail), 4);
+    }
+
+    #[test]
+    fn pick_batch_pads_when_nothing_fits() {
+        let avail = vec![4, 8];
+        assert_eq!(pick_batch(2, &avail), 4);
+    }
+}

@@ -1,0 +1,16 @@
+//! Model engine: orchestrates the AOT graphs against the cache managers.
+//!
+//! * [`session`] — per-request generation state: token history plus one of
+//!   the cache variants (MiKV mixed-precision manager / full-precision /
+//!   oracle).
+//! * [`engine`] — [`engine::Engine`]: loads one model's artifact set,
+//!   uploads weights once, and drives batched prefill/decode steps.
+//! * [`sampler`] — greedy decoding (the paper evaluates with deterministic
+//!   greedy decoding throughout).
+
+pub mod engine;
+pub mod sampler;
+pub mod session;
+
+pub use engine::{Engine, PrefillOutput};
+pub use session::{CacheMode, FullCache, Session, SessionCache};

@@ -1,0 +1,45 @@
+//! Greedy sampling — the paper's evaluation protocol ("deterministic greedy
+//! decoding for controlled assessment", Appendix D).
+
+/// Argmax over one logits row.
+pub fn greedy(logits: &[f32]) -> i64 {
+    debug_assert!(!logits.is_empty());
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best = i;
+            best_v = v;
+        }
+    }
+    best as i64
+}
+
+/// Argmax restricted to a token sub-range `[lo, hi)` — used by evaluation
+/// drivers that know the answer alphabet (e.g. line-retrieval values).
+pub fn greedy_in_range(logits: &[f32], lo: usize, hi: usize) -> i64 {
+    debug_assert!(lo < hi && hi <= logits.len());
+    lo as i64 + greedy(&logits[lo..hi])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_max() {
+        assert_eq!(greedy(&[0.1, 2.0, -1.0, 1.9]), 1);
+        assert_eq!(greedy(&[-5.0]), 0);
+    }
+
+    #[test]
+    fn greedy_first_wins_ties() {
+        assert_eq!(greedy(&[1.0, 1.0, 1.0]), 0);
+    }
+
+    #[test]
+    fn range_restricted() {
+        let logits = [9.0, 0.1, 0.5, 0.2, 9.0];
+        assert_eq!(greedy_in_range(&logits, 1, 4), 2);
+    }
+}

@@ -1,0 +1,347 @@
+//! Per-request generation session state.
+
+use crate::kvcache::{CacheConfig, CacheManager, StepOutputs};
+use crate::policies::make_policy;
+use crate::quant::Precision;
+use crate::runtime::ModelDims;
+
+/// How a session's cache behaves — selects both the decode graph and the
+/// cache data structure.
+#[derive(Debug, Clone)]
+pub enum CacheMode {
+    /// Mixed-precision cache (also covers the H2O-eviction and RTN
+    /// baselines via the [`CacheConfig`] presets). `policy` is one of
+    /// "h2o" | "local" | "random".
+    Mikv { cfg: CacheConfig, policy: String },
+    /// Exact full-precision cache (the paper's 100% baseline).
+    Full,
+    /// Full cache with post-softmax oracle top-k (paper Fig. 3b):
+    /// keep the `k` highest attention weights per head, renormalize.
+    Oracle { k: usize },
+}
+
+impl CacheMode {
+    /// Graph kind this mode decodes with.
+    pub fn graph_kind(&self) -> &'static str {
+        match self {
+            CacheMode::Mikv { .. } => "decode_mikv",
+            CacheMode::Full | CacheMode::Oracle { .. } => "decode_full",
+        }
+    }
+
+    /// Convenience preset: paper-default MiKV at an importance ratio.
+    pub fn mikv(dims: &ModelDims, ratio: f64, lo: Precision) -> CacheMode {
+        CacheMode::Mikv {
+            cfg: CacheConfig::mikv(
+                dims.n_layers,
+                dims.n_kv_heads,
+                dims.d_head,
+                dims.max_seq,
+                ratio,
+                lo,
+            ),
+            policy: "h2o".into(),
+        }
+    }
+
+    /// H2O eviction baseline preset.
+    pub fn h2o(dims: &ModelDims, ratio: f64) -> CacheMode {
+        CacheMode::Mikv {
+            cfg: CacheConfig::h2o(
+                dims.n_layers,
+                dims.n_kv_heads,
+                dims.d_head,
+                dims.max_seq,
+                ratio,
+            ),
+            policy: "h2o".into(),
+        }
+    }
+
+    /// Uniform RTN quantization baseline preset.
+    pub fn rtn(dims: &ModelDims, precision: Precision) -> CacheMode {
+        CacheMode::Mikv {
+            cfg: CacheConfig::rtn(
+                dims.n_layers,
+                dims.n_kv_heads,
+                dims.d_head,
+                dims.max_seq,
+                precision,
+            ),
+            policy: "h2o".into(),
+        }
+    }
+
+    /// Parse a mode string:
+    /// `full` | `oracle:<k>` | `h2o:<ratio>` | `rtn:<prec>` |
+    /// `mikv:<ratio>:<lo>[:<flag>...]` with flags `nobal` (disable outlier
+    /// awareness), `hi=<prec>` (quantized importance cache, paper §3.3),
+    /// `policy=<name>`, `recent=<n>`, `group=<n>`.
+    pub fn parse(s: &str, dims: &ModelDims) -> crate::Result<CacheMode> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let prec = |p: &str| {
+            Precision::parse(p).ok_or_else(|| anyhow::anyhow!("bad precision '{p}' in '{s}'"))
+        };
+        Ok(match parts[0] {
+            "full" => CacheMode::Full,
+            "oracle" => CacheMode::Oracle {
+                k: parts
+                    .get(1)
+                    .and_then(|p| p.parse().ok())
+                    .unwrap_or(dims.max_seq + 1),
+            },
+            "h2o" => CacheMode::h2o(
+                dims,
+                parts
+                    .get(1)
+                    .and_then(|p| p.parse().ok())
+                    .unwrap_or(0.2),
+            ),
+            "rtn" => CacheMode::rtn(dims, prec(parts.get(1).copied().unwrap_or("int8"))?),
+            "mikv" => {
+                let ratio: f64 = parts.get(1).and_then(|p| p.parse().ok()).unwrap_or(0.2);
+                let lo = prec(parts.get(2).copied().unwrap_or("int2"))?;
+                let mut mode = Self::mikv(dims, ratio, lo);
+                if let CacheMode::Mikv { cfg, policy } = &mut mode {
+                    for flag in &parts[3.min(parts.len())..] {
+                        if *flag == "nobal" {
+                            cfg.outlier_aware = false;
+                        } else if let Some(p) = flag.strip_prefix("hi=") {
+                            let hp = prec(p)?;
+                            cfg.hi = if hp.is_quantized() {
+                                crate::kvcache::TierConfig::quantized(
+                                    hp,
+                                    (dims.d_head / 2).max(1),
+                                )
+                            } else {
+                                crate::kvcache::TierConfig::fp16()
+                            };
+                        } else if let Some(p) = flag.strip_prefix("policy=") {
+                            *policy = p.to_string();
+                        } else if let Some(n) = flag.strip_prefix("recent=") {
+                            cfg.recent_window = n.parse()?;
+                        } else if let Some(n) = flag.strip_prefix("group=") {
+                            cfg.lo = crate::kvcache::TierConfig::quantized(lo, n.parse()?);
+                        } else {
+                            anyhow::bail!("unknown mikv flag '{flag}' in '{s}'");
+                        }
+                    }
+                }
+                mode
+            }
+            other => anyhow::bail!("unknown mode '{other}'"),
+        })
+    }
+}
+
+/// Dense full-precision cache used by the Full/Oracle modes.
+#[derive(Debug, Clone)]
+pub struct FullCache {
+    planes: usize,
+    d: usize,
+    s_max: usize,
+    /// `[planes, s_max, d]`
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// `[planes, s_max]` — 1.0 for live slots.
+    pub mask: Vec<f32>,
+    pub seq_len: usize,
+}
+
+impl FullCache {
+    pub fn new(dims: &ModelDims) -> FullCache {
+        let planes = dims.planes();
+        let (d, s) = (dims.d_head, dims.max_seq);
+        FullCache {
+            planes,
+            d,
+            s_max: s,
+            k: vec![0.0; planes * s * d],
+            v: vec![0.0; planes * s * d],
+            mask: vec![0.0; planes * s],
+            seq_len: 0,
+        }
+    }
+
+    /// Ingest prefill K/V (`[planes, t, d]` contiguous) for a prompt of
+    /// length `t`.
+    pub fn ingest_prefill(&mut self, t: usize, k: &[f32], v: &[f32]) {
+        assert!(t <= self.s_max);
+        assert_eq!(k.len(), self.planes * t * self.d);
+        for p in 0..self.planes {
+            let src = p * t * self.d..(p * t + t) * self.d;
+            let dst = p * self.s_max * self.d..(p * self.s_max + t) * self.d;
+            self.k[dst.clone()].copy_from_slice(&k[src.clone()]);
+            self.v[dst].copy_from_slice(&v[src]);
+            self.mask[p * self.s_max..p * self.s_max + t].fill(1.0);
+        }
+        self.seq_len = t;
+    }
+
+    /// Append one token's K/V (`[planes, d]`).
+    pub fn append(&mut self, k_new: &[f32], v_new: &[f32]) {
+        let t = self.seq_len;
+        assert!(t < self.s_max, "cache full");
+        for p in 0..self.planes {
+            let dst = (p * self.s_max + t) * self.d;
+            self.k[dst..dst + self.d].copy_from_slice(&k_new[p * self.d..(p + 1) * self.d]);
+            self.v[dst..dst + self.d].copy_from_slice(&v_new[p * self.d..(p + 1) * self.d]);
+            self.mask[p * self.s_max + t] = 1.0;
+        }
+        self.seq_len = t + 1;
+    }
+}
+
+/// The cache variant held by a session.
+pub enum SessionCache {
+    Mikv(CacheManager),
+    Full(FullCache),
+}
+
+impl SessionCache {
+    pub fn seq_len(&self) -> usize {
+        match self {
+            SessionCache::Mikv(m) => m.seq_len(),
+            SessionCache::Full(f) => f.seq_len,
+        }
+    }
+
+    /// Logical cache size in % of the uncompressed FP16 cache.
+    pub fn cache_size_pct(&self) -> f64 {
+        match self {
+            SessionCache::Mikv(m) => m.cache_size_pct(),
+            SessionCache::Full(_) => 100.0,
+        }
+    }
+}
+
+/// One generation request's state.
+pub struct Session {
+    pub id: u64,
+    pub mode: CacheMode,
+    pub cache: SessionCache,
+    /// Full token history: prompt then generated tokens.
+    pub tokens: Vec<i64>,
+    pub prompt_len: usize,
+    /// Next token to feed (already appended to `tokens`).
+    pub last_token: i64,
+    pub done: bool,
+}
+
+impl Session {
+    /// Create an empty session; the engine's prefill fills the cache.
+    pub fn new(id: u64, dims: &ModelDims, mode: CacheMode) -> crate::Result<Session> {
+        let cache = match &mode {
+            CacheMode::Mikv { cfg, policy } => {
+                let p = make_policy(policy, cfg.layers * cfg.kv_heads, cfg.max_seq, id)
+                    .ok_or_else(|| anyhow::anyhow!("unknown policy '{policy}'"))?;
+                SessionCache::Mikv(CacheManager::new(cfg.clone(), p))
+            }
+            CacheMode::Full | CacheMode::Oracle { .. } => {
+                SessionCache::Full(FullCache::new(dims))
+            }
+        };
+        Ok(Session {
+            id,
+            mode,
+            cache,
+            tokens: Vec::new(),
+            prompt_len: 0,
+            last_token: 0,
+            done: false,
+        })
+    }
+
+    pub fn generated(&self) -> &[i64] {
+        &self.tokens[self.prompt_len..]
+    }
+
+    /// Ingest one decode step's outputs into the cache.
+    pub fn ingest_step(
+        &mut self,
+        k_new: &[f32],
+        v_new: &[f32],
+        attn_prev: &[f32],
+        attn_self: &[f32],
+    ) {
+        match &mut self.cache {
+            SessionCache::Mikv(m) => m.append_token(StepOutputs {
+                k_new,
+                v_new,
+                attn_prev,
+                attn_self,
+            }),
+            SessionCache::Full(f) => f.append(k_new, v_new),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            vocab: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_q_heads: 4,
+            n_kv_heads: 2,
+            d_head: 8,
+            d_ff: 64,
+            max_seq: 16,
+            quant_group: 4,
+            params: 0,
+        }
+    }
+
+    #[test]
+    fn full_cache_prefill_and_append() {
+        let d = dims();
+        let mut fc = FullCache::new(&d);
+        let planes = d.planes();
+        let t = 5;
+        let k: Vec<f32> = (0..planes * t * 8).map(|i| i as f32).collect();
+        fc.ingest_prefill(t, &k, &k);
+        assert_eq!(fc.seq_len, 5);
+        // plane 1, slot 2, channel 3 == k[1*5*8 + 2*8 + 3]
+        assert_eq!(fc.k[(1 * 16 + 2) * 8 + 3], (1 * 5 * 8 + 2 * 8 + 3) as f32);
+        assert_eq!(fc.mask[16 + 4], 1.0);
+        assert_eq!(fc.mask[16 + 5], 0.0);
+
+        let k_new = vec![7.0; planes * 8];
+        fc.append(&k_new, &k_new);
+        assert_eq!(fc.seq_len, 6);
+        assert_eq!(fc.k[(0 * 16 + 5) * 8], 7.0);
+        assert_eq!(fc.mask[5], 1.0);
+    }
+
+    #[test]
+    fn session_modes_pick_graphs() {
+        let d = dims();
+        assert_eq!(CacheMode::Full.graph_kind(), "decode_full");
+        assert_eq!(CacheMode::Oracle { k: 4 }.graph_kind(), "decode_full");
+        assert_eq!(
+            CacheMode::mikv(&d, 0.25, Precision::Int2).graph_kind(),
+            "decode_mikv"
+        );
+    }
+
+    #[test]
+    fn session_construction() {
+        let d = dims();
+        let s = Session::new(1, &d, CacheMode::mikv(&d, 0.5, Precision::Int4)).unwrap();
+        assert_eq!(s.cache.seq_len(), 0);
+        let s2 = Session::new(2, &d, CacheMode::Full).unwrap();
+        assert_eq!(s2.cache.cache_size_pct(), 100.0);
+        let bad = Session::new(
+            3,
+            &d,
+            CacheMode::Mikv {
+                cfg: crate::kvcache::CacheConfig::full(2, 2, 8, 16),
+                policy: "nope".into(),
+            },
+        );
+        assert!(bad.is_err());
+    }
+}

@@ -1,0 +1,224 @@
+//! Token importance policies.
+//!
+//! MiKV is policy-agnostic (paper Fig. 4: "MiKV can apply the token
+//! importance policies proposed in existing approaches"): the policy decides
+//! *which* tokens sit in the high-precision importance cache; MiKV decides
+//! what happens to the rest (retain quantized vs. evict).
+//!
+//! * [`H2oPolicy`] — accumulated attention ("heavy hitters", Zhang et al.
+//!   2023): a slot's importance is the sum of attention it has received
+//!   from every query so far, seeded by the prefill attention column-sums.
+//! * [`LocalPolicy`] — recency (StreamingLLM / window attention style):
+//!   newer is more important.
+//! * [`RandomPolicy`] — uniformly random importance; the ablation control.
+//!
+//! The **oracle** policy of paper Fig. 3b is not an online policy — it
+//! computes the full-cache attention map first and imposes top-k sparsity
+//! post-attention. It therefore lives in the decode graph itself
+//! (`decode_full`'s `oracle_k` input), not behind this trait.
+
+use crate::util::rng::Pcg32;
+
+/// An online importance policy over `planes` independent (layer × kv-head)
+/// planes, each with up to `max_slots` token slots.
+pub trait ImportancePolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Seed per-slot importance from the prefill pass. `acc[s]` is the
+    /// attention mass slot `s` accumulated over all prefill queries
+    /// (ignored by policies that don't use attention history).
+    fn init_prefill(&mut self, plane: usize, acc: &[f32]);
+
+    /// Observe one decode step's attention row for a plane. `attn[s]` is the
+    /// probability the new query put on slot `s`.
+    fn observe(&mut self, plane: usize, attn: &[f32]);
+
+    /// Register that a new token occupies slot `s` (called on every decode
+    /// step after `observe`).
+    fn admit(&mut self, plane: usize, slot: usize);
+
+    /// Current importance score of a slot (higher = keep in hi tier).
+    fn score(&self, plane: usize, slot: usize) -> f32;
+
+    /// Pick the demotion victim among `candidates` (non-empty, all currently
+    /// hi-tier, recency-protected slots already excluded). Default: argmin
+    /// of `score`.
+    fn select_victim(&mut self, plane: usize, candidates: &[usize]) -> usize {
+        let mut best = candidates[0];
+        let mut best_score = self.score(plane, best);
+        for &c in &candidates[1..] {
+            let s = self.score(plane, c);
+            if s < best_score {
+                best = c;
+                best_score = s;
+            }
+        }
+        best
+    }
+}
+
+/// Accumulated-attention heavy-hitter policy (H2O).
+pub struct H2oPolicy {
+    /// `[plane][slot]` accumulated attention mass.
+    acc: Vec<Vec<f32>>,
+}
+
+impl H2oPolicy {
+    pub fn new(planes: usize, max_slots: usize) -> Self {
+        Self {
+            acc: vec![vec![0.0; max_slots]; planes],
+        }
+    }
+}
+
+impl ImportancePolicy for H2oPolicy {
+    fn name(&self) -> &'static str {
+        "h2o"
+    }
+
+    fn init_prefill(&mut self, plane: usize, acc: &[f32]) {
+        self.acc[plane][..acc.len()].copy_from_slice(acc);
+    }
+
+    fn observe(&mut self, plane: usize, attn: &[f32]) {
+        for (a, &p) in self.acc[plane].iter_mut().zip(attn) {
+            *a += p;
+        }
+    }
+
+    fn admit(&mut self, _plane: usize, _slot: usize) {}
+
+    fn score(&self, plane: usize, slot: usize) -> f32 {
+        self.acc[plane][slot]
+    }
+}
+
+/// Recency policy: importance = slot index (newest wins).
+pub struct LocalPolicy;
+
+impl ImportancePolicy for LocalPolicy {
+    fn name(&self) -> &'static str {
+        "local"
+    }
+
+    fn init_prefill(&mut self, _plane: usize, _acc: &[f32]) {}
+    fn observe(&mut self, _plane: usize, _attn: &[f32]) {}
+    fn admit(&mut self, _plane: usize, _slot: usize) {}
+
+    fn score(&self, _plane: usize, slot: usize) -> f32 {
+        slot as f32
+    }
+}
+
+/// Random importance — the control showing that *which* tokens are kept hi
+/// matters (paper's argument that importance criteria help, Fig. 6 vs RTN).
+pub struct RandomPolicy {
+    rng: Pcg32,
+    /// `[plane][slot]` scores drawn lazily on admit.
+    scores: Vec<Vec<f32>>,
+}
+
+impl RandomPolicy {
+    pub fn new(planes: usize, max_slots: usize, seed: u64) -> Self {
+        Self {
+            rng: Pcg32::new(seed),
+            scores: vec![vec![0.0; max_slots]; planes],
+        }
+    }
+}
+
+impl ImportancePolicy for RandomPolicy {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn init_prefill(&mut self, plane: usize, acc: &[f32]) {
+        for s in 0..acc.len() {
+            self.scores[plane][s] = self.rng.gen_f32();
+        }
+    }
+
+    fn observe(&mut self, _plane: usize, _attn: &[f32]) {}
+
+    fn admit(&mut self, plane: usize, slot: usize) {
+        self.scores[plane][slot] = self.rng.gen_f32();
+    }
+
+    fn score(&self, plane: usize, slot: usize) -> f32 {
+        self.scores[plane][slot]
+    }
+}
+
+/// Policy factory by name.
+pub fn make_policy(
+    name: &str,
+    planes: usize,
+    max_slots: usize,
+    seed: u64,
+) -> Option<Box<dyn ImportancePolicy>> {
+    Some(match name {
+        "h2o" => Box::new(H2oPolicy::new(planes, max_slots)),
+        "local" => Box::new(LocalPolicy),
+        "random" => Box::new(RandomPolicy::new(planes, max_slots, seed)),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn h2o_accumulates_and_selects_min() {
+        let mut p = H2oPolicy::new(2, 4);
+        p.init_prefill(0, &[0.5, 0.1, 0.3, 0.1]);
+        p.observe(0, &[0.1, 0.0, 0.8, 0.1]);
+        assert!((p.score(0, 0) - 0.6).abs() < 1e-6);
+        assert!((p.score(0, 2) - 1.1).abs() < 1e-6);
+        // victim among {0,1,2} is slot 1 (0.1)
+        assert_eq!(p.select_victim(0, &[0, 1, 2]), 1);
+        // planes are independent
+        assert_eq!(p.score(1, 0), 0.0);
+    }
+
+    #[test]
+    fn h2o_prefill_seeding_drives_early_victims() {
+        let mut p = H2oPolicy::new(1, 8);
+        p.init_prefill(0, &[0.9, 0.01, 0.5, 0.02, 0.3, 0.02, 0.02, 0.2]);
+        let candidates: Vec<usize> = (0..8).collect();
+        assert_eq!(p.select_victim(0, &candidates), 1);
+    }
+
+    #[test]
+    fn local_prefers_recent() {
+        let mut p = LocalPolicy;
+        assert_eq!(p.select_victim(0, &[3, 7, 1, 5]), 1);
+        assert!(p.score(0, 10) > p.score(0, 2));
+    }
+
+    #[test]
+    fn random_is_deterministic_per_seed() {
+        let mk = |seed| {
+            let mut p = RandomPolicy::new(1, 16, seed);
+            p.init_prefill(0, &vec![0.0; 16]);
+            (0..16).map(|s| p.score(0, s)).collect::<Vec<_>>()
+        };
+        assert_eq!(mk(5), mk(5));
+        assert_ne!(mk(5), mk(6));
+    }
+
+    #[test]
+    fn factory_resolves_names() {
+        for name in ["h2o", "local", "random"] {
+            let p = make_policy(name, 2, 8, 1).unwrap();
+            assert_eq!(p.name(), name);
+        }
+        assert!(make_policy("oracle", 1, 1, 0).is_none()); // lives in the graph
+    }
+
+    #[test]
+    fn default_victim_breaks_ties_by_first() {
+        let mut p = H2oPolicy::new(1, 4); // all scores zero
+        assert_eq!(p.select_victim(0, &[2, 1, 3]), 2);
+    }
+}

@@ -1,0 +1,306 @@
+//! Per-token asymmetric round-to-nearest quantization — paper eq. (1).
+//!
+//! A token's channel vector `x ∈ R^d` is split into groups of `group`
+//! consecutive channels. Per group: `α = (max−min)/(2^N−1)`, `β = min`,
+//! `code = round((x−β)/α) ∈ [0, 2^N−1]`, `x̂ = α·code + β`.
+//!
+//! The paper imposes a group size of **half the attention head dimension**
+//! (§3.2) so a group never straddles the two RoPE-rotated halves of a head —
+//! RoPE duplicates outlier channels across halves, and a group containing
+//! one outlier half but not the other wastes dynamic range.
+//!
+//! Scale/zero metadata is held in f32 here but *stored* (logically and in
+//! the memory accounting) as FP16, matching the paper; [`QuantParams::f16_meta`]
+//! controls whether the dequantized values reflect FP16-rounded metadata.
+
+use super::f16::round_f16;
+use super::Precision;
+
+/// Quantizer configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantParams {
+    pub precision: Precision,
+    /// Channels per scale/zero group. Must divide the vector length.
+    pub group: usize,
+    /// Model FP16 storage of scale/zero metadata (paper-faithful default).
+    pub f16_meta: bool,
+}
+
+impl QuantParams {
+    pub fn new(precision: Precision, group: usize) -> Self {
+        Self {
+            precision,
+            group,
+            f16_meta: true,
+        }
+    }
+
+    /// Number of groups for a vector of length `d`.
+    pub fn groups(&self, d: usize) -> usize {
+        assert!(
+            d % self.group == 0,
+            "group size {} must divide dim {}",
+            self.group,
+            d
+        );
+        d / self.group
+    }
+}
+
+/// A quantized vector: unpacked codes plus per-group scale/zero.
+///
+/// `codes` are kept unpacked (one `u8` per element) at this level; the cache
+/// tier packs them densely via [`super::packing`]. Keeping the two concerns
+/// separate lets the property tests check each invariant independently.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Quantized {
+    pub params: QuantParams,
+    pub codes: Vec<u8>,
+    pub scales: Vec<f32>,
+    pub zeros: Vec<f32>,
+}
+
+impl Quantized {
+    pub fn len(&self) -> usize {
+        self.codes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.codes.is_empty()
+    }
+}
+
+/// Quantize a channel vector. Panics if `group` does not divide `x.len()`.
+pub fn quantize(x: &[f32], params: QuantParams) -> Quantized {
+    assert!(params.precision.is_quantized(), "quantize with fp16 tier");
+    let g = params.group;
+    let n_groups = params.groups(x.len());
+    let max_code = (params.precision.levels() - 1) as f32;
+
+    let mut codes = vec![0u8; x.len()];
+    let mut scales = Vec::with_capacity(n_groups);
+    let mut zeros = Vec::with_capacity(n_groups);
+
+    for gi in 0..n_groups {
+        let chunk = &x[gi * g..(gi + 1) * g];
+        let mut lo = f32::INFINITY;
+        let mut hi = f32::NEG_INFINITY;
+        for &v in chunk {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let mut alpha = (hi - lo) / max_code;
+        let mut beta = lo;
+        if params.f16_meta {
+            alpha = round_f16(alpha);
+            beta = round_f16(beta);
+        }
+        if alpha > 0.0 {
+            let inv = 1.0 / alpha;
+            for (i, &v) in chunk.iter().enumerate() {
+                let c = ((v - beta) * inv).round();
+                codes[gi * g + i] = c.clamp(0.0, max_code) as u8;
+            }
+        }
+        // alpha == 0 (constant group): codes stay 0, dequant = beta.
+        scales.push(alpha);
+        zeros.push(beta);
+    }
+
+    Quantized {
+        params,
+        codes,
+        scales,
+        zeros,
+    }
+}
+
+/// Dequantize back to f32: `x̂ = α·code + β` per group.
+pub fn dequantize(q: &Quantized) -> Vec<f32> {
+    let g = q.params.group;
+    let mut out = Vec::with_capacity(q.codes.len());
+    for (gi, (&alpha, &beta)) in q.scales.iter().zip(&q.zeros).enumerate() {
+        for &c in &q.codes[gi * g..(gi + 1) * g] {
+            out.push(alpha * c as f32 + beta);
+        }
+    }
+    out
+}
+
+/// Worst-case absolute reconstruction error for a given group's scale:
+/// half a quantization step (plus FP16 metadata rounding slop).
+pub fn error_bound(alpha: f32, beta: f32, f16_meta: bool) -> f32 {
+    let meta_slop = if f16_meta {
+        // FP16 relative error 2^-11 on both α (amplified by max code ~ covered
+        // by α itself) and β.
+        (alpha.abs() * 255.0 + beta.abs()) / 2048.0
+    } else {
+        0.0
+    };
+    0.5 * alpha + meta_slop + 1e-6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::{forall, gen_vec_normal, Config};
+
+    fn params(p: Precision, group: usize) -> QuantParams {
+        QuantParams {
+            precision: p,
+            group,
+            f16_meta: false, // exact metadata for the tight error-bound tests
+        }
+    }
+
+    #[test]
+    fn int8_roundtrip_is_tight() {
+        let x: Vec<f32> = (0..64).map(|i| (i as f32 * 0.37).sin() * 3.0).collect();
+        let q = quantize(&x, params(Precision::Int8, 64));
+        let y = dequantize(&q);
+        let alpha = q.scales[0];
+        for (a, b) in x.iter().zip(&y) {
+            assert!((a - b).abs() <= 0.5 * alpha + 1e-6, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn constant_group_is_exact() {
+        let x = vec![2.5f32; 16];
+        let q = quantize(&x, params(Precision::Int2, 8));
+        assert!(q.codes.iter().all(|&c| c == 0));
+        let y = dequantize(&q);
+        assert_eq!(y, x);
+    }
+
+    #[test]
+    fn endpoints_are_exact_codes() {
+        // min maps to code 0, max maps to max code, both reconstruct ~exactly.
+        let x = vec![-1.0f32, 0.1, 0.2, 3.0];
+        let q = quantize(&x, params(Precision::Int4, 4));
+        assert_eq!(q.codes[0], 0);
+        assert_eq!(q.codes[3], 15);
+        let y = dequantize(&q);
+        assert!((y[0] + 1.0).abs() < 1e-6);
+        assert!((y[3] - 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn codes_within_level_budget() {
+        for p in [Precision::Int2, Precision::Int3, Precision::Int4, Precision::Int8] {
+            let x: Vec<f32> = (0..32).map(|i| (i as f32).cos() * 10.0).collect();
+            let q = quantize(&x, params(p, 16));
+            let max = (p.levels() - 1) as u8;
+            assert!(q.codes.iter().all(|&c| c <= max), "{p:?}");
+        }
+    }
+
+    #[test]
+    fn grouping_bounds_error_under_outliers() {
+        // One outlier channel wrecks a single 64-wide group but only one of
+        // eight 8-wide groups — grouped quantization must strictly reduce
+        // total error.
+        let mut x = vec![0.1f32; 64];
+        for (i, v) in x.iter_mut().enumerate() {
+            *v = (i as f32 * 0.7).sin();
+        }
+        x[5] = 40.0; // systematic outlier channel
+        let q_coarse = quantize(&x, params(Precision::Int2, 64));
+        let q_fine = quantize(&x, params(Precision::Int2, 8));
+        let err = |q: &Quantized| -> f32 {
+            dequantize(q)
+                .iter()
+                .zip(&x)
+                .map(|(a, b)| (a - b).abs())
+                .sum()
+        };
+        assert!(
+            err(&q_fine) < err(&q_coarse) * 0.5,
+            "fine {} coarse {}",
+            err(&q_fine),
+            err(&q_coarse)
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "must divide")]
+    fn group_must_divide_dim() {
+        quantize(&[1.0; 10], params(Precision::Int4, 4));
+    }
+
+    #[test]
+    fn property_error_bound_all_precisions() {
+        forall(
+            Config::default().cases(300).name("quant error bound"),
+            |rng| {
+                let p = *rng.choose(&[
+                    Precision::Int2,
+                    Precision::Int3,
+                    Precision::Int4,
+                    Precision::Int8,
+                ]);
+                let group = *rng.choose(&[4usize, 8, 16, 32]);
+                let n_groups = rng.gen_range(1, 4) as usize;
+                let d = group * n_groups;
+                let x = gen_vec_normal(rng, d, 2.0, 0.05);
+                let prm = QuantParams {
+                    precision: p,
+                    group,
+                    f16_meta: rng.gen_bool(0.5),
+                };
+                let q = quantize(&x, prm);
+                let y = dequantize(&q);
+                for gi in 0..n_groups {
+                    let bound = error_bound(q.scales[gi], q.zeros[gi], prm.f16_meta);
+                    for i in gi * group..(gi + 1) * group {
+                        prop_assert!(
+                            (x[i] - y[i]).abs() <= bound,
+                            "err {} > bound {} (prec {:?}, group {})",
+                            (x[i] - y[i]).abs(),
+                            bound,
+                            p,
+                            group
+                        );
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn property_dequant_monotone_in_codes() {
+        // Within a group, a larger code must never dequantize lower.
+        forall(Config::default().cases(100).name("monotone"), |rng| {
+            let x = gen_vec_normal(rng, 16, 1.0, 0.1);
+            let q = quantize(&x, params(Precision::Int3, 16));
+            let y = dequantize(&q);
+            for i in 0..16 {
+                for j in 0..16 {
+                    if q.codes[i] < q.codes[j] {
+                        prop_assert!(y[i] <= y[j] + 1e-6);
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn f16_meta_matches_logical_storage() {
+        // With f16_meta, scales/zeros must be exactly representable in f16.
+        let x: Vec<f32> = (0..32).map(|i| (i as f32 * 1.17).sin() * 5.0).collect();
+        let q = quantize(
+            &x,
+            QuantParams {
+                precision: Precision::Int4,
+                group: 16,
+                f16_meta: true,
+            },
+        );
+        for &s in q.scales.iter().chain(&q.zeros) {
+            assert_eq!(s, round_f16(s), "metadata not f16-representable: {s}");
+        }
+    }
+}

@@ -1,0 +1,223 @@
+//! Dynamic query/key outlier channel balancer — paper eq. (2)–(4).
+//!
+//! Systematic outliers appear in the *same channels* of the queries and keys
+//! throughout a sequence (paper Fig. 5). Since queries stay in floating
+//! point, quantization burden can be shifted from keys onto queries:
+//!
+//! ```text
+//!   b_c = sqrt( max|q_c| / max|k_c| )          (2)  — from the prefill pass
+//!   k̂_c = I(k_c · b_c)                          (3)  — quantize balanced key
+//!   q̂_c = q_c / b_c                             (4)  — balance query to match
+//! ```
+//!
+//! `q̂·k̂ = (q/b)·(k·b) = q·k`, so attention scores are preserved exactly in
+//! infinite precision; in finite precision the balanced key has its outlier
+//! channels shrunk toward the group's typical magnitude, which is what
+//! rescues INT2 (paper Table 2).
+//!
+//! The runtime applies the *inverse* formulation: queries stay untouched and
+//! the dequantized key is divided by `b` inside the fused attention kernel —
+//! mathematically identical (see `python/compile/kernels/mikv_attn.py`) and
+//! it keeps the high-precision tier's scores bit-identical to the
+//! unbalanced path.
+
+/// Per-channel balancer for one (layer, head).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Balancer {
+    /// `b` per channel, length = head dim.
+    pub b: Vec<f32>,
+}
+
+/// Floor on per-channel maxima when forming the ratio; channels that never
+/// activate would otherwise produce 0/0 or huge ratios.
+const EPS: f32 = 1e-6;
+
+impl Balancer {
+    /// Identity balancer (outlier-awareness disabled).
+    pub fn identity(dim: usize) -> Self {
+        Self {
+            b: vec![1.0; dim],
+        }
+    }
+
+    /// Compute from per-channel absolute maxima of queries and keys observed
+    /// during prefill (paper eq. 2).
+    pub fn from_maxima(qmax: &[f32], kmax: &[f32]) -> Self {
+        assert_eq!(qmax.len(), kmax.len());
+        let b = qmax
+            .iter()
+            .zip(kmax)
+            .map(|(&q, &k)| (q.max(EPS) / k.max(EPS)).sqrt())
+            .collect();
+        Self { b }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.b.len()
+    }
+
+    /// Balance a key vector before quantization (eq. 3): `k · b`.
+    pub fn balance_key(&self, k: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(k.len(), self.b.len());
+        k.iter().zip(&self.b).map(|(&v, &b)| v * b).collect()
+    }
+
+    /// Undo the balancing after dequantization: `k̂ / b` (the runtime-side
+    /// inverse formulation described in the module docs).
+    pub fn unbalance_key_into(&self, k: &mut [f32]) {
+        debug_assert_eq!(k.len(), self.b.len());
+        for (v, &b) in k.iter_mut().zip(&self.b) {
+            *v /= b;
+        }
+    }
+
+    /// Balance a query (eq. 4): `q / b`. Only used by the paper-literal
+    /// formulation and the equivalence tests.
+    pub fn balance_query(&self, q: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(q.len(), self.b.len());
+        q.iter().zip(&self.b).map(|(&v, &b)| v / b).collect()
+    }
+
+    /// `1/b` vector, the form shipped to the fused attention HLO graph.
+    pub fn inverse(&self) -> Vec<f32> {
+        self.b.iter().map(|&b| 1.0 / b).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{dequantize, quantize, Precision, QuantParams};
+    use crate::util::prop::{forall, gen_vec_normal, Config};
+    use crate::prop_assert_close;
+
+    fn dot(a: &[f32], b: &[f32]) -> f32 {
+        a.iter().zip(b).map(|(x, y)| x * y).sum()
+    }
+
+    #[test]
+    fn identity_balancer_is_noop() {
+        let b = Balancer::identity(4);
+        let k = vec![1.0, -2.0, 3.0, 0.5];
+        assert_eq!(b.balance_key(&k), k);
+        assert_eq!(b.balance_query(&k), k);
+    }
+
+    #[test]
+    fn from_maxima_formula() {
+        let b = Balancer::from_maxima(&[4.0, 1.0], &[1.0, 4.0]);
+        assert!((b.b[0] - 2.0).abs() < 1e-6);
+        assert!((b.b[1] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_channels_stay_finite() {
+        let b = Balancer::from_maxima(&[0.0, 5.0], &[0.0, 0.0]);
+        assert!(b.b.iter().all(|v| v.is_finite() && *v > 0.0));
+    }
+
+    #[test]
+    fn property_score_invariance_exact() {
+        // (q/b)·(k·b) == q·k in exact arithmetic (up to fp roundoff).
+        forall(Config::default().cases(200).name("balancer invariance"), |rng| {
+            let d = *rng.choose(&[8usize, 16, 32]);
+            let q = gen_vec_normal(rng, d, 1.0, 0.1);
+            let k = gen_vec_normal(rng, d, 1.0, 0.1);
+            let qmax: Vec<f32> = q.iter().map(|v| v.abs() + 0.1).collect();
+            let kmax: Vec<f32> = k.iter().map(|v| v.abs() + 0.1).collect();
+            let bal = Balancer::from_maxima(&qmax, &kmax);
+            let s0 = dot(&q, &k);
+            let s1 = dot(&bal.balance_query(&q), &bal.balance_key(&k));
+            prop_assert_close!(s1, s0, 1e-4, 1e-4);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn property_inverse_formulation_equivalent() {
+        // Runtime form: q · (dequant(k·b)/b)  ==  (q/b) · dequant(k·b).
+        forall(Config::default().cases(200).name("inverse form"), |rng| {
+            let d = 16usize;
+            let q = gen_vec_normal(rng, d, 1.0, 0.05);
+            let k = gen_vec_normal(rng, d, 1.0, 0.05);
+            let bal = Balancer::from_maxima(
+                &q.iter().map(|v| v.abs().max(0.1)).collect::<Vec<_>>(),
+                &k.iter().map(|v| v.abs().max(0.1)).collect::<Vec<_>>(),
+            );
+            let prm = QuantParams::new(Precision::Int2, 8);
+            let kq = quantize(&bal.balance_key(&k), prm);
+            let kdq = dequantize(&kq);
+
+            let s_paper = dot(&bal.balance_query(&q), &kdq);
+            let mut k_runtime = kdq.clone();
+            bal.unbalance_key_into(&mut k_runtime);
+            let s_runtime = dot(&q, &k_runtime);
+            prop_assert_close!(s_runtime, s_paper, 1e-4, 1e-3);
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn balancer_reduces_int2_quant_error_under_outliers() {
+        // The headline §3.2 effect. The balancer equalizes per-channel
+        // magnitudes geometrically: k·b has range sqrt(qmax·kmax). It wins
+        // when the query and key outlier *magnitudes differ per channel* —
+        // key-heavy outlier channels get shrunk before quantization (paper:
+        // "reduce the key outlier magnitudes"), query-heavy channels get
+        // amplified in k so the channels the query amplifies are quantized
+        // more accurately ("promote query outlier awareness").
+        let d = 32usize;
+        let mut rng = crate::util::rng::Pcg32::new(77);
+        let mut worse = 0;
+        let trials = 200;
+        for i in 0..trials {
+            let mut q = gen_vec_normal(&mut rng, d, 1.0, 0.0);
+            let mut k = gen_vec_normal(&mut rng, d, 1.0, 0.0);
+            if i % 2 == 0 {
+                // key-side outliers dominate
+                k[3] *= 30.0;
+                k[17] *= 30.0;
+                q[3] *= 3.0;
+                q[17] *= 3.0;
+            } else {
+                // query-side outliers dominate on different channels
+                q[5] *= 30.0;
+                q[20] *= 30.0;
+                k[9] *= 30.0;
+            }
+            let prm = QuantParams::new(Precision::Int2, 16);
+            let s_true = dot(&q, &k);
+
+            // unbalanced
+            let k_plain = dequantize(&quantize(&k, prm));
+            let err_plain = (dot(&q, &k_plain) - s_true).abs();
+
+            // balanced
+            let bal = Balancer::from_maxima(
+                &q.iter().map(|v| v.abs()).collect::<Vec<_>>(),
+                &k.iter().map(|v| v.abs()).collect::<Vec<_>>(),
+            );
+            let mut k_bal = dequantize(&quantize(&bal.balance_key(&k), prm));
+            bal.unbalance_key_into(&mut k_bal);
+            let err_bal = (dot(&q, &k_bal) - s_true).abs();
+
+            if err_bal > err_plain {
+                worse += 1;
+            }
+        }
+        // Balancing should win in the strong majority of outlier-bearing cases.
+        assert!(
+            worse < trials / 4,
+            "balancer lost {worse}/{trials} outlier cases"
+        );
+    }
+
+    #[test]
+    fn inverse_is_reciprocal() {
+        let bal = Balancer::from_maxima(&[4.0, 9.0], &[1.0, 1.0]);
+        let inv = bal.inverse();
+        for (b, i) in bal.b.iter().zip(&inv) {
+            assert!((b * i - 1.0).abs() < 1e-6);
+        }
+    }
+}

@@ -1,0 +1,164 @@
+//! IEEE 754 binary16 conversion (no `half` crate offline).
+//!
+//! The paper's high-precision tier is FP16; the CPU PJRT runtime computes in
+//! f32, so the cache manager *models* FP16 storage by round-tripping values
+//! through binary16 on admission. Round-to-nearest-even, with proper
+//! subnormal, infinity and NaN handling.
+
+/// Convert f32 → binary16 bits (round-to-nearest-even).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let mant = bits & 0x007F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN
+        return sign | 0x7C00 | if mant != 0 { 0x0200 } else { 0 };
+    }
+
+    // Re-bias: f32 exp-127 → f16 exp-15
+    let unbiased = exp - 127;
+    if unbiased > 15 {
+        return sign | 0x7C00; // overflow → inf
+    }
+    if unbiased >= -14 {
+        // Normal f16. Keep 10 mantissa bits, round to nearest even.
+        let mant16 = mant >> 13;
+        let rem = mant & 0x1FFF;
+        let mut h = sign | (((unbiased + 15) as u16) << 10) | mant16 as u16;
+        if rem > 0x1000 || (rem == 0x1000 && (mant16 & 1) == 1) {
+            h = h.wrapping_add(1); // may carry into exponent — correct behaviour
+        }
+        return h;
+    }
+    if unbiased >= -25 {
+        // Subnormal f16: value = mant16 × 2^-24, so
+        // mant16 = round(full × 2^(unbiased+1) / 2^24) = full >> shift.
+        let shift = (-1 - unbiased) as u32; // 14..=24
+        let full = 0x0080_0000 | mant; // implicit leading 1
+        let mant16 = full >> shift;
+        let rem = full & ((1u32 << shift) - 1);
+        let half = 1u32 << (shift - 1);
+        let mut h = sign | mant16 as u16;
+        if rem > half || (rem == half && (mant16 & 1) == 1) {
+            h = h.wrapping_add(1);
+        }
+        return h;
+    }
+    sign // underflow → signed zero
+}
+
+/// Convert binary16 bits → f32.
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let mant = (h & 0x03FF) as u32;
+    let bits = if exp == 0 {
+        if mant == 0 {
+            sign // zero
+        } else {
+            // subnormal: value = mant × 2^-24; normalize the mantissa.
+            // After `s` left-shifts bit 10 is set and the value equals
+            // 1.f × 2^(-14-s), i.e. biased f32 exponent 113 - s = 114 + e.
+            let mut e = -1i32;
+            let mut m = mant;
+            while m & 0x0400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            m &= 0x03FF;
+            sign | (((114 + e) as u32) << 23) | (m << 13)
+        }
+    } else if exp == 0x1F {
+        sign | 0x7F80_0000 | (mant << 13) // inf / nan
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (mant << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round an f32 through binary16 (the "store in FP16" model).
+pub fn round_f16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+/// Round a slice in place through binary16.
+pub fn round_f16_slice(xs: &mut [f32]) {
+    for x in xs {
+        *x = round_f16(*x);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_values_roundtrip() {
+        for v in [0.0f32, 1.0, -1.0, 0.5, 2.0, -0.25, 1024.0, 65504.0] {
+            assert_eq!(round_f16(v), v, "value {v} should be f16-exact");
+        }
+    }
+
+    #[test]
+    fn known_bit_patterns() {
+        assert_eq!(f32_to_f16_bits(1.0), 0x3C00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xC000);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7BFF); // max finite f16
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f16_bits_to_f32(0x3C00), 1.0);
+        assert_eq!(f16_bits_to_f32(0x7C00), f32::INFINITY);
+    }
+
+    #[test]
+    fn overflow_to_infinity() {
+        assert_eq!(round_f16(1e6), f32::INFINITY);
+        assert_eq!(round_f16(-1e6), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn underflow_to_zero_and_subnormals() {
+        assert_eq!(round_f16(1e-10), 0.0);
+        // smallest f16 subnormal = 2^-24
+        let tiny = 2.0f32.powi(-24);
+        assert_eq!(round_f16(tiny), tiny);
+        // 2^-25 rounds to zero (ties-to-even)
+        assert_eq!(round_f16(2.0f32.powi(-25)), 0.0);
+    }
+
+    #[test]
+    fn nan_preserved() {
+        assert!(round_f16(f32::NAN).is_nan());
+    }
+
+    #[test]
+    fn relative_error_bound_for_normals() {
+        // For f16-normal range, relative error <= 2^-11.
+        let mut seed = 0x1234_5678u32;
+        for _ in 0..10_000 {
+            seed = seed.wrapping_mul(1664525).wrapping_add(1013904223);
+            let v = ((seed >> 8) as f32 / (1 << 24) as f32) * 100.0 - 50.0;
+            if v.abs() < 1e-2 {
+                continue;
+            }
+            let r = round_f16(v);
+            assert!(
+                ((r - v) / v).abs() <= 1.0 / 2048.0 + 1e-7,
+                "v={v} r={r}"
+            );
+        }
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1+2^-10;
+        // nearest-even picks 1.0 (mantissa even).
+        let halfway = 1.0 + 2.0f32.powi(-11);
+        assert_eq!(round_f16(halfway), 1.0);
+        // 1 + 3*2^-11 is halfway between 1+2^-10 and 1+2^-9 → picks 1+2^-9.
+        let halfway2 = 1.0 + 3.0 * 2.0f32.powi(-11);
+        assert_eq!(round_f16(halfway2), 1.0 + 2.0f32.powi(-9));
+    }
+}

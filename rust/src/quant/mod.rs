@@ -1,0 +1,110 @@
+//! Quantization substrate for the mixed-precision KV cache.
+//!
+//! * [`asym`] — per-token asymmetric round-to-nearest quantization, paper
+//!   eq. (1): `x̂ = α·round((x−β)/α) + β` with `α = (max−min)/(2^N−1)`,
+//!   `β = min`, computed per group of channels within a token.
+//! * [`packing`] — dense bit-packing of INT2/3/4/8 codes into `u32` words
+//!   (the physical representation behind the logical memory accounting).
+//! * [`balancer`] — the dynamic query/key outlier channel balancer, paper
+//!   eq. (2)–(4).
+//! * [`f16`] — IEEE binary16 conversion used to model the "FP16" tiers
+//!   faithfully on an f32 runtime.
+//! * [`perchannel`] — Appendix C per-channel key quantization alternative.
+
+pub mod asym;
+pub mod balancer;
+pub mod f16;
+pub mod packing;
+pub mod perchannel;
+
+pub use asym::{dequantize, quantize, QuantParams, Quantized};
+pub use balancer::Balancer;
+
+/// Storage precision of a cache tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// IEEE binary16 — the paper's high-precision tier default.
+    Fp16,
+    Int8,
+    Int4,
+    Int3,
+    Int2,
+}
+
+impl Precision {
+    /// Bits per stored element (payload only; group scale/zero overhead is
+    /// accounted separately, see [`crate::kvcache::accounting`]).
+    pub fn bits(self) -> u32 {
+        match self {
+            Precision::Fp16 => 16,
+            Precision::Int8 => 8,
+            Precision::Int4 => 4,
+            Precision::Int3 => 3,
+            Precision::Int2 => 2,
+        }
+    }
+
+    /// Number of quantization levels for integer precisions.
+    pub fn levels(self) -> u32 {
+        match self {
+            Precision::Fp16 => 0, // not a code-book precision
+            p => 1 << p.bits(),
+        }
+    }
+
+    /// Is this an integer code precision (needs scale/zero metadata)?
+    pub fn is_quantized(self) -> bool {
+        !matches!(self, Precision::Fp16)
+    }
+
+    /// Parse "fp16" | "int8" | "int4" | "int3" | "int2".
+    pub fn parse(s: &str) -> Option<Precision> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "fp16" | "f16" => Precision::Fp16,
+            "int8" | "i8" => Precision::Int8,
+            "int4" | "i4" => Precision::Int4,
+            "int3" | "i3" => Precision::Int3,
+            "int2" | "i2" => Precision::Int2,
+            _ => return None,
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::Fp16 => "fp16",
+            Precision::Int8 => "int8",
+            Precision::Int4 => "int4",
+            Precision::Int3 => "int3",
+            Precision::Int2 => "int2",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_bits_and_levels() {
+        assert_eq!(Precision::Fp16.bits(), 16);
+        assert_eq!(Precision::Int4.bits(), 4);
+        assert_eq!(Precision::Int2.levels(), 4);
+        assert_eq!(Precision::Int3.levels(), 8);
+        assert!(!Precision::Fp16.is_quantized());
+        assert!(Precision::Int2.is_quantized());
+    }
+
+    #[test]
+    fn precision_parse_roundtrip() {
+        for p in [
+            Precision::Fp16,
+            Precision::Int8,
+            Precision::Int4,
+            Precision::Int3,
+            Precision::Int2,
+        ] {
+            assert_eq!(Precision::parse(p.name()), Some(p));
+        }
+        assert_eq!(Precision::parse("int5"), None);
+    }
+}

@@ -1,0 +1,217 @@
+//! Dense bit-packing of quantization codes.
+//!
+//! The retained (low-precision) cache tier stores codes packed back-to-back
+//! in `u32` words — INT3 codes straddle word boundaries, so the packer is a
+//! general little-endian bit stream. This is the physical layout behind the
+//! logical "cache size %" accounting and the unpack is on the decode hot
+//! path (see EXPERIMENTS.md §Perf for the word-at-a-time fast paths).
+
+/// Number of `u32` words needed for `n` codes of `bits` width.
+pub fn packed_words(n: usize, bits: u32) -> usize {
+    ((n as u64 * bits as u64 + 31) / 32) as usize
+}
+
+/// Pack `codes` (each `< 2^bits`) into a little-endian bit stream.
+pub fn pack(codes: &[u8], bits: u32) -> Vec<u32> {
+    assert!((1..=8).contains(&bits), "bits must be in 1..=8");
+    let mask = ((1u32 << bits) - 1) as u8;
+    let mut out = vec![0u32; packed_words(codes.len(), bits)];
+    let mut bitpos = 0usize;
+    for &c in codes {
+        debug_assert!(c & !mask == 0, "code {c} exceeds {bits} bits");
+        let word = bitpos >> 5;
+        let off = (bitpos & 31) as u32;
+        out[word] |= (c as u32) << off;
+        // spill into the next word when the field straddles the boundary
+        if off + bits > 32 {
+            out[word + 1] |= (c as u32) >> (32 - off);
+        }
+        bitpos += bits as usize;
+    }
+    out
+}
+
+/// Unpack `n` codes of `bits` width from a packed stream.
+pub fn unpack(words: &[u32], bits: u32, n: usize) -> Vec<u8> {
+    let mut out = vec![0u8; n];
+    unpack_into(words, bits, &mut out);
+    out
+}
+
+/// Unpack into a caller-provided buffer (hot path — avoids allocation).
+pub fn unpack_into(words: &[u32], bits: u32, out: &mut [u8]) {
+    assert!((1..=8).contains(&bits), "bits must be in 1..=8");
+    debug_assert!(packed_words(out.len(), bits) <= words.len(), "short input");
+    match bits {
+        2 => unpack_pow2::<2, 16>(words, out),
+        4 => unpack_pow2::<4, 8>(words, out),
+        8 => unpack_pow2::<8, 4>(words, out),
+        _ => unpack_generic(words, bits, out),
+    }
+}
+
+/// Fast path for power-of-two widths: fields never straddle word boundaries,
+/// so each word yields exactly `PER` codes with shift/mask only.
+fn unpack_pow2<const BITS: u32, const PER: usize>(words: &[u32], out: &mut [u8]) {
+    let mask = (1u32 << BITS) - 1;
+    let mut i = 0usize;
+    let n = out.len();
+    let full_words = n / PER;
+    for (w, &word) in words.iter().enumerate().take(full_words) {
+        debug_assert_eq!(w * PER, i);
+        let mut v = word;
+        for k in 0..PER {
+            out[i + k] = (v & mask) as u8;
+            v >>= BITS;
+        }
+        i += PER;
+    }
+    // tail
+    if i < n {
+        let mut v = words[full_words];
+        while i < n {
+            out[i] = (v & mask) as u8;
+            v >>= BITS;
+            i += 1;
+        }
+    }
+}
+
+fn unpack_generic(words: &[u32], bits: u32, out: &mut [u8]) {
+    let mask = (1u32 << bits) - 1;
+    let mut bitpos = 0usize;
+    for o in out.iter_mut() {
+        let word = bitpos >> 5;
+        let off = (bitpos & 31) as u32;
+        let mut v = words[word] >> off;
+        if off + bits > 32 {
+            v |= words[word + 1] << (32 - off);
+        }
+        *o = (v & mask) as u8;
+        bitpos += bits as usize;
+    }
+}
+
+/// Unpack codes and dequantize in one fused pass:
+/// `out[i] = zero[i/group] + scale[i/group] * code_i`.
+///
+/// This is the decode hot path's input-assembly kernel — the rust analogue
+/// of the paper's fused weight-only-quant GEMV load stage.
+pub fn unpack_dequant_into(
+    words: &[u32],
+    bits: u32,
+    scales: &[f32],
+    zeros: &[f32],
+    group: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(out.len() % group, 0);
+    debug_assert_eq!(out.len() / group, scales.len());
+    let mask = (1u32 << bits) - 1;
+    let mut bitpos = 0usize;
+    for (gi, chunk) in out.chunks_mut(group).enumerate() {
+        let (alpha, beta) = (scales[gi], zeros[gi]);
+        for o in chunk.iter_mut() {
+            let word = bitpos >> 5;
+            let off = (bitpos & 31) as u32;
+            let mut v = words[word] >> off;
+            if off + bits > 32 {
+                v |= words[word + 1] << (32 - off);
+            }
+            *o = alpha * (v & mask) as f32 + beta;
+            bitpos += bits as usize;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::{forall, Config};
+
+    #[test]
+    fn packed_words_math() {
+        assert_eq!(packed_words(0, 3), 0);
+        assert_eq!(packed_words(10, 3), 1); // 30 bits
+        assert_eq!(packed_words(11, 3), 2); // 33 bits
+        assert_eq!(packed_words(16, 2), 1);
+        assert_eq!(packed_words(17, 2), 2);
+        assert_eq!(packed_words(4, 8), 1);
+    }
+
+    #[test]
+    fn roundtrip_all_widths_exhaustive_small() {
+        for bits in 1..=8u32 {
+            let max = ((1u32 << bits) - 1) as u8;
+            let codes: Vec<u8> = (0..97).map(|i| (i % (max as usize + 1)) as u8).collect();
+            let packed = pack(&codes, bits);
+            let back = unpack(&packed, bits, codes.len());
+            assert_eq!(back, codes, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn int3_straddles_word_boundaries() {
+        // 11 codes * 3 bits = 33 bits: code 10 straddles words 0 and 1.
+        let codes: Vec<u8> = vec![7, 0, 5, 2, 7, 1, 6, 3, 4, 7, 5];
+        let packed = pack(&codes, 3);
+        assert_eq!(packed.len(), 2);
+        assert_eq!(unpack(&packed, 3, 11), codes);
+    }
+
+    #[test]
+    fn property_pack_unpack_identity() {
+        forall(Config::default().cases(400).name("pack identity"), |rng| {
+            let bits = rng.gen_range(1, 8) as u32;
+            let n = rng.gen_range(0, 300) as usize;
+            let max = (1u32 << bits) - 1;
+            let codes: Vec<u8> = (0..n).map(|_| rng.gen_below(max + 1) as u8).collect();
+            let packed = pack(&codes, bits);
+            prop_assert!(packed.len() == packed_words(n, bits));
+            let back = unpack(&packed, bits, n);
+            prop_assert!(back == codes, "mismatch at bits={bits} n={n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fused_unpack_dequant_matches_two_step() {
+        forall(Config::default().cases(200).name("fused dequant"), |rng| {
+            let bits = *rng.choose(&[2u32, 3, 4, 8]);
+            let group = *rng.choose(&[4usize, 8, 16]);
+            let n_groups = rng.gen_range(1, 6) as usize;
+            let n = group * n_groups;
+            let max = (1u32 << bits) - 1;
+            let codes: Vec<u8> = (0..n).map(|_| rng.gen_below(max + 1) as u8).collect();
+            let scales: Vec<f32> = (0..n_groups).map(|_| rng.gen_f32_range(0.01, 2.0)).collect();
+            let zeros: Vec<f32> = (0..n_groups).map(|_| rng.gen_f32_range(-3.0, 3.0)).collect();
+            let packed = pack(&codes, bits);
+
+            let mut fused = vec![0.0f32; n];
+            unpack_dequant_into(&packed, bits, &scales, &zeros, group, &mut fused);
+
+            let unpacked = unpack(&packed, bits, n);
+            for i in 0..n {
+                let expect = scales[i / group] * unpacked[i] as f32 + zeros[i / group];
+                prop_assert!((fused[i] - expect).abs() < 1e-6);
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn empty_input() {
+        assert_eq!(pack(&[], 4), Vec::<u32>::new());
+        assert_eq!(unpack(&[], 4, 0), Vec::<u8>::new());
+    }
+
+    #[test]
+    fn unpack_into_reuses_buffer() {
+        let codes = vec![1u8, 2, 3, 0, 3, 1];
+        let packed = pack(&codes, 2);
+        let mut buf = vec![9u8; 6];
+        unpack_into(&packed, 2, &mut buf);
+        assert_eq!(buf, codes);
+    }
+}

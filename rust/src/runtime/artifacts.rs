@@ -1,0 +1,301 @@
+//! Artifact manifest parsing.
+//!
+//! `artifacts/manifest.json` (written by `python/compile/aot.py`) indexes
+//! every HLO graph with its exact input/output contract, the weight
+//! checkpoints, the golden parity fixtures, and the corpus constants that
+//! `rust/src/eval/corpus.rs` cross-checks against its own definitions.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Element type of a graph input.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I64,
+}
+
+/// One graph input tensor contract.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: Dtype,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered graph.
+#[derive(Debug, Clone)]
+pub struct GraphEntry {
+    pub file: String,
+    pub batch: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<String>,
+}
+
+/// Model dimensions (mirrors `python/compile/model.py::ModelConfig`).
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_q_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub quant_group: usize,
+    pub params: usize,
+}
+
+impl ModelDims {
+    pub fn planes(&self) -> usize {
+        self.n_layers * self.n_kv_heads
+    }
+
+    /// Scale/zero groups per token per head.
+    pub fn n_groups(&self) -> usize {
+        self.d_head / self.quant_group
+    }
+}
+
+/// One model's artifact set.
+#[derive(Debug, Clone)]
+pub struct ModelEntry {
+    pub name: String,
+    pub dims: ModelDims,
+    pub weights_file: String,
+    pub train_steps: i64,
+    pub param_order: Vec<String>,
+    /// Keyed `"{kind}-b{batch}"`, e.g. `"decode_mikv-b1"`.
+    pub graphs: BTreeMap<String, GraphEntry>,
+    /// Bulk quantization graphs keyed by bit width.
+    pub quant_graphs: BTreeMap<u32, String>,
+    /// Golden fixture files keyed by batch size.
+    pub goldens: BTreeMap<usize, String>,
+}
+
+impl ModelEntry {
+    /// Batch sizes a graph kind was compiled for, ascending.
+    pub fn batches(&self, kind: &str) -> Vec<usize> {
+        let prefix = format!("{kind}-b");
+        let mut v: Vec<usize> = self
+            .graphs
+            .keys()
+            .filter_map(|k| k.strip_prefix(&prefix).and_then(|b| b.parse().ok()))
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn graph(&self, kind: &str, batch: usize) -> Option<&GraphEntry> {
+        self.graphs.get(&format!("{kind}-b{batch}"))
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelEntry>,
+    /// Corpus constants for cross-checking `eval::corpus`.
+    pub corpus: BTreeMap<String, i64>,
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> crate::Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("{}: {e} (run `make artifacts` first)", path.display()))?;
+        let root = Json::parse(&text)?;
+
+        let mut corpus = BTreeMap::new();
+        for (k, v) in root.field("corpus")?.as_obj().unwrap().iter() {
+            corpus.insert(k.to_string(), v.as_i64().unwrap_or(0));
+        }
+
+        let mut models = BTreeMap::new();
+        for (name, m) in root.field("models")?.as_obj().unwrap().iter() {
+            models.insert(name.to_string(), parse_model(name, m)?);
+        }
+        Ok(Manifest { dir, models, corpus })
+    }
+
+    pub fn model(&self, name: &str) -> crate::Result<&ModelEntry> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("model '{name}' not in manifest (have: {:?})", self.models.keys()))
+    }
+
+    pub fn path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+fn parse_model(name: &str, m: &Json) -> crate::Result<ModelEntry> {
+    let c = m.field("config")?;
+    let dims = ModelDims {
+        vocab: c.field_i64("vocab")? as usize,
+        d_model: c.field_i64("d_model")? as usize,
+        n_layers: c.field_i64("n_layers")? as usize,
+        n_q_heads: c.field_i64("n_q_heads")? as usize,
+        n_kv_heads: c.field_i64("n_kv_heads")? as usize,
+        d_head: c.field_i64("d_head")? as usize,
+        d_ff: c.field_i64("d_ff")? as usize,
+        max_seq: c.field_i64("max_seq")? as usize,
+        quant_group: c.field_i64("quant_group")? as usize,
+        params: c.field_i64("params")? as usize,
+    };
+
+    let param_order = m
+        .field_arr("param_order")?
+        .iter()
+        .map(|v| v.as_str().unwrap_or_default().to_string())
+        .collect();
+
+    let mut graphs = BTreeMap::new();
+    for (gname, g) in m.field("graphs")?.as_obj().unwrap().iter() {
+        let inputs = g
+            .field_arr("inputs")?
+            .iter()
+            .map(|i| {
+                Ok(TensorSpec {
+                    name: i.field_str("name")?.to_string(),
+                    dtype: match i.field_str("dtype")? {
+                        "f32" => Dtype::F32,
+                        "i64" => Dtype::I64,
+                        other => anyhow::bail!("unknown dtype {other}"),
+                    },
+                    shape: i
+                        .field_arr("shape")?
+                        .iter()
+                        .map(|d| d.as_i64().unwrap_or(0) as usize)
+                        .collect(),
+                })
+            })
+            .collect::<crate::Result<Vec<_>>>()?;
+        graphs.insert(
+            gname.to_string(),
+            GraphEntry {
+                file: g.field_str("file")?.to_string(),
+                batch: g.field_i64("batch")? as usize,
+                inputs,
+                outputs: g
+                    .field_arr("outputs")?
+                    .iter()
+                    .map(|o| o.as_str().unwrap_or_default().to_string())
+                    .collect(),
+            },
+        );
+    }
+
+    let mut quant_graphs = BTreeMap::new();
+    if let Ok(qg) = m.field("quant_graphs") {
+        for (bits, g) in qg.as_obj().unwrap().iter() {
+            if let (Ok(b), Ok(f)) = (bits.parse::<u32>(), g.field_str("file")) {
+                quant_graphs.insert(b, f.to_string());
+            }
+        }
+    }
+
+    let mut goldens = BTreeMap::new();
+    if let Ok(gl) = m.field("goldens") {
+        for (b, f) in gl.as_obj().unwrap().iter() {
+            if let (Ok(b), Some(f)) = (b.parse::<usize>(), f.as_str()) {
+                goldens.insert(b, f.to_string());
+            }
+        }
+    }
+
+    Ok(ModelEntry {
+        name: name.to_string(),
+        dims,
+        weights_file: m.field_str("weights")?.to_string(),
+        train_steps: m.field_i64("train_steps").unwrap_or(0),
+        param_order,
+        graphs,
+        quant_graphs,
+        goldens,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "corpus": {"BOS": 1, "VOCAB": 512},
+      "models": {
+        "cfg-x": {
+          "config": {"vocab": 64, "d_model": 32, "n_layers": 2, "n_q_heads": 4,
+                     "n_kv_heads": 2, "d_head": 8, "d_ff": 64, "max_seq": 16,
+                     "rope_theta": 10000.0, "quant_group": 4, "params": 1000},
+          "weights": "weights-cfg-x.mikv",
+          "train_steps": 5,
+          "param_order": ["embed", "lnf"],
+          "graphs": {
+            "decode_mikv-b1": {
+              "file": "cfg-x-decode_mikv-b1.hlo.txt", "batch": 1,
+              "inputs": [{"name": "w.embed", "dtype": "f32", "shape": [64, 32]},
+                         {"name": "token", "dtype": "i64", "shape": [1]}],
+              "outputs": ["logits"]
+            },
+            "decode_mikv-b4": {
+              "file": "f.hlo.txt", "batch": 4,
+              "inputs": [], "outputs": ["logits"]
+            }
+          },
+          "quant_graphs": {"2": {"file": "q2.hlo.txt", "rows": 16, "dim": 8, "group": 4}},
+          "goldens": {"1": "golden-cfg-x-b1.mikv"}
+        }
+      }
+    }"#;
+
+    fn write_sample(dir: &std::path::Path) {
+        std::fs::write(dir.join("manifest.json"), SAMPLE).unwrap();
+    }
+
+    #[test]
+    fn parses_sample_manifest() {
+        let dir = std::env::temp_dir().join("mikv-manifest-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        write_sample(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.corpus["VOCAB"], 512);
+        let me = m.model("cfg-x").unwrap();
+        assert_eq!(me.dims.planes(), 4);
+        assert_eq!(me.dims.n_groups(), 2);
+        assert_eq!(me.batches("decode_mikv"), vec![1, 4]);
+        let g = me.graph("decode_mikv", 1).unwrap();
+        assert_eq!(g.inputs.len(), 2);
+        assert_eq!(g.inputs[1].dtype, Dtype::I64);
+        assert_eq!(me.quant_graphs[&2], "q2.hlo.txt");
+        assert_eq!(me.goldens[&1], "golden-cfg-x-b1.mikv");
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn missing_manifest_mentions_make() {
+        let err = Manifest::load("/nonexistent-dir").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn tensor_spec_numel() {
+        let t = TensorSpec {
+            name: "x".into(),
+            dtype: Dtype::F32,
+            shape: vec![2, 3, 4],
+        };
+        assert_eq!(t.numel(), 24);
+    }
+}

@@ -1,0 +1,192 @@
+//! PJRT client wrapper: load HLO-text artifacts, compile, execute.
+//!
+//! Follows the `/opt/xla-example/load_hlo` recipe: HLO *text* is the
+//! interchange format (`HloModuleProto::from_text_file` reassigns the
+//! 64-bit instruction ids jax ≥ 0.5 emits, which xla_extension 0.5.1's
+//! proto path rejects), `return_tuple=True` lowering means every execution
+//! returns one tuple literal that is unpacked into per-output literals.
+//!
+//! Weights and other long-lived inputs are uploaded once as device-resident
+//! [`xla::PjRtBuffer`]s and passed by reference via `execute_b` — the
+//! per-step host→device traffic is only the cache/token inputs.
+//!
+//! PJRT handles are not `Send`; the serving design keeps one [`Runtime`]
+//! on a dedicated engine thread (see `coordinator`), with request/response
+//! channels crossing threads instead of buffers.
+
+use super::artifacts::{Dtype, GraphEntry, TensorSpec};
+use xla::{Literal, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+/// Host-side input value for one graph parameter.
+pub enum HostInput<'a> {
+    F32(&'a [f32]),
+    I64(&'a [i64]),
+}
+
+impl<'a> HostInput<'a> {
+    pub fn len(&self) -> usize {
+        match self {
+            HostInput::F32(s) => s.len(),
+            HostInput::I64(s) => s.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn dtype(&self) -> Dtype {
+        match self {
+            HostInput::F32(_) => Dtype::F32,
+            HostInput::I64(_) => Dtype::I64,
+        }
+    }
+}
+
+/// The PJRT runtime (CPU client).
+pub struct Runtime {
+    client: PjRtClient,
+}
+
+impl Runtime {
+    pub fn new() -> crate::Result<Runtime> {
+        let client = PjRtClient::cpu().map_err(anyhow::Error::msg)?;
+        crate::log_debug!(
+            "PJRT client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime { client })
+    }
+
+    /// Load an HLO text file and compile it against this client.
+    pub fn load_executable(
+        &self,
+        path: &std::path::Path,
+        entry: GraphEntry,
+    ) -> crate::Result<Executable> {
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path).map_err(anyhow::Error::msg)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(anyhow::Error::msg)?;
+        crate::log_info!(
+            "compiled {} ({} inputs) in {:.2}s",
+            path.file_name().map(|s| s.to_string_lossy()).unwrap_or_default(),
+            entry.inputs.len(),
+            t0.elapsed().as_secs_f64()
+        );
+        Ok(Executable { exe, entry })
+    }
+
+    /// Upload one host tensor to the device, validating against its spec.
+    pub fn upload(&self, spec: &TensorSpec, value: &HostInput<'_>) -> crate::Result<PjRtBuffer> {
+        anyhow::ensure!(
+            value.dtype() == spec.dtype,
+            "input '{}': dtype mismatch",
+            spec.name
+        );
+        anyhow::ensure!(
+            value.len() == spec.numel(),
+            "input '{}': {} elements, spec {:?} wants {}",
+            spec.name,
+            value.len(),
+            spec.shape,
+            spec.numel()
+        );
+        let buf = match value {
+            HostInput::F32(data) => {
+                self.client
+                    .buffer_from_host_buffer::<f32>(data, &spec.shape, None)
+            }
+            HostInput::I64(data) => {
+                self.client
+                    .buffer_from_host_buffer::<i64>(data, &spec.shape, None)
+            }
+        };
+        buf.map_err(anyhow::Error::msg)
+    }
+
+    /// Upload a raw f32 slice with explicit dims (no spec validation).
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> crate::Result<PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f32>(data, dims, None)
+            .map_err(anyhow::Error::msg)
+    }
+}
+
+/// A compiled graph plus its manifest I/O contract.
+pub struct Executable {
+    exe: PjRtLoadedExecutable,
+    pub entry: GraphEntry,
+}
+
+impl Executable {
+    /// Execute with device-resident buffers; returns one host literal per
+    /// declared output (the lowered tuple is unpacked).
+    pub fn execute(&self, args: &[&PjRtBuffer]) -> crate::Result<Vec<Literal>> {
+        anyhow::ensure!(
+            args.len() == self.entry.inputs.len(),
+            "graph {}: got {} args, expects {}",
+            self.entry.file,
+            args.len(),
+            self.entry.inputs.len()
+        );
+        let outs = self.exe.execute_b(args).map_err(anyhow::Error::msg)?;
+        let tuple = outs[0][0].to_literal_sync().map_err(anyhow::Error::msg)?;
+        let parts = tuple.to_tuple().map_err(anyhow::Error::msg)?;
+        anyhow::ensure!(
+            parts.len() == self.entry.outputs.len(),
+            "graph {}: produced {} outputs, manifest says {}",
+            self.entry.file,
+            parts.len(),
+            self.entry.outputs.len()
+        );
+        Ok(parts)
+    }
+
+    /// Convenience: fetch output literal values as f32 by output name.
+    pub fn output_f32(&self, outputs: &[Literal], name: &str) -> crate::Result<Vec<f32>> {
+        let idx = self
+            .entry
+            .outputs
+            .iter()
+            .position(|o| o == name)
+            .ok_or_else(|| anyhow::anyhow!("graph {} has no output '{name}'", self.entry.file))?;
+        outputs[idx].to_vec::<f32>().map_err(anyhow::Error::msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, dtype: Dtype, shape: &[usize]) -> TensorSpec {
+        TensorSpec {
+            name: name.into(),
+            dtype,
+            shape: shape.to_vec(),
+        }
+    }
+
+    // The full load→compile→execute path is covered by rust/tests/
+    // integration tests against real artifacts; here we test the
+    // validation logic that doesn't need artifacts.
+
+    #[test]
+    fn upload_validates_shape_and_dtype() {
+        let rt = match Runtime::new() {
+            Ok(rt) => rt,
+            Err(_) => return, // no PJRT in this environment — skip
+        };
+        let s = spec("x", Dtype::F32, &[2, 2]);
+        assert!(rt.upload(&s, &HostInput::F32(&[1.0, 2.0, 3.0, 4.0])).is_ok());
+        assert!(rt.upload(&s, &HostInput::F32(&[1.0])).is_err());
+        assert!(rt.upload(&s, &HostInput::I64(&[1, 2, 3, 4])).is_err());
+    }
+
+    #[test]
+    fn host_input_len() {
+        assert_eq!(HostInput::F32(&[0.0; 5]).len(), 5);
+        assert_eq!(HostInput::I64(&[1, 2]).len(), 2);
+    }
+}

@@ -1,0 +1,20 @@
+//! PJRT runtime: loads and executes the AOT artifacts.
+//!
+//! The compile path (`python/compile/aot.py`, run once by `make artifacts`)
+//! leaves behind HLO **text** files plus `manifest.json` and `.mikv` weight
+//! checkpoints; everything here is pure rust on top of the `xla` crate's
+//! PJRT CPU client — Python is never on the request path.
+//!
+//! * [`artifacts`] — manifest parsing: model configs, graph I/O contracts.
+//! * [`weights`] — `.mikv` tensor container reader.
+//! * [`client`] — [`client::Runtime`]: PJRT client + graph loading + typed
+//!   execution (host tensors in, host tensors out, device-resident weight
+//!   buffers reused across steps).
+
+pub mod artifacts;
+pub mod client;
+pub mod weights;
+
+pub use artifacts::{GraphEntry, Manifest, ModelDims, TensorSpec};
+pub use client::{Executable, Runtime};
+pub use weights::Weights;

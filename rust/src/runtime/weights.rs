@@ -1,0 +1,215 @@
+//! `.mikv` tensor container reader (mirrors `python/compile/tensorio.py`).
+//!
+//! Format: `b"MIKV\x01\n"` magic, u64-LE header length, UTF-8 JSON header
+//! (`{"meta": ..., "tensors": [{name, dtype, shape, offset, nbytes}]}`),
+//! then a raw little-endian data blob with 64-byte-aligned tensors.
+
+use crate::tensor::{TensorF32, TensorI64};
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+const MAGIC: &[u8] = b"MIKV\x01\n";
+
+/// A tensor loaded from a `.mikv` file.
+#[derive(Debug, Clone)]
+pub enum AnyTensor {
+    F32(TensorF32),
+    I64(TensorI64),
+}
+
+impl AnyTensor {
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            AnyTensor::F32(t) => t.shape(),
+            AnyTensor::I64(t) => t.shape(),
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&TensorF32> {
+        match self {
+            AnyTensor::F32(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<&TensorI64> {
+        match self {
+            AnyTensor::I64(t) => Some(t),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed `.mikv` file: named tensors (order preserved) + JSON metadata.
+#[derive(Debug)]
+pub struct Weights {
+    pub meta: Json,
+    order: Vec<String>,
+    tensors: BTreeMap<String, AnyTensor>,
+}
+
+impl Weights {
+    pub fn load(path: impl AsRef<Path>) -> crate::Result<Weights> {
+        let path = path.as_ref();
+        let bytes = std::fs::read(path)
+            .map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))?;
+        Self::parse(&bytes).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+    }
+
+    pub fn parse(bytes: &[u8]) -> crate::Result<Weights> {
+        if bytes.len() < MAGIC.len() + 8 || &bytes[..MAGIC.len()] != MAGIC {
+            anyhow::bail!("bad magic (not a .mikv file)");
+        }
+        let mut off = MAGIC.len();
+        let hdrlen = u64::from_le_bytes(bytes[off..off + 8].try_into().unwrap()) as usize;
+        off += 8;
+        let header = std::str::from_utf8(&bytes[off..off + hdrlen])?;
+        let root = Json::parse(header)?;
+        let data = &bytes[off + hdrlen..];
+
+        let mut order = Vec::new();
+        let mut tensors = BTreeMap::new();
+        for e in root.field_arr("tensors")? {
+            let name = e.field_str("name")?.to_string();
+            let shape: Vec<usize> = e
+                .field_arr("shape")?
+                .iter()
+                .map(|d| d.as_i64().unwrap_or(0) as usize)
+                .collect();
+            let t_off = e.field_i64("offset")? as usize;
+            let nbytes = e.field_i64("nbytes")? as usize;
+            if t_off + nbytes > data.len() {
+                anyhow::bail!("tensor '{name}' extends beyond data section");
+            }
+            let raw = &data[t_off..t_off + nbytes];
+            let t = match e.field_str("dtype")? {
+                "f32" => {
+                    let vals: Vec<f32> = raw
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    AnyTensor::F32(TensorF32::from_vec(&shape, vals))
+                }
+                "i64" => {
+                    let vals: Vec<i64> = raw
+                        .chunks_exact(8)
+                        .map(|c| i64::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    AnyTensor::I64(TensorI64::from_vec(&shape, vals))
+                }
+                other => anyhow::bail!("unknown dtype '{other}'"),
+            };
+            order.push(name.clone());
+            tensors.insert(name, t);
+        }
+        Ok(Weights {
+            meta: root.field("meta").cloned().unwrap_or(Json::Null),
+            order,
+            tensors,
+        })
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.order
+    }
+
+    pub fn get(&self, name: &str) -> Option<&AnyTensor> {
+        self.tensors.get(name)
+    }
+
+    pub fn get_f32(&self, name: &str) -> crate::Result<&TensorF32> {
+        self.get(name)
+            .and_then(AnyTensor::as_f32)
+            .ok_or_else(|| anyhow::anyhow!("tensor '{name}' missing or not f32"))
+    }
+
+    pub fn get_i64(&self, name: &str) -> crate::Result<&TensorI64> {
+        self.get(name)
+            .and_then(AnyTensor::as_i64)
+            .ok_or_else(|| anyhow::anyhow!("tensor '{name}' missing or not i64"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a .mikv byte blob in-process (mirrors tensorio.write_tensors).
+    fn build(tensors: &[(&str, &str, Vec<usize>, Vec<u8>)]) -> Vec<u8> {
+        let mut entries = String::from("[");
+        let mut data = Vec::new();
+        for (i, (name, dtype, shape, raw)) in tensors.iter().enumerate() {
+            let pad = (64 - data.len() % 64) % 64;
+            data.extend(std::iter::repeat(0u8).take(pad));
+            let off = data.len();
+            data.extend_from_slice(raw);
+            if i > 0 {
+                entries.push(',');
+            }
+            let shape_s: Vec<String> = shape.iter().map(|d| d.to_string()).collect();
+            entries.push_str(&format!(
+                r#"{{"name":"{name}","dtype":"{dtype}","shape":[{}],"offset":{off},"nbytes":{}}}"#,
+                shape_s.join(","),
+                raw.len()
+            ));
+        }
+        entries.push(']');
+        let header = format!(r#"{{"meta":{{"k":1}},"tensors":{entries}}}"#);
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&(header.len() as u64).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        out.extend_from_slice(&data);
+        out
+    }
+
+    #[test]
+    fn parses_f32_and_i64() {
+        let f: Vec<u8> = [1.5f32, -2.0, 0.25]
+            .iter()
+            .flat_map(|v| v.to_le_bytes())
+            .collect();
+        let i: Vec<u8> = [7i64, -9].iter().flat_map(|v| v.to_le_bytes()).collect();
+        let blob = build(&[
+            ("a", "f32", vec![3], f),
+            ("b", "i64", vec![2], i),
+        ]);
+        let w = Weights::parse(&blob).unwrap();
+        assert_eq!(w.names(), &["a", "b"]);
+        assert_eq!(w.get_f32("a").unwrap().data(), &[1.5, -2.0, 0.25]);
+        assert_eq!(w.get_i64("b").unwrap().data(), &[7, -9]);
+        assert_eq!(w.meta.field_i64("k").unwrap(), 1);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(Weights::parse(b"WRONG!xxxxxxxxxx").is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_bounds_tensor() {
+        let blob = build(&[("a", "f32", vec![100], vec![0u8; 8])]);
+        // claims 100 elements = 400 bytes but only 8 present... the builder
+        // writes nbytes=8, so shape mismatch surfaces at Tensor::from_vec
+        let res = std::panic::catch_unwind(|| Weights::parse(&blob));
+        assert!(res.is_err() || res.unwrap().is_err());
+    }
+
+    #[test]
+    fn typed_getters_check_dtype() {
+        let f: Vec<u8> = 1.0f32.to_le_bytes().to_vec();
+        let blob = build(&[("a", "f32", vec![1], f)]);
+        let w = Weights::parse(&blob).unwrap();
+        assert!(w.get_i64("a").is_err());
+        assert!(w.get_f32("missing").is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! TCP JSON-lines serving front-end.
+//!
+//! * [`proto`] — wire format: one JSON object per line in both directions.
+//! * [`tcp`] — threaded listener: one reader thread per connection
+//!   forwarding requests to the coordinator channel, one writer thread
+//!   delivering responses back; plus a blocking [`tcp::Client`].
+
+pub mod proto;
+pub mod tcp;
+
+pub use proto::{decode_request, encode_response, WireRequest};
+pub use tcp::{serve, Client};

@@ -1,0 +1,182 @@
+//! Wire protocol: JSON-lines request/response.
+//!
+//! Request:
+//! ```json
+//! {"id": 1, "prompt": [1, 17, 230], "max_new": 4,
+//!  "mode": "mikv", "ratio": 0.25, "lo": "int2", "stop": 6}
+//! ```
+//! `mode` ∈ `full` | `oracle` (+`k`) | `mikv` (+`ratio`, `lo`) |
+//! `h2o` (+`ratio`) | `rtn` (+`prec`). Response:
+//! ```json
+//! {"id": 1, "tokens": [230, 231], "ttft_ms": 12.3, "latency_ms": 40.1,
+//!  "cache_pct": 33.2, "error": null}
+//! ```
+
+use crate::coordinator::Response;
+use crate::model::CacheMode;
+use crate::quant::Precision;
+use crate::runtime::ModelDims;
+use crate::util::json::{Json, JsonObj};
+
+/// A parsed wire request (pre-CacheMode resolution).
+#[derive(Debug, Clone)]
+pub struct WireRequest {
+    pub id: u64,
+    pub prompt: Vec<i64>,
+    pub max_new: usize,
+    pub stop: Option<i64>,
+    pub mode: CacheMode,
+}
+
+/// Decode one request line against a model's dimensions.
+pub fn decode_request(line: &str, dims: &ModelDims) -> crate::Result<WireRequest> {
+    let v = Json::parse(line)?;
+    let id = v.field_i64("id")? as u64;
+    let prompt: Vec<i64> = v
+        .field_arr("prompt")?
+        .iter()
+        .map(|t| t.as_i64().unwrap_or(0))
+        .collect();
+    anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+    let max_new = v.field_i64("max_new").unwrap_or(8) as usize;
+    let stop = v.field("stop").ok().and_then(|s| s.as_i64());
+
+    let mode_s = v.field_str("mode").unwrap_or("full");
+    let ratio = v.field_f64("ratio").unwrap_or(0.2);
+    let mode = match mode_s {
+        "full" => CacheMode::Full,
+        "oracle" => CacheMode::Oracle {
+            k: v.field_i64("k").unwrap_or(dims.max_seq as i64 + 1) as usize,
+        },
+        "mikv" => {
+            let lo = Precision::parse(v.field_str("lo").unwrap_or("int2"))
+                .ok_or_else(|| anyhow::anyhow!("bad lo precision"))?;
+            CacheMode::mikv(dims, ratio, lo)
+        }
+        "h2o" => CacheMode::h2o(dims, ratio),
+        "rtn" => {
+            let p = Precision::parse(v.field_str("prec").unwrap_or("int8"))
+                .ok_or_else(|| anyhow::anyhow!("bad rtn precision"))?;
+            CacheMode::rtn(dims, p)
+        }
+        other => anyhow::bail!("unknown mode '{other}'"),
+    };
+    Ok(WireRequest {
+        id,
+        prompt,
+        max_new,
+        stop,
+        mode,
+    })
+}
+
+/// Encode a coordinator response as one JSON line (no trailing newline).
+pub fn encode_response(r: &Response) -> String {
+    let mut o = JsonObj::new();
+    o.set("id", r.id as i64);
+    o.set(
+        "tokens",
+        Json::Arr(r.tokens.iter().map(|&t| Json::Int(t)).collect()),
+    );
+    o.set("ttft_ms", r.metrics.ttft.as_secs_f64() * 1e3);
+    o.set("latency_ms", r.metrics.latency.as_secs_f64() * 1e3);
+    o.set("prompt_tokens", r.metrics.prompt_tokens);
+    o.set("generated_tokens", r.metrics.generated_tokens);
+    o.set("cache_pct", r.metrics.cache_pct);
+    o.set(
+        "error",
+        match &r.error {
+            Some(e) => Json::Str(e.clone()),
+            None => Json::Null,
+        },
+    );
+    Json::Obj(o).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::RequestMetrics;
+    use std::time::Duration;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            vocab: 512,
+            d_model: 256,
+            n_layers: 4,
+            n_q_heads: 8,
+            n_kv_heads: 8,
+            d_head: 32,
+            d_ff: 1024,
+            max_seq: 320,
+            quant_group: 16,
+            params: 0,
+        }
+    }
+
+    #[test]
+    fn decodes_all_modes() {
+        let d = dims();
+        let r = decode_request(r#"{"id":1,"prompt":[1,2],"mode":"full"}"#, &d).unwrap();
+        assert!(matches!(r.mode, CacheMode::Full));
+        let r = decode_request(r#"{"id":2,"prompt":[1],"mode":"oracle","k":16}"#, &d).unwrap();
+        assert!(matches!(r.mode, CacheMode::Oracle { k: 16 }));
+        let r = decode_request(
+            r#"{"id":3,"prompt":[1],"mode":"mikv","ratio":0.25,"lo":"int2","max_new":4,"stop":6}"#,
+            &d,
+        )
+        .unwrap();
+        assert_eq!(r.max_new, 4);
+        assert_eq!(r.stop, Some(6));
+        match r.mode {
+            CacheMode::Mikv { cfg, .. } => {
+                assert!((cfg.importance_ratio - 0.25).abs() < 1e-9);
+                assert_eq!(cfg.lo.precision, Precision::Int2);
+            }
+            _ => panic!("not mikv"),
+        }
+        let r = decode_request(r#"{"id":4,"prompt":[1],"mode":"h2o","ratio":0.5}"#, &d).unwrap();
+        match r.mode {
+            CacheMode::Mikv { cfg, .. } => {
+                assert_eq!(cfg.retention, crate::kvcache::RetentionMode::Evict)
+            }
+            _ => panic!(),
+        }
+        let r = decode_request(r#"{"id":5,"prompt":[1],"mode":"rtn","prec":"int4"}"#, &d).unwrap();
+        match r.mode {
+            CacheMode::Mikv { cfg, .. } => assert_eq!(cfg.lo.precision, Precision::Int4),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn rejects_bad_requests() {
+        let d = dims();
+        assert!(decode_request("not json", &d).is_err());
+        assert!(decode_request(r#"{"id":1,"prompt":[]}"#, &d).is_err());
+        assert!(decode_request(r#"{"id":1,"prompt":[1],"mode":"warp"}"#, &d).is_err());
+        assert!(decode_request(r#"{"prompt":[1]}"#, &d).is_err());
+    }
+
+    #[test]
+    fn response_roundtrip() {
+        let r = Response {
+            id: 9,
+            tokens: vec![3, 1, 4],
+            metrics: RequestMetrics {
+                ttft: Duration::from_millis(5),
+                latency: Duration::from_millis(20),
+                prompt_tokens: 12,
+                generated_tokens: 3,
+                cache_pct: 33.5,
+            },
+            error: None,
+        };
+        let line = encode_response(&r);
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.field_i64("id").unwrap(), 9);
+        assert_eq!(v.field_arr("tokens").unwrap().len(), 3);
+        assert!(v.field("error").unwrap() == &Json::Null);
+        assert!((v.field_f64("cache_pct").unwrap() - 33.5).abs() < 1e-9);
+    }
+}

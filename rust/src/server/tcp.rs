@@ -1,0 +1,150 @@
+//! Threaded TCP front-end over the coordinator.
+//!
+//! One listener thread accepts connections; each connection gets a reader
+//! thread (parse JSON line → forward to the coordinator with a reply
+//! channel) and a writer thread (serialize responses back). The engine
+//! itself stays on the coordinator thread (PJRT handles are not `Send`).
+
+use crate::coordinator::{Request, Response};
+use crate::runtime::ModelDims;
+use crate::server::proto;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+use std::time::Instant;
+
+static CONN_IDS: AtomicU64 = AtomicU64::new(1);
+
+/// Accept-and-serve loop. Blocks the calling thread; spawn it alongside the
+/// coordinator thread. Returns only on listener error.
+pub fn serve(
+    listener: TcpListener,
+    dims: ModelDims,
+    tx: Sender<Request>,
+) -> crate::Result<()> {
+    crate::log_info!("serving on {}", listener.local_addr()?);
+    let dims = Arc::new(dims);
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let tx = tx.clone();
+        let dims = dims.clone();
+        std::thread::spawn(move || {
+            let peer = stream
+                .peer_addr()
+                .map(|a| a.to_string())
+                .unwrap_or_default();
+            if let Err(e) = handle_conn(stream, &dims, tx) {
+                crate::log_debug!("connection {peer} closed: {e}");
+            }
+        });
+    }
+    Ok(())
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    dims: &ModelDims,
+    tx: Sender<Request>,
+) -> crate::Result<()> {
+    let conn_id = CONN_IDS.fetch_add(1, Ordering::Relaxed);
+    let reader = BufReader::new(stream.try_clone()?);
+    let (reply_tx, reply_rx) = std::sync::mpsc::channel::<Response>();
+
+    // Writer thread: deliver responses in completion order.
+    let mut write_half = stream;
+    let writer = std::thread::spawn(move || {
+        for resp in reply_rx {
+            let line = proto::encode_response(&resp);
+            if write_half
+                .write_all(line.as_bytes())
+                .and_then(|_| write_half.write_all(b"\n"))
+                .is_err()
+            {
+                break;
+            }
+        }
+    });
+
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        match proto::decode_request(&line, dims) {
+            Ok(w) => {
+                let req = Request {
+                    // namespace ids per connection so concurrent clients
+                    // don't collide in logs
+                    id: conn_id << 32 | (w.id & 0xFFFF_FFFF),
+                    prompt: w.prompt,
+                    max_new: w.max_new,
+                    stop: w.stop,
+                    mode: w.mode,
+                    submitted_at: Instant::now(),
+                    reply: reply_tx.clone(),
+                };
+                if tx.send(req).is_err() {
+                    anyhow::bail!("coordinator gone");
+                }
+            }
+            Err(e) => {
+                let _ = reply_tx.send(Response::error(0, format!("bad request: {e}")));
+            }
+        }
+    }
+    drop(reply_tx);
+    let _ = writer.join();
+    Ok(())
+}
+
+/// Blocking JSON-lines client (used by examples and the serve bench).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    next_id: u64,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> crate::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        Ok(Client {
+            reader: BufReader::new(stream.try_clone()?),
+            writer: stream,
+            next_id: 1,
+        })
+    }
+
+    /// Send a raw request line (the `id` field is managed by the caller).
+    pub fn send_line(&mut self, line: &str) -> crate::Result<()> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        Ok(())
+    }
+
+    /// Fire a generation request; returns the request id used.
+    pub fn request(
+        &mut self,
+        prompt: &[i64],
+        max_new: usize,
+        mode_json: &str,
+    ) -> crate::Result<u64> {
+        let id = self.next_id;
+        self.next_id += 1;
+        let prompt_s: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+        self.send_line(&format!(
+            r#"{{"id":{id},"prompt":[{}],"max_new":{max_new},{mode_json}}}"#,
+            prompt_s.join(",")
+        ))?;
+        Ok(id)
+    }
+
+    /// Block for the next response line.
+    pub fn recv(&mut self) -> crate::Result<crate::util::json::Json> {
+        let mut line = String::new();
+        let n = self.reader.read_line(&mut line)?;
+        anyhow::ensure!(n > 0, "server closed connection");
+        Ok(crate::util::json::Json::parse(line.trim())?)
+    }
+}

@@ -1,0 +1,252 @@
+//! Minimal row-major host tensor.
+//!
+//! The runtime passes tensors to PJRT as `xla::Literal`s; everything else in
+//! the crate (cache manager, quantizer, eval drivers) works on this plain
+//! host type. Deliberately small: shape + contiguous `Vec<T>`, constructors,
+//! indexing helpers, and a few bulk ops — not an ndarray clone.
+
+use std::fmt;
+
+/// Dense row-major tensor over element type `T`.
+#[derive(Clone, PartialEq)]
+pub struct Tensor<T> {
+    shape: Vec<usize>,
+    data: Vec<T>,
+}
+
+/// f32 tensor — activations, scales, masks.
+pub type TensorF32 = Tensor<f32>;
+/// i64 tensor — token ids, positions (HLO S64).
+pub type TensorI64 = Tensor<i64>;
+/// u8 tensor — packed quantized codes.
+pub type TensorU8 = Tensor<u8>;
+
+impl<T: Clone + Default> Tensor<T> {
+    /// All-default (zero) tensor of the given shape.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self {
+            shape: shape.to_vec(),
+            data: vec![T::default(); n],
+        }
+    }
+}
+
+impl<T> Tensor<T> {
+    /// Wrap an existing buffer. Panics if `data.len() != prod(shape)`.
+    pub fn from_vec(shape: &[usize], data: Vec<T>) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(
+            data.len(),
+            n,
+            "Tensor::from_vec: data len {} != shape {:?} (= {})",
+            data.len(),
+            shape,
+            n
+        );
+        Self {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    /// Scalar (rank-0) tensor.
+    pub fn scalar(v: T) -> Self {
+        Self {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[T] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [T] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<T> {
+        self.data
+    }
+
+    /// Linear offset of a multi-dimensional index.
+    pub fn offset(&self, idx: &[usize]) -> usize {
+        debug_assert_eq!(idx.len(), self.shape.len(), "index rank mismatch");
+        let mut off = 0;
+        for (d, &i) in idx.iter().enumerate() {
+            debug_assert!(i < self.shape[d], "index {i} out of bounds dim {d}");
+            off = off * self.shape[d] + i;
+        }
+        off
+    }
+
+    /// Element access by multi-index.
+    pub fn at(&self, idx: &[usize]) -> &T {
+        &self.data[self.offset(idx)]
+    }
+
+    pub fn at_mut(&mut self, idx: &[usize]) -> &mut T {
+        let off = self.offset(idx);
+        &mut self.data[off]
+    }
+
+    /// Reinterpret the shape (same element count).
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        assert_eq!(n, self.data.len(), "reshape: element count mismatch");
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Contiguous sub-slice along the leading axis: rows `lo..hi`.
+    pub fn slice_rows(&self, lo: usize, hi: usize) -> Tensor<T>
+    where
+        T: Clone,
+    {
+        assert!(self.rank() >= 1 && lo <= hi && hi <= self.shape[0]);
+        let row: usize = self.shape[1..].iter().product();
+        let mut shape = self.shape.clone();
+        shape[0] = hi - lo;
+        Tensor::from_vec(&shape, self.data[lo * row..hi * row].to_vec())
+    }
+
+    /// Map elements producing a new tensor.
+    pub fn map<U>(&self, f: impl Fn(&T) -> U) -> Tensor<U> {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(f).collect(),
+        }
+    }
+}
+
+impl TensorF32 {
+    /// Max |x| over the whole tensor.
+    pub fn abs_max(&self) -> f32 {
+        self.data.iter().fold(0.0, |m, &x| m.max(x.abs()))
+    }
+
+    /// Argmax over the last axis for a rank-2 tensor `[rows, cols]`.
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        assert_eq!(self.rank(), 2, "argmax_rows expects rank-2");
+        let (rows, cols) = (self.shape[0], self.shape[1]);
+        (0..rows)
+            .map(|r| {
+                let row = &self.data[r * cols..(r + 1) * cols];
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                    .map(|(i, _)| i)
+                    .unwrap()
+            })
+            .collect()
+    }
+
+    /// Mean absolute difference against another tensor of the same shape.
+    pub fn mean_abs_diff(&self, other: &TensorF32) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        let s: f64 = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .sum();
+        (s / self.data.len() as f64) as f32
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for Tensor<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)?;
+        if self.data.len() <= 8 {
+            write!(f, " {:?}", self.data)
+        } else {
+            write!(f, " [{:?}, {:?}, ... ({} elems)]", self.data[0], self.data[1], self.data.len())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t = TensorF32::zeros(&[2, 3, 4]);
+        assert_eq!(t.shape(), &[2, 3, 4]);
+        assert_eq!(t.numel(), 24);
+        assert!(t.data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn indexing_row_major() {
+        let t = Tensor::from_vec(&[2, 3], (0..6).collect::<Vec<i64>>());
+        assert_eq!(*t.at(&[0, 0]), 0);
+        assert_eq!(*t.at(&[0, 2]), 2);
+        assert_eq!(*t.at(&[1, 0]), 3);
+        assert_eq!(*t.at(&[1, 2]), 5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_len_mismatch_panics() {
+        let _ = Tensor::from_vec(&[2, 2], vec![1.0f32; 3]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[6], (0..6).collect::<Vec<i64>>()).reshape(&[3, 2]);
+        assert_eq!(*t.at(&[2, 1]), 5);
+    }
+
+    #[test]
+    fn slice_rows_extracts_contiguous_block() {
+        let t = Tensor::from_vec(&[4, 2], (0..8).collect::<Vec<i64>>());
+        let s = t.slice_rows(1, 3);
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.data(), &[2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn argmax_rows_picks_max() {
+        let t = Tensor::from_vec(&[2, 3], vec![0.1, 0.9, 0.3, 2.0, -1.0, 1.5]);
+        assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let t = TensorI64::scalar(7);
+        assert_eq!(t.rank(), 0);
+        assert_eq!(t.numel(), 1);
+        assert_eq!(t.data()[0], 7);
+    }
+
+    #[test]
+    fn map_and_abs_max() {
+        let t = Tensor::from_vec(&[3], vec![-2.0f32, 1.0, 0.5]);
+        assert_eq!(t.abs_max(), 2.0);
+        let u = t.map(|x| x * 2.0);
+        assert_eq!(u.data(), &[-4.0, 2.0, 1.0]);
+    }
+
+    #[test]
+    fn mean_abs_diff_zero_for_identical() {
+        let t = Tensor::from_vec(&[2, 2], vec![1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(t.mean_abs_diff(&t.clone()), 0.0);
+    }
+}

@@ -1,0 +1,195 @@
+//! Tiny CLI argument parser (the offline image has no clap).
+//!
+//! Supports the forms the `mikv` binary and the bench/example drivers use:
+//! `--flag`, `--key value`, `--key=value`, positional arguments, and
+//! subcommands (first positional). Typed getters parse on access and report
+//! readable errors.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Program name (argv[0]).
+    pub program: String,
+    /// `--key value` / `--key=value` options, last occurrence wins.
+    opts: BTreeMap<String, String>,
+    /// Bare `--flag` switches.
+    flags: Vec<String>,
+    /// Positional arguments in order.
+    pub positional: Vec<String>,
+}
+
+/// CLI parse/access error.
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("missing required option --{0}")]
+    Missing(String),
+    #[error("option --{key}: cannot parse '{value}' as {ty}")]
+    BadValue {
+        key: String,
+        value: String,
+        ty: &'static str,
+    },
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding or including argv[0] —
+    /// pass `std::env::args()` directly).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Self {
+        let mut it = argv.into_iter();
+        let program = it.next().unwrap_or_default();
+        let mut args = Args {
+            program,
+            ..Default::default()
+        };
+        let rest: Vec<String> = it.collect();
+        let mut i = 0;
+        while i < rest.len() {
+            let a = &rest[i];
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    args.opts.insert(k.to_string(), v.to_string());
+                } else if i + 1 < rest.len() && !rest[i + 1].starts_with("--") {
+                    args.opts.insert(body.to_string(), rest[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    /// Parse the current process arguments.
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args())
+    }
+
+    /// First positional argument, conventionally the subcommand.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// Is `--name` present as a bare flag (or as `--name true`)?
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+            || self.opts.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    /// String option with default.
+    pub fn get_str(&self, name: &str, default: &str) -> String {
+        self.opts
+            .get(name)
+            .cloned()
+            .unwrap_or_else(|| default.to_string())
+    }
+
+    /// Required string option.
+    pub fn require_str(&self, name: &str) -> Result<String, CliError> {
+        self.opts
+            .get(name)
+            .cloned()
+            .ok_or_else(|| CliError::Missing(name.to_string()))
+    }
+
+    /// Typed option with default.
+    pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError> {
+        match self.opts.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse::<T>().map_err(|_| CliError::BadValue {
+                key: name.to_string(),
+                value: v.clone(),
+                ty: std::any::type_name::<T>(),
+            }),
+        }
+    }
+
+    /// Comma-separated list option, e.g. `--ratios 0.2,0.25,0.5`.
+    pub fn get_list<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        default: &[T],
+    ) -> Result<Vec<T>, CliError>
+    where
+        T: Clone,
+    {
+        match self.opts.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .filter(|s| !s.is_empty())
+                .map(|s| {
+                    s.trim().parse::<T>().map_err(|_| CliError::BadValue {
+                        key: name.to_string(),
+                        value: s.to_string(),
+                        ty: std::any::type_name::<T>(),
+                    })
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Args {
+        let mut v = vec!["prog".to_string()];
+        v.extend(s.split_whitespace().map(|w| w.to_string()));
+        Args::parse(v)
+    }
+
+    #[test]
+    fn parses_key_value_both_forms() {
+        let a = argv("--model cfg-s --steps=100");
+        assert_eq!(a.get_str("model", "x"), "cfg-s");
+        assert_eq!(a.get::<u32>("steps", 0).unwrap(), 100);
+    }
+
+    #[test]
+    fn parses_flags_and_positionals() {
+        let a = argv("serve --verbose --port 9000 extra");
+        assert_eq!(a.subcommand(), Some("serve"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.get::<u16>("port", 0).unwrap(), 9000);
+        assert_eq!(a.positional, vec!["serve", "extra"]);
+    }
+
+    #[test]
+    fn last_occurrence_wins() {
+        let a = argv("--n 1 --n 2");
+        assert_eq!(a.get::<i64>("n", 0).unwrap(), 2);
+    }
+
+    #[test]
+    fn typed_errors() {
+        let a = argv("--n abc");
+        assert!(matches!(
+            a.get::<i64>("n", 0),
+            Err(CliError::BadValue { .. })
+        ));
+        assert!(matches!(a.require_str("missing"), Err(CliError::Missing(_))));
+    }
+
+    #[test]
+    fn list_option() {
+        let a = argv("--ratios 0.2,0.25,0.5");
+        let v = a.get_list::<f64>("ratios", &[]).unwrap();
+        assert_eq!(v, vec![0.2, 0.25, 0.5]);
+        let d = argv("").get_list::<f64>("ratios", &[1.0]).unwrap();
+        assert_eq!(d, vec![1.0]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = argv("");
+        assert_eq!(a.get_str("model", "cfg-s"), "cfg-s");
+        assert_eq!(a.get::<f32>("temp", 1.5).unwrap(), 1.5);
+    }
+}

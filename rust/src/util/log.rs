@@ -1,0 +1,129 @@
+//! Leveled stderr logger with wall-clock timestamps relative to process
+//! start. Controlled by `MIKV_LOG` (error|warn|info|debug|trace) or
+//! programmatically via [`set_level`].
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
+
+/// Log verbosity levels, ordered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+impl Level {
+    fn from_str(s: &str) -> Option<Level> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "error" => Level::Error,
+            "warn" | "warning" => Level::Warn,
+            "info" => Level::Info,
+            "debug" => Level::Debug,
+            "trace" => Level::Trace,
+            _ => return None,
+        })
+    }
+
+    fn tag(self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialised
+static START: OnceLock<Instant> = OnceLock::new();
+
+fn current_level() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    if raw == u8::MAX {
+        let lvl = std::env::var("MIKV_LOG")
+            .ok()
+            .and_then(|s| Level::from_str(&s))
+            .unwrap_or(Level::Info);
+        LEVEL.store(lvl as u8, Ordering::Relaxed);
+        return lvl;
+    }
+    // Safety: only valid discriminants are ever stored.
+    match raw {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// Override the log level programmatically.
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+/// Is `level` currently enabled?
+pub fn enabled(level: Level) -> bool {
+    level <= current_level()
+}
+
+/// Core emit function — use the `log_*!` macros instead.
+pub fn emit(level: Level, module: &str, msg: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let start = START.get_or_init(Instant::now);
+    let t = start.elapsed().as_secs_f64();
+    eprintln!("[{t:9.3}s {} {module}] {msg}", level.tag());
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($fmt:tt)+) => { $crate::util::log::emit($crate::util::log::Level::Error, module_path!(), format_args!($($fmt)+)) };
+}
+#[macro_export]
+macro_rules! log_warn {
+    ($($fmt:tt)+) => { $crate::util::log::emit($crate::util::log::Level::Warn, module_path!(), format_args!($($fmt)+)) };
+}
+#[macro_export]
+macro_rules! log_info {
+    ($($fmt:tt)+) => { $crate::util::log::emit($crate::util::log::Level::Info, module_path!(), format_args!($($fmt)+)) };
+}
+#[macro_export]
+macro_rules! log_debug {
+    ($($fmt:tt)+) => { $crate::util::log::emit($crate::util::log::Level::Debug, module_path!(), format_args!($($fmt)+)) };
+}
+#[macro_export]
+macro_rules! log_trace {
+    ($($fmt:tt)+) => { $crate::util::log::emit($crate::util::log::Level::Trace, module_path!(), format_args!($($fmt)+)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering_and_parsing() {
+        assert!(Level::Error < Level::Trace);
+        assert_eq!(Level::from_str("WARN"), Some(Level::Warn));
+        assert_eq!(Level::from_str("bogus"), None);
+    }
+
+    #[test]
+    fn set_level_gates_enabled() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Trace);
+        assert!(enabled(Level::Trace));
+        // leave a sane default for other tests in the same process
+        set_level(Level::Info);
+    }
+}

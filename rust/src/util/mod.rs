@@ -1,0 +1,9 @@
+//! Substrate utilities built in-tree because the offline image ships no
+//! serde / clap / proptest / rand: a JSON codec, deterministic RNGs, a mini
+//! property-testing harness, a CLI argument parser, and a leveled logger.
+
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod prop;
+pub mod rng;

@@ -1,0 +1,254 @@
+//! Mini property-testing harness (the offline image has no proptest).
+//!
+//! Supports the idioms the test suite needs: run a property over N random
+//! cases drawn from a seeded [`Pcg32`], report the failing seed + case index
+//! on failure so every failure is reproducible, and a lightweight shrinking
+//! pass for integer-vector inputs.
+//!
+//! ```no_run
+//! # // no_run: rustdoc test binaries miss the xla rpath in this image
+//! use mikv::util::prop::{forall, Config};
+//! use mikv::prop_assert;
+//! forall(Config::default().cases(200), |rng| {
+//!     let n = rng.gen_range(0, 64) as usize;
+//!     let xs: Vec<f32> = (0..n).map(|_| rng.gen_normal()).collect();
+//!     let s: f32 = xs.iter().sum();
+//!     prop_assert!(s.is_finite(), "sum must be finite, got {s}");
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::{Pcg32, SplitMix64};
+
+/// Property-run configuration.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Master seed; each case gets an independent child stream.
+    pub seed: u64,
+    /// Name printed on failure.
+    pub name: &'static str,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cases: 100,
+            seed: 0xC0FFEE,
+            name: "property",
+        }
+    }
+}
+
+impl Config {
+    pub fn cases(mut self, n: usize) -> Self {
+        self.cases = n;
+        self
+    }
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+    pub fn name(mut self, n: &'static str) -> Self {
+        self.name = n;
+        self
+    }
+}
+
+/// Outcome of a single property case: `Err(msg)` fails the run.
+pub type CaseResult = Result<(), String>;
+
+/// Assert inside a property body. Returns `Err` instead of panicking so the
+/// harness can report the case seed.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+/// Assert approximate equality of two floats with absolute + relative
+/// tolerance (mirrors `numpy.testing.assert_allclose` semantics).
+#[macro_export]
+macro_rules! prop_assert_close {
+    ($a:expr, $b:expr, $atol:expr, $rtol:expr) => {{
+        let (a, b) = ($a as f64, $b as f64);
+        let tol = $atol as f64 + $rtol as f64 * b.abs();
+        if (a - b).abs() > tol {
+            return Err(format!(
+                "not close: {} vs {} (|diff|={:.3e} > tol={:.3e}) at {}:{}",
+                a,
+                b,
+                (a - b).abs(),
+                tol,
+                file!(),
+                line!()
+            ));
+        }
+    }};
+}
+
+/// Run `body` over `cfg.cases` independent random cases. Panics with the
+/// failing seed + case number on first failure.
+pub fn forall<F>(cfg: Config, mut body: F)
+where
+    F: FnMut(&mut Pcg32) -> CaseResult,
+{
+    let mut splitter = SplitMix64::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let case_seed = splitter.split();
+        let mut rng = Pcg32::new(case_seed);
+        if let Err(msg) = body(&mut rng) {
+            panic!(
+                "property '{}' failed at case {}/{} (master_seed={:#x}, case_seed={:#x}):\n  {}",
+                cfg.name, case, cfg.cases, cfg.seed, case_seed, msg
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but the case body receives the case index too (useful for
+/// size-ramped generation: small cases first, like proptest's sizing).
+pub fn forall_sized<F>(cfg: Config, mut body: F)
+where
+    F: FnMut(&mut Pcg32, usize) -> CaseResult,
+{
+    let mut splitter = SplitMix64::new(cfg.seed);
+    for case in 0..cfg.cases {
+        let case_seed = splitter.split();
+        let mut rng = Pcg32::new(case_seed);
+        if let Err(msg) = body(&mut rng, case) {
+            panic!(
+                "property '{}' failed at case {}/{} (master_seed={:#x}, case_seed={:#x}):\n  {}",
+                cfg.name, case, cfg.cases, cfg.seed, case_seed, msg
+            );
+        }
+    }
+}
+
+// ----------------------------------------------------------------------
+// Common generators
+// ----------------------------------------------------------------------
+
+/// A vector of `n` floats ~ N(0, scale), with occasional injected outliers
+/// when `outlier_p > 0` — matches the Q/K activation structure the paper's
+/// §3.2 analyzes (systematic large-magnitude channels).
+pub fn gen_vec_normal(rng: &mut Pcg32, n: usize, scale: f32, outlier_p: f64) -> Vec<f32> {
+    (0..n)
+        .map(|_| {
+            let v = rng.gen_normal() * scale;
+            if outlier_p > 0.0 && rng.gen_bool(outlier_p) {
+                v * rng.gen_f32_range(8.0, 40.0)
+            } else {
+                v
+            }
+        })
+        .collect()
+}
+
+/// Shrink a failing `Vec<i64>` input: repeatedly try dropping halves and
+/// zeroing elements while `still_fails` holds. Returns the smallest found.
+pub fn shrink_ints<F>(input: Vec<i64>, mut still_fails: F) -> Vec<i64>
+where
+    F: FnMut(&[i64]) -> bool,
+{
+    let mut cur = input;
+    loop {
+        let mut progressed = false;
+        // 1. try removing chunks (halves, quarters, ...)
+        let mut chunk = cur.len() / 2;
+        while chunk >= 1 {
+            let mut i = 0;
+            while i + chunk <= cur.len() {
+                let mut cand = cur.clone();
+                cand.drain(i..i + chunk);
+                if still_fails(&cand) {
+                    cur = cand;
+                    progressed = true;
+                } else {
+                    i += chunk;
+                }
+            }
+            chunk /= 2;
+        }
+        // 2. try shrinking individual values toward zero
+        for i in 0..cur.len() {
+            while cur[i] != 0 {
+                let mut cand = cur.clone();
+                cand[i] /= 2;
+                if still_fails(&cand) {
+                    cur = cand;
+                    progressed = true;
+                } else {
+                    break;
+                }
+            }
+        }
+        if !progressed {
+            return cur;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(Config::default().cases(50).name("trivial"), |rng| {
+            let x = rng.gen_f32();
+            prop_assert!((0.0..1.0).contains(&x));
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must_fail'")]
+    fn forall_reports_failures() {
+        forall(Config::default().cases(10).name("must_fail"), |_rng| {
+            Err("intentional".to_string())
+        });
+    }
+
+    #[test]
+    fn forall_is_deterministic() {
+        // Capture the sequence of generated values across two identical runs.
+        let mut run = || {
+            let mut vals = Vec::new();
+            forall(Config::default().cases(20).seed(99), |rng| {
+                vals.push(rng.next_u32());
+                Ok(())
+            });
+            vals
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn shrinker_finds_minimal_counterexample() {
+        // Property: "no element is >= 100". Failing input has junk + one bad
+        // element; shrinking should isolate something tiny.
+        let input = vec![1, 5, 150, 7, 3, 9, 2];
+        let fails = |xs: &[i64]| xs.iter().any(|&x| x >= 100);
+        let min = shrink_ints(input, fails);
+        assert!(fails(&min));
+        assert!(min.len() == 1, "shrunk to {min:?}");
+    }
+
+    #[test]
+    fn outlier_generator_injects_outliers() {
+        let mut rng = Pcg32::new(5);
+        let v = gen_vec_normal(&mut rng, 4096, 1.0, 0.02);
+        let max = v.iter().fold(0f32, |m, x| m.max(x.abs()));
+        assert!(max > 6.0, "expected injected outliers, max={max}");
+    }
+}

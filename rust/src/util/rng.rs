@@ -1,0 +1,280 @@
+//! Deterministic, dependency-free pseudo-random number generators.
+//!
+//! The offline image ships no `rand` crate, so the crate carries its own
+//! small RNG family: [`SplitMix64`] for seeding/stream-splitting and
+//! [`Pcg32`] (PCG-XSH-RR 64/32) as the general-purpose generator used by the
+//! evaluation workload generators, the property-test harness, and the
+//! benchmark drivers. Everything here is reproducible from a `u64` seed —
+//! every experiment in EXPERIMENTS.md records its seed.
+
+/// SplitMix64: tiny, high-quality 64-bit generator. Primarily used to expand
+/// a user seed into the state/stream parameters of [`Pcg32`] and to derive
+/// independent child seeds (`split`).
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Create a generator from a seed.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next raw 64-bit output.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Derive an independent child seed (used to give each parallel worker /
+    /// each property-test case its own stream).
+    pub fn split(&mut self) -> u64 {
+        self.next_u64()
+    }
+}
+
+/// PCG-XSH-RR 64/32: the workhorse generator.
+///
+/// Small state (128 bits), excellent statistical quality for our purposes
+/// (workload synthesis, property-test case generation, sampling), and
+/// trivially reproducible.
+#[derive(Debug, Clone)]
+pub struct Pcg32 {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6_364_136_223_846_793_005;
+
+impl Pcg32 {
+    /// Seed the generator. `seed` selects the starting point, the stream is
+    /// derived from it via SplitMix64 so two nearby seeds do not share a
+    /// sequence.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let init_state = sm.next_u64();
+        let init_seq = sm.next_u64();
+        let mut rng = Self {
+            state: 0,
+            inc: (init_seq << 1) | 1,
+        };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add(init_state);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    /// Next raw 32-bit output.
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    /// Next raw 64-bit output (two 32-bit draws).
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform integer in `[0, bound)` via Lemire's unbiased method.
+    pub fn gen_below(&mut self, bound: u32) -> u32 {
+        assert!(bound > 0, "gen_below(0)");
+        // Rejection sampling on the multiply-shift trick.
+        let threshold = bound.wrapping_neg() % bound;
+        loop {
+            let r = self.next_u32();
+            let m = (r as u64) * (bound as u64);
+            if (m as u32) >= threshold {
+                return (m >> 32) as u32;
+            }
+        }
+    }
+
+    /// Uniform integer in the inclusive range `[lo, hi]`.
+    pub fn gen_range(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi, "gen_range: lo > hi");
+        let span = (hi - lo) as u64 + 1;
+        if span == 0 {
+            // full u64 range
+            return self.next_u64() as i64;
+        }
+        if span <= u32::MAX as u64 {
+            lo + self.gen_below(span as u32) as i64
+        } else {
+            // 64-bit Lemire
+            let threshold = span.wrapping_neg() % span;
+            loop {
+                let r = self.next_u64();
+                let m = (r as u128) * (span as u128);
+                if (m as u64) >= threshold {
+                    return lo + (m >> 64) as i64;
+                }
+            }
+        }
+    }
+
+    /// Uniform `f32` in `[0, 1)`.
+    pub fn gen_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform `f64` in `[0, 1)`.
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f32` in `[lo, hi)`.
+    pub fn gen_f32_range(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.gen_f32() * (hi - lo)
+    }
+
+    /// Standard normal via Box–Muller (one draw discarded; fine for our use).
+    pub fn gen_normal(&mut self) -> f32 {
+        let u1 = self.gen_f64().max(f64::MIN_POSITIVE);
+        let u2 = self.gen_f64();
+        ((-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()) as f32
+    }
+
+    /// Bernoulli draw with probability `p`.
+    pub fn gen_bool(&mut self, p: f64) -> bool {
+        self.gen_f64() < p
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_below(i as u32 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Uniformly choose one element of a non-empty slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        assert!(!xs.is_empty(), "choose from empty slice");
+        &xs[self.gen_below(xs.len() as u32) as usize]
+    }
+
+    /// Sample `k` distinct indices from `0..n` (k <= n), order randomized.
+    pub fn sample_indices(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "sample_indices: k > n");
+        let mut idx: Vec<usize> = (0..n).collect();
+        self.shuffle(&mut idx);
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_vector() {
+        // Reference values for seed 1234567 (computed from the canonical
+        // SplitMix64 algorithm).
+        let mut sm = SplitMix64::new(1234567);
+        let a = sm.next_u64();
+        let b = sm.next_u64();
+        assert_ne!(a, b);
+        // determinism
+        let mut sm2 = SplitMix64::new(1234567);
+        assert_eq!(sm2.next_u64(), a);
+        assert_eq!(sm2.next_u64(), b);
+    }
+
+    #[test]
+    fn pcg_determinism_and_stream_independence() {
+        let mut a = Pcg32::new(42);
+        let mut b = Pcg32::new(42);
+        let mut c = Pcg32::new(43);
+        let va: Vec<u32> = (0..16).map(|_| a.next_u32()).collect();
+        let vb: Vec<u32> = (0..16).map(|_| b.next_u32()).collect();
+        let vc: Vec<u32> = (0..16).map(|_| c.next_u32()).collect();
+        assert_eq!(va, vb);
+        assert_ne!(va, vc);
+    }
+
+    #[test]
+    fn gen_below_is_in_range_and_covers() {
+        let mut rng = Pcg32::new(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = rng.gen_below(10);
+            assert!(v < 10);
+            seen[v as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues should appear");
+    }
+
+    #[test]
+    fn gen_range_inclusive_bounds() {
+        let mut rng = Pcg32::new(9);
+        let mut hit_lo = false;
+        let mut hit_hi = false;
+        for _ in 0..2000 {
+            let v = rng.gen_range(-3, 3);
+            assert!((-3..=3).contains(&v));
+            hit_lo |= v == -3;
+            hit_hi |= v == 3;
+        }
+        assert!(hit_lo && hit_hi);
+    }
+
+    #[test]
+    fn gen_f32_unit_interval_mean() {
+        let mut rng = Pcg32::new(11);
+        let n = 20_000;
+        let mut sum = 0.0f64;
+        for _ in 0..n {
+            let v = rng.gen_f32();
+            assert!((0.0..1.0).contains(&v));
+            sum += v as f64;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_mean_and_var() {
+        let mut rng = Pcg32::new(13);
+        let n = 50_000;
+        let (mut s, mut s2) = (0.0f64, 0.0f64);
+        for _ in 0..n {
+            let v = rng.gen_normal() as f64;
+            s += v;
+            s2 += v * v;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg32::new(17);
+        let mut xs: Vec<usize> = (0..100).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sample_indices_distinct() {
+        let mut rng = Pcg32::new(19);
+        let idx = rng.sample_indices(50, 20);
+        assert_eq!(idx.len(), 20);
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 20);
+        assert!(sorted.iter().all(|&i| i < 50));
+    }
+}

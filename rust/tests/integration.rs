@@ -1,0 +1,394 @@
+//! Integration tests against real artifacts (`make artifacts` first).
+//!
+//! Covers the full AOT bridge: golden parity (python-jit outputs replayed
+//! bit-close through the rust-loaded executables), engine-level semantic
+//! invariants (MiKV@100% == full cache), and the coordinator loop.
+
+use mikv::coordinator::{Coordinator, CoordinatorConfig, Request, Response};
+use mikv::eval::corpus;
+use mikv::model::{CacheMode, Engine, Session};
+use mikv::quant::Precision;
+use mikv::runtime::client::HostInput;
+use mikv::runtime::{Manifest, Weights};
+use mikv::util::rng::Pcg32;
+use std::sync::mpsc;
+use std::time::Instant;
+
+const ARTIFACTS: &str = env!("CARGO_MANIFEST_DIR");
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(ARTIFACTS).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.json").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+fn close(a: &[f32], b: &[f32], atol: f32, rtol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        let tol = atol + rtol * y.abs();
+        assert!(
+            (x - y).abs() <= tol,
+            "{what}[{i}]: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+/// Replay the golden fixtures through the rust-loaded executables.
+#[test]
+fn golden_parity_all_graphs() {
+    require_artifacts!();
+    let manifest = Manifest::load(artifacts_dir()).unwrap();
+    let entry = manifest.model("cfg-tiny").unwrap();
+    let rt = mikv::runtime::Runtime::new().unwrap();
+
+    let weights = Weights::load(manifest.path(&entry.weights_file)).unwrap();
+    for (&batch, gfile) in &entry.goldens {
+        let golden = Weights::load(manifest.path(gfile)).unwrap();
+        for kind in ["prefill", "decode_mikv", "decode_full"] {
+            let g = entry.graph(kind, batch).unwrap();
+            let exe = rt.load_executable(&manifest.path(&g.file), g.clone()).unwrap();
+
+            // Assemble inputs: weights then the golden "in.*" tensors in
+            // manifest order.
+            let n_w = entry.param_order.len();
+            let mut bufs = Vec::new();
+            for (i, spec) in g.inputs.iter().enumerate() {
+                let host_f32;
+                let host_i64;
+                let input = if i < n_w {
+                    let t = weights.get_f32(&entry.param_order[i]).unwrap();
+                    host_f32 = t.data().to_vec();
+                    HostInput::F32(&host_f32)
+                } else {
+                    let name = format!("{kind}.in.{}", spec.name);
+                    match golden.get(&name) {
+                        Some(mikv::runtime::weights::AnyTensor::F32(t)) => {
+                            host_f32 = t.data().to_vec();
+                            HostInput::F32(&host_f32)
+                        }
+                        Some(mikv::runtime::weights::AnyTensor::I64(t)) => {
+                            host_i64 = t.data().to_vec();
+                            HostInput::I64(&host_i64)
+                        }
+                        None => panic!("golden tensor {name} missing"),
+                    }
+                };
+                bufs.push(rt.upload(spec, &input).unwrap());
+            }
+            let args: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+            let outs = exe.execute(&args).unwrap();
+
+            for out_name in &g.outputs {
+                let got = exe.output_f32(&outs, out_name).unwrap();
+                let want = golden
+                    .get_f32(&format!("{kind}.out.{out_name}"))
+                    .unwrap();
+                close(
+                    &got,
+                    want.data(),
+                    2e-4,
+                    2e-3,
+                    &format!("{kind}-b{batch}.{out_name}"),
+                );
+            }
+        }
+    }
+}
+
+/// MiKV with importance ratio 1.0 (everything hi, FP16) must generate the
+/// same tokens as the exact full cache.
+#[test]
+fn mikv_full_ratio_matches_full_cache() {
+    require_artifacts!();
+    let engine = Engine::load(artifacts_dir(), "cfg-tiny").unwrap();
+    let dims = engine.dims().clone();
+    let mut rng = Pcg32::new(42);
+    for trial in 0..3 {
+        let prompt: Vec<i64> = (0..20)
+            .map(|_| 1 + rng.gen_below(dims.vocab as u32 - 1) as i64)
+            .collect();
+
+        let mut full = Session::new(0, &dims, CacheMode::Full).unwrap();
+        let out_full = engine.generate_greedy(&mut full, &prompt, 8, None).unwrap();
+
+        let mut cfg = mikv::kvcache::CacheConfig::full(
+            dims.n_layers,
+            dims.n_kv_heads,
+            dims.d_head,
+            dims.max_seq,
+        );
+        cfg.importance_ratio = 1.0;
+        let mut mikv = Session::new(
+            1,
+            &dims,
+            CacheMode::Mikv {
+                cfg,
+                policy: "h2o".into(),
+            },
+        )
+        .unwrap();
+        let out_mikv = engine.generate_greedy(&mut mikv, &prompt, 8, None).unwrap();
+        assert_eq!(out_full, out_mikv, "trial {trial}");
+        assert!((mikv.cache.cache_size_pct() - 100.0).abs() < 1e-9);
+    }
+}
+
+/// Oracle with k >= S+1 must equal the full cache exactly.
+#[test]
+fn oracle_full_k_matches_full_cache() {
+    require_artifacts!();
+    let engine = Engine::load(artifacts_dir(), "cfg-tiny").unwrap();
+    let dims = engine.dims().clone();
+    let prompt: Vec<i64> = (1..=16).collect();
+
+    let mut full = Session::new(0, &dims, CacheMode::Full).unwrap();
+    let a = engine.generate_greedy(&mut full, &prompt, 6, None).unwrap();
+    let mut oracle = Session::new(
+        1,
+        &dims,
+        CacheMode::Oracle {
+            k: dims.max_seq + 1,
+        },
+    )
+    .unwrap();
+    let b = engine.generate_greedy(&mut oracle, &prompt, 6, None).unwrap();
+    assert_eq!(a, b);
+}
+
+/// Batched decode (b=2 graph) must agree with two b=1 decodes.
+#[test]
+fn batched_decode_matches_single() {
+    require_artifacts!();
+    let engine = Engine::load(artifacts_dir(), "cfg-tiny").unwrap();
+    let dims = engine.dims().clone();
+    let mut rng = Pcg32::new(7);
+    let prompts: Vec<Vec<i64>> = (0..2)
+        .map(|_| {
+            (0..10 + rng.gen_below(8) as usize)
+                .map(|_| 1 + rng.gen_below(dims.vocab as u32 - 1) as i64)
+                .collect()
+        })
+        .collect();
+
+    // singles
+    let mut singles = Vec::new();
+    for p in &prompts {
+        let mut s = Session::new(0, &dims, CacheMode::mikv(&dims, 0.5, Precision::Int4)).unwrap();
+        singles.push(engine.generate_greedy(&mut s, p, 5, None).unwrap());
+    }
+
+    // batched: prefill both, then decode as a pair every step
+    let mut s0 = Session::new(10, &dims, CacheMode::mikv(&dims, 0.5, Precision::Int4)).unwrap();
+    let mut s1 = Session::new(11, &dims, CacheMode::mikv(&dims, 0.5, Precision::Int4)).unwrap();
+    {
+        let mut group = [&mut s0, &mut s1];
+        engine.prefill(&mut group, &prompts).unwrap();
+    }
+    for _ in 1..5 {
+        let mut group = [&mut s0, &mut s1];
+        let rows = engine.decode_step(&mut group).unwrap();
+        for (sess, row) in group.iter_mut().zip(rows) {
+            let tok = mikv::model::sampler::greedy(&row);
+            sess.last_token = tok;
+            sess.tokens.push(tok);
+        }
+    }
+    assert_eq!(s0.generated(), &singles[0][..]);
+    assert_eq!(s1.generated(), &singles[1][..]);
+}
+
+/// The coordinator serves concurrent mixed-mode requests to completion.
+#[test]
+fn coordinator_serves_mixed_requests() {
+    require_artifacts!();
+    let engine = Engine::load(artifacts_dir(), "cfg-tiny").unwrap();
+    let dims = engine.dims().clone();
+    let (tx, rx) = mpsc::channel::<Request>();
+    let (reply_tx, reply_rx) = mpsc::channel::<Response>();
+
+    let modes = [
+        CacheMode::Full,
+        CacheMode::mikv(&dims, 0.3, Precision::Int2),
+        CacheMode::h2o(&dims, 0.3),
+        CacheMode::Oracle { k: 8 },
+        CacheMode::rtn(&dims, Precision::Int8),
+    ];
+    let mut rng = Pcg32::new(3);
+    for (i, mode) in modes.iter().enumerate() {
+        let prompt: Vec<i64> = (0..12)
+            .map(|_| 1 + rng.gen_below(dims.vocab as u32 - 1) as i64)
+            .collect();
+        tx.send(Request {
+            id: i as u64,
+            prompt,
+            max_new: 4,
+            stop: None,
+            mode: mode.clone(),
+            submitted_at: Instant::now(),
+            reply: reply_tx.clone(),
+        })
+        .unwrap();
+    }
+    drop(tx);
+    drop(reply_tx);
+
+    Coordinator::new(engine, CoordinatorConfig::default()).run(rx);
+
+    let mut responses: Vec<Response> = reply_rx.iter().collect();
+    responses.sort_by_key(|r| r.id);
+    assert_eq!(responses.len(), modes.len());
+    for r in &responses {
+        assert!(r.error.is_none(), "req {} failed: {:?}", r.id, r.error);
+        assert_eq!(r.tokens.len(), 4);
+        assert!(r.metrics.ttft <= r.metrics.latency);
+        assert!(r.metrics.cache_pct > 0.0);
+    }
+}
+
+/// Manifest corpus constants must match the rust corpus module.
+#[test]
+fn corpus_constants_cross_check() {
+    require_artifacts!();
+    let manifest = Manifest::load(artifacts_dir()).unwrap();
+    corpus::check_manifest_constants(&manifest.corpus).unwrap();
+}
+
+/// The bulk quantization graph must match the rust-native quantizer.
+#[test]
+fn quant_graph_matches_native() {
+    require_artifacts!();
+    let manifest = Manifest::load(artifacts_dir()).unwrap();
+    let entry = manifest.model("cfg-tiny").unwrap();
+    let rt = mikv::runtime::Runtime::new().unwrap();
+    let dims = &entry.dims;
+    let (rows, dim, group) = (dims.max_seq, dims.d_head, dims.quant_group);
+
+    for (&bits, file) in &entry.quant_graphs {
+        let prec = match bits {
+            2 => Precision::Int2,
+            3 => Precision::Int3,
+            4 => Precision::Int4,
+            8 => Precision::Int8,
+            _ => continue,
+        };
+        // quant graphs take one [rows, dim] f32 input, return 3 outputs
+        let g = mikv::runtime::GraphEntry {
+            file: file.clone(),
+            batch: 1,
+            inputs: vec![mikv::runtime::TensorSpec {
+                name: "x".into(),
+                dtype: mikv::runtime::artifacts::Dtype::F32,
+                shape: vec![rows, dim],
+            }],
+            outputs: vec!["codes".into(), "scales".into(), "zeros".into()],
+        };
+        let exe = rt.load_executable(&manifest.path(file), g).unwrap();
+
+        let mut rng = Pcg32::new(bits as u64);
+        let x: Vec<f32> = (0..rows * dim).map(|_| rng.gen_normal() * 2.0).collect();
+        let buf = rt.upload_f32(&x, &[rows, dim]).unwrap();
+        let outs = exe.execute(&[&buf]).unwrap();
+        let codes = outs[0].to_vec::<f32>().unwrap();
+        let scales = outs[1].to_vec::<f32>().unwrap();
+        let zeros = outs[2].to_vec::<f32>().unwrap();
+
+        // native per-token quantization must agree
+        let prm = mikv::quant::QuantParams::new(prec, group);
+        let ngroups = dim / group;
+        for r in 0..rows {
+            let q = mikv::quant::quantize(&x[r * dim..(r + 1) * dim], prm);
+            for c in 0..dim {
+                assert_eq!(
+                    q.codes[c] as f32,
+                    codes[r * dim + c],
+                    "bits={bits} row={r} ch={c}"
+                );
+            }
+            for gi in 0..ngroups {
+                let idx = r * ngroups + gi;
+                assert!((q.scales[gi] - scales[idx]).abs() < 1e-6, "scale r={r}");
+                assert!((q.zeros[gi] - zeros[idx]).abs() < 1e-6, "zero r={r}");
+            }
+        }
+    }
+}
+
+/// Full TCP round trip: server + coordinator + client over a real socket.
+#[test]
+fn tcp_server_round_trip() {
+    require_artifacts!();
+    let engine = Engine::load(artifacts_dir(), "cfg-tiny").unwrap();
+    let dims = engine.dims().clone();
+    let (tx, rx) = mpsc::channel::<Request>();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    {
+        let dims = dims.clone();
+        std::thread::spawn(move || {
+            let _ = mikv::server::serve(listener, dims, tx);
+        });
+    }
+
+    // client on a worker thread; coordinator (engine, not Send) on ours
+    let client = std::thread::spawn(move || -> anyhow::Result<Vec<(u64, usize, f64)>> {
+        let mut c = mikv::server::Client::connect(&addr)?;
+        let ids = [
+            c.request(&[1, 5, 9, 13], 3, r#""mode":"full""#)?,
+            c.request(&[2, 6, 10], 3, r#""mode":"mikv","ratio":0.3,"lo":"int4""#)?,
+            c.request(&[3, 7], 2, r#""mode":"h2o","ratio":0.5"#)?,
+        ];
+        let mut out = Vec::new();
+        for _ in &ids {
+            let v = c.recv()?;
+            anyhow::ensure!(v.field("error")? == &mikv::util::json::Json::Null);
+            out.push((
+                v.field_i64("id")? as u64 & 0xFFFF_FFFF,
+                v.field_arr("tokens")?.len(),
+                v.field_f64("cache_pct")?,
+            ));
+        }
+        // bad request must produce an error response, not kill the server
+        c.send_line("{not json")?;
+        let v = c.recv()?;
+        anyhow::ensure!(v.field("error")? != &mikv::util::json::Json::Null);
+        Ok(out)
+    });
+
+    // Run the coordinator until the client is done: poll the join handle
+    // from a watcher that closes the channel path by dropping... simplest:
+    // run in a loop with a deadline on a helper channel.
+    let coord_engine = engine;
+    let handle = std::thread::spawn(move || client.join().unwrap());
+    Coordinator::new(coord_engine, CoordinatorConfig::default()).run_until(rx, || {
+        handle.is_finished()
+    });
+    let results = handle.join().unwrap().unwrap();
+    assert_eq!(results.len(), 3);
+    for (id, n_tokens, cache_pct) in results {
+        assert!(id >= 1 && id <= 3);
+        assert!(n_tokens >= 2);
+        assert!(cache_pct > 0.0);
+    }
+}
+
+/// Error paths: oversized and empty prompts are rejected cleanly.
+#[test]
+fn engine_rejects_bad_prompts() {
+    require_artifacts!();
+    let engine = Engine::load(artifacts_dir(), "cfg-tiny").unwrap();
+    let dims = engine.dims().clone();
+    let too_long = vec![1i64; dims.max_seq + 1];
+    assert!(engine.prefill_raw(&[too_long]).is_err());
+    assert!(engine.prefill_raw(&[vec![]]).is_err());
+}
