@@ -10,7 +10,7 @@
 
 mod common;
 
-use mikv::bench::{fmt_duration, Bencher, Cell, Table};
+use mikv::bench::{fmt_bytes, fmt_duration, Bencher, Cell, Table};
 use mikv::model::{CacheMode, Session};
 use mikv::quant::Precision;
 use mikv::util::cli::Args;
@@ -33,7 +33,7 @@ fn main() {
     let mut t = Table::new(
         "perf_attention",
         "Decode-step latency: mixed-precision vs full cache — §3.4 / §Perf",
-        &["Path", "Batch", "p50", "p99", "tokens/s", "Cache %"],
+        &["Path", "Batch", "p50", "p99", "tokens/s", "Cache %", "Host/session"],
     );
 
     let cases: Vec<(&str, CacheMode)> = vec![
@@ -76,6 +76,7 @@ fn main() {
                 fmt_duration(stats.p99).into(),
                 Cell::F(stats.per_second(batch as f64), 1),
                 Cell::F(sessions[0].cache.cache_size_pct(), 1),
+                fmt_bytes(sessions[0].cache.host_bytes()).into(),
             ]);
         }
     }

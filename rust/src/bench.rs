@@ -277,6 +277,21 @@ impl Table {
     }
 }
 
+/// Format a byte count with KiB/MiB/GiB autoscale (serving benches report
+/// host bytes-per-session with this).
+pub fn fmt_bytes(bytes: usize) -> String {
+    let b = bytes as f64;
+    if b < 1024.0 {
+        format!("{bytes}B")
+    } else if b < 1024.0 * 1024.0 {
+        format!("{:.1}KiB", b / 1024.0)
+    } else if b < 1024.0 * 1024.0 * 1024.0 {
+        format!("{:.1}MiB", b / (1024.0 * 1024.0))
+    } else {
+        format!("{:.2}GiB", b / (1024.0 * 1024.0 * 1024.0))
+    }
+}
+
 /// Format a Duration as a human-readable string with µs/ms/s autoscale.
 pub fn fmt_duration(d: Duration) -> String {
     let us = d.as_secs_f64() * 1e6;
@@ -350,5 +365,13 @@ mod tests {
         assert_eq!(fmt_duration(Duration::from_micros(500)), "500.0µs");
         assert_eq!(fmt_duration(Duration::from_millis(12)), "12.00ms");
         assert_eq!(fmt_duration(Duration::from_secs(2)), "2.000s");
+    }
+
+    #[test]
+    fn fmt_bytes_scales() {
+        assert_eq!(fmt_bytes(512), "512B");
+        assert_eq!(fmt_bytes(2048), "2.0KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.0MiB");
+        assert_eq!(fmt_bytes(5 * 1024 * 1024 * 1024), "5.00GiB");
     }
 }

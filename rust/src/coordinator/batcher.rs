@@ -9,15 +9,20 @@
 //! 3. forms decode batches from the active set, grouped by graph kind
 //!    (MiKV-cache sessions vs full/oracle-cache sessions — different
 //!    executables) and, within the oracle group, by `oracle_k`;
-//! 4. retires finished sessions (budget reached / stop token / cache full)
-//!    and replies on each request's channel.
+//! 4. retires finished sessions (budget reached / stop token / cache full /
+//!    engine failure) and replies on each request's channel.
 //!
 //! Short requests are never stuck behind long ones: batches are re-formed
 //! every step from whatever is active (the "continuous" in continuous
-//! batching, per Orca/vLLM).
+//! batching, per Orca/vLLM). Session cache blocks are checked out of one
+//! shared [`BufferPool`], so a retiring request's allocations are recycled
+//! by the next admit instead of round-tripping the allocator.
 
 use super::request::{Request, RequestMetrics, Response};
+use super::stats::MetricsCollector;
+use crate::kvcache::BufferPool;
 use crate::model::{sampler, CacheMode, Engine, Session};
+use crate::runtime::ModelDims;
 use std::collections::VecDeque;
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
@@ -43,35 +48,88 @@ impl Default for CoordinatorConfig {
     }
 }
 
+/// The engine surface the coordinator drives. The real [`Engine`] needs
+/// compiled artifacts; this seam lets the scheduler loop be exercised (and
+/// its failure handling regression-tested) with stub engines.
+pub trait StepEngine {
+    fn dims(&self) -> &ModelDims;
+
+    /// Prefill the sessions' caches from their prompts; returns last-position
+    /// logits per session.
+    fn prefill(
+        &self,
+        sessions: &mut [&mut Session],
+        prompts: &[Vec<i64>],
+    ) -> crate::Result<Vec<Vec<f32>>>;
+
+    /// One decode step over a homogeneous session group; returns one logits
+    /// row per session.
+    fn decode_step(&self, sessions: &mut [&mut Session]) -> crate::Result<Vec<Vec<f32>>>;
+}
+
+impl StepEngine for Engine {
+    fn dims(&self) -> &ModelDims {
+        Engine::dims(self)
+    }
+
+    fn prefill(
+        &self,
+        sessions: &mut [&mut Session],
+        prompts: &[Vec<i64>],
+    ) -> crate::Result<Vec<Vec<f32>>> {
+        Engine::prefill(self, sessions, prompts)
+    }
+
+    fn decode_step(&self, sessions: &mut [&mut Session]) -> crate::Result<Vec<Vec<f32>>> {
+        Engine::decode_step(self, sessions)
+    }
+}
+
 struct Active {
     req: Request,
     sess: Session,
     prefill_done: Instant,
     generated_budget: usize,
+    /// Set when the engine failed a step for this session; the retire pass
+    /// replies with an error instead of retrying forever.
+    error: Option<String>,
 }
 
 impl Active {
     fn finished(&self, max_seq: usize) -> bool {
         let gen = self.sess.tokens.len() - self.sess.prompt_len;
+        // The next decode appends into slot `seq_len`, which is legal while
+        // `seq_len < max_seq` — retire only once the cache is actually full
+        // (`seq_len == max_seq`), so the last slot is not wasted.
         gen >= self.generated_budget
             || self.req.stop == Some(self.sess.last_token)
-            || self.sess.cache.seq_len() + 1 >= max_seq
+            || self.sess.cache.seq_len() >= max_seq
     }
 }
 
 /// The coordinator. Owns the engine for the lifetime of [`Self::run`].
-pub struct Coordinator {
-    engine: Engine,
+pub struct Coordinator<E: StepEngine = Engine> {
+    engine: E,
     cfg: CoordinatorConfig,
+    pool: BufferPool,
 }
 
-impl Coordinator {
-    pub fn new(engine: Engine, cfg: CoordinatorConfig) -> Self {
-        Self { engine, cfg }
+impl<E: StepEngine> Coordinator<E> {
+    pub fn new(engine: E, cfg: CoordinatorConfig) -> Self {
+        Self {
+            engine,
+            cfg,
+            pool: BufferPool::new(),
+        }
     }
 
-    pub fn engine(&self) -> &Engine {
+    pub fn engine(&self) -> &E {
         &self.engine
+    }
+
+    /// The shared pool session cache blocks are recycled through.
+    pub fn pool(&self) -> &BufferPool {
+        &self.pool
     }
 
     /// Serve until the request channel closes and all work drains.
@@ -85,6 +143,7 @@ impl Coordinator {
     pub fn run_until(&self, rx: Receiver<Request>, stop: impl Fn() -> bool) {
         let mut waiting: VecDeque<Request> = VecDeque::new();
         let mut active: Vec<Active> = Vec::new();
+        let mut collector = MetricsCollector::new();
         let mut closed = false;
 
         while !((closed || stop()) && waiting.is_empty() && active.is_empty()) {
@@ -112,37 +171,69 @@ impl Coordinator {
                 self.prefill_batch(batch, &mut active);
             }
 
+            // 2b. Retire sessions that are already complete after prefill
+            // (`max_new <= 1`, or the prefill-sampled token hit `stop`)
+            // before spending a decode step on them — a decode here would
+            // overshoot the documented token budget by one.
+            self.retire(&mut active, &mut collector);
+
             // 3. One decode step over the active set, grouped by graph.
             if !active.is_empty() {
                 self.decode_round(&mut active);
             }
 
-            // 4. Retire finished sessions.
-            let max_seq = self.engine.dims().max_seq;
-            let mut i = 0;
-            while i < active.len() {
-                if active[i].finished(max_seq) {
-                    let a = active.swap_remove(i);
-                    let tokens = a.sess.generated().to_vec();
-                    let resp = Response {
-                        id: a.req.id,
-                        metrics: RequestMetrics {
+            // 4. Retire finished (or failed) sessions.
+            self.retire(&mut active, &mut collector);
+        }
+        if collector.n_requests() > 0 {
+            let (p50, p99) = collector.latency();
+            crate::log_info!(
+                "coordinator drained: {} requests, latency p50 {p50:?} p99 {p99:?}, \
+                 {:.1} tok/s, host bytes/session mean {:.0} peak {}",
+                collector.n_requests(),
+                collector.throughput(),
+                collector.mean_host_bytes(),
+                collector.peak_host_bytes()
+            );
+        } else {
+            crate::log_info!("coordinator drained, shutting down");
+        }
+    }
+
+    /// Remove finished or failed sessions from `active`, replying on each
+    /// request's channel and recording completed-request metrics.
+    fn retire(&self, active: &mut Vec<Active>, collector: &mut MetricsCollector) {
+        let max_seq = self.engine.dims().max_seq;
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].error.is_some() || active[i].finished(max_seq) {
+                let a = active.swap_remove(i);
+                let resp = match a.error {
+                    Some(msg) => Response::error(a.req.id, msg),
+                    None => {
+                        let tokens = a.sess.generated().to_vec();
+                        let metrics = RequestMetrics {
                             ttft: a.prefill_done - a.req.submitted_at,
                             latency: a.req.submitted_at.elapsed(),
                             prompt_tokens: a.sess.prompt_len,
                             generated_tokens: tokens.len(),
                             cache_pct: a.sess.cache.cache_size_pct(),
-                        },
-                        tokens,
-                        error: None,
-                    };
-                    let _ = a.req.reply.send(resp); // receiver may be gone
-                } else {
-                    i += 1;
-                }
+                            host_bytes: a.sess.cache.host_bytes(),
+                        };
+                        collector.record(&metrics);
+                        Response {
+                            id: a.req.id,
+                            metrics,
+                            tokens,
+                            error: None,
+                        }
+                    }
+                };
+                let _ = a.req.reply.send(resp); // receiver may be gone
+            } else {
+                i += 1;
             }
         }
-        crate::log_info!("coordinator drained, shutting down");
     }
 
     fn prefill_batch(&self, reqs: Vec<Request>, active: &mut Vec<Active>) {
@@ -150,7 +241,21 @@ impl Coordinator {
         let mut sessions = Vec::new();
         let mut oks = Vec::new();
         for req in reqs {
-            match Session::new(req.id, &dims, req.mode.clone()) {
+            // Validate per request BEFORE batching: one bad prompt must not
+            // fail the engine's whole prefill chunk for its co-batched
+            // neighbours.
+            if req.prompt.is_empty() || req.prompt.len() > dims.max_seq {
+                let _ = req.reply.send(Response::error(
+                    req.id,
+                    format!(
+                        "prompt length {} invalid (must be 1..={})",
+                        req.prompt.len(),
+                        dims.max_seq
+                    ),
+                ));
+                continue;
+            }
+            match Session::with_pool(req.id, &dims, req.mode.clone(), &self.pool) {
                 Ok(s) => {
                     sessions.push(s);
                     oks.push(req);
@@ -174,6 +279,7 @@ impl Coordinator {
                         req,
                         sess,
                         prefill_done: now,
+                        error: None,
                     });
                 }
             }
@@ -199,26 +305,40 @@ impl Coordinator {
             groups.entry(key).or_default().push(i);
         }
         for (_, idxs) in groups {
-            // split_at_mut gymnastics: collect raw pointers safely via
-            // partition in index order (indices are distinct).
-            let mut refs: Vec<&mut Session> = Vec::with_capacity(idxs.len());
-            // SAFETY: idxs are unique indices into `active`; we create
-            // non-overlapping &mut borrows.
-            unsafe {
-                let base = active.as_mut_ptr();
-                for &i in &idxs {
-                    refs.push(&mut (*base.add(i)).sess);
-                }
-            }
-            match self.engine.decode_step(&mut refs) {
-                Ok(rows) => {
-                    for (sess, row) in refs.iter_mut().zip(rows) {
-                        let tok = sampler::greedy(&row);
-                        sess.last_token = tok;
-                        sess.tokens.push(tok);
+            // A failed group is marked (not silently retried): the sessions
+            // would otherwise stay active and be re-submitted to the same
+            // failing graph every iteration — a livelock. The retire pass
+            // replies with an error Response for each.
+            let group_err: Option<String> = {
+                // split_at_mut gymnastics: collect raw pointers safely via
+                // partition in index order (indices are distinct).
+                let mut refs: Vec<&mut Session> = Vec::with_capacity(idxs.len());
+                // SAFETY: idxs are unique indices into `active`; we create
+                // non-overlapping &mut borrows, dropped before `active` is
+                // touched again below.
+                unsafe {
+                    let base = active.as_mut_ptr();
+                    for &i in &idxs {
+                        refs.push(&mut (*base.add(i)).sess);
                     }
                 }
-                Err(e) => crate::log_error!("decode failed: {e}"),
+                match self.engine.decode_step(&mut refs) {
+                    Ok(rows) => {
+                        for (sess, row) in refs.iter_mut().zip(rows) {
+                            let tok = sampler::greedy(&row);
+                            sess.last_token = tok;
+                            sess.tokens.push(tok);
+                        }
+                        None
+                    }
+                    Err(e) => Some(e.to_string()),
+                }
+            };
+            if let Some(msg) = group_err {
+                crate::log_error!("decode failed: {msg}; retiring {} session(s)", idxs.len());
+                for &i in &idxs {
+                    active[i].error = Some(msg.clone());
+                }
             }
         }
     }
@@ -227,6 +347,8 @@ impl Coordinator {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::model::SessionCache;
+    use std::sync::mpsc;
 
     #[test]
     fn config_defaults_sane() {
@@ -234,6 +356,234 @@ mod tests {
         assert!(c.max_active >= c.prefill_chunk);
         assert!(c.idle_poll > Duration::ZERO);
     }
-    // The full coordinator loop is exercised by rust/tests/ integration
-    // tests with real artifacts and by examples/serve_e2e.rs.
+
+    fn test_dims() -> ModelDims {
+        ModelDims {
+            vocab: 16,
+            d_model: 16,
+            n_layers: 2,
+            n_q_heads: 2,
+            n_kv_heads: 2,
+            d_head: 4,
+            d_ff: 32,
+            max_seq: 8,
+            quant_group: 2,
+            params: 0,
+        }
+    }
+
+    /// Stub engine: prefill fills the (Full) cache with zeros; decode either
+    /// appends a constant token or fails, per `fail_decode`.
+    struct StubEngine {
+        dims: ModelDims,
+        fail_decode: bool,
+    }
+
+    impl StubEngine {
+        fn new(fail_decode: bool) -> Self {
+            Self {
+                dims: test_dims(),
+                fail_decode,
+            }
+        }
+    }
+
+    impl StepEngine for StubEngine {
+        fn dims(&self) -> &ModelDims {
+            &self.dims
+        }
+
+        fn prefill(
+            &self,
+            sessions: &mut [&mut Session],
+            prompts: &[Vec<i64>],
+        ) -> crate::Result<Vec<Vec<f32>>> {
+            let planes = self.dims.planes();
+            let d = self.dims.d_head;
+            for (sess, prompt) in sessions.iter_mut().zip(prompts) {
+                sess.tokens = prompt.clone();
+                sess.prompt_len = prompt.len();
+                let kv = vec![0.0f32; planes * prompt.len() * d];
+                match &mut sess.cache {
+                    SessionCache::Full(f) => f.ingest_prefill(prompt.len(), &kv, &kv),
+                    SessionCache::Mikv(_) => anyhow::bail!("stub only prefills Full sessions"),
+                }
+                sess.last_token = 1;
+                sess.tokens.push(1);
+            }
+            Ok(vec![vec![0.0; self.dims.vocab]; sessions.len()])
+        }
+
+        fn decode_step(&self, sessions: &mut [&mut Session]) -> crate::Result<Vec<Vec<f32>>> {
+            anyhow::ensure!(!self.fail_decode, "injected decode failure");
+            let planes = self.dims.planes();
+            let (d, s) = (self.dims.d_head, self.dims.max_seq);
+            let kv = vec![0.0f32; planes * d];
+            let attn_prev = vec![0.0f32; planes * s];
+            let attn_self = vec![0.0f32; planes];
+            let mut rows = Vec::with_capacity(sessions.len());
+            for sess in sessions.iter_mut() {
+                sess.ingest_step(&kv, &kv, &attn_prev, &attn_self);
+                let mut logits = vec![0.0f32; self.dims.vocab];
+                logits[2] = 1.0;
+                rows.push(logits);
+            }
+            Ok(rows)
+        }
+    }
+
+    fn request(id: u64, prompt_len: usize, max_new: usize, reply: super::super::request::Reply) -> Request {
+        Request {
+            id,
+            prompt: vec![1; prompt_len],
+            max_new,
+            stop: None,
+            mode: CacheMode::Full,
+            submitted_at: Instant::now(),
+            reply,
+        }
+    }
+
+    /// Regression: a decode failure must retire the group with an error
+    /// Response instead of retrying it forever (the seed livelock).
+    #[test]
+    fn decode_failure_retires_sessions_with_error() {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (reply_tx, reply_rx) = mpsc::channel::<Response>();
+        tx.send(request(7, 3, 4, reply_tx.clone())).unwrap();
+        drop(tx);
+        drop(reply_tx);
+
+        // This call must terminate; before the fix it spun forever
+        // re-submitting the failing group.
+        Coordinator::new(StubEngine::new(true), CoordinatorConfig::default()).run(rx);
+
+        let resp = reply_rx.recv().expect("a response must be delivered");
+        assert_eq!(resp.id, 7);
+        let err = resp.error.expect("failure must surface as an error");
+        assert!(err.contains("injected decode failure"), "got: {err}");
+        assert!(reply_rx.recv().is_err(), "exactly one response");
+    }
+
+    /// `max_new = 1` is satisfied by the prefill-sampled token alone: the
+    /// session must retire before any decode step. Proven with the failing
+    /// engine — if a decode were attempted, the response would be an error.
+    #[test]
+    fn budget_of_one_retires_after_prefill_without_decoding() {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (reply_tx, reply_rx) = mpsc::channel::<Response>();
+        tx.send(request(9, 3, 1, reply_tx.clone())).unwrap();
+        drop(tx);
+        drop(reply_tx);
+
+        Coordinator::new(StubEngine::new(true), CoordinatorConfig::default()).run(rx);
+
+        let resp = reply_rx.recv().unwrap();
+        assert!(resp.error.is_none(), "no decode must run: {:?}", resp.error);
+        assert_eq!(resp.tokens.len(), 1, "exactly the prefill token");
+    }
+
+    /// An oversized prompt is rejected per-request; co-batched valid
+    /// requests still complete (no chunk-wide blast radius).
+    #[test]
+    fn oversized_prompt_does_not_fail_its_batch_neighbours() {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (reply_tx, reply_rx) = mpsc::channel::<Response>();
+        tx.send(request(1, 9, 2, reply_tx.clone())).unwrap(); // > max_seq = 8
+        tx.send(request(2, 3, 2, reply_tx.clone())).unwrap();
+        drop(tx);
+        drop(reply_tx);
+
+        Coordinator::new(StubEngine::new(false), CoordinatorConfig::default()).run(rx);
+
+        let mut resps: Vec<Response> = reply_rx.iter().collect();
+        resps.sort_by_key(|r| r.id);
+        assert_eq!(resps.len(), 2);
+        let err = resps[0].error.as_deref().expect("oversized prompt rejected");
+        assert!(err.contains("prompt length 9"), "got: {err}");
+        assert!(resps[1].error.is_none(), "neighbour must succeed");
+        assert_eq!(resps[1].tokens.len(), 2);
+    }
+
+    /// Happy path through the real scheduler loop with a stub engine.
+    #[test]
+    fn coordinator_completes_requests_with_stub_engine() {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (reply_tx, reply_rx) = mpsc::channel::<Response>();
+        for id in 0..3u64 {
+            tx.send(request(id, 3, 2, reply_tx.clone())).unwrap();
+        }
+        drop(tx);
+        drop(reply_tx);
+
+        Coordinator::new(StubEngine::new(false), CoordinatorConfig::default()).run(rx);
+
+        let mut resps: Vec<Response> = reply_rx.iter().collect();
+        resps.sort_by_key(|r| r.id);
+        assert_eq!(resps.len(), 3);
+        for r in &resps {
+            assert!(r.error.is_none());
+            assert_eq!(r.tokens.len(), 2);
+            assert!(r.metrics.host_bytes > 0);
+        }
+    }
+
+    /// Regression for the retire off-by-one: with max_seq = 8 and a 5-token
+    /// prompt, decoding may legally fill slots 5, 6 AND 7 — the session
+    /// retires at seq_len == 8, not one token early.
+    #[test]
+    fn last_cache_slot_is_usable() {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (reply_tx, reply_rx) = mpsc::channel::<Response>();
+        // budget far above what the cache allows → cache capacity binds
+        tx.send(request(1, 5, 100, reply_tx.clone())).unwrap();
+        drop(tx);
+        drop(reply_tx);
+
+        Coordinator::new(StubEngine::new(false), CoordinatorConfig::default()).run(rx);
+
+        let resp = reply_rx.recv().unwrap();
+        assert!(resp.error.is_none());
+        // prefill contributes 1 token; decodes fill slots 5..8 → 3 more.
+        assert_eq!(
+            resp.tokens.len(),
+            4,
+            "the last legal slot must be used (seed retired one token early)"
+        );
+    }
+
+    /// Direct unit check of the retire predicate.
+    #[test]
+    fn finished_uses_the_full_cache_capacity() {
+        let dims = test_dims();
+        let (reply_tx, _reply_rx) = mpsc::channel::<Response>();
+        let mut sess = Session::new(1, &dims, CacheMode::Full).unwrap();
+        let planes = dims.planes();
+        let t = 7; // one below max_seq = 8
+        let kv = vec![0.0f32; planes * t * dims.d_head];
+        match &mut sess.cache {
+            SessionCache::Full(f) => f.ingest_prefill(t, &kv, &kv),
+            _ => unreachable!(),
+        }
+        sess.prompt_len = t;
+        sess.tokens = vec![1; t + 1];
+        sess.last_token = 1;
+        let mut a = Active {
+            req: request(1, t, 100, reply_tx),
+            sess,
+            prefill_done: Instant::now(),
+            generated_budget: 100,
+            error: None,
+        };
+        assert!(
+            !a.finished(dims.max_seq),
+            "seq_len = 7 of 8: one decode still fits"
+        );
+        let kv1 = vec![0.0f32; planes * dims.d_head];
+        match &mut a.sess.cache {
+            SessionCache::Full(f) => f.append(&kv1, &kv1),
+            _ => unreachable!(),
+        }
+        assert!(a.finished(dims.max_seq), "seq_len = 8 of 8: full");
+    }
 }

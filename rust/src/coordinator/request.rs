@@ -31,6 +31,9 @@ pub struct RequestMetrics {
     pub generated_tokens: usize,
     /// Logical cache size at completion (% of full FP16).
     pub cache_pct: f64,
+    /// Host bytes the session's cache pinned at completion (pooled shadow
+    /// blocks + tier storage) — the bytes-per-session serving metric.
+    pub host_bytes: usize,
 }
 
 /// A completed generation.
@@ -52,6 +55,7 @@ impl Response {
                 prompt_tokens: 0,
                 generated_tokens: 0,
                 cache_pct: 0.0,
+                host_bytes: 0,
             },
             error: Some(msg.into()),
         }

@@ -12,6 +12,7 @@ pub struct MetricsCollector {
     latencies: Vec<Duration>,
     prompt_tokens: usize,
     generated_tokens: usize,
+    host_bytes: Vec<usize>,
 }
 
 impl Default for MetricsCollector {
@@ -28,6 +29,7 @@ impl MetricsCollector {
             latencies: Vec::new(),
             prompt_tokens: 0,
             generated_tokens: 0,
+            host_bytes: Vec::new(),
         }
     }
 
@@ -36,6 +38,7 @@ impl MetricsCollector {
         self.latencies.push(m.latency);
         self.prompt_tokens += m.prompt_tokens;
         self.generated_tokens += m.generated_tokens;
+        self.host_bytes.push(m.host_bytes);
     }
 
     pub fn n_requests(&self) -> usize {
@@ -71,6 +74,21 @@ impl MetricsCollector {
     pub fn generated_tokens(&self) -> usize {
         self.generated_tokens
     }
+
+    /// Mean host cache bytes per completed session — the number the pooled,
+    /// length-aware cache layout is supposed to keep proportional to
+    /// occupancy rather than `max_seq`.
+    pub fn mean_host_bytes(&self) -> f64 {
+        if self.host_bytes.is_empty() {
+            return 0.0;
+        }
+        self.host_bytes.iter().sum::<usize>() as f64 / self.host_bytes.len() as f64
+    }
+
+    /// Largest host cache footprint any completed session reached.
+    pub fn peak_host_bytes(&self) -> usize {
+        self.host_bytes.iter().copied().max().unwrap_or(0)
+    }
 }
 
 #[cfg(test)]
@@ -84,6 +102,7 @@ mod tests {
             prompt_tokens: 10,
             generated_tokens: 5,
             cache_pct: 50.0,
+            host_bytes: 1 << 20,
         }
     }
 
@@ -109,5 +128,19 @@ mod tests {
         let c = MetricsCollector::new();
         assert_eq!(c.ttft().0, Duration::ZERO);
         assert_eq!(c.n_requests(), 0);
+        assert_eq!(c.mean_host_bytes(), 0.0);
+        assert_eq!(c.peak_host_bytes(), 0);
+    }
+
+    #[test]
+    fn host_bytes_mean_and_peak() {
+        let mut c = MetricsCollector::new();
+        let mut m = metrics(1, 2);
+        m.host_bytes = 100;
+        c.record(&m);
+        m.host_bytes = 300;
+        c.record(&m);
+        assert_eq!(c.mean_host_bytes(), 200.0);
+        assert_eq!(c.peak_host_bytes(), 300);
     }
 }

@@ -60,6 +60,39 @@ pub fn cache_size_pct(cfg: &CacheConfig, occ: &Occupancy) -> f64 {
     100.0 * logical_bits(cfg, occ) as f64 / full as f64
 }
 
+// ----------------------------------------------------------------------
+// Host-footprint accounting (the *physical* side: what a session actually
+// pins in host memory, as opposed to the logical bits above).
+// ----------------------------------------------------------------------
+
+/// Host memory pinned by one session's cache state, in bytes.
+///
+/// `shadow_bytes` are the pooled decode-shadow blocks (proportional to the
+/// pool-rounded capacity, **not** `max_seq` — the point of the buffer
+/// pool); `tier_bytes` is the packed hi/lo tier storage; `other_bytes` is
+/// bookkeeping (placement map, balancers, scratch).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HostFootprint {
+    pub shadow_bytes: usize,
+    pub tier_bytes: usize,
+    pub other_bytes: usize,
+}
+
+impl HostFootprint {
+    pub fn total(&self) -> usize {
+        self.shadow_bytes + self.tier_bytes + self.other_bytes
+    }
+}
+
+/// Closed-form size of the decode-shadow blocks at a given per-plane slot
+/// capacity: four `[planes, cap, head_dim]` f32 blocks (hi K/V + lo K/V
+/// codes), four `[planes, cap, groups]` metadata blocks, and two
+/// `[planes, cap]` masks. The footprint test asserts the manager's measured
+/// shadow bytes equal this at the pool-rounded capacity.
+pub fn shadow_bytes(planes: usize, cap: usize, head_dim: usize, groups: usize) -> usize {
+    planes * cap * (4 * head_dim + 4 * groups + 2) * std::mem::size_of::<f32>()
+}
+
 /// Closed-form expected cache-size % for a given configuration and hi-tier
 /// fraction — used by the experiment drivers to label the x-axis exactly the
 /// way the paper does (e.g. importance 20% + INT2 retained ⇒ ~32–33%).
@@ -167,6 +200,19 @@ mod tests {
         // int2 g16: 2*(64+64)=256 bits vs 1024 full → lo alone = 25%.
         let expect = 100.0 * (10.0 * 1024.0 + 90.0 * 256.0) / (100.0 * 1024.0);
         assert!((pct - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shadow_bytes_closed_form() {
+        // 4 planes × 64 slots × (4·8 + 4·2 + 2) f32s × 4 bytes
+        assert_eq!(shadow_bytes(4, 64, 8, 2), 4 * 64 * 42 * 4);
+        assert_eq!(shadow_bytes(0, 64, 8, 2), 0);
+        let fp = HostFootprint {
+            shadow_bytes: 10,
+            tier_bytes: 20,
+            other_bytes: 5,
+        };
+        assert_eq!(fp.total(), 35);
     }
 
     #[test]

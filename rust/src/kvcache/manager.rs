@@ -8,24 +8,47 @@
 //!    codes + FP16 metadata) — this is what the logical memory accounting
 //!    charges, and what a real deployment would hold in device memory;
 //! 2. a *shadow* dense representation (codes as f32-held integers, scales,
-//!    zeros, masks) laid out exactly like the decode graph's inputs — kept
+//!    zeros, masks) laid out like the decode graph's inputs — kept
 //!    incrementally up to date on every admit/demote so a decode step's
 //!    input assembly is a handful of plane-contiguous `memcpy`s instead of
 //!    per-slot unpacking (see EXPERIMENTS.md §Perf).
+//!
+//! The shadow blocks are **length-aware and pooled**: they are checked out
+//! of a [`BufferPool`] at the current capacity (the sequence length rounded
+//! up to a power-of-two chunk, never more than `max_seq`) and grow as the
+//! session decodes. Host footprint is therefore proportional to occupancy,
+//! not to the compiled graph's `max_seq`; padding to `max_seq` happens once
+//! per decode step inside the engine's batch assembly, not per session.
+//! Dropping the manager returns the blocks to the pool so the serving
+//! coordinator recycles allocations across requests.
 //!
 //! Lifecycle per session: [`CacheManager::ingest_prefill`] once, then
 //! [`CacheManager::append_token`] per generated token. The engine reads the
 //! dense blocks via [`CacheManager::decode_views`].
 
-use super::accounting::{self, Occupancy};
+use super::accounting::{self, HostFootprint, Occupancy};
+use super::pool::{BufferPool, PooledBuf};
 use super::tier::{HiTier, LoTier};
 use super::{CacheConfig, Placement, RetentionMode};
 use crate::policies::ImportancePolicy;
 use crate::quant::Balancer;
 
+/// Smallest per-plane slot capacity the manager requests from the pool
+/// (keeps tiny prompts from growing through many size classes).
+const MIN_CAP_SLOTS: usize = 16;
+
 /// Dense per-session views over the decode-graph input blocks, all plane-
-/// major: `[planes, max_seq, ...]` where `planes = layers × kv_heads`.
+/// major with **row stride [`DecodeViews::cap`]** (the pooled capacity, not
+/// `max_seq`): `[planes, cap, ...]`. Only rows `0..seq_len` of each plane
+/// are live; the engine's batch assembly copies that prefix into the
+/// graph's `max_seq`-padded batch tensors.
 pub struct DecodeViews<'a> {
+    /// Live rows per plane.
+    pub seq_len: usize,
+    /// Allocated rows per plane — the row stride of every block below.
+    pub cap: usize,
+    /// Scale/zero groups per token (row stride of the metadata blocks).
+    pub groups: usize,
     pub k_hi: &'a [f32],
     pub v_hi: &'a [f32],
     pub hi_mask: &'a [f32],
@@ -48,7 +71,8 @@ pub struct StepOutputs<'a> {
     /// New token V, `[planes, head_dim]`.
     pub v_new: &'a [f32],
     /// Attention the new query paid to previous slots, `[planes, max_seq]`
-    /// (only `0..seq_len` is meaningful).
+    /// (only `0..seq_len` is meaningful — this is the graph's padded
+    /// output layout, not the manager's pooled layout).
     pub attn_prev: &'a [f32],
     /// Self-attention mass of the new token, `[planes]`.
     pub attn_self: &'a [f32],
@@ -67,17 +91,20 @@ pub struct CacheManager {
     lo: Vec<LoTier>,
     balancers: Vec<Balancer>,
 
-    // Shadow dense blocks (decode-graph input layout, plane-major).
-    k_hi_buf: Vec<f32>,
-    v_hi_buf: Vec<f32>,
-    hi_mask: Vec<f32>,
-    k_lo_codes: Vec<f32>,
-    k_lo_scale: Vec<f32>,
-    k_lo_zero: Vec<f32>,
-    v_lo_codes: Vec<f32>,
-    v_lo_scale: Vec<f32>,
-    v_lo_zero: Vec<f32>,
-    lo_mask: Vec<f32>,
+    // Shadow dense blocks (decode-graph input layout, plane-major with row
+    // stride `cap`), checked out of `pool` and grown on demand.
+    pool: BufferPool,
+    cap: usize,
+    k_hi_buf: PooledBuf,
+    v_hi_buf: PooledBuf,
+    hi_mask: PooledBuf,
+    k_lo_codes: PooledBuf,
+    k_lo_scale: PooledBuf,
+    k_lo_zero: PooledBuf,
+    v_lo_codes: PooledBuf,
+    v_lo_scale: PooledBuf,
+    v_lo_zero: PooledBuf,
+    lo_mask: PooledBuf,
     inv_balancer: Vec<f32>,
 
     placement: Vec<Placement>,
@@ -88,14 +115,26 @@ pub struct CacheManager {
 }
 
 impl CacheManager {
+    /// Build a manager with a private buffer pool (single-session use; the
+    /// serving coordinator shares one pool via [`Self::with_pool`]).
     pub fn new(cfg: CacheConfig, policy: Box<dyn ImportancePolicy>) -> Self {
+        Self::with_pool(cfg, policy, BufferPool::new())
+    }
+
+    /// Build a manager whose shadow blocks come from (and return to) the
+    /// given pool.
+    pub fn with_pool(
+        cfg: CacheConfig,
+        policy: Box<dyn ImportancePolicy>,
+        pool: BufferPool,
+    ) -> Self {
         let planes = cfg.layers * cfg.kv_heads;
         let d = cfg.head_dim;
         let s = cfg.max_seq;
         let lo_group = cfg.lo.group.min(d);
         let groups = d / lo_group;
-        let hi = (0..planes).map(|_| HiTier::new(cfg.hi, d, s)).collect();
-        let lo = (0..planes).map(|_| LoTier::new(cfg.lo, d, s)).collect();
+        let hi = (0..planes).map(|_| HiTier::new(cfg.hi, d, 0)).collect();
+        let lo = (0..planes).map(|_| LoTier::new(cfg.lo, d, 0)).collect();
         Self {
             planes,
             d,
@@ -104,24 +143,26 @@ impl CacheManager {
             hi,
             lo,
             balancers: vec![Balancer::identity(d); planes],
-            k_hi_buf: vec![0.0; planes * s * d],
-            v_hi_buf: vec![0.0; planes * s * d],
-            hi_mask: vec![0.0; planes * s],
-            k_lo_codes: vec![0.0; planes * s * d],
-            k_lo_scale: vec![0.0; planes * s * groups],
-            k_lo_zero: vec![0.0; planes * s * groups],
-            v_lo_codes: vec![0.0; planes * s * d],
-            v_lo_scale: vec![0.0; planes * s * groups],
-            v_lo_zero: vec![0.0; planes * s * groups],
-            lo_mask: vec![0.0; planes * s],
+            cap: 0,
+            k_hi_buf: pool.checkout(0),
+            v_hi_buf: pool.checkout(0),
+            hi_mask: pool.checkout(0),
+            k_lo_codes: pool.checkout(0),
+            k_lo_scale: pool.checkout(0),
+            k_lo_zero: pool.checkout(0),
+            v_lo_codes: pool.checkout(0),
+            v_lo_scale: pool.checkout(0),
+            v_lo_zero: pool.checkout(0),
+            lo_mask: pool.checkout(0),
             inv_balancer: vec![1.0; planes * d],
-            placement: vec![Placement::Empty; planes * s],
+            placement: Vec::new(),
             hi_count: vec![0; planes],
             seq_len: 0,
             scratch_u8: vec![0; d],
             scratch_f32: vec![0.0; d],
             cfg,
             policy,
+            pool,
         }
     }
 
@@ -133,16 +174,101 @@ impl CacheManager {
         self.seq_len
     }
 
+    /// Current per-plane slot capacity (the pool-rounded chunk the shadow
+    /// blocks are allocated at).
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Scale/zero groups per token.
+    pub fn groups(&self) -> usize {
+        self.groups
+    }
+
     pub fn policy_name(&self) -> &'static str {
         self.policy.name()
     }
 
+    /// Pool handle the shadow blocks are checked out of.
+    pub fn pool(&self) -> &BufferPool {
+        &self.pool
+    }
+
     fn slot_idx(&self, plane: usize, s: usize) -> usize {
-        plane * self.s_max + s
+        debug_assert!(s < self.cap, "slot {s} beyond capacity {}", self.cap);
+        plane * self.cap + s
     }
 
     pub fn placement(&self, plane: usize, s: usize) -> Placement {
         self.placement[self.slot_idx(plane, s)]
+    }
+
+    // ------------------------------------------------------------------
+    // Capacity management
+    // ------------------------------------------------------------------
+
+    /// Round a needed slot count up to the pool's chunk size: the next
+    /// power of two, at least [`MIN_CAP_SLOTS`], never more than `max_seq`.
+    fn round_cap(&self, need: usize) -> usize {
+        need.max(MIN_CAP_SLOTS)
+            .next_power_of_two()
+            .min(self.s_max)
+    }
+
+    /// Grow the shadow blocks, placement map and tiers to hold at least
+    /// `need` slots per plane, copying the live `0..seq_len` prefix of each
+    /// plane into the new stride. Old blocks return to the pool.
+    fn ensure_capacity(&mut self, need: usize) {
+        if need <= self.cap {
+            return;
+        }
+        let new_cap = self.round_cap(need);
+        debug_assert!(new_cap >= need && new_cap <= self.s_max);
+        let (old_cap, live, planes) = (self.cap, self.seq_len, self.planes);
+
+        fn regrow(
+            pool: &BufferPool,
+            block: &mut PooledBuf,
+            width: usize,
+            planes: usize,
+            old_cap: usize,
+            new_cap: usize,
+            live: usize,
+        ) {
+            let mut grown = pool.checkout(planes * new_cap * width);
+            for p in 0..planes {
+                let src = p * old_cap * width;
+                let dst = p * new_cap * width;
+                grown[dst..dst + live * width].copy_from_slice(&block[src..src + live * width]);
+            }
+            *block = grown; // the old block returns to the pool on drop
+        }
+
+        regrow(&self.pool, &mut self.k_hi_buf, self.d, planes, old_cap, new_cap, live);
+        regrow(&self.pool, &mut self.v_hi_buf, self.d, planes, old_cap, new_cap, live);
+        regrow(&self.pool, &mut self.hi_mask, 1, planes, old_cap, new_cap, live);
+        regrow(&self.pool, &mut self.k_lo_codes, self.d, planes, old_cap, new_cap, live);
+        regrow(&self.pool, &mut self.k_lo_scale, self.groups, planes, old_cap, new_cap, live);
+        regrow(&self.pool, &mut self.k_lo_zero, self.groups, planes, old_cap, new_cap, live);
+        regrow(&self.pool, &mut self.v_lo_codes, self.d, planes, old_cap, new_cap, live);
+        regrow(&self.pool, &mut self.v_lo_scale, self.groups, planes, old_cap, new_cap, live);
+        regrow(&self.pool, &mut self.v_lo_zero, self.groups, planes, old_cap, new_cap, live);
+        regrow(&self.pool, &mut self.lo_mask, 1, planes, old_cap, new_cap, live);
+
+        let mut placement = vec![Placement::Empty; planes * new_cap];
+        for p in 0..planes {
+            placement[p * new_cap..p * new_cap + live]
+                .copy_from_slice(&self.placement[p * old_cap..p * old_cap + live]);
+        }
+        self.placement = placement;
+
+        for hi in &mut self.hi {
+            hi.ensure_capacity(new_cap);
+        }
+        for lo in &mut self.lo {
+            lo.ensure_capacity(new_cap);
+        }
+        self.cap = new_cap;
     }
 
     // ------------------------------------------------------------------
@@ -167,6 +293,7 @@ impl CacheManager {
         assert_eq!(k.len(), self.planes * seq_len * self.d);
         assert_eq!(attn_acc.len(), self.planes * seq_len);
         assert_eq!(qmax.len(), self.planes * self.d);
+        self.ensure_capacity(seq_len);
         self.seq_len = seq_len;
 
         // 1. Channel balancers from prefill q/k maxima (paper eq. 2).
@@ -228,19 +355,17 @@ impl CacheManager {
         assert!(t < self.s_max, "cache full");
         assert_eq!(out.k_new.len(), self.planes * self.d);
         assert_eq!(out.attn_prev.len(), self.planes * self.s_max);
+        self.ensure_capacity(t + 1);
 
         let new_len = t + 1;
         let budget = self.cfg.hi_budget(new_len);
         for p in 0..self.planes {
-            // Importance update from this step's attention row (+ self mass).
+            // Importance update from this step's attention row (+ self mass,
+            // credited as a point update — no per-token row allocation).
             let row = &out.attn_prev[p * self.s_max..p * self.s_max + t];
             self.policy.observe(p, row);
             self.policy.admit(p, t);
-            // Self-attention mass accrues to the new slot.
-            let self_row: Vec<f32> = (0..new_len)
-                .map(|s| if s == t { out.attn_self[p] } else { 0.0 })
-                .collect();
-            self.policy.observe(p, &self_row);
+            self.policy.observe_at(p, t, out.attn_self[p]);
 
             // The new token always enters hi (recent tokens are important).
             let off = p * self.d;
@@ -277,7 +402,7 @@ impl CacheManager {
         );
         self.hi[p].admit(s, k, v);
         // Mirror the storage-rounded values into the dense block.
-        let off = (p * self.s_max + s) * self.d;
+        let off = (p * self.cap + s) * self.d;
         let idx = self.slot_idx(p, s);
         self.k_hi_buf[off..off + self.d].copy_from_slice(self.hi[p].k_slot(s));
         self.v_hi_buf[off..off + self.d].copy_from_slice(self.hi[p].v_slot(s));
@@ -293,7 +418,7 @@ impl CacheManager {
         let v = self.hi[p].v_slot(s).to_vec();
         // Clear hi state.
         self.hi[p].clear(s);
-        let off = (p * self.s_max + s) * self.d;
+        let off = (p * self.cap + s) * self.d;
         let idx = self.slot_idx(p, s);
         self.k_hi_buf[off..off + self.d].fill(0.0);
         self.v_hi_buf[off..off + self.d].fill(0.0);
@@ -323,8 +448,8 @@ impl CacheManager {
     /// Rebuild the dense shadow of one lo slot from the packed tier.
     fn refresh_lo_shadow(&mut self, p: usize, s: usize) {
         let d = self.d;
-        let off = (p * self.s_max + s) * d;
-        let goff = (p * self.s_max + s) * self.groups;
+        let off = (p * self.cap + s) * d;
+        let goff = (p * self.cap + s) * self.groups;
 
         self.lo[p].k_codes_f32_into(s, &mut self.scratch_u8, &mut self.scratch_f32);
         self.k_lo_codes[off..off + d].copy_from_slice(&self.scratch_f32);
@@ -343,9 +468,14 @@ impl CacheManager {
     // Views & diagnostics
     // ------------------------------------------------------------------
 
-    /// Dense plane-major views over the decode-graph inputs.
+    /// Dense plane-major views over the decode-graph inputs (row stride =
+    /// [`Self::capacity`]; only `0..seq_len` rows are live — the engine's
+    /// batch assembly pads to the graph's `max_seq`).
     pub fn decode_views(&self) -> DecodeViews<'_> {
         DecodeViews {
+            seq_len: self.seq_len,
+            cap: self.cap,
+            groups: self.groups,
             k_hi: &self.k_hi_buf,
             v_hi: &self.v_hi_buf,
             hi_mask: &self.hi_mask,
@@ -396,14 +526,43 @@ impl CacheManager {
         accounting::cache_size_pct(&self.cfg, &self.occupancy())
     }
 
+    /// Host memory this session's cache state currently pins, measured from
+    /// the live allocations (shadow blocks, tier storage, bookkeeping).
+    pub fn host_footprint(&self) -> HostFootprint {
+        let f32b = std::mem::size_of::<f32>();
+        let shadow_bytes = (self.k_hi_buf.len()
+            + self.v_hi_buf.len()
+            + self.hi_mask.len()
+            + self.k_lo_codes.len()
+            + self.k_lo_scale.len()
+            + self.k_lo_zero.len()
+            + self.v_lo_codes.len()
+            + self.v_lo_scale.len()
+            + self.v_lo_zero.len()
+            + self.lo_mask.len())
+            * f32b;
+        let tier_bytes = self.hi.iter().map(HiTier::host_bytes).sum::<usize>()
+            + self.lo.iter().map(LoTier::host_bytes).sum::<usize>();
+        let other_bytes = self.placement.len() * std::mem::size_of::<Placement>()
+            + self.inv_balancer.len() * f32b
+            + self.balancers.iter().map(|b| b.b.len() * f32b).sum::<usize>()
+            + self.scratch_u8.len()
+            + self.scratch_f32.len() * f32b;
+        HostFootprint {
+            shadow_bytes,
+            tier_bytes,
+            other_bytes,
+        }
+    }
+
     /// Invariant check used by tests and failure-injection: every slot below
     /// `seq_len` is in exactly one state consistent with the masks, and
     /// hi counts match.
     pub fn check_invariants(&self) -> Result<(), String> {
         for p in 0..self.planes {
             let mut hi_n = 0;
-            for s in 0..self.s_max {
-                let idx = p * self.s_max + s;
+            for s in 0..self.cap {
+                let idx = p * self.cap + s;
                 let pl = self.placement[idx];
                 let (hm, lm) = (self.hi_mask[idx], self.lo_mask[idx]);
                 if s >= self.seq_len && pl != Placement::Empty {
@@ -640,10 +799,12 @@ mod tests {
         let (k, v, acc, qmax, kmax) = prefill_data(m.config(), t, &mut rng);
         m.ingest_prefill(t, &k, &v, &acc, &qmax, &kmax);
         let views = m.decode_views();
+        assert_eq!(views.seq_len, t);
+        let (cap, g) = (views.cap, views.groups);
         let d = 8;
         for p in 0..4 {
             for s in 0..t {
-                let idx = p * 32 + s;
+                let idx = p * cap + s;
                 let hi = views.hi_mask[idx] == 1.0;
                 let lo = views.lo_mask[idx] == 1.0;
                 assert!(hi ^ lo, "slot must be exactly one tier");
@@ -654,11 +815,105 @@ mod tests {
                 }
                 if hi {
                     // hi slot has zero lo metadata
-                    let sc = &views.k_lo_scale[idx * 2..(idx + 1) * 2];
+                    let sc = &views.k_lo_scale[idx * g..(idx + 1) * g];
                     assert!(sc.iter().all(|&x| x == 0.0));
                 }
             }
         }
+    }
+
+    #[test]
+    fn host_footprint_tracks_seq_len_not_max_seq() {
+        // The acceptance case: a manager compiled for max_seq = 4096 holding
+        // a 64-token prefill must pin host memory proportional to 64 (the
+        // pool-rounded capacity), not to 4096.
+        let mut cfg = CacheConfig::mikv(2, 2, 8, 4096, 0.25, Precision::Int4);
+        cfg.recent_window = 2;
+        let planes = cfg.layers * cfg.kv_heads;
+        let policy = Box::new(H2oPolicy::new(planes, cfg.max_seq));
+        let mut m = CacheManager::new(cfg, policy);
+        assert_eq!(m.capacity(), 0);
+
+        let mut rng = Pcg32::new(11);
+        let t = 64;
+        let (k, v, acc, qmax, kmax) = prefill_data(m.config(), t, &mut rng);
+        m.ingest_prefill(t, &k, &v, &acc, &qmax, &kmax);
+        m.check_invariants().unwrap();
+
+        assert_eq!(m.capacity(), 64, "64-token prefill rounds to a 64-slot chunk");
+        let fp = m.host_footprint();
+        let expect = accounting::shadow_bytes(planes, 64, 8, m.groups());
+        assert_eq!(fp.shadow_bytes, expect, "shadow bytes match the closed form");
+
+        // nowhere near a dense max_seq allocation
+        let dense = accounting::shadow_bytes(planes, 4096, 8, m.groups());
+        assert!(
+            fp.total() < dense / 16,
+            "footprint {} should be far below the dense {}",
+            fp.total(),
+            dense
+        );
+    }
+
+    #[test]
+    fn capacity_grows_in_pow2_chunks_and_preserves_state() {
+        let mut m = manager(0.5, RetentionMode::Retain);
+        let mut rng = Pcg32::new(12);
+        let t0 = 14;
+        let (k, v, acc, qmax, kmax) = prefill_data(m.config(), t0, &mut rng);
+        m.ingest_prefill(t0, &k, &v, &acc, &qmax, &kmax);
+        assert_eq!(m.capacity(), 16);
+        let before: Vec<_> = (0..t0).map(|s| m.effective_kv(0, s)).collect();
+
+        let planes = 4usize;
+        let d = 8usize;
+        let s_max = 32usize;
+        for _ in 0..4 {
+            let k_new: Vec<f32> = (0..planes * d).map(|_| rng.gen_normal()).collect();
+            let attn_prev = vec![0.01f32; planes * s_max];
+            let attn_self = vec![0.01f32; planes];
+            m.append_token(StepOutputs {
+                k_new: &k_new,
+                v_new: &k_new,
+                attn_prev: &attn_prev,
+                attn_self: &attn_self,
+            });
+            m.check_invariants().unwrap();
+        }
+        // 14 + 4 = 18 slots → capacity doubled to 32 (== max_seq here)
+        assert_eq!(m.seq_len(), 18);
+        assert_eq!(m.capacity(), 32);
+        // pre-growth contents survived the re-stride (modulo demotions: a
+        // slot may have moved hi→lo, but it must still be present)
+        for (s, kv) in before.iter().enumerate() {
+            assert_eq!(kv.is_some(), m.effective_kv(0, s).is_some(), "slot {s}");
+        }
+    }
+
+    #[test]
+    fn dropping_manager_returns_blocks_to_shared_pool() {
+        let pool = BufferPool::new();
+        let cfg = small_cfg(0.5, RetentionMode::Retain);
+        let planes = cfg.layers * cfg.kv_heads;
+        {
+            let policy = Box::new(H2oPolicy::new(planes, cfg.max_seq));
+            let mut m = CacheManager::with_pool(cfg.clone(), policy, pool.clone());
+            let mut rng = Pcg32::new(13);
+            let (k, v, acc, qmax, kmax) = prefill_data(m.config(), 16, &mut rng);
+            m.ingest_prefill(16, &k, &v, &acc, &qmax, &kmax);
+        }
+        let s = pool.stats();
+        assert_eq!(s.outstanding_blocks, 0, "all blocks returned on drop");
+        assert!(s.free_blocks > 0);
+
+        // a second same-config session reuses the parked blocks
+        let policy = Box::new(H2oPolicy::new(planes, cfg.max_seq));
+        let mut m = CacheManager::with_pool(cfg, policy, pool.clone());
+        let mut rng = Pcg32::new(14);
+        let (k, v, acc, qmax, kmax) = prefill_data(m.config(), 16, &mut rng);
+        m.ingest_prefill(16, &k, &v, &acc, &qmax, &kmax);
+        m.check_invariants().unwrap();
+        assert!(pool.stats().hits > 0, "second session hit the pool");
     }
 
     #[test]

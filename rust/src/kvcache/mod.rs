@@ -12,15 +12,21 @@
 //!   ("no token left behind").
 //!
 //! [`manager::CacheManager`] owns the per-session tier state, the importance
-//! policy bookkeeping, the channel balancers, and produces the dense padded
-//! tensors the decode HLO graph consumes. [`accounting`] computes the
-//! logical memory footprint — the paper's "KV cache size %" axis.
+//! policy bookkeeping, the channel balancers, and produces dense
+//! plane-major blocks the decode HLO graph consumes (sized to the live
+//! sequence length and checked out of a shared [`pool::BufferPool`]; the
+//! engine's batch assembly pads them to the compiled graph's `max_seq`).
+//! [`accounting`] computes both the logical memory footprint — the paper's
+//! "KV cache size %" axis — and the physical host bytes a session pins.
 
 pub mod accounting;
 pub mod manager;
+pub mod pool;
 pub mod tier;
 
+pub use accounting::HostFootprint;
 pub use manager::{CacheManager, StepOutputs};
+pub use pool::{BufferPool, PoolStats, PooledBuf};
 
 use crate::quant::Precision;
 

@@ -1,0 +1,239 @@
+//! Reusable host-buffer pool for the cache managers' shadow blocks.
+//!
+//! A `CacheManager`'s decode-shadow blocks are the dominant host allocation
+//! of a session. Before this pool existed they were sized to `max_seq` at
+//! construction, so a freshly admitted session with a 64-token prompt paid
+//! for a 4096-token cache — and the coordinator's `max_active` knob was a
+//! memory landmine rather than a throughput dial. The pool makes session
+//! footprint proportional to *occupancy*:
+//!
+//! * [`BufferPool::checkout`] hands out a zeroed [`PooledBuf`] of exactly
+//!   the requested length, reusing a previously returned block of the same
+//!   size class when one is free;
+//! * managers grow their blocks in power-of-two capacity steps (see
+//!   `CacheManager::ensure_capacity`), so the pool sees a small number of
+//!   distinct size classes and the per-class free lists stay hot across
+//!   requests with similar sequence lengths;
+//! * dropping a [`PooledBuf`] returns the allocation to the pool, so the
+//!   coordinator recycles blocks across sessions instead of round-tripping
+//!   the allocator every admit/retire.
+//!
+//! The pool is a cheap clonable handle (`Arc<Mutex<..>>`): the lock is taken
+//! only on checkout/return/growth, never on the per-token decode path.
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::{Arc, Mutex};
+
+/// Free blocks retained per size class; excess returns go to the allocator.
+const MAX_FREE_PER_CLASS: usize = 64;
+
+#[derive(Default)]
+struct PoolInner {
+    /// Size class (element count) → free blocks of exactly that length.
+    free: BTreeMap<usize, Vec<Vec<f32>>>,
+    outstanding_blocks: usize,
+    outstanding_bytes: usize,
+    hits: u64,
+    misses: u64,
+}
+
+/// Aggregate pool counters (for stats reporting and tests).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Blocks currently parked in the free lists.
+    pub free_blocks: usize,
+    /// Bytes currently parked in the free lists.
+    pub free_bytes: usize,
+    /// Blocks currently checked out.
+    pub outstanding_blocks: usize,
+    /// Bytes currently checked out.
+    pub outstanding_bytes: usize,
+    /// Checkouts served from the free lists.
+    pub hits: u64,
+    /// Checkouts that had to allocate.
+    pub misses: u64,
+}
+
+/// Shared, clonable handle to a buffer pool.
+#[derive(Clone)]
+pub struct BufferPool {
+    inner: Arc<Mutex<PoolInner>>,
+}
+
+impl Default for BufferPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl BufferPool {
+    pub fn new() -> BufferPool {
+        BufferPool {
+            inner: Arc::new(Mutex::new(PoolInner::default())),
+        }
+    }
+
+    /// Check out a zeroed block of exactly `len` elements.
+    pub fn checkout(&self, len: usize) -> PooledBuf {
+        let buf = {
+            let mut inner = self.inner.lock().unwrap();
+            let reused = inner.free.get_mut(&len).and_then(|bucket| bucket.pop());
+            let buf = match reused {
+                Some(mut b) => {
+                    inner.hits += 1;
+                    b.fill(0.0);
+                    b
+                }
+                None => {
+                    inner.misses += 1;
+                    vec![0.0f32; len]
+                }
+            };
+            inner.outstanding_blocks += 1;
+            inner.outstanding_bytes += len * std::mem::size_of::<f32>();
+            buf
+        };
+        PooledBuf {
+            buf,
+            pool: self.clone(),
+        }
+    }
+
+    fn give_back(&self, buf: Vec<f32>) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.outstanding_blocks = inner.outstanding_blocks.saturating_sub(1);
+        inner.outstanding_bytes = inner
+            .outstanding_bytes
+            .saturating_sub(buf.len() * std::mem::size_of::<f32>());
+        if buf.is_empty() {
+            return;
+        }
+        let bucket = inner.free.entry(buf.len()).or_default();
+        if bucket.len() < MAX_FREE_PER_CLASS {
+            bucket.push(buf);
+        }
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let inner = self.inner.lock().unwrap();
+        let (mut free_blocks, mut free_bytes) = (0usize, 0usize);
+        for (len, bucket) in &inner.free {
+            free_blocks += bucket.len();
+            free_bytes += bucket.len() * len * std::mem::size_of::<f32>();
+        }
+        PoolStats {
+            free_blocks,
+            free_bytes,
+            outstanding_blocks: inner.outstanding_blocks,
+            outstanding_bytes: inner.outstanding_bytes,
+            hits: inner.hits,
+            misses: inner.misses,
+        }
+    }
+}
+
+impl fmt::Debug for BufferPool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "BufferPool({:?})", self.stats())
+    }
+}
+
+/// A checked-out block. Derefs to `[f32]`; returns to its pool on drop.
+pub struct PooledBuf {
+    buf: Vec<f32>,
+    pool: BufferPool,
+}
+
+impl Deref for PooledBuf {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        &self.buf
+    }
+}
+
+impl DerefMut for PooledBuf {
+    fn deref_mut(&mut self) -> &mut [f32] {
+        &mut self.buf
+    }
+}
+
+impl Drop for PooledBuf {
+    fn drop(&mut self) {
+        self.pool.give_back(std::mem::take(&mut self.buf));
+    }
+}
+
+impl fmt::Debug for PooledBuf {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "PooledBuf(len={})", self.buf.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkout_is_zeroed_and_sized() {
+        let pool = BufferPool::new();
+        let b = pool.checkout(16);
+        assert_eq!(b.len(), 16);
+        assert!(b.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn drop_returns_and_checkout_reuses() {
+        let pool = BufferPool::new();
+        {
+            let mut b = pool.checkout(32);
+            b[3] = 9.0;
+        }
+        let s = pool.stats();
+        assert_eq!(s.free_blocks, 1);
+        assert_eq!(s.outstanding_blocks, 0);
+        assert_eq!(s.misses, 1);
+
+        // same size class → reused and re-zeroed
+        let b = pool.checkout(32);
+        assert!(b.iter().all(|&x| x == 0.0));
+        let s = pool.stats();
+        assert_eq!(s.hits, 1);
+        assert_eq!(s.free_blocks, 0);
+        assert_eq!(s.outstanding_blocks, 1);
+        assert_eq!(s.outstanding_bytes, 32 * 4);
+    }
+
+    #[test]
+    fn distinct_size_classes_do_not_mix() {
+        let pool = BufferPool::new();
+        drop(pool.checkout(8));
+        let b = pool.checkout(16); // different class → fresh allocation
+        assert_eq!(b.len(), 16);
+        let s = pool.stats();
+        assert_eq!(s.hits, 0);
+        assert_eq!(s.misses, 2);
+        assert_eq!(s.free_blocks, 1); // the len-8 block still parked
+    }
+
+    #[test]
+    fn zero_length_blocks_are_not_pooled() {
+        let pool = BufferPool::new();
+        drop(pool.checkout(0));
+        let s = pool.stats();
+        assert_eq!(s.free_blocks, 0);
+        assert_eq!(s.outstanding_blocks, 0);
+    }
+
+    #[test]
+    fn shared_handle_sees_the_same_pool() {
+        let a = BufferPool::new();
+        let b = a.clone();
+        drop(a.checkout(64));
+        assert_eq!(b.stats().free_blocks, 1);
+        drop(b.checkout(64));
+        assert_eq!(a.stats().hits, 1);
+    }
+}

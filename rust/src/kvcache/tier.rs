@@ -37,6 +37,26 @@ impl HiTier {
         }
     }
 
+    /// Grow storage to hold at least `slots` slots (slot-major layout, so
+    /// growth is a plain tail extension). Never shrinks.
+    pub fn ensure_capacity(&mut self, slots: usize) {
+        let need = slots * self.head_dim;
+        if self.k.len() < need {
+            self.k.resize(need, 0.0);
+            self.v.resize(need, 0.0);
+        }
+    }
+
+    /// Slots currently allocated.
+    pub fn capacity(&self) -> usize {
+        self.k.len() / self.head_dim.max(1)
+    }
+
+    /// Host bytes held by this plane's storage.
+    pub fn host_bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * std::mem::size_of::<f32>()
+    }
+
     /// Round a vector through this tier's storage precision.
     fn storage_round(cfg: &TierConfig, x: &mut [f32]) {
         match cfg.precision {
@@ -133,6 +153,34 @@ impl LoTier {
 
     pub fn groups(&self) -> usize {
         self.groups
+    }
+
+    /// Grow storage to hold at least `slots` slots (slot-major layout, so
+    /// growth is a plain tail extension). Never shrinks.
+    pub fn ensure_capacity(&mut self, slots: usize) {
+        if self.k_scales.len() < slots * self.groups {
+            self.k_codes.resize(slots * self.words, 0);
+            self.v_codes.resize(slots * self.words, 0);
+            self.k_scales.resize(slots * self.groups, 0.0);
+            self.k_zeros.resize(slots * self.groups, 0.0);
+            self.v_scales.resize(slots * self.groups, 0.0);
+            self.v_zeros.resize(slots * self.groups, 0.0);
+        }
+    }
+
+    /// Slots currently allocated.
+    pub fn capacity(&self) -> usize {
+        self.k_scales.len() / self.groups
+    }
+
+    /// Host bytes held by this plane's storage (packed codes + metadata).
+    pub fn host_bytes(&self) -> usize {
+        (self.k_codes.len() + self.v_codes.len()) * std::mem::size_of::<u32>()
+            + (self.k_scales.len()
+                + self.k_zeros.len()
+                + self.v_scales.len()
+                + self.v_zeros.len())
+                * std::mem::size_of::<f32>()
     }
 
     /// Quantize and store a token's K/V into slot `s`. `k` is expected to be
@@ -296,6 +344,28 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn tiers_grow_preserving_contents() {
+        let mut hi = HiTier::new(TierConfig::fp16(), 4, 0);
+        assert_eq!(hi.capacity(), 0);
+        hi.ensure_capacity(2);
+        hi.admit(1, &[1.0; 4], &[2.0; 4]);
+        hi.ensure_capacity(8);
+        assert_eq!(hi.capacity(), 8);
+        assert_eq!(hi.k_slot(1), &[1.0; 4]);
+        assert!(hi.k_slot(5).iter().all(|&x| x == 0.0));
+
+        let mut lo = LoTier::new(TierConfig::quantized(Precision::Int4, 2), 4, 0);
+        lo.ensure_capacity(2);
+        let k = [0.5f32, -0.5, 1.0, 0.0];
+        lo.admit(0, &k, &k);
+        let before = lo.dequant_slot(0);
+        lo.ensure_capacity(16);
+        assert_eq!(lo.capacity(), 16);
+        assert_eq!(lo.dequant_slot(0), before);
+        assert!(lo.host_bytes() > 0);
     }
 
     #[test]

@@ -306,17 +306,29 @@ impl Engine {
                 SessionCache::Mikv(m) => m,
                 _ => anyhow::bail!("session {} is not MiKV", sess.id),
             };
+            // Length-aware assembly: the manager's shadow blocks are sized
+            // to its pooled capacity; only the live `seq_len` rows are
+            // copied here and the padding to the graph's `max_seq` is the
+            // batch tensors' zero initialization (done once per step, not
+            // per session).
             let views = m.decode_views();
-            k_hi[lane * big..(lane + 1) * big].copy_from_slice(views.k_hi);
-            v_hi[lane * big..(lane + 1) * big].copy_from_slice(views.v_hi);
-            hi_mask[lane * sml..(lane + 1) * sml].copy_from_slice(views.hi_mask);
-            k_lo_c[lane * big..(lane + 1) * big].copy_from_slice(views.k_lo_codes);
-            k_lo_s[lane * med..(lane + 1) * med].copy_from_slice(views.k_lo_scale);
-            k_lo_z[lane * med..(lane + 1) * med].copy_from_slice(views.k_lo_zero);
-            v_lo_c[lane * big..(lane + 1) * big].copy_from_slice(views.v_lo_codes);
-            v_lo_s[lane * med..(lane + 1) * med].copy_from_slice(views.v_lo_scale);
-            v_lo_z[lane * med..(lane + 1) * med].copy_from_slice(views.v_lo_zero);
-            lo_mask[lane * sml..(lane + 1) * sml].copy_from_slice(views.lo_mask);
+            anyhow::ensure!(
+                views.groups == ng,
+                "session {}: cache has {} scale groups per token, graph expects {ng}",
+                sess.id,
+                views.groups
+            );
+            let (cap, live) = (views.cap, views.seq_len.min(s));
+            scatter_block(&mut k_hi, lane, planes, s, views.k_hi, cap, live, dh);
+            scatter_block(&mut v_hi, lane, planes, s, views.v_hi, cap, live, dh);
+            scatter_block(&mut hi_mask, lane, planes, s, views.hi_mask, cap, live, 1);
+            scatter_block(&mut k_lo_c, lane, planes, s, views.k_lo_codes, cap, live, dh);
+            scatter_block(&mut k_lo_s, lane, planes, s, views.k_lo_scale, cap, live, ng);
+            scatter_block(&mut k_lo_z, lane, planes, s, views.k_lo_zero, cap, live, ng);
+            scatter_block(&mut v_lo_c, lane, planes, s, views.v_lo_codes, cap, live, dh);
+            scatter_block(&mut v_lo_s, lane, planes, s, views.v_lo_scale, cap, live, ng);
+            scatter_block(&mut v_lo_z, lane, planes, s, views.v_lo_zero, cap, live, ng);
+            scatter_block(&mut lo_mask, lane, planes, s, views.lo_mask, cap, live, 1);
             inv_b[lane * planes * dh..(lane + 1) * planes * dh]
                 .copy_from_slice(views.inv_balancer);
         }
@@ -464,7 +476,9 @@ impl Engine {
                     break;
                 }
             }
-            if group[0].cache.seq_len() + 1 >= self.entry.dims.max_seq {
+            // The next decode appends into slot `seq_len`, which is legal
+            // while `seq_len < max_seq` (the last slot is usable).
+            if group[0].cache.seq_len() >= self.entry.dims.max_seq {
                 break;
             }
             let rows = self.decode_step(&mut group)?;
@@ -473,6 +487,29 @@ impl Engine {
             group[0].tokens.push(tok);
         }
         Ok(group[0].generated().to_vec())
+    }
+}
+
+/// Copy the live `live`-row prefix of every plane of a plane-major session
+/// block (row stride `cap`, row width `width`) into lane `lane` of a
+/// `max_seq`-padded batch tensor `[B, planes, rows_dst, width]`. Rows
+/// `live..rows_dst` keep the batch tensor's zero padding.
+#[allow(clippy::too_many_arguments)]
+fn scatter_block(
+    dst: &mut [f32],
+    lane: usize,
+    planes: usize,
+    rows_dst: usize,
+    src: &[f32],
+    cap: usize,
+    live: usize,
+    width: usize,
+) {
+    debug_assert!(live <= rows_dst && live <= cap);
+    for p in 0..planes {
+        let d0 = (lane * planes + p) * rows_dst * width;
+        let s0 = p * cap * width;
+        dst[d0..d0 + live * width].copy_from_slice(&src[s0..s0 + live * width]);
     }
 }
 
@@ -506,5 +543,31 @@ mod tests {
     fn pick_batch_pads_when_nothing_fits() {
         let avail = vec![4, 8];
         assert_eq!(pick_batch(2, &avail), 4);
+    }
+
+    #[test]
+    fn scatter_block_copies_live_prefix_and_keeps_padding() {
+        // 2 planes, session stride cap=4, batch stride rows_dst=8, width=2,
+        // live=3 rows. Lane 1 of a 2-lane batch tensor.
+        let (planes, cap, rows_dst, width, live) = (2usize, 4usize, 8usize, 2usize, 3usize);
+        let src: Vec<f32> = (0..planes * cap * width).map(|i| i as f32 + 1.0).collect();
+        let mut dst = vec![0.0f32; 2 * planes * rows_dst * width];
+        scatter_block(&mut dst, 1, planes, rows_dst, &src, cap, live, width);
+
+        for p in 0..planes {
+            for r in 0..rows_dst {
+                for w in 0..width {
+                    let got = dst[((planes + p) * rows_dst + r) * width + w];
+                    let want = if r < live {
+                        src[(p * cap + r) * width + w]
+                    } else {
+                        0.0 // padding rows stay zero
+                    };
+                    assert_eq!(got, want, "plane {p} row {r} col {w}");
+                }
+            }
+        }
+        // lane 0 untouched
+        assert!(dst[..planes * rows_dst * width].iter().all(|&x| x == 0.0));
     }
 }

@@ -1,6 +1,6 @@
 //! Per-request generation session state.
 
-use crate::kvcache::{CacheConfig, CacheManager, StepOutputs};
+use crate::kvcache::{BufferPool, CacheConfig, CacheManager, StepOutputs};
 use crate::policies::make_policy;
 use crate::quant::Precision;
 use crate::runtime::ModelDims;
@@ -178,6 +178,11 @@ impl FullCache {
         self.seq_len = t;
     }
 
+    /// Host bytes pinned by the dense cache blocks.
+    pub fn host_bytes(&self) -> usize {
+        (self.k.len() + self.v.len() + self.mask.len()) * std::mem::size_of::<f32>()
+    }
+
     /// Append one token's K/V (`[planes, d]`).
     pub fn append(&mut self, k_new: &[f32], v_new: &[f32]) {
         let t = self.seq_len;
@@ -213,6 +218,15 @@ impl SessionCache {
             SessionCache::Full(_) => 100.0,
         }
     }
+
+    /// Host bytes this cache currently pins (shadow blocks + tier storage
+    /// for MiKV; the dense blocks for the Full baseline).
+    pub fn host_bytes(&self) -> usize {
+        match self {
+            SessionCache::Mikv(m) => m.host_footprint().total(),
+            SessionCache::Full(f) => f.host_bytes(),
+        }
+    }
 }
 
 /// One generation request's state.
@@ -229,13 +243,26 @@ pub struct Session {
 }
 
 impl Session {
-    /// Create an empty session; the engine's prefill fills the cache.
+    /// Create an empty session with a private buffer pool; the engine's
+    /// prefill fills the cache. The serving coordinator uses
+    /// [`Session::with_pool`] so cache blocks recycle across requests.
     pub fn new(id: u64, dims: &ModelDims, mode: CacheMode) -> crate::Result<Session> {
+        Self::with_pool(id, dims, mode, &BufferPool::new())
+    }
+
+    /// Create an empty session whose MiKV cache blocks are checked out of
+    /// (and returned to) the given pool.
+    pub fn with_pool(
+        id: u64,
+        dims: &ModelDims,
+        mode: CacheMode,
+        pool: &BufferPool,
+    ) -> crate::Result<Session> {
         let cache = match &mode {
             CacheMode::Mikv { cfg, policy } => {
                 let p = make_policy(policy, cfg.layers * cfg.kv_heads, cfg.max_seq, id)
                     .ok_or_else(|| anyhow::anyhow!("unknown policy '{policy}'"))?;
-                SessionCache::Mikv(CacheManager::new(cfg.clone(), p))
+                SessionCache::Mikv(CacheManager::with_pool(cfg.clone(), p, pool.clone()))
             }
             CacheMode::Full | CacheMode::Oracle { .. } => {
                 SessionCache::Full(FullCache::new(dims))
@@ -325,6 +352,16 @@ mod tests {
             CacheMode::mikv(&d, 0.25, Precision::Int2).graph_kind(),
             "decode_mikv"
         );
+    }
+
+    #[test]
+    fn fresh_mikv_session_has_tiny_footprint() {
+        let d = dims();
+        let s = Session::new(1, &d, CacheMode::mikv(&d, 0.5, Precision::Int4)).unwrap();
+        // no prefill yet → no shadow blocks checked out of the pool
+        assert!(s.cache.host_bytes() < 4096, "got {}", s.cache.host_bytes());
+        let full = Session::new(2, &d, CacheMode::Full).unwrap();
+        assert!(full.cache.host_bytes() > 0);
     }
 
     #[test]

@@ -33,6 +33,12 @@ pub trait ImportancePolicy: Send {
     /// probability the new query put on slot `s`.
     fn observe(&mut self, plane: usize, attn: &[f32]);
 
+    /// Point update: add `mass` attention to a single slot. Equivalent to
+    /// [`Self::observe`] with a one-hot row, without materializing it —
+    /// this is how the decode hot path credits the new token's
+    /// self-attention.
+    fn observe_at(&mut self, plane: usize, slot: usize, mass: f32);
+
     /// Register that a new token occupies slot `s` (called on every decode
     /// step after `observe`).
     fn admit(&mut self, plane: usize, slot: usize);
@@ -58,15 +64,19 @@ pub trait ImportancePolicy: Send {
 }
 
 /// Accumulated-attention heavy-hitter policy (H2O).
+///
+/// Slot vectors grow lazily with the observed sequence length, so a policy
+/// for a `max_seq = 4096` model costs only its occupancy (matching the
+/// pooled cache-manager shadow blocks).
 pub struct H2oPolicy {
-    /// `[plane][slot]` accumulated attention mass.
+    /// `[plane][slot]` accumulated attention mass (grown on demand).
     acc: Vec<Vec<f32>>,
 }
 
 impl H2oPolicy {
-    pub fn new(planes: usize, max_slots: usize) -> Self {
+    pub fn new(planes: usize, _max_slots: usize) -> Self {
         Self {
-            acc: vec![vec![0.0; max_slots]; planes],
+            acc: vec![Vec::new(); planes],
         }
     }
 }
@@ -77,19 +87,35 @@ impl ImportancePolicy for H2oPolicy {
     }
 
     fn init_prefill(&mut self, plane: usize, acc: &[f32]) {
-        self.acc[plane][..acc.len()].copy_from_slice(acc);
+        let mine = &mut self.acc[plane];
+        if mine.len() < acc.len() {
+            mine.resize(acc.len(), 0.0);
+        }
+        mine[..acc.len()].copy_from_slice(acc);
     }
 
     fn observe(&mut self, plane: usize, attn: &[f32]) {
-        for (a, &p) in self.acc[plane].iter_mut().zip(attn) {
+        let mine = &mut self.acc[plane];
+        if mine.len() < attn.len() {
+            mine.resize(attn.len(), 0.0);
+        }
+        for (a, &p) in mine.iter_mut().zip(attn) {
             *a += p;
         }
+    }
+
+    fn observe_at(&mut self, plane: usize, slot: usize, mass: f32) {
+        let mine = &mut self.acc[plane];
+        if mine.len() <= slot {
+            mine.resize(slot + 1, 0.0);
+        }
+        mine[slot] += mass;
     }
 
     fn admit(&mut self, _plane: usize, _slot: usize) {}
 
     fn score(&self, plane: usize, slot: usize) -> f32 {
-        self.acc[plane][slot]
+        self.acc[plane].get(slot).copied().unwrap_or(0.0)
     }
 }
 
@@ -103,6 +129,7 @@ impl ImportancePolicy for LocalPolicy {
 
     fn init_prefill(&mut self, _plane: usize, _acc: &[f32]) {}
     fn observe(&mut self, _plane: usize, _attn: &[f32]) {}
+    fn observe_at(&mut self, _plane: usize, _slot: usize, _mass: f32) {}
     fn admit(&mut self, _plane: usize, _slot: usize) {}
 
     fn score(&self, _plane: usize, slot: usize) -> f32 {
@@ -114,15 +141,22 @@ impl ImportancePolicy for LocalPolicy {
 /// matters (paper's argument that importance criteria help, Fig. 6 vs RTN).
 pub struct RandomPolicy {
     rng: Pcg32,
-    /// `[plane][slot]` scores drawn lazily on admit.
+    /// `[plane][slot]` scores drawn lazily on admit (grown on demand).
     scores: Vec<Vec<f32>>,
 }
 
 impl RandomPolicy {
-    pub fn new(planes: usize, max_slots: usize, seed: u64) -> Self {
+    pub fn new(planes: usize, _max_slots: usize, seed: u64) -> Self {
         Self {
             rng: Pcg32::new(seed),
-            scores: vec![vec![0.0; max_slots]; planes],
+            scores: vec![Vec::new(); planes],
+        }
+    }
+
+    fn ensure(&mut self, plane: usize, slots: usize) {
+        let mine = &mut self.scores[plane];
+        if mine.len() < slots {
+            mine.resize(slots, 0.0);
         }
     }
 }
@@ -133,6 +167,7 @@ impl ImportancePolicy for RandomPolicy {
     }
 
     fn init_prefill(&mut self, plane: usize, acc: &[f32]) {
+        self.ensure(plane, acc.len());
         for s in 0..acc.len() {
             self.scores[plane][s] = self.rng.gen_f32();
         }
@@ -140,12 +175,15 @@ impl ImportancePolicy for RandomPolicy {
 
     fn observe(&mut self, _plane: usize, _attn: &[f32]) {}
 
+    fn observe_at(&mut self, _plane: usize, _slot: usize, _mass: f32) {}
+
     fn admit(&mut self, plane: usize, slot: usize) {
+        self.ensure(plane, slot + 1);
         self.scores[plane][slot] = self.rng.gen_f32();
     }
 
     fn score(&self, plane: usize, slot: usize) -> f32 {
-        self.scores[plane][slot]
+        self.scores[plane].get(slot).copied().unwrap_or(0.0)
     }
 }
 
@@ -220,5 +258,32 @@ mod tests {
     fn default_victim_breaks_ties_by_first() {
         let mut p = H2oPolicy::new(1, 4); // all scores zero
         assert_eq!(p.select_victim(0, &[2, 1, 3]), 2);
+    }
+
+    #[test]
+    fn observe_at_equals_one_hot_observe() {
+        let mut point = H2oPolicy::new(1, 8);
+        let mut dense = H2oPolicy::new(1, 8);
+        point.init_prefill(0, &[0.1, 0.2, 0.3]);
+        dense.init_prefill(0, &[0.1, 0.2, 0.3]);
+        // credit slot 3 (one beyond the prefill) with mass 0.7
+        point.observe_at(0, 3, 0.7);
+        dense.observe(0, &[0.0, 0.0, 0.0, 0.7]);
+        for s in 0..5 {
+            assert!(
+                (point.score(0, s) - dense.score(0, s)).abs() < 1e-9,
+                "slot {s}"
+            );
+        }
+    }
+
+    #[test]
+    fn policies_grow_lazily_beyond_seen_slots() {
+        // scores of never-observed slots are 0, not a panic — policies no
+        // longer preallocate max_seq-sized vectors.
+        let p = H2oPolicy::new(2, 4096);
+        assert_eq!(p.score(1, 4000), 0.0);
+        let r = RandomPolicy::new(1, 4096, 3);
+        assert_eq!(r.score(0, 4000), 0.0);
     }
 }

@@ -129,11 +129,21 @@ pub fn dequantize(q: &Quantized) -> Vec<f32> {
 
 /// Worst-case absolute reconstruction error for a given group's scale:
 /// half a quantization step (plus FP16 metadata rounding slop).
-pub fn error_bound(alpha: f32, beta: f32, f16_meta: bool) -> f32 {
+///
+/// The slop models FP16's 2^-11 relative rounding of α (amplified by the
+/// precision's own max code — the value furthest from β) and of β. Using
+/// the actual `precision.levels() - 1` instead of a hard-coded Int8 max
+/// code keeps the bound tight for INT2/3/4.
+pub fn error_bound(alpha: f32, beta: f32, precision: Precision, f16_meta: bool) -> f32 {
+    debug_assert!(
+        precision.is_quantized(),
+        "error_bound is defined for code-book precisions, not {precision:?}"
+    );
     let meta_slop = if f16_meta {
-        // FP16 relative error 2^-11 on both α (amplified by max code ~ covered
-        // by α itself) and β.
-        (alpha.abs() * 255.0 + beta.abs()) / 2048.0
+        // saturating_sub: Fp16 reports 0 levels; keep release builds sane
+        // even if the debug_assert above is compiled out.
+        let max_code = precision.levels().saturating_sub(1) as f32;
+        (alpha.abs() * max_code + beta.abs()) / 2048.0
     } else {
         0.0
     };
@@ -252,7 +262,15 @@ mod tests {
                 let q = quantize(&x, prm);
                 let y = dequantize(&q);
                 for gi in 0..n_groups {
-                    let bound = error_bound(q.scales[gi], q.zeros[gi], prm.f16_meta);
+                    // The precision-aware bound is strictly tighter than the
+                    // old hard-coded Int8 slop for every sub-8-bit precision.
+                    let bound = error_bound(q.scales[gi], q.zeros[gi], p, prm.f16_meta);
+                    if p != Precision::Int8 && prm.f16_meta {
+                        let loose = 0.5 * q.scales[gi]
+                            + (q.scales[gi].abs() * 255.0 + q.zeros[gi].abs()) / 2048.0
+                            + 1e-6;
+                        prop_assert!(bound <= loose, "bound {bound} not tighter than {loose}");
+                    }
                     for i in gi * group..(gi + 1) * group {
                         prop_assert!(
                             (x[i] - y[i]).abs() <= bound,

@@ -9,7 +9,7 @@
 //! `h2o` (+`ratio`) | `rtn` (+`prec`). Response:
 //! ```json
 //! {"id": 1, "tokens": [230, 231], "ttft_ms": 12.3, "latency_ms": 40.1,
-//!  "cache_pct": 33.2, "error": null}
+//!  "cache_pct": 33.2, "host_bytes": 43008, "error": null}
 //! ```
 
 use crate::coordinator::Response;
@@ -83,6 +83,7 @@ pub fn encode_response(r: &Response) -> String {
     o.set("prompt_tokens", r.metrics.prompt_tokens);
     o.set("generated_tokens", r.metrics.generated_tokens);
     o.set("cache_pct", r.metrics.cache_pct);
+    o.set("host_bytes", r.metrics.host_bytes);
     o.set(
         "error",
         match &r.error {
@@ -169,6 +170,7 @@ mod tests {
                 prompt_tokens: 12,
                 generated_tokens: 3,
                 cache_pct: 33.5,
+                host_bytes: 4096,
             },
             error: None,
         };
@@ -178,5 +180,6 @@ mod tests {
         assert_eq!(v.field_arr("tokens").unwrap().len(), 3);
         assert!(v.field("error").unwrap() == &Json::Null);
         assert!((v.field_f64("cache_pct").unwrap() - 33.5).abs() < 1e-9);
+        assert_eq!(v.field_i64("host_bytes").unwrap(), 4096);
     }
 }

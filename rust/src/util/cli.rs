@@ -21,17 +21,28 @@ pub struct Args {
 }
 
 /// CLI parse/access error.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("missing required option --{0}")]
     Missing(String),
-    #[error("option --{key}: cannot parse '{value}' as {ty}")]
     BadValue {
         key: String,
         value: String,
         ty: &'static str,
     },
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Missing(name) => write!(f, "missing required option --{name}"),
+            CliError::BadValue { key, value, ty } => {
+                write!(f, "option --{key}: cannot parse '{value}' as {ty}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl Args {
     /// Parse from an iterator of arguments (excluding or including argv[0] —

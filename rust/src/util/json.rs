@@ -68,15 +68,28 @@ impl JsonObj {
 }
 
 /// Parse / access errors.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum JsonError {
-    #[error("json parse error at byte {pos}: {msg}")]
     Parse { pos: usize, msg: String },
-    #[error("json: missing field '{0}'")]
     Missing(String),
-    #[error("json: field '{field}' has wrong type (expected {expected})")]
     WrongType { field: String, expected: &'static str },
 }
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            JsonError::Parse { pos, msg } => {
+                write!(f, "json parse error at byte {pos}: {msg}")
+            }
+            JsonError::Missing(name) => write!(f, "json: missing field '{name}'"),
+            JsonError::WrongType { field, expected } => {
+                write!(f, "json: field '{field}' has wrong type (expected {expected})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     // ------------------------------------------------------------------

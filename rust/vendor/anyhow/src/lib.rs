@@ -1,0 +1,157 @@
+//! Minimal in-tree replacement for the `anyhow` crate.
+//!
+//! The offline build image carries no registry crates, so this vendored
+//! stand-in provides the exact API surface the workspace uses: [`Error`],
+//! [`Result`], [`Error::msg`], the [`anyhow!`], [`bail!`] and [`ensure!`]
+//! macros, and `?`-conversion from any `std::error::Error`. Like the real
+//! crate, `Error` deliberately does **not** implement `std::error::Error`
+//! (that is what makes the blanket `From` impl coherent).
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A type-erased error: a rendered message plus an optional source chain.
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+/// `Result<T, anyhow::Error>` with an overridable error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M>(message: M) -> Error
+    where
+        M: fmt::Display + fmt::Debug + Send + Sync + 'static,
+    {
+        Error {
+            msg: message.to_string(),
+            source: None,
+        }
+    }
+
+    /// Wrap a concrete error, keeping it as the source.
+    pub fn new<E>(error: E) -> Error
+    where
+        E: StdError + Send + Sync + 'static,
+    {
+        Error {
+            msg: error.to_string(),
+            source: Some(Box::new(error)),
+        }
+    }
+
+    /// The wrapped source error, if any.
+    pub fn source(&self) -> Option<&(dyn StdError + 'static)> {
+        self.source.as_deref().map(|e| e as &(dyn StdError + 'static))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut cause = self.source();
+        if cause.is_some() {
+            write!(f, "\n\nCaused by:")?;
+        }
+        while let Some(e) = cause {
+            write!(f, "\n    {e}")?;
+            cause = e.source();
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// Construct an [`Error`] from a format string or a displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!(
+                "condition failed: ",
+                stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($t)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(!flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    #[test]
+    fn message_and_display() {
+        let e = Error::msg("boom");
+        assert_eq!(e.to_string(), "boom");
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(e.to_string(), "x = 3");
+    }
+
+    #[test]
+    fn question_mark_from_std_error() {
+        fn inner() -> Result<String> {
+            let s = std::str::from_utf8(&[0xFF])?;
+            Ok(s.to_string())
+        }
+        let err = inner().unwrap_err();
+        assert!(err.source().is_some());
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        assert_eq!(fails(false).unwrap(), 7);
+        assert!(fails(true).unwrap_err().to_string().contains("true"));
+        fn b() -> Result<()> {
+            bail!("nope {}", 1);
+        }
+        assert_eq!(b().unwrap_err().to_string(), "nope 1");
+    }
+}

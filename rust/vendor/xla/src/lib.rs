@@ -1,0 +1,150 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The real crate wraps `xla_extension`'s PJRT C API. This build environment
+//! ships no XLA runtime, so the stub mirrors the API surface that
+//! `mikv::runtime::client` consumes and fails cleanly at the single
+//! entry point ([`PjRtClient::cpu`]). Everything downstream of a client is
+//! therefore unreachable; the methods exist only so the callers type-check,
+//! and every artifact-dependent path (engine load, integration tests,
+//! benches) skips with a readable error instead of failing to link.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type matching the real crate's `Display + Debug` usage.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable() -> Error {
+        Error(
+            "PJRT runtime unavailable: this build uses the offline `xla` stub \
+             (no XLA shared library in the image)"
+                .to_string(),
+        )
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Host element types PJRT buffers can be built from.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+/// A device-resident buffer (never constructible through the stub).
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+/// A host literal (never constructible through the stub).
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Parsed HLO module (text interchange format).
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<HloModuleProto, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// A compiled executable (never constructible through the stub).
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+/// The PJRT client. [`PjRtClient::cpu`] is the only way in, and it fails
+/// with a readable message in the stub.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        Err(Error::unavailable())
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        Err(Error::unavailable())
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer, Error> {
+        Err(Error::unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_fails_cleanly() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("offline"));
+    }
+
+    #[test]
+    fn hlo_load_fails_cleanly() {
+        assert!(HloModuleProto::from_text_file("/nonexistent.hlo.txt").is_err());
+    }
+}
