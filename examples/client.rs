@@ -1,0 +1,168 @@
+//! Streaming Serving-API-v1 client and end-to-end smoke check.
+//!
+//! Two modes:
+//!
+//! * `--stub` — self-hosted smoke (CI runs this): boots the full serving
+//!   stack on a deterministic [`StubEngine`] (no artifacts needed) and
+//!   drives the v1 API end to end over a real socket — streamed `generate`
+//!   with `keep`, a 2-turn `append` continuation proving the cache carries
+//!   over, `stats`, `cancel`, and a legacy one-shot regression check. Any
+//!   violated invariant exits non-zero.
+//! * default — connects to a running `mikv serve` at `--addr` and runs the
+//!   same workflow against the real engine.
+//!
+//! ```sh
+//! cargo run --release --example client -- --stub
+//! mikv serve --port 7777 &
+//! cargo run --release --example client -- --addr 127.0.0.1:7777
+//! ```
+
+use mikv::coordinator::{CompressionSpec, Coordinator, CoordinatorConfig, Op};
+use mikv::model::StubEngine;
+use mikv::server::{Client, RequestBuilder};
+use mikv::util::cli::Args;
+use mikv::util::json::Json;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    if !args.flag("stub") {
+        let addr = args.get_str("addr", "127.0.0.1:7777");
+        return drive(&addr);
+    }
+
+    // Self-hosted: stub engine + coordinator + TCP server, then the same
+    // client workflow over a real socket.
+    let engine = StubEngine::new(StubEngine::test_dims(256));
+    let (tx, rx) = std::sync::mpsc::channel::<Op>();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    std::thread::spawn(move || {
+        let _ = mikv::server::serve(listener, tx);
+    });
+    let driver = std::thread::spawn(move || drive(&addr));
+    Coordinator::new(engine, CoordinatorConfig::default())
+        .run_until(rx, || driver.is_finished());
+    driver.join().expect("driver panicked")?;
+    println!("serving API v1 smoke: OK");
+    Ok(())
+}
+
+/// Exercise every v1 op and the legacy shape; error on any broken invariant.
+fn drive(addr: &str) -> anyhow::Result<()> {
+    let mut c = Client::connect(addr)?;
+    let spec = CompressionSpec::mikv(0.25, "int4");
+
+    // --- Turn 1: streamed generate, keeping the session ---
+    let id1 = c.next_id();
+    c.submit(
+        &RequestBuilder::generate(id1)
+            .prompt(&[1, 2, 3, 4, 5])
+            .max_new(6)
+            .keep(true)
+            .compression(spec.clone()),
+    )?;
+    let (streamed, done) = c.read_turn(id1)?;
+    anyhow::ensure!(done.field_str("event")? == "done", "turn 1 failed: {done}");
+    let final_tokens: Vec<i64> = done
+        .field_arr("tokens")?
+        .iter()
+        .filter_map(Json::as_i64)
+        .collect();
+    anyhow::ensure!(
+        streamed == final_tokens,
+        "streamed {streamed:?} != done tokens {final_tokens:?}"
+    );
+    anyhow::ensure!(!streamed.is_empty(), "no tokens streamed");
+    let session = done.field_i64("session")?;
+    let occ1 = done.field_i64("hi_slots")? + done.field_i64("lo_slots")?;
+    let bytes1 = done.field_i64("host_bytes")?;
+    anyhow::ensure!(occ1 > 0 && bytes1 > 0, "turn 1 reported no footprint");
+    println!(
+        "turn 1: {} tokens streamed, session {session}, {occ1} slots, {bytes1} B"
+    );
+
+    // --- Turn 2: append into the same session ---
+    let id2 = c.next_id();
+    c.submit(
+        &RequestBuilder::append(id2, session as u64)
+            .prompt(&[6, 7])
+            .max_new(4),
+    )?;
+    let (streamed2, done2) = c.read_turn(id2)?;
+    anyhow::ensure!(done2.field_str("event")? == "done", "turn 2 failed: {done2}");
+    anyhow::ensure!(
+        done2.field_i64("session")? == session,
+        "append must keep the session id"
+    );
+    let occ2 = done2.field_i64("hi_slots")? + done2.field_i64("lo_slots")?;
+    anyhow::ensure!(
+        occ2 > occ1,
+        "occupancy must carry over and grow ({occ1} -> {occ2})"
+    );
+    anyhow::ensure!(!streamed2.is_empty(), "turn 2 streamed nothing");
+    println!(
+        "turn 2: {} tokens streamed, occupancy {occ1} -> {occ2} (cache reused)",
+        streamed2.len()
+    );
+
+    // --- Stats over the wire ---
+    let id3 = c.next_id();
+    c.submit(&RequestBuilder::stats(id3))?;
+    let (_, stats) = c.read_turn(id3)?;
+    anyhow::ensure!(stats.field_str("event")? == "stats", "bad stats: {stats}");
+    anyhow::ensure!(stats.field_i64("completed")? >= 2);
+    anyhow::ensure!(stats.field_i64("parked_sessions")? >= 1, "session parked");
+    println!(
+        "stats: {} completed, {} parked session(s), {} pool blocks free",
+        stats.field_i64("completed")?,
+        stats.field_i64("parked_sessions")?,
+        stats.field_i64("pool_free_blocks")?
+    );
+
+    // --- Cancel an in-flight long turn ---
+    let id4 = c.next_id();
+    c.submit(
+        &RequestBuilder::append(id4, session as u64)
+            .prompt(&[8])
+            .max_new(100_000),
+    )?;
+    let id5 = c.next_id();
+    c.submit(&RequestBuilder::cancel(id5, id4))?;
+    // The cancel answer and the turn's terminal event can arrive in either
+    // order (the turn may even finish naturally first); collect both.
+    let mut done4: Option<Json> = None;
+    let mut cres: Option<Json> = None;
+    while done4.is_none() || cres.is_none() {
+        let v = c.recv()?;
+        let vid = v.field("id").ok().and_then(Json::as_i64);
+        let ev = v.field_str("event").unwrap_or("").to_string();
+        match (vid, ev.as_str()) {
+            (Some(i), "done") | (Some(i), "error") if i == id4 as i64 => done4 = Some(v),
+            (Some(i), "cancelled") if i == id5 as i64 => cres = Some(v),
+            (Some(i), "token") if i == id4 as i64 => {}
+            _ => anyhow::bail!("unexpected line: {v}"),
+        }
+    }
+    let done4 = done4.expect("loop exits with both set");
+    let cancelled = done4.field("cancelled").ok() == Some(&Json::Bool(true));
+    println!(
+        "cancel: turn ended via {} ({} tokens)",
+        if cancelled { "cancel" } else { "natural completion" },
+        done4.field_arr("tokens").map(|t| t.len()).unwrap_or(0)
+    );
+    let cres = cres.expect("loop exits with both set");
+    anyhow::ensure!(cres.field_str("event")? == "cancelled", "bad: {cres}");
+
+    // --- Legacy one-shot shape still answered in one line, no events ---
+    let id6 = c.request(&[1, 2, 3], 2, &CompressionSpec::full())?;
+    let legacy = c.recv()?;
+    anyhow::ensure!(
+        legacy.field("event").is_err(),
+        "legacy reply must not be an event: {legacy}"
+    );
+    anyhow::ensure!(legacy.field_i64("id")? == id6 as i64);
+    anyhow::ensure!(legacy.field("error")? == &Json::Null, "legacy error");
+    anyhow::ensure!(legacy.field_arr("tokens")?.len() == 2);
+    println!("legacy one-shot: OK");
+    Ok(())
+}

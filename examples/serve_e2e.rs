@@ -11,9 +11,10 @@
 //! make artifacts && cargo run --release --example serve_e2e -- --requests 24
 //! ```
 
-use mikv::coordinator::{Coordinator, CoordinatorConfig, Request};
+use mikv::coordinator::{CompressionSpec, Coordinator, CoordinatorConfig, Op};
 use mikv::eval::corpus;
 use mikv::model::Engine;
+use mikv::server::RequestBuilder;
 use mikv::util::cli::Args;
 use mikv::util::json::Json;
 use mikv::util::rng::Pcg32;
@@ -32,15 +33,11 @@ fn main() -> anyhow::Result<()> {
     // PJRT handles are not Send, so the engine/coordinator stay on the MAIN
     // thread; the TCP listener and the benchmark client run on workers.
     let engine = Engine::load(&artifacts, &model)?;
-    let dims = engine.dims().clone();
-    let (tx, rx) = std::sync::mpsc::channel::<Request>();
+    let (tx, rx) = std::sync::mpsc::channel::<Op>();
     let listener = std::net::TcpListener::bind(("127.0.0.1", port))?;
-    {
-        let dims = dims.clone();
-        std::thread::spawn(move || {
-            let _ = mikv::server::serve(listener, dims, tx);
-        });
-    }
+    std::thread::spawn(move || {
+        let _ = mikv::server::serve(listener, tx);
+    });
     std::thread::spawn(move || {
         if let Err(e) = run_client(port, n_requests) {
             eprintln!("client error: {e}");
@@ -68,30 +65,29 @@ fn run_client(port: u16, n_requests: usize) -> anyhow::Result<()> {
     let reader = BufReader::new(stream);
 
     let mut rng = Pcg32::new(99);
-    let mode_jsons = [
-        r#""mode":"full""#,
-        r#""mode":"mikv","ratio":0.25,"lo":"int2""#,
-        r#""mode":"mikv","ratio":0.2,"lo":"int2""#,
-        r#""mode":"h2o","ratio":0.25"#,
+    let specs = [
+        CompressionSpec::full(),
+        CompressionSpec::mikv(0.25, "int2"),
+        CompressionSpec::mikv(0.2, "int2"),
+        CompressionSpec::h2o(0.25),
     ];
     let mut expected: Vec<Vec<i64>> = Vec::new();
     let t0 = Instant::now();
     for i in 0..n_requests {
         let sample = corpus::gen_lineret(&mut rng, 14, 1);
-        let prompt: Vec<String> = sample.prompt.iter().map(|t| t.to_string()).collect();
-        let line = format!(
-            r#"{{"id":{i},"prompt":[{}],"max_new":{},{}}}"#,
-            prompt.join(","),
-            sample.answer.len(),
-            mode_jsons[i % mode_jsons.len()]
-        );
+        let line = RequestBuilder::generate(i as u64)
+            .prompt(&sample.prompt)
+            .max_new(sample.answer.len())
+            .compression(specs[i % specs.len()].clone())
+            .legacy()
+            .build();
         writer.write_all(line.as_bytes())?;
         writer.write_all(b"\n")?;
         expected.push(sample.answer);
     }
 
     // --- collect responses ---
-    let mut per_mode: Vec<(usize, usize, f64, f64)> = vec![(0, 0, 0.0, 0.0); mode_jsons.len()];
+    let mut per_mode: Vec<(usize, usize, f64, f64)> = vec![(0, 0, 0.0, 0.0); specs.len()];
     let mut latencies = Vec::new();
     let mut got = 0usize;
     for line in reader.lines() {
@@ -102,7 +98,7 @@ fn run_client(port: u16, n_requests: usize) -> anyhow::Result<()> {
             .iter()
             .map(|t| t.as_i64().unwrap_or(-1))
             .collect();
-        let m = id % mode_jsons.len();
+        let m = id % specs.len();
         per_mode[m].1 += 1;
         if tokens == expected[id] {
             per_mode[m].0 += 1;

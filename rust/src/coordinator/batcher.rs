@@ -3,27 +3,37 @@
 //! Runs on the engine thread (PJRT handles are not `Send`). Each scheduler
 //! iteration:
 //!
-//! 1. drains newly arrived requests into the waiting queue (FCFS);
-//! 2. admits waiting requests up to `max_active` and prefills them in
-//!    chunks of the compiled prefill batch sizes;
+//! 1. drains newly arrived [`Op`]s: submits join the waiting queue (FCFS,
+//!    bounded by `max_waiting` → `overloaded`), cancels mark their target,
+//!    stats ops are answered immediately;
+//! 2. admits waiting turns up to `max_active`: fresh `generate`s are
+//!    prefilled in chunks of the compiled prefill batch sizes, `append`s
+//!    check their parked session out of the registry and queue the new
+//!    prompt tokens for re-ingest;
 //! 3. forms decode batches from the active set, grouped by graph kind
 //!    (MiKV-cache sessions vs full/oracle-cache sessions — different
-//!    executables) and, within the oracle group, by `oracle_k`;
-//! 4. retires finished sessions (budget reached / stop token / cache full /
-//!    engine failure) and replies on each request's channel.
+//!    executables) and, within the oracle group, by `oracle_k`. Sampled
+//!    tokens are **streamed** to each turn's [`EventSink`] as they exist;
+//!    sessions still re-ingesting appended prompt tokens feed the next
+//!    prompt token instead of the sample;
+//! 4. retires finished turns (budget / stop token / cache full / cancel /
+//!    engine failure), emitting the terminal `done` (or structured
+//!    `error`) event — and, for turns submitted with `keep`, **parking**
+//!    the session in the registry so a follow-up `append` continues the
+//!    same cache. The registry is bounded by a TTL and a total-host-bytes
+//!    cap (oldest parked evicted first); dropped sessions return their
+//!    blocks to the shared [`BufferPool`].
 //!
 //! Short requests are never stuck behind long ones: batches are re-formed
 //! every step from whatever is active (the "continuous" in continuous
-//! batching, per Orca/vLLM). Session cache blocks are checked out of one
-//! shared [`BufferPool`], so a retiring request's allocations are recycled
-//! by the next admit instead of round-tripping the allocator.
+//! batching, per Orca/vLLM).
 
-use super::request::{Request, RequestMetrics, Response};
-use super::stats::MetricsCollector;
+use super::request::{ErrorCode, Op, Request, RequestMetrics, Response, ServeEvent, WireError};
+use super::stats::{MetricsCollector, StatsSnapshot};
 use crate::kvcache::BufferPool;
 use crate::model::{sampler, CacheMode, Engine, Session};
 use crate::runtime::ModelDims;
-use std::collections::VecDeque;
+use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
 
@@ -36,6 +46,13 @@ pub struct CoordinatorConfig {
     pub prefill_chunk: usize,
     /// Channel poll timeout when idle.
     pub idle_poll: Duration,
+    /// Waiting-queue bound; submits beyond it are rejected `overloaded`.
+    pub max_waiting: usize,
+    /// Parked sessions idle longer than this are dropped.
+    pub session_ttl: Duration,
+    /// Total host bytes parked sessions may pin; the oldest-parked are
+    /// evicted beyond this bound.
+    pub max_session_bytes: usize,
 }
 
 impl Default for CoordinatorConfig {
@@ -44,13 +61,17 @@ impl Default for CoordinatorConfig {
             max_active: 8,
             prefill_chunk: 4,
             idle_poll: Duration::from_millis(20),
+            max_waiting: 256,
+            session_ttl: Duration::from_secs(120),
+            max_session_bytes: 512 << 20,
         }
     }
 }
 
 /// The engine surface the coordinator drives. The real [`Engine`] needs
 /// compiled artifacts; this seam lets the scheduler loop be exercised (and
-/// its failure handling regression-tested) with stub engines.
+/// its failure handling regression-tested) with the artifact-free
+/// [`crate::model::StubEngine`].
 pub trait StepEngine {
     fn dims(&self) -> &ModelDims;
 
@@ -85,26 +106,57 @@ impl StepEngine for Engine {
     }
 }
 
+/// An in-flight turn.
 struct Active {
     req: Request,
     sess: Session,
-    prefill_done: Instant,
+    /// Appended prompt tokens not yet fed through the decode path (see
+    /// `admit_append`). While non-empty, sampled logits are discarded and
+    /// the next prompt token is fed instead.
+    pending_feed: VecDeque<i64>,
+    /// This turn's prompt length (`sess.prompt_len` is cumulative).
+    turn_prompt: usize,
+    /// When this turn's first token was sampled (TTFT anchor).
+    first_token_at: Option<Instant>,
+    /// Token events emitted this turn (also the next event index).
+    emitted: usize,
     generated_budget: usize,
+    cancelled: bool,
     /// Set when the engine failed a step for this session; the retire pass
-    /// replies with an error instead of retrying forever.
-    error: Option<String>,
+    /// replies with a structured error instead of retrying forever.
+    error: Option<WireError>,
 }
 
 impl Active {
+    fn generated_len(&self) -> usize {
+        // During an append's prompt re-ingest, `prompt_len` pre-counts the
+        // still-pending tokens, so saturate instead of underflowing.
+        self.sess.tokens.len().saturating_sub(self.sess.prompt_len)
+    }
+
     fn finished(&self, max_seq: usize) -> bool {
-        let gen = self.sess.tokens.len() - self.sess.prompt_len;
+        if self.cancelled {
+            return true;
+        }
+        if !self.pending_feed.is_empty() {
+            return false;
+        }
+        let gen = self.generated_len();
         // The next decode appends into slot `seq_len`, which is legal while
         // `seq_len < max_seq` — retire only once the cache is actually full
-        // (`seq_len == max_seq`), so the last slot is not wasted.
+        // (`seq_len == max_seq`), so the last slot is not wasted. The stop
+        // check only looks at *sampled* tokens (gen > 0), never at a fed
+        // prompt token.
         gen >= self.generated_budget
-            || self.req.stop == Some(self.sess.last_token)
+            || (gen > 0 && self.req.stop == Some(self.sess.last_token))
             || self.sess.cache.seq_len() >= max_seq
     }
+}
+
+/// A session parked between turns, awaiting `append`.
+struct Parked {
+    sess: Session,
+    parked_at: Instant,
 }
 
 /// The coordinator. Owns the engine for the lifetime of [`Self::run`].
@@ -132,17 +184,19 @@ impl<E: StepEngine> Coordinator<E> {
         &self.pool
     }
 
-    /// Serve until the request channel closes and all work drains.
-    pub fn run(&self, rx: Receiver<Request>) {
+    /// Serve until the op channel closes and all work drains.
+    pub fn run(&self, rx: Receiver<Op>) {
         self.run_until(rx, || false)
     }
 
     /// Like [`Self::run`], but also stops (after draining in-flight work)
     /// once `stop()` returns true — used when the shutdown signal is
     /// something other than channel closure (e.g. a finished test client).
-    pub fn run_until(&self, rx: Receiver<Request>, stop: impl Fn() -> bool) {
+    pub fn run_until(&self, rx: Receiver<Op>, stop: impl Fn() -> bool) {
         let mut waiting: VecDeque<Request> = VecDeque::new();
         let mut active: Vec<Active> = Vec::new();
+        let mut parked: HashMap<u64, Parked> = HashMap::new();
+        let mut next_session: u64 = 1;
         let mut collector = MetricsCollector::new();
         let mut closed = false;
 
@@ -150,11 +204,15 @@ impl<E: StepEngine> Coordinator<E> {
             // 1. Drain the channel (block briefly when idle).
             loop {
                 match if active.is_empty() && waiting.is_empty() && !closed {
-                    rx.recv_timeout(self.cfg.idle_poll).map_err(|e| e == RecvTimeoutError::Disconnected)
+                    rx.recv_timeout(self.cfg.idle_poll)
+                        .map_err(|e| e == RecvTimeoutError::Disconnected)
                 } else {
-                    rx.try_recv().map_err(|e| e == std::sync::mpsc::TryRecvError::Disconnected)
+                    rx.try_recv()
+                        .map_err(|e| e == std::sync::mpsc::TryRecvError::Disconnected)
                 } {
-                    Ok(req) => waiting.push_back(req),
+                    Ok(op) => {
+                        self.handle_op(op, &mut waiting, &mut active, &parked, &collector)
+                    }
                     Err(true) => {
                         closed = true;
                         break;
@@ -163,27 +221,28 @@ impl<E: StepEngine> Coordinator<E> {
                 }
             }
 
-            // 2. Admit + prefill a chunk.
+            // 2. Admit a chunk: prefill fresh turns, resume appends.
             let room = self.cfg.max_active.saturating_sub(active.len());
             let n_admit = room.min(self.cfg.prefill_chunk).min(waiting.len());
             if n_admit > 0 {
                 let batch: Vec<Request> = waiting.drain(..n_admit).collect();
-                self.prefill_batch(batch, &mut active);
+                self.admit_batch(batch, &mut active, &mut parked);
             }
 
-            // 2b. Retire sessions that are already complete after prefill
+            // 2b. Retire turns already complete after admission
             // (`max_new <= 1`, or the prefill-sampled token hit `stop`)
             // before spending a decode step on them — a decode here would
             // overshoot the documented token budget by one.
-            self.retire(&mut active, &mut collector);
+            self.retire(&mut active, &mut parked, &mut next_session, &mut collector);
 
             // 3. One decode step over the active set, grouped by graph.
             if !active.is_empty() {
                 self.decode_round(&mut active);
             }
 
-            // 4. Retire finished (or failed) sessions.
-            self.retire(&mut active, &mut collector);
+            // 4. Retire finished/failed/cancelled turns; bound the registry.
+            self.retire(&mut active, &mut parked, &mut next_session, &mut collector);
+            self.sweep_parked(&mut parked);
         }
         if collector.n_requests() > 0 {
             let (p50, p99) = collector.latency();
@@ -200,68 +259,188 @@ impl<E: StepEngine> Coordinator<E> {
         }
     }
 
-    /// Remove finished or failed sessions from `active`, replying on each
-    /// request's channel and recording completed-request metrics.
-    fn retire(&self, active: &mut Vec<Active>, collector: &mut MetricsCollector) {
-        let max_seq = self.engine.dims().max_seq;
-        let mut i = 0;
-        while i < active.len() {
-            if active[i].error.is_some() || active[i].finished(max_seq) {
-                let a = active.swap_remove(i);
-                let resp = match a.error {
-                    Some(msg) => Response::error(a.req.id, msg),
-                    None => {
-                        let tokens = a.sess.generated().to_vec();
-                        let metrics = RequestMetrics {
-                            ttft: a.prefill_done - a.req.submitted_at,
-                            latency: a.req.submitted_at.elapsed(),
-                            prompt_tokens: a.sess.prompt_len,
-                            generated_tokens: tokens.len(),
-                            cache_pct: a.sess.cache.cache_size_pct(),
-                            host_bytes: a.sess.cache.host_bytes(),
-                        };
-                        collector.record(&metrics);
-                        Response {
-                            id: a.req.id,
-                            metrics,
-                            tokens,
-                            error: None,
-                        }
-                    }
+    /// Apply one drained op to the scheduler state.
+    fn handle_op(
+        &self,
+        op: Op,
+        waiting: &mut VecDeque<Request>,
+        active: &mut [Active],
+        parked: &HashMap<u64, Parked>,
+        collector: &MetricsCollector,
+    ) {
+        match op {
+            Op::Submit(req) => {
+                if waiting.len() >= self.cfg.max_waiting {
+                    let err = WireError::new(
+                        ErrorCode::Overloaded,
+                        format!("queue full ({} waiting)", waiting.len()),
+                    );
+                    let _ = req.reply.emit(ServeEvent::Done(Response::error(req.id, err)));
+                } else {
+                    waiting.push_back(req);
+                }
+            }
+            Op::Cancel { id, target, reply } => {
+                let mut found = false;
+                if let Some(pos) = waiting.iter().position(|r| r.id == target) {
+                    let r = waiting.remove(pos).expect("position is in range");
+                    found = true;
+                    let _ = r.reply.emit(ServeEvent::Done(Response::cancelled(r.id)));
+                } else if let Some(a) = active.iter_mut().find(|a| a.req.id == target) {
+                    a.cancelled = true;
+                    found = true;
+                }
+                let _ = reply.emit(ServeEvent::CancelResult { id, target, found });
+            }
+            Op::Stats { id, reply } => {
+                let parked_bytes: usize =
+                    parked.values().map(|p| p.sess.cache.host_bytes()).sum();
+                let snapshot = StatsSnapshot {
+                    active: active.len(),
+                    waiting: waiting.len(),
+                    parked_sessions: parked.len(),
+                    parked_bytes,
+                    completed: collector.n_requests(),
+                    generated_tokens: collector.generated_tokens(),
+                    throughput_tps: collector.throughput(),
+                    mean_host_bytes: collector.mean_host_bytes(),
+                    peak_host_bytes: collector.peak_host_bytes(),
+                    pool: self.pool.stats(),
                 };
-                let _ = a.req.reply.send(resp); // receiver may be gone
-            } else {
-                i += 1;
+                let _ = reply.emit(ServeEvent::Stats { id, snapshot });
             }
         }
     }
 
-    fn prefill_batch(&self, reqs: Vec<Request>, active: &mut Vec<Active>) {
+    /// Remove finished, failed or cancelled turns from `active`, emitting
+    /// each one's terminal event, recording metrics, and parking `keep`
+    /// sessions in the registry.
+    fn retire(
+        &self,
+        active: &mut Vec<Active>,
+        parked: &mut HashMap<u64, Parked>,
+        next_session: &mut u64,
+        collector: &mut MetricsCollector,
+    ) {
+        let max_seq = self.engine.dims().max_seq;
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].error.is_none() && !active[i].finished(max_seq) {
+                i += 1;
+                continue;
+            }
+            let a = active.swap_remove(i);
+            let resp = match a.error {
+                Some(err) => Response::error(a.req.id, err),
+                None => {
+                    let now = Instant::now();
+                    // A turn cancelled mid-prompt-feed has produced nothing.
+                    let tokens: Vec<i64> = if a.sess.tokens.len() >= a.sess.prompt_len {
+                        a.sess.generated().to_vec()
+                    } else {
+                        Vec::new()
+                    };
+                    let occ = a.sess.cache.occupancy();
+                    let metrics = RequestMetrics {
+                        ttft: a
+                            .first_token_at
+                            .unwrap_or(now)
+                            .duration_since(a.req.submitted_at),
+                        latency: a.req.submitted_at.elapsed(),
+                        prompt_tokens: a.turn_prompt,
+                        generated_tokens: tokens.len(),
+                        cache_pct: a.sess.cache.cache_size_pct(),
+                        host_bytes: a.sess.cache.host_bytes(),
+                        hi_slots: occ.hi_slots,
+                        lo_slots: occ.lo_slots,
+                    };
+                    // Cancelled partials stay out of the completed-turn
+                    // stats (their ttft/latency would mix queue-abort noise
+                    // into the serving percentiles); the Done event still
+                    // carries this turn's own metrics.
+                    if !a.cancelled {
+                        collector.record(&metrics);
+                    }
+                    // Park for `append` when asked. A cancelled turn still
+                    // parks when its cache sits at a clean token boundary;
+                    // only a cancel that landed mid-prompt-feed (cache
+                    // between turns) drops the session.
+                    let session = if a.req.keep && a.pending_feed.is_empty() {
+                        let sid = a.req.session.unwrap_or_else(|| {
+                            let sid = *next_session;
+                            *next_session += 1;
+                            sid
+                        });
+                        parked.insert(
+                            sid,
+                            Parked {
+                                sess: a.sess,
+                                parked_at: now,
+                            },
+                        );
+                        Some(sid)
+                    } else {
+                        None
+                    };
+                    Response {
+                        id: a.req.id,
+                        tokens,
+                        metrics,
+                        session,
+                        cancelled: a.cancelled,
+                        error: None,
+                    }
+                }
+            };
+            let _ = a.req.reply.emit(ServeEvent::Done(resp)); // receiver may be gone
+        }
+    }
+
+    /// Admit a drained chunk: `append`s resume their parked session; the
+    /// rest are validated, resolved and prefilled as one engine batch.
+    fn admit_batch(
+        &self,
+        reqs: Vec<Request>,
+        active: &mut Vec<Active>,
+        parked: &mut HashMap<u64, Parked>,
+    ) {
         let dims = self.engine.dims().clone();
         let mut sessions = Vec::new();
         let mut oks = Vec::new();
         for req in reqs {
-            // Validate per request BEFORE batching: one bad prompt must not
+            if req.session.is_some() {
+                self.admit_append(req, active, parked, &dims);
+                continue;
+            }
+            // Validate per request BEFORE batching: one bad request must not
             // fail the engine's whole prefill chunk for its co-batched
             // neighbours.
             if req.prompt.is_empty() || req.prompt.len() > dims.max_seq {
-                let _ = req.reply.send(Response::error(
-                    req.id,
-                    format!(
-                        "prompt length {} invalid (must be 1..={})",
-                        req.prompt.len(),
-                        dims.max_seq
-                    ),
+                let err = WireError::bad_request(format!(
+                    "prompt length {} invalid (must be 1..={})",
+                    req.prompt.len(),
+                    dims.max_seq
                 ));
+                let _ = req.reply.emit(ServeEvent::Done(Response::error(req.id, err)));
                 continue;
             }
-            match Session::with_pool(req.id, &dims, req.mode.clone(), &self.pool) {
+            // Resolve the compression spec to a cache mode only here, at
+            // admission — parsing stayed policy-free.
+            let mode = match req.spec.resolve(&dims) {
+                Ok(m) => m,
+                Err(err) => {
+                    let _ = req.reply.emit(ServeEvent::Done(Response::error(req.id, err)));
+                    continue;
+                }
+            };
+            match Session::with_pool(req.id, &dims, mode, &self.pool) {
                 Ok(s) => {
                     sessions.push(s);
                     oks.push(req);
                 }
                 Err(e) => {
-                    let _ = req.reply.send(Response::error(req.id, e.to_string()));
+                    let err = WireError::bad_request(e.to_string());
+                    let _ = req.reply.emit(ServeEvent::Done(Response::error(req.id, err)));
                 }
             }
         }
@@ -274,11 +453,22 @@ impl<E: StepEngine> Coordinator<E> {
             Ok(_) => {
                 let now = Instant::now();
                 for (req, sess) in oks.into_iter().zip(sessions) {
+                    // Stream the prefill-sampled token as this turn's
+                    // event 0.
+                    let _ = req.reply.emit(ServeEvent::Token {
+                        id: req.id,
+                        index: 0,
+                        token: sess.last_token,
+                    });
                     active.push(Active {
                         generated_budget: req.max_new.max(1),
+                        turn_prompt: req.prompt.len(),
                         req,
                         sess,
-                        prefill_done: now,
+                        pending_feed: VecDeque::new(),
+                        first_token_at: Some(now),
+                        emitted: 1,
+                        cancelled: false,
                         error: None,
                     });
                 }
@@ -286,17 +476,104 @@ impl<E: StepEngine> Coordinator<E> {
             Err(e) => {
                 crate::log_error!("prefill failed: {e}");
                 for req in oks {
-                    let _ = req.reply.send(Response::error(req.id, e.to_string()));
+                    let err = WireError::internal(e.to_string());
+                    let _ = req.reply.emit(ServeEvent::Done(Response::error(req.id, err)));
                 }
             }
         }
     }
 
+    /// Resume a parked session for an `append` turn. No engine prefill
+    /// runs: the appended prompt tokens are queued and fed through the
+    /// decode path one by one (each token's K/V and attention re-ingest
+    /// into the session's existing hi/lo tiers), because their hidden
+    /// states depend on the full cached context.
+    fn admit_append(
+        &self,
+        req: Request,
+        active: &mut Vec<Active>,
+        parked: &mut HashMap<u64, Parked>,
+        dims: &ModelDims,
+    ) {
+        let sid = req.session.expect("admit_append requires a session id");
+        let mut entry = match parked.remove(&sid) {
+            Some(p) => p,
+            None => {
+                // Distinguish "mid-turn, retry after done" from permanent
+                // loss so clients don't abandon a live conversation.
+                let err = if active.iter().any(|a| a.req.session == Some(sid)) {
+                    WireError::new(
+                        ErrorCode::SessionBusy,
+                        format!("session {sid} is mid-turn; retry after its done event"),
+                    )
+                } else {
+                    WireError::new(
+                        ErrorCode::SessionNotFound,
+                        format!("no live session {sid} (never kept, expired, or evicted)"),
+                    )
+                };
+                let _ = req.reply.emit(ServeEvent::Done(Response::error(req.id, err)));
+                return;
+            }
+        };
+        if req.prompt.is_empty() {
+            let _ = req.reply.emit(ServeEvent::Done(Response::error(
+                req.id,
+                WireError::bad_request("empty prompt"),
+            )));
+            parked.insert(sid, entry); // the session stays appendable
+            return;
+        }
+        // Feeding re-ingests the previous turn's final token plus every
+        // appended prompt token before the first new token can be sampled.
+        let seq = entry.sess.cache.seq_len();
+        if seq + 1 + req.prompt.len() > dims.max_seq {
+            let err = WireError::new(
+                ErrorCode::CacheFull,
+                format!(
+                    "session {sid} holds {seq} tokens; appending {} more \
+                     exceeds max_seq {}",
+                    req.prompt.len(),
+                    dims.max_seq
+                ),
+            );
+            let _ = req.reply.emit(ServeEvent::Done(Response::error(req.id, err)));
+            parked.insert(sid, entry);
+            return;
+        }
+        let pending: VecDeque<i64> = req.prompt.iter().copied().collect();
+        // Everything past the appended prompt is this turn's generation.
+        entry.sess.prompt_len = entry.sess.tokens.len() + pending.len();
+        active.push(Active {
+            generated_budget: req.max_new.max(1),
+            turn_prompt: pending.len(),
+            req,
+            sess: entry.sess,
+            pending_feed: pending,
+            first_token_at: None,
+            emitted: 0,
+            cancelled: false,
+            error: None,
+        });
+    }
+
     fn decode_round(&self, active: &mut [Active]) {
+        let max_seq = self.engine.dims().max_seq;
         // Group indices by (graph kind, oracle_k).
-        let mut groups: std::collections::BTreeMap<(String, i64), Vec<usize>> =
-            std::collections::BTreeMap::new();
-        for (i, a) in active.iter().enumerate() {
+        let mut groups: BTreeMap<(String, i64), Vec<usize>> = BTreeMap::new();
+        for (i, a) in active.iter_mut().enumerate() {
+            if a.sess.cache.seq_len() >= max_seq {
+                // Unreachable when admission bounds hold; never decode into
+                // a full cache (a mid-feed overflow becomes a structured
+                // error instead of a panic).
+                if a.error.is_none() {
+                    a.error = Some(WireError::new(
+                        ErrorCode::CacheFull,
+                        "cache filled during prompt re-ingest",
+                    ));
+                }
+                continue;
+            }
             let key = match a.sess.mode {
                 CacheMode::Oracle { k } => ("decode_full".to_string(), k as i64),
                 CacheMode::Full => ("decode_full".to_string(), -1),
@@ -308,10 +585,8 @@ impl<E: StepEngine> Coordinator<E> {
             // A failed group is marked (not silently retried): the sessions
             // would otherwise stay active and be re-submitted to the same
             // failing graph every iteration — a livelock. The retire pass
-            // replies with an error Response for each.
-            let group_err: Option<String> = {
-                // split_at_mut gymnastics: collect raw pointers safely via
-                // partition in index order (indices are distinct).
+            // replies with a structured error for each.
+            let result = {
                 let mut refs: Vec<&mut Session> = Vec::with_capacity(idxs.len());
                 // SAFETY: idxs are unique indices into `active`; we create
                 // non-overlapping &mut borrows, dropped before `active` is
@@ -322,23 +597,80 @@ impl<E: StepEngine> Coordinator<E> {
                         refs.push(&mut (*base.add(i)).sess);
                     }
                 }
-                match self.engine.decode_step(&mut refs) {
-                    Ok(rows) => {
-                        for (sess, row) in refs.iter_mut().zip(rows) {
-                            let tok = sampler::greedy(&row);
-                            sess.last_token = tok;
-                            sess.tokens.push(tok);
-                        }
-                        None
-                    }
-                    Err(e) => Some(e.to_string()),
-                }
+                self.engine.decode_step(&mut refs)
             };
-            if let Some(msg) = group_err {
-                crate::log_error!("decode failed: {msg}; retiring {} session(s)", idxs.len());
-                for &i in &idxs {
-                    active[i].error = Some(msg.clone());
+            match result {
+                Ok(rows) => {
+                    let now = Instant::now();
+                    for (&i, row) in idxs.iter().zip(rows.iter()) {
+                        let a = &mut active[i];
+                        if let Some(next) = a.pending_feed.pop_front() {
+                            // Prompt re-ingest: these logits predate the
+                            // full appended context — feed the next prompt
+                            // token instead of sampling (skipping the
+                            // O(vocab) argmax entirely).
+                            a.sess.last_token = next;
+                            a.sess.tokens.push(next);
+                        } else {
+                            let tok = sampler::greedy(row);
+                            a.sess.last_token = tok;
+                            a.sess.tokens.push(tok);
+                            if a.first_token_at.is_none() {
+                                a.first_token_at = Some(now);
+                            }
+                            let _ = a.req.reply.emit(ServeEvent::Token {
+                                id: a.req.id,
+                                index: a.emitted,
+                                token: tok,
+                            });
+                            a.emitted += 1;
+                        }
+                    }
                 }
+                Err(e) => {
+                    crate::log_error!("decode failed: {e}; retiring {} session(s)", idxs.len());
+                    for &i in &idxs {
+                        active[i].error = Some(WireError::internal(e.to_string()));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Enforce the parked-session registry bounds: drop sessions past the
+    /// TTL, then evict oldest-parked while the total host footprint
+    /// exceeds `max_session_bytes`. Dropped sessions return their cache
+    /// blocks to the shared pool.
+    fn sweep_parked(&self, parked: &mut HashMap<u64, Parked>) {
+        if parked.is_empty() {
+            return;
+        }
+        let ttl = self.cfg.session_ttl;
+        parked.retain(|sid, p| {
+            let live = p.parked_at.elapsed() < ttl;
+            if !live {
+                crate::log_debug!("session {sid} expired (idle past {ttl:?})");
+            }
+            live
+        });
+        loop {
+            let total: usize = parked.values().map(|p| p.sess.cache.host_bytes()).sum();
+            if parked.is_empty() || total <= self.cfg.max_session_bytes {
+                break;
+            }
+            let oldest = parked
+                .iter()
+                .min_by_key(|(sid, p)| (p.parked_at, **sid))
+                .map(|(sid, _)| *sid);
+            match oldest {
+                Some(sid) => {
+                    crate::log_debug!(
+                        "session {sid} evicted (retained {total} B > bound {} B)",
+                        self.cfg.max_session_bytes
+                    );
+                    parked.remove(&sid);
+                }
+                None => break,
             }
         }
     }
@@ -347,7 +679,8 @@ impl<E: StepEngine> Coordinator<E> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::SessionCache;
+    use crate::coordinator::{CompressionSpec, Reply};
+    use crate::model::{SessionCache, StubEngine};
     use std::sync::mpsc;
 
     #[test]
@@ -355,114 +688,71 @@ mod tests {
         let c = CoordinatorConfig::default();
         assert!(c.max_active >= c.prefill_chunk);
         assert!(c.idle_poll > Duration::ZERO);
+        assert!(c.max_waiting > 0);
+        assert!(c.session_ttl > Duration::ZERO);
+        assert!(c.max_session_bytes > 0);
     }
 
     fn test_dims() -> ModelDims {
-        ModelDims {
-            vocab: 16,
-            d_model: 16,
-            n_layers: 2,
-            n_q_heads: 2,
-            n_kv_heads: 2,
-            d_head: 4,
-            d_ff: 32,
-            max_seq: 8,
-            quant_group: 2,
-            params: 0,
-        }
+        let mut d = StubEngine::test_dims(8);
+        d.vocab = 16;
+        d
     }
 
-    /// Stub engine: prefill fills the (Full) cache with zeros; decode either
-    /// appends a constant token or fails, per `fail_decode`.
-    struct StubEngine {
-        dims: ModelDims,
-        fail_decode: bool,
+    fn stub(fail_decode: bool) -> StubEngine {
+        let mut e = StubEngine::new(test_dims());
+        e.fail_decode = fail_decode;
+        e
     }
 
-    impl StubEngine {
-        fn new(fail_decode: bool) -> Self {
-            Self {
-                dims: test_dims(),
-                fail_decode,
-            }
-        }
-    }
-
-    impl StepEngine for StubEngine {
-        fn dims(&self) -> &ModelDims {
-            &self.dims
-        }
-
-        fn prefill(
-            &self,
-            sessions: &mut [&mut Session],
-            prompts: &[Vec<i64>],
-        ) -> crate::Result<Vec<Vec<f32>>> {
-            let planes = self.dims.planes();
-            let d = self.dims.d_head;
-            for (sess, prompt) in sessions.iter_mut().zip(prompts) {
-                sess.tokens = prompt.clone();
-                sess.prompt_len = prompt.len();
-                let kv = vec![0.0f32; planes * prompt.len() * d];
-                match &mut sess.cache {
-                    SessionCache::Full(f) => f.ingest_prefill(prompt.len(), &kv, &kv),
-                    SessionCache::Mikv(_) => anyhow::bail!("stub only prefills Full sessions"),
-                }
-                sess.last_token = 1;
-                sess.tokens.push(1);
-            }
-            Ok(vec![vec![0.0; self.dims.vocab]; sessions.len()])
-        }
-
-        fn decode_step(&self, sessions: &mut [&mut Session]) -> crate::Result<Vec<Vec<f32>>> {
-            anyhow::ensure!(!self.fail_decode, "injected decode failure");
-            let planes = self.dims.planes();
-            let (d, s) = (self.dims.d_head, self.dims.max_seq);
-            let kv = vec![0.0f32; planes * d];
-            let attn_prev = vec![0.0f32; planes * s];
-            let attn_self = vec![0.0f32; planes];
-            let mut rows = Vec::with_capacity(sessions.len());
-            for sess in sessions.iter_mut() {
-                sess.ingest_step(&kv, &kv, &attn_prev, &attn_self);
-                let mut logits = vec![0.0f32; self.dims.vocab];
-                logits[2] = 1.0;
-                rows.push(logits);
-            }
-            Ok(rows)
-        }
-    }
-
-    fn request(id: u64, prompt_len: usize, max_new: usize, reply: super::super::request::Reply) -> Request {
+    fn request(id: u64, prompt_len: usize, max_new: usize, reply: Reply) -> Request {
         Request {
             id,
             prompt: vec![1; prompt_len],
             max_new,
             stop: None,
-            mode: CacheMode::Full,
+            spec: CompressionSpec::full(),
+            session: None,
+            keep: false,
             submitted_at: Instant::now(),
             reply,
         }
     }
 
-    /// Regression: a decode failure must retire the group with an error
-    /// Response instead of retrying it forever (the seed livelock).
+    fn sink(tx: &mpsc::Sender<ServeEvent>) -> Reply {
+        Box::new(tx.clone())
+    }
+
+    /// Collect the terminal responses out of an event stream.
+    fn dones(rx: mpsc::Receiver<ServeEvent>) -> Vec<Response> {
+        rx.iter()
+            .filter_map(|e| match e {
+                ServeEvent::Done(r) => Some(r),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Regression: a decode failure must retire the group with a structured
+    /// `internal` error instead of retrying it forever (the seed livelock).
     #[test]
     fn decode_failure_retires_sessions_with_error() {
-        let (tx, rx) = mpsc::channel::<Request>();
-        let (reply_tx, reply_rx) = mpsc::channel::<Response>();
-        tx.send(request(7, 3, 4, reply_tx.clone())).unwrap();
+        let (tx, rx) = mpsc::channel::<Op>();
+        let (reply_tx, reply_rx) = mpsc::channel::<ServeEvent>();
+        tx.send(Op::Submit(request(7, 3, 4, sink(&reply_tx)))).unwrap();
         drop(tx);
         drop(reply_tx);
 
         // This call must terminate; before the fix it spun forever
         // re-submitting the failing group.
-        Coordinator::new(StubEngine::new(true), CoordinatorConfig::default()).run(rx);
+        Coordinator::new(stub(true), CoordinatorConfig::default()).run(rx);
 
-        let resp = reply_rx.recv().expect("a response must be delivered");
-        assert_eq!(resp.id, 7);
-        let err = resp.error.expect("failure must surface as an error");
-        assert!(err.contains("injected decode failure"), "got: {err}");
-        assert!(reply_rx.recv().is_err(), "exactly one response");
+        let resps = dones(reply_rx);
+        assert_eq!(resps.len(), 1, "exactly one terminal response");
+        assert_eq!(resps[0].id, 7);
+        let err = resps[0].error.clone().expect("failure must surface");
+        assert_eq!(err.code, ErrorCode::Internal);
+        assert!(err.message.contains("injected decode failure"), "{err}");
     }
 
     /// `max_new = 1` is satisfied by the prefill-sampled token alone: the
@@ -470,62 +760,75 @@ mod tests {
     /// engine — if a decode were attempted, the response would be an error.
     #[test]
     fn budget_of_one_retires_after_prefill_without_decoding() {
-        let (tx, rx) = mpsc::channel::<Request>();
-        let (reply_tx, reply_rx) = mpsc::channel::<Response>();
-        tx.send(request(9, 3, 1, reply_tx.clone())).unwrap();
+        let (tx, rx) = mpsc::channel::<Op>();
+        let (reply_tx, reply_rx) = mpsc::channel::<ServeEvent>();
+        tx.send(Op::Submit(request(9, 3, 1, sink(&reply_tx)))).unwrap();
         drop(tx);
         drop(reply_tx);
 
-        Coordinator::new(StubEngine::new(true), CoordinatorConfig::default()).run(rx);
+        Coordinator::new(stub(true), CoordinatorConfig::default()).run(rx);
 
-        let resp = reply_rx.recv().unwrap();
-        assert!(resp.error.is_none(), "no decode must run: {:?}", resp.error);
-        assert_eq!(resp.tokens.len(), 1, "exactly the prefill token");
+        let resps = dones(reply_rx);
+        assert_eq!(resps.len(), 1);
+        assert!(resps[0].error.is_none(), "no decode must run: {:?}", resps[0].error);
+        assert_eq!(resps[0].tokens.len(), 1, "exactly the prefill token");
     }
 
-    /// An oversized prompt is rejected per-request; co-batched valid
-    /// requests still complete (no chunk-wide blast radius).
+    /// An oversized prompt is rejected per-request with `bad_request`;
+    /// co-batched valid requests still complete (no chunk blast radius).
     #[test]
     fn oversized_prompt_does_not_fail_its_batch_neighbours() {
-        let (tx, rx) = mpsc::channel::<Request>();
-        let (reply_tx, reply_rx) = mpsc::channel::<Response>();
-        tx.send(request(1, 9, 2, reply_tx.clone())).unwrap(); // > max_seq = 8
-        tx.send(request(2, 3, 2, reply_tx.clone())).unwrap();
+        let (tx, rx) = mpsc::channel::<Op>();
+        let (reply_tx, reply_rx) = mpsc::channel::<ServeEvent>();
+        tx.send(Op::Submit(request(1, 9, 2, sink(&reply_tx)))).unwrap(); // > max_seq = 8
+        tx.send(Op::Submit(request(2, 3, 2, sink(&reply_tx)))).unwrap();
         drop(tx);
         drop(reply_tx);
 
-        Coordinator::new(StubEngine::new(false), CoordinatorConfig::default()).run(rx);
+        Coordinator::new(stub(false), CoordinatorConfig::default()).run(rx);
 
-        let mut resps: Vec<Response> = reply_rx.iter().collect();
+        let mut resps = dones(reply_rx);
         resps.sort_by_key(|r| r.id);
         assert_eq!(resps.len(), 2);
-        let err = resps[0].error.as_deref().expect("oversized prompt rejected");
-        assert!(err.contains("prompt length 9"), "got: {err}");
+        let err = resps[0].error.clone().expect("oversized prompt rejected");
+        assert_eq!(err.code, ErrorCode::BadRequest);
+        assert!(err.message.contains("prompt length 9"), "{err}");
         assert!(resps[1].error.is_none(), "neighbour must succeed");
         assert_eq!(resps[1].tokens.len(), 2);
     }
 
-    /// Happy path through the real scheduler loop with a stub engine.
+    /// Happy path: completed turns, plus token events streamed before the
+    /// terminal `done` and matching its token list exactly.
     #[test]
-    fn coordinator_completes_requests_with_stub_engine() {
-        let (tx, rx) = mpsc::channel::<Request>();
-        let (reply_tx, reply_rx) = mpsc::channel::<Response>();
-        for id in 0..3u64 {
-            tx.send(request(id, 3, 2, reply_tx.clone())).unwrap();
-        }
+    fn tokens_stream_in_order_before_done() {
+        let (tx, rx) = mpsc::channel::<Op>();
+        let (reply_tx, reply_rx) = mpsc::channel::<ServeEvent>();
+        tx.send(Op::Submit(request(4, 3, 3, sink(&reply_tx)))).unwrap();
         drop(tx);
         drop(reply_tx);
 
-        Coordinator::new(StubEngine::new(false), CoordinatorConfig::default()).run(rx);
+        Coordinator::new(stub(false), CoordinatorConfig::default()).run(rx);
 
-        let mut resps: Vec<Response> = reply_rx.iter().collect();
-        resps.sort_by_key(|r| r.id);
-        assert_eq!(resps.len(), 3);
-        for r in &resps {
-            assert!(r.error.is_none());
-            assert_eq!(r.tokens.len(), 2);
-            assert!(r.metrics.host_bytes > 0);
+        let events: Vec<ServeEvent> = reply_rx.iter().collect();
+        let mut streamed = Vec::new();
+        let mut done: Option<Response> = None;
+        for ev in events {
+            match ev {
+                ServeEvent::Token { id, index, token } => {
+                    assert_eq!(id, 4);
+                    assert!(done.is_none(), "token after done");
+                    assert_eq!(index, streamed.len(), "indices are contiguous");
+                    streamed.push(token);
+                }
+                ServeEvent::Done(r) => done = Some(r),
+                other => panic!("unexpected event {other:?}"),
+            }
         }
+        let done = done.expect("terminal event");
+        assert!(done.error.is_none());
+        assert_eq!(streamed.len(), 3);
+        assert_eq!(done.tokens, streamed, "done tokens == streamed tokens");
+        assert!(done.metrics.host_bytes > 0);
     }
 
     /// Regression for the retire off-by-one: with max_seq = 8 and a 5-token
@@ -533,30 +836,351 @@ mod tests {
     /// retires at seq_len == 8, not one token early.
     #[test]
     fn last_cache_slot_is_usable() {
-        let (tx, rx) = mpsc::channel::<Request>();
-        let (reply_tx, reply_rx) = mpsc::channel::<Response>();
+        let (tx, rx) = mpsc::channel::<Op>();
+        let (reply_tx, reply_rx) = mpsc::channel::<ServeEvent>();
         // budget far above what the cache allows → cache capacity binds
-        tx.send(request(1, 5, 100, reply_tx.clone())).unwrap();
+        tx.send(Op::Submit(request(1, 5, 100, sink(&reply_tx)))).unwrap();
         drop(tx);
         drop(reply_tx);
 
-        Coordinator::new(StubEngine::new(false), CoordinatorConfig::default()).run(rx);
+        Coordinator::new(stub(false), CoordinatorConfig::default()).run(rx);
 
-        let resp = reply_rx.recv().unwrap();
-        assert!(resp.error.is_none());
+        let resps = dones(reply_rx);
+        assert_eq!(resps.len(), 1);
+        assert!(resps[0].error.is_none());
         // prefill contributes 1 token; decodes fill slots 5..8 → 3 more.
         assert_eq!(
-            resp.tokens.len(),
+            resps[0].tokens.len(),
             4,
             "the last legal slot must be used (seed retired one token early)"
         );
+    }
+
+    /// Submits beyond `max_waiting` are rejected with `overloaded` while
+    /// queued neighbours still complete.
+    #[test]
+    fn queue_bound_rejects_with_overloaded() {
+        let (tx, rx) = mpsc::channel::<Op>();
+        let (reply_tx, reply_rx) = mpsc::channel::<ServeEvent>();
+        for id in 0..3u64 {
+            tx.send(Op::Submit(request(id, 3, 2, sink(&reply_tx)))).unwrap();
+        }
+        drop(tx);
+        drop(reply_tx);
+
+        let cfg = CoordinatorConfig {
+            max_waiting: 1,
+            ..CoordinatorConfig::default()
+        };
+        Coordinator::new(stub(false), cfg).run(rx);
+
+        let resps = dones(reply_rx);
+        assert_eq!(resps.len(), 3);
+        let overloaded = resps
+            .iter()
+            .filter(|r| {
+                r.error
+                    .as_ref()
+                    .map(|e| e.code == ErrorCode::Overloaded)
+                    .unwrap_or(false)
+            })
+            .count();
+        let ok = resps.iter().filter(|r| r.error.is_none()).count();
+        assert_eq!(overloaded, 2, "all drained past the bound are rejected");
+        assert_eq!(ok, 1);
+    }
+
+    /// Cancelling a waiting request is deterministic: it never runs, its
+    /// terminal `done` carries `cancelled: true`, and the cancel op is
+    /// answered with `found: true`.
+    #[test]
+    fn cancel_waiting_request_before_admission() {
+        let (tx, rx) = mpsc::channel::<Op>();
+        let (reply_tx, reply_rx) = mpsc::channel::<ServeEvent>();
+        let (cancel_tx, cancel_rx) = mpsc::channel::<ServeEvent>();
+        tx.send(Op::Submit(request(1, 3, 2, sink(&reply_tx)))).unwrap();
+        tx.send(Op::Cancel {
+            id: 2,
+            target: 1,
+            reply: Box::new(cancel_tx.clone()),
+        })
+        .unwrap();
+        // A cancel for an unknown id answers found: false.
+        tx.send(Op::Cancel {
+            id: 3,
+            target: 99,
+            reply: Box::new(cancel_tx.clone()),
+        })
+        .unwrap();
+        drop(tx);
+        drop(reply_tx);
+        drop(cancel_tx);
+
+        Coordinator::new(stub(false), CoordinatorConfig::default()).run(rx);
+
+        let resps = dones(reply_rx);
+        assert_eq!(resps.len(), 1);
+        assert!(resps[0].cancelled);
+        assert!(resps[0].error.is_none());
+        assert!(resps[0].tokens.is_empty());
+        let answers: Vec<ServeEvent> = cancel_rx.iter().collect();
+        assert_eq!(answers.len(), 2);
+        match &answers[0] {
+            ServeEvent::CancelResult { id, target, found } => {
+                assert_eq!((*id, *target, *found), (2, 1, true));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        match &answers[1] {
+            ServeEvent::CancelResult { found, .. } => assert!(!found),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    /// The multi-turn acceptance path at the channel level: a kept
+    /// `generate` parks its session; a follow-up `append` resumes the SAME
+    /// cache — tier occupancy carries over and grows, and each turn
+    /// reports its own host bytes.
+    #[test]
+    fn generate_then_append_reuses_the_parked_cache() {
+        let dims = StubEngine::test_dims(64);
+        let engine = StubEngine::new(dims);
+        let (tx, rx) = mpsc::channel::<Op>();
+        let coordinator = Coordinator::new(engine, CoordinatorConfig::default());
+
+        let driver = std::thread::spawn(move || {
+            let (etx, erx) = mpsc::channel::<ServeEvent>();
+            let mikv = CompressionSpec::mikv(0.5, "int4");
+            tx.send(Op::Submit(Request {
+                id: 1,
+                prompt: vec![1, 2, 3],
+                max_new: 4,
+                stop: None,
+                spec: mikv.clone(),
+                session: None,
+                keep: true,
+                submitted_at: Instant::now(),
+                reply: Box::new(etx.clone()),
+            }))
+            .unwrap();
+            let turn1 = loop {
+                if let ServeEvent::Done(r) = erx.recv().unwrap() {
+                    break r;
+                }
+            };
+            assert!(turn1.error.is_none(), "{:?}", turn1.error);
+            let sid = turn1.session.expect("keep=true parks the session");
+            assert_eq!(turn1.tokens.len(), 4);
+            let occ1 = turn1.metrics.hi_slots + turn1.metrics.lo_slots;
+            // prompt 3 + 3 decoded KV appends = 6 slots × 4 planes
+            assert_eq!(occ1, 24);
+            assert!(turn1.metrics.host_bytes > 0);
+
+            tx.send(Op::Submit(Request {
+                id: 2,
+                prompt: vec![4, 5],
+                max_new: 3,
+                stop: None,
+                spec: mikv,
+                session: Some(sid),
+                keep: true,
+                submitted_at: Instant::now(),
+                reply: Box::new(etx.clone()),
+            }))
+            .unwrap();
+            let turn2 = loop {
+                if let ServeEvent::Done(r) = erx.recv().unwrap() {
+                    break r;
+                }
+            };
+            assert!(turn2.error.is_none(), "{:?}", turn2.error);
+            assert_eq!(turn2.session, Some(sid), "same session id across turns");
+            assert_eq!(turn2.metrics.prompt_tokens, 2, "per-turn prompt size");
+            assert_eq!(turn2.tokens.len(), 3);
+            let occ2 = turn2.metrics.hi_slots + turn2.metrics.lo_slots;
+            // turn1's 6 slots + fed last token + 2 appended prompt tokens
+            // + 2 decoded KV appends = 11 slots × 4 planes
+            assert_eq!(occ2, 44, "occupancy carried over and grew");
+            assert!(turn2.metrics.host_bytes >= turn1.metrics.host_bytes);
+            drop(tx);
+        });
+
+        coordinator.run(rx);
+        driver.join().unwrap();
+    }
+
+    /// TTL bound: with a zero TTL the parked session is dropped on the next
+    /// sweep and a follow-up `append` gets `session_not_found`; the
+    /// session's pooled blocks are recycled.
+    #[test]
+    fn expired_sessions_are_evicted_and_append_fails_cleanly() {
+        let engine = StubEngine::new(StubEngine::test_dims(32));
+        let (tx, rx) = mpsc::channel::<Op>();
+        let cfg = CoordinatorConfig {
+            session_ttl: Duration::ZERO,
+            ..CoordinatorConfig::default()
+        };
+        let coordinator = Coordinator::new(engine, cfg);
+
+        let driver = std::thread::spawn(move || {
+            let (etx, erx) = mpsc::channel::<ServeEvent>();
+            tx.send(Op::Submit(Request {
+                id: 1,
+                prompt: vec![1, 2, 3],
+                max_new: 2,
+                stop: None,
+                spec: CompressionSpec::mikv(0.5, "int4"),
+                session: None,
+                keep: true,
+                submitted_at: Instant::now(),
+                reply: Box::new(etx.clone()),
+            }))
+            .unwrap();
+            let turn1 = loop {
+                if let ServeEvent::Done(r) = erx.recv().unwrap() {
+                    break r;
+                }
+            };
+            let sid = turn1.session.expect("parked before the sweep runs");
+
+            tx.send(Op::Submit(Request {
+                id: 2,
+                prompt: vec![4],
+                max_new: 2,
+                stop: None,
+                spec: CompressionSpec::full(),
+                session: Some(sid),
+                keep: false,
+                submitted_at: Instant::now(),
+                reply: Box::new(etx.clone()),
+            }))
+            .unwrap();
+            let turn2 = loop {
+                if let ServeEvent::Done(r) = erx.recv().unwrap() {
+                    break r;
+                }
+            };
+            let err = turn2.error.expect("expired session must be gone");
+            assert_eq!(err.code, ErrorCode::SessionNotFound);
+            drop(tx);
+        });
+
+        coordinator.run(rx);
+        // The evicted session's shadow blocks went back to the pool.
+        let stats = coordinator.pool().stats();
+        assert_eq!(stats.outstanding_blocks, 0, "{stats:?}");
+        driver.join().unwrap();
+    }
+
+    /// Footprint bound: with a zero byte budget nothing stays parked.
+    #[test]
+    fn footprint_bound_evicts_parked_sessions() {
+        let engine = StubEngine::new(StubEngine::test_dims(32));
+        let (tx, rx) = mpsc::channel::<Op>();
+        let cfg = CoordinatorConfig {
+            max_session_bytes: 0,
+            ..CoordinatorConfig::default()
+        };
+        let coordinator = Coordinator::new(engine, cfg);
+
+        let driver = std::thread::spawn(move || {
+            let (etx, erx) = mpsc::channel::<ServeEvent>();
+            tx.send(Op::Submit(Request {
+                id: 1,
+                prompt: vec![1, 2],
+                max_new: 2,
+                stop: None,
+                spec: CompressionSpec::mikv(0.5, "int4"),
+                session: None,
+                keep: true,
+                submitted_at: Instant::now(),
+                reply: Box::new(etx.clone()),
+            }))
+            .unwrap();
+            let turn1 = loop {
+                if let ServeEvent::Done(r) = erx.recv().unwrap() {
+                    break r;
+                }
+            };
+            let sid = turn1.session.expect("parked momentarily");
+            tx.send(Op::Submit(Request {
+                id: 2,
+                prompt: vec![3],
+                max_new: 1,
+                stop: None,
+                spec: CompressionSpec::full(),
+                session: Some(sid),
+                keep: false,
+                submitted_at: Instant::now(),
+                reply: Box::new(etx.clone()),
+            }))
+            .unwrap();
+            let turn2 = loop {
+                if let ServeEvent::Done(r) = erx.recv().unwrap() {
+                    break r;
+                }
+            };
+            let err = turn2.error.expect("evicted by the byte bound");
+            assert_eq!(err.code, ErrorCode::SessionNotFound);
+            drop(tx);
+        });
+
+        coordinator.run(rx);
+        driver.join().unwrap();
+    }
+
+    /// An append racing a still-active turn on the same session gets the
+    /// retryable `session_busy`, not the terminal `session_not_found`.
+    #[test]
+    fn append_to_checked_out_session_reports_busy() {
+        let c = Coordinator::new(stub(false), CoordinatorConfig::default());
+        let dims = test_dims();
+        let mut parked: HashMap<u64, Parked> = HashMap::new();
+        let mut active: Vec<Active> = Vec::new();
+        let (etx, _erx) = mpsc::channel::<ServeEvent>();
+        let mut holder = request(1, 2, 4, Box::new(etx));
+        holder.session = Some(5); // an in-flight append turn on session 5
+        active.push(Active {
+            sess: Session::new(1, &dims, CacheMode::Full).unwrap(),
+            pending_feed: VecDeque::new(),
+            turn_prompt: 2,
+            first_token_at: None,
+            emitted: 0,
+            generated_budget: 4,
+            cancelled: false,
+            error: None,
+            req: holder,
+        });
+
+        let (etx2, erx2) = mpsc::channel::<ServeEvent>();
+        let mut req = request(2, 1, 2, Box::new(etx2));
+        req.session = Some(5);
+        c.admit_append(req, &mut active, &mut parked, &dims);
+        match erx2.recv().unwrap() {
+            ServeEvent::Done(r) => {
+                assert_eq!(r.error.unwrap().code, ErrorCode::SessionBusy);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+
+        // an unknown sid still reports session_not_found
+        let (etx3, erx3) = mpsc::channel::<ServeEvent>();
+        let mut req = request(3, 1, 2, Box::new(etx3));
+        req.session = Some(6);
+        c.admit_append(req, &mut active, &mut parked, &dims);
+        match erx3.recv().unwrap() {
+            ServeEvent::Done(r) => {
+                assert_eq!(r.error.unwrap().code, ErrorCode::SessionNotFound);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
     }
 
     /// Direct unit check of the retire predicate.
     #[test]
     fn finished_uses_the_full_cache_capacity() {
         let dims = test_dims();
-        let (reply_tx, _reply_rx) = mpsc::channel::<Response>();
+        let (reply_tx, _reply_rx) = mpsc::channel::<ServeEvent>();
         let mut sess = Session::new(1, &dims, CacheMode::Full).unwrap();
         let planes = dims.planes();
         let t = 7; // one below max_seq = 8
@@ -569,10 +1193,14 @@ mod tests {
         sess.tokens = vec![1; t + 1];
         sess.last_token = 1;
         let mut a = Active {
-            req: request(1, t, 100, reply_tx),
+            req: request(1, t, 100, Box::new(reply_tx)),
             sess,
-            prefill_done: Instant::now(),
+            pending_feed: VecDeque::new(),
+            turn_prompt: t,
+            first_token_at: Some(Instant::now()),
+            emitted: 1,
             generated_budget: 100,
+            cancelled: false,
             error: None,
         };
         assert!(
@@ -585,5 +1213,8 @@ mod tests {
             _ => unreachable!(),
         }
         assert!(a.finished(dims.max_seq), "seq_len = 8 of 8: full");
+        // a pending prompt feed always defers retirement
+        a.pending_feed.push_back(9);
+        assert!(!a.finished(dims.max_seq));
     }
 }

@@ -1,18 +1,30 @@
-//! Serving coordinator: request queue, continuous batcher, metrics.
+//! Serving coordinator: op queue, continuous batcher, session registry,
+//! metrics.
 //!
 //! PJRT handles are not `Send`, so the [`crate::model::Engine`] lives on a
 //! dedicated engine thread running [`Coordinator::run`]; other threads
 //! (TCP connection handlers, benchmark drivers) talk to it through
-//! [`std::sync::mpsc`] channels. The coordinator implements
-//! **continuous batching**: new requests are prefilled in chunks while
-//! active sessions keep decoding, and decode batches are re-formed every
-//! step from whatever is in flight (grouped by graph kind), so a long
-//! generation never blocks short ones behind it.
+//! [`std::sync::mpsc`] channels carrying [`Op`]s. The coordinator
+//! implements **continuous batching**: new requests are prefilled in
+//! chunks while active sessions keep decoding, and decode batches are
+//! re-formed every step from whatever is in flight (grouped by graph
+//! kind), so a long generation never blocks short ones behind it.
+//!
+//! The serving surface is **streaming and multi-turn**: each turn's
+//! sampled tokens are pushed into its [`EventSink`] as `token` events
+//! followed by a terminal `done`, and turns submitted with `keep` park
+//! their session (cache included) in a TTL- and footprint-bounded
+//! registry so a later `append` op continues the same hi/lo tiers.
+//! Compression is requested as a plain-data [`CompressionSpec`] and
+//! resolved to a cache mode only at admission.
 
 pub mod batcher;
 pub mod request;
 pub mod stats;
 
-pub use batcher::{Coordinator, CoordinatorConfig};
-pub use request::{Reply, Request, RequestMetrics, Response};
-pub use stats::MetricsCollector;
+pub use batcher::{Coordinator, CoordinatorConfig, StepEngine};
+pub use request::{
+    CompressionSpec, ErrorCode, EventSink, Op, Reply, Request, RequestMetrics, Response,
+    ServeEvent, WireError,
+};
+pub use stats::{MetricsCollector, StatsSnapshot};

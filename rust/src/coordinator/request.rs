@@ -1,32 +1,355 @@
-//! Request/response types crossing the coordinator boundary.
+//! Request/response/event types crossing the coordinator boundary.
+//!
+//! The serving surface is **op-shaped and streaming**: the front-end hands
+//! the coordinator [`Op`]s (submit / cancel / stats) and the coordinator
+//! pushes [`ServeEvent`]s into each request's [`EventSink`] — `token`
+//! events as they are sampled, then one terminal `done` (or `error`)
+//! event. Compression is requested as a plain-data [`CompressionSpec`]
+//! parsed by the wire layer (`server::proto`) and resolved to a
+//! [`CacheMode`] only at coordinator admission, so parsing stays decoupled
+//! from policy.
 
+use super::stats::StatsSnapshot;
+use crate::kvcache::TierConfig;
 use crate::model::CacheMode;
+use crate::quant::Precision;
+use crate::runtime::ModelDims;
+use std::fmt;
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-/// Reply channel for one request.
-pub type Reply = mpsc::Sender<Response>;
+// ----------------------------------------------------------------------
+// Structured wire errors
+// ----------------------------------------------------------------------
 
-/// A generation request.
+/// Machine-readable error codes carried on the wire
+/// (`{"event":"error","code":...}`). Every coordinator rejection and
+/// retirement failure maps onto exactly one of these.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// Malformed or semantically invalid request (bad JSON, non-integer
+    /// prompt tokens, unknown mode/policy/precision, bad ratio/group...).
+    BadRequest,
+    /// The waiting queue is at `max_waiting`; retry later.
+    Overloaded,
+    /// `append` named a session that is not parked (never kept, expired,
+    /// or evicted by the retention bound).
+    SessionNotFound,
+    /// `append` named a session whose previous turn is still in flight;
+    /// retry after its `done` event.
+    SessionBusy,
+    /// The session's cache cannot hold the appended prompt plus at least
+    /// one new token.
+    CacheFull,
+    /// Engine-side failure (prefill/decode error).
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrorCode::BadRequest => "bad_request",
+            ErrorCode::Overloaded => "overloaded",
+            ErrorCode::SessionNotFound => "session_not_found",
+            ErrorCode::SessionBusy => "session_busy",
+            ErrorCode::CacheFull => "cache_full",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ErrorCode> {
+        Some(match s {
+            "bad_request" => ErrorCode::BadRequest,
+            "overloaded" => ErrorCode::Overloaded,
+            "session_not_found" => ErrorCode::SessionNotFound,
+            "session_busy" => ErrorCode::SessionBusy,
+            "cache_full" => ErrorCode::CacheFull,
+            "internal" => ErrorCode::Internal,
+            _ => return None,
+        })
+    }
+}
+
+impl fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// A structured error delivered over the wire: a stable code plus a
+/// human-readable message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireError {
+    pub code: ErrorCode,
+    pub message: String,
+}
+
+impl WireError {
+    pub fn new(code: ErrorCode, message: impl Into<String>) -> WireError {
+        WireError {
+            code,
+            message: message.into(),
+        }
+    }
+
+    pub fn bad_request(message: impl Into<String>) -> WireError {
+        Self::new(ErrorCode::BadRequest, message)
+    }
+
+    pub fn internal(message: impl Into<String>) -> WireError {
+        Self::new(ErrorCode::Internal, message)
+    }
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}: {}", self.code, self.message)
+    }
+}
+
+// ----------------------------------------------------------------------
+// CompressionSpec
+// ----------------------------------------------------------------------
+
+/// Plain-data description of the cache compression a request asks for.
+///
+/// This is what the wire layer parses; it knows nothing about model
+/// dimensions or cache internals. [`CompressionSpec::resolve`] validates
+/// it against a model's [`ModelDims`] and produces the [`CacheMode`] the
+/// session is built with — at coordinator admission, not at parse time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompressionSpec {
+    /// `full` | `oracle` | `mikv` | `h2o` | `rtn`.
+    pub mode: String,
+    /// Importance ratio (mikv/h2o); fraction of context kept hi.
+    pub ratio: Option<f64>,
+    /// Lo-tier precision name (mikv), or the uniform precision (rtn).
+    pub lo: Option<String>,
+    /// Channels per scale/zero group in the lo tier.
+    pub group: Option<usize>,
+    /// Importance policy name (`h2o` | `local` | `random`).
+    pub policy: Option<String>,
+    /// Oracle top-k (oracle mode only).
+    pub k: Option<usize>,
+}
+
+impl Default for CompressionSpec {
+    fn default() -> Self {
+        Self::full()
+    }
+}
+
+impl CompressionSpec {
+    fn base(mode: &str) -> CompressionSpec {
+        CompressionSpec {
+            mode: mode.to_string(),
+            ratio: None,
+            lo: None,
+            group: None,
+            policy: None,
+            k: None,
+        }
+    }
+
+    /// Exact full-precision cache (the 100% baseline).
+    pub fn full() -> CompressionSpec {
+        Self::base("full")
+    }
+
+    /// Paper-default MiKV at `ratio` with the given lo-tier precision.
+    pub fn mikv(ratio: f64, lo: &str) -> CompressionSpec {
+        CompressionSpec {
+            ratio: Some(ratio),
+            lo: Some(lo.to_string()),
+            ..Self::base("mikv")
+        }
+    }
+
+    /// H2O eviction baseline at `ratio`.
+    pub fn h2o(ratio: f64) -> CompressionSpec {
+        CompressionSpec {
+            ratio: Some(ratio),
+            ..Self::base("h2o")
+        }
+    }
+
+    /// Uniform round-to-nearest quantization at `precision`.
+    pub fn rtn(precision: &str) -> CompressionSpec {
+        CompressionSpec {
+            lo: Some(precision.to_string()),
+            ..Self::base("rtn")
+        }
+    }
+
+    /// Post-softmax oracle top-k baseline.
+    pub fn oracle(k: usize) -> CompressionSpec {
+        CompressionSpec {
+            k: Some(k),
+            ..Self::base("oracle")
+        }
+    }
+
+    /// Validate against a model's dimensions and resolve to the
+    /// [`CacheMode`] the session will be built with.
+    pub fn resolve(&self, dims: &ModelDims) -> Result<CacheMode, WireError> {
+        if let Some(r) = self.ratio {
+            if !(0.0..=1.0).contains(&r) || !r.is_finite() {
+                return Err(WireError::bad_request(format!(
+                    "ratio {r} outside [0, 1]"
+                )));
+            }
+        }
+        if let Some(g) = self.group {
+            if g == 0 || g > dims.d_head || dims.d_head % g != 0 {
+                return Err(WireError::bad_request(format!(
+                    "group {g} must divide head_dim {}",
+                    dims.d_head
+                )));
+            }
+        }
+        if let Some(p) = &self.policy {
+            if crate::policies::make_policy(p, 1, 1, 0).is_none() {
+                return Err(WireError::bad_request(format!("unknown policy '{p}'")));
+            }
+        }
+        let prec = |name: &str| {
+            Precision::parse(name)
+                .ok_or_else(|| WireError::bad_request(format!("unknown precision '{name}'")))
+        };
+        let mode = match self.mode.as_str() {
+            "full" => CacheMode::Full,
+            "oracle" => CacheMode::Oracle {
+                k: self.k.unwrap_or(dims.max_seq + 1),
+            },
+            "mikv" => {
+                let lo = prec(self.lo.as_deref().unwrap_or("int2"))?;
+                if !lo.is_quantized() {
+                    return Err(WireError::bad_request(
+                        "mikv lo tier must be a quantized precision",
+                    ));
+                }
+                let mut mode = CacheMode::mikv(dims, self.ratio.unwrap_or(0.2), lo);
+                if let CacheMode::Mikv { cfg, policy } = &mut mode {
+                    if let Some(g) = self.group {
+                        cfg.lo = TierConfig::quantized(lo, g);
+                    }
+                    if let Some(p) = &self.policy {
+                        *policy = p.clone();
+                    }
+                }
+                mode
+            }
+            "h2o" => {
+                let mut mode = CacheMode::h2o(dims, self.ratio.unwrap_or(0.2));
+                if let CacheMode::Mikv { policy, .. } = &mut mode {
+                    if let Some(p) = &self.policy {
+                        *policy = p.clone();
+                    }
+                }
+                mode
+            }
+            "rtn" => {
+                let p = prec(self.lo.as_deref().unwrap_or("int8"))?;
+                if !p.is_quantized() {
+                    return Err(WireError::bad_request(
+                        "rtn precision must be quantized",
+                    ));
+                }
+                CacheMode::rtn(dims, p)
+            }
+            other => {
+                return Err(WireError::bad_request(format!("unknown mode '{other}'")))
+            }
+        };
+        Ok(mode)
+    }
+}
+
+// ----------------------------------------------------------------------
+// Events & sinks
+// ----------------------------------------------------------------------
+
+/// One streamed serving event. The terminal event of a submit op is always
+/// `Done`; `Stats`/`CancelResult` answer their respective ops.
+#[derive(Debug)]
+pub enum ServeEvent {
+    /// A sampled token, streamed as soon as it exists. `index` counts this
+    /// turn's generated tokens from 0.
+    Token { id: u64, index: usize, token: i64 },
+    /// Terminal event: the completed (or failed / cancelled) turn.
+    Done(Response),
+    /// Answer to a `stats` op.
+    Stats { id: u64, snapshot: StatsSnapshot },
+    /// Answer to a `cancel` op (`found`: the target was waiting or active).
+    CancelResult { id: u64, target: u64, found: bool },
+}
+
+/// Where a request's events go. The TCP front-end implements this with a
+/// per-connection writer channel; tests use a plain
+/// `mpsc::Sender<ServeEvent>`.
+pub trait EventSink: Send {
+    /// Deliver one event. Returns false when the receiver is gone (the
+    /// coordinator keeps generating regardless; a vanished client just
+    /// stops observing).
+    fn emit(&self, ev: ServeEvent) -> bool;
+}
+
+impl EventSink for mpsc::Sender<ServeEvent> {
+    fn emit(&self, ev: ServeEvent) -> bool {
+        self.send(ev).is_ok()
+    }
+}
+
+/// Event sink for one request.
+pub type Reply = Box<dyn EventSink>;
+
+// ----------------------------------------------------------------------
+// Ops & requests
+// ----------------------------------------------------------------------
+
+/// One operation handed to the coordinator thread.
+pub enum Op {
+    /// Start a turn: a fresh `generate`, or an `append` continuing a
+    /// parked session when [`Request::session`] is set.
+    Submit(Request),
+    /// Cancel a waiting or active request by id. The target receives its
+    /// terminal `done` (with `cancelled: true` and any partial tokens);
+    /// the cancel op itself is answered with a `CancelResult`.
+    Cancel { id: u64, target: u64, reply: Reply },
+    /// Snapshot pool/footprint/throughput counters.
+    Stats { id: u64, reply: Reply },
+}
+
+/// A generation turn.
 pub struct Request {
     pub id: u64,
+    /// Prompt token ids (for `append`: only the newly added tokens).
     pub prompt: Vec<i64>,
     /// Maximum new tokens to generate (including the prefill's first token).
     pub max_new: usize,
     /// Stop early when this token is produced.
     pub stop: Option<i64>,
-    pub mode: CacheMode,
+    /// Requested compression; resolved to a [`CacheMode`] at admission.
+    /// Ignored for `append` turns (the cache keeps its original config).
+    pub spec: CompressionSpec,
+    /// `Some(sid)`: continue the parked session `sid` (the `append` op),
+    /// re-ingesting `prompt` into its existing hi/lo tiers.
+    pub session: Option<u64>,
+    /// Keep the session's cache checked out after `done` so a follow-up
+    /// `append` can continue it.
+    pub keep: bool,
     pub submitted_at: Instant,
     pub reply: Reply,
 }
 
-/// Per-request latency/throughput metrics.
+/// Per-turn latency/throughput metrics.
 #[derive(Debug, Clone)]
 pub struct RequestMetrics {
-    /// Time to first token (prefill completion).
+    /// Time to first token of this turn.
     pub ttft: Duration,
-    /// Total request latency.
+    /// Total turn latency.
     pub latency: Duration,
+    /// Prompt tokens submitted this turn (not cumulative across turns).
     pub prompt_tokens: usize,
     pub generated_tokens: usize,
     /// Logical cache size at completion (% of full FP16).
@@ -34,30 +357,186 @@ pub struct RequestMetrics {
     /// Host bytes the session's cache pinned at completion (pooled shadow
     /// blocks + tier storage) — the bytes-per-session serving metric.
     pub host_bytes: usize,
+    /// Hi-tier token-slots occupied at completion (across planes). For
+    /// multi-turn sessions this carries over from previous turns.
+    pub hi_slots: u64,
+    /// Lo-tier (retained) token-slots occupied at completion.
+    pub lo_slots: u64,
 }
 
-/// A completed generation.
+impl RequestMetrics {
+    pub fn zero() -> RequestMetrics {
+        RequestMetrics {
+            ttft: Duration::ZERO,
+            latency: Duration::ZERO,
+            prompt_tokens: 0,
+            generated_tokens: 0,
+            cache_pct: 0.0,
+            host_bytes: 0,
+            hi_slots: 0,
+            lo_slots: 0,
+        }
+    }
+}
+
+/// A completed turn (the payload of the terminal `done`/`error` event).
+#[derive(Debug)]
 pub struct Response {
     pub id: u64,
+    /// This turn's generated tokens.
     pub tokens: Vec<i64>,
     pub metrics: RequestMetrics,
-    pub error: Option<String>,
+    /// Session id the cache was parked under (requests with `keep`).
+    pub session: Option<u64>,
+    /// The turn was cancelled; `tokens` holds whatever was generated.
+    pub cancelled: bool,
+    pub error: Option<WireError>,
 }
 
 impl Response {
-    pub fn error(id: u64, msg: impl Into<String>) -> Response {
+    pub fn error(id: u64, err: WireError) -> Response {
         Response {
             id,
             tokens: Vec::new(),
-            metrics: RequestMetrics {
-                ttft: Duration::ZERO,
-                latency: Duration::ZERO,
-                prompt_tokens: 0,
-                generated_tokens: 0,
-                cache_pct: 0.0,
-                host_bytes: 0,
-            },
-            error: Some(msg.into()),
+            metrics: RequestMetrics::zero(),
+            session: None,
+            cancelled: false,
+            error: Some(err),
         }
+    }
+
+    /// Terminal response for a request cancelled before admission.
+    pub fn cancelled(id: u64) -> Response {
+        Response {
+            id,
+            tokens: Vec::new(),
+            metrics: RequestMetrics::zero(),
+            session: None,
+            cancelled: true,
+            error: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            vocab: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_q_heads: 4,
+            n_kv_heads: 2,
+            d_head: 8,
+            d_ff: 64,
+            max_seq: 32,
+            quant_group: 4,
+            params: 0,
+        }
+    }
+
+    #[test]
+    fn spec_resolves_all_modes() {
+        let d = dims();
+        assert!(matches!(
+            CompressionSpec::full().resolve(&d).unwrap(),
+            CacheMode::Full
+        ));
+        assert!(matches!(
+            CompressionSpec::oracle(7).resolve(&d).unwrap(),
+            CacheMode::Oracle { k: 7 }
+        ));
+        match CompressionSpec::mikv(0.25, "int2").resolve(&d).unwrap() {
+            CacheMode::Mikv { cfg, policy } => {
+                assert!((cfg.importance_ratio - 0.25).abs() < 1e-9);
+                assert_eq!(cfg.lo.precision, Precision::Int2);
+                assert_eq!(policy, "h2o");
+            }
+            _ => panic!("not mikv"),
+        }
+        match CompressionSpec::h2o(0.5).resolve(&d).unwrap() {
+            CacheMode::Mikv { cfg, .. } => {
+                assert_eq!(cfg.retention, crate::kvcache::RetentionMode::Evict)
+            }
+            _ => panic!("not h2o"),
+        }
+        match CompressionSpec::rtn("int4").resolve(&d).unwrap() {
+            CacheMode::Mikv { cfg, .. } => assert_eq!(cfg.lo.precision, Precision::Int4),
+            _ => panic!("not rtn"),
+        }
+    }
+
+    #[test]
+    fn spec_overrides_group_and_policy() {
+        let d = dims();
+        let mut s = CompressionSpec::mikv(0.3, "int4");
+        s.group = Some(2);
+        s.policy = Some("local".to_string());
+        match s.resolve(&d).unwrap() {
+            CacheMode::Mikv { cfg, policy } => {
+                assert_eq!(cfg.lo.group, 2);
+                assert_eq!(policy, "local");
+            }
+            _ => panic!("not mikv"),
+        }
+    }
+
+    #[test]
+    fn spec_rejects_invalid_fields() {
+        let d = dims();
+        let cases: Vec<CompressionSpec> = vec![
+            CompressionSpec::base("warp"),
+            CompressionSpec::mikv(1.5, "int2"),
+            CompressionSpec::mikv(-0.1, "int2"),
+            CompressionSpec::mikv(0.2, "int99"),
+            CompressionSpec::mikv(0.2, "fp16"),
+            CompressionSpec {
+                group: Some(3), // does not divide d_head = 8
+                ..CompressionSpec::mikv(0.2, "int2")
+            },
+            CompressionSpec {
+                policy: Some("nope".to_string()),
+                ..CompressionSpec::mikv(0.2, "int2")
+            },
+        ];
+        for s in cases {
+            let err = s.resolve(&d).expect_err(&format!("{s:?} must fail"));
+            assert_eq!(err.code, ErrorCode::BadRequest, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn error_codes_roundtrip() {
+        for code in [
+            ErrorCode::BadRequest,
+            ErrorCode::Overloaded,
+            ErrorCode::SessionNotFound,
+            ErrorCode::SessionBusy,
+            ErrorCode::CacheFull,
+            ErrorCode::Internal,
+        ] {
+            assert_eq!(ErrorCode::parse(code.as_str()), Some(code));
+        }
+        assert_eq!(ErrorCode::parse("warp"), None);
+    }
+
+    #[test]
+    fn sink_over_channel_delivers() {
+        let (tx, rx) = mpsc::channel::<ServeEvent>();
+        assert!(tx.emit(ServeEvent::Token {
+            id: 1,
+            index: 0,
+            token: 42
+        }));
+        match rx.recv().unwrap() {
+            ServeEvent::Token { id, index, token } => {
+                assert_eq!((id, index, token), (1, 0, 42));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        drop(rx);
+        assert!(!tx.emit(ServeEvent::Done(Response::cancelled(1))));
     }
 }

@@ -1,7 +1,35 @@
 //! Serving metrics aggregation.
 
 use super::request::RequestMetrics;
+use crate::kvcache::PoolStats;
 use std::time::{Duration, Instant};
+
+/// Point-in-time serving counters answered to the wire `stats` op:
+/// scheduler occupancy, session-registry footprint, throughput, and the
+/// shared [`crate::kvcache::BufferPool`]'s counters.
+#[derive(Debug, Clone, Default)]
+pub struct StatsSnapshot {
+    /// Sessions currently decoding.
+    pub active: usize,
+    /// Requests queued for admission.
+    pub waiting: usize,
+    /// Sessions parked in the registry awaiting `append`.
+    pub parked_sessions: usize,
+    /// Host bytes the parked sessions pin.
+    pub parked_bytes: usize,
+    /// Turns completed since the coordinator started.
+    pub completed: usize,
+    /// Tokens generated since the coordinator started.
+    pub generated_tokens: usize,
+    /// Generated tokens per wall-clock second.
+    pub throughput_tps: f64,
+    /// Mean host cache bytes per completed turn.
+    pub mean_host_bytes: f64,
+    /// Largest host cache footprint any completed turn reached.
+    pub peak_host_bytes: usize,
+    /// Shared buffer-pool counters.
+    pub pool: PoolStats,
+}
 
 /// Aggregates per-request metrics into the numbers the serving benches
 /// report: TTFT / latency percentiles and token throughput.
@@ -103,6 +131,8 @@ mod tests {
             generated_tokens: 5,
             cache_pct: 50.0,
             host_bytes: 1 << 20,
+            hi_slots: 4,
+            lo_slots: 12,
         }
     }
 

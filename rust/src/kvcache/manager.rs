@@ -348,6 +348,24 @@ impl CacheManager {
     // Decode-step ingestion
     // ------------------------------------------------------------------
 
+    /// Fallible [`Self::append_token`] used by the serving path. Decode
+    /// ingest and multi-turn prompt **re-ingest** share this entry point:
+    /// when an `append` op continues a parked session, its new prompt
+    /// tokens are fed through the decode graph one by one and land here,
+    /// entering the same hi/lo tiers (and importance bookkeeping) as the
+    /// original prefill. A full cache is an error the coordinator maps
+    /// onto the `cache_full` wire code instead of a panic.
+    pub fn try_append_token(&mut self, out: StepOutputs<'_>) -> crate::Result<()> {
+        anyhow::ensure!(
+            self.seq_len < self.s_max,
+            "cache full: {} of {} slots",
+            self.seq_len,
+            self.s_max
+        );
+        self.append_token(out);
+        Ok(())
+    }
+
     /// Ingest one decode step's outputs: update importance, admit the new
     /// token to the hi tier, and demote/evict down to budget.
     pub fn append_token(&mut self, out: StepOutputs<'_>) {

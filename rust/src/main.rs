@@ -8,12 +8,12 @@
 //!
 //! Run `mikv help` for flags.
 
-use mikv::coordinator::{Coordinator, CoordinatorConfig, Request};
+use mikv::coordinator::{Coordinator, CoordinatorConfig, Op};
 use mikv::eval::{EvalTask, Harness};
 use mikv::model::{CacheMode, Engine, Session};
 use mikv::runtime::Manifest;
 use mikv::util::cli::Args;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 const USAGE: &str = "\
 mikv — mixed-precision KV cache serving (MiKV reproduction)
@@ -21,7 +21,10 @@ mikv — mixed-precision KV cache serving (MiKV reproduction)
 USAGE: mikv <command> [--artifacts DIR] [--model NAME] [flags]
 
 COMMANDS:
-  serve      --port 7777 --max-active 8
+  serve      --port 7777 --max-active 8 --max-waiting 256
+             --session-ttl 120 (secs) --session-mb 512
+             (Serving API v1: versioned streaming ops with multi-turn
+              sessions; see rust/src/server/proto.rs and EXPERIMENTS.md)
   generate   --prompt 1,2,3 --max-new 8 --mode mikv:0.25:int2
   eval       --task lineret --samples 25 --modes full,mikv:0.25:int2,h2o:0.25
   info       print manifest summary
@@ -123,17 +126,19 @@ fn run(args: &Args) -> anyhow::Result<()> {
         }
         Some("serve") => {
             let engine = Engine::load(&artifacts, &model)?;
-            let dims = engine.dims().clone();
             let port: u16 = args.get("port", 7777u16)?;
             let cfg = CoordinatorConfig {
                 max_active: args.get("max-active", 8usize)?,
                 prefill_chunk: args.get("prefill-chunk", 4usize)?,
+                max_waiting: args.get("max-waiting", 256usize)?,
+                session_ttl: Duration::from_secs(args.get("session-ttl", 120u64)?),
+                max_session_bytes: args.get("session-mb", 512usize)? << 20,
                 ..Default::default()
             };
-            let (tx, rx) = std::sync::mpsc::channel::<Request>();
+            let (tx, rx) = std::sync::mpsc::channel::<Op>();
             let listener = std::net::TcpListener::bind(("127.0.0.1", port))?;
             std::thread::spawn(move || {
-                let _ = mikv::server::serve(listener, dims, tx);
+                let _ = mikv::server::serve(listener, tx);
             });
             Coordinator::new(engine, cfg).run(rx);
             Ok(())

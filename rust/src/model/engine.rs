@@ -449,12 +449,16 @@ impl Engine {
 
         let mut rows = Vec::with_capacity(n_live);
         for (lane, sess) in sessions.iter_mut().enumerate().take(n_live) {
-            sess.ingest_step(
+            // Fallible ingest: a capacity overflow surfaces as a decode
+            // error (the coordinator retires the group with a structured
+            // `internal`/`cache_full` response) rather than aborting the
+            // engine thread.
+            sess.try_ingest_step(
                 &k_new[lane * planes * dh..(lane + 1) * planes * dh],
                 &v_new[lane * planes * dh..(lane + 1) * planes * dh],
                 &attn_prev[lane * planes * s..(lane + 1) * planes * s],
                 &attn_self[lane * planes..(lane + 1) * planes],
-            );
+            )?;
             rows.push(logits[lane * v_sz..(lane + 1) * v_sz].to_vec());
         }
         Ok(rows)

@@ -7,10 +7,14 @@
 //!   uploads weights once, and drives batched prefill/decode steps.
 //! * [`sampler`] — greedy decoding (the paper evaluates with deterministic
 //!   greedy decoding throughout).
+//! * [`stub`] — artifact-free deterministic engine for protocol tests and
+//!   the CI smoke run.
 
 pub mod engine;
 pub mod sampler;
 pub mod session;
+pub mod stub;
 
 pub use engine::{Engine, PrefillOutput};
 pub use session::{CacheMode, FullCache, Session, SessionCache};
+pub use stub::StubEngine;

@@ -1,5 +1,6 @@
 //! Per-request generation session state.
 
+use crate::kvcache::accounting::Occupancy;
 use crate::kvcache::{BufferPool, CacheConfig, CacheManager, StepOutputs};
 use crate::policies::make_policy;
 use crate::quant::Precision;
@@ -183,6 +184,14 @@ impl FullCache {
         (self.k.len() + self.v.len() + self.mask.len()) * std::mem::size_of::<f32>()
     }
 
+    /// Tier occupancy view: every live slot of the dense cache counts as hi.
+    pub fn occupancy(&self) -> Occupancy {
+        Occupancy {
+            hi_slots: (self.planes * self.seq_len) as u64,
+            ..Occupancy::default()
+        }
+    }
+
     /// Append one token's K/V (`[planes, d]`).
     pub fn append(&mut self, k_new: &[f32], v_new: &[f32]) {
         let t = self.seq_len;
@@ -225,6 +234,16 @@ impl SessionCache {
         match self {
             SessionCache::Mikv(m) => m.host_footprint().total(),
             SessionCache::Full(f) => f.host_bytes(),
+        }
+    }
+
+    /// Tier occupancy (hi/lo/evicted slot counts summed over planes) — the
+    /// per-turn serving report that shows multi-turn sessions carrying
+    /// their tiers across turns.
+    pub fn occupancy(&self) -> Occupancy {
+        match self {
+            SessionCache::Mikv(m) => m.occupancy(),
+            SessionCache::Full(f) => f.occupancy(),
         }
     }
 }
@@ -291,14 +310,39 @@ impl Session {
         attn_prev: &[f32],
         attn_self: &[f32],
     ) {
+        self.try_ingest_step(k_new, v_new, attn_prev, attn_self)
+            .expect("cache overflow (callers must bound seq_len)");
+    }
+
+    /// Fallible variant of [`Self::ingest_step`] used on the serving path
+    /// (including multi-turn prompt re-ingest, where appended prompt tokens
+    /// are fed through the decode graph into the same hi/lo tiers): a full
+    /// cache surfaces as an error the coordinator maps onto the
+    /// `cache_full` wire code instead of a panic.
+    pub fn try_ingest_step(
+        &mut self,
+        k_new: &[f32],
+        v_new: &[f32],
+        attn_prev: &[f32],
+        attn_self: &[f32],
+    ) -> crate::Result<()> {
         match &mut self.cache {
-            SessionCache::Mikv(m) => m.append_token(StepOutputs {
+            SessionCache::Mikv(m) => m.try_append_token(StepOutputs {
                 k_new,
                 v_new,
                 attn_prev,
                 attn_self,
             }),
-            SessionCache::Full(f) => f.append(k_new, v_new),
+            SessionCache::Full(f) => {
+                anyhow::ensure!(
+                    f.seq_len < f.s_max,
+                    "cache full: {} of {} slots",
+                    f.seq_len,
+                    f.s_max
+                );
+                f.append(k_new, v_new);
+                Ok(())
+            }
         }
     }
 }

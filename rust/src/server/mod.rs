@@ -1,12 +1,21 @@
 //! TCP JSON-lines serving front-end.
 //!
-//! * [`proto`] — wire format: one JSON object per line in both directions.
+//! * [`proto`] — the versioned wire format ("Serving API v1"): one JSON
+//!   envelope per line in (`{"v":1,"op":"generate"|"append"|"cancel"|
+//!   "stats",...}`), one event per line out (`token` stream + terminal
+//!   `done`/`error`, `stats`, `cancelled`), plus the legacy v-less
+//!   one-shot shape and a [`RequestBuilder`] so clients never hand-roll
+//!   protocol JSON. See the [`proto`] module docs for the full grammar.
 //! * [`tcp`] — threaded listener: one reader thread per connection
-//!   forwarding requests to the coordinator channel, one writer thread
-//!   delivering responses back; plus a blocking [`tcp::Client`].
+//!   forwarding decoded ops to the coordinator channel, one writer thread
+//!   acting as the connection's event sink; plus a blocking
+//!   [`tcp::Client`] with streaming helpers.
 
 pub mod proto;
 pub mod tcp;
 
-pub use proto::{decode_request, encode_response, WireRequest};
+pub use proto::{
+    decode_line, encode_event, encode_legacy_response, DecodeError, RequestBuilder, WireOp,
+    WireRequest,
+};
 pub use tcp::{serve, Client};

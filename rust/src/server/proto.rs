@@ -1,83 +1,443 @@
-//! Wire protocol: JSON-lines request/response.
+//! Wire protocol: versioned JSON-lines envelope with streaming events.
 //!
-//! Request:
+//! # Serving API v1
+//!
+//! Every request is one JSON object per line carrying `"v": 1` and an
+//! `"op"`. Parsing is **policy-free**: compression arrives as a plain-data
+//! [`CompressionSpec`] and is validated/resolved against the model only at
+//! coordinator admission.
+//!
 //! ```json
-//! {"id": 1, "prompt": [1, 17, 230], "max_new": 4,
-//!  "mode": "mikv", "ratio": 0.25, "lo": "int2", "stop": 6}
+//! {"v":1,"op":"generate","id":1,"prompt":[1,17,230],"max_new":8,
+//!  "stop":6,"keep":true,
+//!  "compression":{"mode":"mikv","ratio":0.25,"lo":"int2","group":16,
+//!                 "policy":"h2o"}}
+//! {"v":1,"op":"append","id":2,"session":7,"prompt":[4,5],"max_new":8}
+//! {"v":1,"op":"cancel","id":3,"target":1}
+//! {"v":1,"op":"stats","id":4}
 //! ```
-//! `mode` ∈ `full` | `oracle` (+`k`) | `mikv` (+`ratio`, `lo`) |
-//! `h2o` (+`ratio`) | `rtn` (+`prec`). Response:
+//!
+//! * `generate` — start a turn. `compression.mode` ∈ `full` | `oracle`
+//!   (+`k`) | `mikv` (+`ratio`, `lo`, `group`, `policy`) | `h2o`
+//!   (+`ratio`) | `rtn` (+`lo`). With `"keep":true` the session's cache
+//!   stays checked out after `done` under the returned `session` id.
+//! * `append` — continue a kept session: the new prompt tokens re-ingest
+//!   into the same hi/lo tiers (`keep` defaults to true here). Session ids
+//!   are coordinator-global and carry no capability token: any connection
+//!   to the server may continue (or consume) a kept session, so the
+//!   listener must sit behind a trusted boundary (it binds 127.0.0.1).
+//! * `cancel` — cancel an in-flight request by its `id` (same connection).
+//! * `stats` — pool/footprint/throughput counters.
+//!
+//! Responses are **events**, one JSON object per line, ordered per
+//! connection. A submit op streams `token` events and ends with exactly
+//! one terminal `done` or `error`:
+//!
 //! ```json
-//! {"id": 1, "tokens": [230, 231], "ttft_ms": 12.3, "latency_ms": 40.1,
-//!  "cache_pct": 33.2, "host_bytes": 43008, "error": null}
+//! {"event":"token","id":1,"i":0,"t":230}
+//! {"event":"done","id":1,"tokens":[230,231],"session":7,
+//!  "cancelled":false,"ttft_ms":12.3,"latency_ms":40.1,
+//!  "prompt_tokens":3,"generated_tokens":2,"cache_pct":33.2,
+//!  "host_bytes":43008,"hi_slots":12,"lo_slots":36}
+//! {"event":"error","id":1,"code":"bad_request","message":"..."}
+//! {"event":"stats","id":4,"active":1,"waiting":0,...}
+//! {"event":"cancelled","id":3,"target":1,"found":true}
 //! ```
+//!
+//! Error `code`s are the stable [`crate::coordinator::ErrorCode`] set:
+//! `bad_request`, `overloaded`, `session_not_found`, `session_busy`,
+//! `cache_full`, `internal`.
+//!
+//! # Legacy one-shot shape
+//!
+//! A line **without** `"v"` is the pre-v1 flat request
+//! (`{"id":1,"prompt":[...],"max_new":4,"mode":"mikv","ratio":0.25,
+//! "lo":"int2"}`) and is answered with the pre-v1 single response line —
+//! no events:
+//!
+//! ```json
+//! {"id":1,"tokens":[230,231],"ttft_ms":12.3,"latency_ms":40.1,
+//!  "prompt_tokens":3,"generated_tokens":2,"cache_pct":33.2,
+//!  "host_bytes":43008,"error":null}
+//! ```
+//!
+//! Prompt tokens must be integers in both shapes; a non-integer element is
+//! rejected with `bad_request` (it is never silently coerced).
 
-use crate::coordinator::Response;
-use crate::model::CacheMode;
-use crate::quant::Precision;
-use crate::runtime::ModelDims;
+use crate::coordinator::{CompressionSpec, Response, ServeEvent, WireError};
 use crate::util::json::{Json, JsonObj};
 
-/// A parsed wire request (pre-CacheMode resolution).
-#[derive(Debug, Clone)]
+// ----------------------------------------------------------------------
+// Decoded requests
+// ----------------------------------------------------------------------
+
+/// A parsed submit-style request (`generate` or `append`), pre-resolution.
+#[derive(Debug, Clone, PartialEq)]
 pub struct WireRequest {
     pub id: u64,
     pub prompt: Vec<i64>,
     pub max_new: usize,
     pub stop: Option<i64>,
-    pub mode: CacheMode,
+    pub spec: CompressionSpec,
+    /// `Some(sid)` for `append` (continue a kept session).
+    pub session: Option<u64>,
+    pub keep: bool,
+    /// Parsed from the legacy v-less one-shot shape: the reply is a single
+    /// response line, no events.
+    pub legacy: bool,
 }
 
-/// Decode one request line against a model's dimensions.
-pub fn decode_request(line: &str, dims: &ModelDims) -> crate::Result<WireRequest> {
-    let v = Json::parse(line)?;
-    let id = v.field_i64("id")? as u64;
-    let prompt: Vec<i64> = v
-        .field_arr("prompt")?
-        .iter()
-        .map(|t| t.as_i64().unwrap_or(0))
-        .collect();
-    anyhow::ensure!(!prompt.is_empty(), "empty prompt");
-    let max_new = v.field_i64("max_new").unwrap_or(8) as usize;
-    let stop = v.field("stop").ok().and_then(|s| s.as_i64());
+/// One decoded wire operation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireOp {
+    Submit(WireRequest),
+    Cancel { id: u64, target: u64 },
+    Stats { id: u64 },
+}
 
-    let mode_s = v.field_str("mode").unwrap_or("full");
-    let ratio = v.field_f64("ratio").unwrap_or(0.2);
-    let mode = match mode_s {
-        "full" => CacheMode::Full,
-        "oracle" => CacheMode::Oracle {
-            k: v.field_i64("k").unwrap_or(dims.max_seq as i64 + 1) as usize,
-        },
-        "mikv" => {
-            let lo = Precision::parse(v.field_str("lo").unwrap_or("int2"))
-                .ok_or_else(|| anyhow::anyhow!("bad lo precision"))?;
-            CacheMode::mikv(dims, ratio, lo)
+/// A request line that failed to decode: the structured error to send
+/// back, plus how to encode it.
+#[derive(Debug, Clone)]
+pub struct DecodeError {
+    /// Request id when recoverable from the line (0 otherwise).
+    pub id: u64,
+    /// The line was (or had to be assumed) legacy-shaped, so the error
+    /// reply must use the legacy single-line encoding.
+    pub legacy: bool,
+    pub err: WireError,
+}
+
+/// Decode one request line into a [`WireOp`].
+pub fn decode_line(line: &str) -> Result<WireOp, DecodeError> {
+    let v = Json::parse(line).map_err(|e| DecodeError {
+        id: 0,
+        legacy: true,
+        err: WireError::bad_request(format!("bad json: {e}")),
+    })?;
+    let id_field = v.field("id").ok().and_then(Json::as_i64);
+    let id = id_field.unwrap_or(0).max(0) as u64;
+    let versioned = v.field("v").is_ok();
+    let legacy = !versioned;
+    let fail = move |err: WireError| DecodeError { id, legacy, err };
+    match id_field {
+        Some(n) if n >= 0 => {}
+        _ => {
+            return Err(fail(WireError::bad_request(
+                "'id' must be a non-negative integer",
+            )))
         }
-        "h2o" => CacheMode::h2o(dims, ratio),
-        "rtn" => {
-            let p = Precision::parse(v.field_str("prec").unwrap_or("int8"))
-                .ok_or_else(|| anyhow::anyhow!("bad rtn precision"))?;
-            CacheMode::rtn(dims, p)
+    }
+
+    if !versioned {
+        // Legacy flat one-shot generate.
+        let prompt = parse_prompt(&v).map_err(&fail)?;
+        let max_new = v.field_i64("max_new").unwrap_or(8).max(0) as usize;
+        let stop = v.field("stop").ok().and_then(Json::as_i64);
+        return Ok(WireOp::Submit(WireRequest {
+            id,
+            prompt,
+            max_new,
+            stop,
+            spec: legacy_spec(&v),
+            session: None,
+            keep: false,
+            legacy: true,
+        }));
+    }
+
+    let ver = v
+        .field("v")
+        .ok()
+        .and_then(Json::as_i64)
+        .ok_or_else(|| fail(WireError::bad_request("'v' must be an integer")))?;
+    if ver != 1 {
+        return Err(fail(WireError::bad_request(format!(
+            "unsupported protocol version {ver}"
+        ))));
+    }
+    let op = v
+        .field_str("op")
+        .map_err(|_| fail(WireError::bad_request("missing string 'op'")))?;
+    match op {
+        "generate" | "append" => {
+            let session = if op == "append" {
+                let sid = v
+                    .field("session")
+                    .ok()
+                    .and_then(Json::as_i64)
+                    .filter(|s| *s >= 0)
+                    .ok_or_else(|| {
+                        fail(WireError::bad_request(
+                            "append requires a non-negative integer 'session'",
+                        ))
+                    })?;
+                Some(sid as u64)
+            } else {
+                None
+            };
+            let prompt = parse_prompt(&v).map_err(&fail)?;
+            // v1 is strictly typed end to end: a present field of the wrong
+            // type is a bad_request, never a silent default (the legacy
+            // shape below stays lenient for compatibility).
+            let max_new = match v.field("max_new") {
+                Ok(j) => j.as_i64().filter(|n| *n >= 0).ok_or_else(|| {
+                    fail(WireError::bad_request(
+                        "'max_new' must be a non-negative integer",
+                    ))
+                })? as usize,
+                Err(_) => 8,
+            };
+            let stop = match v.field("stop") {
+                Ok(j) => Some(j.as_i64().ok_or_else(|| {
+                    fail(WireError::bad_request("'stop' must be an integer"))
+                })?),
+                Err(_) => None,
+            };
+            let keep = match v.field("keep") {
+                Ok(j) => j.as_bool().ok_or_else(|| {
+                    fail(WireError::bad_request("'keep' must be a boolean"))
+                })?,
+                Err(_) => op == "append",
+            };
+            let spec = match v.field("compression") {
+                Ok(c) => spec_from_json(c).map_err(&fail)?,
+                Err(_) => CompressionSpec::full(),
+            };
+            Ok(WireOp::Submit(WireRequest {
+                id,
+                prompt,
+                max_new,
+                stop,
+                spec,
+                session,
+                keep,
+                legacy: false,
+            }))
         }
-        other => anyhow::bail!("unknown mode '{other}'"),
+        "cancel" => {
+            let target = v
+                .field("target")
+                .ok()
+                .and_then(Json::as_i64)
+                .filter(|t| *t >= 0)
+                .ok_or_else(|| {
+                    fail(WireError::bad_request(
+                        "cancel requires a non-negative integer 'target'",
+                    ))
+                })?;
+            Ok(WireOp::Cancel {
+                id,
+                target: target as u64,
+            })
+        }
+        "stats" => Ok(WireOp::Stats { id }),
+        other => Err(fail(WireError::bad_request(format!("unknown op '{other}'")))),
+    }
+}
+
+/// Strict prompt parsing: every element must be an integer token id — a
+/// non-integer is a `bad_request`, never silently coerced to 0.
+fn parse_prompt(v: &Json) -> Result<Vec<i64>, WireError> {
+    let arr = v
+        .field_arr("prompt")
+        .map_err(|_| WireError::bad_request("missing 'prompt' array"))?;
+    let mut prompt = Vec::with_capacity(arr.len());
+    for (i, t) in arr.iter().enumerate() {
+        match t.as_i64() {
+            Some(tok) => prompt.push(tok),
+            None => {
+                return Err(WireError::bad_request(format!(
+                    "prompt[{i}] is not an integer token id"
+                )))
+            }
+        }
+    }
+    if prompt.is_empty() {
+        return Err(WireError::bad_request("empty prompt"));
+    }
+    Ok(prompt)
+}
+
+/// Compression fields of the legacy flat shape (`mode`/`ratio`/`lo`/...
+/// inline at the top level). Unknown values fail later, at resolution.
+fn legacy_spec(v: &Json) -> CompressionSpec {
+    CompressionSpec {
+        mode: v.field_str("mode").unwrap_or("full").to_string(),
+        ratio: v.field("ratio").ok().and_then(Json::as_f64),
+        lo: v
+            .field_str("lo")
+            .or_else(|_| v.field_str("prec"))
+            .ok()
+            .map(str::to_string),
+        group: v
+            .field("group")
+            .ok()
+            .and_then(Json::as_i64)
+            .map(|g| g.max(0) as usize),
+        policy: v.field_str("policy").ok().map(str::to_string),
+        k: v
+            .field("k")
+            .ok()
+            .and_then(Json::as_i64)
+            .map(|k| k.max(0) as usize),
+    }
+}
+
+/// Parse a v1 `"compression"` object into a [`CompressionSpec`].
+fn spec_from_json(c: &Json) -> Result<CompressionSpec, WireError> {
+    if c.as_obj().is_none() {
+        return Err(WireError::bad_request("'compression' must be an object"));
+    }
+    let str_field = |name: &str| -> Result<Option<String>, WireError> {
+        match c.field(name) {
+            Ok(j) => j
+                .as_str()
+                .map(|s| Some(s.to_string()))
+                .ok_or_else(|| {
+                    WireError::bad_request(format!("compression.{name} must be a string"))
+                }),
+            Err(_) => Ok(None),
+        }
     };
-    Ok(WireRequest {
-        id,
-        prompt,
-        max_new,
-        stop,
-        mode,
+    let uint_field = |name: &str| -> Result<Option<usize>, WireError> {
+        match c.field(name) {
+            Ok(j) => j
+                .as_i64()
+                .filter(|n| *n >= 0)
+                .map(|n| Some(n as usize))
+                .ok_or_else(|| {
+                    WireError::bad_request(format!(
+                        "compression.{name} must be a non-negative integer"
+                    ))
+                }),
+            Err(_) => Ok(None),
+        }
+    };
+    let ratio = match c.field("ratio") {
+        Ok(j) => Some(j.as_f64().ok_or_else(|| {
+            WireError::bad_request("compression.ratio must be a number")
+        })?),
+        Err(_) => None,
+    };
+    Ok(CompressionSpec {
+        mode: str_field("mode")?.unwrap_or_else(|| "full".to_string()),
+        ratio,
+        lo: match str_field("lo")? {
+            Some(lo) => Some(lo),
+            None => str_field("prec")?,
+        },
+        group: uint_field("group")?,
+        policy: str_field("policy")?,
+        k: uint_field("k")?,
     })
 }
 
-/// Encode a coordinator response as one JSON line (no trailing newline).
-pub fn encode_response(r: &Response) -> String {
+// ----------------------------------------------------------------------
+// Event encoding
+// ----------------------------------------------------------------------
+
+/// Emit a spec's set fields into `o` — shared by the nested v1
+/// `"compression"` object and the flattened legacy shape, so the two
+/// encodings can't drift apart field-by-field.
+fn spec_fields_into(o: &mut JsonObj, spec: &CompressionSpec) {
+    o.set("mode", spec.mode.as_str());
+    if let Some(r) = spec.ratio {
+        o.set("ratio", r);
+    }
+    if let Some(lo) = &spec.lo {
+        o.set("lo", lo.as_str());
+    }
+    if let Some(g) = spec.group {
+        o.set("group", g);
+    }
+    if let Some(p) = &spec.policy {
+        o.set("policy", p.as_str());
+    }
+    if let Some(k) = spec.k {
+        o.set("k", k);
+    }
+}
+
+fn spec_to_json(spec: &CompressionSpec) -> Json {
+    let mut o = JsonObj::new();
+    spec_fields_into(&mut o, spec);
+    Json::Obj(o)
+}
+
+fn tokens_json(tokens: &[i64]) -> Json {
+    Json::Arr(tokens.iter().map(|&t| Json::Int(t)).collect())
+}
+
+/// Encode one v1 event as a JSON line (no trailing newline).
+pub fn encode_event(ev: &ServeEvent) -> String {
+    let mut o = JsonObj::new();
+    match ev {
+        ServeEvent::Token { id, index, token } => {
+            o.set("event", "token");
+            o.set("id", *id as i64);
+            o.set("i", *index);
+            o.set("t", *token);
+        }
+        ServeEvent::Done(r) => match &r.error {
+            Some(e) => {
+                o.set("event", "error");
+                o.set("id", r.id as i64);
+                o.set("code", e.code.as_str());
+                o.set("message", e.message.as_str());
+            }
+            None => {
+                o.set("event", "done");
+                o.set("id", r.id as i64);
+                o.set("tokens", tokens_json(&r.tokens));
+                if let Some(sid) = r.session {
+                    o.set("session", sid as i64);
+                }
+                o.set("cancelled", r.cancelled);
+                o.set("ttft_ms", r.metrics.ttft.as_secs_f64() * 1e3);
+                o.set("latency_ms", r.metrics.latency.as_secs_f64() * 1e3);
+                o.set("prompt_tokens", r.metrics.prompt_tokens);
+                o.set("generated_tokens", r.metrics.generated_tokens);
+                o.set("cache_pct", r.metrics.cache_pct);
+                o.set("host_bytes", r.metrics.host_bytes);
+                o.set("hi_slots", r.metrics.hi_slots as i64);
+                o.set("lo_slots", r.metrics.lo_slots as i64);
+            }
+        },
+        ServeEvent::Stats { id, snapshot } => {
+            o.set("event", "stats");
+            o.set("id", *id as i64);
+            o.set("active", snapshot.active);
+            o.set("waiting", snapshot.waiting);
+            o.set("parked_sessions", snapshot.parked_sessions);
+            o.set("parked_bytes", snapshot.parked_bytes);
+            o.set("completed", snapshot.completed);
+            o.set("generated_tokens", snapshot.generated_tokens);
+            o.set("throughput_tps", snapshot.throughput_tps);
+            o.set("mean_host_bytes", snapshot.mean_host_bytes);
+            o.set("peak_host_bytes", snapshot.peak_host_bytes);
+            o.set("pool_free_blocks", snapshot.pool.free_blocks);
+            o.set("pool_free_bytes", snapshot.pool.free_bytes);
+            o.set("pool_outstanding_blocks", snapshot.pool.outstanding_blocks);
+            o.set("pool_outstanding_bytes", snapshot.pool.outstanding_bytes);
+            o.set("pool_hits", snapshot.pool.hits as i64);
+            o.set("pool_misses", snapshot.pool.misses as i64);
+        }
+        ServeEvent::CancelResult { id, target, found } => {
+            o.set("event", "cancelled");
+            o.set("id", *id as i64);
+            o.set("target", *target as i64);
+            o.set("found", *found);
+        }
+    }
+    Json::Obj(o).to_string()
+}
+
+/// Encode a terminal response in the legacy single-line shape (the exact
+/// pre-v1 field set, locked by regression test).
+pub fn encode_legacy_response(r: &Response) -> String {
     let mut o = JsonObj::new();
     o.set("id", r.id as i64);
-    o.set(
-        "tokens",
-        Json::Arr(r.tokens.iter().map(|&t| Json::Int(t)).collect()),
-    );
+    o.set("tokens", tokens_json(&r.tokens));
     o.set("ttft_ms", r.metrics.ttft.as_secs_f64() * 1e3);
     o.set("latency_ms", r.metrics.latency.as_secs_f64() * 1e3);
     o.set("prompt_tokens", r.metrics.prompt_tokens);
@@ -87,82 +447,419 @@ pub fn encode_response(r: &Response) -> String {
     o.set(
         "error",
         match &r.error {
-            Some(e) => Json::Str(e.clone()),
+            Some(e) => Json::Str(e.message.clone()),
             None => Json::Null,
         },
     );
     Json::Obj(o).to_string()
 }
 
+/// Encode an event for a legacy client: only the terminal response is
+/// visible (token/stats/cancel events have no legacy representation).
+pub fn encode_legacy_event(ev: &ServeEvent) -> Option<String> {
+    match ev {
+        ServeEvent::Done(r) => Some(encode_legacy_response(r)),
+        _ => None,
+    }
+}
+
+// ----------------------------------------------------------------------
+// RequestBuilder
+// ----------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+enum BuilderOp {
+    Generate,
+    Append { session: u64 },
+    Cancel { target: u64 },
+    Stats,
+}
+
+/// Builds request lines programmatically so clients (examples, benches,
+/// tests) never hand-roll protocol JSON. `build()` emits exactly what
+/// [`decode_line`] parses (property-tested).
+#[derive(Debug, Clone)]
+pub struct RequestBuilder {
+    op: BuilderOp,
+    id: u64,
+    prompt: Vec<i64>,
+    max_new: usize,
+    stop: Option<i64>,
+    keep: Option<bool>,
+    spec: Option<CompressionSpec>,
+    legacy: bool,
+}
+
+impl RequestBuilder {
+    fn base(op: BuilderOp, id: u64) -> RequestBuilder {
+        RequestBuilder {
+            op,
+            id,
+            prompt: Vec::new(),
+            max_new: 8,
+            stop: None,
+            keep: None,
+            spec: None,
+            legacy: false,
+        }
+    }
+
+    /// Start a fresh generation turn.
+    pub fn generate(id: u64) -> RequestBuilder {
+        Self::base(BuilderOp::Generate, id)
+    }
+
+    /// Continue a kept session.
+    pub fn append(id: u64, session: u64) -> RequestBuilder {
+        Self::base(BuilderOp::Append { session }, id)
+    }
+
+    /// Cancel an in-flight request.
+    pub fn cancel(id: u64, target: u64) -> RequestBuilder {
+        Self::base(BuilderOp::Cancel { target }, id)
+    }
+
+    /// Request a stats snapshot.
+    pub fn stats(id: u64) -> RequestBuilder {
+        Self::base(BuilderOp::Stats, id)
+    }
+
+    pub fn prompt(mut self, tokens: &[i64]) -> RequestBuilder {
+        self.prompt = tokens.to_vec();
+        self
+    }
+
+    pub fn max_new(mut self, n: usize) -> RequestBuilder {
+        self.max_new = n;
+        self
+    }
+
+    pub fn stop(mut self, token: i64) -> RequestBuilder {
+        self.stop = Some(token);
+        self
+    }
+
+    pub fn keep(mut self, keep: bool) -> RequestBuilder {
+        self.keep = Some(keep);
+        self
+    }
+
+    pub fn compression(mut self, spec: CompressionSpec) -> RequestBuilder {
+        self.spec = Some(spec);
+        self
+    }
+
+    /// Emit the v-less legacy one-shot shape (generate only).
+    pub fn legacy(mut self) -> RequestBuilder {
+        self.legacy = true;
+        self
+    }
+
+    /// Render the request as one JSON line (no trailing newline).
+    pub fn build(&self) -> String {
+        let mut o = JsonObj::new();
+        if self.legacy {
+            debug_assert!(
+                matches!(self.op, BuilderOp::Generate),
+                "legacy shape only exists for generate"
+            );
+            o.set("id", self.id as i64);
+            o.set("prompt", tokens_json(&self.prompt));
+            o.set("max_new", self.max_new);
+            if let Some(s) = self.stop {
+                o.set("stop", s);
+            }
+            spec_fields_into(&mut o, &self.spec.clone().unwrap_or_default());
+            return Json::Obj(o).to_string();
+        }
+        o.set("v", 1i64);
+        let op_name = match &self.op {
+            BuilderOp::Generate => "generate",
+            BuilderOp::Append { .. } => "append",
+            BuilderOp::Cancel { .. } => "cancel",
+            BuilderOp::Stats => "stats",
+        };
+        o.set("op", op_name);
+        o.set("id", self.id as i64);
+        match &self.op {
+            BuilderOp::Generate | BuilderOp::Append { .. } => {
+                if let BuilderOp::Append { session } = &self.op {
+                    o.set("session", *session as i64);
+                }
+                o.set("prompt", tokens_json(&self.prompt));
+                o.set("max_new", self.max_new);
+                if let Some(s) = self.stop {
+                    o.set("stop", s);
+                }
+                let default_keep = matches!(self.op, BuilderOp::Append { .. });
+                o.set("keep", self.keep.unwrap_or(default_keep));
+                if let Some(spec) = &self.spec {
+                    o.set("compression", spec_to_json(spec));
+                }
+            }
+            BuilderOp::Cancel { target } => {
+                o.set("target", *target as i64);
+            }
+            BuilderOp::Stats => {}
+        }
+        Json::Obj(o).to_string()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::RequestMetrics;
+    use crate::coordinator::{ErrorCode, RequestMetrics, StatsSnapshot};
+    use crate::util::prop::{forall, Config};
+    use crate::util::rng::Pcg32;
     use std::time::Duration;
 
-    fn dims() -> ModelDims {
-        ModelDims {
-            vocab: 512,
-            d_model: 256,
-            n_layers: 4,
-            n_q_heads: 8,
-            n_kv_heads: 8,
-            d_head: 32,
-            d_ff: 1024,
-            max_seq: 320,
-            quant_group: 16,
-            params: 0,
+    // ------------------------------------------------------------------
+    // Decoding
+    // ------------------------------------------------------------------
+
+    fn submit(line: &str) -> WireRequest {
+        match decode_line(line).unwrap() {
+            WireOp::Submit(w) => w,
+            other => panic!("expected submit, got {other:?}"),
         }
     }
 
     #[test]
-    fn decodes_all_modes() {
-        let d = dims();
-        let r = decode_request(r#"{"id":1,"prompt":[1,2],"mode":"full"}"#, &d).unwrap();
-        assert!(matches!(r.mode, CacheMode::Full));
-        let r = decode_request(r#"{"id":2,"prompt":[1],"mode":"oracle","k":16}"#, &d).unwrap();
-        assert!(matches!(r.mode, CacheMode::Oracle { k: 16 }));
-        let r = decode_request(
-            r#"{"id":3,"prompt":[1],"mode":"mikv","ratio":0.25,"lo":"int2","max_new":4,"stop":6}"#,
-            &d,
-        )
-        .unwrap();
-        assert_eq!(r.max_new, 4);
-        assert_eq!(r.stop, Some(6));
-        match r.mode {
-            CacheMode::Mikv { cfg, .. } => {
-                assert!((cfg.importance_ratio - 0.25).abs() < 1e-9);
-                assert_eq!(cfg.lo.precision, Precision::Int2);
-            }
-            _ => panic!("not mikv"),
-        }
-        let r = decode_request(r#"{"id":4,"prompt":[1],"mode":"h2o","ratio":0.5}"#, &d).unwrap();
-        match r.mode {
-            CacheMode::Mikv { cfg, .. } => {
-                assert_eq!(cfg.retention, crate::kvcache::RetentionMode::Evict)
-            }
-            _ => panic!(),
-        }
-        let r = decode_request(r#"{"id":5,"prompt":[1],"mode":"rtn","prec":"int4"}"#, &d).unwrap();
-        match r.mode {
-            CacheMode::Mikv { cfg, .. } => assert_eq!(cfg.lo.precision, Precision::Int4),
-            _ => panic!(),
-        }
+    fn decodes_v1_generate() {
+        let w = submit(
+            r#"{"v":1,"op":"generate","id":3,"prompt":[1,2],"max_new":4,"stop":6,
+                "keep":true,"compression":{"mode":"mikv","ratio":0.25,"lo":"int2",
+                "group":2,"policy":"local"}}"#,
+        );
+        assert_eq!(w.id, 3);
+        assert_eq!(w.prompt, vec![1, 2]);
+        assert_eq!(w.max_new, 4);
+        assert_eq!(w.stop, Some(6));
+        assert!(w.keep);
+        assert!(!w.legacy);
+        assert_eq!(w.session, None);
+        assert_eq!(w.spec.mode, "mikv");
+        assert_eq!(w.spec.ratio, Some(0.25));
+        assert_eq!(w.spec.lo.as_deref(), Some("int2"));
+        assert_eq!(w.spec.group, Some(2));
+        assert_eq!(w.spec.policy.as_deref(), Some("local"));
     }
 
     #[test]
-    fn rejects_bad_requests() {
-        let d = dims();
-        assert!(decode_request("not json", &d).is_err());
-        assert!(decode_request(r#"{"id":1,"prompt":[]}"#, &d).is_err());
-        assert!(decode_request(r#"{"id":1,"prompt":[1],"mode":"warp"}"#, &d).is_err());
-        assert!(decode_request(r#"{"prompt":[1]}"#, &d).is_err());
+    fn decodes_v1_append_cancel_stats() {
+        let w = submit(r#"{"v":1,"op":"append","id":2,"session":7,"prompt":[4,5]}"#);
+        assert_eq!(w.session, Some(7));
+        assert!(w.keep, "append keeps by default");
+        assert_eq!(w.spec, CompressionSpec::full());
+
+        assert_eq!(
+            decode_line(r#"{"v":1,"op":"cancel","id":3,"target":1}"#).unwrap(),
+            WireOp::Cancel { id: 3, target: 1 }
+        );
+        assert_eq!(
+            decode_line(r#"{"v":1,"op":"stats","id":4}"#).unwrap(),
+            WireOp::Stats { id: 4 }
+        );
     }
 
     #[test]
-    fn response_roundtrip() {
-        let r = Response {
-            id: 9,
+    fn legacy_lines_parse_as_one_shot_generate() {
+        let w = submit(
+            r#"{"id":1,"prompt":[1,2],"max_new":3,"mode":"mikv","ratio":0.3,"lo":"int4"}"#,
+        );
+        assert!(w.legacy);
+        assert!(!w.keep);
+        assert_eq!(w.session, None);
+        assert_eq!(w.spec.mode, "mikv");
+        assert_eq!(w.spec.ratio, Some(0.3));
+        assert_eq!(w.spec.lo.as_deref(), Some("int4"));
+
+        // `prec` is the legacy rtn spelling
+        let w = submit(r#"{"id":2,"prompt":[1],"mode":"rtn","prec":"int8"}"#);
+        assert_eq!(w.spec.lo.as_deref(), Some("int8"));
+        // defaults
+        let w = submit(r#"{"id":3,"prompt":[9]}"#);
+        assert_eq!(w.max_new, 8);
+        assert_eq!(w.spec, CompressionSpec::full());
+    }
+
+    #[test]
+    fn rejects_bad_requests_with_codes() {
+        let cases = [
+            ("not json", 0),
+            (r#"{"prompt":[1]}"#, 0),                                // no id
+            (r#"{"id":1,"prompt":[]}"#, 1),                          // empty prompt
+            (r#"{"id":2,"prompt":[1,"x"]}"#, 2),                     // non-integer token
+            (r#"{"id":3,"prompt":[1,1.5]}"#, 3),                     // fractional token
+            (r#"{"v":2,"op":"generate","id":4,"prompt":[1]}"#, 4),   // bad version
+            (r#"{"v":1,"op":"warp","id":5}"#, 5),                    // unknown op
+            (r#"{"v":1,"op":"append","id":6,"prompt":[1]}"#, 6),     // no session
+            (r#"{"v":1,"op":"cancel","id":7}"#, 7),                  // no target
+            (r#"{"v":1,"op":"generate","id":8,"prompt":[1],"compression":{"ratio":"x"}}"#, 8),
+            (r#"{"id":-3,"prompt":[1]}"#, 0),                        // negative id
+            (r#"{"v":1,"op":"append","id":10,"session":-1,"prompt":[1]}"#, 10),
+            (r#"{"v":1,"op":"cancel","id":11,"target":-2}"#, 11),
+            // v1 is strictly typed: wrong-typed top-level fields never
+            // silently fall back to defaults
+            (r#"{"v":1,"op":"generate","id":12,"prompt":[1],"keep":1}"#, 12),
+            (r#"{"v":1,"op":"generate","id":13,"prompt":[1],"max_new":2.5}"#, 13),
+            (r#"{"v":1,"op":"generate","id":14,"prompt":[1],"stop":6.5}"#, 14),
+        ];
+        for (line, want_id) in cases {
+            let e = decode_line(line).expect_err(line);
+            assert_eq!(e.err.code, ErrorCode::BadRequest, "{line}");
+            assert_eq!(e.id, want_id, "{line}");
+        }
+        // the old silent `unwrap_or(0)` coercion is gone for good
+        let e = decode_line(r#"{"id":9,"prompt":[null]}"#).unwrap_err();
+        assert!(e.err.message.contains("not an integer"), "{}", e.err);
+        assert!(e.legacy);
+        // v1 decode failures are marked non-legacy so errors event-encode
+        let e = decode_line(r#"{"v":1,"op":"warp","id":5}"#).unwrap_err();
+        assert!(!e.legacy);
+    }
+
+    // ------------------------------------------------------------------
+    // Round-trip property: encode ∘ decode == identity for all ops
+    // ------------------------------------------------------------------
+
+    fn arbitrary_spec(rng: &mut Pcg32) -> CompressionSpec {
+        let modes = ["full", "oracle", "mikv", "h2o", "rtn"];
+        let mut spec = CompressionSpec {
+            mode: modes[rng.gen_below(modes.len() as u32) as usize].to_string(),
+            ratio: None,
+            lo: None,
+            group: None,
+            policy: None,
+            k: None,
+        };
+        if rng.gen_bool(0.5) {
+            spec.ratio = Some((rng.gen_f32() as f64 * 100.0).round() / 100.0);
+        }
+        if rng.gen_bool(0.5) {
+            let los = ["int2", "int3", "int4", "int8"];
+            spec.lo = Some(los[rng.gen_below(4) as usize].to_string());
+        }
+        if rng.gen_bool(0.3) {
+            spec.group = Some(1 + rng.gen_below(16) as usize);
+        }
+        if rng.gen_bool(0.3) {
+            let pols = ["h2o", "local", "random"];
+            spec.policy = Some(pols[rng.gen_below(3) as usize].to_string());
+        }
+        if rng.gen_bool(0.3) {
+            spec.k = Some(rng.gen_below(64) as usize);
+        }
+        spec
+    }
+
+    fn arbitrary_prompt(rng: &mut Pcg32) -> Vec<i64> {
+        (0..1 + rng.gen_below(12) as usize)
+            .map(|_| rng.gen_below(1000) as i64)
+            .collect()
+    }
+
+    #[test]
+    fn prop_encode_decode_identity_for_all_ops() {
+        forall(Config::default().cases(300).name("proto-roundtrip"), |rng| {
+            let id = rng.gen_below(100_000) as u64;
+            let (builder, want) = match rng.gen_below(4) {
+                0 | 1 => {
+                    // generate / append share the submit shape
+                    let is_append = rng.gen_bool(0.5);
+                    let prompt = arbitrary_prompt(rng);
+                    let max_new = 1 + rng.gen_below(32) as usize;
+                    let stop = if rng.gen_bool(0.5) {
+                        Some(rng.gen_below(100) as i64)
+                    } else {
+                        None
+                    };
+                    let keep = rng.gen_bool(0.5);
+                    let spec = if rng.gen_bool(0.8) {
+                        Some(arbitrary_spec(rng))
+                    } else {
+                        None
+                    };
+                    let session = rng.gen_below(50) as u64;
+                    let mut b = if is_append {
+                        RequestBuilder::append(id, session)
+                    } else {
+                        RequestBuilder::generate(id)
+                    };
+                    b = b.prompt(&prompt).max_new(max_new).keep(keep);
+                    if let Some(s) = stop {
+                        b = b.stop(s);
+                    }
+                    if let Some(sp) = spec.clone() {
+                        b = b.compression(sp);
+                    }
+                    let want = WireOp::Submit(WireRequest {
+                        id,
+                        prompt,
+                        max_new,
+                        stop,
+                        spec: spec.unwrap_or_default(),
+                        session: if is_append { Some(session) } else { None },
+                        keep,
+                        legacy: false,
+                    });
+                    (b, want)
+                }
+                2 => {
+                    let target = rng.gen_below(1000) as u64;
+                    (
+                        RequestBuilder::cancel(id, target),
+                        WireOp::Cancel { id, target },
+                    )
+                }
+                _ => (RequestBuilder::stats(id), WireOp::Stats { id }),
+            };
+            let line = builder.build();
+            let got = decode_line(&line)
+                .map_err(|e| format!("decode({line}) failed: {}", e.err))?;
+            crate::prop_assert!(got == want, "line {line}: {got:?} != {want:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_legacy_builder_roundtrips() {
+        forall(Config::default().cases(200).name("legacy-roundtrip"), |rng| {
+            let id = rng.gen_below(10_000) as u64;
+            let prompt = arbitrary_prompt(rng);
+            let max_new = 1 + rng.gen_below(16) as usize;
+            let spec = arbitrary_spec(rng);
+            let line = RequestBuilder::generate(id)
+                .prompt(&prompt)
+                .max_new(max_new)
+                .compression(spec.clone())
+                .legacy()
+                .build();
+            let got = decode_line(&line)
+                .map_err(|e| format!("decode({line}) failed: {}", e.err))?;
+            let want = WireOp::Submit(WireRequest {
+                id,
+                prompt,
+                max_new,
+                stop: None,
+                spec,
+                session: None,
+                keep: false,
+                legacy: true,
+            });
+            crate::prop_assert!(got == want, "line {line}: {got:?} != {want:?}");
+            Ok(())
+        });
+    }
+
+    // ------------------------------------------------------------------
+    // Event encoding
+    // ------------------------------------------------------------------
+
+    fn response(id: u64) -> Response {
+        Response {
+            id,
             tokens: vec![3, 1, 4],
             metrics: RequestMetrics {
                 ttft: Duration::from_millis(5),
@@ -171,15 +868,107 @@ mod tests {
                 generated_tokens: 3,
                 cache_pct: 33.5,
                 host_bytes: 4096,
+                hi_slots: 8,
+                lo_slots: 40,
             },
+            session: Some(7),
+            cancelled: false,
             error: None,
-        };
-        let line = encode_response(&r);
+        }
+    }
+
+    #[test]
+    fn done_event_shape() {
+        let line = encode_event(&ServeEvent::Done(response(9)));
         let v = Json::parse(&line).unwrap();
+        assert_eq!(v.field_str("event").unwrap(), "done");
         assert_eq!(v.field_i64("id").unwrap(), 9);
         assert_eq!(v.field_arr("tokens").unwrap().len(), 3);
-        assert!(v.field("error").unwrap() == &Json::Null);
+        assert_eq!(v.field_i64("session").unwrap(), 7);
+        assert_eq!(v.field("cancelled").unwrap(), &Json::Bool(false));
         assert!((v.field_f64("cache_pct").unwrap() - 33.5).abs() < 1e-9);
         assert_eq!(v.field_i64("host_bytes").unwrap(), 4096);
+        assert_eq!(v.field_i64("hi_slots").unwrap(), 8);
+        assert_eq!(v.field_i64("lo_slots").unwrap(), 40);
+    }
+
+    #[test]
+    fn token_error_stats_cancel_event_shapes() {
+        let line = encode_event(&ServeEvent::Token {
+            id: 4,
+            index: 2,
+            token: 17,
+        });
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.field_str("event").unwrap(), "token");
+        assert_eq!(v.field_i64("i").unwrap(), 2);
+        assert_eq!(v.field_i64("t").unwrap(), 17);
+
+        let line = encode_event(&ServeEvent::Done(Response::error(
+            5,
+            WireError::new(ErrorCode::SessionNotFound, "no live session 9"),
+        )));
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.field_str("event").unwrap(), "error");
+        assert_eq!(v.field_str("code").unwrap(), "session_not_found");
+        assert!(v.field_str("message").unwrap().contains("9"));
+
+        let line = encode_event(&ServeEvent::Stats {
+            id: 6,
+            snapshot: StatsSnapshot::default(),
+        });
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.field_str("event").unwrap(), "stats");
+        assert_eq!(v.field_i64("pool_free_blocks").unwrap(), 0);
+
+        let line = encode_event(&ServeEvent::CancelResult {
+            id: 7,
+            target: 3,
+            found: true,
+        });
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.field_str("event").unwrap(), "cancelled");
+        assert_eq!(v.field_i64("target").unwrap(), 3);
+        assert_eq!(v.field("found").unwrap(), &Json::Bool(true));
+    }
+
+    /// The legacy single-line response shape is locked: exact field set,
+    /// no "event" key, free-text error string.
+    #[test]
+    fn legacy_response_shape_locked() {
+        let line = encode_legacy_response(&response(9));
+        let v = Json::parse(&line).unwrap();
+        let keys: Vec<&str> = v.as_obj().unwrap().iter().map(|(k, _)| k).collect();
+        assert_eq!(
+            keys,
+            vec![
+                "id",
+                "tokens",
+                "ttft_ms",
+                "latency_ms",
+                "prompt_tokens",
+                "generated_tokens",
+                "cache_pct",
+                "host_bytes",
+                "error"
+            ]
+        );
+        assert!(v.field("error").unwrap() == &Json::Null);
+        assert_eq!(v.field_i64("host_bytes").unwrap(), 4096);
+
+        let err_line = encode_legacy_response(&Response::error(
+            0,
+            WireError::bad_request("prompt[1] is not an integer token id"),
+        ));
+        let v = Json::parse(&err_line).unwrap();
+        assert!(v.field_str("error").unwrap().contains("not an integer"));
+
+        // tokens are invisible to legacy clients
+        assert!(encode_legacy_event(&ServeEvent::Token {
+            id: 1,
+            index: 0,
+            token: 2
+        })
+        .is_none());
     }
 }

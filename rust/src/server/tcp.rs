@@ -1,41 +1,45 @@
 //! Threaded TCP front-end over the coordinator.
 //!
 //! One listener thread accepts connections; each connection gets a reader
-//! thread (parse JSON line → forward to the coordinator with a reply
-//! channel) and a writer thread (serialize responses back). The engine
-//! itself stays on the coordinator thread (PJRT handles are not `Send`).
+//! thread (decode one [`proto::WireOp`] per line → forward to the
+//! coordinator's op channel) and a writer thread that is the connection's
+//! **event sink**: every in-flight request on the connection owns a
+//! [`LineSink`] that encodes its [`ServeEvent`]s (token/done/error/stats/
+//! cancelled) into JSON lines and pushes them onto the writer channel, so
+//! streamed events from concurrent requests interleave but each line stays
+//! atomic and per-request ordering is preserved. The engine itself stays
+//! on the coordinator thread (PJRT handles are not `Send`).
+//!
+//! Request ids are namespaced per connection before they reach the
+//! coordinator (`conn_id << 32 | id`) and rewritten back to the client's
+//! ids on the way out, so concurrent clients can't observe or cancel each
+//! other's requests. Session ids are coordinator-global by design: a kept
+//! session may be continued from a different connection.
 
-use crate::coordinator::{Request, Response};
-use crate::runtime::ModelDims;
-use crate::server::proto;
+use crate::coordinator::{CompressionSpec, EventSink, Op, Request, Response, ServeEvent};
+use crate::server::proto::{self, RequestBuilder, WireOp};
+use crate::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
-use std::sync::Arc;
 use std::time::Instant;
 
 static CONN_IDS: AtomicU64 = AtomicU64::new(1);
 
 /// Accept-and-serve loop. Blocks the calling thread; spawn it alongside the
 /// coordinator thread. Returns only on listener error.
-pub fn serve(
-    listener: TcpListener,
-    dims: ModelDims,
-    tx: Sender<Request>,
-) -> crate::Result<()> {
+pub fn serve(listener: TcpListener, tx: Sender<Op>) -> crate::Result<()> {
     crate::log_info!("serving on {}", listener.local_addr()?);
-    let dims = Arc::new(dims);
     for stream in listener.incoming() {
         let stream = stream?;
         let tx = tx.clone();
-        let dims = dims.clone();
         std::thread::spawn(move || {
             let peer = stream
                 .peer_addr()
                 .map(|a| a.to_string())
                 .unwrap_or_default();
-            if let Err(e) = handle_conn(stream, &dims, tx) {
+            if let Err(e) = handle_conn(stream, tx) {
                 crate::log_debug!("connection {peer} closed: {e}");
             }
         });
@@ -43,20 +47,59 @@ pub fn serve(
     Ok(())
 }
 
-fn handle_conn(
-    stream: TcpStream,
-    dims: &ModelDims,
-    tx: Sender<Request>,
-) -> crate::Result<()> {
+/// Per-request event sink: encodes events (v1 or legacy) into lines on the
+/// connection's writer channel, rewriting coordinator-namespaced ids back
+/// to the ids the client sent.
+struct LineSink {
+    tx: Sender<String>,
+    wire_id: u64,
+    legacy: bool,
+}
+
+impl EventSink for LineSink {
+    fn emit(&self, ev: ServeEvent) -> bool {
+        let ev = match ev {
+            ServeEvent::Token { index, token, .. } => ServeEvent::Token {
+                id: self.wire_id,
+                index,
+                token,
+            },
+            ServeEvent::Done(mut r) => {
+                r.id = self.wire_id;
+                ServeEvent::Done(r)
+            }
+            ServeEvent::Stats { snapshot, .. } => ServeEvent::Stats {
+                id: self.wire_id,
+                snapshot,
+            },
+            ServeEvent::CancelResult { target, found, .. } => ServeEvent::CancelResult {
+                id: self.wire_id,
+                target: target & 0xFFFF_FFFF,
+                found,
+            },
+        };
+        let line = if self.legacy {
+            match proto::encode_legacy_event(&ev) {
+                Some(line) => line,
+                // token/stats events have no legacy representation
+                None => return true,
+            }
+        } else {
+            proto::encode_event(&ev)
+        };
+        self.tx.send(line).is_ok()
+    }
+}
+
+fn handle_conn(stream: TcpStream, tx: Sender<Op>) -> crate::Result<()> {
     let conn_id = CONN_IDS.fetch_add(1, Ordering::Relaxed);
     let reader = BufReader::new(stream.try_clone()?);
-    let (reply_tx, reply_rx) = std::sync::mpsc::channel::<Response>();
+    let (line_tx, line_rx) = std::sync::mpsc::channel::<String>();
 
-    // Writer thread: deliver responses in completion order.
+    // Writer thread: deliver event lines in emission order.
     let mut write_half = stream;
     let writer = std::thread::spawn(move || {
-        for resp in reply_rx {
-            let line = proto::encode_response(&resp);
+        for line in line_rx {
             if write_half
                 .write_all(line.as_bytes())
                 .and_then(|_| write_half.write_all(b"\n"))
@@ -67,39 +110,64 @@ fn handle_conn(
         }
     });
 
+    // Namespace ids per connection so concurrent clients don't collide.
+    let ns = |id: u64| conn_id << 32 | (id & 0xFFFF_FFFF);
+    // Per-request event sink bound to this connection's writer.
+    let sink = |wire_id: u64, legacy: bool| -> crate::coordinator::Reply {
+        Box::new(LineSink {
+            tx: line_tx.clone(),
+            wire_id,
+            legacy,
+        })
+    };
+    let send = |op: Op| -> crate::Result<()> {
+        anyhow::ensure!(tx.send(op).is_ok(), "coordinator gone");
+        Ok(())
+    };
     for line in reader.lines() {
         let line = line?;
         if line.trim().is_empty() {
             continue;
         }
-        match proto::decode_request(&line, dims) {
-            Ok(w) => {
-                let req = Request {
-                    // namespace ids per connection so concurrent clients
-                    // don't collide in logs
-                    id: conn_id << 32 | (w.id & 0xFFFF_FFFF),
-                    prompt: w.prompt,
-                    max_new: w.max_new,
-                    stop: w.stop,
-                    mode: w.mode,
-                    submitted_at: Instant::now(),
-                    reply: reply_tx.clone(),
+        match proto::decode_line(&line) {
+            Ok(WireOp::Submit(w)) => send(Op::Submit(Request {
+                id: ns(w.id),
+                prompt: w.prompt,
+                max_new: w.max_new,
+                stop: w.stop,
+                spec: w.spec,
+                session: w.session,
+                keep: w.keep,
+                submitted_at: Instant::now(),
+                reply: sink(w.id, w.legacy),
+            }))?,
+            Ok(WireOp::Cancel { id, target }) => send(Op::Cancel {
+                id: ns(id),
+                target: ns(target),
+                reply: sink(id, false),
+            })?,
+            Ok(WireOp::Stats { id }) => send(Op::Stats {
+                id: ns(id),
+                reply: sink(id, false),
+            })?,
+            Err(de) => {
+                // Malformed line: answer directly in the right encoding.
+                let resp = Response::error(de.id, de.err);
+                let out = if de.legacy {
+                    proto::encode_legacy_response(&resp)
+                } else {
+                    proto::encode_event(&ServeEvent::Done(resp))
                 };
-                if tx.send(req).is_err() {
-                    anyhow::bail!("coordinator gone");
-                }
-            }
-            Err(e) => {
-                let _ = reply_tx.send(Response::error(0, format!("bad request: {e}")));
+                let _ = line_tx.send(out);
             }
         }
     }
-    drop(reply_tx);
+    drop(line_tx);
     let _ = writer.join();
     Ok(())
 }
 
-/// Blocking JSON-lines client (used by examples and the serve bench).
+/// Blocking JSON-lines client (used by examples, tests and the CI smoke).
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
@@ -116,35 +184,69 @@ impl Client {
         })
     }
 
-    /// Send a raw request line (the `id` field is managed by the caller).
+    /// Allocate the next request id.
+    pub fn next_id(&mut self) -> u64 {
+        let id = self.next_id;
+        self.next_id += 1;
+        id
+    }
+
+    /// Send a raw request line (callers should prefer [`Client::submit`]).
     pub fn send_line(&mut self, line: &str) -> crate::Result<()> {
         self.writer.write_all(line.as_bytes())?;
         self.writer.write_all(b"\n")?;
         Ok(())
     }
 
-    /// Fire a generation request; returns the request id used.
+    /// Send a built request.
+    pub fn submit(&mut self, req: &RequestBuilder) -> crate::Result<()> {
+        self.send_line(&req.build())
+    }
+
+    /// Fire a **legacy** one-shot generation request (single response
+    /// line); returns the request id used.
     pub fn request(
         &mut self,
         prompt: &[i64],
         max_new: usize,
-        mode_json: &str,
+        spec: &CompressionSpec,
     ) -> crate::Result<u64> {
-        let id = self.next_id;
-        self.next_id += 1;
-        let prompt_s: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
-        self.send_line(&format!(
-            r#"{{"id":{id},"prompt":[{}],"max_new":{max_new},{mode_json}}}"#,
-            prompt_s.join(",")
-        ))?;
+        let id = self.next_id();
+        let line = RequestBuilder::generate(id)
+            .prompt(prompt)
+            .max_new(max_new)
+            .compression(spec.clone())
+            .legacy()
+            .build();
+        self.send_line(&line)?;
         Ok(id)
     }
 
-    /// Block for the next response line.
-    pub fn recv(&mut self) -> crate::Result<crate::util::json::Json> {
+    /// Block for the next response/event line.
+    pub fn recv(&mut self) -> crate::Result<Json> {
         let mut line = String::new();
         let n = self.reader.read_line(&mut line)?;
         anyhow::ensure!(n > 0, "server closed connection");
-        Ok(crate::util::json::Json::parse(line.trim())?)
+        Ok(Json::parse(line.trim())?)
+    }
+
+    /// Read one v1 turn to completion: collects this request's streamed
+    /// `token` events and returns them with the terminal `done`/`error`
+    /// event. Lines belonging to other in-flight ids are skipped, so keep
+    /// one outstanding streaming turn per client when using this helper.
+    pub fn read_turn(&mut self, id: u64) -> crate::Result<(Vec<i64>, Json)> {
+        let mut tokens = Vec::new();
+        loop {
+            let v = self.recv()?;
+            if v.field("id").ok().and_then(Json::as_i64) != Some(id as i64) {
+                continue;
+            }
+            let ev = v.field_str("event").unwrap_or("").to_string();
+            match ev.as_str() {
+                "token" => tokens.push(v.field_i64("t")?),
+                "done" | "error" | "stats" | "cancelled" => return Ok((tokens, v)),
+                _ => anyhow::bail!("unexpected line for id {id}: {v}"),
+            }
+        }
     }
 }

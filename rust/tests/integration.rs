@@ -4,7 +4,9 @@
 //! bit-close through the rust-loaded executables), engine-level semantic
 //! invariants (MiKV@100% == full cache), and the coordinator loop.
 
-use mikv::coordinator::{Coordinator, CoordinatorConfig, Request, Response};
+use mikv::coordinator::{
+    CompressionSpec, Coordinator, CoordinatorConfig, Op, Request, Response, ServeEvent,
+};
 use mikv::eval::corpus;
 use mikv::model::{CacheMode, Engine, Session};
 use mikv::quant::Precision;
@@ -208,36 +210,39 @@ fn batched_decode_matches_single() {
     assert_eq!(s1.generated(), &singles[1][..]);
 }
 
-/// The coordinator serves concurrent mixed-mode requests to completion.
+/// The coordinator serves concurrent mixed-mode requests to completion,
+/// with compression specs resolved at admission.
 #[test]
 fn coordinator_serves_mixed_requests() {
     require_artifacts!();
     let engine = Engine::load(artifacts_dir(), "cfg-tiny").unwrap();
     let dims = engine.dims().clone();
-    let (tx, rx) = mpsc::channel::<Request>();
-    let (reply_tx, reply_rx) = mpsc::channel::<Response>();
+    let (tx, rx) = mpsc::channel::<Op>();
+    let (reply_tx, reply_rx) = mpsc::channel::<ServeEvent>();
 
-    let modes = [
-        CacheMode::Full,
-        CacheMode::mikv(&dims, 0.3, Precision::Int2),
-        CacheMode::h2o(&dims, 0.3),
-        CacheMode::Oracle { k: 8 },
-        CacheMode::rtn(&dims, Precision::Int8),
+    let specs = [
+        CompressionSpec::full(),
+        CompressionSpec::mikv(0.3, "int2"),
+        CompressionSpec::h2o(0.3),
+        CompressionSpec::oracle(8),
+        CompressionSpec::rtn("int8"),
     ];
     let mut rng = Pcg32::new(3);
-    for (i, mode) in modes.iter().enumerate() {
+    for (i, spec) in specs.iter().enumerate() {
         let prompt: Vec<i64> = (0..12)
             .map(|_| 1 + rng.gen_below(dims.vocab as u32 - 1) as i64)
             .collect();
-        tx.send(Request {
+        tx.send(Op::Submit(Request {
             id: i as u64,
             prompt,
             max_new: 4,
             stop: None,
-            mode: mode.clone(),
+            spec: spec.clone(),
+            session: None,
+            keep: false,
             submitted_at: Instant::now(),
-            reply: reply_tx.clone(),
-        })
+            reply: Box::new(reply_tx.clone()),
+        }))
         .unwrap();
     }
     drop(tx);
@@ -245,14 +250,21 @@ fn coordinator_serves_mixed_requests() {
 
     Coordinator::new(engine, CoordinatorConfig::default()).run(rx);
 
-    let mut responses: Vec<Response> = reply_rx.iter().collect();
+    let mut responses: Vec<Response> = reply_rx
+        .iter()
+        .filter_map(|e| match e {
+            ServeEvent::Done(r) => Some(r),
+            _ => None,
+        })
+        .collect();
     responses.sort_by_key(|r| r.id);
-    assert_eq!(responses.len(), modes.len());
+    assert_eq!(responses.len(), specs.len());
     for r in &responses {
         assert!(r.error.is_none(), "req {} failed: {:?}", r.id, r.error);
         assert_eq!(r.tokens.len(), 4);
         assert!(r.metrics.ttft <= r.metrics.latency);
         assert!(r.metrics.cache_pct > 0.0);
+        assert!(r.metrics.hi_slots + r.metrics.lo_slots > 0);
     }
 }
 
@@ -324,36 +336,33 @@ fn quant_graph_matches_native() {
     }
 }
 
-/// Full TCP round trip: server + coordinator + client over a real socket.
+/// Full TCP round trip (legacy one-shot shape): server + coordinator +
+/// client over a real socket.
 #[test]
 fn tcp_server_round_trip() {
     require_artifacts!();
     let engine = Engine::load(artifacts_dir(), "cfg-tiny").unwrap();
-    let dims = engine.dims().clone();
-    let (tx, rx) = mpsc::channel::<Request>();
+    let (tx, rx) = mpsc::channel::<Op>();
     let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
     let addr = listener.local_addr().unwrap().to_string();
-    {
-        let dims = dims.clone();
-        std::thread::spawn(move || {
-            let _ = mikv::server::serve(listener, dims, tx);
-        });
-    }
+    std::thread::spawn(move || {
+        let _ = mikv::server::serve(listener, tx);
+    });
 
     // client on a worker thread; coordinator (engine, not Send) on ours
     let client = std::thread::spawn(move || -> anyhow::Result<Vec<(u64, usize, f64)>> {
         let mut c = mikv::server::Client::connect(&addr)?;
         let ids = [
-            c.request(&[1, 5, 9, 13], 3, r#""mode":"full""#)?,
-            c.request(&[2, 6, 10], 3, r#""mode":"mikv","ratio":0.3,"lo":"int4""#)?,
-            c.request(&[3, 7], 2, r#""mode":"h2o","ratio":0.5"#)?,
+            c.request(&[1, 5, 9, 13], 3, &CompressionSpec::full())?,
+            c.request(&[2, 6, 10], 3, &CompressionSpec::mikv(0.3, "int4"))?,
+            c.request(&[3, 7], 2, &CompressionSpec::h2o(0.5))?,
         ];
         let mut out = Vec::new();
         for _ in &ids {
             let v = c.recv()?;
             anyhow::ensure!(v.field("error")? == &mikv::util::json::Json::Null);
             out.push((
-                v.field_i64("id")? as u64 & 0xFFFF_FFFF,
+                v.field_i64("id")? as u64,
                 v.field_arr("tokens")?.len(),
                 v.field_f64("cache_pct")?,
             ));

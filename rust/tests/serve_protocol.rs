@@ -1,0 +1,290 @@
+//! Serving API v1 integration tests: the full stack — coordinator, session
+//! registry, TCP server, wire protocol — driven over real sockets with the
+//! artifact-free deterministic [`StubEngine`]. These run everywhere (no
+//! `make artifacts` needed) and lock the acceptance behaviour:
+//!
+//! * a 2-turn `generate` → `append` conversation reuses the same cache
+//!   (hi/lo tier occupancy carries over, host bytes reported per turn);
+//! * streamed `token` events arrive before the terminal `done` and match
+//!   its token list;
+//! * `cancel` interrupts in-flight generation; `stats` answers over the
+//!   wire; structured error codes and the legacy one-shot shape hold.
+
+use mikv::coordinator::{CompressionSpec, Coordinator, CoordinatorConfig, Op};
+use mikv::model::StubEngine;
+use mikv::server::{serve, Client, RequestBuilder};
+use mikv::util::json::Json;
+use std::sync::mpsc;
+use std::time::Duration;
+
+/// Boot engine + coordinator + TCP server, run `client` against it on a
+/// worker thread, and drain the stack when the client finishes.
+fn run_stack(
+    engine: StubEngine,
+    cfg: CoordinatorConfig,
+    client: impl FnOnce(String) -> anyhow::Result<()> + Send + 'static,
+) {
+    let (tx, rx) = mpsc::channel::<Op>();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    std::thread::spawn(move || {
+        let _ = serve(listener, tx);
+    });
+    let handle = std::thread::spawn(move || client(addr));
+    Coordinator::new(engine, cfg).run_until(rx, || handle.is_finished());
+    handle.join().unwrap().unwrap();
+}
+
+/// The acceptance path: a kept streamed `generate` then an `append` over
+/// the same socket reuse ONE `CacheManager` — occupancy carries over and
+/// grows turn over turn, with per-turn host bytes on each `done`.
+#[test]
+fn two_turn_conversation_reuses_cache_over_tcp() {
+    let engine = StubEngine::new(StubEngine::test_dims(64));
+    run_stack(engine, CoordinatorConfig::default(), |addr| {
+        let mut c = Client::connect(&addr)?;
+
+        // --- Turn 1: streamed generate, keep the session ---
+        let id1 = c.next_id();
+        c.submit(
+            &RequestBuilder::generate(id1)
+                .prompt(&[1, 2, 3])
+                .max_new(4)
+                .keep(true)
+                .compression(CompressionSpec::mikv(0.5, "int4")),
+        )?;
+        let (streamed, done) = c.read_turn(id1)?;
+        anyhow::ensure!(done.field_str("event")? == "done", "turn 1: {done}");
+        let final_tokens: Vec<i64> = done
+            .field_arr("tokens")?
+            .iter()
+            .filter_map(Json::as_i64)
+            .collect();
+        anyhow::ensure!(
+            streamed == final_tokens,
+            "token events {streamed:?} != done tokens {final_tokens:?}"
+        );
+        anyhow::ensure!(streamed.len() == 4, "max_new honoured");
+        let sid = done.field_i64("session")?;
+        let occ1 = done.field_i64("hi_slots")? + done.field_i64("lo_slots")?;
+        // prompt 3 + 3 decoded KV appends = 6 slots × 4 planes
+        anyhow::ensure!(occ1 == 24, "turn 1 occupancy {occ1}");
+        let bytes1 = done.field_i64("host_bytes")?;
+        anyhow::ensure!(bytes1 > 0, "turn 1 must report host bytes");
+
+        // --- Turn 2: append continues the SAME cache ---
+        let id2 = c.next_id();
+        c.submit(
+            &RequestBuilder::append(id2, sid as u64)
+                .prompt(&[4, 5])
+                .max_new(3),
+        )?;
+        let (streamed2, done2) = c.read_turn(id2)?;
+        anyhow::ensure!(done2.field_str("event")? == "done", "turn 2: {done2}");
+        anyhow::ensure!(
+            done2.field_i64("session")? == sid,
+            "session id is stable across turns"
+        );
+        anyhow::ensure!(
+            done2.field_i64("prompt_tokens")? == 2,
+            "per-turn prompt size"
+        );
+        anyhow::ensure!(streamed2.len() == 3);
+        let occ2 = done2.field_i64("hi_slots")? + done2.field_i64("lo_slots")?;
+        // turn 1's 6 slots + fed last token + 2 appended prompt tokens
+        // + 2 decoded KV appends = 11 slots × 4 planes: the hi/lo tiers
+        // carried over — nothing was re-prefilled.
+        anyhow::ensure!(occ2 == 44, "occupancy must carry over: {occ2}");
+        anyhow::ensure!(
+            done2.field_i64("host_bytes")? >= bytes1,
+            "turn 2 reports its own (grown) footprint"
+        );
+
+        // --- Stats over the wire: the session is parked again ---
+        let id3 = c.next_id();
+        c.submit(&RequestBuilder::stats(id3))?;
+        let (_, stats) = c.read_turn(id3)?;
+        anyhow::ensure!(stats.field_str("event")? == "stats", "{stats}");
+        anyhow::ensure!(stats.field_i64("completed")? == 2);
+        anyhow::ensure!(stats.field_i64("parked_sessions")? == 1);
+        anyhow::ensure!(stats.field_i64("parked_bytes")? > 0);
+        Ok(())
+    });
+}
+
+/// `cancel` interrupts an in-flight streamed generation: the target's
+/// terminal `done` carries `cancelled: true` with the partial tokens, and
+/// the cancel op is answered with `found: true`.
+#[test]
+fn cancel_interrupts_inflight_generation_over_tcp() {
+    let mut engine = StubEngine::new(StubEngine::test_dims(512));
+    // Throttle decode so the cancel deterministically lands mid-flight
+    // (the budget below would otherwise take ~2.5 s to exhaust).
+    engine.decode_delay = Duration::from_millis(5);
+    run_stack(engine, CoordinatorConfig::default(), |addr| {
+        let mut c = Client::connect(&addr)?;
+        let id1 = c.next_id();
+        c.submit(
+            &RequestBuilder::generate(id1)
+                .prompt(&[1, 2, 3])
+                .max_new(100_000)
+                .compression(CompressionSpec::mikv(0.25, "int4")),
+        )?;
+        // The first streamed token proves the turn is in flight.
+        let first = c.recv()?;
+        anyhow::ensure!(
+            first.field_str("event")? == "token",
+            "expected a token event first, got {first}"
+        );
+
+        let id2 = c.next_id();
+        c.submit(&RequestBuilder::cancel(id2, id1))?;
+        // Terminal events can interleave with remaining token events.
+        let mut done: Option<Json> = None;
+        let mut cres: Option<Json> = None;
+        while done.is_none() || cres.is_none() {
+            let v = c.recv()?;
+            let vid = v.field("id").ok().and_then(Json::as_i64);
+            let ev = v.field_str("event").unwrap_or("").to_string();
+            match (vid, ev.as_str()) {
+                (Some(i), "done") if i == id1 as i64 => done = Some(v),
+                (Some(i), "token") if i == id1 as i64 => {}
+                (Some(i), "cancelled") if i == id2 as i64 => cres = Some(v),
+                _ => anyhow::bail!("unexpected line: {v}"),
+            }
+        }
+        let done = done.expect("set by loop");
+        let cres = cres.expect("set by loop");
+        anyhow::ensure!(
+            cres.field("found")? == &Json::Bool(true),
+            "cancel must find the in-flight turn: {cres}"
+        );
+        anyhow::ensure!(
+            done.field("cancelled")? == &Json::Bool(true),
+            "terminal done must be marked cancelled: {done}"
+        );
+        let partial = done.field_arr("tokens")?.len();
+        anyhow::ensure!(
+            partial >= 1 && partial < 100_000,
+            "partial tokens delivered, got {partial}"
+        );
+        Ok(())
+    });
+}
+
+/// The legacy v-less one-shot wire shape is locked: single response line,
+/// exact field set, no event framing — and malformed input (including the
+/// once silently-coerced non-integer prompt token) answers in the same
+/// legacy shape.
+#[test]
+fn legacy_one_shot_wire_shape_is_locked() {
+    let engine = StubEngine::new(StubEngine::test_dims(32));
+    run_stack(engine, CoordinatorConfig::default(), |addr| {
+        let mut c = Client::connect(&addr)?;
+        let id = c.request(&[1, 2, 3], 3, &CompressionSpec::full())?;
+        let v = c.recv()?;
+        let keys: Vec<&str> = v
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("not an object: {v}"))?
+            .iter()
+            .map(|(k, _)| k)
+            .collect();
+        anyhow::ensure!(
+            keys == vec![
+                "id",
+                "tokens",
+                "ttft_ms",
+                "latency_ms",
+                "prompt_tokens",
+                "generated_tokens",
+                "cache_pct",
+                "host_bytes",
+                "error"
+            ],
+            "legacy shape drifted: {keys:?}"
+        );
+        anyhow::ensure!(v.field_i64("id")? == id as i64);
+        anyhow::ensure!(v.field("error")? == &Json::Null);
+        anyhow::ensure!(v.field_arr("tokens")?.len() == 3);
+        anyhow::ensure!(v.field_f64("cache_pct")? > 0.0);
+
+        // Garbage stays answered in the legacy shape, not as an event.
+        c.send_line("{not json")?;
+        let v = c.recv()?;
+        anyhow::ensure!(v.field("event").is_err(), "must not be an event: {v}");
+        anyhow::ensure!(v.field("error")? != &Json::Null);
+
+        // The old `unwrap_or(0)` prompt coercion is rejected outright.
+        c.send_line(r#"{"id":5,"prompt":[1,"x"],"max_new":2}"#)?;
+        let v = c.recv()?;
+        anyhow::ensure!(
+            v.field_str("error")?.contains("not an integer"),
+            "got {v}"
+        );
+        anyhow::ensure!(v.field_i64("id")? == 5);
+        Ok(())
+    });
+}
+
+/// Structured v1 error codes: bad specs, unknown sessions, parse failures
+/// and capacity overflows each map onto their stable code — and a
+/// rejected `append` leaves the parked session intact.
+#[test]
+fn v1_errors_carry_structured_codes() {
+    let engine = StubEngine::new(StubEngine::test_dims(16));
+    run_stack(engine, CoordinatorConfig::default(), |addr| {
+        let mut c = Client::connect(&addr)?;
+
+        // Unknown mode → bad_request at admission (parse stays lenient).
+        let id = c.next_id();
+        let warp = CompressionSpec {
+            mode: "warp".to_string(),
+            ..CompressionSpec::full()
+        };
+        c.submit(&RequestBuilder::generate(id).prompt(&[1]).compression(warp))?;
+        let (toks, term) = c.read_turn(id)?;
+        anyhow::ensure!(toks.is_empty());
+        anyhow::ensure!(term.field_str("event")? == "error", "{term}");
+        anyhow::ensure!(term.field_str("code")? == "bad_request");
+
+        // Append to a session that was never kept.
+        let id = c.next_id();
+        c.submit(&RequestBuilder::append(id, 9999).prompt(&[1]))?;
+        let (_, term) = c.read_turn(id)?;
+        anyhow::ensure!(term.field_str("code")? == "session_not_found", "{term}");
+
+        // v1 parse failures event-encode with bad_request.
+        c.send_line(r#"{"v":1,"op":"generate","id":77,"prompt":[1,2.5]}"#)?;
+        let v = c.recv()?;
+        anyhow::ensure!(v.field_str("event")? == "error", "{v}");
+        anyhow::ensure!(v.field_str("code")? == "bad_request");
+        anyhow::ensure!(v.field_i64("id")? == 77);
+        c.send_line(r#"{"v":1,"op":"warp","id":78}"#)?;
+        let v = c.recv()?;
+        anyhow::ensure!(v.field_str("code")? == "bad_request", "{v}");
+
+        // Capacity: a kept 10-token session (max_seq 16) cannot absorb a
+        // 10-token append → cache_full, but the session survives...
+        let id = c.next_id();
+        c.submit(
+            &RequestBuilder::generate(id)
+                .prompt(&[1; 10])
+                .max_new(1)
+                .keep(true),
+        )?;
+        let (_, done) = c.read_turn(id)?;
+        anyhow::ensure!(done.field_str("event")? == "done", "{done}");
+        let sid = done.field_i64("session")? as u64;
+        let id = c.next_id();
+        c.submit(&RequestBuilder::append(id, sid).prompt(&[1; 10]).max_new(1))?;
+        let (_, term) = c.read_turn(id)?;
+        anyhow::ensure!(term.field_str("code")? == "cache_full", "{term}");
+        // ...and a smaller append still succeeds against the same session.
+        let id = c.next_id();
+        c.submit(&RequestBuilder::append(id, sid).prompt(&[2, 3]).max_new(1))?;
+        let (_, done) = c.read_turn(id)?;
+        anyhow::ensure!(done.field_str("event")? == "done", "{done}");
+        anyhow::ensure!(done.field_i64("session")? == sid as i64);
+        Ok(())
+    });
+}
