@@ -1,0 +1,176 @@
+//! Serving throughput across worker counts — the first point on the
+//! serving perf trajectory (`BENCH_serve.json`).
+//!
+//! Drives the **full TCP stack** (scheduler → N workers → wire protocol)
+//! on the deterministic `StubEngine` with an artificial per-session decode
+//! cost (`--delay-us`, emulating an engine whose per-token work is
+//! serialized on its own accelerator), and measures end-to-end tokens/s,
+//! client-side TTFT p50/p99 and per-worker utilization at each worker
+//! count in `--workers-list` (default 1,2,4).
+//!
+//! Because the decode cost is per *session-step on one engine*, a single
+//! worker serializes every active session's work while N workers overlap N
+//! engines — the measured scaling is the architectural win of sharding,
+//! not host-CPU parallelism, so it reproduces on small CI machines.
+//!
+//! ```sh
+//! cargo bench --bench serve_throughput                       # full run
+//! cargo bench --bench serve_throughput -- --smoke --workers-list 1,2
+//! ```
+//!
+//! Outputs: `bench_out/serve_throughput.{md,json}` (table) and
+//! `BENCH_serve.json` at the repo root (machine-readable trajectory
+//! point, including the workers-N vs workers-1 speedup).
+
+use mikv::bench::{Cell, Table};
+use mikv::coordinator::CoordinatorConfig;
+use mikv::model::StubEngine;
+use mikv::server::loadgen::{run_load, with_stub_stack, LoadConfig, LoadReport};
+use mikv::util::cli::Args;
+use mikv::util::json::{Json, JsonObj};
+use std::time::Duration;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let smoke = args.flag("smoke");
+    let default_workers: &[usize] = if smoke { &[1, 2] } else { &[1, 2, 4] };
+    let workers_list: Vec<usize> = args.get_list("workers-list", default_workers)?;
+    anyhow::ensure!(!workers_list.is_empty(), "--workers-list is empty");
+    let iters = args.get_nonzero("iters", if smoke { 1 } else { 3 })?;
+    let delay = Duration::from_micros(args.get("delay-us", if smoke { 200u64 } else { 500 })?);
+    let load = LoadConfig {
+        conns: args.get_nonzero("conns", if smoke { 4 } else { 12 })?,
+        turns: args.get_nonzero("turns", if smoke { 2 } else { 3 })?,
+        max_new: args.get_nonzero("max-new", if smoke { 8 } else { 24 })?,
+        prompt_len: args.get_nonzero("prompt-len", 6)?,
+        seed: args.get("seed", 0x5EEDu64)?,
+        ..LoadConfig::default()
+    };
+
+    let mut table = Table::new(
+        "serve_throughput",
+        "End-to-end serving throughput on StubEngine (full TCP stack)",
+        &[
+            "workers", "tok/s", "tokens", "wall_ms", "ttft_p50_ms", "ttft_p99_ms",
+            "lat_p50_ms", "lat_p99_ms", "util",
+        ],
+    );
+    table.note(format!(
+        "conns={} turns={} max_new={} delay_us={} iters={} seed={:#x} (best of iters)",
+        load.conns,
+        load.turns,
+        load.max_new,
+        delay.as_micros(),
+        iters,
+        load.seed
+    ));
+
+    let mut results: Vec<(usize, LoadReport)> = Vec::new();
+    for &workers in &workers_list {
+        let mut best: Option<LoadReport> = None;
+        for _ in 0..iters {
+            let report = run_one(workers, &load, delay)?;
+            let better = best
+                .as_ref()
+                .map(|b| report.tokens_per_sec > b.tokens_per_sec)
+                .unwrap_or(true);
+            if better {
+                best = Some(report);
+            }
+        }
+        let report = best.expect("iters >= 1");
+        let util = report
+            .per_worker
+            .iter()
+            .map(|w| format!("{}:{:.0}%", w.worker, w.share * 100.0))
+            .collect::<Vec<_>>()
+            .join(" ");
+        table.row(vec![
+            workers.into(),
+            Cell::F(report.tokens_per_sec, 0),
+            report.tokens.into(),
+            Cell::F(report.wall.as_secs_f64() * 1e3, 1),
+            Cell::F(report.ttft_p50.as_secs_f64() * 1e3, 2),
+            Cell::F(report.ttft_p99.as_secs_f64() * 1e3, 2),
+            Cell::F(report.latency_p50.as_secs_f64() * 1e3, 2),
+            Cell::F(report.latency_p99.as_secs_f64() * 1e3, 2),
+            util.into(),
+        ]);
+        results.push((workers, report));
+    }
+    table.emit()?;
+
+    // Machine-readable trajectory point at the repo root.
+    let base = results
+        .iter()
+        .find(|(w, _)| *w == 1)
+        .map(|(_, r)| r.tokens_per_sec);
+    let peak = results
+        .iter()
+        .max_by_key(|(w, _)| *w)
+        .map(|(w, r)| (*w, r.tokens_per_sec));
+    let mut o = JsonObj::new();
+    o.set("bench", "serve_throughput");
+    o.set("engine", "stub");
+    o.set("decode_delay_us", delay.as_micros() as i64);
+    o.set("conns", load.conns);
+    o.set("turns", load.turns);
+    o.set("max_new", load.max_new);
+    o.set("seed", load.seed as i64);
+    o.set("smoke", smoke);
+    let rows: Vec<Json> = results
+        .iter()
+        .map(|(workers, r)| {
+            let mut ro = JsonObj::new();
+            ro.set("workers", *workers);
+            ro.set("tokens", r.tokens);
+            ro.set("tokens_per_sec", r.tokens_per_sec);
+            ro.set("wall_ms", r.wall.as_secs_f64() * 1e3);
+            ro.set("ttft_p50_ms", r.ttft_p50.as_secs_f64() * 1e3);
+            ro.set("ttft_p99_ms", r.ttft_p99.as_secs_f64() * 1e3);
+            ro.set("latency_p50_ms", r.latency_p50.as_secs_f64() * 1e3);
+            ro.set("latency_p99_ms", r.latency_p99.as_secs_f64() * 1e3);
+            ro.set(
+                "per_worker_utilization",
+                Json::Arr(r.per_worker.iter().map(|w| Json::Num(w.share)).collect()),
+            );
+            Json::Obj(ro)
+        })
+        .collect();
+    o.set("results", Json::Arr(rows));
+    if let (Some(base), Some((peak_w, peak_tps))) = (base, peak) {
+        let speedup = peak_tps / base.max(1e-9);
+        o.set("speedup_peak_workers_vs_1", speedup);
+        println!(
+            "speedup: {peak_w} workers vs 1 worker = {speedup:.2}x \
+             ({peak_tps:.0} vs {base:.0} tok/s)"
+        );
+        if peak_w >= 2 && speedup < 2.0 && !smoke {
+            eprintln!("WARN: expected >= 2x scaling at {peak_w} workers, got {speedup:.2}x");
+        }
+    }
+    std::fs::write("BENCH_serve.json", Json::Obj(o).to_string_pretty())?;
+    println!("wrote BENCH_serve.json");
+    Ok(())
+}
+
+/// Boot a sharded stub runtime, run the load workload against it over real
+/// sockets, and tear it down.
+fn run_one(workers: usize, load: &LoadConfig, delay: Duration) -> anyhow::Result<LoadReport> {
+    let mut base = StubEngine::new(StubEngine::test_dims(256));
+    base.decode_delay = delay;
+    let load = load.clone();
+    let report = with_stub_stack(
+        workers,
+        CoordinatorConfig::default(),
+        base,
+        move |addr| run_load(&addr, &load),
+    )??;
+    anyhow::ensure!(
+        report.turns_err == 0,
+        "{} of {} turns failed",
+        report.turns_err,
+        report.turns_ok + report.turns_err
+    );
+    Ok(report)
+}

@@ -1,6 +1,7 @@
-//! Streaming Serving-API-v1 client and end-to-end smoke check.
+//! Streaming Serving-API-v1 client, end-to-end smoke check, and load
+//! generator.
 //!
-//! Two modes:
+//! Modes:
 //!
 //! * `--stub` — self-hosted smoke (CI runs this): boots the full serving
 //!   stack on a deterministic [`StubEngine`] (no artifacts needed) and
@@ -8,23 +9,34 @@
 //!   with `keep`, a 2-turn `append` continuation proving the cache carries
 //!   over, `stats`, `cancel`, and a legacy one-shot regression check. Any
 //!   violated invariant exits non-zero.
+//! * `--load` — load generator: `--conns M` concurrent connections ×
+//!   `--turns K` turns each (`--max-new` tokens per turn). Self-hosts a
+//!   sharded stub runtime with `--workers N` engine workers (per-session
+//!   decode cost `--delay-us`), or targets a running server via `--addr`.
+//!   Prints tokens/s, TTFT/latency percentiles and per-worker utilization.
 //! * default — connects to a running `mikv serve` at `--addr` and runs the
-//!   same workflow against the real engine.
+//!   same smoke workflow against the real engine.
 //!
 //! ```sh
 //! cargo run --release --example client -- --stub
+//! cargo run --release --example client -- --load --workers 4 --conns 12
 //! mikv serve --port 7777 &
 //! cargo run --release --example client -- --addr 127.0.0.1:7777
 //! ```
 
 use mikv::coordinator::{CompressionSpec, Coordinator, CoordinatorConfig, Op};
 use mikv::model::StubEngine;
+use mikv::server::loadgen::{run_load, with_stub_stack, LoadConfig};
 use mikv::server::{Client, RequestBuilder};
 use mikv::util::cli::Args;
 use mikv::util::json::Json;
+use std::time::Duration;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
+    if args.flag("load") {
+        return load_mode(&args);
+    }
     if !args.flag("stub") {
         let addr = args.get_str("addr", "127.0.0.1:7777");
         return drive(&addr);
@@ -44,6 +56,60 @@ fn main() -> anyhow::Result<()> {
         .run_until(rx, || driver.is_finished());
     driver.join().expect("driver panicked")?;
     println!("serving API v1 smoke: OK");
+    Ok(())
+}
+
+/// Load-generator mode: M concurrent connections × K turns against a
+/// sharded stub runtime (or `--addr` for an external server).
+fn load_mode(args: &Args) -> anyhow::Result<()> {
+    let cfg = LoadConfig {
+        conns: args.get_nonzero("conns", 8)?,
+        turns: args.get_nonzero("turns", 2)?,
+        max_new: args.get_nonzero("max-new", 16)?,
+        prompt_len: args.get_nonzero("prompt-len", 6)?,
+        seed: args.get("seed", 0x10ADu64)?,
+        ..LoadConfig::default()
+    };
+    let report = if let Ok(addr) = args.require_str("addr") {
+        run_load(&addr, &cfg)?
+    } else {
+        // Self-hosted sharded runtime on the stub engine.
+        let workers = args.get_nonzero("workers", 2)?;
+        let mut base = StubEngine::new(StubEngine::test_dims(256));
+        base.decode_delay = Duration::from_micros(args.get("delay-us", 300u64)?);
+        let load_cfg = cfg.clone();
+        with_stub_stack(workers, CoordinatorConfig::default(), base, move |addr| {
+            run_load(&addr, &load_cfg)
+        })??
+    };
+    println!(
+        "load: {} conns x {} turns, {} tokens in {:.1}ms -> {:.0} tok/s \
+         ({} ok, {} err)",
+        cfg.conns,
+        cfg.turns,
+        report.tokens,
+        report.wall.as_secs_f64() * 1e3,
+        report.tokens_per_sec,
+        report.turns_ok,
+        report.turns_err,
+    );
+    println!(
+        "ttft p50 {:.2}ms p99 {:.2}ms | latency p50 {:.2}ms p99 {:.2}ms",
+        report.ttft_p50.as_secs_f64() * 1e3,
+        report.ttft_p99.as_secs_f64() * 1e3,
+        report.latency_p50.as_secs_f64() * 1e3,
+        report.latency_p99.as_secs_f64() * 1e3,
+    );
+    for w in &report.per_worker {
+        println!(
+            "worker {}: {} turns, {} tokens ({:.0}% of load)",
+            w.worker,
+            w.completed,
+            w.generated_tokens,
+            w.share * 100.0
+        );
+    }
+    anyhow::ensure!(report.turns_err == 0, "{} turns failed", report.turns_err);
     Ok(())
 }
 

@@ -20,8 +20,35 @@ pub struct Stats {
     pub std_dev: Duration,
 }
 
+/// Percentile of an ascending-sorted sample set with linear interpolation
+/// between the two nearest ranks (numpy's default `linear` method).
+///
+/// The previous implementation rounded `(n-1)·p` to the nearest index,
+/// which made p99 of small sample sets (n ≤ ~50) silently equal the max
+/// and biased p50 on even n toward the upper of the two middle samples.
+/// Interpolating keeps small-n percentiles distinct from min/max and
+/// unbiased: p50 of an even-sized set is the midpoint of the middle pair.
+pub fn percentile(sorted: &[Duration], p: f64) -> Duration {
+    if sorted.is_empty() {
+        return Duration::ZERO;
+    }
+    let p = p.clamp(0.0, 1.0);
+    let idx = (sorted.len() - 1) as f64 * p;
+    let lo = idx.floor() as usize;
+    let hi = idx.ceil() as usize;
+    if lo == hi {
+        return sorted[lo];
+    }
+    let frac = idx - lo as f64;
+    let (a, b) = (sorted[lo].as_secs_f64(), sorted[hi].as_secs_f64());
+    Duration::from_secs_f64(a + (b - a) * frac)
+}
+
 impl Stats {
-    fn from_samples(mut samples: Vec<Duration>) -> Stats {
+    /// Build stats from raw per-iteration timings (need not be sorted).
+    /// Public so serving drivers (load generator, throughput bench) reuse
+    /// the same percentile definition as the micro-bench harness.
+    pub fn from_samples(mut samples: Vec<Duration>) -> Stats {
         assert!(!samples.is_empty());
         samples.sort_unstable();
         let n = samples.len();
@@ -32,12 +59,11 @@ impl Stats {
             .map(|d| (d.as_secs_f64() - mean).powi(2))
             .sum::<f64>()
             / n as f64;
-        let pct = |p: f64| samples[((n as f64 - 1.0) * p).round() as usize];
         Stats {
             iters: n,
             mean: Duration::from_secs_f64(mean),
-            p50: pct(0.50),
-            p99: pct(0.99),
+            p50: percentile(&samples, 0.50),
+            p99: percentile(&samples, 0.99),
             min: samples[0],
             max: samples[n - 1],
             std_dev: Duration::from_secs_f64(var.sqrt()),
@@ -321,6 +347,38 @@ mod tests {
         assert_eq!(s.min, Duration::from_millis(10));
         assert_eq!(s.max, Duration::from_millis(30));
         assert!((s.mean.as_secs_f64() - 0.020).abs() < 1e-9);
+    }
+
+    /// Regression for the nearest-index percentile bias: pins p50/p99 on
+    /// known sample sets under linear interpolation.
+    #[test]
+    fn percentiles_interpolate_on_known_sets() {
+        let ms = Duration::from_millis;
+        // n = 10, samples 1..=10 ms.
+        let s = Stats::from_samples((1..=10).map(ms).collect());
+        // p50: idx 4.5 → midpoint of 5 ms and 6 ms (round-to-nearest gave
+        // the biased 6 ms on even n).
+        assert!((s.p50.as_secs_f64() - 0.0055).abs() < 1e-12, "{:?}", s.p50);
+        // p99: idx 8.91 → 9.91 ms, strictly below max (round-to-nearest
+        // silently returned max = 10 ms for every n ≤ 50).
+        assert!((s.p99.as_secs_f64() - 0.00991).abs() < 1e-12, "{:?}", s.p99);
+        assert!(s.p99 < s.max);
+
+        // n = 4 even set: p50 is the midpoint of the middle pair.
+        let s = Stats::from_samples(vec![ms(1), ms(2), ms(3), ms(4)]);
+        assert!((s.p50.as_secs_f64() - 0.0025).abs() < 1e-12, "{:?}", s.p50);
+
+        // n = 1: every percentile is the single sample.
+        let s = Stats::from_samples(vec![ms(7)]);
+        assert_eq!(s.p50, ms(7));
+        assert_eq!(s.p99, ms(7));
+
+        // exact-index percentiles are untouched by interpolation
+        let sorted: Vec<Duration> = (1..=5).map(ms).collect();
+        assert_eq!(percentile(&sorted, 0.5), ms(3));
+        assert_eq!(percentile(&sorted, 0.0), ms(1));
+        assert_eq!(percentile(&sorted, 1.0), ms(5));
+        assert_eq!(percentile(&[], 0.5), Duration::ZERO);
     }
 
     #[test]

@@ -1,6 +1,14 @@
-//! The continuous-batching coordinator loop.
+//! The continuous-batching worker loop.
 //!
-//! Runs on the engine thread (PJRT handles are not `Send`). Each scheduler
+//! A [`Coordinator`] is **one engine worker**: it owns its engine, its
+//! [`BufferPool`] and its parked-session registry for the lifetime of
+//! [`Coordinator::run`]. In the sharded runtime
+//! ([`crate::coordinator::scheduler`]) N of these run on dedicated threads
+//! behind an admission scheduler; `Coordinator::new` is the degenerate
+//! single-worker deployment (worker 0 of 1) and preserves the original
+//! one-loop behaviour exactly.
+//!
+//! Runs on its engine's thread (PJRT handles are not `Send`). Each
 //! iteration:
 //!
 //! 1. drains newly arrived [`Op`]s: submits join the waiting queue (FCFS,
@@ -29,7 +37,7 @@
 //! batching, per Orca/vLLM).
 
 use super::request::{ErrorCode, Op, Request, RequestMetrics, Response, ServeEvent, WireError};
-use super::stats::{MetricsCollector, StatsSnapshot};
+use super::stats::{MetricsCollector, StatsSnapshot, WorkerStats};
 use crate::kvcache::BufferPool;
 use crate::model::{sampler, CacheMode, Engine, Session};
 use crate::runtime::ModelDims;
@@ -159,20 +167,49 @@ struct Parked {
     parked_at: Instant,
 }
 
-/// The coordinator. Owns the engine for the lifetime of [`Self::run`].
+/// One engine worker. Owns the engine for the lifetime of [`Self::run`].
 pub struct Coordinator<E: StepEngine = Engine> {
     engine: E,
     cfg: CoordinatorConfig,
     pool: BufferPool,
+    /// This worker's index (0-based) in the sharded runtime.
+    worker_id: usize,
+    /// Total workers in the runtime. Session ids are strided so that
+    /// `owner(sid) = (sid - 1) % n_workers` — the scheduler routes `append`
+    /// ops to the owning worker without any shared registry.
+    n_workers: usize,
 }
 
 impl<E: StepEngine> Coordinator<E> {
+    /// Single-worker deployment (worker 0 of 1) — the original one-loop
+    /// behaviour, used directly by tests and by `--workers 1`.
     pub fn new(engine: E, cfg: CoordinatorConfig) -> Self {
+        Self::for_worker(engine, cfg, 0, 1)
+    }
+
+    /// One worker of a sharded runtime. Session ids this worker assigns
+    /// satisfy `(sid - 1) % n_workers == worker_id`, which is the affinity
+    /// contract [`super::scheduler::worker_of_session`] routes by.
+    pub fn for_worker(
+        engine: E,
+        cfg: CoordinatorConfig,
+        worker_id: usize,
+        n_workers: usize,
+    ) -> Self {
+        assert!(n_workers >= 1, "need at least one worker");
+        assert!(worker_id < n_workers, "worker_id {worker_id} of {n_workers}");
         Self {
             engine,
             cfg,
             pool: BufferPool::new(),
+            worker_id,
+            n_workers,
         }
+    }
+
+    /// This worker's index in the sharded runtime (0 for single-worker).
+    pub fn worker_id(&self) -> usize {
+        self.worker_id
     }
 
     pub fn engine(&self) -> &E {
@@ -196,7 +233,9 @@ impl<E: StepEngine> Coordinator<E> {
         let mut waiting: VecDeque<Request> = VecDeque::new();
         let mut active: Vec<Active> = Vec::new();
         let mut parked: HashMap<u64, Parked> = HashMap::new();
-        let mut next_session: u64 = 1;
+        // Strided so the owning worker is recoverable from the id alone:
+        // worker w of N assigns w+1, w+1+N, w+1+2N, ...
+        let mut next_session: u64 = self.worker_id as u64 + 1;
         let mut collector = MetricsCollector::new();
         let mut closed = false;
 
@@ -306,6 +345,15 @@ impl<E: StepEngine> Coordinator<E> {
                     mean_host_bytes: collector.mean_host_bytes(),
                     peak_host_bytes: collector.peak_host_bytes(),
                     pool: self.pool.stats(),
+                    workers: vec![WorkerStats {
+                        worker: self.worker_id,
+                        active: active.len(),
+                        waiting: waiting.len(),
+                        parked_sessions: parked.len(),
+                        completed: collector.n_requests(),
+                        generated_tokens: collector.generated_tokens(),
+                        throughput_tps: collector.throughput(),
+                    }],
                 };
                 let _ = reply.emit(ServeEvent::Stats { id, snapshot });
             }
@@ -368,7 +416,7 @@ impl<E: StepEngine> Coordinator<E> {
                     let session = if a.req.keep && a.pending_feed.is_empty() {
                         let sid = a.req.session.unwrap_or_else(|| {
                             let sid = *next_session;
-                            *next_session += 1;
+                            *next_session += self.n_workers as u64;
                             sid
                         });
                         parked.insert(
@@ -653,11 +701,11 @@ impl<E: StepEngine> Coordinator<E> {
             }
             live
         });
-        loop {
-            let total: usize = parked.values().map(|p| p.sess.cache.host_bytes()).sum();
-            if parked.is_empty() || total <= self.cfg.max_session_bytes {
-                break;
-            }
+        // Sum once, then subtract per eviction — the eviction loop stays
+        // O(evictions · n) for the min scan instead of O(n²) resummation
+        // on the worker's serving loop.
+        let mut total: usize = parked.values().map(|p| p.sess.cache.host_bytes()).sum();
+        while !parked.is_empty() && total > self.cfg.max_session_bytes {
             let oldest = parked
                 .iter()
                 .min_by_key(|(sid, p)| (p.parked_at, **sid))
@@ -668,7 +716,9 @@ impl<E: StepEngine> Coordinator<E> {
                         "session {sid} evicted (retained {total} B > bound {} B)",
                         self.cfg.max_session_bytes
                     );
-                    parked.remove(&sid);
+                    if let Some(p) = parked.remove(&sid) {
+                        total = total.saturating_sub(p.sess.cache.host_bytes());
+                    }
                 }
                 None => break,
             }
@@ -1174,6 +1224,63 @@ mod tests {
             }
             other => panic!("unexpected {other:?}"),
         }
+    }
+
+    /// A worker in a sharded runtime assigns session ids from its own
+    /// stride — `(sid - 1) % n_workers == worker_id` — so the scheduler
+    /// can route `append` ops to the owner without shared state.
+    #[test]
+    fn session_ids_are_strided_by_worker() {
+        let (tx, rx) = mpsc::channel::<Op>();
+        let (reply_tx, reply_rx) = mpsc::channel::<ServeEvent>();
+        for id in 0..3u64 {
+            let mut req = request(id, 2, 2, sink(&reply_tx));
+            req.keep = true;
+            tx.send(Op::Submit(req)).unwrap();
+        }
+        drop(tx);
+        drop(reply_tx);
+
+        // worker 1 of 3 → sids 2, 5, 8
+        Coordinator::for_worker(stub(false), CoordinatorConfig::default(), 1, 3).run(rx);
+
+        let mut sids: Vec<u64> = dones(reply_rx)
+            .into_iter()
+            .map(|r| r.session.expect("keep parks a session"))
+            .collect();
+        sids.sort_unstable();
+        assert_eq!(sids, vec![2, 5, 8]);
+        for sid in sids {
+            assert_eq!((sid - 1) % 3, 1, "owner encoding holds for {sid}");
+        }
+    }
+
+    /// The worker's stats snapshot carries its own per-worker row.
+    #[test]
+    fn stats_snapshot_reports_worker_row() {
+        let (tx, rx) = mpsc::channel::<Op>();
+        let (reply_tx, reply_rx) = mpsc::channel::<ServeEvent>();
+        tx.send(Op::Submit(request(1, 3, 2, sink(&reply_tx)))).unwrap();
+        tx.send(Op::Stats {
+            id: 9,
+            reply: sink(&reply_tx),
+        })
+        .unwrap();
+        drop(tx);
+        drop(reply_tx);
+
+        Coordinator::for_worker(stub(false), CoordinatorConfig::default(), 2, 4).run(rx);
+
+        let snapshot = reply_rx
+            .iter()
+            .find_map(|e| match e {
+                ServeEvent::Stats { snapshot, .. } => Some(snapshot),
+                _ => None,
+            })
+            .expect("stats answered");
+        assert_eq!(snapshot.workers.len(), 1);
+        assert_eq!(snapshot.workers[0].worker, 2);
+        assert_eq!(snapshot.workers[0].completed, snapshot.completed);
     }
 
     /// Direct unit check of the retire predicate.

@@ -1,25 +1,34 @@
-//! Serving coordinator: op queue, continuous batcher, session registry,
-//! metrics.
+//! Serving coordinator: admission scheduler, continuous-batching workers,
+//! session registries, metrics.
 //!
-//! PJRT handles are not `Send`, so the [`crate::model::Engine`] lives on a
-//! dedicated engine thread running [`Coordinator::run`]; other threads
-//! (TCP connection handlers, benchmark drivers) talk to it through
-//! [`std::sync::mpsc`] channels carrying [`Op`]s. The coordinator
-//! implements **continuous batching**: new requests are prefilled in
-//! chunks while active sessions keep decoding, and decode batches are
-//! re-formed every step from whatever is in flight (grouped by graph
-//! kind), so a long generation never blocks short ones behind it.
+//! The runtime is **sharded**: a [`Scheduler`] admission loop places ops
+//! onto N engine workers, each a [`Coordinator`] on its own thread owning
+//! its engine, [`crate::kvcache::BufferPool`] and parked-session registry
+//! (PJRT handles are not `Send`, so every engine is constructed on — and
+//! never leaves — its worker's thread). Other threads (TCP connection
+//! handlers, benchmark drivers) talk to the scheduler through
+//! [`std::sync::mpsc`] channels carrying [`Op`]s. Placement is
+//! least-loaded for fresh turns and **session-affine** for `append`s:
+//! workers assign session ids from disjoint strides, so the owner of a
+//! parked cache is recoverable from the id alone
+//! ([`scheduler::worker_of_session`]). Each worker runs **continuous
+//! batching**: new requests are prefilled in chunks while active sessions
+//! keep decoding, and decode batches are re-formed every step from
+//! whatever is in flight (grouped by graph kind), so a long generation
+//! never blocks short ones behind it — and sessions retire/admit between
+//! decode steps without draining the batch.
 //!
 //! The serving surface is **streaming and multi-turn**: each turn's
 //! sampled tokens are pushed into its [`EventSink`] as `token` events
 //! followed by a terminal `done`, and turns submitted with `keep` park
-//! their session (cache included) in a TTL- and footprint-bounded
-//! registry so a later `append` op continues the same hi/lo tiers.
-//! Compression is requested as a plain-data [`CompressionSpec`] and
-//! resolved to a cache mode only at admission.
+//! their session (cache included) in the owning worker's TTL- and
+//! footprint-bounded registry so a later `append` op continues the same
+//! hi/lo tiers. Compression is requested as a plain-data
+//! [`CompressionSpec`] and resolved to a cache mode only at admission.
 
 pub mod batcher;
 pub mod request;
+pub mod scheduler;
 pub mod stats;
 
 pub use batcher::{Coordinator, CoordinatorConfig, StepEngine};
@@ -27,4 +36,5 @@ pub use request::{
     CompressionSpec, ErrorCode, EventSink, Op, Reply, Request, RequestMetrics, Response,
     ServeEvent, WireError,
 };
-pub use stats::{MetricsCollector, StatsSnapshot};
+pub use scheduler::{worker_of_session, Scheduler};
+pub use stats::{MetricsCollector, StatsSnapshot, WorkerStats};

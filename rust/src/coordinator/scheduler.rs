@@ -1,0 +1,544 @@
+//! Admission scheduler for the sharded serving runtime.
+//!
+//! The single-loop prototype funnelled every op through one
+//! [`Coordinator`]; this module scales that across **N engine workers**,
+//! each a [`Coordinator`] on its own thread owning its own engine and
+//! [`crate::kvcache::BufferPool`]. The [`Scheduler`] is the admission
+//! layer in front of them:
+//!
+//! * **Placement** — fresh `generate`s go to the least-loaded worker
+//!   (in-flight submits tracked per worker; ties break to the lowest
+//!   index, so placement is deterministic for a given arrival order).
+//! * **Session→worker affinity** — workers assign session ids from
+//!   disjoint strides (`(sid - 1) % n_workers == worker`), so an `append`
+//!   routes to the worker holding that session's parked cache by pure
+//!   arithmetic ([`worker_of_session`]) — no shared registry, no locks on
+//!   the submit path.
+//! * **Backpressure** — a worker with `max_waiting` submits in flight
+//!   rejects further admissions with the existing `overloaded` wire error
+//!   before the op ever crosses a channel (the largest cap that can never
+//!   make the worker's own queue bound fire spuriously).
+//! * **Fan-out ops** — `cancel` and `stats` broadcast to every worker;
+//!   per-worker answers are merged by aggregate sinks into the single
+//!   reply the client expects (`found` OR-ed, snapshots merged with
+//!   per-worker rows, see [`StatsSnapshot::merged`]).
+//!
+//! Worker results flow back through each request's own [`EventSink`]
+//! (for TCP: the connection's writer channel), so the scheduler is never
+//! on the token-streaming path — it only places work.
+//!
+//! `Scheduler::start(1, ...)` is behaviourally the old single-loop
+//! deployment: one worker, stride 1, every op forwarded.
+
+use super::batcher::{Coordinator, CoordinatorConfig, StepEngine};
+use super::request::{ErrorCode, EventSink, Op, Reply, Request, Response, ServeEvent, WireError};
+use super::stats::StatsSnapshot;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+/// The worker that owns session `sid` under the stride contract
+/// (`Coordinator::for_worker` assigns `w+1, w+1+N, w+1+2N, ...`).
+pub fn worker_of_session(sid: u64, n_workers: usize) -> usize {
+    let n = n_workers.max(1) as u64;
+    (sid.max(1).wrapping_sub(1) % n) as usize
+}
+
+/// Counts a worker's in-flight submits so the Done event decrements what
+/// dispatch incremented — the scheduler's only view of worker load.
+struct TrackedSink {
+    inner: Reply,
+    loads: Arc<Vec<AtomicUsize>>,
+    worker: usize,
+}
+
+impl EventSink for TrackedSink {
+    fn emit(&self, ev: ServeEvent) -> bool {
+        let terminal = matches!(ev, ServeEvent::Done(_));
+        let ok = self.inner.emit(ev);
+        if terminal {
+            self.loads[self.worker].fetch_sub(1, Ordering::AcqRel);
+        }
+        ok
+    }
+}
+
+/// Aggregates the per-worker answers to a broadcast `cancel` into the one
+/// `CancelResult` the client expects (`found` is OR-ed across workers).
+/// The client's reply sink sits behind the mutex because `Box<dyn
+/// EventSink>` is `Send` but not `Sync`; the lock is taken once per worker
+/// answer, never on a token path.
+struct CancelFanout {
+    id: u64,
+    target: u64,
+    state: Mutex<CancelState>,
+}
+
+struct CancelState {
+    /// Taken (and consumed) by whichever worker answer arrives last.
+    reply: Option<Reply>,
+    remaining: usize,
+    found: bool,
+}
+
+struct CancelShard(Arc<CancelFanout>);
+
+impl EventSink for CancelShard {
+    fn emit(&self, ev: ServeEvent) -> bool {
+        if let ServeEvent::CancelResult { found, .. } = ev {
+            let mut state = self.0.state.lock().unwrap();
+            state.found |= found;
+            state.remaining -= 1;
+            if state.remaining == 0 {
+                let found = state.found;
+                if let Some(reply) = state.reply.take() {
+                    return reply.emit(ServeEvent::CancelResult {
+                        id: self.0.id,
+                        target: self.0.target,
+                        found,
+                    });
+                }
+            }
+        }
+        true
+    }
+}
+
+/// Aggregates the per-worker answers to a broadcast `stats` into one
+/// merged snapshot carrying the per-worker rows.
+struct StatsFanout {
+    id: u64,
+    state: Mutex<StatsState>,
+}
+
+struct StatsState {
+    reply: Option<Reply>,
+    parts: Vec<StatsSnapshot>,
+    remaining: usize,
+}
+
+struct StatsShard(Arc<StatsFanout>);
+
+impl EventSink for StatsShard {
+    fn emit(&self, ev: ServeEvent) -> bool {
+        if let ServeEvent::Stats { snapshot, .. } = ev {
+            let mut state = self.0.state.lock().unwrap();
+            state.parts.push(snapshot);
+            state.remaining -= 1;
+            if state.remaining == 0 {
+                let merged = StatsSnapshot::merged(std::mem::take(&mut state.parts));
+                if let Some(reply) = state.reply.take() {
+                    return reply.emit(ServeEvent::Stats {
+                        id: self.0.id,
+                        snapshot: merged,
+                    });
+                }
+            }
+        }
+        true
+    }
+}
+
+/// The sharded serving runtime: N worker threads behind one admission
+/// loop. Build with [`Scheduler::start`], then hand the op channel to
+/// [`Scheduler::run`] (or [`Scheduler::run_until`]) on the calling thread.
+pub struct Scheduler {
+    txs: Vec<Sender<Op>>,
+    /// In-flight submits per worker (incremented at dispatch, decremented
+    /// by the [`TrackedSink`] when the terminal event passes through).
+    loads: Arc<Vec<AtomicUsize>>,
+    handles: Vec<JoinHandle<()>>,
+    cfg: CoordinatorConfig,
+}
+
+impl Scheduler {
+    /// Spawn `n_workers` engine workers. `factory(w)` runs **on worker
+    /// `w`'s own thread** — engines whose handles are not `Send` (PJRT)
+    /// are constructed where they live. `start` returns once every worker
+    /// reported its engine ready, or the first construction error.
+    pub fn start<E, F>(
+        n_workers: usize,
+        cfg: CoordinatorConfig,
+        factory: F,
+    ) -> crate::Result<Scheduler>
+    where
+        E: StepEngine + 'static,
+        F: Fn(usize) -> crate::Result<E> + Send + Sync + 'static,
+    {
+        anyhow::ensure!(n_workers >= 1, "need at least one worker");
+        let factory = Arc::new(factory);
+        let loads: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..n_workers).map(|_| AtomicUsize::new(0)).collect());
+        let (ready_tx, ready_rx) = channel::<crate::Result<()>>();
+        let mut txs = Vec::with_capacity(n_workers);
+        let mut handles = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let (tx, rx) = channel::<Op>();
+            txs.push(tx);
+            let cfg_w = cfg.clone();
+            let factory = factory.clone();
+            let ready = ready_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("mikv-worker-{w}"))
+                .spawn(move || {
+                    let engine = match factory(w) {
+                        Ok(engine) => {
+                            let _ = ready.send(Ok(()));
+                            engine
+                        }
+                        Err(e) => {
+                            let _ = ready.send(Err(e));
+                            return;
+                        }
+                    };
+                    Coordinator::for_worker(engine, cfg_w, w, n_workers).run(rx);
+                })
+                .expect("spawn worker thread");
+            handles.push(handle);
+        }
+        drop(ready_tx);
+        for _ in 0..n_workers {
+            ready_rx
+                .recv()
+                .expect("worker exited before reporting readiness")?;
+        }
+        crate::log_info!("scheduler started with {n_workers} worker(s)");
+        Ok(Scheduler {
+            txs,
+            loads,
+            handles,
+            cfg,
+        })
+    }
+
+    pub fn n_workers(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Serve until the op channel closes, then drain and join the workers.
+    pub fn run(self, rx: Receiver<Op>) {
+        self.run_until(rx, || false)
+    }
+
+    /// Like [`Self::run`], but also stops once `stop()` returns true
+    /// (checked between ops) — used when the shutdown signal is something
+    /// other than channel closure (e.g. a finished test client).
+    pub fn run_until(mut self, rx: Receiver<Op>, stop: impl Fn() -> bool) {
+        let idle = self.cfg.idle_poll;
+        loop {
+            match rx.recv_timeout(idle) {
+                Ok(op) => self.dispatch(op),
+                Err(RecvTimeoutError::Timeout) => {
+                    if stop() {
+                        // Dispatch anything that raced the stop signal so
+                        // no accepted op is silently dropped.
+                        while let Ok(op) = rx.try_recv() {
+                            self.dispatch(op);
+                        }
+                        break;
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        // Closing the worker channels lets each worker drain its in-flight
+        // turns and exit.
+        self.txs.clear();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+        crate::log_info!("scheduler drained, all workers joined");
+    }
+
+    /// Place one op. Submits go to one worker (affinity for appends,
+    /// least-loaded otherwise); cancel/stats broadcast with aggregation.
+    fn dispatch(&self, op: Op) {
+        match op {
+            Op::Submit(req) => self.dispatch_submit(req),
+            Op::Cancel { id, target, reply } => {
+                let fanout = Arc::new(CancelFanout {
+                    id,
+                    target,
+                    state: Mutex::new(CancelState {
+                        reply: Some(reply),
+                        remaining: self.txs.len(),
+                        found: false,
+                    }),
+                });
+                for tx in &self.txs {
+                    if let Err(send_err) = tx.send(Op::Cancel {
+                        id,
+                        target,
+                        reply: Box::new(CancelShard(fanout.clone())),
+                    }) {
+                        // Worker gone: account it as answered-not-found so
+                        // the aggregate reply still fires.
+                        if let Op::Cancel { reply, .. } = send_err.0 {
+                            let _ = reply.emit(ServeEvent::CancelResult {
+                                id,
+                                target,
+                                found: false,
+                            });
+                        }
+                    }
+                }
+            }
+            Op::Stats { id, reply } => {
+                let fanout = Arc::new(StatsFanout {
+                    id,
+                    state: Mutex::new(StatsState {
+                        reply: Some(reply),
+                        parts: Vec::new(),
+                        remaining: self.txs.len(),
+                    }),
+                });
+                for tx in &self.txs {
+                    if let Err(send_err) = tx.send(Op::Stats {
+                        id,
+                        reply: Box::new(StatsShard(fanout.clone())),
+                    }) {
+                        if let Op::Stats { reply, .. } = send_err.0 {
+                            let _ = reply.emit(ServeEvent::Stats {
+                                id,
+                                snapshot: StatsSnapshot::default(),
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    fn dispatch_submit(&self, req: Request) {
+        let w = match req.session {
+            // Affinity: the append must land on the worker holding the
+            // session's parked cache.
+            Some(sid) => worker_of_session(sid, self.txs.len()),
+            None => self.least_loaded(),
+        };
+        // Cap in-flight at `max_waiting` per worker. This is the largest
+        // bound that can never trip the worker's own queue check
+        // spuriously: with ≤ max_waiting ops in flight (channel + queued +
+        // active), the worker's waiting queue is strictly below
+        // `max_waiting` whenever a new op is drained, so a client is never
+        // told `overloaded` while the runtime is under its advertised
+        // capacity. (A cap of max_waiting + max_active would over-admit
+        // right after a retire wave: retires free scheduler slots before
+        // the worker's next admit pass shrinks its queue.) With a single
+        // worker the scheduler imposes no cap of its own — the worker's
+        // queue bound alone governs, exactly as in the pre-sharding
+        // deployment.
+        let cap = self.cfg.max_waiting;
+        if self.txs.len() > 1 && self.loads[w].load(Ordering::Acquire) >= cap {
+            let err = WireError::new(
+                ErrorCode::Overloaded,
+                format!("worker {w} at capacity ({cap} requests in flight)"),
+            );
+            let _ = req.reply.emit(ServeEvent::Done(Response::error(req.id, err)));
+            return;
+        }
+        self.loads[w].fetch_add(1, Ordering::AcqRel);
+        let req = Request {
+            reply: Box::new(TrackedSink {
+                inner: req.reply,
+                loads: self.loads.clone(),
+                worker: w,
+            }),
+            ..req
+        };
+        if let Err(send_err) = self.txs[w].send(Op::Submit(req)) {
+            // Worker gone (only during shutdown). Answer through the
+            // tracked sink so the load count is released.
+            if let Op::Submit(r) = send_err.0 {
+                let err = WireError::internal(format!("worker {w} unavailable"));
+                let _ = r.reply.emit(ServeEvent::Done(Response::error(r.id, err)));
+            }
+        }
+    }
+
+    /// Deterministic placement: least in-flight submits, ties to the
+    /// lowest worker index.
+    fn least_loaded(&self) -> usize {
+        let mut best = 0usize;
+        let mut best_load = usize::MAX;
+        for (w, load) in self.loads.iter().enumerate() {
+            let l = load.load(Ordering::Acquire);
+            if l < best_load {
+                best = w;
+                best_load = l;
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{CompressionSpec, Response};
+    use crate::model::StubEngine;
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    fn start(n_workers: usize, cfg: CoordinatorConfig) -> Scheduler {
+        let base = StubEngine::new(StubEngine::test_dims(64));
+        Scheduler::start(n_workers, cfg, move |w| Ok(base.fork(w))).unwrap()
+    }
+
+    fn submit(
+        id: u64,
+        session: Option<u64>,
+        keep: bool,
+        reply: &mpsc::Sender<ServeEvent>,
+    ) -> Op {
+        Op::Submit(Request {
+            id,
+            prompt: vec![1, 2, 3],
+            max_new: 3,
+            stop: None,
+            spec: CompressionSpec::mikv(0.5, "int4"),
+            session,
+            keep,
+            submitted_at: Instant::now(),
+            reply: Box::new(reply.clone()),
+        })
+    }
+
+    fn wait_done(rx: &mpsc::Receiver<ServeEvent>) -> Response {
+        loop {
+            if let ServeEvent::Done(r) = rx.recv().unwrap() {
+                return r;
+            }
+        }
+    }
+
+    #[test]
+    fn owner_arithmetic_matches_worker_stride() {
+        // worker w of N assigns w+1, w+1+N, ... — invert it.
+        for n in 1..=5usize {
+            for w in 0..n {
+                for k in 0..4u64 {
+                    let sid = w as u64 + 1 + k * n as u64;
+                    assert_eq!(worker_of_session(sid, n), w, "sid {sid} of {n}");
+                }
+            }
+        }
+        // degenerate inputs stay in range
+        assert_eq!(worker_of_session(0, 4), 0);
+        assert_eq!(worker_of_session(1, 1), 0);
+    }
+
+    /// End to end across 2 workers: a kept generate parks on some worker,
+    /// the follow-up append routes back to it by session-id arithmetic and
+    /// continues the same cache.
+    #[test]
+    fn append_routes_to_the_owning_worker() {
+        let sched = start(2, CoordinatorConfig::default());
+        let (tx, rx) = mpsc::channel::<Op>();
+        let driver = std::thread::spawn(move || {
+            let (etx, erx) = mpsc::channel::<ServeEvent>();
+            tx.send(submit(1, None, true, &etx)).unwrap();
+            let turn1 = wait_done(&erx);
+            assert!(turn1.error.is_none(), "{:?}", turn1.error);
+            let sid = turn1.session.expect("kept session");
+            let occ1 = turn1.metrics.hi_slots + turn1.metrics.lo_slots;
+
+            tx.send(submit(2, Some(sid), false, &etx)).unwrap();
+            let turn2 = wait_done(&erx);
+            assert!(turn2.error.is_none(), "{:?}", turn2.error);
+            assert_eq!(turn2.session, Some(sid));
+            let occ2 = turn2.metrics.hi_slots + turn2.metrics.lo_slots;
+            assert!(occ2 > occ1, "cache carried over: {occ1} -> {occ2}");
+            drop(tx);
+        });
+        sched.run(rx);
+        driver.join().unwrap();
+    }
+
+    /// Cancel of an unknown target broadcasts to every worker and folds
+    /// into exactly one `found: false` answer.
+    #[test]
+    fn cancel_fanout_aggregates_to_one_answer() {
+        let sched = start(4, CoordinatorConfig::default());
+        let (tx, rx) = mpsc::channel::<Op>();
+        let driver = std::thread::spawn(move || {
+            let (etx, erx) = mpsc::channel::<ServeEvent>();
+            tx.send(Op::Cancel {
+                id: 1,
+                target: 999,
+                reply: Box::new(etx.clone()),
+            })
+            .unwrap();
+            match erx.recv().unwrap() {
+                ServeEvent::CancelResult { id, target, found } => {
+                    assert_eq!((id, target, found), (1, 999, false));
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+            drop(etx);
+            // exactly one aggregated answer, not one per worker
+            assert!(erx.recv().is_err(), "no second cancel answer");
+            drop(tx);
+        });
+        sched.run(rx);
+        driver.join().unwrap();
+    }
+
+    /// Stats broadcasts merge into one snapshot with one row per worker.
+    #[test]
+    fn stats_fanout_merges_worker_rows() {
+        let sched = start(3, CoordinatorConfig::default());
+        let (tx, rx) = mpsc::channel::<Op>();
+        let driver = std::thread::spawn(move || {
+            let (etx, erx) = mpsc::channel::<ServeEvent>();
+            tx.send(submit(1, None, false, &etx)).unwrap();
+            let done = wait_done(&erx);
+            assert!(done.error.is_none());
+
+            tx.send(Op::Stats {
+                id: 7,
+                reply: Box::new(etx.clone()),
+            })
+            .unwrap();
+            let snapshot = loop {
+                if let ServeEvent::Stats { id, snapshot } = erx.recv().unwrap() {
+                    assert_eq!(id, 7);
+                    break snapshot;
+                }
+            };
+            assert_eq!(snapshot.workers.len(), 3);
+            let ids: Vec<usize> = snapshot.workers.iter().map(|w| w.worker).collect();
+            assert_eq!(ids, vec![0, 1, 2]);
+            assert_eq!(snapshot.completed, 1);
+            let sum: usize = snapshot.workers.iter().map(|w| w.completed).sum();
+            assert_eq!(sum, snapshot.completed);
+            drop(tx);
+        });
+        sched.run(rx);
+        driver.join().unwrap();
+    }
+
+    /// Scheduler-side backpressure: with a zero-capacity config every
+    /// submit is rejected `overloaded` before reaching a worker.
+    #[test]
+    fn backpressure_rejects_overloaded_at_admission() {
+        let cfg = CoordinatorConfig {
+            max_active: 0,
+            max_waiting: 0,
+            ..CoordinatorConfig::default()
+        };
+        let sched = start(2, cfg);
+        let (tx, rx) = mpsc::channel::<Op>();
+        let driver = std::thread::spawn(move || {
+            let (etx, erx) = mpsc::channel::<ServeEvent>();
+            tx.send(submit(1, None, false, &etx)).unwrap();
+            let done = wait_done(&erx);
+            let err = done.error.expect("rejected");
+            assert_eq!(err.code, ErrorCode::Overloaded);
+            drop(tx);
+        });
+        sched.run(rx);
+        driver.join().unwrap();
+    }
+}

@@ -4,22 +4,45 @@ use super::request::RequestMetrics;
 use crate::kvcache::PoolStats;
 use std::time::{Duration, Instant};
 
+/// One worker's share of a [`StatsSnapshot`]. In the sharded runtime every
+/// engine worker answers the `stats` op with its own counters and the
+/// scheduler merges them; the per-worker rows ride along so occupancy and
+/// throughput skew across the shards stays observable on the wire.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WorkerStats {
+    /// Worker index (0-based).
+    pub worker: usize,
+    /// Sessions this worker is currently decoding.
+    pub active: usize,
+    /// Requests queued on this worker.
+    pub waiting: usize,
+    /// Sessions parked in this worker's registry.
+    pub parked_sessions: usize,
+    /// Turns this worker completed.
+    pub completed: usize,
+    /// Tokens this worker generated.
+    pub generated_tokens: usize,
+    /// This worker's generated tokens per wall-clock second.
+    pub throughput_tps: f64,
+}
+
 /// Point-in-time serving counters answered to the wire `stats` op:
-/// scheduler occupancy, session-registry footprint, throughput, and the
-/// shared [`crate::kvcache::BufferPool`]'s counters.
+/// scheduler occupancy, session-registry footprint, throughput, the shared
+/// [`crate::kvcache::BufferPool`]'s counters, and the per-worker breakdown
+/// (one row per engine worker in the sharded runtime).
 #[derive(Debug, Clone, Default)]
 pub struct StatsSnapshot {
-    /// Sessions currently decoding.
+    /// Sessions currently decoding (summed over workers).
     pub active: usize,
-    /// Requests queued for admission.
+    /// Requests queued for admission (summed over workers).
     pub waiting: usize,
-    /// Sessions parked in the registry awaiting `append`.
+    /// Sessions parked in the registries awaiting `append`.
     pub parked_sessions: usize,
     /// Host bytes the parked sessions pin.
     pub parked_bytes: usize,
-    /// Turns completed since the coordinator started.
+    /// Turns completed since the runtime started.
     pub completed: usize,
-    /// Tokens generated since the coordinator started.
+    /// Tokens generated since the runtime started.
     pub generated_tokens: usize,
     /// Generated tokens per wall-clock second.
     pub throughput_tps: f64,
@@ -27,8 +50,44 @@ pub struct StatsSnapshot {
     pub mean_host_bytes: f64,
     /// Largest host cache footprint any completed turn reached.
     pub peak_host_bytes: usize,
-    /// Shared buffer-pool counters.
+    /// Buffer-pool counters (summed over the per-worker pools).
     pub pool: PoolStats,
+    /// Per-worker breakdown, ordered by worker index.
+    pub workers: Vec<WorkerStats>,
+}
+
+impl StatsSnapshot {
+    /// Merge per-worker snapshots into the aggregate the wire reports:
+    /// additive counters are summed, `mean_host_bytes` is weighted by each
+    /// worker's completed turns, peaks are maxed, and the `workers` rows
+    /// are concatenated in worker order.
+    pub fn merged(parts: Vec<StatsSnapshot>) -> StatsSnapshot {
+        let mut out = StatsSnapshot::default();
+        let mut weighted_bytes = 0.0f64;
+        for part in parts {
+            out.active += part.active;
+            out.waiting += part.waiting;
+            out.parked_sessions += part.parked_sessions;
+            out.parked_bytes += part.parked_bytes;
+            out.completed += part.completed;
+            out.generated_tokens += part.generated_tokens;
+            out.throughput_tps += part.throughput_tps;
+            weighted_bytes += part.mean_host_bytes * part.completed as f64;
+            out.peak_host_bytes = out.peak_host_bytes.max(part.peak_host_bytes);
+            out.pool.free_blocks += part.pool.free_blocks;
+            out.pool.free_bytes += part.pool.free_bytes;
+            out.pool.outstanding_blocks += part.pool.outstanding_blocks;
+            out.pool.outstanding_bytes += part.pool.outstanding_bytes;
+            out.pool.hits += part.pool.hits;
+            out.pool.misses += part.pool.misses;
+            out.workers.extend(part.workers);
+        }
+        if out.completed > 0 {
+            out.mean_host_bytes = weighted_bytes / out.completed as f64;
+        }
+        out.workers.sort_by_key(|w| w.worker);
+        out
+    }
 }
 
 /// Aggregates per-request metrics into the numbers the serving benches
@@ -73,25 +132,25 @@ impl MetricsCollector {
         self.latencies.len()
     }
 
-    fn pct(sorted: &[Duration], p: f64) -> Duration {
-        if sorted.is_empty() {
-            return Duration::ZERO;
-        }
-        sorted[((sorted.len() as f64 - 1.0) * p).round() as usize]
-    }
-
-    /// (p50, p99) of time-to-first-token.
+    /// (p50, p99) of time-to-first-token (linear-interpolated percentiles,
+    /// shared with the bench harness via [`crate::bench::percentile`]).
     pub fn ttft(&self) -> (Duration, Duration) {
         let mut v = self.ttfts.clone();
         v.sort_unstable();
-        (Self::pct(&v, 0.5), Self::pct(&v, 0.99))
+        (
+            crate::bench::percentile(&v, 0.5),
+            crate::bench::percentile(&v, 0.99),
+        )
     }
 
     /// (p50, p99) of end-to-end latency.
     pub fn latency(&self) -> (Duration, Duration) {
         let mut v = self.latencies.clone();
         v.sort_unstable();
-        (Self::pct(&v, 0.5), Self::pct(&v, 0.99))
+        (
+            crate::bench::percentile(&v, 0.5),
+            crate::bench::percentile(&v, 0.99),
+        )
     }
 
     /// Generated tokens per wall-clock second since collector creation.
@@ -143,13 +202,14 @@ mod tests {
             c.record(&metrics(i, i * 2));
         }
         assert_eq!(c.n_requests(), 100);
-        // index = round((n-1)·p): p50 of 1..=100 → index 50 → value 51
+        // linear interpolation: p50 of 1..=100 ms sits at idx 49.5 →
+        // midpoint of 50 ms and 51 ms; p99 at idx 98.01 → 99.01 ms.
         let (p50, p99) = c.ttft();
-        assert_eq!(p50, Duration::from_millis(51));
-        assert_eq!(p99, Duration::from_millis(99));
+        assert!((p50.as_secs_f64() - 0.0505).abs() < 1e-9, "{p50:?}");
+        assert!((p99.as_secs_f64() - 0.09901).abs() < 1e-9, "{p99:?}");
         let (l50, l99) = c.latency();
-        assert_eq!(l50, Duration::from_millis(102));
-        assert_eq!(l99, Duration::from_millis(198));
+        assert!((l50.as_secs_f64() - 0.101).abs() < 1e-9, "{l50:?}");
+        assert!((l99.as_secs_f64() - 0.19802).abs() < 1e-9, "{l99:?}");
         assert_eq!(c.generated_tokens(), 500);
     }
 
@@ -172,5 +232,65 @@ mod tests {
         c.record(&m);
         assert_eq!(c.mean_host_bytes(), 200.0);
         assert_eq!(c.peak_host_bytes(), 300);
+    }
+
+    #[test]
+    fn snapshot_merge_sums_and_weights() {
+        let w = |worker: usize, completed: usize| WorkerStats {
+            worker,
+            completed,
+            generated_tokens: completed * 3,
+            throughput_tps: 10.0,
+            ..WorkerStats::default()
+        };
+        let a = StatsSnapshot {
+            active: 2,
+            waiting: 1,
+            parked_sessions: 1,
+            parked_bytes: 100,
+            completed: 4,
+            generated_tokens: 12,
+            throughput_tps: 10.0,
+            mean_host_bytes: 1000.0,
+            peak_host_bytes: 5000,
+            workers: vec![w(1, 4)],
+            ..StatsSnapshot::default()
+        };
+        let b = StatsSnapshot {
+            active: 1,
+            waiting: 0,
+            parked_sessions: 2,
+            parked_bytes: 50,
+            completed: 12,
+            generated_tokens: 36,
+            throughput_tps: 30.0,
+            mean_host_bytes: 2000.0,
+            peak_host_bytes: 3000,
+            workers: vec![w(0, 12)],
+            ..StatsSnapshot::default()
+        };
+        let m = StatsSnapshot::merged(vec![a, b]);
+        assert_eq!(m.active, 3);
+        assert_eq!(m.waiting, 1);
+        assert_eq!(m.parked_sessions, 3);
+        assert_eq!(m.parked_bytes, 150);
+        assert_eq!(m.completed, 16);
+        assert_eq!(m.generated_tokens, 48);
+        assert!((m.throughput_tps - 40.0).abs() < 1e-9);
+        // weighted: (1000·4 + 2000·12) / 16 = 1750
+        assert!((m.mean_host_bytes - 1750.0).abs() < 1e-9);
+        assert_eq!(m.peak_host_bytes, 5000);
+        // workers sorted by index after the merge
+        assert_eq!(m.workers.len(), 2);
+        assert_eq!(m.workers[0].worker, 0);
+        assert_eq!(m.workers[1].worker, 1);
+    }
+
+    #[test]
+    fn snapshot_merge_of_nothing_is_default() {
+        let m = StatsSnapshot::merged(Vec::new());
+        assert_eq!(m.completed, 0);
+        assert_eq!(m.mean_host_bytes, 0.0);
+        assert!(m.workers.is_empty());
     }
 }

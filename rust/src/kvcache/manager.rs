@@ -934,6 +934,109 @@ mod tests {
         assert!(pool.stats().hits > 0, "second session hit the pool");
     }
 
+    /// Paper §3.1 by construction: after ARBITRARY admit/observe/demote
+    /// sequences (random ratio / recency window / lo precision / policy /
+    /// prompt length / decode steps), the tier state always satisfies
+    ///
+    /// * per-plane hi occupancy never exceeds the importance budget
+    ///   `hi_budget(seq_len)` (recency protection is inside the budget,
+    ///   since `hi_budget >= min(recent_window, seq_len)`);
+    /// * the recency window is always hi-precision;
+    /// * every demoted slot remains dequantizable to finite values — the
+    ///   eviction-loss failure mode ("token left behind") is impossible in
+    ///   Retain mode;
+    /// * the manager's structural invariants (masks/placement/counters)
+    ///   hold after every single step.
+    #[test]
+    fn property_tier_invariants_under_random_sequences() {
+        use crate::util::prop::{forall, Config};
+
+        let check = |m: &CacheManager, label: &str| -> Result<(), String> {
+            m.check_invariants()
+                .map_err(|e| format!("{label}: {e}"))?;
+            let t = m.seq_len();
+            let cfg = m.config();
+            let budget = cfg.hi_budget(t);
+            let recent = cfg.recent_window.max(1).min(t);
+            let planes = cfg.layers * cfg.kv_heads;
+            for p in 0..planes {
+                let hi_n = (0..t)
+                    .filter(|&s| m.placement(p, s) == Placement::Hi)
+                    .count();
+                if hi_n > budget {
+                    return Err(format!(
+                        "{label}: plane {p} hi {hi_n} > budget {budget} at t={t}"
+                    ));
+                }
+                for s in t - recent..t {
+                    if m.placement(p, s) != Placement::Hi {
+                        return Err(format!(
+                            "{label}: recency slot ({p},{s}) is {:?} at t={t}",
+                            m.placement(p, s)
+                        ));
+                    }
+                }
+                for s in 0..t {
+                    match m.placement(p, s) {
+                        Placement::Evicted => {
+                            return Err(format!(
+                                "{label}: slot ({p},{s}) evicted in Retain mode"
+                            ))
+                        }
+                        Placement::Empty => {
+                            return Err(format!("{label}: live slot ({p},{s}) empty"))
+                        }
+                        _ => {}
+                    }
+                    let (k, v) = m
+                        .effective_kv(p, s)
+                        .ok_or_else(|| format!("{label}: ({p},{s}) unrecoverable"))?;
+                    if !k.iter().chain(v.iter()).all(|x| x.is_finite()) {
+                        return Err(format!("{label}: ({p},{s}) dequantized non-finite"));
+                    }
+                }
+            }
+            Ok(())
+        };
+
+        forall(Config::default().cases(40).name("tier invariants"), |rng| {
+            let max_seq = 48usize;
+            let ratio = *rng.choose(&[0.1f64, 0.25, 0.5, 0.9]);
+            let lo = *rng.choose(&[Precision::Int2, Precision::Int3, Precision::Int4]);
+            let mut cfg = CacheConfig::mikv(2, 2, 8, max_seq, ratio, lo);
+            cfg.recent_window = 1 + rng.gen_below(4) as usize;
+            cfg.outlier_aware = rng.gen_bool(0.5);
+            let planes = cfg.layers * cfg.kv_heads;
+            let policy_name = *rng.choose(&["h2o", "local", "random"]);
+            let policy = make_policy(policy_name, planes, max_seq, rng.next_u64())
+                .expect("known policy");
+            let mut m = CacheManager::new(cfg, policy);
+
+            let t0 = 1 + rng.gen_below(16) as usize;
+            let (k, v, acc, qmax, kmax) = prefill_data(m.config(), t0, rng);
+            m.ingest_prefill(t0, &k, &v, &acc, &qmax, &kmax);
+            check(&m, "after prefill")?;
+
+            let steps = (rng.gen_below(24) as usize).min(max_seq - t0);
+            let d = m.config().head_dim;
+            for step in 0..steps {
+                let k_new: Vec<f32> = (0..planes * d).map(|_| rng.gen_normal()).collect();
+                let v_new: Vec<f32> = (0..planes * d).map(|_| rng.gen_normal()).collect();
+                let attn_prev: Vec<f32> =
+                    (0..planes * max_seq).map(|_| rng.gen_f32() * 0.1).collect();
+                let attn_self: Vec<f32> = (0..planes).map(|_| rng.gen_f32() * 0.1).collect();
+                m.append_token(StepOutputs {
+                    k_new: &k_new,
+                    v_new: &v_new,
+                    attn_prev: &attn_prev,
+                    attn_self: &attn_self,
+                });
+                check(&m, &format!("after step {step}"))?;
+            }
+            Ok(())
+        });
+    }
+
     #[test]
     #[should_panic(expected = "cache full")]
     fn append_beyond_capacity_panics() {

@@ -8,7 +8,7 @@
 //!
 //! Run `mikv help` for flags.
 
-use mikv::coordinator::{Coordinator, CoordinatorConfig, Op};
+use mikv::coordinator::{CoordinatorConfig, Op, Scheduler};
 use mikv::eval::{EvalTask, Harness};
 use mikv::model::{CacheMode, Engine, Session};
 use mikv::runtime::Manifest;
@@ -21,10 +21,13 @@ mikv — mixed-precision KV cache serving (MiKV reproduction)
 USAGE: mikv <command> [--artifacts DIR] [--model NAME] [flags]
 
 COMMANDS:
-  serve      --port 7777 --max-active 8 --max-waiting 256
+  serve      --port 7777 --workers 1 --max-active 8 --max-waiting 256
              --session-ttl 120 (secs) --session-mb 512
              (Serving API v1: versioned streaming ops with multi-turn
-              sessions; see rust/src/server/proto.rs and EXPERIMENTS.md)
+              sessions, sharded across N engine workers with continuous
+              batching per worker; see rust/src/server/proto.rs and
+              EXPERIMENTS.md. --max-active/--max-waiting/--session-mb are
+              per worker.)
   generate   --prompt 1,2,3 --max-new 8 --mode mikv:0.25:int2
   eval       --task lineret --samples 25 --modes full,mikv:0.25:int2,h2o:0.25
   info       print manifest summary
@@ -125,8 +128,8 @@ fn run(args: &Args) -> anyhow::Result<()> {
             Ok(())
         }
         Some("serve") => {
-            let engine = Engine::load(&artifacts, &model)?;
             let port: u16 = args.get("port", 7777u16)?;
+            let workers = args.get_nonzero("workers", 1)?;
             let cfg = CoordinatorConfig {
                 max_active: args.get("max-active", 8usize)?,
                 prefill_chunk: args.get("prefill-chunk", 4usize)?,
@@ -135,12 +138,20 @@ fn run(args: &Args) -> anyhow::Result<()> {
                 max_session_bytes: args.get("session-mb", 512usize)? << 20,
                 ..Default::default()
             };
+            // Each worker loads its own engine on its own thread (PJRT
+            // handles are not `Send`); `--workers 1` is the original
+            // single-loop deployment.
+            let scheduler = Scheduler::start(workers, cfg, move |w| {
+                let engine = Engine::load(&artifacts, &model)?;
+                mikv::log_info!("worker {w}: engine ready");
+                Ok(engine)
+            })?;
             let (tx, rx) = std::sync::mpsc::channel::<Op>();
             let listener = std::net::TcpListener::bind(("127.0.0.1", port))?;
             std::thread::spawn(move || {
                 let _ = mikv::server::serve(listener, tx);
             });
-            Coordinator::new(engine, cfg).run(rx);
+            scheduler.run(rx);
             Ok(())
         }
         _ => {

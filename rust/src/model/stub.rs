@@ -15,14 +15,29 @@
 use crate::coordinator::StepEngine;
 use crate::model::{Session, SessionCache};
 use crate::runtime::ModelDims;
-use crate::util::rng::Pcg32;
+use crate::util::rng::{Pcg32, SplitMix64};
 use std::time::Duration;
 
-/// The stub engine (see module docs).
+/// Default tensor-synthesis seed (kept stable so pre-sharding golden
+/// values reproduce).
+const DEFAULT_SEED: u64 = 0x57AB;
+
+/// The stub engine (see module docs). Cheaply clonable: the sharded
+/// runtime hands each worker its own [`StubEngine::fork`] with an
+/// independent, deterministically derived tensor seed.
+#[derive(Clone)]
 pub struct StubEngine {
     dims: ModelDims,
-    /// Artificial per-decode-step delay: lets tests cancel in-flight work
-    /// deterministically instead of racing a microsecond-fast loop.
+    /// Tensor-synthesis seed; token sampling is seed-independent, so
+    /// streamed-token assertions stay exact across differently seeded
+    /// workers.
+    seed: u64,
+    /// Artificial **per-session** decode cost: `decode_step` sleeps
+    /// `decode_delay × batch_size`, modelling an engine whose per-token
+    /// work is serialized on its own accelerator. Tests use it to cancel
+    /// in-flight work deterministically instead of racing a
+    /// microsecond-fast loop; the serving throughput bench uses it to make
+    /// worker scaling measurable (N workers overlap N engines' delays).
     pub decode_delay: Duration,
     /// Fail every decode step (error-path and retirement tests).
     pub fail_decode: bool,
@@ -32,8 +47,20 @@ impl StubEngine {
     pub fn new(dims: ModelDims) -> StubEngine {
         StubEngine {
             dims,
+            seed: DEFAULT_SEED,
             decode_delay: Duration::ZERO,
             fail_decode: false,
+        }
+    }
+
+    /// A copy of this engine for worker `worker` of a sharded runtime:
+    /// same dims/delay/failure knobs, independent deterministic tensor
+    /// seed derived from this engine's seed.
+    pub fn fork(&self, worker: usize) -> StubEngine {
+        let mut sm = SplitMix64::new(self.seed ^ ((worker as u64 + 1) << 32));
+        StubEngine {
+            seed: sm.split(),
+            ..self.clone()
         }
     }
 
@@ -54,7 +81,7 @@ impl StubEngine {
     }
 
     fn rng_for(&self, salt: u64) -> Pcg32 {
-        Pcg32::new(0x57AB_u64 ^ salt)
+        Pcg32::new(self.seed ^ salt)
     }
 }
 
@@ -107,8 +134,10 @@ impl StepEngine for StubEngine {
 
     fn decode_step(&self, sessions: &mut [&mut Session]) -> crate::Result<Vec<Vec<f32>>> {
         anyhow::ensure!(!self.fail_decode, "injected decode failure");
-        if self.decode_delay > Duration::ZERO {
-            std::thread::sleep(self.decode_delay);
+        if self.decode_delay > Duration::ZERO && !sessions.is_empty() {
+            // Per-session cost: this engine's work is serialized on its own
+            // (emulated) accelerator, so a batch of B costs B × delay.
+            std::thread::sleep(self.decode_delay * sessions.len() as u32);
         }
         let planes = self.dims.planes();
         let (d, s, vocab) = (self.dims.d_head, self.dims.max_seq, self.dims.vocab);
@@ -164,6 +193,42 @@ mod tests {
         // tokens follow the +1 (mod vocab) rule after the prefill sample
         assert_eq!(a[1], (a[0] + 1) % 32);
         assert_eq!(a[3], (a[2] + 1) % 32);
+    }
+
+    /// Worker forks are deterministic and independent: the same fork index
+    /// reproduces the same tensors, different indexes diverge, and token
+    /// sampling (prompt-sum prefill, +1 decode) is identical across forks.
+    #[test]
+    fn forks_are_deterministic_and_seed_independent_for_tokens() {
+        let dims = StubEngine::test_dims(16);
+        let base = StubEngine::new(dims.clone());
+        let run = |engine: &StubEngine| {
+            let mode = CompressionSpec::mikv(0.5, "int4").resolve(&dims).unwrap();
+            let mut sess = Session::new(3, &dims, mode).unwrap();
+            {
+                let mut group = [&mut sess];
+                engine.prefill(&mut group, &[vec![1, 2, 3]]).unwrap();
+            }
+            for _ in 0..2 {
+                let mut group = [&mut sess];
+                let rows = engine.decode_step(&mut group).unwrap();
+                let tok = crate::model::sampler::greedy(&rows[0]);
+                group[0].last_token = tok;
+                group[0].tokens.push(tok);
+            }
+            let kv = match &sess.cache {
+                SessionCache::Mikv(m) => m.effective_kv(0, 0).unwrap().0,
+                _ => unreachable!(),
+            };
+            (sess.generated().to_vec(), kv)
+        };
+        let (tok_a, kv_a) = run(&base.fork(0));
+        let (tok_a2, kv_a2) = run(&base.fork(0));
+        let (tok_b, kv_b) = run(&base.fork(1));
+        assert_eq!(tok_a, tok_a2, "same fork reproduces");
+        assert_eq!(kv_a, kv_a2);
+        assert_eq!(tok_a, tok_b, "token rule is seed-independent");
+        assert_ne!(kv_a, kv_b, "different forks synthesize different KV");
     }
 
     #[test]

@@ -175,6 +175,57 @@ mod tests {
         });
     }
 
+    /// Exhaustive-width round-trip property: for EVERY width 1..=8 (the
+    /// generic straddling path INT3/5/6/7 included — `gen_range(1, 8)` in
+    /// the older property never drew 8, and random widths under-sample the
+    /// odd ones) and deliberately non-word-aligned lengths, pack→unpack is
+    /// the identity, the packed word count is exactly `packed_words`, and
+    /// that count is tight (no slack word).
+    #[test]
+    fn property_roundtrip_every_width_and_unaligned_lengths() {
+        forall(Config::default().cases(64).name("pack all widths"), |rng| {
+            for bits in 1..=8u32 {
+                // Bias lengths toward boundary-straddling cases: exact
+                // word multiples ±1 and small random sizes.
+                let per_word = 32 / bits as usize; // codes in a full word (floor)
+                let candidates = [
+                    per_word.saturating_sub(1),
+                    per_word + 1,
+                    2 * per_word + 1,
+                    1 + rng.gen_below(97) as usize,
+                    rng.gen_below(300) as usize,
+                ];
+                let n = *rng.choose(&candidates);
+                let max = (1u32 << bits) - 1;
+                let codes: Vec<u8> =
+                    (0..n).map(|_| rng.gen_below(max + 1) as u8).collect();
+                let packed = pack(&codes, bits);
+                prop_assert!(
+                    packed.len() == packed_words(n, bits),
+                    "len {} != packed_words({n}, {bits}) = {}",
+                    packed.len(),
+                    packed_words(n, bits)
+                );
+                // Tightness: packed_words is the minimal word count.
+                prop_assert!(
+                    packed.len() as u64 * 32 >= n as u64 * bits as u64,
+                    "too few words at bits={bits} n={n}"
+                );
+                prop_assert!(
+                    (packed.len() as u64) * 32 < n as u64 * bits as u64 + 32,
+                    "slack word at bits={bits} n={n}"
+                );
+                let back = unpack(&packed, bits, n);
+                prop_assert!(back == codes, "roundtrip mismatch at bits={bits} n={n}");
+                // unpack_into on a caller buffer agrees with unpack.
+                let mut buf = vec![0xFFu8; n];
+                unpack_into(&packed, bits, &mut buf);
+                prop_assert!(buf == codes, "unpack_into mismatch at bits={bits} n={n}");
+            }
+            Ok(())
+        });
+    }
+
     #[test]
     fn fused_unpack_dequant_matches_two_step() {
         forall(Config::default().cases(200).name("fused dequant"), |rng| {

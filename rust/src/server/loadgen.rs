@@ -1,0 +1,316 @@
+//! Multi-connection load generator for the serving TCP stack.
+//!
+//! Drives `conns` concurrent client connections, each running a
+//! `turns`-turn conversation (streamed `generate` with `keep`, then
+//! `append`s into the same session; the final turn releases the session so
+//! a finished run leaves no parked state behind). Per-turn TTFT and
+//! latency are measured client-side; a trailing `stats` op collects the
+//! per-worker breakdown so worker utilization is part of the report.
+//!
+//! Shared by `examples/client.rs --load` and
+//! `benches/serve_throughput.rs` so the CLI load mode and the benchmark
+//! measure exactly the same workload.
+
+use crate::bench::percentile;
+use crate::coordinator::{CompressionSpec, CoordinatorConfig, Op, Scheduler};
+use crate::model::StubEngine;
+use crate::server::{Client, RequestBuilder};
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+use std::time::{Duration, Instant};
+
+/// Boot a sharded StubEngine serving stack — scheduler + `workers` engine
+/// workers (each a [`StubEngine::fork`] of `base`) + a TCP listener on an
+/// ephemeral local port — run `f` against its socket address on a driver
+/// thread, and drain the runtime once `f` returns. The one boot contract
+/// shared by `examples/client.rs --load`, `benches/serve_throughput.rs`
+/// and the concurrency suite.
+///
+/// Known limitation (accepted for test/bench processes):
+/// [`crate::server::serve`]'s accept loop has no shutdown signal, so each
+/// invocation leaves one
+/// listener thread blocked in `accept` (pinning its ephemeral port) until
+/// process exit. Nothing dials the stale address after return; graceful
+/// listener shutdown is a ROADMAP item.
+pub fn with_stub_stack<T, F>(
+    workers: usize,
+    cfg: CoordinatorConfig,
+    base: StubEngine,
+    f: F,
+) -> crate::Result<T>
+where
+    T: Send + 'static,
+    F: FnOnce(String) -> T + Send + 'static,
+{
+    let scheduler = Scheduler::start(workers, cfg, move |w| Ok(base.fork(w)))?;
+    let (tx, rx) = std::sync::mpsc::channel::<Op>();
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    std::thread::spawn(move || {
+        let _ = crate::server::serve(listener, tx);
+    });
+    let driver = std::thread::spawn(move || f(addr));
+    scheduler.run_until(rx, || driver.is_finished());
+    match driver.join() {
+        Ok(v) => Ok(v),
+        // Preserve assertion panics from test closures.
+        Err(panic) => std::panic::resume_unwind(panic),
+    }
+}
+
+/// Workload shape.
+#[derive(Debug, Clone)]
+pub struct LoadConfig {
+    /// Concurrent client connections.
+    pub conns: usize,
+    /// Turns per connection (turn 1 is `generate`, the rest `append`).
+    pub turns: usize,
+    /// Token budget per turn.
+    pub max_new: usize,
+    /// Prompt tokens per turn.
+    pub prompt_len: usize,
+    /// Compression requested for each conversation.
+    pub spec: CompressionSpec,
+    /// Master seed; each connection derives an independent prompt stream.
+    pub seed: u64,
+    /// Exclusive upper bound for synthesized prompt token ids.
+    pub vocab: i64,
+}
+
+impl Default for LoadConfig {
+    fn default() -> Self {
+        Self {
+            conns: 8,
+            turns: 2,
+            max_new: 16,
+            prompt_len: 6,
+            spec: CompressionSpec::mikv(0.25, "int4"),
+            seed: 0x10AD,
+            vocab: 32,
+        }
+    }
+}
+
+/// One worker's share of the generated load.
+#[derive(Debug, Clone)]
+pub struct WorkerUtil {
+    pub worker: usize,
+    pub completed: usize,
+    pub generated_tokens: usize,
+    /// Fraction of all generated tokens this worker produced.
+    pub share: f64,
+}
+
+/// Aggregated result of one load run.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// Turns that ended with `done`.
+    pub turns_ok: usize,
+    /// Turns that ended with a wire `error`.
+    pub turns_err: usize,
+    /// Tokens streamed across all turns.
+    pub tokens: usize,
+    /// Wall-clock time from first submit to last terminal event.
+    pub wall: Duration,
+    /// `tokens / wall`.
+    pub tokens_per_sec: f64,
+    pub ttft_p50: Duration,
+    pub ttft_p99: Duration,
+    pub latency_p50: Duration,
+    pub latency_p99: Duration,
+    /// Per-worker utilization from the trailing `stats` op (empty if the
+    /// server predates per-worker rows).
+    pub per_worker: Vec<WorkerUtil>,
+}
+
+/// Per-connection raw samples.
+struct ConnResult {
+    ttfts: Vec<Duration>,
+    latencies: Vec<Duration>,
+    tokens: usize,
+    ok: usize,
+    err: usize,
+}
+
+/// Run the workload against a serving endpoint and aggregate the report.
+pub fn run_load(addr: &str, cfg: &LoadConfig) -> crate::Result<LoadReport> {
+    anyhow::ensure!(cfg.conns >= 1 && cfg.turns >= 1, "empty load config");
+    // Per-worker counters are server-lifetime cumulative; snapshot before
+    // the run so the report attributes only THIS run's tokens (matters
+    // when targeting a long-running `--addr` server).
+    let baseline = worker_counters(addr);
+    let started = Instant::now();
+    let mut handles = Vec::with_capacity(cfg.conns);
+    for conn in 0..cfg.conns {
+        let addr = addr.to_string();
+        let cfg = cfg.clone();
+        handles.push(std::thread::spawn(move || drive_conn(&addr, &cfg, conn)));
+    }
+    let mut ttfts = Vec::new();
+    let mut latencies = Vec::new();
+    let (mut tokens, mut ok, mut err) = (0usize, 0usize, 0usize);
+    for handle in handles {
+        let r = handle.join().expect("load connection panicked")?;
+        ttfts.extend(r.ttfts);
+        latencies.extend(r.latencies);
+        tokens += r.tokens;
+        ok += r.ok;
+        err += r.err;
+    }
+    let wall = started.elapsed();
+    ttfts.sort_unstable();
+    latencies.sort_unstable();
+
+    // Trailing stats op: per-worker utilization, as the delta against the
+    // pre-run baseline. Decoration only — any failure (server gone, old
+    // server without per-worker rows) degrades to an empty breakdown
+    // instead of discarding the measured run.
+    let per_worker = worker_utilization(addr, &baseline);
+
+    Ok(LoadReport {
+        turns_ok: ok,
+        turns_err: err,
+        tokens,
+        wall,
+        tokens_per_sec: tokens as f64 / wall.as_secs_f64().max(1e-9),
+        ttft_p50: percentile(&ttfts, 0.5),
+        ttft_p99: percentile(&ttfts, 0.99),
+        latency_p50: percentile(&latencies, 0.5),
+        latency_p99: percentile(&latencies, 0.99),
+        per_worker,
+    })
+}
+
+/// Best-effort snapshot of the server's cumulative per-worker counters:
+/// `worker → (completed, generated_tokens)`. Empty on any failure.
+fn worker_counters(addr: &str) -> std::collections::HashMap<usize, (usize, usize)> {
+    let mut out = std::collections::HashMap::new();
+    let mut client = match Client::connect(addr) {
+        Ok(c) => c,
+        Err(_) => return out,
+    };
+    let id = client.next_id();
+    if client.submit(&RequestBuilder::stats(id)).is_err() {
+        return out;
+    }
+    let stats = match client.read_turn(id) {
+        Ok((_, v)) => v,
+        Err(_) => return out,
+    };
+    if let Ok(rows) = stats.field_arr("workers") {
+        for row in rows {
+            out.insert(
+                row.field_i64("worker").unwrap_or(0).max(0) as usize,
+                (
+                    row.field_i64("completed").unwrap_or(0).max(0) as usize,
+                    row.field_i64("generated_tokens").unwrap_or(0).max(0) as usize,
+                ),
+            );
+        }
+    }
+    out
+}
+
+/// Best-effort per-worker utilization readback as the delta against the
+/// pre-run `baseline` counters (empty on any failure).
+fn worker_utilization(
+    addr: &str,
+    baseline: &std::collections::HashMap<usize, (usize, usize)>,
+) -> Vec<WorkerUtil> {
+    let after = worker_counters(addr);
+    let mut rows: Vec<(usize, usize, usize)> = after
+        .into_iter()
+        .map(|(worker, (completed, generated))| {
+            let (c0, g0) = baseline.get(&worker).copied().unwrap_or((0, 0));
+            (
+                worker,
+                completed.saturating_sub(c0),
+                generated.saturating_sub(g0),
+            )
+        })
+        .collect();
+    rows.sort_unstable_by_key(|(worker, ..)| *worker);
+    let total: usize = rows.iter().map(|(.., generated)| *generated).sum();
+    rows.into_iter()
+        .map(|(worker, completed, generated)| WorkerUtil {
+            worker,
+            completed,
+            generated_tokens: generated,
+            share: if total > 0 {
+                generated as f64 / total as f64
+            } else {
+                0.0
+            },
+        })
+        .collect()
+}
+
+/// One connection's conversation loop.
+fn drive_conn(addr: &str, cfg: &LoadConfig, conn: usize) -> crate::Result<ConnResult> {
+    let mut client = Client::connect(addr)?;
+    let mut rng = Pcg32::new(cfg.seed ^ ((conn as u64 + 1) << 20));
+    let mut session: Option<u64> = None;
+    let mut out = ConnResult {
+        ttfts: Vec::new(),
+        latencies: Vec::new(),
+        tokens: 0,
+        ok: 0,
+        err: 0,
+    };
+    let vocab = cfg.vocab.max(2);
+    for turn in 0..cfg.turns {
+        let id = client.next_id();
+        // The final turn drops `keep`, so a completed conversation leaves
+        // nothing parked (no session leak from a finished load run).
+        let keep = turn + 1 < cfg.turns;
+        let prompt: Vec<i64> = (0..cfg.prompt_len.max(1))
+            .map(|_| rng.gen_range(1, vocab - 1))
+            .collect();
+        let builder = match session {
+            Some(sid) => RequestBuilder::append(id, sid)
+                .prompt(&prompt)
+                .max_new(cfg.max_new)
+                .keep(keep),
+            None => RequestBuilder::generate(id)
+                .prompt(&prompt)
+                .max_new(cfg.max_new)
+                .keep(keep)
+                .compression(cfg.spec.clone()),
+        };
+        let t0 = Instant::now();
+        client.submit(&builder)?;
+        let mut first: Option<Duration> = None;
+        loop {
+            let v = client.recv()?;
+            if v.field("id").ok().and_then(Json::as_i64) != Some(id as i64) {
+                continue; // stale line from an earlier turn
+            }
+            match v.field_str("event").unwrap_or("") {
+                "token" => {
+                    if first.is_none() {
+                        first = Some(t0.elapsed());
+                    }
+                    out.tokens += 1;
+                }
+                "done" => {
+                    out.ok += 1;
+                    session = v
+                        .field("session")
+                        .ok()
+                        .and_then(Json::as_i64)
+                        .map(|s| s as u64);
+                    break;
+                }
+                "error" => {
+                    out.err += 1;
+                    session = None;
+                    break;
+                }
+                other => anyhow::bail!("unexpected event '{other}' for turn {id}: {v}"),
+            }
+        }
+        out.latencies.push(t0.elapsed());
+        out.ttfts.push(first.unwrap_or_else(|| t0.elapsed()));
+    }
+    Ok(out)
+}

@@ -7,13 +7,18 @@
 //!   one-shot shape and a [`RequestBuilder`] so clients never hand-roll
 //!   protocol JSON. See the [`proto`] module docs for the full grammar.
 //! * [`tcp`] — threaded listener: one reader thread per connection
-//!   forwarding decoded ops to the coordinator channel, one writer thread
-//!   acting as the connection's event sink; plus a blocking
-//!   [`tcp::Client`] with streaming helpers.
+//!   forwarding decoded ops to the scheduler channel, one writer thread
+//!   acting as the connection's event sink (worker results fan back in
+//!   over it); plus a blocking [`tcp::Client`] with streaming helpers.
+//! * [`loadgen`] — multi-connection load generator (M connections × K
+//!   turns) shared by `examples/client.rs --load` and the
+//!   `serve_throughput` bench.
 
+pub mod loadgen;
 pub mod proto;
 pub mod tcp;
 
+pub use loadgen::{run_load, LoadConfig, LoadReport};
 pub use proto::{
     decode_line, encode_event, encode_legacy_response, DecodeError, RequestBuilder, WireOp,
     WireRequest,

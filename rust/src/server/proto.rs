@@ -421,6 +421,24 @@ pub fn encode_event(ev: &ServeEvent) -> String {
             o.set("pool_outstanding_bytes", snapshot.pool.outstanding_bytes);
             o.set("pool_hits", snapshot.pool.hits as i64);
             o.set("pool_misses", snapshot.pool.misses as i64);
+            // Per-worker rows of the sharded runtime (one row with
+            // worker = 0 on a single-worker deployment).
+            let workers: Vec<Json> = snapshot
+                .workers
+                .iter()
+                .map(|w| {
+                    let mut wo = JsonObj::new();
+                    wo.set("worker", w.worker);
+                    wo.set("active", w.active);
+                    wo.set("waiting", w.waiting);
+                    wo.set("parked_sessions", w.parked_sessions);
+                    wo.set("completed", w.completed);
+                    wo.set("generated_tokens", w.generated_tokens);
+                    wo.set("throughput_tps", w.throughput_tps);
+                    Json::Obj(wo)
+                })
+                .collect();
+            o.set("workers", Json::Arr(workers));
         }
         ServeEvent::CancelResult { id, target, found } => {
             o.set("event", "cancelled");
@@ -920,6 +938,30 @@ mod tests {
         let v = Json::parse(&line).unwrap();
         assert_eq!(v.field_str("event").unwrap(), "stats");
         assert_eq!(v.field_i64("pool_free_blocks").unwrap(), 0);
+        assert_eq!(v.field_arr("workers").unwrap().len(), 0);
+
+        // per-worker rows of the sharded runtime encode under "workers"
+        let snapshot = StatsSnapshot {
+            completed: 3,
+            workers: vec![crate::coordinator::WorkerStats {
+                worker: 1,
+                active: 2,
+                waiting: 0,
+                parked_sessions: 1,
+                completed: 3,
+                generated_tokens: 12,
+                throughput_tps: 4.5,
+            }],
+            ..StatsSnapshot::default()
+        };
+        let line = encode_event(&ServeEvent::Stats { id: 8, snapshot });
+        let v = Json::parse(&line).unwrap();
+        let rows = v.field_arr("workers").unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].field_i64("worker").unwrap(), 1);
+        assert_eq!(rows[0].field_i64("completed").unwrap(), 3);
+        assert_eq!(rows[0].field_i64("generated_tokens").unwrap(), 12);
+        assert!((rows[0].field_f64("throughput_tps").unwrap() - 4.5).abs() < 1e-9);
 
         let line = encode_event(&ServeEvent::CancelResult {
             id: 7,

@@ -1,20 +1,24 @@
-//! Threaded TCP front-end over the coordinator.
+//! Threaded TCP front-end over the serving runtime.
 //!
 //! One listener thread accepts connections; each connection gets a reader
 //! thread (decode one [`proto::WireOp`] per line → forward to the
-//! coordinator's op channel) and a writer thread that is the connection's
+//! scheduler's op channel) and a writer thread that is the connection's
 //! **event sink**: every in-flight request on the connection owns a
 //! [`LineSink`] that encodes its [`ServeEvent`]s (token/done/error/stats/
-//! cancelled) into JSON lines and pushes them onto the writer channel, so
-//! streamed events from concurrent requests interleave but each line stays
-//! atomic and per-request ordering is preserved. The engine itself stays
-//! on the coordinator thread (PJRT handles are not `Send`).
+//! cancelled) into JSON lines and pushes them onto the writer channel. In
+//! the sharded runtime a connection's requests may be decoding on
+//! different workers concurrently; their results all fan back in over this
+//! one writer channel, so streamed events from concurrent requests
+//! interleave but each line stays atomic and per-request ordering is
+//! preserved (a request lives on exactly one worker). The engines
+//! themselves stay on their worker threads (PJRT handles are not `Send`).
 //!
 //! Request ids are namespaced per connection before they reach the
-//! coordinator (`conn_id << 32 | id`) and rewritten back to the client's
+//! scheduler (`conn_id << 32 | id`) and rewritten back to the client's
 //! ids on the way out, so concurrent clients can't observe or cancel each
-//! other's requests. Session ids are coordinator-global by design: a kept
-//! session may be continued from a different connection.
+//! other's requests. Session ids are runtime-global by design: a kept
+//! session may be continued from a different connection (it routes to the
+//! owning worker either way).
 
 use crate::coordinator::{CompressionSpec, EventSink, Op, Request, Response, ServeEvent};
 use crate::server::proto::{self, RequestBuilder, WireOp};

@@ -107,6 +107,21 @@ impl Args {
             .ok_or_else(|| CliError::Missing(name.to_string()))
     }
 
+    /// Positive-count option with default (worker/connection/turn counts):
+    /// parses as `usize` and rejects 0 with a readable error instead of
+    /// letting a `--workers 0` panic deep inside the runtime.
+    pub fn get_nonzero(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        let v = self.get::<usize>(name, default)?;
+        if v == 0 {
+            return Err(CliError::BadValue {
+                key: name.to_string(),
+                value: "0".to_string(),
+                ty: "positive integer",
+            });
+        }
+        Ok(v)
+    }
+
     /// Typed option with default.
     pub fn get<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T, CliError> {
         match self.opts.get(name) {
@@ -186,6 +201,20 @@ mod tests {
             Err(CliError::BadValue { .. })
         ));
         assert!(matches!(a.require_str("missing"), Err(CliError::Missing(_))));
+    }
+
+    #[test]
+    fn nonzero_option() {
+        assert_eq!(argv("--workers 4").get_nonzero("workers", 1).unwrap(), 4);
+        assert_eq!(argv("").get_nonzero("workers", 2).unwrap(), 2);
+        assert!(matches!(
+            argv("--workers 0").get_nonzero("workers", 1),
+            Err(CliError::BadValue { .. })
+        ));
+        assert!(matches!(
+            argv("--workers -3").get_nonzero("workers", 1),
+            Err(CliError::BadValue { .. })
+        ));
     }
 
     #[test]

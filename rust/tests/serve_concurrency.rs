@@ -1,0 +1,460 @@
+//! Deterministic concurrency suite for the sharded serving runtime.
+//!
+//! Drives the full stack — scheduler, 4 engine workers, TCP wire protocol
+//! — with multiple simultaneous client connections interleaving
+//! generate/append/cancel on the deterministic `StubEngine`. Locks the
+//! sharding contract:
+//!
+//! * **no session leaks** — after every conversation releases its session
+//!   (final turn without `keep`, or TTL sweep), the parked registries and
+//!   the buffer pools return to baseline (0 parked bytes, 0 outstanding
+//!   blocks);
+//! * **append-after-park affinity** — a follow-up `append` always finds
+//!   the worker holding that session's parked cache (occupancy carries
+//!   over turn after turn for every session, across all 4 workers);
+//! * **stream isolation** — concurrent in-flight turns on one connection
+//!   interleave at the line level, but each request's token stream stays
+//!   contiguous, in order, and exactly matches its terminal `done`.
+//!
+//! Everything is event-synchronized (blocking reads on real sockets) with
+//! seeded RNG only — no sleeps-as-synchronization. The stub's
+//! `decode_delay` is used solely as a *throttle* (it bounds how fast an
+//! in-flight turn can finish) so that cancel/placement races are resolved
+//! by protocol events, never by timing guesses.
+
+use mikv::coordinator::{CompressionSpec, CoordinatorConfig};
+use mikv::model::StubEngine;
+use mikv::server::loadgen::with_stub_stack;
+use mikv::server::{Client, RequestBuilder};
+use mikv::util::json::Json;
+use mikv::util::rng::Pcg32;
+use std::collections::HashMap;
+use std::time::Duration;
+
+const VOCAB: i64 = 32; // StubEngine::test_dims vocab
+
+/// Boot a sharded stub stack and run `body` against its address; the
+/// runtime drains when `body` returns (assertion panics propagate).
+fn on_stack(
+    workers: usize,
+    max_seq: usize,
+    cfg: CoordinatorConfig,
+    delay: Duration,
+    body: impl FnOnce(String) + Send + 'static,
+) {
+    let mut base = StubEngine::new(StubEngine::test_dims(max_seq));
+    base.decode_delay = delay;
+    with_stub_stack(workers, cfg, base, body).expect("stack boot");
+}
+
+/// Fetch a merged stats snapshot over the wire.
+fn stats(addr: &str) -> Json {
+    let mut c = Client::connect(addr).unwrap();
+    let id = c.next_id();
+    c.submit(&RequestBuilder::stats(id)).unwrap();
+    let (_, v) = c.read_turn(id).unwrap();
+    assert_eq!(v.field_str("event").unwrap(), "stats", "{v}");
+    v
+}
+
+/// The deterministic stub token rule: prefill token is the prompt sum mod
+/// vocab, every decode token is predecessor + 1 mod vocab.
+fn expect_generate_tokens(prompt: &[i64], n: usize) -> Vec<i64> {
+    let mut toks = Vec::with_capacity(n);
+    let mut t = prompt.iter().sum::<i64>().rem_euclid(VOCAB);
+    for _ in 0..n {
+        toks.push(t);
+        t = (t + 1).rem_euclid(VOCAB);
+    }
+    toks
+}
+
+/// The soak: 6 concurrent connections × 3-turn conversations against 4
+/// workers. Asserts per-turn determinism, cross-turn cache carry-over
+/// (affinity), and a leak-free end state.
+#[test]
+fn concurrent_conversations_over_four_workers_leave_no_leaks() {
+    on_stack(4, 128, CoordinatorConfig::default(), Duration::ZERO, run_soak);
+}
+
+fn run_soak(stack_addr: String) {
+    let conns = 6usize;
+    let turns = 3usize;
+    let mut drivers = Vec::new();
+    for conn in 0..conns {
+        let addr = stack_addr.clone();
+        drivers.push(std::thread::spawn(move || {
+            let mut rng = Pcg32::new(0xC0C0 ^ ((conn as u64 + 1) << 8));
+            let mut client = Client::connect(&addr).unwrap();
+            let mut session: Option<u64> = None;
+            let mut last_occ = 0i64;
+            for turn in 0..turns {
+                let id = client.next_id();
+                let keep = turn + 1 < turns; // final turn releases the session
+                let prompt: Vec<i64> = (0..(2 + rng.gen_below(4) as usize))
+                    .map(|_| rng.gen_range(1, VOCAB - 1))
+                    .collect();
+                let max_new = 2 + rng.gen_below(4) as usize;
+                let builder = match session {
+                    Some(sid) => RequestBuilder::append(id, sid)
+                        .prompt(&prompt)
+                        .max_new(max_new)
+                        .keep(keep),
+                    None => RequestBuilder::generate(id)
+                        .prompt(&prompt)
+                        .max_new(max_new)
+                        .keep(keep)
+                        .compression(CompressionSpec::mikv(0.5, "int4")),
+                };
+                client.submit(&builder).unwrap();
+                let (streamed, done) = client.read_turn(id).unwrap();
+                assert_eq!(done.field_str("event").unwrap(), "done", "{done}");
+                let final_tokens: Vec<i64> = done
+                    .field_arr("tokens")
+                    .unwrap()
+                    .iter()
+                    .filter_map(Json::as_i64)
+                    .collect();
+                assert_eq!(streamed, final_tokens, "stream == done tokens");
+                assert_eq!(streamed.len(), max_new, "budget honoured");
+                if turn == 0 {
+                    // Exact deterministic content, independent of which
+                    // worker (and which tensor seed) served the turn.
+                    assert_eq!(streamed, expect_generate_tokens(&prompt, max_new));
+                }
+                let occ = done.field_i64("hi_slots").unwrap()
+                    + done.field_i64("lo_slots").unwrap();
+                assert!(
+                    occ > last_occ,
+                    "occupancy carries across turns: {last_occ} -> {occ}"
+                );
+                last_occ = occ;
+                match done.field("session") {
+                    Ok(s) if keep => {
+                        let sid = s.as_i64().unwrap() as u64;
+                        if let Some(prev) = session {
+                            assert_eq!(prev, sid, "session id stable");
+                        }
+                        session = Some(sid);
+                    }
+                    _ => {
+                        assert!(!keep, "kept turn must return a session id");
+                        session = None;
+                    }
+                }
+            }
+        }));
+    }
+    for d in drivers {
+        d.join().expect("client connection failed");
+    }
+
+    // End state: every conversation released its session → nothing parked,
+    // every pooled shadow block returned, all turns accounted for.
+    let v = stats(&stack_addr);
+    assert_eq!(v.field_i64("completed").unwrap(), (conns * turns) as i64);
+    assert_eq!(v.field_i64("parked_sessions").unwrap(), 0, "session leak");
+    assert_eq!(v.field_i64("parked_bytes").unwrap(), 0, "parked bytes leak");
+    assert_eq!(
+        v.field_i64("pool_outstanding_blocks").unwrap(),
+        0,
+        "pooled blocks leak"
+    );
+    assert_eq!(v.field_i64("active").unwrap(), 0);
+    assert_eq!(v.field_i64("waiting").unwrap(), 0);
+    // per-worker rows are present and consistent with the aggregate
+    let rows = v.field_arr("workers").unwrap();
+    assert_eq!(rows.len(), 4);
+    let sum: i64 = rows
+        .iter()
+        .map(|r| r.field_i64("completed").unwrap())
+        .sum();
+    assert_eq!(sum, (conns * turns) as i64);
+}
+
+/// Eight sessions created concurrently spread across all 4 workers
+/// (deterministic least-loaded placement), and every `append` lands on the
+/// worker that parked the session — across workers, proven by the session
+/// id arithmetic, the per-worker parked counts, and the cache carry-over.
+#[test]
+fn appends_land_on_the_owning_worker_across_all_workers() {
+    // The 2 ms per-session decode cost is a throttle: 8 concurrent turns
+    // each need >= 3 decode steps, so all 8 are still in flight while the
+    // scheduler places them (placement sees the true in-flight loads).
+    on_stack(
+        4,
+        128,
+        CoordinatorConfig::default(),
+        Duration::from_millis(2),
+        run_affinity,
+    );
+}
+
+fn run_affinity(stack_addr: String) {
+    let sessions = 8usize;
+    let mut client = Client::connect(&stack_addr).unwrap();
+
+    // Submit all generates before reading any reply → concurrent in
+    // flight, placement = least-loaded with lowest-index ties: 2 each.
+    let mut ids = Vec::new();
+    for s in 0..sessions {
+        let id = client.next_id();
+        ids.push(id);
+        client
+            .submit(
+                &RequestBuilder::generate(id)
+                    .prompt(&[1 + s as i64, 2, 3])
+                    .max_new(4)
+                    .keep(true)
+                    .compression(CompressionSpec::mikv(0.5, "int4")),
+            )
+            .unwrap();
+    }
+    // Collect every turn's done (token events interleave across ids; each
+    // id's stream must stay contiguous).
+    let mut streams: HashMap<i64, Vec<i64>> = HashMap::new();
+    let mut dones: HashMap<i64, Json> = HashMap::new();
+    while dones.len() < sessions {
+        let v = client.recv().unwrap();
+        let id = v.field_i64("id").unwrap();
+        match v.field_str("event").unwrap() {
+            "token" => {
+                let stream = streams.entry(id).or_default();
+                assert_eq!(
+                    v.field_i64("i").unwrap(),
+                    stream.len() as i64,
+                    "indices contiguous per turn"
+                );
+                stream.push(v.field_i64("t").unwrap());
+            }
+            "done" => {
+                dones.insert(id, v);
+            }
+            other => panic!("unexpected event {other}: {v}"),
+        }
+    }
+
+    let mut owners: HashMap<usize, usize> = HashMap::new();
+    let mut sids = Vec::new();
+    for id in &ids {
+        let done = &dones[&(*id as i64)];
+        let tokens: Vec<i64> = done
+            .field_arr("tokens")
+            .unwrap()
+            .iter()
+            .filter_map(Json::as_i64)
+            .collect();
+        assert_eq!(&streams[&(*id as i64)], &tokens, "stream == done");
+        let sid = done.field_i64("session").unwrap() as u64;
+        sids.push(sid);
+        *owners
+            .entry(mikv::coordinator::worker_of_session(sid, 4))
+            .or_default() += 1;
+    }
+    let mut unique = sids.clone();
+    unique.sort_unstable();
+    unique.dedup();
+    assert_eq!(unique.len(), sessions, "distinct session ids: {sids:?}");
+    assert_eq!(owners.len(), 4, "all 4 workers own sessions: {owners:?}");
+    for (&w, &n) in &owners {
+        assert_eq!(n, 2, "worker {w} owns {n} sessions (want 2): {owners:?}");
+    }
+    // Per-worker parked counts agree with the id arithmetic.
+    let v = stats(&stack_addr);
+    assert_eq!(v.field_i64("parked_sessions").unwrap(), sessions as i64);
+    for row in v.field_arr("workers").unwrap() {
+        assert_eq!(
+            row.field_i64("parked_sessions").unwrap(),
+            2,
+            "parked spread: {v}"
+        );
+    }
+
+    // Append to every session: must find the parked cache on its owning
+    // worker (a misroute would answer session_not_found) and grow it.
+    for (id, sid) in ids.iter().zip(&sids) {
+        let done = &dones[&(*id as i64)];
+        let occ1 = done.field_i64("hi_slots").unwrap() + done.field_i64("lo_slots").unwrap();
+        let aid = client.next_id();
+        client
+            .submit(
+                &RequestBuilder::append(aid, *sid)
+                    .prompt(&[5, 6])
+                    .max_new(2)
+                    .keep(false), // release on completion
+            )
+            .unwrap();
+        let (streamed, done2) = client.read_turn(aid).unwrap();
+        assert_eq!(done2.field_str("event").unwrap(), "done", "{done2}");
+        assert_eq!(done2.field_i64("session").unwrap() as u64, *sid);
+        assert_eq!(streamed.len(), 2);
+        let occ2 =
+            done2.field_i64("hi_slots").unwrap() + done2.field_i64("lo_slots").unwrap();
+        assert!(occ2 > occ1, "cache carried over on append: {occ1} -> {occ2}");
+    }
+
+    // All sessions released.
+    let v = stats(&stack_addr);
+    assert_eq!(v.field_i64("parked_sessions").unwrap(), 0);
+    assert_eq!(v.field_i64("pool_outstanding_blocks").unwrap(), 0);
+}
+
+/// TTL sweep: with a zero TTL a kept session is dropped by the owning
+/// worker's next sweep (which runs in the same iteration that parked it),
+/// its pooled blocks return to baseline, and a follow-up `append` answers
+/// `session_not_found` — the registry cannot leak host bytes.
+#[test]
+fn ttl_sweep_returns_parked_bytes_to_baseline() {
+    let cfg = CoordinatorConfig {
+        session_ttl: Duration::ZERO,
+        ..CoordinatorConfig::default()
+    };
+    on_stack(2, 64, cfg, Duration::ZERO, run_ttl_sweep);
+}
+
+fn run_ttl_sweep(stack_addr: String) {
+    let mut client = Client::connect(&stack_addr).unwrap();
+
+    let id = client.next_id();
+    client
+        .submit(
+            &RequestBuilder::generate(id)
+                .prompt(&[1, 2, 3])
+                .max_new(3)
+                .keep(true)
+                .compression(CompressionSpec::mikv(0.5, "int4")),
+        )
+        .unwrap();
+    let (_, done) = client.read_turn(id).unwrap();
+    assert_eq!(done.field_str("event").unwrap(), "done", "{done}");
+    let sid = done.field_i64("session").unwrap() as u64;
+
+    // The sweep in the parking iteration already dropped it (TTL = 0).
+    let aid = client.next_id();
+    client
+        .submit(&RequestBuilder::append(aid, sid).prompt(&[4]).max_new(1))
+        .unwrap();
+    let (_, term) = client.read_turn(aid).unwrap();
+    assert_eq!(term.field_str("event").unwrap(), "error", "{term}");
+    assert_eq!(term.field_str("code").unwrap(), "session_not_found");
+
+    let v = stats(&stack_addr);
+    assert_eq!(v.field_i64("parked_sessions").unwrap(), 0);
+    assert_eq!(v.field_i64("parked_bytes").unwrap(), 0);
+    assert_eq!(v.field_i64("pool_outstanding_blocks").unwrap(), 0);
+}
+
+/// Cancel across the sharded runtime: a long in-flight turn (throttled by
+/// the stub's decode delay, synchronized by its first streamed token) is
+/// found and cancelled by the broadcast; a second concurrent short turn on
+/// the same connection keeps its own contiguous stream throughout; a
+/// cancel for an unknown id folds into exactly one `found: false` answer.
+#[test]
+fn cancel_broadcast_finds_inflight_turn_and_streams_stay_isolated() {
+    on_stack(
+        4,
+        2048,
+        CoordinatorConfig::default(),
+        Duration::from_millis(2),
+        run_cancel_broadcast,
+    );
+}
+
+fn run_cancel_broadcast(stack_addr: String) {
+    let mut client = Client::connect(&stack_addr).unwrap();
+
+    // Long turn A (even via the cache-full path it would take ~4 s to end
+    // naturally — the throttle guarantees the millisecond-scale cancel
+    // beats it with orders-of-magnitude margin) and short turn B,
+    // concurrently.
+    let id_a = client.next_id();
+    client
+        .submit(
+            &RequestBuilder::generate(id_a)
+                .prompt(&[9, 9, 9])
+                .max_new(100_000)
+                .compression(CompressionSpec::mikv(0.25, "int4")),
+        )
+        .unwrap();
+    let id_b = client.next_id();
+    client
+        .submit(
+            &RequestBuilder::generate(id_b)
+                .prompt(&[1, 2])
+                .max_new(3)
+                .compression(CompressionSpec::full()),
+        )
+        .unwrap();
+
+    // Wait for A's first token (proves A is decoding), collecting whatever
+    // B interleaves meanwhile.
+    let mut b_stream = Vec::new();
+    let mut b_done: Option<Json> = None;
+    let mut a_tokens = 0usize;
+    while a_tokens == 0 {
+        let v = client.recv().unwrap();
+        let id = v.field_i64("id").unwrap();
+        match (id, v.field_str("event").unwrap()) {
+            (i, "token") if i == id_a as i64 => a_tokens += 1,
+            (i, "token") if i == id_b as i64 => {
+                assert_eq!(v.field_i64("i").unwrap(), b_stream.len() as i64);
+                b_stream.push(v.field_i64("t").unwrap());
+            }
+            (i, "done") if i == id_b as i64 => b_done = Some(v),
+            other => panic!("unexpected {other:?}: {v}"),
+        }
+    }
+
+    // Cancel A; keep draining A tokens / B events until both terminals.
+    let id_c = client.next_id();
+    client.submit(&RequestBuilder::cancel(id_c, id_a)).unwrap();
+    let mut a_done: Option<Json> = None;
+    let mut cancel_answers = 0usize;
+    while a_done.is_none() || b_done.is_none() || cancel_answers == 0 {
+        let v = client.recv().unwrap();
+        let id = v.field_i64("id").unwrap();
+        match (id, v.field_str("event").unwrap()) {
+            (i, "token") if i == id_a as i64 => a_tokens += 1,
+            (i, "done") if i == id_a as i64 => a_done = Some(v),
+            (i, "token") if i == id_b as i64 => {
+                assert_eq!(v.field_i64("i").unwrap(), b_stream.len() as i64);
+                b_stream.push(v.field_i64("t").unwrap());
+            }
+            (i, "done") if i == id_b as i64 => b_done = Some(v),
+            (i, "cancelled") if i == id_c as i64 => {
+                cancel_answers += 1;
+                let found = v.field("found").unwrap() == &Json::Bool(true);
+                assert!(found, "in-flight turn must be found: {v}");
+            }
+            other => panic!("unexpected {other:?}: {v}"),
+        }
+    }
+    let a_done = a_done.unwrap();
+    assert_eq!(
+        a_done.field("cancelled").unwrap(),
+        &Json::Bool(true),
+        "{a_done}"
+    );
+    let partial = a_done.field_arr("tokens").unwrap().len();
+    assert!(partial >= 1 && partial < 100_000, "partial tokens: {partial}");
+    assert_eq!(cancel_answers, 1, "one aggregated cancel answer");
+
+    // B was untouched: full budget, contiguous stream matching its done.
+    let b_done = b_done.unwrap();
+    let b_tokens: Vec<i64> = b_done
+        .field_arr("tokens")
+        .unwrap()
+        .iter()
+        .filter_map(Json::as_i64)
+        .collect();
+    assert_eq!(b_stream, b_tokens);
+    assert_eq!(b_tokens.len(), 3);
+    assert_eq!(b_tokens, expect_generate_tokens(&[1, 2], 3));
+
+    // Unknown-target cancel: exactly one aggregated found=false answer.
+    let id_u = client.next_id();
+    client.submit(&RequestBuilder::cancel(id_u, 424242)).unwrap();
+    let (_, v) = client.read_turn(id_u).unwrap();
+    assert_eq!(v.field_str("event").unwrap(), "cancelled");
+    assert_eq!(v.field("found").unwrap(), &Json::Bool(false));
+}
