@@ -1,0 +1,307 @@
+//! Decode-step input-assembly microbench: delta vs full rescatter
+//! (`BENCH_decode.json`).
+//!
+//! Drives `model::assembly::assemble_mikv` — the exact code path
+//! `Engine::decode_chunk_mikv` runs — on real `CacheManager`s fed
+//! synthetic prefill/decode tensors, so it needs no compiled artifacts and
+//! runs anywhere (including CI smoke mode). For every `b × seq` point it
+//! measures, per steady-state step:
+//!
+//! * **ns/step** and **bytes-copied/step** on the *delta* path (dirty-row
+//!   copies into the persistent arena) vs a forced *full rescatter*
+//!   (`arena.invalidate()` before each assembly) at the same sequence
+//!   length — the interleaved schedule keeps the two paths at identical
+//!   occupancy so the ratio is apples-to-apples;
+//! * **heap allocations/step**, via a counting global allocator — the
+//!   zero-allocation acceptance gate: a steady-state assembly must not
+//!   allocate at all, on either path.
+//!
+//! ```sh
+//! cargo bench --bench perf_decode_assembly             # full grid
+//! cargo bench --bench perf_decode_assembly -- --smoke  # CI grid
+//! ```
+//!
+//! Outputs: `bench_out/perf_decode_assembly.{md,json}` and
+//! `BENCH_decode.json` at the repo root (machine-readable; schema in
+//! EXPERIMENTS.md §Decode assembly).
+
+use mikv::bench::{Cell, Table};
+use mikv::model::assembly::{assemble_mikv, StepArena};
+use mikv::model::{CacheMode, Session, SessionCache};
+use mikv::quant::Precision;
+use mikv::runtime::ModelDims;
+use mikv::util::cli::Args;
+use mikv::util::json::{Json, JsonObj};
+use mikv::util::rng::Pcg32;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// Counts every heap allocation so the bench can assert the assembly path
+/// makes none in steady state.
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocs() -> u64 {
+    ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Llama-flavoured small dims: 4 planes, d_head 32, group d/2.
+fn dims(max_seq: usize) -> ModelDims {
+    ModelDims {
+        vocab: 64,
+        d_model: 128,
+        n_layers: 2,
+        n_q_heads: 4,
+        n_kv_heads: 2,
+        d_head: 32,
+        d_ff: 128,
+        max_seq,
+        quant_group: 16,
+        params: 0,
+    }
+}
+
+fn prefill(sess: &mut Session, d: &ModelDims, t: usize, rng: &mut Pcg32) {
+    let planes = d.planes();
+    let dh = d.d_head;
+    let k: Vec<f32> = (0..planes * t * dh).map(|_| rng.gen_normal()).collect();
+    let v: Vec<f32> = (0..planes * t * dh).map(|_| rng.gen_normal()).collect();
+    let acc: Vec<f32> = (0..planes * t).map(|_| rng.gen_f32()).collect();
+    let qmax: Vec<f32> = (0..planes * dh).map(|_| rng.gen_f32() + 0.5).collect();
+    let kmax: Vec<f32> = (0..planes * dh).map(|_| rng.gen_f32() + 0.5).collect();
+    match &mut sess.cache {
+        SessionCache::Mikv(m) => m.ingest_prefill(t, &k, &v, &acc, &qmax, &kmax),
+        _ => unreachable!(),
+    }
+    sess.prompt_len = t;
+    sess.tokens = vec![1; t];
+    sess.last_token = 1;
+}
+
+fn append(sess: &mut Session, d: &ModelDims, rng: &mut Pcg32) {
+    let planes = d.planes();
+    let dh = d.d_head;
+    let k: Vec<f32> = (0..planes * dh).map(|_| rng.gen_normal()).collect();
+    let v: Vec<f32> = (0..planes * dh).map(|_| rng.gen_normal()).collect();
+    let ap: Vec<f32> = (0..planes * d.max_seq).map(|_| rng.gen_f32() * 0.1).collect();
+    let asf: Vec<f32> = (0..planes).map(|_| rng.gen_f32() * 0.1).collect();
+    sess.try_ingest_step(&k, &v, &ap, &asf).expect("seq bound");
+    sess.last_token = (sess.last_token + 1) % 64;
+    sess.tokens.push(sess.last_token);
+}
+
+struct ConfigResult {
+    b: usize,
+    seq: usize,
+    delta_ns: f64,
+    full_ns: f64,
+    delta_bytes: f64,
+    full_bytes: f64,
+    delta_allocs_max: u64,
+    full_allocs_max: u64,
+    arena_host_bytes: usize,
+}
+
+fn run_config(b: usize, seq: usize, steps: usize, seed: u64) -> anyhow::Result<ConfigResult> {
+    const WARMUP: usize = 3;
+    let d = dims(seq);
+    let mut rng = Pcg32::new(seed);
+    let t0 = seq
+        .checked_sub(steps + WARMUP + 2)
+        .ok_or_else(|| anyhow::anyhow!("seq {seq} too short for {steps} steps"))?;
+    let mode = CacheMode::mikv(&d, 0.25, Precision::Int4);
+    let mut sessions: Vec<Session> = (0..b)
+        .map(|i| {
+            let mut s = Session::new(i as u64 + 1, &d, mode.clone())?;
+            prefill(&mut s, &d, t0, &mut rng);
+            Ok(s)
+        })
+        .collect::<anyhow::Result<_>>()?;
+    let mut arena = StepArena::for_mikv(&d);
+
+    // Warmup: shape the arena, reach steady pool/tracker capacities, and
+    // exercise both paths once (delta, then invalidate → full).
+    for _ in 0..WARMUP {
+        for s in sessions.iter_mut() {
+            append(s, &d, &mut rng);
+        }
+        let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+        assemble_mikv(&mut arena, &d, b, &mut refs)?;
+        arena.invalidate();
+        let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+        assemble_mikv(&mut arena, &d, b, &mut refs)?;
+    }
+    arena.reset_stats();
+
+    // Interleaved measurement: per step, one append, then the delta
+    // assembly (dirty rows only) and a forced full rescatter at the SAME
+    // sequence length.
+    let (mut delta_ns, mut full_ns) = (0u64, 0u64);
+    let (mut delta_bytes, mut full_bytes) = (0u64, 0u64);
+    let (mut delta_allocs_max, mut full_allocs_max) = (0u64, 0u64);
+    for _ in 0..steps {
+        for s in sessions.iter_mut() {
+            append(s, &d, &mut rng);
+        }
+        {
+            let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+            let bytes0 = arena.stats.bytes_copied;
+            let a0 = allocs();
+            let t = Instant::now();
+            assemble_mikv(&mut arena, &d, b, &mut refs)?;
+            delta_ns += t.elapsed().as_nanos() as u64;
+            delta_allocs_max = delta_allocs_max.max(allocs() - a0);
+            delta_bytes += arena.stats.bytes_copied - bytes0;
+        }
+        arena.invalidate();
+        {
+            let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+            let bytes0 = arena.stats.bytes_copied;
+            let a0 = allocs();
+            let t = Instant::now();
+            assemble_mikv(&mut arena, &d, b, &mut refs)?;
+            full_ns += t.elapsed().as_nanos() as u64;
+            full_allocs_max = full_allocs_max.max(allocs() - a0);
+            full_bytes += arena.stats.bytes_copied - bytes0;
+        }
+    }
+
+    anyhow::ensure!(
+        arena.stats.grows == 0,
+        "arena reshaped mid-measurement ({} grows)",
+        arena.stats.grows
+    );
+    anyhow::ensure!(
+        arena.stats.delta_lanes as usize == steps * b,
+        "delta path missed: {} of {} lanes",
+        arena.stats.delta_lanes,
+        steps * b
+    );
+
+    Ok(ConfigResult {
+        b,
+        seq,
+        delta_ns: delta_ns as f64 / steps as f64,
+        full_ns: full_ns as f64 / steps as f64,
+        delta_bytes: delta_bytes as f64 / steps as f64,
+        full_bytes: full_bytes as f64 / steps as f64,
+        delta_allocs_max,
+        full_allocs_max,
+        arena_host_bytes: arena.host_bytes(),
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let smoke = args.flag("smoke");
+    let default_b: &[usize] = if smoke { &[1, 4] } else { &[1, 4, 8] };
+    let default_seq: &[usize] = if smoke { &[256, 1024] } else { &[256, 1024, 4096] };
+    let b_list: Vec<usize> = args.get_list("batch-list", default_b)?;
+    let seq_list: Vec<usize> = args.get_list("seq-list", default_seq)?;
+    let steps = args.get_nonzero("steps", if smoke { 12 } else { 24 })?;
+    let seed = args.get("seed", 0xA55Eu64)?;
+
+    let mut table = Table::new(
+        "perf_decode_assembly",
+        "Decode-step input assembly: delta (dirty rows) vs full rescatter",
+        &[
+            "b", "seq", "delta_ns", "full_ns", "speedup", "delta_B", "full_B",
+            "bytes_ratio", "allocs",
+        ],
+    );
+    table.note(format!(
+        "planes=4 d_head=32 groups=2 ratio=0.25 lo=int4 steps={steps} seed={seed:#x}; \
+         per-step means over steady state; allocs = max heap allocations in \
+         one assembly call (must be 0)"
+    ));
+
+    let mut results = Vec::new();
+    for &seq in &seq_list {
+        for &b in &b_list {
+            let r = run_config(b, seq, steps, seed ^ ((b as u64) << 32) ^ seq as u64)?;
+            // Acceptance gates.
+            anyhow::ensure!(
+                r.delta_allocs_max == 0 && r.full_allocs_max == 0,
+                "assembly allocated (delta {} / full {} allocs per step at b={b} seq={seq})",
+                r.delta_allocs_max,
+                r.full_allocs_max
+            );
+            let ratio = r.full_bytes / r.delta_bytes.max(1.0);
+            if seq == 1024 {
+                anyhow::ensure!(
+                    ratio >= 5.0,
+                    "delta path must copy >=5x fewer bytes at seq=1024, got {ratio:.1}x"
+                );
+            }
+            table.row(vec![
+                b.into(),
+                seq.into(),
+                Cell::F(r.delta_ns, 0),
+                Cell::F(r.full_ns, 0),
+                Cell::F(r.full_ns / r.delta_ns.max(1.0), 1),
+                Cell::F(r.delta_bytes, 0),
+                Cell::F(r.full_bytes, 0),
+                Cell::F(ratio, 1),
+                Cell::Int((r.delta_allocs_max + r.full_allocs_max) as i64),
+            ]);
+            results.push(r);
+        }
+    }
+    table.emit()?;
+
+    // Machine-readable trajectory point at the repo root.
+    let mut o = JsonObj::new();
+    o.set("bench", "perf_decode_assembly");
+    o.set("pending", false);
+    o.set("smoke", smoke);
+    o.set("planes", 4usize);
+    o.set("d_head", 32usize);
+    o.set("groups", 2usize);
+    o.set("ratio", 0.25);
+    o.set("lo", "int4");
+    o.set("steps", steps);
+    o.set("seed", seed as i64);
+    let rows: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            let mut ro = JsonObj::new();
+            ro.set("b", r.b);
+            ro.set("seq", r.seq);
+            ro.set("delta_ns_per_step", r.delta_ns);
+            ro.set("full_ns_per_step", r.full_ns);
+            ro.set("delta_bytes_per_step", r.delta_bytes);
+            ro.set("full_bytes_per_step", r.full_bytes);
+            ro.set("bytes_ratio_full_over_delta", r.full_bytes / r.delta_bytes.max(1.0));
+            ro.set("assembly_speedup_full_over_delta", r.full_ns / r.delta_ns.max(1.0));
+            ro.set("delta_allocs_per_step", r.delta_allocs_max as i64);
+            ro.set("full_allocs_per_step", r.full_allocs_max as i64);
+            ro.set("arena_host_bytes", r.arena_host_bytes);
+            Json::Obj(ro)
+        })
+        .collect();
+    o.set("results", Json::Arr(rows));
+    std::fs::write("BENCH_decode.json", Json::Obj(o).to_string_pretty())?;
+    println!("wrote BENCH_decode.json");
+    Ok(())
+}

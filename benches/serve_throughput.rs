@@ -130,6 +130,10 @@ fn main() -> anyhow::Result<()> {
             ro.set("ttft_p99_ms", r.ttft_p99.as_secs_f64() * 1e3);
             ro.set("latency_p50_ms", r.latency_p50.as_secs_f64() * 1e3);
             ro.set("latency_p99_ms", r.latency_p99.as_secs_f64() * 1e3);
+            // Server-side decode-assembly cost (µs percentiles from the
+            // trailing stats op; 0 when the engine doesn't measure it).
+            ro.set("assembly_us_p50", r.assembly_us_p50);
+            ro.set("assembly_us_p99", r.assembly_us_p99);
             ro.set(
                 "per_worker_utilization",
                 Json::Arr(r.per_worker.iter().map(|w| Json::Num(w.share)).collect()),

@@ -94,11 +94,14 @@ fn load_mode(args: &Args) -> anyhow::Result<()> {
         report.turns_err,
     );
     println!(
-        "ttft p50 {:.2}ms p99 {:.2}ms | latency p50 {:.2}ms p99 {:.2}ms",
+        "ttft p50 {:.2}ms p99 {:.2}ms | latency p50 {:.2}ms p99 {:.2}ms \
+         | assembly p50 {:.1}us p99 {:.1}us",
         report.ttft_p50.as_secs_f64() * 1e3,
         report.ttft_p99.as_secs_f64() * 1e3,
         report.latency_p50.as_secs_f64() * 1e3,
         report.latency_p99.as_secs_f64() * 1e3,
+        report.assembly_us_p50,
+        report.assembly_us_p99,
     );
     for w in &report.per_worker {
         println!(

@@ -94,6 +94,13 @@ pub trait StepEngine {
     /// One decode step over a homogeneous session group; returns one logits
     /// row per session.
     fn decode_step(&self, sessions: &mut [&mut Session]) -> crate::Result<Vec<Vec<f32>>>;
+
+    /// Host-side decode-input assembly time (µs) of the most recent
+    /// `decode_step` call, when the engine measures it. Feeds the
+    /// `assembly_us` percentiles in the coordinator's stats snapshot.
+    fn assembly_us_last(&self) -> Option<f64> {
+        None
+    }
 }
 
 impl StepEngine for Engine {
@@ -111,6 +118,10 @@ impl StepEngine for Engine {
 
     fn decode_step(&self, sessions: &mut [&mut Session]) -> crate::Result<Vec<Vec<f32>>> {
         Engine::decode_step(self, sessions)
+    }
+
+    fn assembly_us_last(&self) -> Option<f64> {
+        Some(Engine::last_assembly_us(self))
     }
 }
 
@@ -276,7 +287,7 @@ impl<E: StepEngine> Coordinator<E> {
 
             // 3. One decode step over the active set, grouped by graph.
             if !active.is_empty() {
-                self.decode_round(&mut active);
+                self.decode_round(&mut active, &mut collector);
             }
 
             // 4. Retire finished/failed/cancelled turns; bound the registry.
@@ -334,6 +345,8 @@ impl<E: StepEngine> Coordinator<E> {
             Op::Stats { id, reply } => {
                 let parked_bytes: usize =
                     parked.values().map(|p| p.sess.cache.host_bytes()).sum();
+                let (assembly_us_p50, assembly_us_p99) = collector.assembly_us();
+                let assembly_samples = collector.assembly_samples();
                 let snapshot = StatsSnapshot {
                     active: active.len(),
                     waiting: waiting.len(),
@@ -344,6 +357,9 @@ impl<E: StepEngine> Coordinator<E> {
                     throughput_tps: collector.throughput(),
                     mean_host_bytes: collector.mean_host_bytes(),
                     peak_host_bytes: collector.peak_host_bytes(),
+                    assembly_us_p50,
+                    assembly_us_p99,
+                    assembly_samples,
                     pool: self.pool.stats(),
                     workers: vec![WorkerStats {
                         worker: self.worker_id,
@@ -353,6 +369,9 @@ impl<E: StepEngine> Coordinator<E> {
                         completed: collector.n_requests(),
                         generated_tokens: collector.generated_tokens(),
                         throughput_tps: collector.throughput(),
+                        assembly_us_p50,
+                        assembly_us_p99,
+                        assembly_samples,
                     }],
                 };
                 let _ = reply.emit(ServeEvent::Stats { id, snapshot });
@@ -377,6 +396,12 @@ impl<E: StepEngine> Coordinator<E> {
                 i += 1;
                 continue;
             }
+            // swap_remove is the lane-friendly removal for the engine's
+            // delta-assembly cache (lanes key on batch position): it
+            // changes only the moved last element's rank — one full
+            // rescatter per retire — where an order-preserving remove(i)
+            // would shift EVERY later session down a lane and rescatter
+            // them all.
             let a = active.swap_remove(i);
             let resp = match a.error {
                 Some(err) => Response::error(a.req.id, err),
@@ -605,7 +630,7 @@ impl<E: StepEngine> Coordinator<E> {
         });
     }
 
-    fn decode_round(&self, active: &mut [Active]) {
+    fn decode_round(&self, active: &mut [Active], collector: &mut MetricsCollector) {
         let max_seq = self.engine.dims().max_seq;
         // Group indices by (graph kind, oracle_k).
         let mut groups: BTreeMap<(String, i64), Vec<usize>> = BTreeMap::new();
@@ -649,6 +674,13 @@ impl<E: StepEngine> Coordinator<E> {
             };
             match result {
                 Ok(rows) => {
+                    // Per-step host assembly cost → the stats snapshot's
+                    // `assembly_us` percentiles. Only successful steps
+                    // count: a failed step may bail before measuring and
+                    // would re-record a stale sample.
+                    if let Some(us) = self.engine.assembly_us_last() {
+                        collector.record_assembly(Duration::from_secs_f64(us / 1e6));
+                    }
                     let now = Instant::now();
                     for (&i, row) in idxs.iter().zip(rows.iter()) {
                         let a = &mut active[i];

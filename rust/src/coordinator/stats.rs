@@ -24,6 +24,13 @@ pub struct WorkerStats {
     pub generated_tokens: usize,
     /// This worker's generated tokens per wall-clock second.
     pub throughput_tps: f64,
+    /// p50 of per-decode-step host input-assembly time (µs), over the
+    /// collector's retained window. 0 when the engine doesn't measure it.
+    pub assembly_us_p50: f64,
+    /// p99 of per-decode-step host input-assembly time (µs).
+    pub assembly_us_p99: f64,
+    /// Assembly samples observed (may exceed the retained window).
+    pub assembly_samples: u64,
 }
 
 /// Point-in-time serving counters answered to the wire `stats` op:
@@ -50,6 +57,16 @@ pub struct StatsSnapshot {
     pub mean_host_bytes: f64,
     /// Largest host cache footprint any completed turn reached.
     pub peak_host_bytes: usize,
+    /// p50 of per-decode-step host input-assembly time (µs). In a merged
+    /// snapshot this is the mean of the worker p50s weighted by each
+    /// worker's retained sample window (an approximation — exact
+    /// per-worker values ride in `workers`).
+    pub assembly_us_p50: f64,
+    /// p99 of per-decode-step host input-assembly time (µs); merged the
+    /// same way.
+    pub assembly_us_p99: f64,
+    /// Decode-step assembly samples observed.
+    pub assembly_samples: u64,
     /// Buffer-pool counters (summed over the per-worker pools).
     pub pool: PoolStats,
     /// Per-worker breakdown, ordered by worker index.
@@ -64,6 +81,9 @@ impl StatsSnapshot {
     pub fn merged(parts: Vec<StatsSnapshot>) -> StatsSnapshot {
         let mut out = StatsSnapshot::default();
         let mut weighted_bytes = 0.0f64;
+        let mut weighted_a50 = 0.0f64;
+        let mut weighted_a99 = 0.0f64;
+        let mut assembly_windows = 0.0f64;
         for part in parts {
             out.active += part.active;
             out.waiting += part.waiting;
@@ -74,6 +94,14 @@ impl StatsSnapshot {
             out.throughput_tps += part.throughput_tps;
             weighted_bytes += part.mean_host_bytes * part.completed as f64;
             out.peak_host_bytes = out.peak_host_bytes.max(part.peak_host_bytes);
+            // Weight by the retained window, not lifetime samples: every
+            // worker's percentiles cover at most ASSEMBLY_WINDOW recent
+            // steps, so a long-lived worker must not drown a fresh one.
+            let window = part.assembly_samples.min(ASSEMBLY_WINDOW as u64) as f64;
+            weighted_a50 += part.assembly_us_p50 * window;
+            weighted_a99 += part.assembly_us_p99 * window;
+            assembly_windows += window;
+            out.assembly_samples += part.assembly_samples;
             out.pool.free_blocks += part.pool.free_blocks;
             out.pool.free_bytes += part.pool.free_bytes;
             out.pool.outstanding_blocks += part.pool.outstanding_blocks;
@@ -85,10 +113,19 @@ impl StatsSnapshot {
         if out.completed > 0 {
             out.mean_host_bytes = weighted_bytes / out.completed as f64;
         }
+        if assembly_windows > 0.0 {
+            out.assembly_us_p50 = weighted_a50 / assembly_windows;
+            out.assembly_us_p99 = weighted_a99 / assembly_windows;
+        }
         out.workers.sort_by_key(|w| w.worker);
         out
     }
 }
+
+/// Samples of per-decode-step assembly time retained for the percentile
+/// window (a ring: serving runs are long and steps are frequent, so the
+/// collector keeps a sliding window instead of growing without bound).
+const ASSEMBLY_WINDOW: usize = 4096;
 
 /// Aggregates per-request metrics into the numbers the serving benches
 /// report: TTFT / latency percentiles and token throughput.
@@ -100,6 +137,10 @@ pub struct MetricsCollector {
     prompt_tokens: usize,
     generated_tokens: usize,
     host_bytes: Vec<usize>,
+    /// Ring of the last [`ASSEMBLY_WINDOW`] per-step assembly times.
+    assembly: Vec<Duration>,
+    assembly_pos: usize,
+    assembly_total: u64,
 }
 
 impl Default for MetricsCollector {
@@ -117,7 +158,41 @@ impl MetricsCollector {
             prompt_tokens: 0,
             generated_tokens: 0,
             host_bytes: Vec::new(),
+            assembly: Vec::new(),
+            assembly_pos: 0,
+            assembly_total: 0,
         }
+    }
+
+    /// Record one decode step's host input-assembly time (ring-buffered to
+    /// the last [`ASSEMBLY_WINDOW`] samples).
+    pub fn record_assembly(&mut self, d: Duration) {
+        self.assembly_total += 1;
+        if self.assembly.len() < ASSEMBLY_WINDOW {
+            self.assembly.push(d);
+        } else {
+            self.assembly[self.assembly_pos] = d;
+            self.assembly_pos = (self.assembly_pos + 1) % ASSEMBLY_WINDOW;
+        }
+    }
+
+    /// (p50, p99) of per-step assembly time in µs over the retained
+    /// window; (0, 0) when nothing was recorded.
+    pub fn assembly_us(&self) -> (f64, f64) {
+        if self.assembly.is_empty() {
+            return (0.0, 0.0);
+        }
+        let mut v = self.assembly.clone();
+        v.sort_unstable();
+        (
+            crate::bench::percentile(&v, 0.5).as_secs_f64() * 1e6,
+            crate::bench::percentile(&v, 0.99).as_secs_f64() * 1e6,
+        )
+    }
+
+    /// Total assembly samples observed (may exceed the retained window).
+    pub fn assembly_samples(&self) -> u64 {
+        self.assembly_total
     }
 
     pub fn record(&mut self, m: &RequestMetrics) {
@@ -284,6 +359,73 @@ mod tests {
         assert_eq!(m.workers.len(), 2);
         assert_eq!(m.workers[0].worker, 0);
         assert_eq!(m.workers[1].worker, 1);
+    }
+
+    #[test]
+    fn assembly_ring_percentiles_and_window() {
+        let mut c = MetricsCollector::new();
+        assert_eq!(c.assembly_us(), (0.0, 0.0));
+        for i in 1..=100u64 {
+            c.record_assembly(Duration::from_micros(i));
+        }
+        let (p50, p99) = c.assembly_us();
+        assert!((p50 - 50.5).abs() < 1e-6, "{p50}");
+        assert!((p99 - 99.01).abs() < 1e-6, "{p99}");
+        assert_eq!(c.assembly_samples(), 100);
+
+        // the ring caps retained samples but keeps counting
+        for i in 0..(super::ASSEMBLY_WINDOW as u64 + 50) {
+            c.record_assembly(Duration::from_micros(7 + (i % 3)));
+        }
+        assert_eq!(c.assembly.len(), super::ASSEMBLY_WINDOW);
+        assert_eq!(
+            c.assembly_samples(),
+            100 + super::ASSEMBLY_WINDOW as u64 + 50
+        );
+        let (p50, _) = c.assembly_us();
+        assert!((7.0..=9.0).contains(&p50), "window dominated by recents: {p50}");
+    }
+
+    #[test]
+    fn merge_weights_assembly_percentiles_by_samples() {
+        let a = StatsSnapshot {
+            assembly_us_p50: 10.0,
+            assembly_us_p99: 20.0,
+            assembly_samples: 30,
+            ..StatsSnapshot::default()
+        };
+        let b = StatsSnapshot {
+            assembly_us_p50: 40.0,
+            assembly_us_p99: 80.0,
+            assembly_samples: 10,
+            ..StatsSnapshot::default()
+        };
+        let m = StatsSnapshot::merged(vec![a, b]);
+        assert_eq!(m.assembly_samples, 40);
+        // (10·30 + 40·10)/40 = 17.5 ; (20·30 + 80·10)/40 = 35
+        assert!((m.assembly_us_p50 - 17.5).abs() < 1e-9);
+        assert!((m.assembly_us_p99 - 35.0).abs() < 1e-9);
+        // a worker with no samples contributes nothing
+        let none = StatsSnapshot::default();
+        let m2 = StatsSnapshot::merged(vec![none]);
+        assert_eq!(m2.assembly_us_p50, 0.0);
+
+        // lifetime samples are capped at the retained window: a long-lived
+        // worker (1M steps) and a fresh one both retain ASSEMBLY_WINDOW
+        // samples, so they weigh equally.
+        let old = StatsSnapshot {
+            assembly_us_p50: 10.0,
+            assembly_samples: 1_000_000,
+            ..StatsSnapshot::default()
+        };
+        let fresh = StatsSnapshot {
+            assembly_us_p50: 30.0,
+            assembly_samples: super::ASSEMBLY_WINDOW as u64,
+            ..StatsSnapshot::default()
+        };
+        let m3 = StatsSnapshot::merged(vec![old, fresh]);
+        assert!((m3.assembly_us_p50 - 20.0).abs() < 1e-9, "{}", m3.assembly_us_p50);
+        assert_eq!(m3.assembly_samples, 1_000_000 + super::ASSEMBLY_WINDOW as u64);
     }
 
     #[test]

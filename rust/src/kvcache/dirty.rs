@@ -1,0 +1,203 @@
+//! Dirty-row tracking across the cache→engine decode-assembly boundary.
+//!
+//! Every mutation of a session's decode-shadow blocks touches a small,
+//! known set of *rows* (token slots): an append writes one row per plane, a
+//! demotion clears one hi row and writes one lo row, a prefill rewrites
+//! everything. The [`DirtyTracker`] records which rows changed since the
+//! engine last copied this session's shadow into its batch arena, so a
+//! steady-state decode step copies **only the changed rows** instead of the
+//! whole live prefix (see `model::assembly`).
+//!
+//! The protocol is a two-sided handshake:
+//!
+//! * the tracker keeps a monotonically increasing **version**, bumped on
+//!   every [`DirtyTracker::take_into`];
+//! * the engine's arena caches, per batch lane, the `(session id, version)`
+//!   it last synchronized to;
+//! * on the next take, the arena applies the drained rows **iff** its
+//!   cached version equals [`DirtyTake::prev_version`] — otherwise some
+//!   other consumer (a different arena, a different lane, a re-admitted
+//!   session) drained rows this lane never saw, and the arena falls back
+//!   to a full rescatter of the live prefix.
+//!
+//! Rows are tracked unioned across planes (a demotion in plane `p` marks
+//! slot `s` for every plane): the engine copies a handful of clean rows it
+//! didn't strictly need to, in exchange for O(1) bookkeeping per mutation
+//! and a flat row list the copy loop can walk plane-major.
+
+/// Rows the tracker holds before collapsing to "everything dirty". Bounds
+/// both the tracker's memory and the engine's per-take scratch (which
+/// pre-reserves this capacity so a steady-state take never allocates).
+pub const MAX_TRACKED_ROWS: usize = 512;
+
+/// Result of draining a tracker: the sync-version pair plus whether the
+/// drained rows cover the mutations (`all == false`) or a full rescatter is
+/// required (`all == true`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DirtyTake {
+    /// The tracker's version before this take — a consumer whose cached
+    /// version equals this saw every earlier mutation.
+    pub prev_version: u64,
+    /// The tracker's version after this take (cache this per lane).
+    pub version: u64,
+    /// The row list is meaningless; everything must be re-copied
+    /// (prefill, a fresh tracker, or row-cap overflow).
+    pub all: bool,
+}
+
+/// Accumulates dirty rows between takes (see module docs).
+#[derive(Debug, Clone)]
+pub struct DirtyTracker {
+    version: u64,
+    all: bool,
+    rows: Vec<usize>,
+}
+
+impl Default for DirtyTracker {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DirtyTracker {
+    /// A fresh tracker starts fully dirty: the first take after creation
+    /// always reports `all` (nothing has ever been synchronized).
+    pub fn new() -> DirtyTracker {
+        DirtyTracker {
+            version: 0,
+            all: true,
+            rows: Vec::new(),
+        }
+    }
+
+    /// Record that row `row` of the shadow blocks changed.
+    pub fn mark(&mut self, row: usize) {
+        if self.all {
+            return;
+        }
+        if self.rows.len() >= MAX_TRACKED_ROWS {
+            self.mark_all();
+            return;
+        }
+        // Appends mark the same tail row once per plane: skip the
+        // immediate duplicate (full dedup happens at take).
+        if self.rows.last() == Some(&row) {
+            return;
+        }
+        self.rows.push(row);
+    }
+
+    /// Record that every row changed (prefill / re-stride-invalidating
+    /// mutations).
+    pub fn mark_all(&mut self) {
+        self.all = true;
+        self.rows.clear();
+    }
+
+    /// Current sync version (bumped by every take).
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Rows currently pending (diagnostics/tests; 0 while `all`).
+    pub fn pending_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Whether the next take will report `all`.
+    pub fn is_all(&self) -> bool {
+        self.all
+    }
+
+    /// Host bytes pinned by the tracker's bookkeeping.
+    pub fn host_bytes(&self) -> usize {
+        self.rows.capacity() * std::mem::size_of::<usize>()
+    }
+
+    /// Drain the pending rows into `out` (cleared first; sorted and
+    /// deduplicated), bump the version, and return the sync info. `out`'s
+    /// capacity is reused across takes — with at least
+    /// [`MAX_TRACKED_ROWS`] reserved, a take never allocates.
+    pub fn take_into(&mut self, out: &mut Vec<usize>) -> DirtyTake {
+        out.clear();
+        let all = self.all;
+        if !all {
+            out.extend_from_slice(&self.rows);
+            out.sort_unstable();
+            out.dedup();
+        }
+        self.rows.clear();
+        self.all = false;
+        let prev = self.version;
+        self.version += 1;
+        DirtyTake {
+            prev_version: prev,
+            version: self.version,
+            all,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_tracker_takes_all_then_tracks_rows() {
+        let mut t = DirtyTracker::new();
+        assert!(t.is_all());
+        let mut out = Vec::new();
+        let take = t.take_into(&mut out);
+        assert!(take.all);
+        assert_eq!((take.prev_version, take.version), (0, 1));
+        assert!(out.is_empty());
+
+        t.mark(5);
+        t.mark(5); // per-plane duplicate collapses
+        t.mark(2);
+        t.mark(5);
+        assert!(!t.is_all());
+        let take = t.take_into(&mut out);
+        assert!(!take.all);
+        assert_eq!((take.prev_version, take.version), (1, 2));
+        assert_eq!(out, vec![2, 5], "sorted + deduped");
+
+        // nothing since the last take → empty delta
+        let take = t.take_into(&mut out);
+        assert!(!take.all);
+        assert!(out.is_empty());
+        assert_eq!(take.prev_version, 2);
+    }
+
+    #[test]
+    fn mark_all_and_overflow_collapse() {
+        let mut t = DirtyTracker::new();
+        let mut out = Vec::new();
+        t.take_into(&mut out);
+        t.mark(1);
+        t.mark_all();
+        assert_eq!(t.pending_rows(), 0);
+        assert!(t.take_into(&mut out).all);
+
+        // overflow: exceed the cap with distinct rows
+        for r in 0..=MAX_TRACKED_ROWS {
+            t.mark(2 * r); // distinct, non-adjacent
+        }
+        assert!(t.is_all(), "row cap collapses to all");
+        assert!(t.take_into(&mut out).all);
+    }
+
+    #[test]
+    fn take_reuses_capacity() {
+        let mut t = DirtyTracker::new();
+        let mut out = Vec::with_capacity(MAX_TRACKED_ROWS);
+        t.take_into(&mut out);
+        for r in 0..100 {
+            t.mark(r);
+        }
+        let cap = out.capacity();
+        t.take_into(&mut out);
+        assert_eq!(out.len(), 100);
+        assert_eq!(out.capacity(), cap, "no reallocation on take");
+    }
+}

@@ -27,6 +27,7 @@
 //! dense blocks via [`CacheManager::decode_views`].
 
 use super::accounting::{self, HostFootprint, Occupancy};
+use super::dirty::{DirtyTake, DirtyTracker};
 use super::pool::{BufferPool, PooledBuf};
 use super::tier::{HiTier, LoTier};
 use super::{CacheConfig, Placement, RetentionMode};
@@ -112,6 +113,13 @@ pub struct CacheManager {
     seq_len: usize,
     scratch_u8: Vec<u8>,
     scratch_f32: Vec<f32>,
+    // Reusable `[d]` K/V staging for append/demote (kills the per-token
+    // `to_vec()`s the split-borrow workaround used to make).
+    scratch_k: Vec<f32>,
+    scratch_v: Vec<f32>,
+    /// Shadow rows touched since the engine last synchronized this session
+    /// (see [`crate::kvcache::dirty`] for the delta-assembly protocol).
+    dirty: DirtyTracker,
 }
 
 impl CacheManager {
@@ -160,6 +168,9 @@ impl CacheManager {
             seq_len: 0,
             scratch_u8: vec![0; d],
             scratch_f32: vec![0.0; d],
+            scratch_k: vec![0.0; d],
+            scratch_v: vec![0.0; d],
+            dirty: DirtyTracker::new(),
             cfg,
             policy,
             pool,
@@ -295,6 +306,9 @@ impl CacheManager {
         assert_eq!(qmax.len(), self.planes * self.d);
         self.ensure_capacity(seq_len);
         self.seq_len = seq_len;
+        // Prefill rewrites every shadow row (and the balancers): any engine
+        // lane holding this session must fully rescatter.
+        self.dirty.mark_all();
 
         // 1. Channel balancers from prefill q/k maxima (paper eq. 2).
         for p in 0..self.planes {
@@ -386,11 +400,15 @@ impl CacheManager {
             self.policy.observe_at(p, t, out.attn_self[p]);
 
             // The new token always enters hi (recent tokens are important).
+            // `out` borrows caller data (not self), so the slices pass
+            // straight through — no staging copy, no allocation.
             let off = p * self.d;
-            // Split borrows: copy out the slices to avoid aliasing self.
-            let k_new = out.k_new[off..off + self.d].to_vec();
-            let v_new = out.v_new[off..off + self.d].to_vec();
-            self.admit_hi(p, t, &k_new, &v_new);
+            self.admit_hi(
+                p,
+                t,
+                &out.k_new[off..off + self.d],
+                &out.v_new[off..off + self.d],
+            );
 
             // Enforce the hi budget.
             while self.hi_count[p] > budget {
@@ -427,13 +445,18 @@ impl CacheManager {
         self.hi_mask[idx] = 1.0;
         self.hi_count[p] += 1;
         self.placement[idx] = Placement::Hi;
+        self.dirty.mark(s);
     }
 
     /// Demote a hi-tier slot to the retained tier (or evict, per config).
     fn demote(&mut self, p: usize, s: usize) {
         debug_assert_eq!(self.placement(p, s), Placement::Hi);
-        let k = self.hi[p].k_slot(s).to_vec();
-        let v = self.hi[p].v_slot(s).to_vec();
+        // Stage the evictee's K/V through the reusable scratch buffers
+        // (taken/restored — no per-demotion allocation).
+        let mut k = std::mem::take(&mut self.scratch_k);
+        let mut v = std::mem::take(&mut self.scratch_v);
+        k.copy_from_slice(self.hi[p].k_slot(s));
+        v.copy_from_slice(self.hi[p].v_slot(s));
         // Clear hi state.
         self.hi[p].clear(s);
         let off = (p * self.cap + s) * self.d;
@@ -444,6 +467,8 @@ impl CacheManager {
         self.hi_count[p] -= 1;
         self.placement[idx] = Placement::Empty;
         self.place_lo_or_evict(p, s, &k, &v);
+        self.scratch_k = k;
+        self.scratch_v = v;
     }
 
     fn place_lo_or_evict(&mut self, p: usize, s: usize, k: &[f32], v: &[f32]) {
@@ -461,6 +486,9 @@ impl CacheManager {
                 self.placement[idx] = Placement::Lo;
             }
         }
+        // Both arms changed row `s` of the shadow (the hi clear in
+        // `demote`, and/or the lo write here).
+        self.dirty.mark(s);
     }
 
     /// Rebuild the dense shadow of one lo slot from the packed tier.
@@ -508,19 +536,56 @@ impl CacheManager {
         }
     }
 
+    /// Drain the shadow rows touched since the last take (the engine's
+    /// delta-assembly handshake — see [`crate::kvcache::dirty`]). Rows land
+    /// in `out` sorted and deduplicated; with [`dirty::MAX_TRACKED_ROWS`]
+    /// capacity pre-reserved in `out` this never allocates.
+    ///
+    /// [`dirty::MAX_TRACKED_ROWS`]: super::dirty::MAX_TRACKED_ROWS
+    pub fn take_dirty_into(&mut self, out: &mut Vec<usize>) -> DirtyTake {
+        self.dirty.take_into(out)
+    }
+
+    /// Current dirty-tracker sync version (diagnostics/tests).
+    pub fn dirty_version(&self) -> u64 {
+        self.dirty.version()
+    }
+
+    /// Allocation-free [`Self::effective_kv`]: write the effective K/V of
+    /// `(plane, slot)` into caller buffers (each `[head_dim]`), borrowing
+    /// hi slots directly and fused-dequantizing lo slots. Returns `false`
+    /// (buffers untouched) if the slot is evicted/empty.
+    pub fn effective_kv_into(
+        &self,
+        p: usize,
+        s: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+    ) -> bool {
+        debug_assert!(k_out.len() == self.d && v_out.len() == self.d);
+        match self.placement(p, s) {
+            Placement::Hi => {
+                k_out.copy_from_slice(self.hi[p].k_slot(s));
+                v_out.copy_from_slice(self.hi[p].v_slot(s));
+                true
+            }
+            Placement::Lo => {
+                self.lo[p].dequant_slot_into(s, k_out, v_out);
+                self.balancers[p].unbalance_key_into(k_out);
+                true
+            }
+            _ => false,
+        }
+    }
+
     /// Host-side reconstruction of what the attention kernel effectively
     /// sees for `(plane, slot)`: hi values verbatim, lo values dequantized
     /// with the balancer inverse applied to K. `None` if evicted/empty.
+    /// (Allocating diagnostics wrapper over [`Self::effective_kv_into`].)
     pub fn effective_kv(&self, p: usize, s: usize) -> Option<(Vec<f32>, Vec<f32>)> {
-        match self.placement(p, s) {
-            Placement::Hi => Some((self.hi[p].k_slot(s).to_vec(), self.hi[p].v_slot(s).to_vec())),
-            Placement::Lo => {
-                let (mut k, v) = self.lo[p].dequant_slot(s);
-                self.balancers[p].unbalance_key_into(&mut k);
-                Some((k, v))
-            }
-            _ => None,
-        }
+        let mut k = vec![0.0; self.d];
+        let mut v = vec![0.0; self.d];
+        self.effective_kv_into(p, s, &mut k, &mut v).then_some((k, v))
     }
 
     /// Tier occupancy summed over planes.
@@ -565,7 +630,9 @@ impl CacheManager {
             + self.inv_balancer.len() * f32b
             + self.balancers.iter().map(|b| b.b.len() * f32b).sum::<usize>()
             + self.scratch_u8.len()
-            + self.scratch_f32.len() * f32b;
+            + self.scratch_f32.len() * f32b
+            + (self.scratch_k.len() + self.scratch_v.len()) * f32b
+            + self.dirty.host_bytes();
         HostFootprint {
             shadow_bytes,
             tier_bytes,
@@ -1035,6 +1102,100 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// The delta-assembly handshake: prefill takes `all`; each append's
+    /// take covers exactly the appended row plus any demoted victims; and
+    /// the drained rows, applied to a stale copy of the shadow, reproduce
+    /// the current shadow bit-for-bit.
+    #[test]
+    fn dirty_rows_cover_every_shadow_mutation() {
+        let mut m = manager(0.25, RetentionMode::Retain);
+        let mut rng = Pcg32::new(21);
+        let t0 = 12;
+        let (k, v, acc, qmax, kmax) = prefill_data(m.config(), t0, &mut rng);
+        m.ingest_prefill(t0, &k, &v, &acc, &qmax, &kmax);
+
+        let mut rows = Vec::new();
+        let take = m.take_dirty_into(&mut rows);
+        assert!(take.all, "first take after prefill is a full rescatter");
+        assert_eq!((take.prev_version, take.version), (0, 1));
+
+        // Snapshot the shadow, then mutate and apply only the dirty rows.
+        let snap = |m: &CacheManager| -> Vec<Vec<f32>> {
+            let vs = m.decode_views();
+            vec![
+                vs.k_hi.to_vec(), vs.v_hi.to_vec(), vs.hi_mask.to_vec(),
+                vs.k_lo_codes.to_vec(), vs.k_lo_scale.to_vec(), vs.k_lo_zero.to_vec(),
+                vs.v_lo_codes.to_vec(), vs.v_lo_scale.to_vec(), vs.v_lo_zero.to_vec(),
+                vs.lo_mask.to_vec(),
+            ]
+        };
+        let widths = [8usize, 8, 1, 8, 2, 2, 8, 2, 2, 1];
+        let planes = 4usize;
+        let mut stale = snap(&m);
+        let cap_before = m.capacity();
+
+        for _ in 0..3 {
+            let k_new: Vec<f32> = (0..planes * 8).map(|_| rng.gen_normal()).collect();
+            let attn_prev = vec![0.02f32; planes * 32];
+            let attn_self = vec![0.02f32; planes];
+            m.append_token(StepOutputs {
+                k_new: &k_new,
+                v_new: &k_new,
+                attn_prev: &attn_prev,
+                attn_self: &attn_self,
+            });
+            let take = m.take_dirty_into(&mut rows);
+            assert!(!take.all, "append is delta-trackable");
+            assert!(!rows.is_empty(), "the appended row must be dirty");
+            assert!(rows.contains(&(m.seq_len() - 1)));
+            assert!(rows.iter().all(|&r| r < m.seq_len()));
+            // capacity is stable in this range, so the stale copy's stride
+            // still matches and a row-wise patch must reproduce the shadow
+            assert_eq!(m.capacity(), cap_before);
+            let now = snap(&m);
+            for (b, &w) in widths.iter().enumerate() {
+                for p in 0..planes {
+                    for &r in &rows {
+                        let o = (p * cap_before + r) * w;
+                        stale[b][o..o + w].copy_from_slice(&now[b][o..o + w]);
+                    }
+                }
+                assert_eq!(stale[b], now[b], "block {b}: dirty rows are complete");
+            }
+        }
+
+        // A second consumer draining in between breaks the version chain.
+        let v_before = m.dirty_version();
+        let take = m.take_dirty_into(&mut rows);
+        assert_eq!(take.prev_version, v_before);
+        assert_eq!(take.version, v_before + 1);
+    }
+
+    /// `effective_kv_into` (borrow + fused dequant) agrees bitwise with
+    /// the allocating wrapper across all placements.
+    #[test]
+    fn effective_kv_into_matches_wrapper() {
+        let mut m = manager(0.25, RetentionMode::Retain);
+        let mut rng = Pcg32::new(22);
+        let t = 16;
+        let (k, v, acc, qmax, kmax) = prefill_data(m.config(), t, &mut rng);
+        m.ingest_prefill(t, &k, &v, &acc, &qmax, &kmax);
+        let mut kb = vec![0.0f32; 8];
+        let mut vb = vec![0.0f32; 8];
+        for p in 0..4 {
+            for s in 0..t {
+                match m.effective_kv(p, s) {
+                    Some((ke, ve)) => {
+                        assert!(m.effective_kv_into(p, s, &mut kb, &mut vb));
+                        assert_eq!(kb, ke, "plane {p} slot {s}");
+                        assert_eq!(vb, ve, "plane {p} slot {s}");
+                    }
+                    None => assert!(!m.effective_kv_into(p, s, &mut kb, &mut vb)),
+                }
+            }
+        }
     }
 
     #[test]

@@ -20,11 +20,13 @@
 //! "KV cache size %" axis — and the physical host bytes a session pins.
 
 pub mod accounting;
+pub mod dirty;
 pub mod manager;
 pub mod pool;
 pub mod tier;
 
 pub use accounting::HostFootprint;
+pub use dirty::{DirtyTake, DirtyTracker};
 pub use manager::{CacheManager, StepOutputs};
 pub use pool::{BufferPool, PoolStats, PooledBuf};
 

@@ -13,7 +13,7 @@ use super::TierConfig;
 use crate::quant::{
     asym::{quantize, QuantParams},
     f16::round_f16_slice,
-    packing::{pack, packed_words, unpack_into},
+    packing::{pack, packed_words, unpack_dequant_into, unpack_into},
     Precision,
 };
 
@@ -245,21 +245,39 @@ impl LoTier {
         )
     }
 
-    /// Fully dequantize slot `s` (diagnostics / host-side reference path).
-    pub fn dequant_slot(&self, s: usize) -> (Vec<f32>, Vec<f32>) {
-        let d = self.head_dim;
-        let mut scratch = vec![0u8; d];
-        let mut kc = vec![0.0f32; d];
-        let mut vc = vec![0.0f32; d];
-        self.k_codes_f32_into(s, &mut scratch, &mut kc);
-        self.v_codes_f32_into(s, &mut scratch, &mut vc);
+    /// Dequantize slot `s` into caller buffers (each `[head_dim]`) through
+    /// the fused unpack+dequant kernel — the allocation-free variant used
+    /// on the serving read path (`CacheManager::effective_kv_into`).
+    pub fn dequant_slot_into(&self, s: usize, k_out: &mut [f32], v_out: &mut [f32]) {
+        debug_assert!(k_out.len() == self.head_dim && v_out.len() == self.head_dim);
+        let bits = self.prm.precision.bits();
         let g = self.prm.group;
         let (ks, kz) = self.k_meta_slot(s);
+        unpack_dequant_into(
+            &self.k_codes[s * self.words..(s + 1) * self.words],
+            bits,
+            ks,
+            kz,
+            g,
+            k_out,
+        );
         let (vs, vz) = self.v_meta_slot(s);
-        for i in 0..d {
-            kc[i] = ks[i / g] * kc[i] + kz[i / g];
-            vc[i] = vs[i / g] * vc[i] + vz[i / g];
-        }
+        unpack_dequant_into(
+            &self.v_codes[s * self.words..(s + 1) * self.words],
+            bits,
+            vs,
+            vz,
+            g,
+            v_out,
+        );
+    }
+
+    /// Fully dequantize slot `s` (allocating diagnostics wrapper over
+    /// [`Self::dequant_slot_into`]).
+    pub fn dequant_slot(&self, s: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut kc = vec![0.0f32; self.head_dim];
+        let mut vc = vec![0.0f32; self.head_dim];
+        self.dequant_slot_into(s, &mut kc, &mut vc);
         (kc, vc)
     }
 }
@@ -366,6 +384,43 @@ mod tests {
         assert_eq!(lo.capacity(), 16);
         assert_eq!(lo.dequant_slot(0), before);
         assert!(lo.host_bytes() > 0);
+    }
+
+    /// The fused `dequant_slot_into` must be bit-identical to the old
+    /// two-step reference (unpack codes, then `scale·code + zero` with
+    /// per-group meta indexing) — same operation order, same f32 math.
+    #[test]
+    fn property_dequant_slot_into_matches_two_step_reference() {
+        forall(Config::default().cases(120).name("fused slot dequant"), |rng| {
+            let d = *rng.choose(&[8usize, 16, 32]);
+            let p = *rng.choose(&[Precision::Int2, Precision::Int3, Precision::Int4, Precision::Int8]);
+            let g = *rng.choose(&[d / 2, d / 4]);
+            let cfg = TierConfig::quantized(p, g);
+            let mut t = LoTier::new(cfg, d, 2);
+            let k = gen_vec_normal(rng, d, 1.2, 0.05);
+            let v = gen_vec_normal(rng, d, 0.8, 0.0);
+            t.admit(1, &k, &v);
+
+            let mut kd = vec![0.0f32; d];
+            let mut vd = vec![0.0f32; d];
+            t.dequant_slot_into(1, &mut kd, &mut vd);
+
+            // two-step reference
+            let mut scratch = vec![0u8; d];
+            let mut kc = vec![0.0f32; d];
+            let mut vc = vec![0.0f32; d];
+            t.k_codes_f32_into(1, &mut scratch, &mut kc);
+            t.v_codes_f32_into(1, &mut scratch, &mut vc);
+            let (ks, kz) = t.k_meta_slot(1);
+            let (vs, vz) = t.v_meta_slot(1);
+            for i in 0..d {
+                let ek = ks[i / g] * kc[i] + kz[i / g];
+                let ev = vs[i / g] * vc[i] + vz[i / g];
+                prop_assert!(kd[i].to_bits() == ek.to_bits(), "k[{i}]: {} vs {ek}", kd[i]);
+                prop_assert!(vd[i].to_bits() == ev.to_bits(), "v[{i}]: {} vs {ev}", vd[i]);
+            }
+            Ok(())
+        });
     }
 
     #[test]

@@ -1,0 +1,805 @@
+//! Zero-allocation, delta-aware decode-step input assembly.
+//!
+//! The innermost serving loop used to rebuild the decode graph's batch
+//! host tensors from scratch on **every** step: 13 `vec![0.0; ..]`
+//! allocations zero-filled to `b × planes × max_seq × width` and then
+//! overwritten with each session's live rows. A [`StepArena`] replaces
+//! that with buffers that live as long as the engine:
+//!
+//! * **Zero allocation** — the arena's buffers are sized once per
+//!   `(batch, planes, max_seq)` shape and reused; a steady-state step
+//!   performs no heap allocation at all (asserted by
+//!   `benches/perf_decode_assembly.rs` with a counting global allocator).
+//! * **Watermark zeroing** — instead of zero-filling whole tensors, each
+//!   lane remembers how many rows it has ever filled (`live` watermark)
+//!   and re-zeroes only the rows that shrank when a shorter session (or
+//!   padding) takes the lane over.
+//! * **Delta copies** — each cache tracks the shadow rows it touched since
+//!   the engine last synchronized it ([`crate::kvcache::dirty`]). When a
+//!   lane still holds the same session at the matching sync version, the
+//!   step copies **only the dirty rows** (one appended row plus any
+//!   demoted victims) instead of the whole `0..seq_len` prefix. Any
+//!   mismatch — new session in the lane, missed take, prefill — falls back
+//!   to a full rescatter of the live prefix, so the fast path is never
+//!   load-bearing for correctness (property-tested below against a
+//!   from-scratch reference).
+//!
+//! The assembly entry points are free functions over `&mut Session` so the
+//! perf bench and the equivalence tests can drive the exact engine path
+//! without compiled artifacts or a PJRT runtime.
+
+use super::session::{Session, SessionCache};
+use crate::kvcache::dirty::MAX_TRACKED_ROWS;
+use crate::runtime::ModelDims;
+
+/// Cumulative assembly counters (reset with [`StepArena::reset_stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct AssemblyStats {
+    /// Assembly calls.
+    pub steps: u64,
+    /// Lanes refreshed via the dirty-row delta path.
+    pub delta_lanes: u64,
+    /// Lanes rebuilt via the full live-prefix rescatter.
+    pub full_lanes: u64,
+    /// Plane-rows copied (delta rows or live-prefix rows, × planes).
+    pub rows_copied: u64,
+    /// Bytes copied into the batch tensors.
+    pub bytes_copied: u64,
+    /// Bytes re-zeroed by the shrink watermarks.
+    pub bytes_zeroed: u64,
+    /// Buffer (re)shapes — arena allocations. 0 in steady state.
+    pub grows: u64,
+}
+
+/// What one lane of the batch currently holds.
+#[derive(Debug, Clone, Copy)]
+struct Lane {
+    /// The cached content may be delta-patched (false forces a rescatter).
+    valid: bool,
+    /// Session whose shadow this lane mirrors.
+    sid: u64,
+    /// The session cache's dirty-tracker version the lane is synced to.
+    version: u64,
+    /// Watermark: rows `0..live` may be nonzero; rows beyond are zero.
+    live: usize,
+}
+
+const EMPTY_LANE: Lane = Lane {
+    valid: false,
+    sid: 0,
+    version: 0,
+    live: 0,
+};
+
+/// Reusable decode-step batch tensors (see module docs). One arena per
+/// graph kind; block `i` is the `[b, planes, rows, widths[i]]` host tensor
+/// for the graph's `i`-th cache input, in graph-input order.
+pub struct StepArena {
+    widths: Vec<usize>,
+    /// Width of the per-lane `[planes, extra_width]` aux row (the MiKV
+    /// balancer inverse; 0 when the graph has none). Fill value is 1.0.
+    extra_width: usize,
+    b: usize,
+    planes: usize,
+    rows: usize,
+    /// `[b]` fed token per lane.
+    pub token: Vec<i64>,
+    /// `[b]` position (current seq_len) per lane.
+    pub pos: Vec<i64>,
+    blocks: Vec<Vec<f32>>,
+    /// `[b, planes, extra_width]` aux input (identity-filled).
+    pub extra: Vec<f32>,
+    lanes: Vec<Lane>,
+    /// Reusable dirty-row drain target (pre-reserved so takes never
+    /// allocate).
+    dirty_scratch: Vec<usize>,
+    pub stats: AssemblyStats,
+}
+
+impl StepArena {
+    /// An arena for cache blocks of the given per-row widths (graph-input
+    /// order) plus an optional per-lane aux row.
+    pub fn new(widths: &[usize], extra_width: usize) -> StepArena {
+        StepArena {
+            widths: widths.to_vec(),
+            extra_width,
+            b: 0,
+            planes: 0,
+            rows: 0,
+            token: Vec::new(),
+            pos: Vec::new(),
+            blocks: vec![Vec::new(); widths.len()],
+            extra: Vec::new(),
+            lanes: Vec::new(),
+            dirty_scratch: Vec::with_capacity(MAX_TRACKED_ROWS),
+            stats: AssemblyStats::default(),
+        }
+    }
+
+    /// Arena shaped for the `decode_mikv` graph: k_hi, v_hi, hi_mask,
+    /// k_lo_codes, k_lo_scale, k_lo_zero, v_lo_codes, v_lo_scale,
+    /// v_lo_zero, lo_mask — plus the `[planes, d]` balancer inverse aux.
+    pub fn for_mikv(dims: &ModelDims) -> StepArena {
+        let d = dims.d_head;
+        let g = dims.n_groups();
+        StepArena::new(&[d, d, 1, d, g, g, d, g, g, 1], d)
+    }
+
+    /// Arena shaped for the `decode_full` graph: k, v, mask.
+    pub fn for_full(dims: &ModelDims) -> StepArena {
+        let d = dims.d_head;
+        StepArena::new(&[d, d, 1], 0)
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.widths.len()
+    }
+
+    /// Lanes currently allocated (grow-only high-water mark over the
+    /// compiled batch sizes seen).
+    pub fn lanes_allocated(&self) -> usize {
+        self.b
+    }
+
+    /// Block `i`'s host tensor over all allocated lanes,
+    /// `[lanes_allocated, planes, rows, widths[i]]`.
+    pub fn block(&self, i: usize) -> &[f32] {
+        &self.blocks[i]
+    }
+
+    /// The `b`-lane prefix of block `i` — what a chunk compiled at batch
+    /// `b` uploads (the arena may hold more lanes than this chunk uses).
+    pub fn block_prefix(&self, i: usize, b: usize) -> &[f32] {
+        let w = self.widths[i];
+        &self.blocks[i][..b * self.planes * self.rows * w]
+    }
+
+    /// The `b`-lane prefix of the token input.
+    pub fn token_prefix(&self, b: usize) -> &[i64] {
+        &self.token[..b]
+    }
+
+    /// The `b`-lane prefix of the position input.
+    pub fn pos_prefix(&self, b: usize) -> &[i64] {
+        &self.pos[..b]
+    }
+
+    /// The `b`-lane prefix of the aux input.
+    pub fn extra_prefix(&self, b: usize) -> &[f32] {
+        &self.extra[..b * self.planes * self.extra_width]
+    }
+
+    /// Host bytes the arena pins (buffers + bookkeeping).
+    pub fn host_bytes(&self) -> usize {
+        let f = std::mem::size_of::<f32>();
+        self.blocks.iter().map(|b| b.capacity() * f).sum::<usize>()
+            + self.extra.capacity() * f
+            + (self.token.capacity() + self.pos.capacity()) * std::mem::size_of::<i64>()
+            + self.lanes.capacity() * std::mem::size_of::<Lane>()
+            + self.dirty_scratch.capacity() * std::mem::size_of::<usize>()
+    }
+
+    /// Forget every lane's cached content: the next assembly rebuilds each
+    /// lane through the full-rescatter path (watermarks are kept, so the
+    /// stale rows are still re-zeroed correctly).
+    pub fn invalidate(&mut self) {
+        for l in &mut self.lanes {
+            l.valid = false;
+        }
+    }
+
+    pub fn reset_stats(&mut self) {
+        self.stats = AssemblyStats::default();
+    }
+
+    /// Size the buffers for at least `b` lanes of `(planes, rows)`. Lane
+    /// capacity is **grow-only** and growth preserves existing lanes (the
+    /// layout is lane-major, so appending lanes never moves earlier ones)
+    /// — a step that alternates between compiled batch sizes keeps its
+    /// delta lanes instead of reshaping every chunk. A `(planes, rows)`
+    /// change (a different model's dims) rebuilds from scratch. The
+    /// steady-state call is a no-op.
+    pub fn ensure_shape(&mut self, b: usize, planes: usize, rows: usize) {
+        let reshape = planes != self.planes || rows != self.rows;
+        if !reshape && b <= self.b {
+            return;
+        }
+        self.stats.grows += 1;
+        if reshape {
+            self.planes = planes;
+            self.rows = rows;
+            for buf in &mut self.blocks {
+                buf.clear();
+            }
+            self.extra.clear();
+            self.token.clear();
+            self.pos.clear();
+            self.lanes.clear();
+            self.b = 0;
+        }
+        let target = b.max(self.b);
+        for (buf, &w) in self.blocks.iter_mut().zip(&self.widths) {
+            buf.resize(target * planes * rows * w, 0.0);
+        }
+        self.extra.resize(target * planes * self.extra_width, 1.0);
+        self.token.resize(target, 0);
+        self.pos.resize(target, 0);
+        self.lanes.resize(target, EMPTY_LANE);
+        self.b = target;
+    }
+
+    /// Zero rows `from..to` of every plane of `lane` across all blocks.
+    fn zero_lane_rows(&mut self, lane: usize, from: usize, to: usize) {
+        if from >= to {
+            return;
+        }
+        let (planes, rows) = (self.planes, self.rows);
+        for (buf, &w) in self.blocks.iter_mut().zip(&self.widths) {
+            for p in 0..planes {
+                let base = (lane * planes + p) * rows;
+                buf[(base + from) * w..(base + to) * w].fill(0.0);
+            }
+            self.stats.bytes_zeroed += ((to - from) * w * planes * 4) as u64;
+        }
+    }
+
+    /// Full rescatter of block `i`, lane `lane`: copy the live `0..live`
+    /// prefix of every plane from a session block with row stride `cap`.
+    fn copy_rows_full(&mut self, i: usize, lane: usize, src: &[f32], cap: usize, live: usize) {
+        let w = self.widths[i];
+        let (planes, rows) = (self.planes, self.rows);
+        let buf = &mut self.blocks[i];
+        for p in 0..planes {
+            let d0 = (lane * planes + p) * rows * w;
+            let s0 = p * cap * w;
+            buf[d0..d0 + live * w].copy_from_slice(&src[s0..s0 + live * w]);
+        }
+        self.stats.bytes_copied += (planes * live * w * 4) as u64;
+    }
+
+    /// Delta patch of block `i`, lane `lane`: copy only `rows_list` rows of
+    /// every plane.
+    fn copy_rows_delta(
+        &mut self,
+        i: usize,
+        lane: usize,
+        src: &[f32],
+        cap: usize,
+        rows_list: &[usize],
+    ) {
+        let w = self.widths[i];
+        let (planes, rows) = (self.planes, self.rows);
+        let buf = &mut self.blocks[i];
+        for p in 0..planes {
+            let dbase = (lane * planes + p) * rows;
+            let sbase = p * cap;
+            for &r in rows_list {
+                let d0 = (dbase + r) * w;
+                let s0 = (sbase + r) * w;
+                buf[d0..d0 + w].copy_from_slice(&src[s0..s0 + w]);
+            }
+        }
+        self.stats.bytes_copied += (planes * rows_list.len() * w * 4) as u64;
+    }
+
+    /// Turn `lane` into a zero padding lane (stale rows re-zeroed up to the
+    /// watermark, aux row reset to the identity fill).
+    fn retire_lane(&mut self, lane: usize) {
+        let prev = self.lanes[lane];
+        self.zero_lane_rows(lane, 0, prev.live);
+        if self.extra_width > 0 {
+            let e0 = lane * self.planes * self.extra_width;
+            self.extra[e0..e0 + self.planes * self.extra_width].fill(1.0);
+        }
+        self.token[lane] = 0;
+        self.pos[lane] = 0;
+        self.lanes[lane] = EMPTY_LANE;
+    }
+
+    /// The per-lane delta/full protocol shared by [`assemble_mikv`] and
+    /// [`assemble_full`]: patch the lane with the drained dirty rows when
+    /// the `(session, sync-version)` handshake holds, otherwise re-zero the
+    /// shrunk tail and rescatter the live prefix (and refresh the aux row,
+    /// which only changes on `take.all` mutations). `srcs` are the session
+    /// blocks in block order, row stride `cap`; the dirty rows sit in
+    /// `self.dirty_scratch` (drained there by the caller's take).
+    fn fill_lane(
+        &mut self,
+        lane: usize,
+        sid: u64,
+        take: crate::kvcache::DirtyTake,
+        srcs: &[&[f32]],
+        cap: usize,
+        live: usize,
+        aux: Option<&[f32]>,
+    ) {
+        debug_assert_eq!(srcs.len(), self.widths.len());
+        let prev = self.lanes[lane];
+        let delta_ok = prev.valid
+            && prev.sid == sid
+            && prev.version == take.prev_version
+            && !take.all
+            && live >= prev.live;
+        if delta_ok {
+            let dirty = std::mem::take(&mut self.dirty_scratch);
+            debug_assert!(dirty.iter().all(|&r| r < live));
+            for (i, src) in srcs.iter().enumerate() {
+                self.copy_rows_delta(i, lane, src, cap, &dirty);
+            }
+            self.stats.delta_lanes += 1;
+            self.stats.rows_copied += (dirty.len() * self.planes) as u64;
+            self.dirty_scratch = dirty;
+            // The aux row (balancer inverse) only changes at prefill, which
+            // forces `take.all`: nothing to refresh on the delta path.
+        } else {
+            self.zero_lane_rows(lane, live, prev.live);
+            for (i, src) in srcs.iter().enumerate() {
+                self.copy_rows_full(i, lane, src, cap, live);
+            }
+            if let Some(aux) = aux {
+                debug_assert_eq!(aux.len(), self.planes * self.extra_width);
+                let e0 = lane * self.planes * self.extra_width;
+                self.extra[e0..e0 + aux.len()].copy_from_slice(aux);
+                self.stats.bytes_copied += (aux.len() * 4) as u64;
+            }
+            self.stats.full_lanes += 1;
+            self.stats.rows_copied += (live * self.planes) as u64;
+        }
+        self.lanes[lane] = Lane {
+            valid: true,
+            sid,
+            version: take.version,
+            live,
+        };
+    }
+}
+
+/// Assemble the `decode_mikv` batch inputs for `sessions` into `arena`
+/// (compiled batch size `b`; lanes `sessions.len()..b` become zero
+/// padding). Lanes whose cached `(session, sync-version)` matches take the
+/// dirty-row delta path; everything else full-rescatters the live prefix.
+pub fn assemble_mikv(
+    arena: &mut StepArena,
+    dims: &ModelDims,
+    b: usize,
+    sessions: &mut [&mut Session],
+) -> crate::Result<()> {
+    let planes = dims.planes();
+    let s = dims.max_seq;
+    let ng = dims.n_groups();
+    anyhow::ensure!(sessions.len() <= b, "chunk of {} > batch {b}", sessions.len());
+    arena.ensure_shape(b, planes, s);
+    arena.stats.steps += 1;
+
+    for (lane, sess) in sessions.iter_mut().enumerate() {
+        let sid = sess.id;
+        arena.token[lane] = sess.last_token;
+        arena.pos[lane] = sess.cache.seq_len() as i64;
+        let m = match &mut sess.cache {
+            SessionCache::Mikv(m) => m,
+            _ => anyhow::bail!("session {sid} is not MiKV"),
+        };
+        anyhow::ensure!(
+            m.groups() == ng,
+            "session {sid}: cache has {} scale groups per token, graph expects {ng}",
+            m.groups()
+        );
+        let take = m.take_dirty_into(&mut arena.dirty_scratch);
+        let views = m.decode_views();
+        let (cap, live) = (views.cap, views.seq_len.min(s));
+        let srcs: [&[f32]; 10] = [
+            views.k_hi,
+            views.v_hi,
+            views.hi_mask,
+            views.k_lo_codes,
+            views.k_lo_scale,
+            views.k_lo_zero,
+            views.v_lo_codes,
+            views.v_lo_scale,
+            views.v_lo_zero,
+            views.lo_mask,
+        ];
+        arena.fill_lane(lane, sid, take, &srcs, cap, live, Some(views.inv_balancer));
+    }
+    for lane in sessions.len()..b {
+        arena.retire_lane(lane);
+    }
+    Ok(())
+}
+
+/// Assemble the `decode_full` batch inputs (k, v, mask) for full/oracle
+/// sessions into `arena`, with the same delta/full lane protocol as
+/// [`assemble_mikv`].
+pub fn assemble_full(
+    arena: &mut StepArena,
+    dims: &ModelDims,
+    b: usize,
+    sessions: &mut [&mut Session],
+) -> crate::Result<()> {
+    let planes = dims.planes();
+    let s = dims.max_seq;
+    anyhow::ensure!(sessions.len() <= b, "chunk of {} > batch {b}", sessions.len());
+    arena.ensure_shape(b, planes, s);
+    arena.stats.steps += 1;
+
+    for (lane, sess) in sessions.iter_mut().enumerate() {
+        let sid = sess.id;
+        arena.token[lane] = sess.last_token;
+        arena.pos[lane] = sess.cache.seq_len() as i64;
+        let f = match &mut sess.cache {
+            SessionCache::Full(f) => f,
+            _ => anyhow::bail!("session {sid} is not Full/Oracle"),
+        };
+        let take = f.take_dirty_into(&mut arena.dirty_scratch);
+        // FullCache blocks are dense at `max_seq` stride already.
+        let (cap, live) = (s, f.seq_len.min(s));
+        let srcs: [&[f32]; 3] = [&f.k, &f.v, &f.mask];
+        arena.fill_lane(lane, sid, take, &srcs, cap, live, None);
+    }
+    for lane in sessions.len()..b {
+        arena.retire_lane(lane);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{CacheMode, Session};
+    use crate::quant::Precision;
+    use crate::util::prop::{forall, Config};
+    use crate::util::rng::Pcg32;
+
+    fn dims(max_seq: usize) -> ModelDims {
+        ModelDims {
+            vocab: 32,
+            d_model: 32,
+            n_layers: 2,
+            n_q_heads: 2,
+            n_kv_heads: 2,
+            d_head: 8,
+            d_ff: 32,
+            max_seq,
+            // n_groups() must match the MiKV lo tier's head_dim/2 grouping
+            quant_group: 4,
+            params: 0,
+        }
+    }
+
+    fn mikv_session(id: u64, d: &ModelDims, prompt_len: usize, rng: &mut Pcg32) -> Session {
+        let mode = CacheMode::mikv(d, 0.25, Precision::Int4);
+        let mut sess = Session::new(id, d, mode).unwrap();
+        prefill(&mut sess, d, prompt_len, rng);
+        sess
+    }
+
+    fn prefill(sess: &mut Session, d: &ModelDims, t: usize, rng: &mut Pcg32) {
+        let planes = d.planes();
+        let dh = d.d_head;
+        let k: Vec<f32> = (0..planes * t * dh).map(|_| rng.gen_normal()).collect();
+        let v: Vec<f32> = (0..planes * t * dh).map(|_| rng.gen_normal()).collect();
+        match &mut sess.cache {
+            SessionCache::Mikv(m) => {
+                let acc: Vec<f32> = (0..planes * t).map(|_| rng.gen_f32()).collect();
+                let qmax: Vec<f32> = (0..planes * dh).map(|_| rng.gen_f32() + 0.5).collect();
+                let kmax: Vec<f32> = (0..planes * dh).map(|_| rng.gen_f32() + 0.5).collect();
+                m.ingest_prefill(t, &k, &v, &acc, &qmax, &kmax);
+            }
+            SessionCache::Full(f) => f.ingest_prefill(t, &k, &v),
+        }
+        sess.prompt_len = t;
+        sess.tokens = vec![1; t];
+        sess.last_token = (t % 7) as i64;
+    }
+
+    fn step(sess: &mut Session, d: &ModelDims, rng: &mut Pcg32) {
+        let planes = d.planes();
+        let dh = d.d_head;
+        let k: Vec<f32> = (0..planes * dh).map(|_| rng.gen_normal()).collect();
+        let v: Vec<f32> = (0..planes * dh).map(|_| rng.gen_normal()).collect();
+        let ap: Vec<f32> = (0..planes * d.max_seq).map(|_| rng.gen_f32() * 0.1).collect();
+        let asf: Vec<f32> = (0..planes).map(|_| rng.gen_f32() * 0.1).collect();
+        sess.try_ingest_step(&k, &v, &ap, &asf).unwrap();
+        sess.last_token = (sess.last_token + 1) % 32;
+        sess.tokens.push(sess.last_token);
+    }
+
+    /// From-scratch reference: what the pre-arena engine built each step
+    /// (fresh zero-filled tensors + live-prefix scatter). The arena's
+    /// buffers must be bit-identical to this after every assembly, no
+    /// matter which lanes took the delta path.
+    fn expected_mikv(
+        d: &ModelDims,
+        b: usize,
+        sessions: &[&mut Session],
+    ) -> (Vec<i64>, Vec<i64>, Vec<Vec<f32>>, Vec<f32>) {
+        let planes = d.planes();
+        let (s, dh) = (d.max_seq, d.d_head);
+        let ng = d.n_groups();
+        let widths = [dh, dh, 1, dh, ng, ng, dh, ng, ng, 1];
+        let mut token = vec![0i64; b];
+        let mut pos = vec![0i64; b];
+        let mut blocks: Vec<Vec<f32>> = widths
+            .iter()
+            .map(|w| vec![0.0f32; b * planes * s * w])
+            .collect();
+        let mut extra = vec![1.0f32; b * planes * dh];
+        for (lane, sess) in sessions.iter().enumerate() {
+            token[lane] = sess.last_token;
+            pos[lane] = sess.cache.seq_len() as i64;
+            let m = match &sess.cache {
+                SessionCache::Mikv(m) => m,
+                _ => unreachable!(),
+            };
+            let views = m.decode_views();
+            let (cap, live) = (views.cap, views.seq_len.min(s));
+            let srcs: [&[f32]; 10] = [
+                views.k_hi,
+                views.v_hi,
+                views.hi_mask,
+                views.k_lo_codes,
+                views.k_lo_scale,
+                views.k_lo_zero,
+                views.v_lo_codes,
+                views.v_lo_scale,
+                views.v_lo_zero,
+                views.lo_mask,
+            ];
+            for ((dst, src), &w) in blocks.iter_mut().zip(srcs.iter()).zip(widths.iter()) {
+                for p in 0..planes {
+                    let d0 = (lane * planes + p) * s * w;
+                    let s0 = p * cap * w;
+                    dst[d0..d0 + live * w].copy_from_slice(&src[s0..s0 + live * w]);
+                }
+            }
+            extra[lane * planes * dh..(lane + 1) * planes * dh]
+                .copy_from_slice(views.inv_balancer);
+        }
+        (token, pos, blocks, extra)
+    }
+
+    fn assert_arena_matches(
+        arena: &StepArena,
+        expect: &(Vec<i64>, Vec<i64>, Vec<Vec<f32>>, Vec<f32>),
+        label: &str,
+    ) {
+        assert_eq!(arena.token, expect.0, "{label}: token");
+        assert_eq!(arena.pos, expect.1, "{label}: pos");
+        for (i, want) in expect.2.iter().enumerate() {
+            let got = arena.block(i);
+            assert_eq!(got.len(), want.len(), "{label}: block {i} len");
+            for (j, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+                assert!(
+                    g.to_bits() == w.to_bits(),
+                    "{label}: block {i} elem {j}: {g} != {w}"
+                );
+            }
+        }
+        assert_eq!(arena.extra, expect.3, "{label}: extra");
+    }
+
+    /// The delta-path equivalence property (tentpole acceptance): after
+    /// arbitrary admit/observe/demote/append activity, delta-assembled
+    /// batch tensors are bit-identical to a full rescatter — including
+    /// lane-shrink re-zeroing when a shorter session takes over a lane,
+    /// padding-lane retirement, and the lane-migration fallback.
+    #[test]
+    fn property_delta_assembly_matches_full_rescatter() {
+        forall(Config::default().cases(25).name("delta assembly"), |rng| {
+            let d = dims(48);
+            let n = 1 + rng.gen_below(3) as usize;
+            let b = n + rng.gen_below(2) as usize; // sometimes padding lanes
+            let mut sessions: Vec<Session> = (0..n)
+                .map(|i| {
+                    let t = 2 + rng.gen_below(12) as usize;
+                    mikv_session(i as u64 + 1, &d, t, rng)
+                })
+                .collect();
+            let mut arena = StepArena::for_mikv(&d);
+
+            let steps = 2 + rng.gen_below(8) as usize;
+            for stepno in 0..steps {
+                // occasionally shuffle the lane assignment (migration +
+                // shrink edges: a shorter session can land on a lane that
+                // held a longer one)
+                if rng.gen_bool(0.3) {
+                    rng.shuffle(&mut sessions);
+                }
+                for sess in sessions.iter_mut() {
+                    if sess.cache.seq_len() < d.max_seq {
+                        step(sess, &d, rng);
+                    }
+                }
+                let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
+                assemble_mikv(&mut arena, &d, b, &mut refs)
+                    .map_err(|e| format!("assemble failed: {e}"))?;
+                let expect = expected_mikv(&d, b, &refs);
+                assert_arena_matches(&arena, &expect, &format!("step {stepno}"));
+            }
+            // the fast path must actually fire on quiet steps
+            if steps >= 4 {
+                crate::prop_assert!(
+                    arena.stats.delta_lanes + arena.stats.full_lanes > 0,
+                    "no lanes assembled?"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// Deterministic delta-path exercise: steady lanes use the delta path,
+    /// a lane migration falls back to full, and a padding lane left behind
+    /// by a retired session is re-zeroed.
+    #[test]
+    fn delta_full_and_padding_transitions() {
+        let d = dims(64);
+        let mut rng = Pcg32::new(31);
+        let mut a = mikv_session(1, &d, 10, &mut rng);
+        let mut b_sess = mikv_session(2, &d, 4, &mut rng);
+        let mut arena = StepArena::for_mikv(&d);
+
+        // step 1: both lanes full (first sight)
+        {
+            let mut refs = [&mut a, &mut b_sess];
+            assemble_mikv(&mut arena, &d, 2, &mut refs).unwrap();
+        }
+        assert_eq!(arena.stats.full_lanes, 2);
+        assert_eq!(arena.stats.delta_lanes, 0);
+
+        // step 2: append to both → both lanes delta
+        step(&mut a, &d, &mut rng);
+        step(&mut b_sess, &d, &mut rng);
+        {
+            let mut refs = [&mut a, &mut b_sess];
+            assemble_mikv(&mut arena, &d, 2, &mut refs).unwrap();
+            let expect = expected_mikv(&d, 2, &refs);
+            assert_arena_matches(&arena, &expect, "steady delta");
+        }
+        assert_eq!(arena.stats.delta_lanes, 2, "steady lanes take the delta path");
+
+        // step 3: swap lanes → both full (lane-migration fallback); the
+        // shorter session lands on the longer session's lane (shrink zeroing)
+        {
+            let mut refs = [&mut b_sess, &mut a];
+            assemble_mikv(&mut arena, &d, 2, &mut refs).unwrap();
+            let expect = expected_mikv(&d, 2, &refs);
+            assert_arena_matches(&arena, &expect, "after swap");
+        }
+        assert_eq!(arena.stats.delta_lanes, 2, "no delta on migrated lanes");
+        assert_eq!(arena.stats.full_lanes, 4);
+
+        // step 4: one session retires → its lane becomes padding and is
+        // fully re-zeroed; the surviving session keeps its (new) lane and
+        // goes back to delta
+        step(&mut b_sess, &d, &mut rng);
+        {
+            let mut refs = [&mut b_sess];
+            assemble_mikv(&mut arena, &d, 2, &mut refs).unwrap();
+            let expect = expected_mikv(&d, 2, &refs);
+            assert_arena_matches(&arena, &expect, "after retirement");
+        }
+        assert_eq!(arena.stats.delta_lanes, 3);
+
+        // invalidate() forces full without losing correctness
+        step(&mut b_sess, &d, &mut rng);
+        arena.invalidate();
+        {
+            let mut refs = [&mut b_sess];
+            assemble_mikv(&mut arena, &d, 2, &mut refs).unwrap();
+            let expect = expected_mikv(&d, 2, &refs);
+            assert_arena_matches(&arena, &expect, "after invalidate");
+        }
+        assert_eq!(arena.stats.full_lanes, 5);
+    }
+
+    /// Full/oracle-cache assembly: same protocol over the dense blocks.
+    #[test]
+    fn assemble_full_matches_reference() {
+        let d = dims(32);
+        let mut rng = Pcg32::new(33);
+        let mut sess = Session::new(5, &d, CacheMode::Full).unwrap();
+        prefill(&mut sess, &d, 6, &mut rng);
+        let mut arena = StepArena::for_full(&d);
+        let planes = d.planes();
+        let (s, dh) = (d.max_seq, d.d_head);
+
+        for stepno in 0..4 {
+            step(&mut sess, &d, &mut rng);
+            {
+                let mut refs = [&mut sess];
+                assemble_full(&mut arena, &d, 2, &mut refs).unwrap();
+            }
+            let f = match &sess.cache {
+                SessionCache::Full(f) => f,
+                _ => unreachable!(),
+            };
+            // reference: lane 0 = the dense blocks verbatim, lane 1 zero
+            let srcs: [(&[f32], usize); 3] = [(&f.k, dh), (&f.v, dh), (&f.mask, 1)];
+            for (i, (src, w)) in srcs.iter().enumerate() {
+                let w = *w;
+                let got = arena.block(i);
+                assert_eq!(got.len(), 2 * planes * s * w);
+                assert_eq!(&got[..planes * s * w], *src, "step {stepno} block {i}");
+                assert!(
+                    got[planes * s * w..].iter().all(|&x| x == 0.0),
+                    "step {stepno} block {i}: padding lane dirty"
+                );
+            }
+            assert_eq!(arena.pos[0], f.seq_len as i64);
+        }
+        assert!(arena.stats.delta_lanes >= 3, "full-cache lanes delta after first step");
+    }
+
+    /// Lane capacity is grow-only and growth preserves cached lanes: a
+    /// step alternating between compiled batch sizes keeps its deltas and
+    /// uploads b-lane prefixes of the wider buffers.
+    #[test]
+    fn lane_capacity_grows_without_losing_cached_lanes() {
+        let d = dims(64);
+        let mut rng = Pcg32::new(35);
+        let mut a = mikv_session(1, &d, 8, &mut rng);
+        let mut b_sess = mikv_session(2, &d, 8, &mut rng);
+        let mut arena = StepArena::for_mikv(&d);
+
+        {
+            let mut refs = [&mut a];
+            assemble_mikv(&mut arena, &d, 1, &mut refs).unwrap();
+        }
+        assert_eq!(arena.lanes_allocated(), 1);
+
+        // grow to b=2: lane 0's cached content survives and stays delta
+        step(&mut a, &d, &mut rng);
+        step(&mut b_sess, &d, &mut rng);
+        {
+            let mut refs = [&mut a, &mut b_sess];
+            assemble_mikv(&mut arena, &d, 2, &mut refs).unwrap();
+            let expect = expected_mikv(&d, 2, &refs);
+            assert_arena_matches(&arena, &expect, "after growth");
+        }
+        assert_eq!(arena.lanes_allocated(), 2);
+        assert_eq!(arena.stats.delta_lanes, 1, "lane 0 survived the growth");
+
+        // back to b=1: prefix upload out of the wider buffer, lane 0 delta
+        step(&mut a, &d, &mut rng);
+        {
+            let mut refs = [&mut a];
+            assemble_mikv(&mut arena, &d, 1, &mut refs).unwrap();
+        }
+        assert_eq!(arena.stats.delta_lanes, 2);
+        assert_eq!(arena.lanes_allocated(), 2, "capacity never shrinks");
+        assert_eq!(arena.block_prefix(0, 1).len(), arena.block(0).len() / 2);
+        assert_eq!(arena.token_prefix(1).len(), 1);
+    }
+
+    /// Steady state never reallocates: one grow at first shape, then none,
+    /// and the per-step copy volume on the delta path is bounded by the
+    /// dirty rows, far below the live prefix.
+    #[test]
+    fn arena_steady_state_does_not_grow_and_copies_little() {
+        let d = dims(64);
+        let mut rng = Pcg32::new(34);
+        let mut sess = mikv_session(9, &d, 40, &mut rng);
+        let mut arena = StepArena::for_mikv(&d);
+        {
+            let mut refs = [&mut sess];
+            assemble_mikv(&mut arena, &d, 1, &mut refs).unwrap();
+        }
+        assert_eq!(arena.stats.grows, 1);
+        let full_bytes = arena.stats.bytes_copied;
+
+        arena.reset_stats();
+        for _ in 0..8 {
+            step(&mut sess, &d, &mut rng);
+            let mut refs = [&mut sess];
+            assemble_mikv(&mut arena, &d, 1, &mut refs).unwrap();
+        }
+        assert_eq!(arena.stats.grows, 0, "steady state never reshapes");
+        assert_eq!(arena.stats.full_lanes, 0, "steady state never rescatters");
+        assert_eq!(arena.stats.delta_lanes, 8);
+        let delta_bytes_per_step = arena.stats.bytes_copied / 8;
+        assert!(
+            delta_bytes_per_step * 5 <= full_bytes,
+            "delta copies {delta_bytes_per_step} B/step vs {full_bytes} B full"
+        );
+    }
+}

@@ -3,8 +3,11 @@
 //! One [`Engine`] owns a model's compiled executables and its weights as
 //! device-resident PJRT buffers (uploaded once at load). Each step:
 //!
-//! 1. assemble the batch host tensors from the sessions' cache managers
-//!    (plane-major blocks are contiguous per session — one memcpy each);
+//! 1. assemble the batch host tensors into the engine's reusable
+//!    [`StepArena`]s (`model::assembly`): steady-state lanes copy only the
+//!    rows their session's cache touched since the previous step, with a
+//!    full live-prefix rescatter as the fallback — and no per-step heap
+//!    allocation either way;
 //! 2. upload + execute the right graph (`decode_mikv` or `decode_full`);
 //! 3. scatter the outputs back: append the new token's K/V to each cache,
 //!    feed the attention row to the importance policy, return logits.
@@ -13,14 +16,27 @@
 //! the MiKV graph (the config lives in the masks/codes, not the graph);
 //! Full and Oracle sessions share the `decode_full` graph when their
 //! `oracle_k` agrees.
+//!
+//! Known lane-caching limitation: arena lanes are indexed per chunk (the
+//! arena's lane capacity is the grow-only max over compiled batch sizes,
+//! so alternating chunk sizes do NOT reshape it), so when one
+//! `decode_step` splits into several chunks — or several decode groups
+//! share a graph kind in one scheduler round (e.g. concurrent distinct
+//! `oracle_k` groups on `decode_full`) — the calls share low lane indices
+//! and the overlapping lanes fall back to the (still correct) full
+//! rescatter. Single-chunk, single-group steps — the bench shape and the
+//! common serving shape — get the delta path on every lane.
 
+use super::assembly::{assemble_full, assemble_mikv, StepArena};
 use super::sampler;
 use super::session::{CacheMode, Session, SessionCache};
 use crate::runtime::artifacts::{Manifest, ModelDims, ModelEntry};
 use crate::runtime::client::{Executable, HostInput, Runtime};
 use crate::runtime::weights::Weights;
+use std::cell::{Cell, RefCell};
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::time::Instant;
 use xla::PjRtBuffer;
 
 /// Raw prefill outputs for one session (used by the experiment harness to
@@ -47,6 +63,14 @@ pub struct Engine {
     prefill: BTreeMap<usize, Executable>,
     decode_mikv: BTreeMap<usize, Executable>,
     decode_full: BTreeMap<usize, Executable>,
+    // Reusable decode-step host tensors (one arena per graph kind). The
+    // engine lives on one thread (PJRT handles are not `Send`); RefCell
+    // gives the `&self` step methods interior mutability without locks.
+    arena_mikv: RefCell<StepArena>,
+    arena_full: RefCell<StepArena>,
+    /// Host-side assembly nanoseconds spent in the current/most recent
+    /// `decode_step` call (reset at entry, accumulated across chunks).
+    assembly_ns: Cell<u64>,
 }
 
 impl Engine {
@@ -88,6 +112,8 @@ impl Engine {
             entry.dims.params,
             entry.graphs.len()
         );
+        let arena_mikv = RefCell::new(StepArena::for_mikv(&entry.dims));
+        let arena_full = RefCell::new(StepArena::for_full(&entry.dims));
         Ok(Engine {
             rt,
             entry,
@@ -95,6 +121,9 @@ impl Engine {
             prefill,
             decode_mikv,
             decode_full,
+            arena_mikv,
+            arena_full,
+            assembly_ns: Cell::new(0),
         })
     }
 
@@ -104,6 +133,12 @@ impl Engine {
 
     pub fn runtime(&self) -> &Runtime {
         &self.rt
+    }
+
+    /// Host-side input-assembly time (µs) of the most recent
+    /// [`Self::decode_step`] call.
+    pub fn last_assembly_us(&self) -> f64 {
+        self.assembly_ns.get() as f64 / 1e3
     }
 
     /// Compiled batch sizes for a graph kind.
@@ -249,6 +284,7 @@ impl Engine {
         };
         let avail: Vec<usize> = map.keys().copied().collect();
         anyhow::ensure!(!avail.is_empty(), "no {kind} graph compiled");
+        self.assembly_ns.set(0);
 
         let mut logits_rows = Vec::with_capacity(sessions.len());
         let mut i = 0;
@@ -275,86 +311,46 @@ impl Engine {
     ) -> crate::Result<Vec<Vec<f32>>> {
         let d = &self.entry.dims;
         let b = exe.entry.batch;
-        let planes = d.planes();
-        let (s, dh) = (d.max_seq, d.d_head);
-        let ng = d.n_groups();
         let n = sessions.len();
 
-        // Batch host tensors (padding lanes stay zero: masks 0 ⇒ the pad
-        // lane attends only to its own token; outputs are discarded).
-        let mut token = vec![0i64; b];
-        let mut pos = vec![0i64; b];
-        let big = planes * s * dh;
-        let med = planes * s * ng;
-        let sml = planes * s;
-        let mut k_hi = vec![0.0f32; b * big];
-        let mut v_hi = vec![0.0f32; b * big];
-        let mut hi_mask = vec![0.0f32; b * sml];
-        let mut k_lo_c = vec![0.0f32; b * big];
-        let mut k_lo_s = vec![0.0f32; b * med];
-        let mut k_lo_z = vec![0.0f32; b * med];
-        let mut v_lo_c = vec![0.0f32; b * big];
-        let mut v_lo_s = vec![0.0f32; b * med];
-        let mut v_lo_z = vec![0.0f32; b * med];
-        let mut lo_mask = vec![0.0f32; b * sml];
-        let mut inv_b = vec![1.0f32; b * planes * dh];
-
-        for (lane, sess) in sessions.iter().enumerate() {
-            token[lane] = sess.last_token;
-            pos[lane] = sess.cache.seq_len() as i64;
-            let m = match &sess.cache {
-                SessionCache::Mikv(m) => m,
-                _ => anyhow::bail!("session {} is not MiKV", sess.id),
-            };
-            // Length-aware assembly: the manager's shadow blocks are sized
-            // to its pooled capacity; only the live `seq_len` rows are
-            // copied here and the padding to the graph's `max_seq` is the
-            // batch tensors' zero initialization (done once per step, not
-            // per session).
-            let views = m.decode_views();
-            anyhow::ensure!(
-                views.groups == ng,
-                "session {}: cache has {} scale groups per token, graph expects {ng}",
-                sess.id,
-                views.groups
-            );
-            let (cap, live) = (views.cap, views.seq_len.min(s));
-            scatter_block(&mut k_hi, lane, planes, s, views.k_hi, cap, live, dh);
-            scatter_block(&mut v_hi, lane, planes, s, views.v_hi, cap, live, dh);
-            scatter_block(&mut hi_mask, lane, planes, s, views.hi_mask, cap, live, 1);
-            scatter_block(&mut k_lo_c, lane, planes, s, views.k_lo_codes, cap, live, dh);
-            scatter_block(&mut k_lo_s, lane, planes, s, views.k_lo_scale, cap, live, ng);
-            scatter_block(&mut k_lo_z, lane, planes, s, views.k_lo_zero, cap, live, ng);
-            scatter_block(&mut v_lo_c, lane, planes, s, views.v_lo_codes, cap, live, dh);
-            scatter_block(&mut v_lo_s, lane, planes, s, views.v_lo_scale, cap, live, ng);
-            scatter_block(&mut v_lo_z, lane, planes, s, views.v_lo_zero, cap, live, ng);
-            scatter_block(&mut lo_mask, lane, planes, s, views.lo_mask, cap, live, 1);
-            inv_b[lane * planes * dh..(lane + 1) * planes * dh]
-                .copy_from_slice(views.inv_balancer);
-        }
+        // Delta-aware, allocation-free assembly into the reusable arena:
+        // lanes whose session kept its lane since the previous step copy
+        // only the dirty rows; padding lanes stay zero via the watermark
+        // re-zeroing (masks 0 ⇒ a pad lane attends only to its own token;
+        // outputs are discarded).
+        let t0 = Instant::now();
+        let mut arena = self.arena_mikv.borrow_mut();
+        assemble_mikv(&mut arena, d, b, sessions)?;
+        self.assembly_ns
+            .set(self.assembly_ns.get() + t0.elapsed().as_nanos() as u64);
 
         let n_w = self.weight_bufs.len();
         let specs = &exe.entry.inputs;
+        // Upload the b-lane prefixes (the arena's lane capacity is the
+        // grow-only max over compiled batch sizes, so it may exceed this
+        // chunk's b).
         let host: Vec<HostInput<'_>> = vec![
-            HostInput::I64(&token),
-            HostInput::I64(&pos),
-            HostInput::F32(&k_hi),
-            HostInput::F32(&v_hi),
-            HostInput::F32(&hi_mask),
-            HostInput::F32(&k_lo_c),
-            HostInput::F32(&k_lo_s),
-            HostInput::F32(&k_lo_z),
-            HostInput::F32(&v_lo_c),
-            HostInput::F32(&v_lo_s),
-            HostInput::F32(&v_lo_z),
-            HostInput::F32(&lo_mask),
-            HostInput::F32(&inv_b),
+            HostInput::I64(arena.token_prefix(b)),
+            HostInput::I64(arena.pos_prefix(b)),
+            HostInput::F32(arena.block_prefix(0, b)), // k_hi
+            HostInput::F32(arena.block_prefix(1, b)), // v_hi
+            HostInput::F32(arena.block_prefix(2, b)), // hi_mask
+            HostInput::F32(arena.block_prefix(3, b)), // k_lo_codes
+            HostInput::F32(arena.block_prefix(4, b)), // k_lo_scale
+            HostInput::F32(arena.block_prefix(5, b)), // k_lo_zero
+            HostInput::F32(arena.block_prefix(6, b)), // v_lo_codes
+            HostInput::F32(arena.block_prefix(7, b)), // v_lo_scale
+            HostInput::F32(arena.block_prefix(8, b)), // v_lo_zero
+            HostInput::F32(arena.block_prefix(9, b)), // lo_mask
+            HostInput::F32(arena.extra_prefix(b)),    // inv_balancer
         ];
         let bufs = host
             .iter()
             .enumerate()
             .map(|(j, h)| self.rt.upload(&specs[n_w + j], h))
             .collect::<crate::Result<Vec<_>>>()?;
+        drop(host);
+        drop(arena);
         let mut args: Vec<&PjRtBuffer> = self.weight_bufs.iter().collect();
         args.extend(bufs.iter());
         let outs = exe.execute(&args)?;
@@ -368,32 +364,16 @@ impl Engine {
     ) -> crate::Result<Vec<Vec<f32>>> {
         let d = &self.entry.dims;
         let b = exe.entry.batch;
-        let planes = d.planes();
-        let (s, dh) = (d.max_seq, d.d_head);
-        let big = planes * s * dh;
-        let sml = planes * s;
+        let s = d.max_seq;
 
-        let mut token = vec![0i64; b];
-        let mut pos = vec![0i64; b];
-        let mut k_full = vec![0.0f32; b * big];
-        let mut v_full = vec![0.0f32; b * big];
-        let mut mask = vec![0.0f32; b * sml];
+        // Oracle homogeneity is a mode property — resolve it before the
+        // assembly mutates arena state.
         let mut oracle_k: i64 = (s + 1) as i64;
-        for (lane, sess) in sessions.iter().enumerate() {
-            token[lane] = sess.last_token;
-            pos[lane] = sess.cache.seq_len() as i64;
+        for sess in sessions.iter() {
             if let CacheMode::Oracle { k } = sess.mode {
                 oracle_k = k as i64;
             }
-            let f = match &sess.cache {
-                SessionCache::Full(f) => f,
-                _ => anyhow::bail!("session {} is not Full/Oracle", sess.id),
-            };
-            k_full[lane * big..(lane + 1) * big].copy_from_slice(&f.k);
-            v_full[lane * big..(lane + 1) * big].copy_from_slice(&f.v);
-            mask[lane * sml..(lane + 1) * sml].copy_from_slice(&f.mask);
         }
-        // homogeneity check for oracle batches
         for sess in sessions.iter() {
             match sess.mode {
                 CacheMode::Oracle { k } => {
@@ -406,15 +386,21 @@ impl Engine {
             }
         }
 
+        let t0 = Instant::now();
+        let mut arena = self.arena_full.borrow_mut();
+        assemble_full(&mut arena, d, b, sessions)?;
+        self.assembly_ns
+            .set(self.assembly_ns.get() + t0.elapsed().as_nanos() as u64);
+
         let n_w = self.weight_bufs.len();
         let specs = &exe.entry.inputs;
         let ok = [oracle_k];
         let host: Vec<HostInput<'_>> = vec![
-            HostInput::I64(&token),
-            HostInput::I64(&pos),
-            HostInput::F32(&k_full),
-            HostInput::F32(&v_full),
-            HostInput::F32(&mask),
+            HostInput::I64(arena.token_prefix(b)),
+            HostInput::I64(arena.pos_prefix(b)),
+            HostInput::F32(arena.block_prefix(0, b)), // k
+            HostInput::F32(arena.block_prefix(1, b)), // v
+            HostInput::F32(arena.block_prefix(2, b)), // mask
             HostInput::I64(&ok),
         ];
         let bufs = host
@@ -422,6 +408,8 @@ impl Engine {
             .enumerate()
             .map(|(j, h)| self.rt.upload(&specs[n_w + j], h))
             .collect::<crate::Result<Vec<_>>>()?;
+        drop(host);
+        drop(arena);
         let mut args: Vec<&PjRtBuffer> = self.weight_bufs.iter().collect();
         args.extend(bufs.iter());
         let outs = exe.execute(&args)?;
@@ -494,29 +482,6 @@ impl Engine {
     }
 }
 
-/// Copy the live `live`-row prefix of every plane of a plane-major session
-/// block (row stride `cap`, row width `width`) into lane `lane` of a
-/// `max_seq`-padded batch tensor `[B, planes, rows_dst, width]`. Rows
-/// `live..rows_dst` keep the batch tensor's zero padding.
-#[allow(clippy::too_many_arguments)]
-fn scatter_block(
-    dst: &mut [f32],
-    lane: usize,
-    planes: usize,
-    rows_dst: usize,
-    src: &[f32],
-    cap: usize,
-    live: usize,
-    width: usize,
-) {
-    debug_assert!(live <= rows_dst && live <= cap);
-    for p in 0..planes {
-        let d0 = (lane * planes + p) * rows_dst * width;
-        let s0 = p * cap * width;
-        dst[d0..d0 + live * width].copy_from_slice(&src[s0..s0 + live * width]);
-    }
-}
-
 /// Choose a compiled batch size: the largest ≤ `n`, else the smallest
 /// (padding).
 pub fn pick_batch(n: usize, avail: &[usize]) -> usize {
@@ -547,31 +512,5 @@ mod tests {
     fn pick_batch_pads_when_nothing_fits() {
         let avail = vec![4, 8];
         assert_eq!(pick_batch(2, &avail), 4);
-    }
-
-    #[test]
-    fn scatter_block_copies_live_prefix_and_keeps_padding() {
-        // 2 planes, session stride cap=4, batch stride rows_dst=8, width=2,
-        // live=3 rows. Lane 1 of a 2-lane batch tensor.
-        let (planes, cap, rows_dst, width, live) = (2usize, 4usize, 8usize, 2usize, 3usize);
-        let src: Vec<f32> = (0..planes * cap * width).map(|i| i as f32 + 1.0).collect();
-        let mut dst = vec![0.0f32; 2 * planes * rows_dst * width];
-        scatter_block(&mut dst, 1, planes, rows_dst, &src, cap, live, width);
-
-        for p in 0..planes {
-            for r in 0..rows_dst {
-                for w in 0..width {
-                    let got = dst[((planes + p) * rows_dst + r) * width + w];
-                    let want = if r < live {
-                        src[(p * cap + r) * width + w]
-                    } else {
-                        0.0 // padding rows stay zero
-                    };
-                    assert_eq!(got, want, "plane {p} row {r} col {w}");
-                }
-            }
-        }
-        // lane 0 untouched
-        assert!(dst[..planes * rows_dst * width].iter().all(|&x| x == 0.0));
     }
 }

@@ -3,6 +3,9 @@
 //! * [`session`] — per-request generation state: token history plus one of
 //!   the cache variants (MiKV mixed-precision manager / full-precision /
 //!   oracle).
+//! * [`assembly`] — [`assembly::StepArena`]: zero-allocation, delta-aware
+//!   decode-step input assembly (dirty-row copies over reusable batch
+//!   tensors), shared by the engine and the `perf_decode_assembly` bench.
 //! * [`engine`] — [`engine::Engine`]: loads one model's artifact set,
 //!   uploads weights once, and drives batched prefill/decode steps.
 //! * [`sampler`] — greedy decoding (the paper evaluates with deterministic
@@ -10,11 +13,13 @@
 //! * [`stub`] — artifact-free deterministic engine for protocol tests and
 //!   the CI smoke run.
 
+pub mod assembly;
 pub mod engine;
 pub mod sampler;
 pub mod session;
 pub mod stub;
 
+pub use assembly::{AssemblyStats, StepArena};
 pub use engine::{Engine, PrefillOutput};
 pub use session::{CacheMode, FullCache, Session, SessionCache};
 pub use stub::StubEngine;

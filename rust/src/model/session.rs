@@ -1,6 +1,7 @@
 //! Per-request generation session state.
 
 use crate::kvcache::accounting::Occupancy;
+use crate::kvcache::dirty::{DirtyTake, DirtyTracker};
 use crate::kvcache::{BufferPool, CacheConfig, CacheManager, StepOutputs};
 use crate::policies::make_policy;
 use crate::quant::Precision;
@@ -147,6 +148,10 @@ pub struct FullCache {
     /// `[planes, s_max]` — 1.0 for live slots.
     pub mask: Vec<f32>,
     pub seq_len: usize,
+    /// Rows touched since the engine last synchronized this cache (the
+    /// same delta-assembly handshake the MiKV manager uses — appends dirty
+    /// one row, prefill dirties everything).
+    dirty: DirtyTracker,
 }
 
 impl FullCache {
@@ -161,6 +166,7 @@ impl FullCache {
             v: vec![0.0; planes * s * d],
             mask: vec![0.0; planes * s],
             seq_len: 0,
+            dirty: DirtyTracker::new(),
         }
     }
 
@@ -177,11 +183,20 @@ impl FullCache {
             self.mask[p * self.s_max..p * self.s_max + t].fill(1.0);
         }
         self.seq_len = t;
+        self.dirty.mark_all();
     }
 
-    /// Host bytes pinned by the dense cache blocks.
+    /// Drain the rows touched since the last take (delta-assembly
+    /// handshake; see [`crate::kvcache::dirty`]).
+    pub fn take_dirty_into(&mut self, out: &mut Vec<usize>) -> DirtyTake {
+        self.dirty.take_into(out)
+    }
+
+    /// Host bytes pinned by the dense cache blocks (plus the dirty-row
+    /// tracker's bookkeeping, mirroring `CacheManager::host_footprint`).
     pub fn host_bytes(&self) -> usize {
         (self.k.len() + self.v.len() + self.mask.len()) * std::mem::size_of::<f32>()
+            + self.dirty.host_bytes()
     }
 
     /// Tier occupancy view: every live slot of the dense cache counts as hi.
@@ -203,6 +218,7 @@ impl FullCache {
             self.mask[p * self.s_max + t] = 1.0;
         }
         self.seq_len = t + 1;
+        self.dirty.mark(t);
     }
 }
 

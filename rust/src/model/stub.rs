@@ -16,7 +16,8 @@ use crate::coordinator::StepEngine;
 use crate::model::{Session, SessionCache};
 use crate::runtime::ModelDims;
 use crate::util::rng::{Pcg32, SplitMix64};
-use std::time::Duration;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
 
 /// Default tensor-synthesis seed (kept stable so pre-sharding golden
 /// values reproduce).
@@ -25,7 +26,6 @@ const DEFAULT_SEED: u64 = 0x57AB;
 /// The stub engine (see module docs). Cheaply clonable: the sharded
 /// runtime hands each worker its own [`StubEngine::fork`] with an
 /// independent, deterministically derived tensor seed.
-#[derive(Clone)]
 pub struct StubEngine {
     dims: ModelDims,
     /// Tensor-synthesis seed; token sampling is seed-independent, so
@@ -41,6 +41,25 @@ pub struct StubEngine {
     pub decode_delay: Duration,
     /// Fail every decode step (error-path and retirement tests).
     pub fail_decode: bool,
+    /// Host-side per-step cache work (tensor synthesis + ingest) of the
+    /// most recent `decode_step`, in nanoseconds — the stub's analogue of
+    /// the real engine's input-assembly time, so `assembly_us` plumbing is
+    /// exercisable end to end without artifacts. Atomic (not `Cell`) so
+    /// the engine stays `Sync` for the worker-factory closures.
+    assembly_ns: AtomicU64,
+}
+
+// Manual Clone: each copy (and each worker fork) gets its own timing cell.
+impl Clone for StubEngine {
+    fn clone(&self) -> StubEngine {
+        StubEngine {
+            dims: self.dims.clone(),
+            seed: self.seed,
+            decode_delay: self.decode_delay,
+            fail_decode: self.fail_decode,
+            assembly_ns: AtomicU64::new(0),
+        }
+    }
 }
 
 impl StubEngine {
@@ -50,6 +69,7 @@ impl StubEngine {
             seed: DEFAULT_SEED,
             decode_delay: Duration::ZERO,
             fail_decode: false,
+            assembly_ns: AtomicU64::new(0),
         }
     }
 
@@ -132,6 +152,10 @@ impl StepEngine for StubEngine {
         Ok(rows)
     }
 
+    fn assembly_us_last(&self) -> Option<f64> {
+        Some(self.assembly_ns.load(Ordering::Relaxed) as f64 / 1e3)
+    }
+
     fn decode_step(&self, sessions: &mut [&mut Session]) -> crate::Result<Vec<Vec<f32>>> {
         anyhow::ensure!(!self.fail_decode, "injected decode failure");
         if self.decode_delay > Duration::ZERO && !sessions.is_empty() {
@@ -139,6 +163,9 @@ impl StepEngine for StubEngine {
             // (emulated) accelerator, so a batch of B costs B × delay.
             std::thread::sleep(self.decode_delay * sessions.len() as u32);
         }
+        // Timed below: the real host-side cache work (synthesis + ingest),
+        // excluding the artificial sleep — the stub's `assembly_us`.
+        let t0 = Instant::now();
         let planes = self.dims.planes();
         let (d, s, vocab) = (self.dims.d_head, self.dims.max_seq, self.dims.vocab);
         let mut rows = Vec::with_capacity(sessions.len());
@@ -155,6 +182,8 @@ impl StepEngine for StubEngine {
             logits[tok as usize] = 1.0;
             rows.push(logits);
         }
+        self.assembly_ns
+            .store(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         Ok(rows)
     }
 }

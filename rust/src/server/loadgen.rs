@@ -26,12 +26,11 @@ use std::time::{Duration, Instant};
 /// shared by `examples/client.rs --load`, `benches/serve_throughput.rs`
 /// and the concurrency suite.
 ///
-/// Known limitation (accepted for test/bench processes):
-/// [`crate::server::serve`]'s accept loop has no shutdown signal, so each
-/// invocation leaves one
-/// listener thread blocked in `accept` (pinning its ephemeral port) until
-/// process exit. Nothing dials the stale address after return; graceful
-/// listener shutdown is a ROADMAP item.
+/// Teardown is complete: once the driver finishes and the scheduler
+/// drains, the listener is stopped via [`crate::server::StopHandle`] and
+/// its thread joined, so the ephemeral port and thread are released
+/// instead of parking until process exit (benches boot many stacks per
+/// run).
 pub fn with_stub_stack<T, F>(
     workers: usize,
     cfg: CoordinatorConfig,
@@ -46,11 +45,15 @@ where
     let (tx, rx) = std::sync::mpsc::channel::<Op>();
     let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?.to_string();
-    std::thread::spawn(move || {
-        let _ = crate::server::serve(listener, tx);
+    let stop = crate::server::StopHandle::for_listener(&listener)?;
+    let stop_l = stop.clone();
+    let accept_thread = std::thread::spawn(move || {
+        let _ = crate::server::serve_until(listener, tx, stop_l);
     });
     let driver = std::thread::spawn(move || f(addr));
     scheduler.run_until(rx, || driver.is_finished());
+    stop.stop();
+    let _ = accept_thread.join();
     match driver.join() {
         Ok(v) => Ok(v),
         // Preserve assertion panics from test closures.
@@ -121,6 +124,11 @@ pub struct LoadReport {
     /// Per-worker utilization from the trailing `stats` op (empty if the
     /// server predates per-worker rows).
     pub per_worker: Vec<WorkerUtil>,
+    /// Server-reported p50 of per-decode-step host input-assembly time
+    /// (µs), from the trailing `stats` op (0 when unreported).
+    pub assembly_us_p50: f64,
+    /// Server-reported p99 of per-decode-step assembly time (µs).
+    pub assembly_us_p99: f64,
 }
 
 /// Per-connection raw samples.
@@ -138,7 +146,7 @@ pub fn run_load(addr: &str, cfg: &LoadConfig) -> crate::Result<LoadReport> {
     // Per-worker counters are server-lifetime cumulative; snapshot before
     // the run so the report attributes only THIS run's tokens (matters
     // when targeting a long-running `--addr` server).
-    let baseline = worker_counters(addr);
+    let baseline = stats_probe(addr);
     let started = Instant::now();
     let mut handles = Vec::with_capacity(cfg.conns);
     for conn in 0..cfg.conns {
@@ -161,11 +169,13 @@ pub fn run_load(addr: &str, cfg: &LoadConfig) -> crate::Result<LoadReport> {
     ttfts.sort_unstable();
     latencies.sort_unstable();
 
-    // Trailing stats op: per-worker utilization, as the delta against the
-    // pre-run baseline. Decoration only — any failure (server gone, old
-    // server without per-worker rows) degrades to an empty breakdown
-    // instead of discarding the measured run.
-    let per_worker = worker_utilization(addr, &baseline);
+    // Trailing stats op: per-worker utilization (as the delta against the
+    // pre-run baseline) plus the server's assembly_us percentiles.
+    // Decoration only — any failure (server gone, old server without the
+    // fields) degrades to empty/zero instead of discarding the measured
+    // run.
+    let after = stats_probe(addr);
+    let per_worker = worker_utilization(&baseline.counters, &after.counters);
 
     Ok(LoadReport {
         turns_ok: ok,
@@ -178,13 +188,23 @@ pub fn run_load(addr: &str, cfg: &LoadConfig) -> crate::Result<LoadReport> {
         latency_p50: percentile(&latencies, 0.5),
         latency_p99: percentile(&latencies, 0.99),
         per_worker,
+        assembly_us_p50: after.assembly_us_p50,
+        assembly_us_p99: after.assembly_us_p99,
     })
 }
 
-/// Best-effort snapshot of the server's cumulative per-worker counters:
-/// `worker → (completed, generated_tokens)`. Empty on any failure.
-fn worker_counters(addr: &str) -> std::collections::HashMap<usize, (usize, usize)> {
-    let mut out = std::collections::HashMap::new();
+/// One best-effort `stats` round trip: cumulative per-worker counters
+/// (`worker → (completed, generated_tokens)`) plus the merged assembly
+/// percentiles. Empty/zero on any failure.
+#[derive(Default)]
+struct StatsProbe {
+    counters: std::collections::HashMap<usize, (usize, usize)>,
+    assembly_us_p50: f64,
+    assembly_us_p99: f64,
+}
+
+fn stats_probe(addr: &str) -> StatsProbe {
+    let mut out = StatsProbe::default();
     let mut client = match Client::connect(addr) {
         Ok(c) => c,
         Err(_) => return out,
@@ -197,9 +217,11 @@ fn worker_counters(addr: &str) -> std::collections::HashMap<usize, (usize, usize
         Ok((_, v)) => v,
         Err(_) => return out,
     };
+    out.assembly_us_p50 = stats.field_f64("assembly_us_p50").unwrap_or(0.0);
+    out.assembly_us_p99 = stats.field_f64("assembly_us_p99").unwrap_or(0.0);
     if let Ok(rows) = stats.field_arr("workers") {
         for row in rows {
-            out.insert(
+            out.counters.insert(
                 row.field_i64("worker").unwrap_or(0).max(0) as usize,
                 (
                     row.field_i64("completed").unwrap_or(0).max(0) as usize,
@@ -211,16 +233,15 @@ fn worker_counters(addr: &str) -> std::collections::HashMap<usize, (usize, usize
     out
 }
 
-/// Best-effort per-worker utilization readback as the delta against the
-/// pre-run `baseline` counters (empty on any failure).
+/// Per-worker utilization as the delta of `after` against the pre-run
+/// `baseline` counters.
 fn worker_utilization(
-    addr: &str,
     baseline: &std::collections::HashMap<usize, (usize, usize)>,
+    after: &std::collections::HashMap<usize, (usize, usize)>,
 ) -> Vec<WorkerUtil> {
-    let after = worker_counters(addr);
     let mut rows: Vec<(usize, usize, usize)> = after
-        .into_iter()
-        .map(|(worker, (completed, generated))| {
+        .iter()
+        .map(|(&worker, &(completed, generated))| {
             let (c0, g0) = baseline.get(&worker).copied().unwrap_or((0, 0));
             (
                 worker,

@@ -23,4 +23,4 @@ pub use proto::{
     decode_line, encode_event, encode_legacy_response, DecodeError, RequestBuilder, WireOp,
     WireRequest,
 };
-pub use tcp::{serve, Client};
+pub use tcp::{serve, serve_until, Client, StopHandle};

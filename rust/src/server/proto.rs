@@ -415,6 +415,11 @@ pub fn encode_event(ev: &ServeEvent) -> String {
             o.set("throughput_tps", snapshot.throughput_tps);
             o.set("mean_host_bytes", snapshot.mean_host_bytes);
             o.set("peak_host_bytes", snapshot.peak_host_bytes);
+            // Decode-step host assembly percentiles (µs) — the time the
+            // delta-aware arena spends building batch inputs per step.
+            o.set("assembly_us_p50", snapshot.assembly_us_p50);
+            o.set("assembly_us_p99", snapshot.assembly_us_p99);
+            o.set("assembly_samples", snapshot.assembly_samples as i64);
             o.set("pool_free_blocks", snapshot.pool.free_blocks);
             o.set("pool_free_bytes", snapshot.pool.free_bytes);
             o.set("pool_outstanding_blocks", snapshot.pool.outstanding_blocks);
@@ -435,6 +440,9 @@ pub fn encode_event(ev: &ServeEvent) -> String {
                     wo.set("completed", w.completed);
                     wo.set("generated_tokens", w.generated_tokens);
                     wo.set("throughput_tps", w.throughput_tps);
+                    wo.set("assembly_us_p50", w.assembly_us_p50);
+                    wo.set("assembly_us_p99", w.assembly_us_p99);
+                    wo.set("assembly_samples", w.assembly_samples as i64);
                     Json::Obj(wo)
                 })
                 .collect();
@@ -943,6 +951,9 @@ mod tests {
         // per-worker rows of the sharded runtime encode under "workers"
         let snapshot = StatsSnapshot {
             completed: 3,
+            assembly_us_p50: 12.5,
+            assembly_us_p99: 80.25,
+            assembly_samples: 42,
             workers: vec![crate::coordinator::WorkerStats {
                 worker: 1,
                 active: 2,
@@ -951,17 +962,25 @@ mod tests {
                 completed: 3,
                 generated_tokens: 12,
                 throughput_tps: 4.5,
+                assembly_us_p50: 12.5,
+                assembly_us_p99: 80.25,
+                assembly_samples: 42,
             }],
             ..StatsSnapshot::default()
         };
         let line = encode_event(&ServeEvent::Stats { id: 8, snapshot });
         let v = Json::parse(&line).unwrap();
+        assert!((v.field_f64("assembly_us_p50").unwrap() - 12.5).abs() < 1e-9);
+        assert!((v.field_f64("assembly_us_p99").unwrap() - 80.25).abs() < 1e-9);
+        assert_eq!(v.field_i64("assembly_samples").unwrap(), 42);
         let rows = v.field_arr("workers").unwrap();
         assert_eq!(rows.len(), 1);
         assert_eq!(rows[0].field_i64("worker").unwrap(), 1);
         assert_eq!(rows[0].field_i64("completed").unwrap(), 3);
         assert_eq!(rows[0].field_i64("generated_tokens").unwrap(), 12);
         assert!((rows[0].field_f64("throughput_tps").unwrap() - 4.5).abs() < 1e-9);
+        assert!((rows[0].field_f64("assembly_us_p50").unwrap() - 12.5).abs() < 1e-9);
+        assert_eq!(rows[0].field_i64("assembly_samples").unwrap(), 42);
 
         let line = encode_event(&ServeEvent::CancelResult {
             id: 7,

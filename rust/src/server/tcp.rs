@@ -24,18 +24,73 @@ use crate::coordinator::{CompressionSpec, EventSink, Op, Request, Response, Serv
 use crate::server::proto::{self, RequestBuilder, WireOp};
 use crate::util::json::Json;
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
+use std::sync::Arc;
 use std::time::Instant;
 
 static CONN_IDS: AtomicU64 = AtomicU64::new(1);
 
+/// Cooperative stop signal for a listener's accept loop. Cheap to clone;
+/// hand one copy to [`serve_until`] and keep another to call
+/// [`StopHandle::stop`] — the blocked `accept` is woken with a throwaway
+/// loopback connection, the loop exits, and dropping the listener releases
+/// the socket and its thread (previously every bench/test boot parked a
+/// listener thread until process exit).
+#[derive(Clone)]
+pub struct StopHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+}
+
+impl StopHandle {
+    /// Build a handle for `listener` (captures its local address so
+    /// [`Self::stop`] can dial it to unblock `accept`).
+    pub fn for_listener(listener: &TcpListener) -> crate::Result<StopHandle> {
+        Ok(StopHandle {
+            addr: listener.local_addr()?,
+            stop: Arc::new(AtomicBool::new(false)),
+        })
+    }
+
+    /// Signal the accept loop to exit. Idempotent; safe from any thread.
+    /// The wake-up dial is attempted on EVERY call (not just the first),
+    /// so a transiently failed connect can be recovered by calling
+    /// `stop()` again instead of leaving the accept loop blocked with the
+    /// flag already set; once the listener is gone the dial fails
+    /// harmlessly.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the blocked accept; the loop sees the flag and breaks
+        // before handling this throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+    }
+
+    pub fn is_stopped(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+}
+
 /// Accept-and-serve loop. Blocks the calling thread; spawn it alongside the
-/// coordinator thread. Returns only on listener error.
+/// coordinator thread. Returns only on listener error (no stop signal —
+/// the long-running `mikv serve` shape). Use [`serve_until`] when the
+/// listener must be releasable (benches, tests, embedded stacks).
 pub fn serve(listener: TcpListener, tx: Sender<Op>) -> crate::Result<()> {
-    crate::log_info!("serving on {}", listener.local_addr()?);
+    let stop = StopHandle::for_listener(&listener)?;
+    serve_until(listener, tx, stop)
+}
+
+/// Accept-and-serve until `stop` fires (graceful listener shutdown):
+/// in-flight connections keep their threads, but the accept loop exits and
+/// the listener socket is released when this returns.
+pub fn serve_until(listener: TcpListener, tx: Sender<Op>, stop: StopHandle) -> crate::Result<()> {
+    let addr = listener.local_addr()?;
+    crate::log_info!("serving on {addr}");
     for stream in listener.incoming() {
+        if stop.is_stopped() {
+            break;
+        }
         let stream = stream?;
         let tx = tx.clone();
         std::thread::spawn(move || {
@@ -48,6 +103,7 @@ pub fn serve(listener: TcpListener, tx: Sender<Op>) -> crate::Result<()> {
             }
         });
     }
+    crate::log_info!("listener on {addr} stopped");
     Ok(())
 }
 
@@ -252,5 +308,40 @@ impl Client {
                 _ => anyhow::bail!("unexpected line for id {id}: {v}"),
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    /// Graceful listener shutdown: `stop()` wakes the blocked accept, the
+    /// serve thread joins, and the socket is released (new connections are
+    /// refused) instead of parking the listener until process exit.
+    #[test]
+    fn stop_handle_releases_listener_thread_and_socket() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = StopHandle::for_listener(&listener).unwrap();
+        assert!(!stop.is_stopped());
+
+        let (tx, _rx) = mpsc::channel::<Op>();
+        let stop_l = stop.clone();
+        let server = std::thread::spawn(move || serve_until(listener, tx, stop_l));
+
+        // the loop is alive: a client can connect while un-stopped
+        assert!(TcpStream::connect(addr).is_ok());
+
+        stop.stop();
+        stop.stop(); // idempotent
+        server.join().expect("serve thread").expect("clean exit");
+        assert!(stop.is_stopped());
+
+        // the listener is gone with the thread: loopback refuses new dials
+        assert!(
+            TcpStream::connect(addr).is_err(),
+            "socket must be released after stop"
+        );
     }
 }
