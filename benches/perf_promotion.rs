@@ -1,0 +1,411 @@
+//! Promotion-on-re-access bench: quality proxy and cost of the lo→hi tier
+//! lifecycle (`BENCH_promotion.json`).
+//!
+//! Drives two identical MiKV sessions — promotion **on** vs **off** —
+//! through a *late-emerging-importance* workload on real `CacheManager`s
+//! (synthetic tensors; no compiled artifacts, runs anywhere including CI
+//! smoke mode): a small "late set" of tokens gets almost no attention at
+//! prefill (so it is demoted to the lo tier), then every decode step
+//! concentrates ~90% of its attention mass on exactly those tokens. Per
+//! configuration the bench measures:
+//!
+//! * **quality proxy** — token agreement vs the full-precision reference
+//!   (the eval-harness metric, `eval::agreement::token_agreement`): each
+//!   step computes an attention-weighted value readout through a fixed
+//!   random vocabulary projection and compares the argmax "token" against
+//!   the same readout over exact (uncompressed) values. Retention is
+//!   lossy-once, so promotion is expected to hold agreement roughly equal
+//!   — the gate is non-regression, not improvement;
+//! * **hi-tier attention coverage** — the fraction of each step's
+//!   attention mass landing on hi-precision slots: the paper's "important
+//!   KV pairs kept at relatively higher precision" invariant, which the
+//!   promotion pass exists to restore (gated: `on` must beat `off`);
+//! * **cost** — promotions/step and `thrash_suppressed` from the manager
+//!   counters, plus delta-assembly bytes/step from a per-session
+//!   `StepArena` (promotion dirties the promoted + swapped rows, so its
+//!   assembly cost is visible here).
+//!
+//! ```sh
+//! cargo bench --bench perf_promotion             # full grid
+//! cargo bench --bench perf_promotion -- --smoke  # CI grid
+//! ```
+//!
+//! Outputs: `bench_out/perf_promotion.{md,json}` and
+//! `BENCH_promotion.json` at the repo root (schema in EXPERIMENTS.md
+//! §Promotion).
+
+use mikv::bench::{Cell, Table};
+use mikv::eval::agreement::token_agreement;
+use mikv::kvcache::{Placement, PromotionConfig};
+use mikv::model::assembly::{assemble_mikv, StepArena};
+use mikv::model::{CacheMode, Session, SessionCache};
+use mikv::quant::Precision;
+use mikv::runtime::ModelDims;
+use mikv::util::cli::Args;
+use mikv::util::json::{Json, JsonObj};
+use mikv::util::rng::Pcg32;
+
+const VOCAB: usize = 32;
+const LATE_SET: usize = 4;
+
+fn dims(max_seq: usize) -> ModelDims {
+    ModelDims {
+        vocab: VOCAB,
+        d_model: 128,
+        n_layers: 2,
+        n_q_heads: 4,
+        n_kv_heads: 2,
+        d_head: 32,
+        d_ff: 128,
+        max_seq,
+        quant_group: 16,
+        params: 0,
+    }
+}
+
+/// A MiKV session at ratio 0.25 / int4, with or without promotion.
+fn session(id: u64, d: &ModelDims, promotion: bool) -> Session {
+    let mut mode = CacheMode::mikv(d, 0.25, Precision::Int4);
+    if let CacheMode::Mikv { cfg, .. } = &mut mode {
+        if promotion {
+            cfg.promotion = Some(PromotionConfig::default());
+        }
+    }
+    Session::new(id, d, mode).unwrap()
+}
+
+fn manager(sess: &Session) -> &mikv::kvcache::CacheManager {
+    match &sess.cache {
+        SessionCache::Mikv(m) => m,
+        _ => unreachable!("bench sessions are MiKV"),
+    }
+}
+
+/// Exact (uncompressed) per-slot values — the full-cache reference.
+struct Reference {
+    /// `[slot][planes * d]` V vectors as ingested.
+    v: Vec<Vec<f32>>,
+}
+
+/// The step's attention row over `t` live slots: ~90% of the mass on the
+/// late set, the rest uniform background.
+fn attention_row(t: usize, late: &[usize]) -> Vec<f32> {
+    let mut w = vec![0.1 / t as f32; t];
+    for &s in late {
+        w[s] += 0.9 / late.len() as f32;
+    }
+    w
+}
+
+/// Attention-weighted V readout through the session's *effective* cache
+/// values, projected to a token id by the fixed random vocabulary matrix.
+fn readout_token(
+    sess: &Session,
+    w: &[f32],
+    planes: usize,
+    d: usize,
+    proj: &[f32],
+) -> i64 {
+    let m = manager(sess);
+    let mut out = vec![0.0f32; planes * d];
+    let mut kb = vec![0.0f32; d];
+    let mut vb = vec![0.0f32; d];
+    for p in 0..planes {
+        for (s, &ws) in w.iter().enumerate() {
+            if m.effective_kv_into(p, s, &mut kb, &mut vb) {
+                for (o, &x) in out[p * d..(p + 1) * d].iter_mut().zip(vb.iter()) {
+                    *o += ws * x;
+                }
+            }
+        }
+    }
+    argmax_proj(&out, proj)
+}
+
+/// Same readout over the exact reference values.
+fn reference_token(
+    reference: &Reference,
+    w: &[f32],
+    planes: usize,
+    d: usize,
+    proj: &[f32],
+) -> i64 {
+    let mut out = vec![0.0f32; planes * d];
+    for (s, &ws) in w.iter().enumerate() {
+        for p in 0..planes {
+            let v = &reference.v[s][p * d..(p + 1) * d];
+            for (o, &x) in out[p * d..(p + 1) * d].iter_mut().zip(v.iter()) {
+                *o += ws * x;
+            }
+        }
+    }
+    argmax_proj(&out, proj)
+}
+
+fn argmax_proj(out: &[f32], proj: &[f32]) -> i64 {
+    let mut best = 0usize;
+    let mut best_v = f32::NEG_INFINITY;
+    for (j, row) in proj.chunks(out.len()).enumerate() {
+        let v: f32 = row.iter().zip(out.iter()).map(|(a, b)| a * b).sum();
+        if v > best_v {
+            best_v = v;
+            best = j;
+        }
+    }
+    best as i64
+}
+
+/// Fraction of the attention mass landing on hi-precision slots (plane 0;
+/// the per-plane signals are identical in this workload).
+fn hi_coverage(sess: &Session, w: &[f32]) -> f64 {
+    let m = manager(sess);
+    let total: f32 = w.iter().sum();
+    let hi: f32 = w
+        .iter()
+        .enumerate()
+        .filter(|&(s, _)| m.placement(0, s) == Placement::Hi)
+        .map(|(_, &ws)| ws)
+        .sum();
+    (hi / total.max(1e-9)) as f64
+}
+
+struct ConfigResult {
+    t0: usize,
+    steps: usize,
+    agreement_on: f64,
+    agreement_off: f64,
+    coverage_on: f64,
+    coverage_off: f64,
+    promotions: u64,
+    thrash_suppressed: u64,
+    promotions_per_step: f64,
+    delta_bytes_on: f64,
+    delta_bytes_off: f64,
+}
+
+fn run_config(t0: usize, steps: usize, seed: u64) -> anyhow::Result<ConfigResult> {
+    let max_seq = (t0 + steps + 8).next_power_of_two();
+    let d_model = dims(max_seq);
+    let planes = d_model.planes();
+    let d = d_model.d_head;
+    let mut rng = Pcg32::new(seed);
+
+    // Fixed random vocabulary projection for the readout proxy.
+    let proj: Vec<f32> = (0..VOCAB * planes * d).map(|_| rng.gen_normal()).collect();
+
+    // Prefill tensors; the late set is seeded as unimportant so prefill
+    // placement demotes it.
+    let late: Vec<usize> = (0..LATE_SET).map(|i| 2 + 3 * i).collect();
+    let k: Vec<f32> = (0..planes * t0 * d).map(|_| rng.gen_normal()).collect();
+    let v: Vec<f32> = (0..planes * t0 * d).map(|_| rng.gen_normal()).collect();
+    let mut acc = vec![0.0f32; planes * t0];
+    for p in 0..planes {
+        for s in 0..t0 {
+            acc[p * t0 + s] = if late.contains(&s) {
+                0.001
+            } else {
+                0.2 + s as f32 * 0.002
+            };
+        }
+    }
+    let qmax: Vec<f32> = (0..planes * d).map(|_| rng.gen_f32() + 0.5).collect();
+    let kmax: Vec<f32> = (0..planes * d).map(|_| rng.gen_f32() + 0.5).collect();
+
+    let mut on = session(1, &d_model, true);
+    let mut off = session(2, &d_model, false);
+    for sess in [&mut on, &mut off] {
+        match &mut sess.cache {
+            SessionCache::Mikv(m) => m.ingest_prefill(t0, &k, &v, &acc, &qmax, &kmax),
+            _ => unreachable!(),
+        }
+        sess.prompt_len = t0;
+        sess.tokens = vec![1; t0];
+        sess.last_token = 1;
+    }
+    for &s in &late {
+        anyhow::ensure!(
+            manager(&on).placement(0, s) == Placement::Lo,
+            "late slot {s} must start in the lo tier"
+        );
+    }
+    let mut reference = Reference {
+        v: (0..t0)
+            .map(|s| {
+                let mut row = vec![0.0f32; planes * d];
+                for p in 0..planes {
+                    row[p * d..(p + 1) * d]
+                        .copy_from_slice(&v[(p * t0 + s) * d..(p * t0 + s + 1) * d]);
+                }
+                row
+            })
+            .collect(),
+    };
+
+    // Per-session delta arenas (assembly-bytes cost of promotion churn).
+    let mut arena_on = StepArena::for_mikv(&d_model);
+    let mut arena_off = StepArena::for_mikv(&d_model);
+    {
+        let mut refs = [&mut on];
+        assemble_mikv(&mut arena_on, &d_model, 1, &mut refs)?;
+        let mut refs = [&mut off];
+        assemble_mikv(&mut arena_off, &d_model, 1, &mut refs)?;
+    }
+    arena_on.reset_stats();
+    arena_off.reset_stats();
+
+    let mut tokens_ref = Vec::with_capacity(steps);
+    let mut tokens_on = Vec::with_capacity(steps);
+    let mut tokens_off = Vec::with_capacity(steps);
+    let (mut cov_on, mut cov_off) = (0.0f64, 0.0f64);
+
+    for _ in 0..steps {
+        let t = on.cache.seq_len();
+        let w = attention_row(t, &late);
+
+        // Readouts on the pre-append state (what this step's query sees).
+        tokens_ref.push(reference_token(&reference, &w, planes, d, &proj));
+        tokens_on.push(readout_token(&on, &w, planes, d, &proj));
+        tokens_off.push(readout_token(&off, &w, planes, d, &proj));
+        cov_on += hi_coverage(&on, &w);
+        cov_off += hi_coverage(&off, &w);
+
+        // Ingest the same new token + attention into both caches and the
+        // reference.
+        let k_new: Vec<f32> = (0..planes * d).map(|_| rng.gen_normal()).collect();
+        let v_new: Vec<f32> = (0..planes * d).map(|_| rng.gen_normal()).collect();
+        let mut attn_prev = vec![0.0f32; planes * max_seq];
+        for p in 0..planes {
+            attn_prev[p * max_seq..p * max_seq + t].copy_from_slice(&w);
+        }
+        let attn_self = vec![0.01f32; planes];
+        on.try_ingest_step(&k_new, &v_new, &attn_prev, &attn_self)?;
+        off.try_ingest_step(&k_new, &v_new, &attn_prev, &attn_self)?;
+        reference.v.push(v_new.clone());
+
+        // Delta assembly after the mutation (promotion rows ride along).
+        let mut refs = [&mut on];
+        assemble_mikv(&mut arena_on, &d_model, 1, &mut refs)?;
+        let mut refs = [&mut off];
+        assemble_mikv(&mut arena_off, &d_model, 1, &mut refs)?;
+    }
+
+    let promo_on = manager(&on).promotion_stats();
+    let promo_off = manager(&off).promotion_stats();
+    anyhow::ensure!(
+        promo_off.promotions == 0,
+        "promotion-off session promoted: {promo_off:?}"
+    );
+    Ok(ConfigResult {
+        t0,
+        steps,
+        agreement_on: token_agreement(&tokens_on, &tokens_ref),
+        agreement_off: token_agreement(&tokens_off, &tokens_ref),
+        coverage_on: cov_on / steps as f64,
+        coverage_off: cov_off / steps as f64,
+        promotions: promo_on.promotions,
+        thrash_suppressed: promo_on.thrash_suppressed,
+        promotions_per_step: promo_on.promotions as f64 / steps as f64,
+        delta_bytes_on: arena_on.stats.bytes_copied as f64 / steps as f64,
+        delta_bytes_off: arena_off.stats.bytes_copied as f64 / steps as f64,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let smoke = args.flag("smoke");
+    let default_t0: &[usize] = if smoke { &[48] } else { &[64, 192] };
+    let t0_list: Vec<usize> = args.get_list("prefill-list", default_t0)?;
+    let steps = args.get_nonzero("steps", if smoke { 24 } else { 48 })?;
+    let seed = args.get("seed", 0x9907u64)?;
+
+    let mut table = Table::new(
+        "perf_promotion",
+        "Promotion on re-access: quality proxy + cost, promotion on vs off",
+        &[
+            "t0", "steps", "agree_on", "agree_off", "cov_on", "cov_off",
+            "promos", "per_step", "thrash", "deltaB_on", "deltaB_off",
+        ],
+    );
+    table.note(format!(
+        "planes=4 d_head=32 ratio=0.25 lo=int4 late_set={LATE_SET} steps={steps} \
+         seed={seed:#x}; late-emerging-importance workload (~90% of attention \
+         on tokens demoted at prefill); agreement = token agreement vs exact \
+         values through a fixed readout; coverage = attention mass on hi slots"
+    ));
+
+    let mut results = Vec::new();
+    for &t0 in &t0_list {
+        let r = run_config(t0, steps, seed ^ ((t0 as u64) << 24))?;
+        // Acceptance gates.
+        anyhow::ensure!(
+            r.promotions > 0,
+            "the late-importance workload must trigger promotions (t0={t0})"
+        );
+        anyhow::ensure!(
+            r.coverage_on > r.coverage_off + 0.2,
+            "promotion must restore hi-tier attention coverage: on {:.3} vs off {:.3}",
+            r.coverage_on,
+            r.coverage_off
+        );
+        anyhow::ensure!(
+            r.agreement_on >= r.agreement_off - 0.1,
+            "promotion must not regress the quality proxy: on {:.3} vs off {:.3}",
+            r.agreement_on,
+            r.agreement_off
+        );
+        table.row(vec![
+            r.t0.into(),
+            r.steps.into(),
+            Cell::F(r.agreement_on, 3),
+            Cell::F(r.agreement_off, 3),
+            Cell::F(r.coverage_on, 3),
+            Cell::F(r.coverage_off, 3),
+            Cell::Int(r.promotions as i64),
+            Cell::F(r.promotions_per_step, 2),
+            Cell::Int(r.thrash_suppressed as i64),
+            Cell::F(r.delta_bytes_on, 0),
+            Cell::F(r.delta_bytes_off, 0),
+        ]);
+        results.push(r);
+    }
+    table.emit()?;
+
+    // Machine-readable trajectory point at the repo root.
+    let mut o = JsonObj::new();
+    o.set("bench", "perf_promotion");
+    o.set("pending", false);
+    o.set("smoke", smoke);
+    o.set("planes", 4usize);
+    o.set("d_head", 32usize);
+    o.set("ratio", 0.25);
+    o.set("lo", "int4");
+    o.set("late_set", LATE_SET);
+    o.set("steps", steps);
+    o.set("seed", seed as i64);
+    let rows: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            let mut ro = JsonObj::new();
+            ro.set("t0", r.t0);
+            ro.set("steps", r.steps);
+            ro.set("agreement_on", r.agreement_on);
+            ro.set("agreement_off", r.agreement_off);
+            ro.set("hi_coverage_on", r.coverage_on);
+            ro.set("hi_coverage_off", r.coverage_off);
+            ro.set("promotions", r.promotions as i64);
+            ro.set("promotions_per_step", r.promotions_per_step);
+            ro.set("thrash_suppressed", r.thrash_suppressed as i64);
+            ro.set("delta_bytes_per_step_on", r.delta_bytes_on);
+            ro.set("delta_bytes_per_step_off", r.delta_bytes_off);
+            ro.set(
+                "assembly_bytes_ratio_on_over_off",
+                r.delta_bytes_on / r.delta_bytes_off.max(1.0),
+            );
+            Json::Obj(ro)
+        })
+        .collect();
+    o.set("results", Json::Arr(rows));
+    std::fs::write("BENCH_promotion.json", Json::Obj(o).to_string_pretty())?;
+    println!("wrote BENCH_promotion.json");
+    Ok(())
+}

@@ -38,7 +38,11 @@ fn main() -> anyhow::Result<()> {
     anyhow::ensure!(!workers_list.is_empty(), "--workers-list is empty");
     let iters = args.get_nonzero("iters", if smoke { 1 } else { 3 })?;
     let delay = Duration::from_micros(args.get("delay-us", if smoke { 200u64 } else { 500 })?);
-    let load = LoadConfig {
+    // --promotion: run the conversations with the lo→hi promotion pass on,
+    // so the wire `promotions`/`thrash_suppressed` counters (and their
+    // serving-throughput cost) land in BENCH_serve.json.
+    let promotion = args.flag("promotion");
+    let mut load = LoadConfig {
         conns: args.get_nonzero("conns", if smoke { 4 } else { 12 })?,
         turns: args.get_nonzero("turns", if smoke { 2 } else { 3 })?,
         max_new: args.get_nonzero("max-new", if smoke { 8 } else { 24 })?,
@@ -46,6 +50,9 @@ fn main() -> anyhow::Result<()> {
         seed: args.get("seed", 0x5EEDu64)?,
         ..LoadConfig::default()
     };
+    if promotion {
+        load.spec = load.spec.promoted();
+    }
 
     let mut table = Table::new(
         "serve_throughput",
@@ -118,6 +125,7 @@ fn main() -> anyhow::Result<()> {
     o.set("max_new", load.max_new);
     o.set("seed", load.seed as i64);
     o.set("smoke", smoke);
+    o.set("promotion", promotion);
     let rows: Vec<Json> = results
         .iter()
         .map(|(workers, r)| {
@@ -134,6 +142,10 @@ fn main() -> anyhow::Result<()> {
             // trailing stats op; 0 when the engine doesn't measure it).
             ro.set("assembly_us_p50", r.assembly_us_p50);
             ro.set("assembly_us_p99", r.assembly_us_p99);
+            // Tier-lifecycle counters this run caused (0 without
+            // --promotion).
+            ro.set("promotions", r.promotions as i64);
+            ro.set("thrash_suppressed", r.thrash_suppressed as i64);
             ro.set(
                 "per_worker_utilization",
                 Json::Arr(r.per_worker.iter().map(|w| Json::Num(w.share)).collect()),

@@ -62,7 +62,7 @@ fn main() -> anyhow::Result<()> {
 /// Load-generator mode: M concurrent connections × K turns against a
 /// sharded stub runtime (or `--addr` for an external server).
 fn load_mode(args: &Args) -> anyhow::Result<()> {
-    let cfg = LoadConfig {
+    let mut cfg = LoadConfig {
         conns: args.get_nonzero("conns", 8)?,
         turns: args.get_nonzero("turns", 2)?,
         max_new: args.get_nonzero("max-new", 16)?,
@@ -70,6 +70,9 @@ fn load_mode(args: &Args) -> anyhow::Result<()> {
         seed: args.get("seed", 0x10ADu64)?,
         ..LoadConfig::default()
     };
+    if args.flag("promotion") {
+        cfg.spec = cfg.spec.promoted();
+    }
     let report = if let Ok(addr) = args.require_str("addr") {
         run_load(&addr, &cfg)?
     } else {
@@ -110,6 +113,12 @@ fn load_mode(args: &Args) -> anyhow::Result<()> {
             w.completed,
             w.generated_tokens,
             w.share * 100.0
+        );
+    }
+    if report.promotions > 0 || report.thrash_suppressed > 0 {
+        println!(
+            "promotions: {} ({} thrash-suppressed)",
+            report.promotions, report.thrash_suppressed
         );
     }
     anyhow::ensure!(report.turns_err == 0, "{} turns failed", report.turns_err);

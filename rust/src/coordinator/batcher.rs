@@ -38,7 +38,7 @@
 
 use super::request::{ErrorCode, Op, Request, RequestMetrics, Response, ServeEvent, WireError};
 use super::stats::{MetricsCollector, StatsSnapshot, WorkerStats};
-use crate::kvcache::BufferPool;
+use crate::kvcache::{BufferPool, PromotionStats};
 use crate::model::{sampler, CacheMode, Engine, Session};
 use crate::runtime::ModelDims;
 use std::collections::{BTreeMap, HashMap, VecDeque};
@@ -137,6 +137,9 @@ struct Active {
     turn_prompt: usize,
     /// When this turn's first token was sampled (TTFT anchor).
     first_token_at: Option<Instant>,
+    /// The session's promotion counters at admission — retire reports the
+    /// delta, so multi-turn sessions never double-count across turns.
+    promo_base: PromotionStats,
     /// Token events emitted this turn (also the next event index).
     emitted: usize,
     generated_budget: usize,
@@ -360,6 +363,8 @@ impl<E: StepEngine> Coordinator<E> {
                     assembly_us_p50,
                     assembly_us_p99,
                     assembly_samples,
+                    promotions: collector.promotions(),
+                    thrash_suppressed: collector.thrash_suppressed(),
                     pool: self.pool.stats(),
                     workers: vec![WorkerStats {
                         worker: self.worker_id,
@@ -372,6 +377,8 @@ impl<E: StepEngine> Coordinator<E> {
                         assembly_us_p50,
                         assembly_us_p99,
                         assembly_samples,
+                        promotions: collector.promotions(),
+                        thrash_suppressed: collector.thrash_suppressed(),
                     }],
                 };
                 let _ = reply.emit(ServeEvent::Stats { id, snapshot });
@@ -414,6 +421,7 @@ impl<E: StepEngine> Coordinator<E> {
                         Vec::new()
                     };
                     let occ = a.sess.cache.occupancy();
+                    let promo = a.sess.cache.promotion_stats();
                     let metrics = RequestMetrics {
                         ttft: a
                             .first_token_at
@@ -426,6 +434,10 @@ impl<E: StepEngine> Coordinator<E> {
                         host_bytes: a.sess.cache.host_bytes(),
                         hi_slots: occ.hi_slots,
                         lo_slots: occ.lo_slots,
+                        promotions: promo.promotions.saturating_sub(a.promo_base.promotions),
+                        thrash_suppressed: promo
+                            .thrash_suppressed
+                            .saturating_sub(a.promo_base.thrash_suppressed),
                     };
                     // Cancelled partials stay out of the completed-turn
                     // stats (their ttft/latency would mix queue-abort noise
@@ -536,6 +548,7 @@ impl<E: StepEngine> Coordinator<E> {
                     active.push(Active {
                         generated_budget: req.max_new.max(1),
                         turn_prompt: req.prompt.len(),
+                        promo_base: sess.cache.promotion_stats(),
                         req,
                         sess,
                         pending_feed: VecDeque::new(),
@@ -620,6 +633,7 @@ impl<E: StepEngine> Coordinator<E> {
         active.push(Active {
             generated_budget: req.max_new.max(1),
             turn_prompt: pending.len(),
+            promo_base: entry.sess.cache.promotion_stats(),
             req,
             sess: entry.sess,
             pending_feed: pending,
@@ -1227,6 +1241,7 @@ mod tests {
             pending_feed: VecDeque::new(),
             turn_prompt: 2,
             first_token_at: None,
+            promo_base: PromotionStats::default(),
             emitted: 0,
             generated_budget: 4,
             cancelled: false,
@@ -1337,6 +1352,7 @@ mod tests {
             pending_feed: VecDeque::new(),
             turn_prompt: t,
             first_token_at: Some(Instant::now()),
+            promo_base: PromotionStats::default(),
             emitted: 1,
             generated_budget: 100,
             cancelled: false,

@@ -131,6 +131,9 @@ pub struct CompressionSpec {
     pub policy: Option<String>,
     /// Oracle top-k (oracle mode only).
     pub k: Option<usize>,
+    /// Opt-in lo→hi promotion on re-access (mikv mode only). Absent or
+    /// `false` keeps the historical one-way tier lifecycle.
+    pub promotion: Option<bool>,
 }
 
 impl Default for CompressionSpec {
@@ -148,6 +151,7 @@ impl CompressionSpec {
             group: None,
             policy: None,
             k: None,
+            promotion: None,
         }
     }
 
@@ -189,6 +193,13 @@ impl CompressionSpec {
         }
     }
 
+    /// Enable the opt-in lo→hi promotion pass (valid for mikv mode only;
+    /// resolution rejects it elsewhere).
+    pub fn promoted(mut self) -> CompressionSpec {
+        self.promotion = Some(true);
+        self
+    }
+
     /// Validate against a model's dimensions and resolve to the
     /// [`CacheMode`] the session will be built with.
     pub fn resolve(&self, dims: &ModelDims) -> Result<CacheMode, WireError> {
@@ -211,6 +222,12 @@ impl CompressionSpec {
             if crate::policies::make_policy(p, 1, 1, 0).is_none() {
                 return Err(WireError::bad_request(format!("unknown policy '{p}'")));
             }
+        }
+        if self.promotion == Some(true) && self.mode != "mikv" {
+            return Err(WireError::bad_request(format!(
+                "promotion requires mode 'mikv' (got '{}')",
+                self.mode
+            )));
         }
         let prec = |name: &str| {
             Precision::parse(name)
@@ -235,6 +252,9 @@ impl CompressionSpec {
                     }
                     if let Some(p) = &self.policy {
                         *policy = p.clone();
+                    }
+                    if self.promotion == Some(true) {
+                        cfg.promotion = Some(crate::kvcache::PromotionConfig::default());
                     }
                 }
                 mode
@@ -362,6 +382,12 @@ pub struct RequestMetrics {
     pub hi_slots: u64,
     /// Lo-tier (retained) token-slots occupied at completion.
     pub lo_slots: u64,
+    /// lo→hi promotions performed during THIS turn (the delta against the
+    /// session's counter at admission; 0 unless the opt-in promotion pass
+    /// is enabled).
+    pub promotions: u64,
+    /// Promotions the hysteresis suppressed during this turn.
+    pub thrash_suppressed: u64,
 }
 
 impl RequestMetrics {
@@ -375,6 +401,8 @@ impl RequestMetrics {
             host_bytes: 0,
             hi_slots: 0,
             lo_slots: 0,
+            promotions: 0,
+            thrash_suppressed: 0,
         }
     }
 }
@@ -480,6 +508,44 @@ mod tests {
                 assert_eq!(policy, "local");
             }
             _ => panic!("not mikv"),
+        }
+    }
+
+    #[test]
+    fn spec_promotion_resolves_and_gates_by_mode() {
+        let d = dims();
+        // promoted mikv carries the default promotion knobs into the cfg
+        match CompressionSpec::mikv(0.25, "int4").promoted().resolve(&d).unwrap() {
+            CacheMode::Mikv { cfg, .. } => {
+                assert_eq!(
+                    cfg.promotion,
+                    Some(crate::kvcache::PromotionConfig::default())
+                );
+            }
+            other => panic!("not mikv: {other:?}"),
+        }
+        // unspecified and explicit-false both resolve to off
+        match CompressionSpec::mikv(0.25, "int4").resolve(&d).unwrap() {
+            CacheMode::Mikv { cfg, .. } => assert_eq!(cfg.promotion, None),
+            other => panic!("not mikv: {other:?}"),
+        }
+        let mut off = CompressionSpec::mikv(0.25, "int4");
+        off.promotion = Some(false);
+        match off.resolve(&d).unwrap() {
+            CacheMode::Mikv { cfg, .. } => assert_eq!(cfg.promotion, None),
+            other => panic!("not mikv: {other:?}"),
+        }
+        // promotion outside mikv is a bad_request (h2o evicts — there is
+        // nothing retained to promote; full/rtn/oracle have no hi churn)
+        for spec in [
+            CompressionSpec::h2o(0.25).promoted(),
+            CompressionSpec::full().promoted(),
+            CompressionSpec::rtn("int8").promoted(),
+            CompressionSpec::oracle(4).promoted(),
+        ] {
+            let err = spec.resolve(&d).expect_err("must reject");
+            assert_eq!(err.code, ErrorCode::BadRequest);
+            assert!(err.message.contains("promotion"), "{err}");
         }
     }
 

@@ -31,6 +31,10 @@ pub struct WorkerStats {
     pub assembly_us_p99: f64,
     /// Assembly samples observed (may exceed the retained window).
     pub assembly_samples: u64,
+    /// lo→hi promotions across this worker's completed turns.
+    pub promotions: u64,
+    /// Hysteresis-suppressed promotions across completed turns.
+    pub thrash_suppressed: u64,
 }
 
 /// Point-in-time serving counters answered to the wire `stats` op:
@@ -67,6 +71,12 @@ pub struct StatsSnapshot {
     pub assembly_us_p99: f64,
     /// Decode-step assembly samples observed.
     pub assembly_samples: u64,
+    /// lo→hi promotions across completed turns (summed over workers; the
+    /// tier lifecycle's demote-inverse — 0 unless sessions opt into
+    /// `compression.promotion`).
+    pub promotions: u64,
+    /// Hysteresis-suppressed promotions across completed turns.
+    pub thrash_suppressed: u64,
     /// Buffer-pool counters (summed over the per-worker pools).
     pub pool: PoolStats,
     /// Per-worker breakdown, ordered by worker index.
@@ -102,6 +112,8 @@ impl StatsSnapshot {
             weighted_a99 += part.assembly_us_p99 * window;
             assembly_windows += window;
             out.assembly_samples += part.assembly_samples;
+            out.promotions += part.promotions;
+            out.thrash_suppressed += part.thrash_suppressed;
             out.pool.free_blocks += part.pool.free_blocks;
             out.pool.free_bytes += part.pool.free_bytes;
             out.pool.outstanding_blocks += part.pool.outstanding_blocks;
@@ -141,6 +153,8 @@ pub struct MetricsCollector {
     assembly: Vec<Duration>,
     assembly_pos: usize,
     assembly_total: u64,
+    promotions: u64,
+    thrash_suppressed: u64,
 }
 
 impl Default for MetricsCollector {
@@ -161,11 +175,13 @@ impl MetricsCollector {
             assembly: Vec::new(),
             assembly_pos: 0,
             assembly_total: 0,
+            promotions: 0,
+            thrash_suppressed: 0,
         }
     }
 
     /// Record one decode step's host input-assembly time (ring-buffered to
-    /// the last [`ASSEMBLY_WINDOW`] samples).
+    /// the last `ASSEMBLY_WINDOW` samples).
     pub fn record_assembly(&mut self, d: Duration) {
         self.assembly_total += 1;
         if self.assembly.len() < ASSEMBLY_WINDOW {
@@ -201,6 +217,18 @@ impl MetricsCollector {
         self.prompt_tokens += m.prompt_tokens;
         self.generated_tokens += m.generated_tokens;
         self.host_bytes.push(m.host_bytes);
+        self.promotions += m.promotions;
+        self.thrash_suppressed += m.thrash_suppressed;
+    }
+
+    /// lo→hi promotions summed over completed turns.
+    pub fn promotions(&self) -> u64 {
+        self.promotions
+    }
+
+    /// Hysteresis-suppressed promotions summed over completed turns.
+    pub fn thrash_suppressed(&self) -> u64 {
+        self.thrash_suppressed
     }
 
     pub fn n_requests(&self) -> usize {
@@ -267,6 +295,8 @@ mod tests {
             host_bytes: 1 << 20,
             hi_slots: 4,
             lo_slots: 12,
+            promotions: 3,
+            thrash_suppressed: 1,
         }
     }
 
@@ -286,6 +316,9 @@ mod tests {
         assert!((l50.as_secs_f64() - 0.101).abs() < 1e-9, "{l50:?}");
         assert!((l99.as_secs_f64() - 0.19802).abs() < 1e-9, "{l99:?}");
         assert_eq!(c.generated_tokens(), 500);
+        // per-turn promotion deltas accumulate into worker totals
+        assert_eq!(c.promotions(), 300);
+        assert_eq!(c.thrash_suppressed(), 100);
     }
 
     #[test]
@@ -328,6 +361,8 @@ mod tests {
             throughput_tps: 10.0,
             mean_host_bytes: 1000.0,
             peak_host_bytes: 5000,
+            promotions: 7,
+            thrash_suppressed: 2,
             workers: vec![w(1, 4)],
             ..StatsSnapshot::default()
         };
@@ -341,6 +376,8 @@ mod tests {
             throughput_tps: 30.0,
             mean_host_bytes: 2000.0,
             peak_host_bytes: 3000,
+            promotions: 3,
+            thrash_suppressed: 1,
             workers: vec![w(0, 12)],
             ..StatsSnapshot::default()
         };
@@ -355,6 +392,8 @@ mod tests {
         // weighted: (1000·4 + 2000·12) / 16 = 1750
         assert!((m.mean_host_bytes - 1750.0).abs() < 1e-9);
         assert_eq!(m.peak_host_bytes, 5000);
+        assert_eq!(m.promotions, 10);
+        assert_eq!(m.thrash_suppressed, 3);
         // workers sorted by index after the merge
         assert_eq!(m.workers.len(), 2);
         assert_eq!(m.workers[0].worker, 0);

@@ -123,6 +123,7 @@ mod tests {
             recent_window: 4,
             retention,
             outlier_aware: true,
+            promotion: None,
         }
     }
 

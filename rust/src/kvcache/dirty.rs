@@ -2,8 +2,10 @@
 //!
 //! Every mutation of a session's decode-shadow blocks touches a small,
 //! known set of *rows* (token slots): an append writes one row per plane, a
-//! demotion clears one hi row and writes one lo row, a prefill rewrites
-//! everything. The [`DirtyTracker`] records which rows changed since the
+//! demotion clears one hi row and writes one lo row, a promotion clears one
+//! lo row and writes one hi row (plus its swap victim's demotion), a
+//! prefill rewrites everything. The [`DirtyTracker`] records which rows
+//! changed since the
 //! engine last copied this session's shadow into its batch arena, so a
 //! steady-state decode step copies **only the changed rows** instead of the
 //! whole live prefix (see `model::assembly`).

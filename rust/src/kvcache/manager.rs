@@ -25,6 +25,14 @@
 //! Lifecycle per session: [`CacheManager::ingest_prefill`] once, then
 //! [`CacheManager::append_token`] per generated token. The engine reads the
 //! dense blocks via [`CacheManager::decode_views`].
+//!
+//! Tier transitions are **bidirectional** when [`CacheConfig::promotion`]
+//! is set: every `append_token` runs a promotion pass after enforcing the
+//! hi budget, re-quantizing the lo slots with the strongest post-demotion
+//! re-access signal back into the hi tier (swapping the coldest eligible
+//! hi slot down so `hi_count ≤ hi_budget` always holds), with
+//! min-residency hysteresis on both tiers so a boundary token cannot
+//! thrash. Default `promotion: None` never enters that code path.
 
 use super::accounting::{self, HostFootprint, Occupancy};
 use super::dirty::{DirtyTake, DirtyTracker};
@@ -33,6 +41,18 @@ use super::tier::{HiTier, LoTier};
 use super::{CacheConfig, Placement, RetentionMode};
 use crate::policies::ImportancePolicy;
 use crate::quant::Balancer;
+
+/// Cumulative promotion-pass counters for one session (reported per turn
+/// on the wire and folded into the serving stats snapshot).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PromotionStats {
+    /// lo→hi promotions performed.
+    pub promotions: u64,
+    /// Promotions the re-access signal asked for but the min-residency
+    /// hysteresis blocked (the candidate's own residency, or no
+    /// residency-eligible hi slot to swap down).
+    pub thrash_suppressed: u64,
+}
 
 /// Smallest per-plane slot capacity the manager requests from the pool
 /// (keeps tiny prompts from growing through many size classes).
@@ -110,6 +130,13 @@ pub struct CacheManager {
 
     placement: Vec<Placement>,
     hi_count: Vec<usize>,
+    /// Decode step at which each slot last changed tier, `[planes, cap]`
+    /// (same stride as `placement`) — the residency clock the promotion
+    /// hysteresis reads. Values are bounded by `max_seq`, so u32 suffices.
+    tier_since: Vec<u32>,
+    /// Decode steps ingested since prefill (the residency clock).
+    step: u32,
+    promo: PromotionStats,
     seq_len: usize,
     scratch_u8: Vec<u8>,
     scratch_f32: Vec<f32>,
@@ -165,6 +192,9 @@ impl CacheManager {
             inv_balancer: vec![1.0; planes * d],
             placement: Vec::new(),
             hi_count: vec![0; planes],
+            tier_since: Vec::new(),
+            step: 0,
+            promo: PromotionStats::default(),
             seq_len: 0,
             scratch_u8: vec![0; d],
             scratch_f32: vec![0.0; d],
@@ -212,6 +242,17 @@ impl CacheManager {
 
     pub fn placement(&self, plane: usize, s: usize) -> Placement {
         self.placement[self.slot_idx(plane, s)]
+    }
+
+    /// Decode steps `(plane, s)` has spent in its current tier (the
+    /// hysteresis clock; resets on every tier transition).
+    pub fn residency(&self, plane: usize, s: usize) -> usize {
+        (self.step - self.tier_since[self.slot_idx(plane, s)]) as usize
+    }
+
+    /// Cumulative promotion counters for this session.
+    pub fn promotion_stats(&self) -> PromotionStats {
+        self.promo
     }
 
     // ------------------------------------------------------------------
@@ -267,11 +308,15 @@ impl CacheManager {
         regrow(&self.pool, &mut self.lo_mask, 1, planes, old_cap, new_cap, live);
 
         let mut placement = vec![Placement::Empty; planes * new_cap];
+        let mut tier_since = vec![0u32; planes * new_cap];
         for p in 0..planes {
             placement[p * new_cap..p * new_cap + live]
                 .copy_from_slice(&self.placement[p * old_cap..p * old_cap + live]);
+            tier_since[p * new_cap..p * new_cap + live]
+                .copy_from_slice(&self.tier_since[p * old_cap..p * old_cap + live]);
         }
         self.placement = placement;
+        self.tier_since = tier_since;
 
         for hi in &mut self.hi {
             hi.ensure_capacity(new_cap);
@@ -306,6 +351,9 @@ impl CacheManager {
         assert_eq!(qmax.len(), self.planes * self.d);
         self.ensure_capacity(seq_len);
         self.seq_len = seq_len;
+        // Prefill (re)starts the residency clock: every slot admitted below
+        // records tier entry at step 0.
+        self.step = 0;
         // Prefill rewrites every shadow row (and the balancers): any engine
         // lane holding this session must fully rescatter.
         self.dirty.mark_all();
@@ -381,13 +429,15 @@ impl CacheManager {
     }
 
     /// Ingest one decode step's outputs: update importance, admit the new
-    /// token to the hi tier, and demote/evict down to budget.
+    /// token to the hi tier, demote/evict down to budget, and (when
+    /// [`CacheConfig::promotion`] is set) run the lo→hi promotion pass.
     pub fn append_token(&mut self, out: StepOutputs<'_>) {
         let t = self.seq_len;
         assert!(t < self.s_max, "cache full");
         assert_eq!(out.k_new.len(), self.planes * self.d);
         assert_eq!(out.attn_prev.len(), self.planes * self.s_max);
         self.ensure_capacity(t + 1);
+        self.step += 1;
 
         let new_len = t + 1;
         let budget = self.cfg.hi_budget(new_len);
@@ -413,15 +463,32 @@ impl CacheManager {
             // Enforce the hi budget.
             while self.hi_count[p] > budget {
                 let protect_from = new_len.saturating_sub(self.cfg.recent_window.max(1));
-                let candidates: Vec<usize> = (0..protect_from)
+                let mut candidates: Vec<usize> = (0..protect_from)
                     .filter(|&s| self.placement(p, s) == Placement::Hi)
                     .collect();
                 if candidates.is_empty() {
                     break; // everything hi is recency-protected
                 }
+                // With promotion on, prefer victims that have served their
+                // hi-tier min-residency — a freshly promoted slot must not
+                // be the next demotion victim (thrash). The budget
+                // invariant outranks the hysteresis: when every candidate
+                // is young, demote among all of them anyway.
+                if let Some(pcfg) = self.cfg.promotion {
+                    let eligible = candidates
+                        .iter()
+                        .filter(|&&s| self.residency(p, s) >= pcfg.min_residency)
+                        .count();
+                    if eligible > 0 {
+                        candidates.retain(|&s| self.residency(p, s) >= pcfg.min_residency);
+                    }
+                }
                 let victim = self.policy.select_victim(p, &candidates);
                 self.demote(p, victim);
             }
+
+            // The demote-inverse: promote hot lo slots back to hi.
+            self.promote_pass(p, new_len, budget);
         }
         self.seq_len = new_len;
     }
@@ -445,6 +512,7 @@ impl CacheManager {
         self.hi_mask[idx] = 1.0;
         self.hi_count[p] += 1;
         self.placement[idx] = Placement::Hi;
+        self.tier_since[idx] = self.step;
         self.dirty.mark(s);
     }
 
@@ -486,9 +554,160 @@ impl CacheManager {
                 self.placement[idx] = Placement::Lo;
             }
         }
+        self.tier_since[idx] = self.step;
         // Both arms changed row `s` of the shadow (the hi clear in
         // `demote`, and/or the lo write here).
         self.dirty.mark(s);
+    }
+
+    /// Promote a lo slot back into the hi tier: stage its dequantized K/V
+    /// through the reusable scratch buffers (allocation-free slot handoff),
+    /// clear the packed and shadow lo state, and re-admit at hi precision.
+    ///
+    /// Retention is lossy-once — the lo codes are all that survives the
+    /// original demotion — so promotion re-quantizes *those* values to hi
+    /// precision. What it buys is forward-looking: the slot stops being
+    /// read through the lo dequant path, is exempt from further
+    /// demote→requantize rounding, and the paper's invariant ("important
+    /// KV pairs kept at relatively higher precision") is restored for
+    /// tokens whose importance emerged late.
+    fn promote(&mut self, p: usize, s: usize) {
+        debug_assert_eq!(self.placement(p, s), Placement::Lo);
+        let mut k = std::mem::take(&mut self.scratch_k);
+        let mut v = std::mem::take(&mut self.scratch_v);
+        self.lo[p].take_slot_into(s, &mut k, &mut v);
+        // The lo tier stores balanced keys (paper eq. 3); undo it so the
+        // hi tier holds the effective key, exactly what the attention
+        // kernel (and `effective_kv`) sees.
+        self.balancers[p].unbalance_key_into(&mut k);
+        self.clear_lo_shadow(p, s);
+        let idx = self.slot_idx(p, s);
+        self.lo_mask[idx] = 0.0;
+        self.placement[idx] = Placement::Empty;
+        self.admit_hi(p, s, &k, &v); // stamps tier_since + dirty row
+        self.scratch_k = k;
+        self.scratch_v = v;
+    }
+
+    /// One plane's lo→hi promotion pass (no-op without
+    /// [`CacheConfig::promotion`]). Runs after budget enforcement: up to
+    /// `max_per_step` times, the hottest residency-eligible lo slot by
+    /// [`crate::policies::ImportancePolicy::reaccess`] is promoted —
+    /// outright when the hi tier has spare budget, otherwise by swapping
+    /// down the coldest residency-eligible hi slot outside the recency
+    /// window, and only when the candidate clears `promote_margin ×` the
+    /// victim's signal (the hysteresis band). A promotion the signal asks
+    /// for but residency blocks increments `thrash_suppressed`.
+    fn promote_pass(&mut self, p: usize, new_len: usize, budget: usize) {
+        let Some(pcfg) = self.cfg.promotion else { return };
+        let protect_from = new_len.saturating_sub(self.cfg.recent_window.max(1));
+        for _ in 0..pcfg.max_per_step {
+            // Hottest lo slot: overall (to detect residency-blocked heat)
+            // and among residency-eligible candidates (actionable).
+            let mut best: Option<(f32, usize)> = None;
+            let mut best_any: Option<(f32, usize)> = None;
+            for s in 0..new_len {
+                if self.placement(p, s) != Placement::Lo {
+                    continue;
+                }
+                let r = self.policy.reaccess(p, s);
+                if r <= 0.0 {
+                    continue;
+                }
+                let beats_any = match best_any {
+                    Some((br, _)) => r > br,
+                    None => true,
+                };
+                if beats_any {
+                    best_any = Some((r, s));
+                }
+                let beats_best = match best {
+                    Some((br, _)) => r > br,
+                    None => true,
+                };
+                if beats_best && self.residency(p, s) >= pcfg.min_residency {
+                    best = Some((r, s));
+                }
+            }
+            let Some((hottest_any, _)) = best_any else {
+                break; // no lo slot has any re-access signal
+            };
+
+            // Swap victim: the coldest residency-eligible hi slot outside
+            // the recency window (only needed when hi is at budget).
+            let need_swap = self.hi_count[p] >= budget;
+            let mut victim: Option<(f32, usize)> = None;
+            if need_swap {
+                for s in 0..protect_from {
+                    if self.placement(p, s) != Placement::Hi
+                        || self.residency(p, s) < pcfg.min_residency
+                    {
+                        continue;
+                    }
+                    let r = self.policy.reaccess(p, s);
+                    let colder = match victim {
+                        Some((vr, _)) => r < vr,
+                        None => true,
+                    };
+                    if colder {
+                        victim = Some((r, s));
+                    }
+                }
+            }
+
+            match (best, need_swap, victim) {
+                // Spare hi budget: promote the hottest eligible outright.
+                (Some((_, s)), false, _) => {
+                    self.promote(p, s);
+                    self.promo.promotions += 1;
+                }
+                // At budget: swap only past the hysteresis margin.
+                (Some((r, s)), true, Some((vr, v))) if r > pcfg.promote_margin * vr => {
+                    self.demote(p, v);
+                    self.promote(p, s);
+                    self.promo.promotions += 1;
+                }
+                // The eligible candidate sits inside the hysteresis band.
+                // If a residency-blocked hotter slot WOULD clear it, only
+                // the residency clock is holding the promotion back —
+                // count that as suppressed thrash; either way stop.
+                (Some(_), true, Some((vr, _))) => {
+                    if hottest_any > pcfg.promote_margin * vr {
+                        self.promo.thrash_suppressed += 1;
+                    }
+                    break;
+                }
+                // The signal asks for a promotion but residency blocks it
+                // (the candidate's own clock, or no eligible swap victim):
+                // count the suppressed thrash and stop.
+                _ => {
+                    let would_promote = match victim {
+                        Some((vr, _)) => hottest_any > pcfg.promote_margin * vr,
+                        None => true,
+                    };
+                    if would_promote {
+                        self.promo.thrash_suppressed += 1;
+                    }
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Zero the dense shadow of one lo slot (codes + metadata) — the
+    /// inverse of [`Self::refresh_lo_shadow`], used when a slot leaves the
+    /// lo tier on promotion. Masked lanes must stay finite, so zeros (not
+    /// garbage) are required for the HLO inputs.
+    fn clear_lo_shadow(&mut self, p: usize, s: usize) {
+        let d = self.d;
+        let off = (p * self.cap + s) * d;
+        let goff = (p * self.cap + s) * self.groups;
+        self.k_lo_codes[off..off + d].fill(0.0);
+        self.v_lo_codes[off..off + d].fill(0.0);
+        self.k_lo_scale[goff..goff + self.groups].fill(0.0);
+        self.k_lo_zero[goff..goff + self.groups].fill(0.0);
+        self.v_lo_scale[goff..goff + self.groups].fill(0.0);
+        self.v_lo_zero[goff..goff + self.groups].fill(0.0);
     }
 
     /// Rebuild the dense shadow of one lo slot from the packed tier.
@@ -627,6 +846,7 @@ impl CacheManager {
         let tier_bytes = self.hi.iter().map(HiTier::host_bytes).sum::<usize>()
             + self.lo.iter().map(LoTier::host_bytes).sum::<usize>();
         let other_bytes = self.placement.len() * std::mem::size_of::<Placement>()
+            + self.tier_since.len() * std::mem::size_of::<u32>()
             + self.inv_balancer.len() * f32b
             + self.balancers.iter().map(|b| b.b.len() * f32b).sum::<usize>()
             + self.scratch_u8.len()
@@ -686,6 +906,7 @@ impl CacheManager {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kvcache::PromotionConfig;
     use crate::policies::{make_policy, H2oPolicy};
     use crate::quant::Precision;
     use crate::util::rng::Pcg32;
@@ -1001,17 +1222,21 @@ mod tests {
         assert!(pool.stats().hits > 0, "second session hit the pool");
     }
 
-    /// Paper §3.1 by construction: after ARBITRARY admit/observe/demote
-    /// sequences (random ratio / recency window / lo precision / policy /
-    /// prompt length / decode steps), the tier state always satisfies
+    /// Paper §3.1 by construction: after ARBITRARY admit/observe/demote/
+    /// **promote** sequences (random ratio / recency window / lo precision
+    /// / policy / prompt length / decode steps / promotion knobs), the
+    /// tier state always satisfies
     ///
     /// * per-plane hi occupancy never exceeds the importance budget
     ///   `hi_budget(seq_len)` (recency protection is inside the budget,
-    ///   since `hi_budget >= min(recent_window, seq_len)`);
+    ///   since `hi_budget >= min(recent_window, seq_len)`; promotion swaps
+    ///   never grow the count past it);
     /// * the recency window is always hi-precision;
     /// * every demoted slot remains dequantizable to finite values — the
     ///   eviction-loss failure mode ("token left behind") is impossible in
-    ///   Retain mode;
+    ///   Retain mode — and so is every promoted slot;
+    /// * min-residency hysteresis: a slot is only ever promoted lo→hi
+    ///   after at least `min_residency` decode steps in the lo tier;
     /// * the manager's structural invariants (masks/placement/counters)
     ///   hold after every single step.
     #[test]
@@ -1073,6 +1298,17 @@ mod tests {
             let mut cfg = CacheConfig::mikv(2, 2, 8, max_seq, ratio, lo);
             cfg.recent_window = 1 + rng.gen_below(4) as usize;
             cfg.outlier_aware = rng.gen_bool(0.5);
+            // Half the cases exercise the bidirectional lifecycle.
+            // min_residency >= 1 also guarantees no same-step round trip,
+            // so placement diffs below observe every transition.
+            if rng.gen_bool(0.5) {
+                cfg.promotion = Some(PromotionConfig {
+                    max_per_step: 1 + rng.gen_below(2) as usize,
+                    min_residency: 1 + rng.gen_below(3) as usize,
+                    promote_margin: *rng.choose(&[1.2f32, 1.5, 2.0]),
+                });
+            }
+            let promotion = cfg.promotion;
             let planes = cfg.layers * cfg.kv_heads;
             let policy_name = *rng.choose(&["h2o", "local", "random"]);
             let policy = make_policy(policy_name, planes, max_seq, rng.next_u64())
@@ -1084,13 +1320,31 @@ mod tests {
             m.ingest_prefill(t0, &k, &v, &acc, &qmax, &kmax);
             check(&m, "after prefill")?;
 
+            // External residency model: last observed placement and the
+            // step each slot entered it (promotion must respect it).
+            let snapshot = |m: &CacheManager| -> Vec<Vec<Placement>> {
+                (0..planes)
+                    .map(|p| (0..m.seq_len()).map(|s| m.placement(p, s)).collect())
+                    .collect()
+            };
+            let mut prev = snapshot(&m);
+            let mut entered = vec![vec![0usize; max_seq]; planes];
+
             let steps = (rng.gen_below(24) as usize).min(max_seq - t0);
             let d = m.config().head_dim;
             for step in 0..steps {
                 let k_new: Vec<f32> = (0..planes * d).map(|_| rng.gen_normal()).collect();
                 let v_new: Vec<f32> = (0..planes * d).map(|_| rng.gen_normal()).collect();
-                let attn_prev: Vec<f32> =
+                let mut attn_prev: Vec<f32> =
                     (0..planes * max_seq).map(|_| rng.gen_f32() * 0.1).collect();
+                // Sometimes concentrate attention on one slot so the
+                // re-access EMA actually drives promotions.
+                if rng.gen_bool(0.5) {
+                    let hot = rng.gen_below(m.seq_len() as u32) as usize;
+                    for p in 0..planes {
+                        attn_prev[p * max_seq + hot] = 0.9;
+                    }
+                }
                 let attn_self: Vec<f32> = (0..planes).map(|_| rng.gen_f32() * 0.1).collect();
                 m.append_token(StepOutputs {
                     k_new: &k_new,
@@ -1099,6 +1353,38 @@ mod tests {
                     attn_self: &attn_self,
                 });
                 check(&m, &format!("after step {step}"))?;
+
+                let now = snapshot(&m);
+                let this_step = step + 1;
+                for p in 0..planes {
+                    for s in 0..m.seq_len() {
+                        let old = prev[p].get(s).copied().unwrap_or(Placement::Empty);
+                        let new = now[p][s];
+                        if old == new {
+                            continue;
+                        }
+                        if old == Placement::Lo && new == Placement::Hi {
+                            let cfg_p = promotion.ok_or_else(|| {
+                                format!("({p},{s}) promoted with promotion off")
+                            })?;
+                            let resided = this_step - entered[p][s];
+                            crate::prop_assert!(
+                                resided >= cfg_p.min_residency,
+                                "({p},{s}) promoted after {resided} < min_residency {} steps",
+                                cfg_p.min_residency
+                            );
+                        }
+                        entered[p][s] = this_step;
+                    }
+                }
+                prev = now;
+            }
+            if promotion.is_none() {
+                crate::prop_assert!(
+                    m.promotion_stats() == PromotionStats::default(),
+                    "promotion-off counters moved: {:?}",
+                    m.promotion_stats()
+                );
             }
             Ok(())
         });
@@ -1196,6 +1482,236 @@ mod tests {
                 }
             }
         }
+    }
+
+    // ------------------------------------------------------------------
+    // Promotion (the demote-inverse path)
+    // ------------------------------------------------------------------
+
+    /// The tentpole acceptance case: a token with low attention at demote
+    /// time but high attention afterwards (the late-emerging importance of
+    /// LagKV / the fragility paper) is re-quantized back into the hi tier
+    /// within the residency window, the hi budget is never exceeded along
+    /// the way, and the early hot signal is hysteresis-suppressed (counted)
+    /// rather than acted on immediately.
+    #[test]
+    fn promotion_recovers_late_important_token() {
+        let mut cfg = small_cfg(0.25, RetentionMode::Retain);
+        let pcfg = PromotionConfig {
+            max_per_step: 1,
+            min_residency: 2,
+            promote_margin: 2.0,
+        };
+        cfg.promotion = Some(pcfg);
+        let planes = cfg.layers * cfg.kv_heads;
+        let policy = Box::new(H2oPolicy::new(planes, cfg.max_seq));
+        let mut m = CacheManager::new(cfg, policy);
+        let mut rng = Pcg32::new(41);
+        let (t0, d, s_max) = (16usize, 8usize, 32usize);
+        let x = 3usize; // the late-important token
+
+        let (k, v, _, qmax, kmax) = prefill_data(m.config(), t0, &mut rng);
+        // Importance seeding: slot X is the least important everywhere, so
+        // prefill placement demotes it to the lo tier.
+        let mut acc = vec![0.0f32; planes * t0];
+        for p in 0..planes {
+            for s in 0..t0 {
+                acc[p * t0 + s] = if s == x { 0.001 } else { 0.2 + s as f32 * 0.01 };
+            }
+        }
+        m.ingest_prefill(t0, &k, &v, &acc, &qmax, &kmax);
+        for p in 0..planes {
+            assert_eq!(m.placement(p, x), Placement::Lo, "plane {p}: X starts lo");
+        }
+
+        // Decode steps whose attention concentrates on X.
+        let mut promoted_at: Option<usize> = None;
+        for step in 1..=8 {
+            let k_new: Vec<f32> = (0..planes * d).map(|_| rng.gen_normal()).collect();
+            let mut attn_prev = vec![0.001f32; planes * s_max];
+            for p in 0..planes {
+                attn_prev[p * s_max + x] = 0.9;
+            }
+            let attn_self = vec![0.01f32; planes];
+            m.append_token(StepOutputs {
+                k_new: &k_new,
+                v_new: &k_new,
+                attn_prev: &attn_prev,
+                attn_self: &attn_self,
+            });
+            m.check_invariants()
+                .unwrap_or_else(|e| panic!("step {step}: {e}"));
+            let budget = m.config().hi_budget(m.seq_len());
+            for p in 0..planes {
+                let hi_n = (0..m.seq_len())
+                    .filter(|&s| m.placement(p, s) == Placement::Hi)
+                    .count();
+                assert!(hi_n <= budget, "step {step} plane {p}: hi {hi_n} > {budget}");
+            }
+            if promoted_at.is_none()
+                && (0..planes).all(|p| m.placement(p, x) == Placement::Hi)
+            {
+                promoted_at = Some(step);
+            }
+        }
+        let at = promoted_at.expect("late-important token re-quantized to hi");
+        assert!(
+            at <= pcfg.min_residency + 4,
+            "promotion within the residency window: step {at}"
+        );
+        let stats = m.promotion_stats();
+        assert!(
+            stats.promotions >= planes as u64,
+            "every plane promoted X: {stats:?}"
+        );
+        assert!(
+            stats.thrash_suppressed >= 1,
+            "the pre-residency hot signal was suppressed, not acted on: {stats:?}"
+        );
+
+        // The promoted slot reads through the hi path: mask flipped, lo
+        // shadow (codes + metadata) fully cleared, values finite.
+        let g = m.groups();
+        let cap = m.capacity();
+        let views = m.decode_views();
+        for p in 0..planes {
+            let idx = p * cap + x;
+            assert_eq!(views.hi_mask[idx], 1.0, "plane {p}");
+            assert_eq!(views.lo_mask[idx], 0.0, "plane {p}");
+            assert!(
+                views.k_lo_scale[idx * g..(idx + 1) * g].iter().all(|&s| s == 0.0),
+                "plane {p}: stale lo metadata"
+            );
+            assert!(
+                views.k_lo_codes[idx * d..(idx + 1) * d].iter().all(|&c| c == 0.0),
+                "plane {p}: stale lo codes"
+            );
+        }
+        let (ke, ve) = m.effective_kv(0, x).expect("promoted slot readable");
+        assert!(ke.iter().chain(ve.iter()).all(|f| f.is_finite()));
+    }
+
+    /// Default-off regression lock: without `promotion` in the config the
+    /// promote pass never runs — zero counters, and no slot ever moves
+    /// lo→hi — so the tier lifecycle is exactly the historical one-way
+    /// street.
+    #[test]
+    fn promotion_off_is_inert() {
+        let mut m = manager(0.25, RetentionMode::Retain);
+        let mut rng = Pcg32::new(42);
+        let t0 = 12;
+        let (k, v, acc, qmax, kmax) = prefill_data(m.config(), t0, &mut rng);
+        m.ingest_prefill(t0, &k, &v, &acc, &qmax, &kmax);
+        let planes = 4usize;
+        let (d, s_max) = (8usize, 32usize);
+        let mut was_lo = vec![[false; 64]; planes];
+        for _ in 0..10 {
+            for p in 0..planes {
+                for s in 0..m.seq_len() {
+                    if m.placement(p, s) == Placement::Lo {
+                        was_lo[p][s] = true;
+                    }
+                }
+            }
+            let k_new: Vec<f32> = (0..planes * d).map(|_| rng.gen_normal()).collect();
+            // Hot attention that would trigger promotion if it were on.
+            let mut attn_prev = vec![0.001f32; planes * s_max];
+            for p in 0..planes {
+                attn_prev[p * s_max + 1] = 0.9;
+            }
+            let attn_self = vec![0.01f32; planes];
+            m.append_token(StepOutputs {
+                k_new: &k_new,
+                v_new: &k_new,
+                attn_prev: &attn_prev,
+                attn_self: &attn_self,
+            });
+            for p in 0..planes {
+                for s in 0..m.seq_len() {
+                    if was_lo[p][s] {
+                        assert_eq!(
+                            m.placement(p, s),
+                            Placement::Lo,
+                            "({p},{s}) left the lo tier with promotion off"
+                        );
+                    }
+                }
+            }
+        }
+        assert_eq!(m.promotion_stats(), PromotionStats::default());
+    }
+
+    /// Promotion mutations are delta-trackable: with promotion firing, the
+    /// drained dirty rows applied to a stale shadow copy still reproduce
+    /// the live shadow bit-for-bit (the same contract PR 4 locked for
+    /// append/demote, extended to the promote/swap edges).
+    #[test]
+    fn dirty_rows_cover_promotion_mutations() {
+        let mut cfg = small_cfg(0.25, RetentionMode::Retain);
+        cfg.promotion = Some(PromotionConfig {
+            max_per_step: 2,
+            min_residency: 1,
+            promote_margin: 1.2,
+        });
+        let planes = cfg.layers * cfg.kv_heads;
+        let policy = Box::new(H2oPolicy::new(planes, cfg.max_seq));
+        let mut m = CacheManager::new(cfg, policy);
+        let mut rng = Pcg32::new(43);
+        let t0 = 12;
+        let (k, v, _, qmax, kmax) = prefill_data(m.config(), t0, &mut rng);
+        let mut acc = vec![0.2f32; planes * t0];
+        for p in 0..planes {
+            acc[p * t0 + 2] = 0.001; // slot 2 demotes, then becomes hot
+        }
+        m.ingest_prefill(t0, &k, &v, &acc, &qmax, &kmax);
+
+        let mut rows = Vec::new();
+        assert!(m.take_dirty_into(&mut rows).all);
+
+        let snap = |m: &CacheManager| -> Vec<Vec<f32>> {
+            let vs = m.decode_views();
+            vec![
+                vs.k_hi.to_vec(), vs.v_hi.to_vec(), vs.hi_mask.to_vec(),
+                vs.k_lo_codes.to_vec(), vs.k_lo_scale.to_vec(), vs.k_lo_zero.to_vec(),
+                vs.v_lo_codes.to_vec(), vs.v_lo_scale.to_vec(), vs.v_lo_zero.to_vec(),
+                vs.lo_mask.to_vec(),
+            ]
+        };
+        let widths = [8usize, 8, 1, 8, 2, 2, 8, 2, 2, 1];
+        let mut stale = snap(&m);
+        let cap = m.capacity();
+
+        for _ in 0..3 {
+            let k_new: Vec<f32> = (0..planes * 8).map(|_| rng.gen_normal()).collect();
+            let mut attn_prev = vec![0.001f32; planes * 32];
+            for p in 0..planes {
+                attn_prev[p * 32 + 2] = 0.9;
+            }
+            let attn_self = vec![0.01f32; planes];
+            m.append_token(StepOutputs {
+                k_new: &k_new,
+                v_new: &k_new,
+                attn_prev: &attn_prev,
+                attn_self: &attn_self,
+            });
+            let take = m.take_dirty_into(&mut rows);
+            assert!(!take.all, "append+promote stays delta-trackable");
+            assert_eq!(m.capacity(), cap, "stride stable for the patch");
+            let now = snap(&m);
+            for (b, &w) in widths.iter().enumerate() {
+                for p in 0..planes {
+                    for &r in &rows {
+                        let o = (p * cap + r) * w;
+                        stale[b][o..o + w].copy_from_slice(&now[b][o..o + w]);
+                    }
+                }
+                assert_eq!(stale[b], now[b], "block {b}: dirty rows incomplete");
+            }
+        }
+        assert!(
+            m.promotion_stats().promotions > 0,
+            "the run must actually exercise promotion"
+        );
     }
 
     #[test]

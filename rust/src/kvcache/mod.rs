@@ -11,6 +11,14 @@
 //!   ever use this state; MiKV never fully discards a token
 //!   ("no token left behind").
 //!
+//! Tier membership is **bidirectional** when the opt-in
+//! [`PromotionConfig`] is set: besides the demote edge (hi → lo, driven by
+//! the importance budget), the manager runs a *promotion* pass (lo → hi)
+//! that re-quantizes the lo slots receiving the most recent attention back
+//! into the hi tier, under a per-step budget and min-residency hysteresis
+//! (see `ARCHITECTURE.md` for the full state machine). Default `None`
+//! keeps the historical one-way lifecycle bit-for-bit.
+//!
 //! [`manager::CacheManager`] owns the per-session tier state, the importance
 //! policy bookkeeping, the channel balancers, and produces dense
 //! plane-major blocks the decode HLO graph consumes (sized to the live
@@ -27,7 +35,7 @@ pub mod tier;
 
 pub use accounting::HostFootprint;
 pub use dirty::{DirtyTake, DirtyTracker};
-pub use manager::{CacheManager, StepOutputs};
+pub use manager::{CacheManager, PromotionStats, StepOutputs};
 pub use pool::{BufferPool, PoolStats, PooledBuf};
 
 use crate::quant::Precision;
@@ -52,6 +60,39 @@ impl TierConfig {
         assert!(precision.is_quantized());
         assert!(group > 0);
         Self { precision, group }
+    }
+}
+
+/// Opt-in configuration of the lo→hi *promotion* pass (the demote
+/// inverse). A lo-tier slot whose post-demotion re-access signal
+/// ([`crate::policies::ImportancePolicy::reaccess`]) dominates the coldest
+/// eligible hi slot is re-quantized back into the hi tier, swapping the
+/// cold slot down so the hi budget is never exceeded. Hysteresis comes
+/// from two sides: a slot must sit `min_residency` decode steps in its
+/// current tier before the promotion machinery may move it again, and a
+/// promotion needs a `promote_margin` (> 1) advantage over the would-be
+/// demotion threshold, so a boundary token cannot thrash hi⇄lo.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PromotionConfig {
+    /// Maximum lo→hi promotions per plane per decode step.
+    pub max_per_step: usize,
+    /// Decode steps a slot must spend in its current tier before the
+    /// promotion pass may move it (applies to the promoted lo slot and to
+    /// the hi slot swapped down to make room).
+    pub min_residency: usize,
+    /// A lo slot is promoted only when its re-access signal exceeds
+    /// `promote_margin ×` the signal of the coldest eligible hi slot —
+    /// the separate promote/demote thresholds of the hysteresis band.
+    pub promote_margin: f32,
+}
+
+impl Default for PromotionConfig {
+    fn default() -> Self {
+        Self {
+            max_per_step: 1,
+            min_residency: 4,
+            promote_margin: 2.0,
+        }
     }
 }
 
@@ -94,6 +135,9 @@ pub struct CacheConfig {
     pub retention: RetentionMode,
     /// Apply the §3.2 outlier channel balancer to lo-tier keys.
     pub outlier_aware: bool,
+    /// Opt-in lo→hi promotion on re-access. `None` (the default in every
+    /// preset) keeps the historical one-way hi→lo lifecycle exactly.
+    pub promotion: Option<PromotionConfig>,
 }
 
 impl CacheConfig {
@@ -116,6 +160,7 @@ impl CacheConfig {
             recent_window: 0,
             retention: RetentionMode::Retain,
             outlier_aware: true,
+            promotion: None,
         }
     }
 
@@ -140,6 +185,7 @@ impl CacheConfig {
             recent_window: 4,
             retention: RetentionMode::Retain,
             outlier_aware: true,
+            promotion: None,
         }
     }
 
@@ -209,5 +255,24 @@ mod tests {
     #[should_panic]
     fn quantized_tier_rejects_fp16() {
         TierConfig::quantized(Precision::Fp16, 8);
+    }
+
+    /// Promotion is opt-in: every preset leaves it off (the default-off
+    /// regression lock — today's one-way tier lifecycle), and the default
+    /// knobs form a sane hysteresis band.
+    #[test]
+    fn promotion_is_off_in_every_preset() {
+        assert_eq!(CacheConfig::full(2, 2, 8, 32).promotion, None);
+        assert_eq!(
+            CacheConfig::mikv(2, 2, 8, 32, 0.25, Precision::Int4).promotion,
+            None
+        );
+        assert_eq!(CacheConfig::h2o(2, 2, 8, 32, 0.25).promotion, None);
+        assert_eq!(CacheConfig::rtn(2, 2, 8, 32, Precision::Int8).promotion, None);
+
+        let p = PromotionConfig::default();
+        assert!(p.max_per_step >= 1);
+        assert!(p.min_residency >= 1);
+        assert!(p.promote_margin > 1.0, "margin must open a hysteresis band");
     }
 }

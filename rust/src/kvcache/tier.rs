@@ -272,6 +272,16 @@ impl LoTier {
         );
     }
 
+    /// Promotion staging: dequantize slot `s` into the caller's scratch
+    /// buffers (each `[head_dim]`) and clear the packed slot in one pass —
+    /// the lo→hi handoff used by `CacheManager::promote`. Allocation-free:
+    /// the slot's contents move through caller-owned scratch, never a
+    /// fresh `Vec`, so a steady-state promotion costs no heap traffic.
+    pub fn take_slot_into(&mut self, s: usize, k_out: &mut [f32], v_out: &mut [f32]) {
+        self.dequant_slot_into(s, k_out, v_out);
+        self.clear(s);
+    }
+
     /// Fully dequantize slot `s` (allocating diagnostics wrapper over
     /// [`Self::dequant_slot_into`]).
     pub fn dequant_slot(&self, s: usize) -> (Vec<f32>, Vec<f32>) {
@@ -421,6 +431,33 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// `take_slot_into` is exactly dequant-then-clear: the staged values
+    /// match `dequant_slot_into` bit-for-bit and the slot reads back zero.
+    #[test]
+    fn take_slot_into_stages_and_clears() {
+        let cfg = TierConfig::quantized(Precision::Int4, 4);
+        let mut t = LoTier::new(cfg, 8, 2);
+        let k: Vec<f32> = (0..8).map(|i| (i as f32 * 0.7).sin()).collect();
+        let v: Vec<f32> = (0..8).map(|i| (i as f32 * 0.3).cos()).collect();
+        t.admit(1, &k, &v);
+        let mut want_k = vec![0.0f32; 8];
+        let mut want_v = vec![0.0f32; 8];
+        t.dequant_slot_into(1, &mut want_k, &mut want_v);
+
+        let mut got_k = vec![0.0f32; 8];
+        let mut got_v = vec![0.0f32; 8];
+        t.take_slot_into(1, &mut got_k, &mut got_v);
+        assert_eq!(got_k, want_k);
+        assert_eq!(got_v, want_v);
+        let (kd, vd) = t.dequant_slot(1);
+        assert!(kd.iter().chain(vd.iter()).all(|&x| x == 0.0), "slot cleared");
+        // the neighbouring slot is untouched
+        t.admit(0, &k, &v);
+        let before = t.dequant_slot(0);
+        t.take_slot_into(1, &mut got_k, &mut got_v);
+        assert_eq!(t.dequant_slot(0), before);
     }
 
     #[test]

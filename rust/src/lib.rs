@@ -8,7 +8,14 @@
 //! (INT2/3/4) per-token asymmetric quantization with a dynamic query/key
 //! outlier channel balancer, while the important ("heavy hitter") KV pairs
 //! stay in high precision. The result is an eviction-shaped memory budget
-//! without the context damage eviction causes.
+//! without the context damage eviction causes. Tier membership is
+//! bidirectional on request: the opt-in *promotion on re-access* pass
+//! re-quantizes lo-tier tokens whose importance emerges late back into the
+//! hi tier (see [`kvcache`]).
+//!
+//! `ARCHITECTURE.md` at the repo root is the top-down tour of the serving
+//! system (request lifecycle, tier state machine, delta assembly, metrics
+//! pipeline); `EXPERIMENTS.md` documents each experiment's methodology.
 //!
 //! ## Crate layout (layer 3 of the three-layer stack)
 //!

@@ -33,7 +33,8 @@ COMMANDS:
   info       print manifest summary
 
 MODES (for --mode / --modes):
-  full | oracle:<k> | mikv:<ratio>:<lo> | h2o:<ratio> | rtn:<prec>
+  full | oracle:<k> | mikv:<ratio>:<lo>[:promote] | h2o:<ratio> | rtn:<prec>
+  (mikv flags also: nobal, hi=<prec>, policy=<name>, recent=<n>, group=<n>)
 ";
 
 fn main() {

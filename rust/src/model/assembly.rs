@@ -473,6 +473,44 @@ mod tests {
         sess
     }
 
+    /// A MiKV session with the lo→hi promotion pass enabled (aggressive
+    /// knobs so promotions actually fire under the test workloads).
+    fn mikv_promoting_session(
+        id: u64,
+        d: &ModelDims,
+        prompt_len: usize,
+        rng: &mut Pcg32,
+    ) -> Session {
+        let mut mode = CacheMode::mikv(d, 0.25, Precision::Int4);
+        if let CacheMode::Mikv { cfg, .. } = &mut mode {
+            cfg.promotion = Some(crate::kvcache::PromotionConfig {
+                max_per_step: 2,
+                min_residency: 1,
+                promote_margin: 1.1,
+            });
+        }
+        let mut sess = Session::new(id, d, mode).unwrap();
+        prefill(&mut sess, d, prompt_len, rng);
+        sess
+    }
+
+    /// Like [`step`], but with the attention row concentrated on one slot
+    /// (drives the re-access EMA so the promotion pass fires).
+    fn step_hot(sess: &mut Session, d: &ModelDims, hot: usize, rng: &mut Pcg32) {
+        let planes = d.planes();
+        let dh = d.d_head;
+        let k: Vec<f32> = (0..planes * dh).map(|_| rng.gen_normal()).collect();
+        let v: Vec<f32> = (0..planes * dh).map(|_| rng.gen_normal()).collect();
+        let mut ap = vec![0.001f32; planes * d.max_seq];
+        for p in 0..planes {
+            ap[p * d.max_seq + hot] = 0.9;
+        }
+        let asf: Vec<f32> = (0..planes).map(|_| rng.gen_f32() * 0.1).collect();
+        sess.try_ingest_step(&k, &v, &ap, &asf).unwrap();
+        sess.last_token = (sess.last_token + 1) % 32;
+        sess.tokens.push(sess.last_token);
+    }
+
     fn prefill(sess: &mut Session, d: &ModelDims, t: usize, rng: &mut Pcg32) {
         let planes = d.planes();
         let dh = d.d_head;
@@ -579,10 +617,13 @@ mod tests {
     }
 
     /// The delta-path equivalence property (tentpole acceptance): after
-    /// arbitrary admit/observe/demote/append activity, delta-assembled
-    /// batch tensors are bit-identical to a full rescatter — including
-    /// lane-shrink re-zeroing when a shorter session takes over a lane,
-    /// padding-lane retirement, and the lane-migration fallback.
+    /// arbitrary admit/observe/demote/**promote**/append activity,
+    /// delta-assembled batch tensors are bit-identical to a full rescatter
+    /// — including lane-shrink re-zeroing when a shorter session takes
+    /// over a lane, padding-lane retirement, and the lane-migration
+    /// fallback. Half the sessions run with the promotion pass enabled and
+    /// concentrated attention, so the promote/swap dirty rows are part of
+    /// the delta under test.
     #[test]
     fn property_delta_assembly_matches_full_rescatter() {
         forall(Config::default().cases(25).name("delta assembly"), |rng| {
@@ -592,7 +633,11 @@ mod tests {
             let mut sessions: Vec<Session> = (0..n)
                 .map(|i| {
                     let t = 2 + rng.gen_below(12) as usize;
-                    mikv_session(i as u64 + 1, &d, t, rng)
+                    if rng.gen_bool(0.5) {
+                        mikv_promoting_session(i as u64 + 1, &d, t, rng)
+                    } else {
+                        mikv_session(i as u64 + 1, &d, t, rng)
+                    }
                 })
                 .collect();
             let mut arena = StepArena::for_mikv(&d);
@@ -607,7 +652,12 @@ mod tests {
                 }
                 for sess in sessions.iter_mut() {
                     if sess.cache.seq_len() < d.max_seq {
-                        step(sess, &d, rng);
+                        if rng.gen_bool(0.5) {
+                            let hot = rng.gen_below(sess.cache.seq_len() as u32) as usize;
+                            step_hot(sess, &d, hot, rng);
+                        } else {
+                            step(sess, &d, rng);
+                        }
                     }
                 }
                 let mut refs: Vec<&mut Session> = sessions.iter_mut().collect();
@@ -690,6 +740,46 @@ mod tests {
             assert_arena_matches(&arena, &expect, "after invalidate");
         }
         assert_eq!(arena.stats.full_lanes, 5);
+    }
+
+    /// Promotion mutations ride the delta path: a session whose workload
+    /// keeps promoting (and swap-demoting) stays bit-correct against the
+    /// from-scratch reference WITHOUT ever falling back to a full
+    /// rescatter — the promote/swap rows are covered by the dirty list.
+    #[test]
+    fn promotion_rows_ride_the_delta_path() {
+        let d = dims(64);
+        let mut rng = Pcg32::new(37);
+        let mut sess = mikv_promoting_session(1, &d, 12, &mut rng);
+        // A slot that starts in the lo tier of plane 0 becomes the hot one.
+        let hot = {
+            let m = match &sess.cache {
+                SessionCache::Mikv(m) => m,
+                _ => unreachable!(),
+            };
+            (0..12)
+                .find(|&s| m.placement(0, s) == crate::kvcache::Placement::Lo)
+                .expect("ratio 0.25 leaves lo slots")
+        };
+        let mut arena = StepArena::for_mikv(&d);
+        {
+            let mut refs = [&mut sess];
+            assemble_mikv(&mut arena, &d, 1, &mut refs).unwrap();
+        }
+        for stepno in 0..6 {
+            step_hot(&mut sess, &d, hot, &mut rng);
+            let mut refs = [&mut sess];
+            assemble_mikv(&mut arena, &d, 1, &mut refs).unwrap();
+            let expect = expected_mikv(&d, 1, &refs);
+            assert_arena_matches(&arena, &expect, &format!("promote step {stepno}"));
+        }
+        assert_eq!(arena.stats.full_lanes, 1, "only first sight rescatters");
+        assert_eq!(arena.stats.delta_lanes, 6, "promotion stays on the delta path");
+        let stats = match &sess.cache {
+            SessionCache::Mikv(m) => m.promotion_stats(),
+            _ => unreachable!(),
+        };
+        assert!(stats.promotions > 0, "the workload must actually promote");
     }
 
     /// Full/oracle-cache assembly: same protocol over the dense blocks.

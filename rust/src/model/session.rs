@@ -2,7 +2,9 @@
 
 use crate::kvcache::accounting::Occupancy;
 use crate::kvcache::dirty::{DirtyTake, DirtyTracker};
-use crate::kvcache::{BufferPool, CacheConfig, CacheManager, StepOutputs};
+use crate::kvcache::{
+    BufferPool, CacheConfig, CacheManager, PromotionStats, StepOutputs,
+};
 use crate::policies::make_policy;
 use crate::quant::Precision;
 use crate::runtime::ModelDims;
@@ -78,7 +80,8 @@ impl CacheMode {
     /// `full` | `oracle:<k>` | `h2o:<ratio>` | `rtn:<prec>` |
     /// `mikv:<ratio>:<lo>[:<flag>...]` with flags `nobal` (disable outlier
     /// awareness), `hi=<prec>` (quantized importance cache, paper §3.3),
-    /// `policy=<name>`, `recent=<n>`, `group=<n>`.
+    /// `policy=<name>`, `recent=<n>`, `group=<n>`, `promote` (enable the
+    /// lo→hi promotion pass with default knobs).
     pub fn parse(s: &str, dims: &ModelDims) -> crate::Result<CacheMode> {
         let parts: Vec<&str> = s.split(':').collect();
         let prec = |p: &str| {
@@ -108,6 +111,9 @@ impl CacheMode {
                     for flag in &parts[3.min(parts.len())..] {
                         if *flag == "nobal" {
                             cfg.outlier_aware = false;
+                        } else if *flag == "promote" {
+                            cfg.promotion =
+                                Some(crate::kvcache::PromotionConfig::default());
                         } else if let Some(p) = flag.strip_prefix("hi=") {
                             let hp = prec(p)?;
                             cfg.hi = if hp.is_quantized() {
@@ -260,6 +266,15 @@ impl SessionCache {
         match self {
             SessionCache::Mikv(m) => m.occupancy(),
             SessionCache::Full(f) => f.occupancy(),
+        }
+    }
+
+    /// Cumulative lo→hi promotion counters (zero for the Full baseline and
+    /// for MiKV sessions without the opt-in promotion config).
+    pub fn promotion_stats(&self) -> PromotionStats {
+        match self {
+            SessionCache::Mikv(m) => m.promotion_stats(),
+            SessionCache::Full(_) => PromotionStats::default(),
         }
     }
 }
@@ -422,6 +437,28 @@ mod tests {
         assert!(s.cache.host_bytes() < 4096, "got {}", s.cache.host_bytes());
         let full = Session::new(2, &d, CacheMode::Full).unwrap();
         assert!(full.cache.host_bytes() > 0);
+    }
+
+    #[test]
+    fn mode_parse_promote_flag() {
+        let d = dims();
+        match CacheMode::parse("mikv:0.25:int4:promote", &d).unwrap() {
+            CacheMode::Mikv { cfg, .. } => {
+                assert_eq!(
+                    cfg.promotion,
+                    Some(crate::kvcache::PromotionConfig::default())
+                );
+            }
+            other => panic!("not mikv: {other:?}"),
+        }
+        // without the flag promotion stays off
+        match CacheMode::parse("mikv:0.25:int4", &d).unwrap() {
+            CacheMode::Mikv { cfg, .. } => assert_eq!(cfg.promotion, None),
+            other => panic!("not mikv: {other:?}"),
+        }
+        // promotion stats are zero for the Full baseline
+        let s = Session::new(1, &d, CacheMode::Full).unwrap();
+        assert_eq!(s.cache.promotion_stats(), PromotionStats::default());
     }
 
     #[test]

@@ -16,8 +16,21 @@
 //! computes the full-cache attention map first and imposes top-k sparsity
 //! post-attention. It therefore lives in the decode graph itself
 //! (`decode_full`'s `oracle_k` input), not behind this trait.
+//!
+//! Besides the lifetime [`ImportancePolicy::score`], policies may expose a
+//! **re-access** signal ([`ImportancePolicy::reaccess`]) — an EMA of the
+//! attention a slot received over recent decode steps — which the cache
+//! manager's lo→hi promotion pass uses to spot importance that emerged
+//! after a slot was demoted. Only [`H2oPolicy`] implements it; the default
+//! returns 0, making promotion a no-op under signal-free policies.
 
 use crate::util::rng::Pcg32;
+
+/// EMA weight of one decode step's attention row in the re-access signal
+/// (see [`ImportancePolicy::reaccess`]): each step,
+/// `ema ← (1 − α)·ema + α·attn`. Chosen so a slot's signal reacts within a
+/// few steps yet one spiky row cannot flip a tier decision by itself.
+pub const REACCESS_ALPHA: f32 = 0.25;
 
 /// An online importance policy over `planes` independent (layer × kv-head)
 /// planes, each with up to `max_slots` token slots.
@@ -46,6 +59,18 @@ pub trait ImportancePolicy: Send {
     /// Current importance score of a slot (higher = keep in hi tier).
     fn score(&self, plane: usize, slot: usize) -> f32;
 
+    /// Post-demotion re-access signal: an EMA of the attention a slot
+    /// received over *recent* decode steps (decayed by every `observe`),
+    /// as opposed to [`Self::score`]'s lifetime accumulation. The cache
+    /// manager's promotion pass compares lo-tier and hi-tier slots on this
+    /// signal, so late-emerging importance (low score at demote time, high
+    /// attention afterwards) is visible even when the cumulative score is
+    /// still small. Policies without a recency-aware signal return 0,
+    /// which makes promotion a no-op under them.
+    fn reaccess(&self, _plane: usize, _slot: usize) -> f32 {
+        0.0
+    }
+
     /// Pick the demotion victim among `candidates` (non-empty, all currently
     /// hi-tier, recency-protected slots already excluded). Default: argmin
     /// of `score`.
@@ -71,12 +96,17 @@ pub trait ImportancePolicy: Send {
 pub struct H2oPolicy {
     /// `[plane][slot]` accumulated attention mass (grown on demand).
     acc: Vec<Vec<f32>>,
+    /// `[plane][slot]` re-access EMA over recent decode steps (grown on
+    /// demand alongside `acc`; decayed by every `observe`). Powers
+    /// [`ImportancePolicy::reaccess`] for the promotion pass.
+    ema: Vec<Vec<f32>>,
 }
 
 impl H2oPolicy {
     pub fn new(planes: usize, _max_slots: usize) -> Self {
         Self {
             acc: vec![Vec::new(); planes],
+            ema: vec![Vec::new(); planes],
         }
     }
 }
@@ -92,6 +122,14 @@ impl ImportancePolicy for H2oPolicy {
             mine.resize(acc.len(), 0.0);
         }
         mine[..acc.len()].copy_from_slice(acc);
+        // The re-access EMA is a *post-prefill* signal: it starts at zero
+        // and only decode-step observations move it, so promotion pressure
+        // reflects what happened after tier placement, not the prefill.
+        let ema = &mut self.ema[plane];
+        if ema.len() < acc.len() {
+            ema.resize(acc.len(), 0.0);
+        }
+        ema[..acc.len()].fill(0.0);
     }
 
     fn observe(&mut self, plane: usize, attn: &[f32]) {
@@ -102,6 +140,13 @@ impl ImportancePolicy for H2oPolicy {
         for (a, &p) in mine.iter_mut().zip(attn) {
             *a += p;
         }
+        let ema = &mut self.ema[plane];
+        if ema.len() < attn.len() {
+            ema.resize(attn.len(), 0.0);
+        }
+        for (e, &p) in ema.iter_mut().zip(attn) {
+            *e = (1.0 - REACCESS_ALPHA) * *e + REACCESS_ALPHA * p;
+        }
     }
 
     fn observe_at(&mut self, plane: usize, slot: usize, mass: f32) {
@@ -110,12 +155,21 @@ impl ImportancePolicy for H2oPolicy {
             mine.resize(slot + 1, 0.0);
         }
         mine[slot] += mass;
+        let ema = &mut self.ema[plane];
+        if ema.len() <= slot {
+            ema.resize(slot + 1, 0.0);
+        }
+        ema[slot] = (1.0 - REACCESS_ALPHA) * ema[slot] + REACCESS_ALPHA * mass;
     }
 
     fn admit(&mut self, _plane: usize, _slot: usize) {}
 
     fn score(&self, plane: usize, slot: usize) -> f32 {
         self.acc[plane].get(slot).copied().unwrap_or(0.0)
+    }
+
+    fn reaccess(&self, plane: usize, slot: usize) -> f32 {
+        self.ema[plane].get(slot).copied().unwrap_or(0.0)
     }
 }
 
@@ -275,6 +329,52 @@ mod tests {
                 "slot {s}"
             );
         }
+    }
+
+    /// The re-access EMA is recency-weighted where the score is lifetime:
+    /// a slot hammered early then ignored ends with a high score but a
+    /// decayed EMA, while a late bloomer (the promotion motivation) ends
+    /// with a small score but the dominant EMA.
+    #[test]
+    fn h2o_reaccess_tracks_recent_attention_not_lifetime() {
+        let mut p = H2oPolicy::new(1, 8);
+        p.init_prefill(0, &[0.9, 0.1, 0.1, 0.1]);
+        assert_eq!(p.reaccess(0, 0), 0.0, "EMA starts at zero after prefill");
+
+        // 8 steps of attention on slot 0 only, then 8 steps on slot 3 only.
+        for _ in 0..8 {
+            p.observe(0, &[0.8, 0.0, 0.0, 0.0]);
+        }
+        for _ in 0..8 {
+            p.observe(0, &[0.0, 0.0, 0.0, 0.8]);
+        }
+        assert!(
+            p.score(0, 0) > p.score(0, 3),
+            "lifetime score still favours the early slot: {} vs {}",
+            p.score(0, 0),
+            p.score(0, 3)
+        );
+        assert!(
+            p.reaccess(0, 3) > 4.0 * p.reaccess(0, 0),
+            "re-access EMA favours the late bloomer: {} vs {}",
+            p.reaccess(0, 3),
+            p.reaccess(0, 0)
+        );
+        // EMA is bounded by the observed mass (it is an average, not a sum).
+        assert!(p.reaccess(0, 3) <= 0.8 + 1e-6);
+    }
+
+    /// Policies without a recency signal report 0, making promotion a
+    /// no-op under them by construction.
+    #[test]
+    fn reaccess_defaults_to_zero_for_non_recency_policies() {
+        let mut local = LocalPolicy;
+        local.observe(0, &[0.5, 0.5]);
+        assert_eq!(local.reaccess(0, 1), 0.0);
+        let mut random = RandomPolicy::new(1, 8, 3);
+        random.init_prefill(0, &[0.0; 4]);
+        random.observe(0, &[0.5; 4]);
+        assert_eq!(random.reaccess(0, 2), 0.0);
     }
 
     #[test]

@@ -129,6 +129,12 @@ pub struct LoadReport {
     pub assembly_us_p50: f64,
     /// Server-reported p99 of per-decode-step assembly time (µs).
     pub assembly_us_p99: f64,
+    /// lo→hi promotions THIS run caused (delta of the trailing `stats`
+    /// against the pre-run baseline; 0 unless the workload opted into
+    /// `compression.promotion`).
+    pub promotions: u64,
+    /// Hysteresis-suppressed promotions this run caused (same delta).
+    pub thrash_suppressed: u64,
 }
 
 /// Per-connection raw samples.
@@ -190,6 +196,10 @@ pub fn run_load(addr: &str, cfg: &LoadConfig) -> crate::Result<LoadReport> {
         per_worker,
         assembly_us_p50: after.assembly_us_p50,
         assembly_us_p99: after.assembly_us_p99,
+        promotions: after.promotions.saturating_sub(baseline.promotions),
+        thrash_suppressed: after
+            .thrash_suppressed
+            .saturating_sub(baseline.thrash_suppressed),
     })
 }
 
@@ -201,6 +211,8 @@ struct StatsProbe {
     counters: std::collections::HashMap<usize, (usize, usize)>,
     assembly_us_p50: f64,
     assembly_us_p99: f64,
+    promotions: u64,
+    thrash_suppressed: u64,
 }
 
 fn stats_probe(addr: &str) -> StatsProbe {
@@ -219,6 +231,11 @@ fn stats_probe(addr: &str) -> StatsProbe {
     };
     out.assembly_us_p50 = stats.field_f64("assembly_us_p50").unwrap_or(0.0);
     out.assembly_us_p99 = stats.field_f64("assembly_us_p99").unwrap_or(0.0);
+    out.promotions = stats.field_i64("promotions").unwrap_or(0).max(0) as u64;
+    out.thrash_suppressed = stats
+        .field_i64("thrash_suppressed")
+        .unwrap_or(0)
+        .max(0) as u64;
     if let Ok(rows) = stats.field_arr("workers") {
         for row in rows {
             out.counters.insert(

@@ -11,14 +11,15 @@
 //! {"v":1,"op":"generate","id":1,"prompt":[1,17,230],"max_new":8,
 //!  "stop":6,"keep":true,
 //!  "compression":{"mode":"mikv","ratio":0.25,"lo":"int2","group":16,
-//!                 "policy":"h2o"}}
+//!                 "policy":"h2o","promotion":true}}
 //! {"v":1,"op":"append","id":2,"session":7,"prompt":[4,5],"max_new":8}
 //! {"v":1,"op":"cancel","id":3,"target":1}
 //! {"v":1,"op":"stats","id":4}
 //! ```
 //!
 //! * `generate` — start a turn. `compression.mode` ∈ `full` | `oracle`
-//!   (+`k`) | `mikv` (+`ratio`, `lo`, `group`, `policy`) | `h2o`
+//!   (+`k`) | `mikv` (+`ratio`, `lo`, `group`, `policy`, and the opt-in
+//!   boolean `promotion` enabling the lo→hi promotion pass) | `h2o`
 //!   (+`ratio`) | `rtn` (+`lo`). With `"keep":true` the session's cache
 //!   stays checked out after `done` under the returned `session` id.
 //! * `append` — continue a kept session: the new prompt tokens re-ingest
@@ -38,7 +39,8 @@
 //! {"event":"done","id":1,"tokens":[230,231],"session":7,
 //!  "cancelled":false,"ttft_ms":12.3,"latency_ms":40.1,
 //!  "prompt_tokens":3,"generated_tokens":2,"cache_pct":33.2,
-//!  "host_bytes":43008,"hi_slots":12,"lo_slots":36}
+//!  "host_bytes":43008,"hi_slots":12,"lo_slots":36,
+//!  "promotions":0,"thrash_suppressed":0}
 //! {"event":"error","id":1,"code":"bad_request","message":"..."}
 //! {"event":"stats","id":4,"active":1,"waiting":0,...}
 //! {"event":"cancelled","id":3,"target":1,"found":true}
@@ -280,6 +282,7 @@ fn legacy_spec(v: &Json) -> CompressionSpec {
             .ok()
             .and_then(Json::as_i64)
             .map(|k| k.max(0) as usize),
+        promotion: v.field("promotion").ok().and_then(Json::as_bool),
     }
 }
 
@@ -319,6 +322,12 @@ fn spec_from_json(c: &Json) -> Result<CompressionSpec, WireError> {
         })?),
         Err(_) => None,
     };
+    let promotion = match c.field("promotion") {
+        Ok(j) => Some(j.as_bool().ok_or_else(|| {
+            WireError::bad_request("compression.promotion must be a boolean")
+        })?),
+        Err(_) => None,
+    };
     Ok(CompressionSpec {
         mode: str_field("mode")?.unwrap_or_else(|| "full".to_string()),
         ratio,
@@ -329,6 +338,7 @@ fn spec_from_json(c: &Json) -> Result<CompressionSpec, WireError> {
         group: uint_field("group")?,
         policy: str_field("policy")?,
         k: uint_field("k")?,
+        promotion,
     })
 }
 
@@ -355,6 +365,9 @@ fn spec_fields_into(o: &mut JsonObj, spec: &CompressionSpec) {
     }
     if let Some(k) = spec.k {
         o.set("k", k);
+    }
+    if let Some(p) = spec.promotion {
+        o.set("promotion", p);
     }
 }
 
@@ -401,6 +414,8 @@ pub fn encode_event(ev: &ServeEvent) -> String {
                 o.set("host_bytes", r.metrics.host_bytes);
                 o.set("hi_slots", r.metrics.hi_slots as i64);
                 o.set("lo_slots", r.metrics.lo_slots as i64);
+                o.set("promotions", r.metrics.promotions as i64);
+                o.set("thrash_suppressed", r.metrics.thrash_suppressed as i64);
             }
         },
         ServeEvent::Stats { id, snapshot } => {
@@ -420,6 +435,10 @@ pub fn encode_event(ev: &ServeEvent) -> String {
             o.set("assembly_us_p50", snapshot.assembly_us_p50);
             o.set("assembly_us_p99", snapshot.assembly_us_p99);
             o.set("assembly_samples", snapshot.assembly_samples as i64);
+            // Tier-lifecycle counters (the lo→hi promotion pass; 0 unless
+            // sessions opted into `compression.promotion`).
+            o.set("promotions", snapshot.promotions as i64);
+            o.set("thrash_suppressed", snapshot.thrash_suppressed as i64);
             o.set("pool_free_blocks", snapshot.pool.free_blocks);
             o.set("pool_free_bytes", snapshot.pool.free_bytes);
             o.set("pool_outstanding_blocks", snapshot.pool.outstanding_blocks);
@@ -443,6 +462,8 @@ pub fn encode_event(ev: &ServeEvent) -> String {
                     wo.set("assembly_us_p50", w.assembly_us_p50);
                     wo.set("assembly_us_p99", w.assembly_us_p99);
                     wo.set("assembly_samples", w.assembly_samples as i64);
+                    wo.set("promotions", w.promotions as i64);
+                    wo.set("thrash_suppressed", w.thrash_suppressed as i64);
                     Json::Obj(wo)
                 })
                 .collect();
@@ -656,7 +677,7 @@ mod tests {
         let w = submit(
             r#"{"v":1,"op":"generate","id":3,"prompt":[1,2],"max_new":4,"stop":6,
                 "keep":true,"compression":{"mode":"mikv","ratio":0.25,"lo":"int2",
-                "group":2,"policy":"local"}}"#,
+                "group":2,"policy":"local","promotion":true}}"#,
         );
         assert_eq!(w.id, 3);
         assert_eq!(w.prompt, vec![1, 2]);
@@ -670,6 +691,13 @@ mod tests {
         assert_eq!(w.spec.lo.as_deref(), Some("int2"));
         assert_eq!(w.spec.group, Some(2));
         assert_eq!(w.spec.policy.as_deref(), Some("local"));
+        assert_eq!(w.spec.promotion, Some(true));
+
+        // absent promotion decodes as None (off)
+        let w = submit(
+            r#"{"v":1,"op":"generate","id":4,"prompt":[1],"compression":{"mode":"mikv"}}"#,
+        );
+        assert_eq!(w.spec.promotion, None);
     }
 
     #[test]
@@ -731,6 +759,8 @@ mod tests {
             (r#"{"v":1,"op":"generate","id":12,"prompt":[1],"keep":1}"#, 12),
             (r#"{"v":1,"op":"generate","id":13,"prompt":[1],"max_new":2.5}"#, 13),
             (r#"{"v":1,"op":"generate","id":14,"prompt":[1],"stop":6.5}"#, 14),
+            // promotion must be a boolean, never coerced
+            (r#"{"v":1,"op":"generate","id":15,"prompt":[1],"compression":{"promotion":1}}"#, 15),
         ];
         for (line, want_id) in cases {
             let e = decode_line(line).expect_err(line);
@@ -759,6 +789,7 @@ mod tests {
             group: None,
             policy: None,
             k: None,
+            promotion: None,
         };
         if rng.gen_bool(0.5) {
             spec.ratio = Some((rng.gen_f32() as f64 * 100.0).round() / 100.0);
@@ -776,6 +807,9 @@ mod tests {
         }
         if rng.gen_bool(0.3) {
             spec.k = Some(rng.gen_below(64) as usize);
+        }
+        if rng.gen_bool(0.3) {
+            spec.promotion = Some(rng.gen_bool(0.5));
         }
         spec
     }
@@ -896,6 +930,8 @@ mod tests {
                 host_bytes: 4096,
                 hi_slots: 8,
                 lo_slots: 40,
+                promotions: 5,
+                thrash_suppressed: 2,
             },
             session: Some(7),
             cancelled: false,
@@ -916,6 +952,8 @@ mod tests {
         assert_eq!(v.field_i64("host_bytes").unwrap(), 4096);
         assert_eq!(v.field_i64("hi_slots").unwrap(), 8);
         assert_eq!(v.field_i64("lo_slots").unwrap(), 40);
+        assert_eq!(v.field_i64("promotions").unwrap(), 5);
+        assert_eq!(v.field_i64("thrash_suppressed").unwrap(), 2);
     }
 
     #[test]
@@ -954,6 +992,8 @@ mod tests {
             assembly_us_p50: 12.5,
             assembly_us_p99: 80.25,
             assembly_samples: 42,
+            promotions: 9,
+            thrash_suppressed: 4,
             workers: vec![crate::coordinator::WorkerStats {
                 worker: 1,
                 active: 2,
@@ -965,6 +1005,8 @@ mod tests {
                 assembly_us_p50: 12.5,
                 assembly_us_p99: 80.25,
                 assembly_samples: 42,
+                promotions: 9,
+                thrash_suppressed: 4,
             }],
             ..StatsSnapshot::default()
         };
@@ -973,6 +1015,8 @@ mod tests {
         assert!((v.field_f64("assembly_us_p50").unwrap() - 12.5).abs() < 1e-9);
         assert!((v.field_f64("assembly_us_p99").unwrap() - 80.25).abs() < 1e-9);
         assert_eq!(v.field_i64("assembly_samples").unwrap(), 42);
+        assert_eq!(v.field_i64("promotions").unwrap(), 9);
+        assert_eq!(v.field_i64("thrash_suppressed").unwrap(), 4);
         let rows = v.field_arr("workers").unwrap();
         assert_eq!(rows.len(), 1);
         assert_eq!(rows[0].field_i64("worker").unwrap(), 1);
@@ -981,6 +1025,8 @@ mod tests {
         assert!((rows[0].field_f64("throughput_tps").unwrap() - 4.5).abs() < 1e-9);
         assert!((rows[0].field_f64("assembly_us_p50").unwrap() - 12.5).abs() < 1e-9);
         assert_eq!(rows[0].field_i64("assembly_samples").unwrap(), 42);
+        assert_eq!(rows[0].field_i64("promotions").unwrap(), 9);
+        assert_eq!(rows[0].field_i64("thrash_suppressed").unwrap(), 4);
 
         let line = encode_event(&ServeEvent::CancelResult {
             id: 7,

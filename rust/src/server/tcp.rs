@@ -4,7 +4,7 @@
 //! thread (decode one [`proto::WireOp`] per line → forward to the
 //! scheduler's op channel) and a writer thread that is the connection's
 //! **event sink**: every in-flight request on the connection owns a
-//! [`LineSink`] that encodes its [`ServeEvent`]s (token/done/error/stats/
+//! `LineSink` that encodes its [`ServeEvent`]s (token/done/error/stats/
 //! cancelled) into JSON lines and pushes them onto the writer channel. In
 //! the sharded runtime a connection's requests may be decoding on
 //! different workers concurrently; their results all fan back in over this

@@ -299,6 +299,91 @@ fn run_affinity(stack_addr: String) {
     assert_eq!(v.field_i64("pool_outstanding_blocks").unwrap(), 0);
 }
 
+/// Promotion-enabled multi-turn serving: a conversation that opts into
+/// the lo→hi promotion pass (`compression.promotion: true`) runs a full
+/// generate→append→append cycle, every `done` event carries the per-turn
+/// `promotions`/`thrash_suppressed` counters, the merged stats snapshot
+/// agrees with its per-worker rows, and the final (released) turn leaves
+/// nothing behind — parked bytes and pooled blocks back to baseline.
+#[test]
+fn promotion_session_round_trips_leak_free() {
+    on_stack(
+        2,
+        128,
+        CoordinatorConfig::default(),
+        Duration::ZERO,
+        run_promotion_session,
+    );
+}
+
+fn run_promotion_session(stack_addr: String) {
+    let mut client = Client::connect(&stack_addr).unwrap();
+    let mut rng = Pcg32::new(0x9907);
+    let mut session: Option<u64> = None;
+    let mut last_occ = 0i64;
+    let turns = 3usize;
+    let spec = CompressionSpec::mikv(0.25, "int4").promoted();
+    for turn in 0..turns {
+        let id = client.next_id();
+        let keep = turn + 1 < turns; // final turn releases the session
+        let prompt: Vec<i64> = (0..6).map(|_| rng.gen_range(1, VOCAB - 1)).collect();
+        let builder = match session {
+            Some(sid) => RequestBuilder::append(id, sid)
+                .prompt(&prompt)
+                .max_new(12)
+                .keep(keep),
+            None => RequestBuilder::generate(id)
+                .prompt(&prompt)
+                .max_new(12)
+                .keep(keep)
+                .compression(spec.clone()),
+        };
+        client.submit(&builder).unwrap();
+        let (streamed, done) = client.read_turn(id).unwrap();
+        assert_eq!(done.field_str("event").unwrap(), "done", "{done}");
+        assert_eq!(streamed.len(), 12, "budget honoured with promotion on");
+        // The per-turn tier-lifecycle counters ride the done event.
+        done.field_i64("promotions").expect("done carries promotions");
+        done.field_i64("thrash_suppressed")
+            .expect("done carries thrash_suppressed");
+        let occ = done.field_i64("hi_slots").unwrap() + done.field_i64("lo_slots").unwrap();
+        assert!(occ > last_occ, "occupancy carries across turns");
+        last_occ = occ;
+        session = if keep {
+            Some(done.field_i64("session").unwrap() as u64)
+        } else {
+            None
+        };
+    }
+
+    // Leak-free end state, and aggregate counters consistent with the
+    // per-worker rows.
+    let v = stats(&stack_addr);
+    assert_eq!(v.field_i64("parked_sessions").unwrap(), 0, "session leak");
+    assert_eq!(v.field_i64("parked_bytes").unwrap(), 0, "parked bytes leak");
+    assert_eq!(
+        v.field_i64("pool_outstanding_blocks").unwrap(),
+        0,
+        "pooled blocks leak"
+    );
+    let total = v.field_i64("promotions").unwrap();
+    let rows_sum: i64 = v
+        .field_arr("workers")
+        .unwrap()
+        .iter()
+        .map(|r| r.field_i64("promotions").unwrap())
+        .sum();
+    assert_eq!(total, rows_sum, "aggregate == sum of worker rows");
+    let thrash = v.field_i64("thrash_suppressed").unwrap();
+    let thrash_sum: i64 = v
+        .field_arr("workers")
+        .unwrap()
+        .iter()
+        .map(|r| r.field_i64("thrash_suppressed").unwrap())
+        .sum();
+    assert_eq!(thrash, thrash_sum);
+}
+
 /// TTL sweep: with a zero TTL a kept session is dropped by the owning
 /// worker's next sweep (which runs in the same iteration that parked it),
 /// its pooled blocks return to baseline, and a follow-up `append` answers
