@@ -336,9 +336,12 @@ impl<E: StepEngine> Coordinator<E> {
             Op::Cancel { id, target, reply } => {
                 let mut found = false;
                 if let Some(pos) = waiting.iter().position(|r| r.id == target) {
-                    let r = waiting.remove(pos).expect("position is in range");
-                    found = true;
-                    let _ = r.reply.emit(ServeEvent::Done(Response::cancelled(r.id)));
+                    // `pos` comes from `position` on the same deque, so
+                    // `remove` cannot miss.
+                    if let Some(r) = waiting.remove(pos) {
+                        found = true;
+                        let _ = r.reply.emit(ServeEvent::Done(Response::cancelled(r.id)));
+                    }
                 } else if let Some(a) = active.iter_mut().find(|a| a.req.id == target) {
                     a.cancelled = true;
                     found = true;
@@ -398,8 +401,8 @@ impl<E: StepEngine> Coordinator<E> {
     ) {
         let max_seq = self.engine.dims().max_seq;
         let mut i = 0;
-        while i < active.len() {
-            if active[i].error.is_none() && !active[i].finished(max_seq) {
+        while let Some(candidate) = active.get(i) {
+            if candidate.error.is_none() && !candidate.finished(max_seq) {
                 i += 1;
                 continue;
             }
@@ -581,7 +584,14 @@ impl<E: StepEngine> Coordinator<E> {
         parked: &mut HashMap<u64, Parked>,
         dims: &ModelDims,
     ) {
-        let sid = req.session.expect("admit_append requires a session id");
+        let Some(sid) = req.session else {
+            // The scheduler routes `append` ops here only with a session
+            // id; answer a structured error rather than killing the worker
+            // if that invariant is ever broken upstream.
+            let err = WireError::internal("append admitted without a session id");
+            let _ = req.reply.emit(ServeEvent::Done(Response::error(req.id, err)));
+            return;
+        };
         let mut entry = match parked.remove(&sid) {
             Some(p) => p,
             None => {
@@ -697,7 +707,9 @@ impl<E: StepEngine> Coordinator<E> {
                     }
                     let now = Instant::now();
                     for (&i, row) in idxs.iter().zip(rows.iter()) {
-                        let a = &mut active[i];
+                        // `idxs` indexes the same `active` the batch was
+                        // formed from; nothing retires mid-step.
+                        let Some(a) = active.get_mut(i) else { continue };
                         if let Some(next) = a.pending_feed.pop_front() {
                             // Prompt re-ingest: these logits predate the
                             // full appended context — feed the next prompt
@@ -724,7 +736,9 @@ impl<E: StepEngine> Coordinator<E> {
                 Err(e) => {
                     crate::log_error!("decode failed: {e}; retiring {} session(s)", idxs.len());
                     for &i in &idxs {
-                        active[i].error = Some(WireError::internal(e.to_string()));
+                        if let Some(a) = active.get_mut(i) {
+                            a.error = Some(WireError::internal(e.to_string()));
+                        }
                     }
                 }
             }

@@ -58,7 +58,11 @@ impl EventSink for TrackedSink {
         let terminal = matches!(ev, ServeEvent::Done(_));
         let ok = self.inner.emit(ev);
         if terminal {
-            self.loads[self.worker].fetch_sub(1, Ordering::AcqRel);
+            // `worker` was a valid index into this same `loads` vec when
+            // the sink was built, and the vec is never resized.
+            if let Some(load) = self.loads.get(self.worker) {
+                load.fetch_sub(1, Ordering::AcqRel);
+            }
         }
         ok
     }
@@ -87,7 +91,13 @@ struct CancelShard(Arc<CancelFanout>);
 impl EventSink for CancelShard {
     fn emit(&self, ev: ServeEvent) -> bool {
         if let ServeEvent::CancelResult { found, .. } = ev {
-            let mut state = self.0.state.lock().unwrap();
+            // A poisoned fanout must not take the writer thread down with
+            // it; the state is a counter + flag, always valid.
+            let mut state = self
+                .0
+                .state
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
             state.found |= found;
             state.remaining -= 1;
             if state.remaining == 0 {
@@ -123,7 +133,13 @@ struct StatsShard(Arc<StatsFanout>);
 impl EventSink for StatsShard {
     fn emit(&self, ev: ServeEvent) -> bool {
         if let ServeEvent::Stats { snapshot, .. } = ev {
-            let mut state = self.0.state.lock().unwrap();
+            // Same poison policy as CancelShard: merged stats stay
+            // answerable even if another emitter panicked mid-lock.
+            let mut state = self
+                .0
+                .state
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
             state.parts.push(snapshot);
             state.remaining -= 1;
             if state.remaining == 0 {
@@ -194,14 +210,14 @@ impl Scheduler {
                     };
                     Coordinator::for_worker(engine, cfg_w, w, n_workers).run(rx);
                 })
-                .expect("spawn worker thread");
+                .map_err(|e| anyhow::anyhow!("spawn worker thread: {e}"))?;
             handles.push(handle);
         }
         drop(ready_tx);
         for _ in 0..n_workers {
             ready_rx
                 .recv()
-                .expect("worker exited before reporting readiness")?;
+                .map_err(|_| anyhow::anyhow!("worker exited before reporting readiness"))??;
         }
         crate::log_info!("scheduler started with {n_workers} worker(s)");
         Ok(Scheduler {
@@ -330,7 +346,20 @@ impl Scheduler {
         // queue bound alone governs, exactly as in the pre-sharding
         // deployment.
         let cap = self.cfg.max_waiting;
-        if self.txs.len() > 1 && self.loads[w].load(Ordering::Acquire) >= cap {
+        // `w` comes from `worker_of_session` / `least_loaded`, both of
+        // which only produce indices below the worker count; answer a
+        // structured error rather than indexing on faith.
+        let Some(tx) = self.txs.get(w) else {
+            let err = WireError::internal(format!("worker {w} unavailable"));
+            let _ = req.reply.emit(ServeEvent::Done(Response::error(req.id, err)));
+            return;
+        };
+        let at_capacity = self.txs.len() > 1
+            && self
+                .loads
+                .get(w)
+                .is_some_and(|l| l.load(Ordering::Acquire) >= cap);
+        if at_capacity {
             let err = WireError::new(
                 ErrorCode::Overloaded,
                 format!("worker {w} at capacity ({cap} requests in flight)"),
@@ -338,7 +367,9 @@ impl Scheduler {
             let _ = req.reply.emit(ServeEvent::Done(Response::error(req.id, err)));
             return;
         }
-        self.loads[w].fetch_add(1, Ordering::AcqRel);
+        if let Some(load) = self.loads.get(w) {
+            load.fetch_add(1, Ordering::AcqRel);
+        }
         let req = Request {
             reply: Box::new(TrackedSink {
                 inner: req.reply,
@@ -347,7 +378,7 @@ impl Scheduler {
             }),
             ..req
         };
-        if let Err(send_err) = self.txs[w].send(Op::Submit(req)) {
+        if let Err(send_err) = tx.send(Op::Submit(req)) {
             // Worker gone (only during shutdown). Answer through the
             // tracked sink so the load count is released.
             if let Op::Submit(r) = send_err.0 {

@@ -187,7 +187,11 @@ impl MetricsCollector {
         if self.assembly.len() < ASSEMBLY_WINDOW {
             self.assembly.push(d);
         } else {
-            self.assembly[self.assembly_pos] = d;
+            // The modulo above keeps `assembly_pos < ASSEMBLY_WINDOW`,
+            // and this branch only runs once the ring is full.
+            if let Some(slot) = self.assembly.get_mut(self.assembly_pos) {
+                *slot = d;
+            }
             self.assembly_pos = (self.assembly_pos + 1) % ASSEMBLY_WINDOW;
         }
     }

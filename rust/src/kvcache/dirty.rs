@@ -64,6 +64,7 @@ impl Default for DirtyTracker {
 impl DirtyTracker {
     /// A fresh tracker starts fully dirty: the first take after creation
     /// always reports `all` (nothing has ever been synchronized).
+    // lint: hot-path-alloc-free-ok(fn): empty-capacity construction; takes reuse caller scratch
     pub fn new() -> DirtyTracker {
         DirtyTracker {
             version: 0,

@@ -381,7 +381,13 @@ impl CacheManager {
             let mut scored: Vec<(f32, usize)> = (0..protect_from)
                 .map(|s| (self.policy.score(p, s), s))
                 .collect();
-            scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap_or(std::cmp::Ordering::Equal));
+            // total_cmp gives a total order (NaN sorts greatest), so a NaN
+            // importance score deterministically ranks most-important and
+            // stays hi instead of letting an inconsistent comparator
+            // scramble the whole ranking. "NaN = keep" is the reliable
+            // failure mode: over-retaining one token costs bytes, silently
+            // evicting an important one costs the answer.
+            scored.sort_by(|a, b| b.0.total_cmp(&a.0));
             let n_protected = seq_len - protect_from;
             let n_scored_hi = budget.saturating_sub(n_protected).min(scored.len());
 
@@ -956,6 +962,34 @@ mod tests {
         assert_eq!(occ.hi_slots, (planes * 4) as u64);
         assert_eq!(occ.lo_slots, (planes * 12) as u64);
         assert_eq!(occ.evicted_slots, 0);
+    }
+
+    /// Regression for the NaN-unstable importance sort: the old
+    /// `partial_cmp(..).unwrap_or(Equal)` comparator was inconsistent under
+    /// NaN and could scramble the whole hi/lo ranking. With `total_cmp`,
+    /// NaN sorts greatest, so a poisoned score deterministically lands the
+    /// slot in the hi tier ("NaN = keep") and the rest of the ranking stays
+    /// intact.
+    #[test]
+    fn nan_importance_score_deterministically_stays_hi() {
+        let mut m = manager(0.25, RetentionMode::Retain);
+        let mut rng = Pcg32::new(7);
+        let t = 16;
+        let (k, v, mut acc, qmax, kmax) = prefill_data(m.config(), t, &mut rng);
+        let planes = 4;
+        for p in 0..planes {
+            // slot 0 is outside the recency window (recent_window = 2), so
+            // only its score decides its tier.
+            acc[p * t] = f32::NAN;
+        }
+        m.ingest_prefill(t, &k, &v, &acc, &qmax, &kmax);
+        m.check_invariants().unwrap();
+        for p in 0..planes {
+            assert_eq!(m.placement(p, 0), Placement::Hi, "plane {p}");
+        }
+        // the NaN slot consumed one budgeted spot, not more: budget still
+        // holds (ceil(0.25 * 16) = 4 hi per plane)
+        assert_eq!(m.occupancy().hi_slots, (planes * 4) as u64);
     }
 
     #[test]

@@ -28,6 +28,7 @@ pub struct HiTier {
 }
 
 impl HiTier {
+    // lint: hot-path-alloc-free-ok(fn): one-time tier constructor; decode reuses the buffers
     pub fn new(cfg: TierConfig, head_dim: usize, slots: usize) -> Self {
         Self {
             cfg,
@@ -127,6 +128,7 @@ pub struct LoTier {
 }
 
 impl LoTier {
+    // lint: hot-path-alloc-free-ok(fn): one-time tier constructor; decode reuses the buffers
     pub fn new(cfg: TierConfig, head_dim: usize, slots: usize) -> Self {
         assert!(cfg.precision.is_quantized());
         let group = cfg.group.min(head_dim);
@@ -284,6 +286,7 @@ impl LoTier {
 
     /// Fully dequantize slot `s` (allocating diagnostics wrapper over
     /// [`Self::dequant_slot_into`]).
+    // lint: hot-path-alloc-free-ok(fn): allocating diagnostics wrapper over dequant_slot_into
     pub fn dequant_slot(&self, s: usize) -> (Vec<f32>, Vec<f32>) {
         let mut kc = vec![0.0f32; self.head_dim];
         let mut vc = vec![0.0f32; self.head_dim];

@@ -99,6 +99,7 @@ pub struct StepArena {
 impl StepArena {
     /// An arena for cache blocks of the given per-row widths (graph-input
     /// order) plus an optional per-lane aux row.
+    // lint: hot-path-alloc-free-ok(fn): one-time constructor; the per-step path reuses these buffers
     pub fn new(widths: &[usize], extra_width: usize) -> StepArena {
         StepArena {
             widths: widths.to_vec(),
@@ -143,28 +144,33 @@ impl StepArena {
 
     /// Block `i`'s host tensor over all allocated lanes,
     /// `[lanes_allocated, planes, rows, widths[i]]`.
+    // lint: panic-free-serving-ok(fn): i < widths.len() fixed by graph shape at construction
     pub fn block(&self, i: usize) -> &[f32] {
         &self.blocks[i]
     }
 
     /// The `b`-lane prefix of block `i` — what a chunk compiled at batch
     /// `b` uploads (the arena may hold more lanes than this chunk uses).
+    // lint: panic-free-serving-ok(fn): i/b bounded by graph shape and ensure_shape
     pub fn block_prefix(&self, i: usize, b: usize) -> &[f32] {
         let w = self.widths[i];
         &self.blocks[i][..b * self.planes * self.rows * w]
     }
 
     /// The `b`-lane prefix of the token input.
+    // lint: panic-free-serving-ok(fn): b <= allocated lanes per ensure_shape
     pub fn token_prefix(&self, b: usize) -> &[i64] {
         &self.token[..b]
     }
 
     /// The `b`-lane prefix of the position input.
+    // lint: panic-free-serving-ok(fn): b <= allocated lanes per ensure_shape
     pub fn pos_prefix(&self, b: usize) -> &[i64] {
         &self.pos[..b]
     }
 
     /// The `b`-lane prefix of the aux input.
+    // lint: panic-free-serving-ok(fn): b <= allocated lanes per ensure_shape
     pub fn extra_prefix(&self, b: usize) -> &[f32] {
         &self.extra[..b * self.planes * self.extra_width]
     }
@@ -229,6 +235,7 @@ impl StepArena {
     }
 
     /// Zero rows `from..to` of every plane of `lane` across all blocks.
+    // lint: panic-free-serving-ok(fn): lane/rows bounded by ensure_shape before any scatter
     fn zero_lane_rows(&mut self, lane: usize, from: usize, to: usize) {
         if from >= to {
             return;
@@ -245,6 +252,7 @@ impl StepArena {
 
     /// Full rescatter of block `i`, lane `lane`: copy the live `0..live`
     /// prefix of every plane from a session block with row stride `cap`.
+    // lint: panic-free-serving-ok(fn): offsets derived from arena shape; src length checked by caller
     fn copy_rows_full(&mut self, i: usize, lane: usize, src: &[f32], cap: usize, live: usize) {
         let w = self.widths[i];
         let (planes, rows) = (self.planes, self.rows);
@@ -259,6 +267,7 @@ impl StepArena {
 
     /// Delta patch of block `i`, lane `lane`: copy only `rows_list` rows of
     /// every plane.
+    // lint: panic-free-serving-ok(fn): dirty rows are < cap by DirtyTracker contract
     fn copy_rows_delta(
         &mut self,
         i: usize,
@@ -284,6 +293,7 @@ impl StepArena {
 
     /// Turn `lane` into a zero padding lane (stale rows re-zeroed up to the
     /// watermark, aux row reset to the identity fill).
+    // lint: panic-free-serving-ok(fn): lane comes from the live lane map, always allocated
     fn retire_lane(&mut self, lane: usize) {
         let prev = self.lanes[lane];
         self.zero_lane_rows(lane, 0, prev.live);
@@ -303,6 +313,7 @@ impl StepArena {
     /// which only changes on `take.all` mutations). `srcs` are the session
     /// blocks in block order, row stride `cap`; the dirty rows sit in
     /// `self.dirty_scratch` (drained there by the caller's take).
+    // lint: panic-free-serving-ok(fn): lane/block offsets bounded by ensure_shape for this batch
     fn fill_lane(
         &mut self,
         lane: usize,
@@ -358,6 +369,7 @@ impl StepArena {
 /// (compiled batch size `b`; lanes `sessions.len()..b` become zero
 /// padding). Lanes whose cached `(session, sync-version)` matches take the
 /// dirty-row delta path; everything else full-rescatters the live prefix.
+// lint: panic-free-serving-ok(fn): per-session views validated against dims before scatter
 pub fn assemble_mikv(
     arena: &mut StepArena,
     dims: &ModelDims,
@@ -410,6 +422,7 @@ pub fn assemble_mikv(
 /// Assemble the `decode_full` batch inputs (k, v, mask) for full/oracle
 /// sessions into `arena`, with the same delta/full lane protocol as
 /// [`assemble_mikv`].
+// lint: panic-free-serving-ok(fn): per-session views validated against dims before scatter
 pub fn assemble_full(
     arena: &mut StepArena,
     dims: &ModelDims,

@@ -153,6 +153,7 @@ impl StepEngine for StubEngine {
     }
 
     fn assembly_us_last(&self) -> Option<f64> {
+        // lint: relaxed-ordering-audit-ok: monotonic telemetry cell read racily for stats only
         Some(self.assembly_ns.load(Ordering::Relaxed) as f64 / 1e3)
     }
 
@@ -182,8 +183,8 @@ impl StepEngine for StubEngine {
             logits[tok as usize] = 1.0;
             rows.push(logits);
         }
-        self.assembly_ns
-            .store(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        // lint: relaxed-ordering-audit-ok: stats-only telemetry; no reader orders against this store
+        self.assembly_ns.store(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
         Ok(rows)
     }
 }

@@ -12,6 +12,7 @@ pub fn packed_words(n: usize, bits: u32) -> usize {
 }
 
 /// Pack `codes` (each `< 2^bits`) into a little-endian bit stream.
+// lint: hot-path-alloc-free-ok(fn): allocating API variant; hot paths use pack_into-style scratch
 pub fn pack(codes: &[u8], bits: u32) -> Vec<u32> {
     assert!((1..=8).contains(&bits), "bits must be in 1..=8");
     let mask = ((1u32 << bits) - 1) as u8;
@@ -32,6 +33,7 @@ pub fn pack(codes: &[u8], bits: u32) -> Vec<u32> {
 }
 
 /// Unpack `n` codes of `bits` width from a packed stream.
+// lint: hot-path-alloc-free-ok(fn): allocating variant; decode uses unpack_into/unpack_dequant_into
 pub fn unpack(words: &[u32], bits: u32, n: usize) -> Vec<u8> {
     let mut out = vec![0u8; n];
     unpack_into(words, bits, &mut out);

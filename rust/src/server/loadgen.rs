@@ -164,7 +164,9 @@ pub fn run_load(addr: &str, cfg: &LoadConfig) -> crate::Result<LoadReport> {
     let mut latencies = Vec::new();
     let (mut tokens, mut ok, mut err) = (0usize, 0usize, 0usize);
     for handle in handles {
-        let r = handle.join().expect("load connection panicked")?;
+        let r = handle
+            .join()
+            .map_err(|_| anyhow::anyhow!("load connection panicked"))??;
         ttfts.extend(r.ttfts);
         latencies.extend(r.latencies);
         tokens += r.tokens;

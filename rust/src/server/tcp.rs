@@ -61,14 +61,19 @@ impl StopHandle {
     /// flag already set; once the listener is gone the dial fails
     /// harmlessly.
     pub fn stop(&self) {
-        self.stop.store(true, Ordering::SeqCst);
+        // lint: note(relaxed-ordering-audit): Release publishes the stop flag; the Acquire
+        // load in is_stopped() synchronizes-with it, so the accept loop that observes `true`
+        // also observes everything the stopping thread did first. SeqCst bought nothing here:
+        // there is no second atomic whose ordering relative to this flag matters.
+        self.stop.store(true, Ordering::Release);
         // Wake the blocked accept; the loop sees the flag and breaks
         // before handling this throwaway connection.
         let _ = TcpStream::connect(self.addr);
     }
 
     pub fn is_stopped(&self) -> bool {
-        self.stop.load(Ordering::SeqCst)
+        // lint: note(relaxed-ordering-audit): Acquire pairs with the Release store in stop().
+        self.stop.load(Ordering::Acquire)
     }
 }
 
@@ -152,6 +157,7 @@ impl EventSink for LineSink {
 }
 
 fn handle_conn(stream: TcpStream, tx: Sender<Op>) -> crate::Result<()> {
+    // lint: relaxed-ordering-audit-ok: unique-id counter — only atomicity matters; no cross-thread data is published under this fetch_add
     let conn_id = CONN_IDS.fetch_add(1, Ordering::Relaxed);
     let reader = BufReader::new(stream.try_clone()?);
     let (line_tx, line_rx) = std::sync::mpsc::channel::<String>();

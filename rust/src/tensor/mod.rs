@@ -145,9 +145,13 @@ impl TensorF32 {
         (0..rows)
             .map(|r| {
                 let row = &self.data[r * cols..(r + 1) * cols];
+                // total_cmp: a NaN logit deterministically wins the argmax
+                // (NaN sorts greatest) instead of the inconsistent
+                // comparator picking whichever index the sort happened to
+                // visit last.
                 row.iter()
                     .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+                    .max_by(|a, b| a.1.total_cmp(b.1))
                     .map(|(i, _)| i)
                     .unwrap()
             })
@@ -226,6 +230,17 @@ mod tests {
     fn argmax_rows_picks_max() {
         let t = Tensor::from_vec(&[2, 3], vec![0.1, 0.9, 0.3, 2.0, -1.0, 1.5]);
         assert_eq!(t.argmax_rows(), vec![1, 0]);
+    }
+
+    /// Regression: the old `partial_cmp(..).unwrap_or(Equal)` comparator
+    /// was inconsistent under NaN — `max_by` could return whichever index
+    /// the scan happened to end on. With `total_cmp`, a NaN logit
+    /// deterministically wins regardless of its position in the row.
+    #[test]
+    fn argmax_rows_nan_policy_is_deterministic() {
+        let data = vec![0.1, f32::NAN, 0.9, f32::NAN, 0.2, 0.3, 0.5, 0.9, 0.1];
+        let t = Tensor::from_vec(&[3, 3], data);
+        assert_eq!(t.argmax_rows(), vec![1, 0, 1]);
     }
 
     #[test]

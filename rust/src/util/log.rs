@@ -44,12 +44,14 @@ static LEVEL: AtomicU8 = AtomicU8::new(u8::MAX); // MAX = uninitialised
 static START: OnceLock<Instant> = OnceLock::new();
 
 fn current_level() -> Level {
+    // lint: relaxed-ordering-audit-ok: lone u8 level flag; a stale read only delays a verbosity change
     let raw = LEVEL.load(Ordering::Relaxed);
     if raw == u8::MAX {
         let lvl = std::env::var("MIKV_LOG")
             .ok()
             .and_then(|s| Level::from_str(&s))
             .unwrap_or(Level::Info);
+        // lint: relaxed-ordering-audit-ok: racing initializers store the same env-derived value
         LEVEL.store(lvl as u8, Ordering::Relaxed);
         return lvl;
     }
@@ -65,6 +67,7 @@ fn current_level() -> Level {
 
 /// Override the log level programmatically.
 pub fn set_level(level: Level) {
+    // lint: relaxed-ordering-audit-ok: single u8 flag; no other memory is published with it
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 

@@ -1,0 +1,115 @@
+//! Hostile-bytes property tests for the wire surface — the dynamic
+//! companion to mikv-lint's `panic-free-serving` rule (see
+//! ARCHITECTURE.md § "Invariants & lint catalog").
+//!
+//! Whatever arrives on the socket, `Json::parse` and `proto::decode_line`
+//! must *return* — `Ok` or a structured `Err`, either is fine; a panic
+//! would take down a connection's reader thread and, transitively, every
+//! request multiplexed onto it. The generators cover byte-level mutations
+//! of valid v1 frames (flips, truncations, insertions, splices) and raw
+//! garbage that was never JSON to begin with.
+
+use mikv::server::proto::{decode_line, RequestBuilder};
+use mikv::util::json::Json;
+use mikv::util::prop::{forall, Config};
+use mikv::util::rng::Pcg32;
+
+/// A syntactically valid v1 frame of a random op shape.
+fn valid_frame(rng: &mut Pcg32) -> String {
+    let id = rng.next_u32() as u64;
+    let n = rng.gen_range(0, 8) as usize;
+    let prompt: Vec<i64> = (0..n).map(|_| rng.gen_range(0, 1000)).collect();
+    match rng.gen_range(0, 5) {
+        0 => RequestBuilder::generate(id)
+            .prompt(&prompt)
+            .max_new(rng.gen_range(1, 16) as usize)
+            .build(),
+        1 => RequestBuilder::append(id, rng.next_u32() as u64).prompt(&prompt).build(),
+        2 => RequestBuilder::cancel(id, rng.next_u32() as u64).build(),
+        3 => RequestBuilder::stats(id).build(),
+        _ => RequestBuilder::generate(id).prompt(&prompt).legacy().build(),
+    }
+}
+
+/// Byte-level mutation: flips, deletions, insertions and splices, applied
+/// a random number of times.
+fn mutate(rng: &mut Pcg32, bytes: &mut Vec<u8>) {
+    let edits = 1 + rng.gen_below(8) as usize;
+    for _ in 0..edits {
+        if bytes.is_empty() {
+            bytes.push(rng.next_u32() as u8);
+            continue;
+        }
+        let pos = rng.gen_below(bytes.len() as u32) as usize;
+        match rng.gen_below(4) {
+            0 => bytes[pos] = rng.next_u32() as u8,
+            1 => {
+                bytes.truncate(pos);
+            }
+            2 => bytes.insert(pos, rng.next_u32() as u8),
+            _ => {
+                // splice a fragment of the frame over itself
+                let src = rng.gen_below(bytes.len() as u32) as usize;
+                let b = bytes[src];
+                bytes[pos] = b;
+            }
+        }
+    }
+}
+
+/// Feed one line to both parsers; only a panic can fail this.
+fn never_panics(line: &str) {
+    let _ = Json::parse(line);
+    let _ = decode_line(line);
+}
+
+#[test]
+fn mutated_v1_frames_never_panic_the_parsers() {
+    forall(Config::default().cases(500).seed(0xB0B5).name("mutated v1 frames"), |rng| {
+        let mut bytes = valid_frame(rng).into_bytes();
+        mutate(rng, &mut bytes);
+        let line = String::from_utf8_lossy(&bytes);
+        never_panics(line.trim());
+        Ok(())
+    });
+}
+
+#[test]
+fn raw_garbage_never_panics_the_parsers() {
+    forall(Config::default().cases(500).seed(0xDEAD).name("raw garbage"), |rng| {
+        let n = rng.gen_below(128) as usize;
+        let bytes: Vec<u8> = (0..n).map(|_| rng.next_u32() as u8).collect();
+        let line = String::from_utf8_lossy(&bytes);
+        never_panics(&line);
+        Ok(())
+    });
+}
+
+#[test]
+fn adversarial_json_shapes_never_panic() {
+    // Hand-picked shapes that historically break naive parsers: deep
+    // nesting, truncated escapes, huge numbers, wrong field types.
+    let cases = [
+        "",
+        "{",
+        "}",
+        "[",
+        "\"",
+        "{\"v\":1",
+        "{\"v\":9999999999999999999999999,\"op\":\"generate\"}",
+        "{\"v\":1,\"op\":\"generate\",\"id\":-1}",
+        "{\"v\":1,\"op\":\"generate\",\"id\":\"not a number\"}",
+        "{\"v\":1,\"op\":\"generate\",\"prompt\":[1,2,\"x\"]}",
+        "{\"v\":1,\"op\":\"generate\",\"prompt\":{\"a\":1}}",
+        "{\"v\":1,\"op\":\"nope\",\"id\":1}",
+        "{\"v\":2,\"op\":\"generate\",\"id\":1}",
+        "{\"prompt\":[1],\"max_new\":1e309}",
+        "[[[[[[[[[[[[[[[[[[[[[[[[[[[[[[[[]]]]]]]]]]]]]]]]]]]]]]]]]]]]]]]]",
+        "{\"a\":\"\\u12\"}",
+        "{\"a\":\"\\",
+        "nul\u{0}byte",
+    ];
+    for c in cases {
+        never_panics(c);
+    }
+}

@@ -1,0 +1,566 @@
+//! A deliberately small Rust "lexer": strips comments and string/char
+//! literals (replacing them with spaces so line/column structure survives),
+//! tracks `#[cfg(test)]` / `mod tests` regions by brace matching, and parses
+//! the repo's lint waiver comments.
+//!
+//! This is not a general Rust parser — it only needs to be sound for the
+//! subset of Rust this repository writes (rustfmt-formatted, no exotic
+//! macros defining items with unbalanced braces). The build image is
+//! offline, so pulling `syn` is not an option; a few hundred lines of state
+//! machine is the right size for four rules.
+
+/// How a waiver applies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WaiverScope {
+    /// Covers its own line and the next line.
+    Site,
+    /// Covers the next `fn` item's entire brace-matched body.
+    Function,
+    /// Commentary only — validated for rule-name typos, waives nothing.
+    Note,
+}
+
+/// A parsed `// lint: <rule>-ok[...]: <reason>` annotation.
+#[derive(Debug, Clone)]
+pub struct Waiver {
+    pub rule: String,
+    pub scope: WaiverScope,
+    pub reason: String,
+    /// 0-based line the comment sits on.
+    pub line: usize,
+    /// 0-based inclusive line range the waiver covers.
+    pub start: usize,
+    pub end: usize,
+}
+
+/// A malformed directive (reported as a finding by the rule engine).
+#[derive(Debug, Clone)]
+pub struct Problem {
+    pub line: usize,
+    pub message: String,
+}
+
+/// One scanned source file.
+pub struct SourceFile {
+    /// Repo-relative path with forward slashes.
+    pub path: String,
+    /// Raw, unstripped text (used by the wire-error rule).
+    pub raw: String,
+    /// Comment/string-stripped code, split into lines.
+    pub lines: Vec<String>,
+    /// Per line: inside a `#[cfg(test)]` / `mod tests` region.
+    pub test: Vec<bool>,
+    pub waivers: Vec<Waiver>,
+    pub problems: Vec<Problem>,
+}
+
+/// Rule names the waiver grammar accepts.
+pub const RULE_NAMES: [&str; 4] = [
+    "panic-free-serving",
+    "hot-path-alloc-free",
+    "relaxed-ordering-audit",
+    "wire-error-exhaustiveness",
+];
+
+pub fn is_ident(c: u8) -> bool {
+    c.is_ascii_alphanumeric() || c == b'_'
+}
+
+fn utf8_len(first: u8) -> usize {
+    match first {
+        0x00..=0x7F => 1,
+        0xC0..=0xDF => 2,
+        0xE0..=0xEF => 3,
+        _ => 4,
+    }
+}
+
+/// Blank comments and string/char literals to spaces (newlines kept), and
+/// collect line comments as `(line, text)` for waiver parsing.
+fn strip(src: &str) -> (String, Vec<(usize, String)>) {
+    let b = src.as_bytes();
+    let mut out: Vec<u8> = Vec::with_capacity(b.len());
+    let mut comments: Vec<(usize, String)> = Vec::new();
+    let mut line = 0usize;
+    let mut i = 0usize;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'\n' {
+            out.push(b'\n');
+            line += 1;
+            i += 1;
+            continue;
+        }
+        // Line comment (also `///` and `//!`): blank to end of line.
+        if c == b'/' && b.get(i + 1) == Some(&b'/') {
+            let start = i;
+            while i < b.len() && b[i] != b'\n' {
+                out.push(b' ');
+                i += 1;
+            }
+            comments.push((line, String::from_utf8_lossy(&b[start..i]).into_owned()));
+            continue;
+        }
+        // Block comment, nesting tracked.
+        if c == b'/' && b.get(i + 1) == Some(&b'*') {
+            let mut depth = 0usize;
+            while i < b.len() {
+                if b[i] == b'\n' {
+                    out.push(b'\n');
+                    line += 1;
+                    i += 1;
+                } else if b[i] == b'/' && b.get(i + 1) == Some(&b'*') {
+                    depth += 1;
+                    out.push(b' ');
+                    out.push(b' ');
+                    i += 2;
+                } else if b[i] == b'*' && b.get(i + 1) == Some(&b'/') {
+                    depth -= 1;
+                    out.push(b' ');
+                    out.push(b' ');
+                    i += 2;
+                    if depth == 0 {
+                        break;
+                    }
+                } else {
+                    out.push(b' ');
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        let ident_prev = i > 0 && is_ident(b[i - 1]);
+        // Raw string `r"…"` / `r#"…"#` (optionally `br`-prefixed).
+        if !ident_prev && (c == b'r' || (c == b'b' && b.get(i + 1) == Some(&b'r'))) {
+            let mut j = i + if c == b'b' { 2 } else { 1 };
+            let mut hashes = 0usize;
+            while b.get(j) == Some(&b'#') {
+                hashes += 1;
+                j += 1;
+            }
+            if b.get(j) == Some(&b'"') {
+                for _ in i..=j {
+                    out.push(b' ');
+                }
+                i = j + 1;
+                while i < b.len() {
+                    if b[i] == b'\n' {
+                        out.push(b'\n');
+                        line += 1;
+                        i += 1;
+                        continue;
+                    }
+                    if b[i] == b'"' {
+                        let mut k = i + 1;
+                        let mut h = 0usize;
+                        while h < hashes && b.get(k) == Some(&b'#') {
+                            h += 1;
+                            k += 1;
+                        }
+                        if h == hashes {
+                            for _ in i..k {
+                                out.push(b' ');
+                            }
+                            i = k;
+                            break;
+                        }
+                    }
+                    out.push(b' ');
+                    i += 1;
+                }
+                continue;
+            }
+            // Not a raw string: fall through and copy the `r`/`b` byte.
+        }
+        // Plain string (also `b"…"`).
+        if c == b'"' || (!ident_prev && c == b'b' && b.get(i + 1) == Some(&b'"')) {
+            if c == b'b' {
+                out.push(b' ');
+                i += 1;
+            }
+            out.push(b' ');
+            i += 1;
+            while i < b.len() {
+                match b[i] {
+                    b'\n' => {
+                        out.push(b'\n');
+                        line += 1;
+                        i += 1;
+                    }
+                    b'\\' => {
+                        out.push(b' ');
+                        i += 1;
+                        if i < b.len() {
+                            if b[i] == b'\n' {
+                                out.push(b'\n');
+                                line += 1;
+                            } else {
+                                out.push(b' ');
+                            }
+                            i += 1;
+                        }
+                    }
+                    b'"' => {
+                        out.push(b' ');
+                        i += 1;
+                        break;
+                    }
+                    _ => {
+                        out.push(b' ');
+                        i += 1;
+                    }
+                }
+            }
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == b'\'' {
+            if b.get(i + 1) == Some(&b'\\') {
+                // Escaped char: consume through the closing quote (covers
+                // `'\n'`, `'\''`, `'\u{1F600}'`, `'\x41'`).
+                out.push(b' ');
+                out.push(b' ');
+                i += 2;
+                if i < b.len() {
+                    out.push(b' ');
+                    i += 1;
+                }
+                while i < b.len() && b[i] != b'\'' && b[i] != b'\n' {
+                    out.push(b' ');
+                    i += 1;
+                }
+                if i < b.len() && b[i] == b'\'' {
+                    out.push(b' ');
+                    i += 1;
+                }
+                continue;
+            }
+            if let Some(&n1) = b.get(i + 1) {
+                let w = utf8_len(n1);
+                if n1 != b'\'' && b.get(i + 1 + w) == Some(&b'\'') {
+                    for _ in 0..w + 2 {
+                        out.push(b' ');
+                    }
+                    i += w + 2;
+                    continue;
+                }
+            }
+            // Lifetime (`'a`, `'static`): keep the quote, scan on.
+            out.push(c);
+            i += 1;
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    debug_assert_eq!(out.len(), b.len(), "strip must preserve byte offsets");
+    (String::from_utf8_lossy(&out).into_owned(), comments)
+}
+
+/// Does `line` contain the token `mod tests` (word-bounded)?
+fn has_mod_tests(line: &str) -> bool {
+    let b = line.as_bytes();
+    let needle = b"mod tests";
+    let mut i = 0usize;
+    while i + needle.len() <= b.len() {
+        if &b[i..i + needle.len()] == needle {
+            let before_ok = i == 0 || !is_ident(b[i - 1]);
+            let after_ok = match b.get(i + needle.len()) {
+                Some(&c) => !is_ident(c),
+                None => true,
+            };
+            if before_ok && after_ok {
+                return true;
+            }
+        }
+        i += 1;
+    }
+    false
+}
+
+/// Mark every line inside a `#[cfg(test)]` item or a `mod tests` body.
+fn mark_tests(lines: &[String]) -> Vec<bool> {
+    let mut test = vec![false; lines.len()];
+    let mut pending = false;
+    let mut in_test = false;
+    let mut depth: i64 = 0;
+    let mut exit_depth: i64 = 0;
+    for (ln, line) in lines.iter().enumerate() {
+        if in_test {
+            test[ln] = true;
+        } else if line.contains("#[cfg(test)]") || has_mod_tests(line) {
+            pending = true;
+            test[ln] = true;
+        }
+        for c in line.bytes() {
+            match c {
+                b'{' => {
+                    if pending && !in_test {
+                        in_test = true;
+                        exit_depth = depth;
+                        pending = false;
+                        test[ln] = true;
+                    }
+                    depth += 1;
+                }
+                b'}' => {
+                    depth -= 1;
+                    if in_test && depth == exit_depth {
+                        in_test = false;
+                        test[ln] = true;
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    test
+}
+
+/// Does `line` contain the keyword `fn` (word-bounded)?
+fn has_fn_token(line: &str) -> bool {
+    let b = line.as_bytes();
+    let mut i = 0usize;
+    while i + 2 <= b.len() {
+        if &b[i..i + 2] == b"fn" {
+            let before_ok = i == 0 || !is_ident(b[i - 1]);
+            let after_ok = match b.get(i + 2) {
+                Some(&c) => !is_ident(c),
+                None => true,
+            };
+            if before_ok && after_ok {
+                return true;
+            }
+        }
+        i += 1;
+    }
+    false
+}
+
+/// Last line of the `fn` item starting at (or just after) `wline`, found by
+/// brace matching on stripped lines. `None` if no nearby `fn` follows.
+fn fn_region_end(lines: &[String], wline: usize) -> Option<usize> {
+    let mut fn_line = None;
+    for (ln, line) in lines.iter().enumerate().skip(wline) {
+        // The waiver must sit adjacent to its fn (doc comments between are
+        // stripped to blank lines and still count toward the window).
+        if ln > wline + 8 {
+            break;
+        }
+        if has_fn_token(line) {
+            fn_line = Some(ln);
+            break;
+        }
+    }
+    let start = fn_line?;
+    let mut depth: i64 = 0;
+    let mut opened = false;
+    for (ln, line) in lines.iter().enumerate().skip(start) {
+        for c in line.bytes() {
+            match c {
+                b'{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                b'}' => {
+                    depth -= 1;
+                    if opened && depth == 0 {
+                        return Some(ln);
+                    }
+                }
+                _ => {}
+            }
+        }
+    }
+    None
+}
+
+/// Parse one comment for a lint directive. Comments that do not start with
+/// `lint:` (after `//`/`///`/`//!` and whitespace) are ignored.
+fn parse_directive(
+    line: usize,
+    text: &str,
+    lines: &[String],
+    waivers: &mut Vec<Waiver>,
+    problems: &mut Vec<Problem>,
+) {
+    let body = text.trim_start_matches('/').trim_start_matches('!').trim();
+    let Some(rest) = body.strip_prefix("lint:") else {
+        return;
+    };
+    let rest = rest.trim();
+    let Some(colon) = rest.find(':') else {
+        problems.push(Problem {
+            line,
+            message: "malformed lint directive: missing ':' before reason".to_string(),
+        });
+        return;
+    };
+    let head = rest[..colon].trim();
+    let reason = rest[colon + 1..].trim();
+    let (rule, scope) = if let Some(inner) = head.strip_prefix("note(") {
+        match inner.strip_suffix(')') {
+            Some(rule) => (rule, WaiverScope::Note),
+            None => {
+                problems.push(Problem {
+                    line,
+                    message: format!("malformed lint note: '{head}'"),
+                });
+                return;
+            }
+        }
+    } else if let Some(rule) = head.strip_suffix("-ok(fn)") {
+        (rule, WaiverScope::Function)
+    } else if let Some(rule) = head.strip_suffix("-ok") {
+        (rule, WaiverScope::Site)
+    } else {
+        problems.push(Problem {
+            line,
+            message: format!("malformed lint directive head: '{head}'"),
+        });
+        return;
+    };
+    if !RULE_NAMES.contains(&rule) {
+        problems.push(Problem {
+            line,
+            message: format!("unknown lint rule '{rule}' in waiver"),
+        });
+        return;
+    }
+    if reason.is_empty() {
+        problems.push(Problem {
+            line,
+            message: format!("waiver for '{rule}' is missing a reason"),
+        });
+        return;
+    }
+    let (start, end) = match scope {
+        WaiverScope::Site => (line, line + 1),
+        WaiverScope::Function => match fn_region_end(lines, line) {
+            Some(end) => (line, end),
+            None => {
+                problems.push(Problem {
+                    line,
+                    message: format!("fn-scope waiver for '{rule}' is not followed by a fn item"),
+                });
+                return;
+            }
+        },
+        // Notes waive nothing; give them an empty region.
+        WaiverScope::Note => (usize::MAX, 0),
+    };
+    waivers.push(Waiver {
+        rule: rule.to_string(),
+        scope,
+        reason: reason.to_string(),
+        line,
+        start,
+        end,
+    });
+}
+
+/// Scan one file into its stripped/annotated form.
+pub fn scan(path: &str, raw: &str) -> SourceFile {
+    let (stripped, comments) = strip(raw);
+    let lines: Vec<String> = stripped.lines().map(|l| l.to_string()).collect();
+    let test = mark_tests(&lines);
+    let mut waivers = Vec::new();
+    let mut problems = Vec::new();
+    for (line, text) in &comments {
+        parse_directive(*line, text, &lines, &mut waivers, &mut problems);
+    }
+    SourceFile {
+        path: path.to_string(),
+        raw: raw.to_string(),
+        lines,
+        test,
+        waivers,
+        problems,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strips_comments_and_strings() {
+        let src = "let a = \"x.unwrap()\"; // c.unwrap()\nlet b = 1; /* vec![0] */ let c = 2;\n";
+        let (s, comments) = strip(src);
+        assert!(!s.contains("unwrap"), "stripped: {s}");
+        assert!(!s.contains("vec!"));
+        assert!(s.contains("let a ="));
+        assert!(s.contains("let c = 2;"));
+        assert_eq!(comments.len(), 1);
+        assert_eq!(comments[0].0, 0);
+        assert!(comments[0].1.contains("c.unwrap()"));
+    }
+
+    #[test]
+    fn strips_raw_strings_and_char_literals() {
+        let src = "let r = r#\"a[0].unwrap()\"#; let c = '['; let l: &'static str = \"\";";
+        let (s, _) = strip(src);
+        assert!(!s.contains("unwrap"));
+        assert!(!s.contains('['), "char literal must be blanked: {s}");
+        assert!(s.contains("'static"), "lifetimes survive: {s}");
+    }
+
+    #[test]
+    fn strips_escaped_quote_char() {
+        let src = "let q = '\\''; let x = a[i];";
+        let (s, _) = strip(src);
+        assert!(s.contains("a[i]"), "code after the literal survives: {s}");
+    }
+
+    #[test]
+    fn marks_cfg_test_and_mod_tests_regions() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {}\n}\nfn live2() {}\n";
+        let sf = scan("x.rs", src);
+        assert!(!sf.test[0]);
+        assert!(sf.test[1] && sf.test[2] && sf.test[3] && sf.test[4]);
+        assert!(!sf.test[5]);
+    }
+
+    #[test]
+    fn parses_site_and_fn_waivers() {
+        let src = "\
+// lint: panic-free-serving-ok: index bounded by construction\n\
+let x = a[0];\n\
+// lint: hot-path-alloc-free-ok(fn): constructor, not per-step\n\
+fn build() {\n    let v = vec![0];\n    v\n}\n";
+        let sf = scan("x.rs", src);
+        assert_eq!(sf.problems.len(), 0, "{:?}", sf.problems);
+        assert_eq!(sf.waivers.len(), 2);
+        assert_eq!(sf.waivers[0].scope, WaiverScope::Site);
+        assert_eq!(sf.waivers[0].start, 0);
+        assert_eq!(sf.waivers[0].end, 1);
+        assert_eq!(sf.waivers[1].scope, WaiverScope::Function);
+        assert_eq!(sf.waivers[1].start, 2);
+        assert_eq!(sf.waivers[1].end, 6);
+    }
+
+    #[test]
+    fn rejects_bad_directives() {
+        let cases = [
+            ("// lint: panic-free-serving-ok:", "missing a reason"),
+            ("// lint: no-such-rule-ok: why", "unknown lint rule"),
+            ("// lint: panic-free-serving-ok", "missing ':'"),
+        ];
+        for (src, expect) in cases {
+            let sf = scan("x.rs", src);
+            assert_eq!(sf.waivers.len(), 0, "{src}");
+            assert_eq!(sf.problems.len(), 1, "{src}");
+            assert!(sf.problems[0].message.contains(expect), "{src}: {}", sf.problems[0].message);
+        }
+    }
+
+    #[test]
+    fn notes_validate_but_do_not_waive() {
+        let src = "// lint: note(relaxed-ordering-audit): pairs with the Acquire load\nlet x = 1;";
+        let sf = scan("x.rs", src);
+        assert_eq!(sf.problems.len(), 0);
+        assert_eq!(sf.waivers.len(), 1);
+        assert_eq!(sf.waivers[0].scope, WaiverScope::Note);
+        assert!(sf.waivers[0].start > sf.waivers[0].end, "note covers nothing");
+    }
+}

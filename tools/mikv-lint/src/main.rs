@@ -1,0 +1,287 @@
+//! `mikv-lint` — repo-specific static analysis for the mikv serving stack.
+//!
+//! Enforces the invariants the serving runtime is built on (see
+//! ARCHITECTURE.md § "Invariants & lint catalog"): panic-free serving code,
+//! allocation-free decode hot paths, audited relaxed atomics, and an
+//! exhaustive wire-error table. Violations are suppressed per site with
+//! `// lint: <rule>-ok: <reason>` waivers; every waiver must carry a
+//! reason, and the waivers themselves are what make the audit readable.
+//!
+//! ```text
+//! cargo run -p mikv-lint                  # report
+//! cargo run -p mikv-lint -- --deny        # exit 1 on any violation (CI)
+//! cargo run -p mikv-lint -- --json out.json
+//! ```
+
+mod lexer;
+mod rules;
+
+use rules::Finding;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Parsed command line.
+struct Options {
+    root: PathBuf,
+    deny: bool,
+    json: Option<PathBuf>,
+    verbose: bool,
+}
+
+fn usage() -> &'static str {
+    "usage: mikv-lint [--root <dir>] [--deny] [--json <path>] [--verbose]"
+}
+
+fn parse_args(args: &[String]) -> Result<Options, String> {
+    let mut opts = Options {
+        root: PathBuf::from("."),
+        deny: false,
+        json: None,
+        verbose: false,
+    };
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--root" => match it.next() {
+                Some(v) => opts.root = PathBuf::from(v),
+                None => return Err("--root needs a value".to_string()),
+            },
+            "--json" => match it.next() {
+                Some(v) => opts.json = Some(PathBuf::from(v)),
+                None => return Err("--json needs a value".to_string()),
+            },
+            "--deny" => opts.deny = true,
+            "--verbose" => opts.verbose = true,
+            other => return Err(format!("unknown argument '{other}'")),
+        }
+    }
+    Ok(opts)
+}
+
+/// Every `.rs` file under `dir`, sorted for stable output.
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.path());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            walk(&p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            out.push(p);
+        }
+    }
+    Ok(())
+}
+
+fn rel_path(root: &Path, p: &Path) -> String {
+    let rel = p.strip_prefix(root).unwrap_or(p);
+    rel.to_string_lossy().replace('\\', "/")
+}
+
+/// Run all rules over the tree rooted at `root`. Only I/O errors are `Err`;
+/// rule hits come back as findings.
+fn analyze_tree(root: &Path) -> io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    walk(&root.join("rust/src"), &mut files)?;
+    let mut findings = Vec::new();
+    let mut request_raw = String::new();
+    let mut proto_raw = String::new();
+    for p in &files {
+        let raw = fs::read_to_string(p)?;
+        let rel = rel_path(root, p);
+        if rel == "rust/src/coordinator/request.rs" {
+            request_raw = raw.clone();
+        }
+        if rel == "rust/src/server/proto.rs" {
+            proto_raw = raw.clone();
+        }
+        let sf = lexer::scan(&rel, &raw);
+        findings.extend(rules::check_file(&sf));
+    }
+    let arch_raw = fs::read_to_string(root.join("ARCHITECTURE.md")).unwrap_or_default();
+    findings.extend(rules::check_wire_errors(&request_raw, &proto_raw, &arch_raw));
+    Ok(findings)
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn to_json(findings: &[Finding]) -> String {
+    let mut out = String::from("{\"findings\":[");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        let (waived, reason) = match &f.waived {
+            Some(r) => ("true", json_escape(r)),
+            None => ("false", String::new()),
+        };
+        out.push_str(&format!(
+            "{{\"rule\":\"{}\",\"path\":\"{}\",\"line\":{},\"message\":\"{}\",\
+             \"waived\":{},\"reason\":\"{}\"}}",
+            f.rule,
+            json_escape(&f.path),
+            f.line,
+            json_escape(&f.message),
+            waived,
+            reason
+        ));
+    }
+    let violations = findings.iter().filter(|f| f.waived.is_none()).count();
+    let waived = findings.len() - violations;
+    out.push_str(&format!(
+        "],\"violations\":{violations},\"waived\":{waived}}}"
+    ));
+    out
+}
+
+fn run(args: &[String]) -> i32 {
+    let opts = match parse_args(args) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("mikv-lint: {e}\n{}", usage());
+            return 2;
+        }
+    };
+    let findings = match analyze_tree(&opts.root) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("mikv-lint: cannot scan {}: {e}", opts.root.display());
+            return 2;
+        }
+    };
+    if let Some(path) = &opts.json {
+        if let Err(e) = fs::write(path, to_json(&findings)) {
+            eprintln!("mikv-lint: cannot write {}: {e}", path.display());
+            return 2;
+        }
+    }
+    let mut violations = 0usize;
+    let mut waived = 0usize;
+    for f in &findings {
+        match &f.waived {
+            Some(reason) => {
+                waived += 1;
+                if opts.verbose {
+                    println!(
+                        "{}:{}: [{}] waived: {} — {}",
+                        f.path, f.line, f.rule, f.message, reason
+                    );
+                }
+            }
+            None => {
+                violations += 1;
+                println!("{}:{}: [{}] {}", f.path, f.line, f.rule, f.message);
+            }
+        }
+    }
+    println!("mikv-lint: {violations} violation(s), {waived} waived site(s)");
+    if opts.deny && violations > 0 {
+        return 1;
+    }
+    0
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(run(&args));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn repo_root() -> PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("../..")
+    }
+
+    /// The acceptance gate itself: the real tree has zero unwaived
+    /// violations, and every waived site carries a non-empty reason.
+    #[test]
+    fn real_tree_passes_deny() {
+        let findings = analyze_tree(&repo_root()).expect("scan repo");
+        let violations: Vec<_> = findings.iter().filter(|f| f.waived.is_none()).collect();
+        assert!(
+            violations.is_empty(),
+            "unwaived violations:\n{}",
+            violations
+                .iter()
+                .map(|f| format!("  {}:{}: [{}] {}", f.path, f.line, f.rule, f.message))
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+        for f in &findings {
+            if let Some(reason) = &f.waived {
+                assert!(!reason.is_empty(), "empty waiver reason at {}:{}", f.path, f.line);
+            }
+        }
+        // the audit is real: the tree does carry documented waivers
+        assert!(findings.iter().any(|f| f.waived.is_some()));
+    }
+
+    /// Seeding an `unwrap()` into non-test proto.rs code flips the tree to
+    /// failing — the ISSUE's acceptance demonstration.
+    #[test]
+    fn seeded_unwrap_in_real_proto_fails() {
+        let root = repo_root();
+        let raw = fs::read_to_string(root.join("rust/src/server/proto.rs")).expect("read proto");
+        let seeded = format!("{raw}\nfn seeded() -> u32 {{\n    None::<u32>.unwrap()\n}}\n");
+        let sf = lexer::scan("rust/src/server/proto.rs", &seeded);
+        let violations = rules::check_file(&sf)
+            .into_iter()
+            .filter(|f| f.waived.is_none())
+            .count();
+        assert!(violations > 0, "seeded unwrap must be caught");
+    }
+
+    /// Same demonstration for a `vec![]` in the assembly hot path.
+    #[test]
+    fn seeded_vec_in_real_assembly_fails() {
+        let root = repo_root();
+        let raw = fs::read_to_string(root.join("rust/src/model/assembly.rs")).expect("read asm");
+        let seeded = format!("{raw}\nfn seeded() -> Vec<f32> {{\n    vec![0.0; 8]\n}}\n");
+        let sf = lexer::scan("rust/src/model/assembly.rs", &seeded);
+        let violations = rules::check_file(&sf)
+            .into_iter()
+            .filter(|f| f.waived.is_none())
+            .count();
+        assert!(violations > 0, "seeded vec! must be caught");
+    }
+
+    #[test]
+    fn deny_exit_codes() {
+        // a clean tree in deny mode exits 0 through run()
+        let root = repo_root().to_string_lossy().into_owned();
+        let code = run(&["--root".to_string(), root, "--deny".to_string()]);
+        assert_eq!(code, 0, "deny mode must pass on the real tree");
+        // bad arguments exit 2
+        assert_eq!(run(&["--bogus".to_string()]), 2);
+    }
+
+    #[test]
+    fn json_output_shape() {
+        let f = Finding {
+            rule: rules::PANIC_FREE,
+            path: "a\"b.rs".to_string(),
+            line: 3,
+            message: "x".to_string(),
+            waived: None,
+        };
+        let j = to_json(&[f]);
+        assert!(j.contains("\"violations\":1"));
+        assert!(j.contains("a\\\"b.rs"));
+    }
+}

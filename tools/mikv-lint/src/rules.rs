@@ -1,0 +1,447 @@
+//! The four mikv invariant rules, applied to [`lexer::SourceFile`]s.
+//!
+//! * `panic-free-serving` — no `unwrap`/`expect`/panic-family macros/slice
+//!   indexing in non-test serving code.
+//! * `hot-path-alloc-free` — no allocating constructs in the decode
+//!   hot-path modules.
+//! * `relaxed-ordering-audit` — every `Ordering::Relaxed` carries a waiver
+//!   naming why relaxed suffices.
+//! * `wire-error-exhaustiveness` — every `ErrorCode` wire string appears in
+//!   the proto module docs and the ARCHITECTURE.md error table.
+
+use crate::lexer::{is_ident, SourceFile, WaiverScope};
+
+pub const PANIC_FREE: &str = "panic-free-serving";
+pub const ALLOC_FREE: &str = "hot-path-alloc-free";
+pub const RELAXED: &str = "relaxed-ordering-audit";
+pub const WIRE_ERRORS: &str = "wire-error-exhaustiveness";
+/// Pseudo-rule for malformed waiver annotations themselves.
+pub const WAIVER_GRAMMAR: &str = "waiver-grammar";
+
+/// One rule hit. `waived` carries the waiver reason when a matching
+/// annotation covers the site; unwaived findings are violations.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub path: String,
+    /// 1-based line for display.
+    pub line: usize,
+    pub message: String,
+    pub waived: Option<String>,
+}
+
+/// Files subject to `panic-free-serving`.
+pub fn panic_free_scope(path: &str) -> bool {
+    path.starts_with("rust/src/server/")
+        || path.starts_with("rust/src/coordinator/")
+        || path == "rust/src/model/session.rs"
+        || path == "rust/src/model/assembly.rs"
+}
+
+/// Files subject to `hot-path-alloc-free`.
+pub fn alloc_free_scope(path: &str) -> bool {
+    matches!(
+        path,
+        "rust/src/model/assembly.rs"
+            | "rust/src/kvcache/dirty.rs"
+            | "rust/src/kvcache/tier.rs"
+            | "rust/src/quant/packing.rs"
+    )
+}
+
+/// `.name(` with an exact method-name match, so `unwrap_or`/`to_vec2` style
+/// near-misses never trigger.
+fn has_method_call(code: &str, name: &str) -> bool {
+    let b = code.as_bytes();
+    let mut i = 0usize;
+    while i < b.len() {
+        if b[i] == b'.' {
+            let start = i + 1;
+            let mut j = start;
+            while j < b.len() && is_ident(b[j]) {
+                j += 1;
+            }
+            if &code[start..j] == name {
+                let mut k = j;
+                while k < b.len() && b[k] == b' ' {
+                    k += 1;
+                }
+                if b.get(k) == Some(&b'(') {
+                    return true;
+                }
+            }
+            i = j.max(i + 1);
+        } else {
+            i += 1;
+        }
+    }
+    false
+}
+
+/// `name!` with a word boundary before the name.
+fn has_macro(code: &str, name: &str) -> bool {
+    let b = code.as_bytes();
+    let n = name.len();
+    let mut i = 0usize;
+    while i + n < b.len() {
+        if &code[i..i + n] == name && b[i + n] == b'!' && (i == 0 || !is_ident(b[i - 1])) {
+            return true;
+        }
+        i += 1;
+    }
+    false
+}
+
+/// A path token like `Vec::new`, word-bounded on both sides.
+fn has_path_token(code: &str, token: &str) -> bool {
+    let b = code.as_bytes();
+    let n = token.len();
+    let mut i = 0usize;
+    while i + n <= b.len() {
+        if &code[i..i + n] == token {
+            let before_ok = i == 0 || !is_ident(b[i - 1]);
+            let after_ok = match b.get(i + n) {
+                Some(&c) => !is_ident(c),
+                None => true,
+            };
+            if before_ok && after_ok {
+                return true;
+            }
+        }
+        i += 1;
+    }
+    false
+}
+
+/// `[` immediately preceded by an identifier char, `)` or `]` is an index
+/// expression (array types, `vec![`, attributes and slice patterns all have
+/// a different preceding byte).
+fn has_slice_index(code: &str) -> bool {
+    let b = code.as_bytes();
+    for i in 1..b.len() {
+        if b[i] == b'[' {
+            let p = b[i - 1];
+            if is_ident(p) || p == b')' || p == b']' {
+                return true;
+            }
+        }
+    }
+    false
+}
+
+const PANIC_MACROS: [&str; 4] = ["panic!", "unreachable!", "todo!", "unimplemented!"];
+
+fn panic_tokens(code: &str) -> Vec<&'static str> {
+    let mut hits = Vec::new();
+    if has_method_call(code, "unwrap") {
+        hits.push(".unwrap()");
+    }
+    if has_method_call(code, "expect") {
+        hits.push(".expect()");
+    }
+    for name in PANIC_MACROS {
+        if has_macro(code, &name[..name.len() - 1]) {
+            hits.push(name);
+        }
+    }
+    if has_slice_index(code) {
+        hits.push("slice indexing");
+    }
+    hits
+}
+
+fn alloc_tokens(code: &str) -> Vec<&'static str> {
+    let mut hits = Vec::new();
+    if has_macro(code, "vec") {
+        hits.push("vec!");
+    }
+    if has_path_token(code, "Vec::new") {
+        hits.push("Vec::new");
+    }
+    if has_method_call(code, "to_vec") {
+        hits.push(".to_vec()");
+    }
+    if code.contains("collect::<Vec") {
+        hits.push("collect::<Vec<..>>");
+    }
+    if has_macro(code, "format") {
+        hits.push("format!");
+    }
+    hits
+}
+
+/// Apply waivers: the reason of the first covering waiver, if any.
+fn waived(sf: &SourceFile, rule: &str, line: usize) -> Option<String> {
+    sf.waivers
+        .iter()
+        .find(|w| {
+            w.scope != WaiverScope::Note && w.rule == rule && w.start <= line && line <= w.end
+        })
+        .map(|w| w.reason.clone())
+}
+
+/// Run the per-file rules over one scanned file.
+pub fn check_file(sf: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for p in &sf.problems {
+        out.push(Finding {
+            rule: WAIVER_GRAMMAR,
+            path: sf.path.clone(),
+            line: p.line + 1,
+            message: p.message.clone(),
+            waived: None,
+        });
+    }
+    let in_panic_scope = panic_free_scope(&sf.path);
+    let in_alloc_scope = alloc_free_scope(&sf.path);
+    for (ln, code) in sf.lines.iter().enumerate() {
+        if sf.test[ln] {
+            continue;
+        }
+        if in_panic_scope {
+            let hits = panic_tokens(code);
+            if !hits.is_empty() {
+                out.push(Finding {
+                    rule: PANIC_FREE,
+                    path: sf.path.clone(),
+                    line: ln + 1,
+                    message: format!("panicking construct in serving code: {}", hits.join(", ")),
+                    waived: waived(sf, PANIC_FREE, ln),
+                });
+            }
+        }
+        if in_alloc_scope {
+            let hits = alloc_tokens(code);
+            if !hits.is_empty() {
+                out.push(Finding {
+                    rule: ALLOC_FREE,
+                    path: sf.path.clone(),
+                    line: ln + 1,
+                    message: format!("allocation in decode hot path: {}", hits.join(", ")),
+                    waived: waived(sf, ALLOC_FREE, ln),
+                });
+            }
+        }
+        if code.contains("Ordering::Relaxed") {
+            out.push(Finding {
+                rule: RELAXED,
+                path: sf.path.clone(),
+                line: ln + 1,
+                message: "Ordering::Relaxed requires a waiver naming why relaxed is safe"
+                    .to_string(),
+                waived: waived(sf, RELAXED, ln),
+            });
+        }
+    }
+    out
+}
+
+/// Extract the wire strings from `ErrorCode::as_str` (`=> "code"` arms).
+pub fn wire_codes(request_raw: &str) -> Vec<String> {
+    let Some(start) = request_raw.find("fn as_str") else {
+        return Vec::new();
+    };
+    let region = &request_raw[start..];
+    let Some(open) = region.find('{') else {
+        return Vec::new();
+    };
+    let b = region.as_bytes();
+    let mut depth: i64 = 0;
+    let mut end = region.len();
+    for (i, &c) in b.iter().enumerate().skip(open) {
+        match c {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    end = i;
+                    break;
+                }
+            }
+            _ => {}
+        }
+    }
+    let mut codes = Vec::new();
+    let mut rest = &region[open..end];
+    while let Some(p) = rest.find("=> \"") {
+        let tail = &rest[p + 4..];
+        match tail.find('"') {
+            Some(q) => {
+                codes.push(tail[..q].to_string());
+                rest = &tail[q..];
+            }
+            None => break,
+        }
+    }
+    codes
+}
+
+/// `wire-error-exhaustiveness`: every code from `ErrorCode::as_str` must
+/// appear (backticked) in proto.rs and in the ARCHITECTURE.md error table.
+pub fn check_wire_errors(request_raw: &str, proto_raw: &str, arch_raw: &str) -> Vec<Finding> {
+    let codes = wire_codes(request_raw);
+    let mut out = Vec::new();
+    if codes.is_empty() {
+        out.push(Finding {
+            rule: WIRE_ERRORS,
+            path: "rust/src/coordinator/request.rs".to_string(),
+            line: 1,
+            message: "could not extract any wire codes from ErrorCode::as_str".to_string(),
+            waived: None,
+        });
+        return out;
+    }
+    for code in &codes {
+        let tick = format!("`{code}`");
+        if !proto_raw.contains(&tick) {
+            out.push(Finding {
+                rule: WIRE_ERRORS,
+                path: "rust/src/server/proto.rs".to_string(),
+                line: 1,
+                message: format!("wire code {tick} is not documented in the proto module"),
+                waived: None,
+            });
+        }
+        if !arch_raw.contains(&tick) {
+            out.push(Finding {
+                rule: WIRE_ERRORS,
+                path: "ARCHITECTURE.md".to_string(),
+                line: 1,
+                message: format!("wire code {tick} missing from the ARCHITECTURE.md error table"),
+                waived: None,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lexer::scan;
+
+    fn violations(path: &str, src: &str) -> Vec<Finding> {
+        check_file(&scan(path, src))
+            .into_iter()
+            .filter(|f| f.waived.is_none())
+            .collect()
+    }
+
+    #[test]
+    fn seeded_unwrap_in_proto_is_a_violation() {
+        let src = "fn decode() -> u32 {\n    let x: Option<u32> = None;\n    x.unwrap()\n}\n";
+        let v = violations("rust/src/server/proto.rs", src);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, PANIC_FREE);
+        assert_eq!(v[0].line, 3);
+    }
+
+    #[test]
+    fn unwrap_in_test_region_is_ignored() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn t() { None::<u32>.unwrap(); }\n}\n";
+        assert!(violations("rust/src/server/proto.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unwrap_or_family_is_not_flagged() {
+        let src = "fn f(o: Option<u32>) -> u32 {\n    o.unwrap_or(0) + o.unwrap_or_default()\n}\n";
+        assert!(violations("rust/src/server/proto.rs", src).is_empty());
+    }
+
+    #[test]
+    fn slice_index_heuristics() {
+        let bad = "fn f(a: &[f32], i: usize) -> f32 {\n    a[i]\n}\n";
+        assert_eq!(violations("rust/src/server/proto.rs", bad).len(), 1);
+        let ok = "fn f(a: &mut [f32; 4]) {\n    #[allow(dead_code)]\n    let v = vec![0u8];\n}\n";
+        assert!(violations("rust/src/server/proto.rs", ok).is_empty());
+    }
+
+    #[test]
+    fn seeded_vec_macro_in_assembly_is_a_violation() {
+        let src = "fn f() -> Vec<f32> {\n    vec![0.0; 8]\n}\n";
+        let v = violations("rust/src/model/assembly.rs", src);
+        // assembly.rs is in both scopes; only the alloc rule fires here.
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, ALLOC_FREE);
+    }
+
+    #[test]
+    fn alloc_tokens_cover_issue_list() {
+        let src = concat!(
+            "fn f(x: &[u8]) {\n",
+            "    let a = Vec::new();\n",
+            "    let b = x.to_vec();\n",
+            "    let c: Vec<u8> = x.iter().copied().collect::<Vec<u8>>();\n",
+            "    let d = format!(\"{}\", 1);\n",
+            "}\n",
+        );
+        let v = violations("rust/src/quant/packing.rs", src);
+        assert_eq!(v.len(), 4, "{v:?}");
+    }
+
+    #[test]
+    fn site_waiver_suppresses_with_reason() {
+        let src = concat!(
+            "fn f(a: &[f32]) -> f32 {\n",
+            "    // lint: panic-free-serving-ok: i bounded by caller contract\n",
+            "    a[0]\n}\n",
+        );
+        let sf = scan("rust/src/server/proto.rs", src);
+        let all = check_file(&sf);
+        assert_eq!(all.len(), 1);
+        assert_eq!(all[0].waived.as_deref(), Some("i bounded by caller contract"));
+    }
+
+    #[test]
+    fn fn_waiver_covers_whole_body() {
+        let src = concat!(
+            "// lint: panic-free-serving-ok(fn): all offsets asserted at entry\n",
+            "fn f(a: &[f32]) -> f32 {\n    let x = a[0];\n    let y = a[1];\n    x + y\n}\n",
+        );
+        let all = check_file(&scan("rust/src/server/proto.rs", src));
+        assert_eq!(all.len(), 2);
+        assert!(all.iter().all(|f| f.waived.is_some()));
+    }
+
+    #[test]
+    fn relaxed_ordering_requires_waiver_everywhere() {
+        let src = "fn f(c: &AtomicU64) -> u64 {\n    c.load(Ordering::Relaxed)\n}\n";
+        let v = violations("rust/src/util/anything.rs", src);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, RELAXED);
+        let waived_src = concat!(
+            "fn f(c: &AtomicU64) -> u64 {\n",
+            "    // lint: relaxed-ordering-audit-ok: monotonic counter, no ordering needed\n",
+            "    c.load(Ordering::Relaxed)\n}\n",
+        );
+        assert!(violations("rust/src/util/anything.rs", waived_src).is_empty());
+    }
+
+    #[test]
+    fn waiver_without_reason_is_a_violation() {
+        let src = "fn f(a: &[f32]) -> f32 {\n    // lint: panic-free-serving-ok:\n    a[0]\n}\n";
+        let v = violations("rust/src/server/proto.rs", src);
+        assert!(v.iter().any(|f| f.rule == WAIVER_GRAMMAR), "{v:?}");
+        // the unwaived index is still reported too
+        assert!(v.iter().any(|f| f.rule == PANIC_FREE), "{v:?}");
+    }
+
+    #[test]
+    fn wire_codes_extraction_and_cross_check() {
+        let req = concat!(
+            "impl ErrorCode {\n",
+            "    pub fn as_str(self) -> &'static str {\n",
+            "        match self {\n",
+            "            ErrorCode::BadRequest => \"bad_request\",\n",
+            "            ErrorCode::Internal => \"internal\",\n",
+            "        }\n    }\n}\n",
+        );
+        assert_eq!(wire_codes(req), vec!["bad_request", "internal"]);
+        let proto = "//! codes: `bad_request`, `internal`";
+        let arch = "| `bad_request` | ... |";
+        let v = check_wire_errors(req, proto, arch);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert_eq!(v[0].path, "ARCHITECTURE.md");
+        assert!(v[0].message.contains("`internal`"));
+    }
+}
