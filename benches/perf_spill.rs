@@ -1,0 +1,296 @@
+//! Cold-tier spill bench: snapshot codec latency + footprint and the
+//! disk round trip (`BENCH_spill.json`).
+//!
+//! Builds real MiKV / Full sessions (synthetic tensors; no compiled
+//! artifacts, runs anywhere including CI smoke mode), drives a prefill +
+//! decode history into each, then measures per configuration:
+//!
+//! * **snapshot footprint** — encoded frame bytes vs the session's live
+//!   host bytes and vs the dense FP32 K/V prefix it replaces on disk;
+//! * **codec latency** — `encode_session` / `decode_session` wall time
+//!   (median over `--iters` runs);
+//! * **disk round trip** — `ColdStore::put` + `take` on a temp directory
+//!   (atomic write-then-rename + read-back, the serving spill path);
+//! * **fidelity gate** — re-encoding the restored session must reproduce
+//!   the original frame byte for byte (the codec is deterministic, so
+//!   bit-identical state ⇒ identical bytes; this is the cheap standalone
+//!   form of the round-trip property test in `kvcache/spill.rs`).
+//!
+//! ```sh
+//! cargo bench --bench perf_spill             # full grid
+//! cargo bench --bench perf_spill -- --smoke  # CI grid
+//! ```
+//!
+//! Outputs: `bench_out/perf_spill.{md,json}` and `BENCH_spill.json` at the
+//! repo root (schema in EXPERIMENTS.md §Spill).
+
+use mikv::bench::{Cell, Table};
+use mikv::coordinator::ColdStore;
+use mikv::kvcache::spill::{decode_session, encode_session};
+use mikv::kvcache::BufferPool;
+use mikv::model::{CacheMode, Session, SessionCache};
+use mikv::quant::Precision;
+use mikv::runtime::ModelDims;
+use mikv::util::cli::Args;
+use mikv::util::json::{Json, JsonObj};
+use mikv::util::rng::Pcg32;
+use std::time::Instant;
+
+fn dims(max_seq: usize) -> ModelDims {
+    ModelDims {
+        vocab: 32,
+        d_model: 128,
+        n_layers: 2,
+        n_q_heads: 4,
+        n_kv_heads: 2,
+        d_head: 32,
+        d_ff: 128,
+        max_seq,
+        quant_group: 16,
+        params: 0,
+    }
+}
+
+/// One bench configuration: a cache mode driven to `t0 + steps` tokens.
+struct Config {
+    label: &'static str,
+    mode: fn(&ModelDims) -> CacheMode,
+    t0: usize,
+    steps: usize,
+}
+
+fn mode_mikv4(d: &ModelDims) -> CacheMode {
+    CacheMode::mikv(d, 0.25, Precision::Int4)
+}
+
+fn mode_mikv2(d: &ModelDims) -> CacheMode {
+    CacheMode::mikv(d, 0.25, Precision::Int2)
+}
+
+fn mode_full(_d: &ModelDims) -> CacheMode {
+    CacheMode::Full
+}
+
+/// Build a session with a random prefill and `steps` decode appends —
+/// the state shape a parked multi-turn session actually spills with.
+fn build_session(cfg: &Config, seed: u64) -> anyhow::Result<(ModelDims, Session)> {
+    let max_seq = (cfg.t0 + cfg.steps + 8).next_power_of_two();
+    let d_model = dims(max_seq);
+    let planes = d_model.planes();
+    let d = d_model.d_head;
+    let mut rng = Pcg32::new(seed);
+
+    let mut sess = Session::new(seed, &d_model, (cfg.mode)(&d_model))?;
+    let k: Vec<f32> = (0..planes * cfg.t0 * d).map(|_| rng.gen_normal()).collect();
+    let v: Vec<f32> = (0..planes * cfg.t0 * d).map(|_| rng.gen_normal()).collect();
+    match &mut sess.cache {
+        SessionCache::Mikv(m) => {
+            let acc: Vec<f32> = (0..planes * cfg.t0).map(|_| rng.gen_f32()).collect();
+            let qmax: Vec<f32> = (0..planes * d).map(|_| rng.gen_f32() + 0.5).collect();
+            let kmax: Vec<f32> = (0..planes * d).map(|_| rng.gen_f32() + 0.5).collect();
+            m.ingest_prefill(cfg.t0, &k, &v, &acc, &qmax, &kmax);
+        }
+        SessionCache::Full(f) => f.ingest_prefill(cfg.t0, &k, &v),
+    }
+    sess.tokens = (0..cfg.t0 as i64).collect();
+    sess.prompt_len = cfg.t0;
+    sess.last_token = 1;
+
+    for _ in 0..cfg.steps {
+        let t = sess.cache.seq_len();
+        let k_new: Vec<f32> = (0..planes * d).map(|_| rng.gen_normal()).collect();
+        let v_new: Vec<f32> = (0..planes * d).map(|_| rng.gen_normal()).collect();
+        let mut attn_prev = vec![0.0f32; planes * max_seq];
+        for p in 0..planes {
+            for s in 0..t {
+                attn_prev[p * max_seq + s] = rng.gen_f32() * 0.1;
+            }
+        }
+        let attn_self = vec![0.01f32; planes];
+        sess.try_ingest_step(&k_new, &v_new, &attn_prev, &attn_self)?;
+        sess.tokens.push(rng.gen_range(0, 32));
+    }
+    Ok((d_model, sess))
+}
+
+fn median_us(mut xs: Vec<f64>) -> f64 {
+    xs.sort_by(|a, b| a.total_cmp(b));
+    xs[xs.len() / 2]
+}
+
+struct RowResult {
+    label: &'static str,
+    t0: usize,
+    steps: usize,
+    seq_len: usize,
+    snapshot_bytes: usize,
+    host_bytes: usize,
+    dense_bytes: usize,
+    encode_us: f64,
+    decode_us: f64,
+    cold_put_us: f64,
+    cold_take_us: f64,
+}
+
+fn run_config(cfg: &Config, iters: usize, seed: u64) -> anyhow::Result<RowResult> {
+    let (d_model, sess) = build_session(cfg, seed)?;
+    let frame = encode_session(&sess)?;
+    let pool = BufferPool::new();
+
+    // Fidelity gate: restore, then re-encode — must reproduce the frame
+    // byte for byte.
+    let restored = decode_session(&frame, &d_model, &pool)?;
+    let reframe = encode_session(&restored)?;
+    anyhow::ensure!(
+        frame == reframe,
+        "{}: re-encoded restored session differs from the original frame",
+        cfg.label
+    );
+    drop(restored);
+
+    let mut enc = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        let f = encode_session(&sess)?;
+        enc.push(t.elapsed().as_secs_f64() * 1e6);
+        anyhow::ensure!(f.len() == frame.len(), "encode is deterministic");
+    }
+    let mut dec = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        let s = decode_session(&frame, &d_model, &pool)?;
+        dec.push(t.elapsed().as_secs_f64() * 1e6);
+        drop(s);
+    }
+
+    // Disk round trip through the serving cold store.
+    let root = std::env::temp_dir().join(format!(
+        "mikv-perf-spill-{}-{}",
+        std::process::id(),
+        cfg.label
+    ));
+    let mut store = ColdStore::open(&root, 0, 1 << 30)?;
+    let (mut puts, mut takes) = (Vec::with_capacity(iters), Vec::with_capacity(iters));
+    for i in 0..iters {
+        let t = Instant::now();
+        anyhow::ensure!(store.put(i as u64, &frame)?, "put must fit the budget");
+        puts.push(t.elapsed().as_secs_f64() * 1e6);
+        let t = Instant::now();
+        let back = store.take(i as u64)?;
+        takes.push(t.elapsed().as_secs_f64() * 1e6);
+        anyhow::ensure!(back.as_deref() == Some(frame.as_slice()), "cold read-back differs");
+    }
+    let _ = std::fs::remove_dir_all(&root);
+
+    let seq = sess.cache.seq_len();
+    let planes = d_model.planes();
+    Ok(RowResult {
+        label: cfg.label,
+        t0: cfg.t0,
+        steps: cfg.steps,
+        seq_len: seq,
+        snapshot_bytes: frame.len(),
+        host_bytes: sess.cache.host_bytes(),
+        // Dense FP32 K+V prefix the snapshot replaces on disk.
+        dense_bytes: 2 * planes * seq * d_model.d_head * 4,
+        encode_us: median_us(enc),
+        decode_us: median_us(dec),
+        cold_put_us: median_us(puts),
+        cold_take_us: median_us(takes),
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let smoke = args.flag("smoke");
+    let iters = args.get_nonzero("iters", if smoke { 5 } else { 25 })?;
+    let seed = args.get("seed", 0x5B11u64)?;
+    let (t0_small, t0_large, steps) = if smoke { (48, 96, 16) } else { (64, 384, 48) };
+
+    let configs = [
+        Config { label: "mikv_int4", mode: mode_mikv4, t0: t0_small, steps },
+        Config { label: "mikv_int4_long", mode: mode_mikv4, t0: t0_large, steps },
+        Config { label: "mikv_int2", mode: mode_mikv2, t0: t0_small, steps },
+        Config { label: "full", mode: mode_full, t0: t0_small, steps },
+    ];
+
+    let mut table = Table::new(
+        "perf_spill",
+        "Cold-tier snapshot codec: footprint + latency + disk round trip",
+        &[
+            "mode", "t0", "steps", "seq", "snapB", "hostB", "denseB",
+            "enc_us", "dec_us", "put_us", "take_us",
+        ],
+    );
+    table.note(format!(
+        "planes=4 d_head=32 ratio=0.25 iters={iters} seed={seed:#x}; median \
+         wall times; snapB = encoded frame, hostB = live session footprint, \
+         denseB = FP32 K+V prefix; gate: re-encode(restore(frame)) == frame \
+         and MiKV snapshots beat the dense prefix on disk"
+    ));
+
+    let mut results = Vec::new();
+    for cfg in &configs {
+        let r = run_config(cfg, iters, seed ^ ((cfg.t0 as u64) << 20))?;
+        if cfg.label.starts_with("mikv") {
+            anyhow::ensure!(
+                r.snapshot_bytes < r.dense_bytes,
+                "{}: snapshot ({} B) must undercut the dense FP32 prefix ({} B)",
+                r.label,
+                r.snapshot_bytes,
+                r.dense_bytes
+            );
+        }
+        table.row(vec![
+            Cell::Str(r.label.to_string()),
+            r.t0.into(),
+            r.steps.into(),
+            r.seq_len.into(),
+            Cell::Int(r.snapshot_bytes as i64),
+            Cell::Int(r.host_bytes as i64),
+            Cell::Int(r.dense_bytes as i64),
+            Cell::F(r.encode_us, 1),
+            Cell::F(r.decode_us, 1),
+            Cell::F(r.cold_put_us, 1),
+            Cell::F(r.cold_take_us, 1),
+        ]);
+        results.push(r);
+    }
+    table.emit()?;
+
+    let mut o = JsonObj::new();
+    o.set("bench", "perf_spill");
+    o.set("pending", false);
+    o.set("smoke", smoke);
+    o.set("planes", 4usize);
+    o.set("d_head", 32usize);
+    o.set("iters", iters);
+    o.set("seed", seed as i64);
+    let rows: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            let mut ro = JsonObj::new();
+            ro.set("mode", r.label);
+            ro.set("t0", r.t0);
+            ro.set("steps", r.steps);
+            ro.set("seq_len", r.seq_len);
+            ro.set("snapshot_bytes", r.snapshot_bytes);
+            ro.set("host_bytes", r.host_bytes);
+            ro.set("dense_fp32_bytes", r.dense_bytes);
+            ro.set(
+                "bytes_vs_dense",
+                r.snapshot_bytes as f64 / r.dense_bytes as f64,
+            );
+            ro.set("encode_us_p50", r.encode_us);
+            ro.set("decode_us_p50", r.decode_us);
+            ro.set("cold_put_us_p50", r.cold_put_us);
+            ro.set("cold_take_us_p50", r.cold_take_us);
+            ro.set("roundtrip_bit_identical", true);
+            Json::Obj(ro)
+        })
+        .collect();
+    o.set("results", Json::Arr(rows));
+    std::fs::write("BENCH_spill.json", Json::Obj(o).to_string_pretty())?;
+    println!("wrote BENCH_spill.json");
+    Ok(())
+}

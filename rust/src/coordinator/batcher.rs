@@ -36,12 +36,14 @@
 //! every step from whatever is active (the "continuous" in continuous
 //! batching, per Orca/vLLM).
 
+use super::cold::ColdStore;
 use super::request::{ErrorCode, Op, Request, RequestMetrics, Response, ServeEvent, WireError};
 use super::stats::{MetricsCollector, StatsSnapshot, WorkerStats};
-use crate::kvcache::{BufferPool, PromotionStats};
+use crate::kvcache::{spill, BufferPool, PromotionStats};
 use crate::model::{sampler, CacheMode, Engine, Session};
 use crate::runtime::ModelDims;
 use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::path::PathBuf;
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
 
@@ -61,6 +63,15 @@ pub struct CoordinatorConfig {
     /// Total host bytes parked sessions may pin; the oldest-parked are
     /// evicted beyond this bound.
     pub max_session_bytes: usize,
+    /// Root directory of the opt-in cold tier. When set, sessions leaving
+    /// the parked registry (TTL decay or host-bytes pressure) are spilled
+    /// to a versioned snapshot under `<cold_dir>/worker-<id>/` instead of
+    /// dropped, and a later `append` restores them transparently. `None`
+    /// (the default) keeps the historical drop-on-evict behaviour.
+    pub cold_dir: Option<PathBuf>,
+    /// Byte bound on this worker's cold-tier directory (0 = unbounded);
+    /// the oldest-spilled snapshots are evicted beyond it.
+    pub max_cold_bytes: u64,
 }
 
 impl Default for CoordinatorConfig {
@@ -72,6 +83,8 @@ impl Default for CoordinatorConfig {
             max_waiting: 256,
             session_ttl: Duration::from_secs(120),
             max_session_bytes: 512 << 20,
+            cold_dir: None,
+            max_cold_bytes: 256 << 20,
         }
     }
 }
@@ -179,6 +192,101 @@ impl Active {
 struct Parked {
     sess: Session,
     parked_at: Instant,
+    /// Whether the session may spill to the cold tier on eviction (the
+    /// parking request's `compression.spill` knob; `false` = drop instead,
+    /// so the KV state never touches disk).
+    spill: bool,
+}
+
+/// The worker's between-turn session registry: the hot map of parked
+/// sessions plus the optional on-disk cold tier they spill to.
+///
+/// The host-bytes footprint of the hot map is maintained as a **running
+/// total** updated on every park/checkout — a parked session's cache is
+/// never mutated, so the cached per-session size cannot go stale — instead
+/// of being recomputed by summing the registry on every sweep and every
+/// `stats` op. A debug assertion cross-checks the total against a full
+/// recompute whenever it is read.
+struct ParkedRegistry {
+    hot: HashMap<u64, Parked>,
+    /// Running Σ host_bytes over `hot` (see the type doc).
+    hot_bytes: usize,
+    cold: Option<ColdStore>,
+}
+
+impl ParkedRegistry {
+    fn new(cold: Option<ColdStore>) -> Self {
+        Self {
+            hot: HashMap::new(),
+            hot_bytes: 0,
+            cold,
+        }
+    }
+
+    /// Park a session, keeping the running byte total current.
+    fn insert(&mut self, sid: u64, p: Parked) {
+        self.hot_bytes += p.sess.cache.host_bytes();
+        if let Some(old) = self.hot.insert(sid, p) {
+            // Unreachable in the coordinator (a parked sid is checked out
+            // before it can be parked again), but keep the total honest.
+            self.hot_bytes = self.hot_bytes.saturating_sub(old.sess.cache.host_bytes());
+        }
+    }
+
+    /// Check a session out of the hot map (for `append`, spill or drop).
+    fn checkout(&mut self, sid: u64) -> Option<Parked> {
+        let p = self.hot.remove(&sid)?;
+        self.hot_bytes = self.hot_bytes.saturating_sub(p.sess.cache.host_bytes());
+        Some(p)
+    }
+
+    fn len(&self) -> usize {
+        self.hot.len()
+    }
+
+    fn is_empty(&self) -> bool {
+        self.hot.is_empty()
+    }
+
+    /// Host bytes the hot registry pins — the running total, cross-checked
+    /// against a full recompute in debug builds.
+    fn hot_bytes(&self) -> usize {
+        debug_assert_eq!(
+            self.hot_bytes,
+            self.hot.values().map(|p| p.sess.cache.host_bytes()).sum::<usize>(),
+            "running parked host-bytes total drifted from the registry"
+        );
+        self.hot_bytes
+    }
+
+    /// Parked sids idle at least `ttl` (the TTL-decay sweep set).
+    fn expired(&self, ttl: Duration) -> Vec<u64> {
+        self.hot
+            .iter()
+            .filter(|(_, p)| p.parked_at.elapsed() >= ttl)
+            .map(|(&sid, _)| sid)
+            .collect()
+    }
+
+    /// Oldest-parked sid (ties broken by id for determinism).
+    fn oldest(&self) -> Option<u64> {
+        self.hot
+            .iter()
+            .min_by_key(|(sid, p)| (p.parked_at, **sid))
+            .map(|(&sid, _)| sid)
+    }
+
+    fn cold_sessions(&self) -> usize {
+        self.cold.as_ref().map(ColdStore::len).unwrap_or(0)
+    }
+
+    fn cold_bytes(&self) -> u64 {
+        self.cold.as_ref().map(ColdStore::bytes).unwrap_or(0)
+    }
+
+    fn cold_evictions(&self) -> u64 {
+        self.cold.as_ref().map(ColdStore::evictions).unwrap_or(0)
+    }
 }
 
 /// One engine worker. Owns the engine for the lifetime of [`Self::run`].
@@ -246,7 +354,21 @@ impl<E: StepEngine> Coordinator<E> {
     pub fn run_until(&self, rx: Receiver<Op>, stop: impl Fn() -> bool) {
         let mut waiting: VecDeque<Request> = VecDeque::new();
         let mut active: Vec<Active> = Vec::new();
-        let mut parked: HashMap<u64, Parked> = HashMap::new();
+        // A failed cold-tier open degrades to the historical drop-on-evict
+        // registry rather than killing the worker.
+        let cold = self.cfg.cold_dir.as_ref().and_then(|root| {
+            match ColdStore::open(root, self.worker_id, self.cfg.max_cold_bytes) {
+                Ok(c) => Some(c),
+                Err(e) => {
+                    crate::log_error!(
+                        "cold tier disabled: open {} failed: {e}",
+                        root.display()
+                    );
+                    None
+                }
+            }
+        });
+        let mut parked = ParkedRegistry::new(cold);
         // Strided so the owning worker is recoverable from the id alone:
         // worker w of N assigns w+1, w+1+N, w+1+2N, ...
         let mut next_session: u64 = self.worker_id as u64 + 1;
@@ -279,7 +401,7 @@ impl<E: StepEngine> Coordinator<E> {
             let n_admit = room.min(self.cfg.prefill_chunk).min(waiting.len());
             if n_admit > 0 {
                 let batch: Vec<Request> = waiting.drain(..n_admit).collect();
-                self.admit_batch(batch, &mut active, &mut parked);
+                self.admit_batch(batch, &mut active, &mut parked, &mut collector);
             }
 
             // 2b. Retire turns already complete after admission
@@ -318,7 +440,7 @@ impl<E: StepEngine> Coordinator<E> {
         op: Op,
         waiting: &mut VecDeque<Request>,
         active: &mut [Active],
-        parked: &HashMap<u64, Parked>,
+        parked: &ParkedRegistry,
         collector: &MetricsCollector,
     ) {
         match op {
@@ -349,15 +471,18 @@ impl<E: StepEngine> Coordinator<E> {
                 let _ = reply.emit(ServeEvent::CancelResult { id, target, found });
             }
             Op::Stats { id, reply } => {
-                let parked_bytes: usize =
-                    parked.values().map(|p| p.sess.cache.host_bytes()).sum();
                 let (assembly_us_p50, assembly_us_p99) = collector.assembly_us();
                 let assembly_samples = collector.assembly_samples();
+                let (restore_us_p50, restore_us_p99) = collector.restore_us();
+                let restore_samples = collector.restore_samples();
                 let snapshot = StatsSnapshot {
                     active: active.len(),
                     waiting: waiting.len(),
                     parked_sessions: parked.len(),
-                    parked_bytes,
+                    parked_bytes: parked.hot_bytes(),
+                    parked_cold_sessions: parked.cold_sessions(),
+                    cold_bytes: parked.cold_bytes(),
+                    cold_evictions: parked.cold_evictions(),
                     completed: collector.n_requests(),
                     generated_tokens: collector.generated_tokens(),
                     throughput_tps: collector.throughput(),
@@ -366,6 +491,9 @@ impl<E: StepEngine> Coordinator<E> {
                     assembly_us_p50,
                     assembly_us_p99,
                     assembly_samples,
+                    restore_us_p50,
+                    restore_us_p99,
+                    restore_samples,
                     promotions: collector.promotions(),
                     thrash_suppressed: collector.thrash_suppressed(),
                     pool: self.pool.stats(),
@@ -374,12 +502,17 @@ impl<E: StepEngine> Coordinator<E> {
                         active: active.len(),
                         waiting: waiting.len(),
                         parked_sessions: parked.len(),
+                        parked_cold_sessions: parked.cold_sessions(),
+                        cold_bytes: parked.cold_bytes(),
                         completed: collector.n_requests(),
                         generated_tokens: collector.generated_tokens(),
                         throughput_tps: collector.throughput(),
                         assembly_us_p50,
                         assembly_us_p99,
                         assembly_samples,
+                        restore_us_p50,
+                        restore_us_p99,
+                        restore_samples,
                         promotions: collector.promotions(),
                         thrash_suppressed: collector.thrash_suppressed(),
                     }],
@@ -395,7 +528,7 @@ impl<E: StepEngine> Coordinator<E> {
     fn retire(
         &self,
         active: &mut Vec<Active>,
-        parked: &mut HashMap<u64, Parked>,
+        parked: &mut ParkedRegistry,
         next_session: &mut u64,
         collector: &mut MetricsCollector,
     ) {
@@ -464,6 +597,7 @@ impl<E: StepEngine> Coordinator<E> {
                             Parked {
                                 sess: a.sess,
                                 parked_at: now,
+                                spill: a.req.spec.spill.unwrap_or(true),
                             },
                         );
                         Some(sid)
@@ -490,14 +624,15 @@ impl<E: StepEngine> Coordinator<E> {
         &self,
         reqs: Vec<Request>,
         active: &mut Vec<Active>,
-        parked: &mut HashMap<u64, Parked>,
+        parked: &mut ParkedRegistry,
+        collector: &mut MetricsCollector,
     ) {
         let dims = self.engine.dims().clone();
         let mut sessions = Vec::new();
         let mut oks = Vec::new();
         for req in reqs {
             if req.session.is_some() {
-                self.admit_append(req, active, parked, &dims);
+                self.admit_append(req, active, parked, &dims, collector);
                 continue;
             }
             // Validate per request BEFORE batching: one bad request must not
@@ -581,8 +716,9 @@ impl<E: StepEngine> Coordinator<E> {
         &self,
         req: Request,
         active: &mut Vec<Active>,
-        parked: &mut HashMap<u64, Parked>,
+        parked: &mut ParkedRegistry,
         dims: &ModelDims,
+        collector: &mut MetricsCollector,
     ) {
         let Some(sid) = req.session else {
             // The scheduler routes `append` ops here only with a session
@@ -592,8 +728,18 @@ impl<E: StepEngine> Coordinator<E> {
             let _ = req.reply.emit(ServeEvent::Done(Response::error(req.id, err)));
             return;
         };
-        let mut entry = match parked.remove(&sid) {
-            Some(p) => p,
+        // Hot registry first, then the cold tier: a spilled session is
+        // restored transparently — the client cannot tell it ever left
+        // memory (beyond the restore latency the stats surface).
+        let hot = parked.checkout(sid);
+        let mut entry = match hot.map(Ok).or_else(|| {
+            self.restore_from_cold(parked, sid, dims, collector).transpose()
+        }) {
+            Some(Ok(p)) => p,
+            Some(Err(err)) => {
+                let _ = req.reply.emit(ServeEvent::Done(Response::error(req.id, err)));
+                return;
+            }
             None => {
                 // Distinguish "mid-turn, retry after done" from permanent
                 // loss so clients don't abandon a live conversation.
@@ -745,42 +891,111 @@ impl<E: StepEngine> Coordinator<E> {
         }
     }
 
-    /// Enforce the parked-session registry bounds: drop sessions past the
-    /// TTL, then evict oldest-parked while the total host footprint
-    /// exceeds `max_session_bytes`. Dropped sessions return their cache
-    /// blocks to the shared pool.
-    fn sweep_parked(&self, parked: &mut HashMap<u64, Parked>) {
+    /// Enforce the parked-session registry bounds: demote sessions past
+    /// the TTL, then demote oldest-parked while the total host footprint
+    /// exceeds `max_session_bytes`. With a cold tier configured, a demoted
+    /// session spills to its on-disk snapshot (and stays appendable);
+    /// without one it is dropped — either way its cache blocks return to
+    /// the shared pool and the registry's host bytes fall by its full
+    /// footprint.
+    fn sweep_parked(&self, parked: &mut ParkedRegistry) {
         if parked.is_empty() {
             return;
         }
-        let ttl = self.cfg.session_ttl;
-        parked.retain(|sid, p| {
-            let live = p.parked_at.elapsed() < ttl;
-            if !live {
-                crate::log_debug!("session {sid} expired (idle past {ttl:?})");
-            }
-            live
-        });
-        // Sum once, then subtract per eviction — the eviction loop stays
-        // O(evictions · n) for the min scan instead of O(n²) resummation
-        // on the worker's serving loop.
-        let mut total: usize = parked.values().map(|p| p.sess.cache.host_bytes()).sum();
-        while !parked.is_empty() && total > self.cfg.max_session_bytes {
-            let oldest = parked
-                .iter()
-                .min_by_key(|(sid, p)| (p.parked_at, **sid))
-                .map(|(sid, _)| *sid);
-            match oldest {
-                Some(sid) => {
-                    crate::log_debug!(
-                        "session {sid} evicted (retained {total} B > bound {} B)",
-                        self.cfg.max_session_bytes
-                    );
-                    if let Some(p) = parked.remove(&sid) {
-                        total = total.saturating_sub(p.sess.cache.host_bytes());
-                    }
-                }
+        for sid in parked.expired(self.cfg.session_ttl) {
+            self.demote_to_cold(parked, sid, "idle past TTL");
+        }
+        // The running total makes the pressure check O(1) per iteration;
+        // each demotion removes the session's full footprint, so the loop
+        // strictly descends.
+        while !parked.is_empty() && parked.hot_bytes() > self.cfg.max_session_bytes {
+            match parked.oldest() {
+                Some(sid) => self.demote_to_cold(parked, sid, "host-bytes pressure"),
                 None => break,
+            }
+        }
+    }
+
+    /// Move one parked session out of the hot registry: encode its
+    /// snapshot into the cold tier when one is configured, else drop it.
+    /// The session's pooled cache blocks are recycled in both cases. A
+    /// spill failure (encode, bound, or IO) degrades to a drop — the
+    /// historical behaviour — and is logged; it never takes the worker
+    /// down.
+    fn demote_to_cold(&self, parked: &mut ParkedRegistry, sid: u64, why: &str) {
+        let Some(p) = parked.checkout(sid) else { return };
+        if !p.spill {
+            crate::log_debug!("session {sid} dropped ({why}; spill opted out)");
+            return;
+        }
+        let Some(cold) = parked.cold.as_mut() else {
+            crate::log_debug!("session {sid} dropped ({why}; no cold tier)");
+            return;
+        };
+        match spill::encode_session(&p.sess) {
+            Ok(frame) => match cold.put(sid, &frame) {
+                Ok(true) => crate::log_debug!(
+                    "session_spilled sid={sid} bytes={} reason=\"{why}\"",
+                    frame.len()
+                ),
+                Ok(false) => crate::log_error!(
+                    "session {sid} dropped: {} B snapshot exceeds the cold-tier bound",
+                    frame.len()
+                ),
+                Err(e) => {
+                    crate::log_error!("session {sid} dropped: cold-tier write failed: {e}")
+                }
+            },
+            Err(e) => crate::log_error!("session {sid} dropped: snapshot encode failed: {e}"),
+        }
+        // `p` drops here, returning its blocks to the pool.
+    }
+
+    /// Restore a session from the cold tier for `append`. `Ok(None)` means
+    /// "not in the cold tier" (including: no cold tier configured, or the
+    /// snapshot failed validation — a corrupt snapshot is a *lost* session
+    /// and reports `session_not_found`, never a worker panic). An IO error
+    /// reading an indexed snapshot is `internal`: the session existed and
+    /// the store, not the client, failed.
+    fn restore_from_cold(
+        &self,
+        parked: &mut ParkedRegistry,
+        sid: u64,
+        dims: &ModelDims,
+        collector: &mut MetricsCollector,
+    ) -> Result<Option<Parked>, WireError> {
+        let Some(cold) = parked.cold.as_mut() else {
+            return Ok(None);
+        };
+        let frame = match cold.take(sid) {
+            Ok(Some(f)) => f,
+            Ok(None) => return Ok(None),
+            Err(e) => {
+                return Err(WireError::internal(format!(
+                    "cold-tier read for session {sid} failed: {e}"
+                )))
+            }
+        };
+        let started = Instant::now();
+        match spill::decode_session(&frame, dims, &self.pool) {
+            Ok(sess) => {
+                let took = started.elapsed();
+                collector.record_restore(took);
+                crate::log_debug!(
+                    "session_restored sid={sid} bytes={} restore_us={}",
+                    frame.len(),
+                    took.as_micros()
+                );
+                Ok(Some(Parked {
+                    sess,
+                    parked_at: Instant::now(),
+                    // It was spilled once already, so it may spill again.
+                    spill: true,
+                }))
+            }
+            Err(e) => {
+                crate::log_error!("session {sid} cold snapshot rejected: {e}");
+                Ok(None)
             }
         }
     }
@@ -801,6 +1016,10 @@ mod tests {
         assert!(c.max_waiting > 0);
         assert!(c.session_ttl > Duration::ZERO);
         assert!(c.max_session_bytes > 0);
+        // The cold tier is opt-in: a default coordinator never touches
+        // disk, and evicted parked sessions are dropped as before.
+        assert!(c.cold_dir.is_none());
+        assert!(c.max_cold_bytes > 0);
     }
 
     fn test_dims() -> ModelDims {
@@ -1245,7 +1464,8 @@ mod tests {
     fn append_to_checked_out_session_reports_busy() {
         let c = Coordinator::new(stub(false), CoordinatorConfig::default());
         let dims = test_dims();
-        let mut parked: HashMap<u64, Parked> = HashMap::new();
+        let mut parked = ParkedRegistry::new(None);
+        let mut collector = MetricsCollector::new();
         let mut active: Vec<Active> = Vec::new();
         let (etx, _erx) = mpsc::channel::<ServeEvent>();
         let mut holder = request(1, 2, 4, Box::new(etx));
@@ -1266,7 +1486,7 @@ mod tests {
         let (etx2, erx2) = mpsc::channel::<ServeEvent>();
         let mut req = request(2, 1, 2, Box::new(etx2));
         req.session = Some(5);
-        c.admit_append(req, &mut active, &mut parked, &dims);
+        c.admit_append(req, &mut active, &mut parked, &dims, &mut collector);
         match erx2.recv().unwrap() {
             ServeEvent::Done(r) => {
                 assert_eq!(r.error.unwrap().code, ErrorCode::SessionBusy);
@@ -1278,7 +1498,7 @@ mod tests {
         let (etx3, erx3) = mpsc::channel::<ServeEvent>();
         let mut req = request(3, 1, 2, Box::new(etx3));
         req.session = Some(6);
-        c.admit_append(req, &mut active, &mut parked, &dims);
+        c.admit_append(req, &mut active, &mut parked, &dims, &mut collector);
         match erx3.recv().unwrap() {
             ServeEvent::Done(r) => {
                 assert_eq!(r.error.unwrap().code, ErrorCode::SessionNotFound);
@@ -1385,5 +1605,403 @@ mod tests {
         // a pending prompt feed always defers retirement
         a.pending_feed.push_back(9);
         assert!(!a.finished(dims.max_seq));
+    }
+
+    /// Unique per-test cold-tier root under the OS temp dir.
+    fn tmp_cold_root(tag: &str) -> PathBuf {
+        let p = std::env::temp_dir().join(format!(
+            "mikv-batcher-cold-{}-{tag}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&p);
+        p
+    }
+
+    /// S2: the registry's running host-bytes total tracks park/checkout
+    /// exactly (the `hot_bytes()` accessor itself debug-asserts the total
+    /// against a full recompute, so calling it is the check).
+    #[test]
+    fn parked_registry_running_total_matches_recompute() {
+        let dims = StubEngine::test_dims(32);
+        let mut reg = ParkedRegistry::new(None);
+        assert_eq!(reg.hot_bytes(), 0);
+        let mut sizes = Vec::new();
+        for sid in 1..=3u64 {
+            let sess = Session::new(sid, &dims, CacheMode::Full).unwrap();
+            sizes.push(sess.cache.host_bytes());
+            reg.insert(
+                sid,
+                Parked {
+                    sess,
+                    parked_at: Instant::now(),
+                    spill: true,
+                },
+            );
+        }
+        assert_eq!(reg.hot_bytes(), sizes.iter().sum::<usize>());
+        let p = reg.checkout(2).expect("parked");
+        assert_eq!(
+            reg.hot_bytes(),
+            sizes.iter().sum::<usize>() - p.sess.cache.host_bytes()
+        );
+        // re-park and double-insert: the defensive replace path keeps the
+        // total honest rather than double-counting
+        let b = p.sess.cache.host_bytes();
+        reg.insert(
+            2,
+            Parked {
+                sess: p.sess,
+                parked_at: Instant::now(),
+                spill: true,
+            },
+        );
+        let extra = Session::new(9, &dims, CacheMode::Full).unwrap();
+        let eb = extra.cache.host_bytes();
+        reg.insert(
+            2,
+            Parked {
+                sess: extra,
+                parked_at: Instant::now(),
+                spill: true,
+            },
+        );
+        let _ = b;
+        assert_eq!(
+            reg.hot_bytes(),
+            sizes.iter().sum::<usize>() - sizes[1] + eb
+        );
+        assert_eq!(reg.len(), 3);
+    }
+
+    /// The cold-tier acceptance path: with a zero TTL the kept session is
+    /// spilled to disk on the first sweep, and a follow-up `append`
+    /// restores it transparently — same session id, occupancy carried over
+    /// and grown by EXACTLY the amounts the never-spilled multi-turn test
+    /// observes, and the restore surfaced in the stats snapshot.
+    #[test]
+    fn ttl_spill_then_append_restores_the_same_cache() {
+        let root = tmp_cold_root("ttl-restore");
+        let engine = StubEngine::new(StubEngine::test_dims(64));
+        let (tx, rx) = mpsc::channel::<Op>();
+        let cfg = CoordinatorConfig {
+            session_ttl: Duration::ZERO,
+            cold_dir: Some(root.clone()),
+            ..CoordinatorConfig::default()
+        };
+        let coordinator = Coordinator::new(engine, cfg);
+
+        let driver = std::thread::spawn(move || {
+            let (etx, erx) = mpsc::channel::<ServeEvent>();
+            let mikv = CompressionSpec::mikv(0.5, "int4");
+            tx.send(Op::Submit(Request {
+                id: 1,
+                prompt: vec![1, 2, 3],
+                max_new: 4,
+                stop: None,
+                spec: mikv.clone(),
+                session: None,
+                keep: true,
+                submitted_at: Instant::now(),
+                reply: Box::new(etx.clone()),
+            }))
+            .unwrap();
+            let turn1 = loop {
+                if let ServeEvent::Done(r) = erx.recv().unwrap() {
+                    break r;
+                }
+            };
+            assert!(turn1.error.is_none(), "{:?}", turn1.error);
+            let sid = turn1.session.expect("keep=true parks the session");
+            assert_eq!(turn1.tokens.len(), 4);
+            assert_eq!(turn1.metrics.hi_slots + turn1.metrics.lo_slots, 24);
+
+            // By the time `done` was emitted + one sweep, the zero TTL has
+            // demoted the session to the cold tier. The append must not
+            // care.
+            tx.send(Op::Submit(Request {
+                id: 2,
+                prompt: vec![4, 5],
+                max_new: 3,
+                stop: None,
+                spec: mikv,
+                session: Some(sid),
+                keep: false,
+                submitted_at: Instant::now(),
+                reply: Box::new(etx.clone()),
+            }))
+            .unwrap();
+            let turn2 = loop {
+                if let ServeEvent::Done(r) = erx.recv().unwrap() {
+                    break r;
+                }
+            };
+            assert!(turn2.error.is_none(), "restored append failed: {:?}", turn2.error);
+            assert_eq!(turn2.tokens.len(), 3);
+            // identical occupancy growth to the never-spilled multi-turn
+            // test: 6 carried slots + 1 fed + 2 appended + 2 decoded, × 4
+            // planes
+            assert_eq!(
+                turn2.metrics.hi_slots + turn2.metrics.lo_slots,
+                44,
+                "restored cache must carry the exact tier occupancy"
+            );
+
+            tx.send(Op::Stats {
+                id: 9,
+                reply: Box::new(etx.clone()),
+            })
+            .unwrap();
+            let snap = loop {
+                if let ServeEvent::Stats { snapshot, .. } = erx.recv().unwrap() {
+                    break snapshot;
+                }
+            };
+            assert_eq!(snap.restore_samples, 1, "one cold restore happened");
+            assert!(snap.restore_us_p50 > 0.0);
+            assert_eq!(
+                snap.parked_cold_sessions, 0,
+                "restore takes the snapshot out of the cold tier"
+            );
+            drop(tx);
+        });
+
+        coordinator.run(rx);
+        // Nothing leaked: the spilled-then-restored session's blocks all
+        // went back to the pool when the keep=false turn retired.
+        let stats = coordinator.pool().stats();
+        assert_eq!(stats.outstanding_blocks, 0, "{stats:?}");
+        driver.join().unwrap();
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    /// Host-bytes pressure demotes to cold instead of dropping: the hot
+    /// registry's footprint reads ~0 in `stats` while the snapshot bytes
+    /// show up under the cold-tier counters.
+    #[test]
+    fn pressure_spill_zeroes_hot_registry_bytes_in_stats() {
+        let root = tmp_cold_root("pressure");
+        let engine = StubEngine::new(StubEngine::test_dims(32));
+        let (tx, rx) = mpsc::channel::<Op>();
+        let cfg = CoordinatorConfig {
+            max_session_bytes: 0,
+            cold_dir: Some(root.clone()),
+            ..CoordinatorConfig::default()
+        };
+        let coordinator = Coordinator::new(engine, cfg);
+
+        let driver = std::thread::spawn(move || {
+            let (etx, erx) = mpsc::channel::<ServeEvent>();
+            tx.send(Op::Submit(Request {
+                id: 1,
+                prompt: vec![1, 2],
+                max_new: 2,
+                stop: None,
+                spec: CompressionSpec::mikv(0.5, "int4"),
+                session: None,
+                keep: true,
+                submitted_at: Instant::now(),
+                reply: Box::new(etx.clone()),
+            }))
+            .unwrap();
+            let turn1 = loop {
+                if let ServeEvent::Done(r) = erx.recv().unwrap() {
+                    break r;
+                }
+            };
+            let sid = turn1.session.expect("parked momentarily");
+            assert!(turn1.metrics.host_bytes > 0);
+
+            tx.send(Op::Stats {
+                id: 8,
+                reply: Box::new(etx.clone()),
+            })
+            .unwrap();
+            let snap = loop {
+                if let ServeEvent::Stats { snapshot, .. } = erx.recv().unwrap() {
+                    break snapshot;
+                }
+            };
+            assert_eq!(snap.parked_sessions, 0, "hot registry drained");
+            assert_eq!(snap.parked_bytes, 0, "spilled session pins no host bytes");
+            assert_eq!(snap.parked_cold_sessions, 1);
+            assert!(snap.cold_bytes > 0, "snapshot accounted on disk");
+            assert_eq!(snap.workers.len(), 1);
+            assert_eq!(snap.workers[0].parked_cold_sessions, 1);
+
+            // ... and the session is still appendable from disk.
+            tx.send(Op::Submit(Request {
+                id: 2,
+                prompt: vec![3],
+                max_new: 1,
+                stop: None,
+                spec: CompressionSpec::full(),
+                session: Some(sid),
+                keep: false,
+                submitted_at: Instant::now(),
+                reply: Box::new(etx.clone()),
+            }))
+            .unwrap();
+            let turn2 = loop {
+                if let ServeEvent::Done(r) = erx.recv().unwrap() {
+                    break r;
+                }
+            };
+            assert!(turn2.error.is_none(), "{:?}", turn2.error);
+            drop(tx);
+        });
+
+        coordinator.run(rx);
+        driver.join().unwrap();
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    /// A corrupted on-disk snapshot is a cleanly lost session: the append
+    /// gets `session_not_found` (the codec rejected the frame), never a
+    /// panic or a poisoned cache.
+    #[test]
+    fn corrupt_cold_snapshot_yields_session_not_found() {
+        let root = tmp_cold_root("corrupt");
+        let engine = StubEngine::new(StubEngine::test_dims(32));
+        let (tx, rx) = mpsc::channel::<Op>();
+        let cfg = CoordinatorConfig {
+            session_ttl: Duration::ZERO,
+            cold_dir: Some(root.clone()),
+            ..CoordinatorConfig::default()
+        };
+        let coordinator = Coordinator::new(engine, cfg);
+
+        let root2 = root.clone();
+        let driver = std::thread::spawn(move || {
+            let (etx, erx) = mpsc::channel::<ServeEvent>();
+            tx.send(Op::Submit(Request {
+                id: 1,
+                prompt: vec![1, 2, 3],
+                max_new: 2,
+                stop: None,
+                spec: CompressionSpec::mikv(0.5, "int4"),
+                session: None,
+                keep: true,
+                submitted_at: Instant::now(),
+                reply: Box::new(etx.clone()),
+            }))
+            .unwrap();
+            let turn1 = loop {
+                if let ServeEvent::Done(r) = erx.recv().unwrap() {
+                    break r;
+                }
+            };
+            let sid = turn1.session.expect("kept");
+
+            // The spill runs on the sweep right after retirement; wait for
+            // the snapshot file, then clobber it.
+            let snap_path = root2.join("worker-0").join(format!("{sid}.snap"));
+            let deadline = Instant::now() + Duration::from_secs(10);
+            while !snap_path.exists() && Instant::now() < deadline {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            assert!(snap_path.exists(), "session never spilled");
+            std::fs::write(&snap_path, b"not a snapshot").unwrap();
+
+            tx.send(Op::Submit(Request {
+                id: 2,
+                prompt: vec![4],
+                max_new: 1,
+                stop: None,
+                spec: CompressionSpec::full(),
+                session: Some(sid),
+                keep: false,
+                submitted_at: Instant::now(),
+                reply: Box::new(etx.clone()),
+            }))
+            .unwrap();
+            let turn2 = loop {
+                if let ServeEvent::Done(r) = erx.recv().unwrap() {
+                    break r;
+                }
+            };
+            let err = turn2.error.expect("corrupt snapshot must fail the append");
+            assert_eq!(err.code, ErrorCode::SessionNotFound);
+            drop(tx);
+        });
+
+        coordinator.run(rx);
+        let stats = coordinator.pool().stats();
+        assert_eq!(stats.outstanding_blocks, 0, "{stats:?}");
+        driver.join().unwrap();
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    /// `compression.spill=false` opts a kept session out of the cold tier:
+    /// eviction drops it (the pre-cold-tier contract) and no snapshot file
+    /// is ever written, so its KV state never touches disk.
+    #[test]
+    fn spill_opt_out_drops_instead_of_spilling() {
+        let root = tmp_cold_root("opt-out");
+        let engine = StubEngine::new(StubEngine::test_dims(32));
+        let (tx, rx) = mpsc::channel::<Op>();
+        let cfg = CoordinatorConfig {
+            session_ttl: Duration::ZERO,
+            cold_dir: Some(root.clone()),
+            ..CoordinatorConfig::default()
+        };
+        let coordinator = Coordinator::new(engine, cfg);
+
+        let root2 = root.clone();
+        let driver = std::thread::spawn(move || {
+            let (etx, erx) = mpsc::channel::<ServeEvent>();
+            tx.send(Op::Submit(Request {
+                id: 1,
+                prompt: vec![1, 2, 3],
+                max_new: 2,
+                stop: None,
+                spec: CompressionSpec::mikv(0.5, "int4").no_spill(),
+                session: None,
+                keep: true,
+                submitted_at: Instant::now(),
+                reply: Box::new(etx.clone()),
+            }))
+            .unwrap();
+            let turn1 = loop {
+                if let ServeEvent::Done(r) = erx.recv().unwrap() {
+                    break r;
+                }
+            };
+            assert!(turn1.error.is_none(), "{:?}", turn1.error);
+            let sid = turn1.session.expect("kept");
+
+            // Force a sweep (and prove the session is gone) by appending:
+            // the zero TTL evicted it, and the opt-out means it was
+            // dropped rather than demoted, so the append cannot restore.
+            tx.send(Op::Submit(Request {
+                id: 2,
+                prompt: vec![4],
+                max_new: 1,
+                stop: None,
+                spec: CompressionSpec::full(),
+                session: Some(sid),
+                keep: false,
+                submitted_at: Instant::now(),
+                reply: Box::new(etx.clone()),
+            }))
+            .unwrap();
+            let turn2 = loop {
+                if let ServeEvent::Done(r) = erx.recv().unwrap() {
+                    break r;
+                }
+            };
+            let err = turn2.error.expect("dropped session must not restore");
+            assert_eq!(err.code, ErrorCode::SessionNotFound);
+            assert!(
+                !root2.join("worker-0").join(format!("{sid}.snap")).exists(),
+                "opted-out session must never be written to disk"
+            );
+            drop(tx);
+        });
+
+        coordinator.run(rx);
+        let stats = coordinator.pool().stats();
+        assert_eq!(stats.outstanding_blocks, 0, "{stats:?}");
+        driver.join().unwrap();
+        let _ = std::fs::remove_dir_all(&root);
     }
 }

@@ -1,0 +1,264 @@
+//! The cold tier's on-disk store: a capacity-bounded directory of
+//! per-session snapshot files.
+//!
+//! Each worker owns one [`ColdStore`] rooted at `<dir>/worker-<id>/` —
+//! workers assign session ids from disjoint strides
+//! ([`super::scheduler::worker_of_session`]), so a per-worker namespace
+//! never sees another worker's files and needs no cross-thread locking.
+//! Files are written atomically (write to `<sid>.snap.tmp`, then rename to
+//! `<sid>.snap`), so a crash mid-spill leaves either the old snapshot or
+//! none — never a torn frame (and torn frames would still be caught by the
+//! codec checksum, see [`crate::kvcache::spill`]).
+//!
+//! The store is bounded by `max_bytes`: when a new snapshot would push the
+//! running total past the bound, the **oldest** spilled sessions (by spill
+//! order) are evicted until it fits — cold eviction is the real context
+//! loss the paper warns against, so it is counted and surfaced in `stats`.
+//! Session ids restart at every process launch, so snapshots from a
+//! previous run could alias fresh ids; [`ColdStore::open`] therefore
+//! removes every leftover file in its namespace (orphan GC) before
+//! serving.
+
+use std::collections::HashMap;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+struct ColdEntry {
+    bytes: u64,
+    /// Monotone spill order — the eviction clock.
+    seq: u64,
+}
+
+/// Capacity-bounded directory of spilled session snapshots (one worker's
+/// cold-tier namespace).
+pub struct ColdStore {
+    dir: PathBuf,
+    /// Byte bound on the directory (0 = unbounded).
+    max_bytes: u64,
+    total_bytes: u64,
+    entries: HashMap<u64, ColdEntry>,
+    seq: u64,
+    evictions: u64,
+    orphans_removed: u64,
+}
+
+impl ColdStore {
+    /// Open (creating if needed) the worker's namespace under `root` and
+    /// GC any leftover snapshot files from a previous run.
+    pub fn open(root: &Path, worker_id: usize, max_bytes: u64) -> io::Result<ColdStore> {
+        let dir = root.join(format!("worker-{worker_id}"));
+        fs::create_dir_all(&dir)?;
+        let mut orphans_removed = 0u64;
+        for entry in fs::read_dir(&dir)? {
+            let entry = entry?;
+            if entry.file_type()?.is_file() {
+                fs::remove_file(entry.path())?;
+                orphans_removed += 1;
+            }
+        }
+        Ok(ColdStore {
+            dir,
+            max_bytes,
+            total_bytes: 0,
+            entries: HashMap::new(),
+            seq: 0,
+            evictions: 0,
+            orphans_removed,
+        })
+    }
+
+    fn path(&self, sid: u64) -> PathBuf {
+        self.dir.join(format!("{sid}.snap"))
+    }
+
+    /// Spill a session's snapshot frame. Evicts the oldest cold sessions
+    /// as needed to respect `max_bytes`; returns `Ok(false)` (nothing
+    /// stored) when the frame alone exceeds the bound.
+    pub fn put(&mut self, sid: u64, frame: &[u8]) -> io::Result<bool> {
+        let len = frame.len() as u64;
+        if self.max_bytes > 0 {
+            if len > self.max_bytes {
+                return Ok(false);
+            }
+            // Re-spilling an existing id replaces its bytes, so exclude
+            // them from the pressure calculation.
+            let replaced = self.entries.get(&sid).map(|e| e.bytes).unwrap_or(0);
+            while self.total_bytes - replaced + len > self.max_bytes {
+                let oldest = self
+                    .entries
+                    .iter()
+                    .filter(|(&k, _)| k != sid)
+                    .min_by_key(|(_, e)| e.seq)
+                    .map(|(&k, _)| k);
+                let Some(victim) = oldest else { break };
+                self.remove(victim)?;
+                self.evictions += 1;
+            }
+        }
+        let tmp = self.dir.join(format!("{sid}.snap.tmp"));
+        fs::write(&tmp, frame)?;
+        fs::rename(&tmp, self.path(sid))?;
+        if let Some(old) = self.entries.remove(&sid) {
+            self.total_bytes -= old.bytes;
+        }
+        self.seq += 1;
+        self.total_bytes += len;
+        self.entries.insert(
+            sid,
+            ColdEntry {
+                bytes: len,
+                seq: self.seq,
+            },
+        );
+        Ok(true)
+    }
+
+    /// Read and remove a session's snapshot. `Ok(None)` if the session is
+    /// not in the cold tier.
+    pub fn take(&mut self, sid: u64) -> io::Result<Option<Vec<u8>>> {
+        let Some(e) = self.entries.remove(&sid) else {
+            return Ok(None);
+        };
+        self.total_bytes -= e.bytes;
+        let p = self.path(sid);
+        let bytes = fs::read(&p)?;
+        fs::remove_file(&p)?;
+        Ok(Some(bytes))
+    }
+
+    /// Drop a session's snapshot without reading it. Returns whether it
+    /// existed.
+    pub fn remove(&mut self, sid: u64) -> io::Result<bool> {
+        let Some(e) = self.entries.remove(&sid) else {
+            return Ok(false);
+        };
+        self.total_bytes -= e.bytes;
+        fs::remove_file(self.path(sid))?;
+        Ok(true)
+    }
+
+    pub fn contains(&self, sid: u64) -> bool {
+        self.entries.contains_key(&sid)
+    }
+
+    /// Number of spilled sessions.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Bytes currently on disk across all snapshots.
+    pub fn bytes(&self) -> u64 {
+        self.total_bytes
+    }
+
+    /// Cold-tier evictions (capacity pressure) since open — each one is a
+    /// lost session context.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
+    }
+
+    /// Leftover files from previous runs removed at open.
+    pub fn orphans_removed(&self) -> u64 {
+        self.orphans_removed
+    }
+
+    /// The namespace directory.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    static TEST_SEQ: AtomicU64 = AtomicU64::new(0);
+
+    /// Unique per-test scratch root under the OS temp dir.
+    fn tmp_root(tag: &str) -> PathBuf {
+        let n = TEST_SEQ.fetch_add(1, Ordering::SeqCst);
+        let p = std::env::temp_dir().join(format!(
+            "mikv-cold-test-{}-{n}-{tag}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&p);
+        p
+    }
+
+    #[test]
+    fn put_take_round_trip_with_accounting() {
+        let root = tmp_root("roundtrip");
+        let mut c = ColdStore::open(&root, 0, 0).unwrap();
+        assert!(c.is_empty());
+        assert!(c.put(7, b"snapshot-seven").unwrap());
+        assert!(c.put(9, b"nine").unwrap());
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.bytes(), 14 + 4);
+        assert!(c.contains(7));
+        assert!(c.dir().join("7.snap").exists());
+        assert!(!c.dir().join("7.snap.tmp").exists(), "tmp renamed away");
+
+        assert_eq!(c.take(7).unwrap().as_deref(), Some(&b"snapshot-seven"[..]));
+        assert_eq!(c.bytes(), 4);
+        assert!(!c.contains(7));
+        assert!(!c.dir().join("7.snap").exists());
+        assert_eq!(c.take(7).unwrap(), None, "take is destructive");
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn replacing_a_snapshot_does_not_double_count() {
+        let root = tmp_root("replace");
+        let mut c = ColdStore::open(&root, 0, 0).unwrap();
+        assert!(c.put(1, &[0u8; 100]).unwrap());
+        assert!(c.put(1, &[0u8; 40]).unwrap());
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.bytes(), 40);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn capacity_bound_evicts_oldest_first() {
+        let root = tmp_root("bound");
+        let mut c = ColdStore::open(&root, 0, 100).unwrap();
+        assert!(c.put(1, &[0u8; 40]).unwrap());
+        assert!(c.put(2, &[0u8; 40]).unwrap());
+        // 40+40+40 > 100 → session 1 (oldest) is evicted
+        assert!(c.put(3, &[0u8; 40]).unwrap());
+        assert_eq!(c.evictions(), 1);
+        assert!(!c.contains(1));
+        assert!(c.contains(2) && c.contains(3));
+        assert_eq!(c.bytes(), 80);
+
+        // a frame larger than the whole bound is refused, nothing evicted
+        assert!(!c.put(4, &[0u8; 200]).unwrap());
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.evictions(), 1);
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    #[test]
+    fn open_gcs_orphans_and_namespaces_by_worker() {
+        let root = tmp_root("gc");
+        {
+            let mut a = ColdStore::open(&root, 0, 0).unwrap();
+            let mut b = ColdStore::open(&root, 1, 0).unwrap();
+            a.put(5, b"stale").unwrap();
+            b.put(5, b"other-worker").unwrap();
+        }
+        // same root, same worker id: the stale snapshot must be GC'd
+        let c = ColdStore::open(&root, 0, 0).unwrap();
+        assert_eq!(c.orphans_removed(), 1);
+        assert!(c.is_empty());
+        assert!(!c.dir().join("5.snap").exists());
+        // the other worker's namespace was untouched
+        assert!(root.join("worker-1").join("5.snap").exists());
+        let _ = fs::remove_dir_all(&root);
+    }
+}

@@ -27,11 +27,13 @@
 //! [`CompressionSpec`] and resolved to a cache mode only at admission.
 
 pub mod batcher;
+pub mod cold;
 pub mod request;
 pub mod scheduler;
 pub mod stats;
 
 pub use batcher::{Coordinator, CoordinatorConfig, StepEngine};
+pub use cold::ColdStore;
 pub use request::{
     CompressionSpec, ErrorCode, EventSink, Op, Reply, Request, RequestMetrics, Response,
     ServeEvent, WireError,

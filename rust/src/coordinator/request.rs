@@ -134,6 +134,12 @@ pub struct CompressionSpec {
     /// Opt-in lo→hi promotion on re-access (mikv mode only). Absent or
     /// `false` keeps the historical one-way tier lifecycle.
     pub promotion: Option<bool>,
+    /// Whether a kept session may be spilled to the on-disk cold tier when
+    /// it ages out of the parked registry. Absent or `true` allows the
+    /// spill (when the server has a cold tier configured);
+    /// `Some(false)` opts this session out — it is dropped on eviction
+    /// instead, so its KV state never touches disk.
+    pub spill: Option<bool>,
 }
 
 impl Default for CompressionSpec {
@@ -152,6 +158,7 @@ impl CompressionSpec {
             policy: None,
             k: None,
             promotion: None,
+            spill: None,
         }
     }
 
@@ -197,6 +204,15 @@ impl CompressionSpec {
     /// resolution rejects it elsewhere).
     pub fn promoted(mut self) -> CompressionSpec {
         self.promotion = Some(true);
+        self
+    }
+
+    /// Opt a kept session out of cold-tier spilling: on eviction from the
+    /// parked registry it is dropped (the pre-cold-tier behaviour) instead
+    /// of snapshotted to disk. A serving-lifecycle knob, orthogonal to the
+    /// cache mode — [`Self::resolve`] ignores it.
+    pub fn no_spill(mut self) -> CompressionSpec {
+        self.spill = Some(false);
         self
     }
 

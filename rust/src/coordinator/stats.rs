@@ -18,6 +18,11 @@ pub struct WorkerStats {
     pub waiting: usize,
     /// Sessions parked in this worker's registry.
     pub parked_sessions: usize,
+    /// Sessions spilled to this worker's cold tier (on-disk snapshots
+    /// awaiting `append`); 0 when the cold tier is not configured.
+    pub parked_cold_sessions: usize,
+    /// Bytes this worker's cold-tier snapshots occupy on disk.
+    pub cold_bytes: u64,
     /// Turns this worker completed.
     pub completed: usize,
     /// Tokens this worker generated.
@@ -31,6 +36,13 @@ pub struct WorkerStats {
     pub assembly_us_p99: f64,
     /// Assembly samples observed (may exceed the retained window).
     pub assembly_samples: u64,
+    /// p50 of cold→hot session restore time (µs) over the retained
+    /// window. 0 until a spilled session is appended to.
+    pub restore_us_p50: f64,
+    /// p99 of cold→hot session restore time (µs).
+    pub restore_us_p99: f64,
+    /// Cold-tier restores performed (lifetime; may exceed the window).
+    pub restore_samples: u64,
     /// lo→hi promotions across this worker's completed turns.
     pub promotions: u64,
     /// Hysteresis-suppressed promotions across completed turns.
@@ -51,6 +63,14 @@ pub struct StatsSnapshot {
     pub parked_sessions: usize,
     /// Host bytes the parked sessions pin.
     pub parked_bytes: usize,
+    /// Sessions spilled to the cold tier (on-disk snapshots awaiting
+    /// `append`, summed over workers); 0 without a configured cold tier.
+    pub parked_cold_sessions: usize,
+    /// Bytes the cold-tier snapshots occupy on disk (summed over workers).
+    pub cold_bytes: u64,
+    /// Spilled sessions evicted from the cold tier by its byte bound —
+    /// each one is a permanently lost session context.
+    pub cold_evictions: u64,
     /// Turns completed since the runtime started.
     pub completed: usize,
     /// Tokens generated since the runtime started.
@@ -71,6 +91,13 @@ pub struct StatsSnapshot {
     pub assembly_us_p99: f64,
     /// Decode-step assembly samples observed.
     pub assembly_samples: u64,
+    /// p50 of cold→hot session restore time (µs); merged with the same
+    /// window weighting as the assembly percentiles.
+    pub restore_us_p50: f64,
+    /// p99 of cold→hot session restore time (µs).
+    pub restore_us_p99: f64,
+    /// Cold-tier session restores performed.
+    pub restore_samples: u64,
     /// lo→hi promotions across completed turns (summed over workers; the
     /// tier lifecycle's demote-inverse — 0 unless sessions opt into
     /// `compression.promotion`).
@@ -94,11 +121,17 @@ impl StatsSnapshot {
         let mut weighted_a50 = 0.0f64;
         let mut weighted_a99 = 0.0f64;
         let mut assembly_windows = 0.0f64;
+        let mut weighted_r50 = 0.0f64;
+        let mut weighted_r99 = 0.0f64;
+        let mut restore_windows = 0.0f64;
         for part in parts {
             out.active += part.active;
             out.waiting += part.waiting;
             out.parked_sessions += part.parked_sessions;
             out.parked_bytes += part.parked_bytes;
+            out.parked_cold_sessions += part.parked_cold_sessions;
+            out.cold_bytes += part.cold_bytes;
+            out.cold_evictions += part.cold_evictions;
             out.completed += part.completed;
             out.generated_tokens += part.generated_tokens;
             out.throughput_tps += part.throughput_tps;
@@ -112,6 +145,11 @@ impl StatsSnapshot {
             weighted_a99 += part.assembly_us_p99 * window;
             assembly_windows += window;
             out.assembly_samples += part.assembly_samples;
+            let rwindow = part.restore_samples.min(RESTORE_WINDOW as u64) as f64;
+            weighted_r50 += part.restore_us_p50 * rwindow;
+            weighted_r99 += part.restore_us_p99 * rwindow;
+            restore_windows += rwindow;
+            out.restore_samples += part.restore_samples;
             out.promotions += part.promotions;
             out.thrash_suppressed += part.thrash_suppressed;
             out.pool.free_blocks += part.pool.free_blocks;
@@ -129,6 +167,10 @@ impl StatsSnapshot {
             out.assembly_us_p50 = weighted_a50 / assembly_windows;
             out.assembly_us_p99 = weighted_a99 / assembly_windows;
         }
+        if restore_windows > 0.0 {
+            out.restore_us_p50 = weighted_r50 / restore_windows;
+            out.restore_us_p99 = weighted_r99 / restore_windows;
+        }
         out.workers.sort_by_key(|w| w.worker);
         out
     }
@@ -138,6 +180,11 @@ impl StatsSnapshot {
 /// window (a ring: serving runs are long and steps are frequent, so the
 /// collector keeps a sliding window instead of growing without bound).
 const ASSEMBLY_WINDOW: usize = 4096;
+
+/// Samples of cold→hot session restore time retained for the percentile
+/// window. Restores are orders of magnitude rarer than decode steps, so a
+/// smaller ring suffices.
+const RESTORE_WINDOW: usize = 1024;
 
 /// Aggregates per-request metrics into the numbers the serving benches
 /// report: TTFT / latency percentiles and token throughput.
@@ -153,6 +200,10 @@ pub struct MetricsCollector {
     assembly: Vec<Duration>,
     assembly_pos: usize,
     assembly_total: u64,
+    /// Ring of the last [`RESTORE_WINDOW`] cold→hot restore times.
+    restore: Vec<Duration>,
+    restore_pos: usize,
+    restore_total: u64,
     promotions: u64,
     thrash_suppressed: u64,
 }
@@ -175,6 +226,9 @@ impl MetricsCollector {
             assembly: Vec::new(),
             assembly_pos: 0,
             assembly_total: 0,
+            restore: Vec::new(),
+            restore_pos: 0,
+            restore_total: 0,
             promotions: 0,
             thrash_suppressed: 0,
         }
@@ -213,6 +267,39 @@ impl MetricsCollector {
     /// Total assembly samples observed (may exceed the retained window).
     pub fn assembly_samples(&self) -> u64 {
         self.assembly_total
+    }
+
+    /// Record one cold→hot session restore's wall time (ring-buffered to
+    /// the last `RESTORE_WINDOW` samples).
+    pub fn record_restore(&mut self, d: Duration) {
+        self.restore_total += 1;
+        if self.restore.len() < RESTORE_WINDOW {
+            self.restore.push(d);
+        } else {
+            if let Some(slot) = self.restore.get_mut(self.restore_pos) {
+                *slot = d;
+            }
+            self.restore_pos = (self.restore_pos + 1) % RESTORE_WINDOW;
+        }
+    }
+
+    /// (p50, p99) of cold→hot restore time in µs over the retained
+    /// window; (0, 0) when no session was ever restored.
+    pub fn restore_us(&self) -> (f64, f64) {
+        if self.restore.is_empty() {
+            return (0.0, 0.0);
+        }
+        let mut v = self.restore.clone();
+        v.sort_unstable();
+        (
+            crate::bench::percentile(&v, 0.5).as_secs_f64() * 1e6,
+            crate::bench::percentile(&v, 0.99).as_secs_f64() * 1e6,
+        )
+    }
+
+    /// Total cold-tier restores observed (may exceed the retained window).
+    pub fn restore_samples(&self) -> u64 {
+        self.restore_total
     }
 
     pub fn record(&mut self, m: &RequestMetrics) {
@@ -477,5 +564,60 @@ mod tests {
         assert_eq!(m.completed, 0);
         assert_eq!(m.mean_host_bytes, 0.0);
         assert!(m.workers.is_empty());
+    }
+
+    #[test]
+    fn restore_ring_percentiles_and_window() {
+        let mut c = MetricsCollector::new();
+        assert_eq!(c.restore_us(), (0.0, 0.0));
+        for i in 1..=100u64 {
+            c.record_restore(Duration::from_micros(i));
+        }
+        let (p50, p99) = c.restore_us();
+        assert!((p50 - 50.5).abs() < 1e-6, "{p50}");
+        assert!((p99 - 99.01).abs() < 1e-6, "{p99}");
+        assert_eq!(c.restore_samples(), 100);
+
+        // the ring caps retained samples but keeps counting
+        for i in 0..(super::RESTORE_WINDOW as u64 + 25) {
+            c.record_restore(Duration::from_micros(3 + (i % 2)));
+        }
+        assert_eq!(c.restore.len(), super::RESTORE_WINDOW);
+        assert_eq!(c.restore_samples(), 100 + super::RESTORE_WINDOW as u64 + 25);
+        let (p50, _) = c.restore_us();
+        assert!((3.0..=5.0).contains(&p50), "window dominated by recents: {p50}");
+    }
+
+    #[test]
+    fn merge_sums_cold_counters_and_weights_restore_percentiles() {
+        let a = StatsSnapshot {
+            parked_cold_sessions: 2,
+            cold_bytes: 1000,
+            cold_evictions: 1,
+            restore_us_p50: 10.0,
+            restore_us_p99: 20.0,
+            restore_samples: 30,
+            ..StatsSnapshot::default()
+        };
+        let b = StatsSnapshot {
+            parked_cold_sessions: 1,
+            cold_bytes: 500,
+            cold_evictions: 0,
+            restore_us_p50: 40.0,
+            restore_us_p99: 80.0,
+            restore_samples: 10,
+            ..StatsSnapshot::default()
+        };
+        let m = StatsSnapshot::merged(vec![a, b]);
+        assert_eq!(m.parked_cold_sessions, 3);
+        assert_eq!(m.cold_bytes, 1500);
+        assert_eq!(m.cold_evictions, 1);
+        assert_eq!(m.restore_samples, 40);
+        // (10·30 + 40·10)/40 = 17.5 ; (20·30 + 80·10)/40 = 35
+        assert!((m.restore_us_p50 - 17.5).abs() < 1e-9);
+        assert!((m.restore_us_p99 - 35.0).abs() < 1e-9);
+        // a worker that never restored contributes no weight
+        let m2 = StatsSnapshot::merged(vec![StatsSnapshot::default()]);
+        assert_eq!(m2.restore_us_p50, 0.0);
     }
 }

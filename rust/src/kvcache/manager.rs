@@ -907,6 +907,179 @@ impl CacheManager {
         }
         Ok(())
     }
+
+    // ------------------------------------------------------------------
+    // Cold-tier snapshot (spill/restore)
+    // ------------------------------------------------------------------
+
+    /// Serialize this manager's tier state into a snapshot payload (see
+    /// [`super::spill`] for the frame format). The snapshot carries the
+    /// per-plane channel balancers, every live slot's placement/residency
+    /// plus its tier payload (hi: the storage-rounded K/V row; lo: the
+    /// packed quantization codes and per-group scale/zero metadata), the
+    /// residency clock, the promotion counters, and the importance
+    /// policy's opaque state blob — everything
+    /// [`Self::restore_with_pool`] needs to rebuild a bit-identical
+    /// manager. The shadow blocks are NOT serialized: they are derived
+    /// state, rebuilt on restore.
+    pub fn snapshot_into(&self, w: &mut super::spill::Writer) {
+        w.put_u64(self.seq_len as u64);
+        w.put_u32(self.step);
+        w.put_u64(self.promo.promotions);
+        w.put_u64(self.promo.thrash_suppressed);
+        for p in 0..self.planes {
+            w.put_f32_slice(&self.balancers[p].b);
+        }
+        for p in 0..self.planes {
+            for s in 0..self.seq_len {
+                let idx = p * self.cap + s;
+                let pl = self.placement[idx];
+                w.put_u8(match pl {
+                    Placement::Hi => 0,
+                    Placement::Lo => 1,
+                    Placement::Evicted => 2,
+                    Placement::Empty => 3,
+                });
+                w.put_u32(self.tier_since[idx]);
+                match pl {
+                    Placement::Hi => {
+                        w.put_f32_slice(self.hi[p].k_slot(s));
+                        w.put_f32_slice(self.hi[p].v_slot(s));
+                    }
+                    Placement::Lo => {
+                        w.put_u32_slice(self.lo[p].k_codes_slot(s));
+                        w.put_u32_slice(self.lo[p].v_codes_slot(s));
+                        let (ks, kz) = self.lo[p].k_meta_slot(s);
+                        w.put_f32_slice(ks);
+                        w.put_f32_slice(kz);
+                        let (vs, vz) = self.lo[p].v_meta_slot(s);
+                        w.put_f32_slice(vs);
+                        w.put_f32_slice(vz);
+                    }
+                    Placement::Evicted | Placement::Empty => {}
+                }
+            }
+        }
+        let mut blob = Vec::with_capacity(64);
+        self.policy.export_state(&mut blob);
+        w.put_bytes(&blob);
+    }
+
+    /// Rebuild a manager from a snapshot payload written by
+    /// [`Self::snapshot_into`], checking shadow blocks out of `pool`.
+    ///
+    /// The restored manager is bit-identical to the spilled one in every
+    /// input the decode graph and the tier state machine read: tier
+    /// contents, placement, residency clocks, balancers, shadow blocks,
+    /// policy state. The dirty tracker starts a fresh epoch (dirty-all),
+    /// so the first post-restore assembly is a full rescatter and every
+    /// subsequent delta step matches a never-spilled session. Hostile
+    /// payloads surface as structured [`SpillError`]s — every value is
+    /// validated and the result must pass [`Self::check_invariants`].
+    ///
+    /// [`SpillError`]: super::spill::SpillError
+    pub fn restore_with_pool(
+        cfg: CacheConfig,
+        policy: Box<dyn ImportancePolicy>,
+        pool: BufferPool,
+        r: &mut super::spill::Reader<'_>,
+    ) -> Result<CacheManager, super::spill::SpillError> {
+        use super::spill::SpillError;
+        let mut m = CacheManager::with_pool(cfg, policy, pool);
+        let seq_len = r.u64()? as usize;
+        if seq_len > m.s_max {
+            return Err(SpillError::Incompatible("snapshot seq_len exceeds max_seq"));
+        }
+        m.step = r.u32()?;
+        m.promo.promotions = r.u64()?;
+        m.promo.thrash_suppressed = r.u64()?;
+        // Sizes the blocks exactly as the live manager had them: capacity
+        // growth is monotone in seq_len, so round_cap(seq_len) is the cap
+        // the spilled manager ended at.
+        m.ensure_capacity(seq_len);
+        for p in 0..m.planes {
+            r.f32_into(&mut m.balancers[p].b)?;
+            if m.balancers[p].b.iter().any(|x| !x.is_finite() || *x <= 0.0) {
+                return Err(SpillError::Malformed("non-positive balancer"));
+            }
+        }
+        for p in 0..m.planes {
+            for i in 0..m.d {
+                // same computation as Balancer::inverse — bit-identical to
+                // the spilled manager's shadow
+                m.inv_balancer[p * m.d + i] = 1.0 / m.balancers[p].b[i];
+            }
+        }
+
+        let words = m.lo.first().map(LoTier::words).unwrap_or(0);
+        let mut kbuf = vec![0.0f32; m.d];
+        let mut vbuf = vec![0.0f32; m.d];
+        let mut kc = vec![0u32; words];
+        let mut vc = vec![0u32; words];
+        let mut ks = vec![0.0f32; m.groups];
+        let mut kz = vec![0.0f32; m.groups];
+        let mut vs = vec![0.0f32; m.groups];
+        let mut vz = vec![0.0f32; m.groups];
+        for p in 0..m.planes {
+            for s in 0..seq_len {
+                let idx = p * m.cap + s;
+                let tag = r.u8()?;
+                m.tier_since[idx] = r.u32()?;
+                match tag {
+                    0 => {
+                        r.f32_into(&mut kbuf)?;
+                        r.f32_into(&mut vbuf)?;
+                        if kbuf.iter().chain(vbuf.iter()).any(|x| !x.is_finite()) {
+                            return Err(SpillError::Malformed("non-finite hi values"));
+                        }
+                        // Raw writes: the spilled values are already
+                        // storage-rounded; re-admitting would double-round.
+                        m.hi[p].set_slot_raw(s, &kbuf, &vbuf);
+                        let off = idx * m.d;
+                        m.k_hi_buf[off..off + m.d].copy_from_slice(&kbuf);
+                        m.v_hi_buf[off..off + m.d].copy_from_slice(&vbuf);
+                        m.hi_mask[idx] = 1.0;
+                        m.hi_count[p] += 1;
+                        m.placement[idx] = Placement::Hi;
+                    }
+                    1 => {
+                        r.u32_into(&mut kc)?;
+                        r.u32_into(&mut vc)?;
+                        r.f32_into(&mut ks)?;
+                        r.f32_into(&mut kz)?;
+                        r.f32_into(&mut vs)?;
+                        r.f32_into(&mut vz)?;
+                        if ks
+                            .iter()
+                            .chain(kz.iter())
+                            .chain(vs.iter())
+                            .chain(vz.iter())
+                            .any(|x| !x.is_finite())
+                        {
+                            return Err(SpillError::Malformed("non-finite lo metadata"));
+                        }
+                        m.lo[p].set_slot_raw(s, &kc, &vc, &ks, &kz, &vs, &vz);
+                        m.refresh_lo_shadow(p, s);
+                        m.lo_mask[idx] = 1.0;
+                        m.placement[idx] = Placement::Lo;
+                    }
+                    2 => m.placement[idx] = Placement::Evicted,
+                    _ => return Err(SpillError::Malformed("placement tag")),
+                }
+            }
+        }
+        m.seq_len = seq_len;
+        let blob = r.bytes()?;
+        if !m.policy.import_state(blob) {
+            return Err(SpillError::Malformed("policy state"));
+        }
+        // Restore contract: no engine lane holds this session's rows —
+        // the first post-restore assembly must be a full rescatter.
+        m.dirty.mark_all();
+        m.check_invariants()
+            .map_err(|_| SpillError::Malformed("tier invariants"))?;
+        Ok(m)
+    }
 }
 
 #[cfg(test)]

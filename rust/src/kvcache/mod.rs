@@ -31,12 +31,14 @@ pub mod accounting;
 pub mod dirty;
 pub mod manager;
 pub mod pool;
+pub mod spill;
 pub mod tier;
 
 pub use accounting::HostFootprint;
 pub use dirty::{DirtyTake, DirtyTracker};
 pub use manager::{CacheManager, PromotionStats, StepOutputs};
 pub use pool::{BufferPool, PoolStats, PooledBuf};
+pub use spill::{SpillError, SpillResult};
 
 use crate::quant::Precision;
 

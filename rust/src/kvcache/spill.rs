@@ -1,0 +1,1128 @@
+//! Versioned, checksummed snapshot codec for parked sessions (the cold
+//! tier's wire format).
+//!
+//! A spilled session is one self-contained binary frame:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic  "MKVS"
+//! 4       4     format version (u32 le)
+//! 8       8     payload length (u64 le)
+//! 16      8     FNV-1a 64 checksum of the payload (u64 le)
+//! 24      n     payload
+//! ```
+//!
+//! The payload serializes the session header (id, token history, prompt
+//! length, mode tag), the cache configuration, and the cache body: for a
+//! MiKV session the per-plane channel balancers plus each live slot's
+//! placement, residency clock, and tier payload (hi: storage-rounded K/V
+//! rows; lo: packed quantization codes + per-group scale/zero metadata),
+//! followed by the importance policy's opaque state blob; for the
+//! Full/Oracle baselines the dense K/V prefix. Restore rebuilds a pooled
+//! [`CacheManager`] (or [`FullCache`]) bit-identical to the spilled one —
+//! see `ARCHITECTURE.md` §Cold tier for the restore contract.
+//!
+//! Decoding is hardened against hostile bytes: every read is bounds-
+//! checked, every enum tag and float validated, and the restored manager
+//! must pass `check_invariants` before it is handed back. Corruption
+//! surfaces as a structured [`SpillError`], never a panic — this module is
+//! inside the `panic-free-serving` and `hot-path-alloc-free` lint scopes.
+
+use super::manager::CacheManager;
+use super::pool::BufferPool;
+use super::{CacheConfig, PromotionConfig, RetentionMode, TierConfig};
+use crate::model::session::{CacheMode, FullCache, Session, SessionCache};
+use crate::policies::make_policy;
+use crate::quant::Precision;
+use crate::runtime::ModelDims;
+
+/// Frame magic: "MKVS" (MiKV Snapshot).
+pub const MAGIC: [u8; 4] = *b"MKVS";
+/// Current snapshot format version. Bump on any layout change; decoders
+/// reject other versions with [`SpillError::UnsupportedVersion`].
+pub const VERSION: u32 = 1;
+/// Frame header length in bytes (magic + version + payload len + checksum).
+pub const HEADER_LEN: usize = 24;
+
+/// FNV-1a 64 over a byte slice — the frame checksum. Not cryptographic;
+/// it guards against truncation, bit rot and torn writes, which is what a
+/// local spill directory actually faces.
+pub fn checksum(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Structured decode failure. Every hostile input maps onto one of these;
+/// the decoder never panics.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SpillError {
+    /// The input ended before a required field.
+    Truncated { needed: usize, have: usize },
+    /// The frame does not start with [`MAGIC`].
+    BadMagic,
+    /// The frame's format version is not [`VERSION`].
+    UnsupportedVersion(u32),
+    /// The payload checksum does not match the header.
+    ChecksumMismatch,
+    /// A field decoded but its value is structurally invalid (bad enum
+    /// tag, non-finite float, inconsistent lengths, ...).
+    Malformed(&'static str),
+    /// The snapshot is well-formed but does not fit this worker's model
+    /// (mismatched dims or an over-long sequence).
+    Incompatible(&'static str),
+}
+
+impl std::fmt::Display for SpillError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SpillError::Truncated { needed, have } => {
+                write!(f, "snapshot truncated: needed {needed} bytes, have {have}")
+            }
+            SpillError::BadMagic => write!(f, "not a snapshot (bad magic)"),
+            SpillError::UnsupportedVersion(v) => {
+                write!(f, "unsupported snapshot version {v}")
+            }
+            SpillError::ChecksumMismatch => write!(f, "snapshot checksum mismatch"),
+            SpillError::Malformed(what) => write!(f, "malformed snapshot: {what}"),
+            SpillError::Incompatible(what) => write!(f, "incompatible snapshot: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for SpillError {}
+
+pub type SpillResult<T> = Result<T, SpillError>;
+
+// ----------------------------------------------------------------------
+// Writer
+// ----------------------------------------------------------------------
+
+/// Little-endian payload writer. Finish with [`Writer::into_frame`] to get
+/// the headered, checksummed byte frame.
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn with_capacity(n: usize) -> Self {
+        Self {
+            buf: Vec::with_capacity(n),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f32_slice(&mut self, xs: &[f32]) {
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    pub fn put_u32_slice(&mut self, xs: &[u32]) {
+        for &x in xs {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// Length-prefixed (u64) raw bytes.
+    pub fn put_bytes(&mut self, bytes: &[u8]) {
+        self.put_u64(bytes.len() as u64);
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn put_str(&mut self, s: &str) {
+        self.put_bytes(s.as_bytes());
+    }
+
+    /// Seal the payload into a headered, checksummed frame.
+    pub fn into_frame(self) -> Vec<u8> {
+        let sum = checksum(&self.buf);
+        let mut out = Vec::with_capacity(self.buf.len() + HEADER_LEN);
+        out.extend_from_slice(MAGIC.as_slice());
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.buf.len() as u64).to_le_bytes());
+        out.extend_from_slice(&sum.to_le_bytes());
+        out.extend_from_slice(&self.buf);
+        out
+    }
+}
+
+// ----------------------------------------------------------------------
+// Reader
+// ----------------------------------------------------------------------
+
+/// Bounds-checked little-endian payload reader over a validated frame's
+/// payload (see [`open_frame`]).
+pub struct Reader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    /// Bytes left to read.
+    pub fn remaining(&self) -> usize {
+        self.bytes.len().saturating_sub(self.pos)
+    }
+
+    /// Error unless the payload was consumed exactly.
+    pub fn finish(&self) -> SpillResult<()> {
+        if self.remaining() != 0 {
+            return Err(SpillError::Malformed("trailing payload bytes"));
+        }
+        Ok(())
+    }
+
+    fn take(&mut self, n: usize) -> SpillResult<&'a [u8]> {
+        let end = self
+            .pos
+            .checked_add(n)
+            .ok_or(SpillError::Malformed("length overflow"))?;
+        let have = self.remaining();
+        let s = self
+            .bytes
+            .get(self.pos..end)
+            .ok_or(SpillError::Truncated { needed: n, have })?;
+        self.pos = end;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> SpillResult<u8> {
+        let s = self.take(1)?;
+        s.first().copied().ok_or(SpillError::Truncated { needed: 1, have: 0 })
+    }
+
+    pub fn u32(&mut self) -> SpillResult<u32> {
+        let s = self.take(4)?;
+        let mut a = [0u8; 4];
+        a.copy_from_slice(s);
+        Ok(u32::from_le_bytes(a))
+    }
+
+    pub fn u64(&mut self) -> SpillResult<u64> {
+        let s = self.take(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(s);
+        Ok(u64::from_le_bytes(a))
+    }
+
+    pub fn i64(&mut self) -> SpillResult<i64> {
+        Ok(self.u64()? as i64)
+    }
+
+    pub fn f32(&mut self) -> SpillResult<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn f64(&mut self) -> SpillResult<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Fill `out` exactly from the stream (allocation-free bulk read).
+    pub fn f32_into(&mut self, out: &mut [f32]) -> SpillResult<()> {
+        let n = out
+            .len()
+            .checked_mul(4)
+            .ok_or(SpillError::Malformed("length overflow"))?;
+        let s = self.take(n)?;
+        for (dst, chunk) in out.iter_mut().zip(s.chunks_exact(4)) {
+            let mut a = [0u8; 4];
+            a.copy_from_slice(chunk);
+            *dst = f32::from_le_bytes(a);
+        }
+        Ok(())
+    }
+
+    /// Fill `out` exactly from the stream (allocation-free bulk read).
+    pub fn u32_into(&mut self, out: &mut [u32]) -> SpillResult<()> {
+        let n = out
+            .len()
+            .checked_mul(4)
+            .ok_or(SpillError::Malformed("length overflow"))?;
+        let s = self.take(n)?;
+        for (dst, chunk) in out.iter_mut().zip(s.chunks_exact(4)) {
+            let mut a = [0u8; 4];
+            a.copy_from_slice(chunk);
+            *dst = u32::from_le_bytes(a);
+        }
+        Ok(())
+    }
+
+    /// Length-prefixed raw bytes (length validated against the remainder
+    /// before any allocation or copy can happen downstream).
+    pub fn bytes(&mut self) -> SpillResult<&'a [u8]> {
+        let n = self.u64()?;
+        let have = self.remaining();
+        if n > have as u64 {
+            return Err(SpillError::Truncated { needed: n as usize, have });
+        }
+        self.take(n as usize)
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn take_str(&mut self) -> SpillResult<&'a str> {
+        std::str::from_utf8(self.bytes()?).map_err(|_| SpillError::Malformed("invalid utf-8"))
+    }
+}
+
+/// Validate a frame (magic, version, length, checksum) and return a reader
+/// over its payload.
+pub fn open_frame(bytes: &[u8]) -> SpillResult<Reader<'_>> {
+    let mut r = Reader { bytes, pos: 0 };
+    let magic = r.take(4)?;
+    if magic != MAGIC.as_slice() {
+        return Err(SpillError::BadMagic);
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        return Err(SpillError::UnsupportedVersion(version));
+    }
+    let len = r.u64()?;
+    let sum = r.u64()?;
+    let have = r.remaining();
+    if len > have as u64 {
+        return Err(SpillError::Truncated { needed: len as usize, have });
+    }
+    let payload = r.take(len as usize)?;
+    if r.remaining() != 0 {
+        return Err(SpillError::Malformed("trailing bytes after frame"));
+    }
+    if checksum(payload) != sum {
+        return Err(SpillError::ChecksumMismatch);
+    }
+    Ok(Reader { bytes: payload, pos: 0 })
+}
+
+// ----------------------------------------------------------------------
+// Config codecs
+// ----------------------------------------------------------------------
+
+fn precision_tag(p: Precision) -> u8 {
+    match p {
+        Precision::Fp16 => 0,
+        Precision::Int8 => 1,
+        Precision::Int4 => 2,
+        Precision::Int3 => 3,
+        Precision::Int2 => 4,
+    }
+}
+
+fn precision_from(tag: u8) -> SpillResult<Precision> {
+    match tag {
+        0 => Ok(Precision::Fp16),
+        1 => Ok(Precision::Int8),
+        2 => Ok(Precision::Int4),
+        3 => Ok(Precision::Int3),
+        4 => Ok(Precision::Int2),
+        _ => Err(SpillError::Malformed("precision tag")),
+    }
+}
+
+fn put_tier(w: &mut Writer, t: &TierConfig) {
+    w.put_u8(precision_tag(t.precision));
+    w.put_u64(t.group as u64);
+}
+
+fn read_tier(r: &mut Reader<'_>, head_dim: usize) -> SpillResult<TierConfig> {
+    let precision = precision_from(r.u8()?)?;
+    let group = r.u64()? as usize;
+    if precision.is_quantized() && (group == 0 || group > head_dim || head_dim % group != 0) {
+        return Err(SpillError::Malformed("tier group does not divide head_dim"));
+    }
+    Ok(TierConfig { precision, group })
+}
+
+fn put_cache_config(w: &mut Writer, c: &CacheConfig) {
+    w.put_u64(c.layers as u64);
+    w.put_u64(c.kv_heads as u64);
+    w.put_u64(c.head_dim as u64);
+    w.put_u64(c.max_seq as u64);
+    put_tier(w, &c.hi);
+    put_tier(w, &c.lo);
+    w.put_f64(c.importance_ratio);
+    w.put_u64(c.recent_window as u64);
+    w.put_u8(match c.retention {
+        RetentionMode::Retain => 0,
+        RetentionMode::Evict => 1,
+    });
+    w.put_u8(c.outlier_aware as u8);
+    match c.promotion {
+        None => w.put_u8(0),
+        Some(p) => {
+            w.put_u8(1);
+            w.put_u64(p.max_per_step as u64);
+            w.put_u64(p.min_residency as u64);
+            w.put_f32(p.promote_margin);
+        }
+    }
+}
+
+fn read_cache_config(r: &mut Reader<'_>) -> SpillResult<CacheConfig> {
+    let layers = r.u64()? as usize;
+    let kv_heads = r.u64()? as usize;
+    let head_dim = r.u64()? as usize;
+    let max_seq = r.u64()? as usize;
+    if layers == 0 || kv_heads == 0 || head_dim == 0 || max_seq == 0 {
+        return Err(SpillError::Malformed("zero cache dimension"));
+    }
+    let hi = read_tier(r, head_dim)?;
+    let lo = read_tier(r, head_dim)?;
+    if !lo.precision.is_quantized() {
+        return Err(SpillError::Malformed("lo tier must be quantized"));
+    }
+    let importance_ratio = r.f64()?;
+    if !importance_ratio.is_finite() || importance_ratio < 0.0 {
+        return Err(SpillError::Malformed("importance ratio"));
+    }
+    let recent_window = r.u64()? as usize;
+    let retention = match r.u8()? {
+        0 => RetentionMode::Retain,
+        1 => RetentionMode::Evict,
+        _ => return Err(SpillError::Malformed("retention tag")),
+    };
+    let outlier_aware = match r.u8()? {
+        0 => false,
+        1 => true,
+        _ => return Err(SpillError::Malformed("outlier flag")),
+    };
+    let promotion = match r.u8()? {
+        0 => None,
+        1 => {
+            let max_per_step = r.u64()? as usize;
+            let min_residency = r.u64()? as usize;
+            let promote_margin = r.f32()?;
+            if !promote_margin.is_finite() {
+                return Err(SpillError::Malformed("promote margin"));
+            }
+            Some(PromotionConfig {
+                max_per_step,
+                min_residency,
+                promote_margin,
+            })
+        }
+        _ => return Err(SpillError::Malformed("promotion flag")),
+    };
+    Ok(CacheConfig {
+        layers,
+        kv_heads,
+        head_dim,
+        max_seq,
+        hi,
+        lo,
+        importance_ratio,
+        recent_window,
+        retention,
+        outlier_aware,
+        promotion,
+    })
+}
+
+// ----------------------------------------------------------------------
+// Full-cache body
+// ----------------------------------------------------------------------
+
+fn put_full_cache(w: &mut Writer, f: &FullCache) -> SpillResult<()> {
+    let (planes, d, s_max, t) = (f.planes(), f.head_dim(), f.max_seq(), f.seq_len);
+    w.put_u64(planes as u64);
+    w.put_u64(d as u64);
+    w.put_u64(s_max as u64);
+    w.put_u64(t as u64);
+    // Only the live `0..t` prefix of each plane is serialized; the mask is
+    // derivable (live prefix = 1.0) and not stored.
+    for p in 0..planes {
+        let start = p * s_max * d;
+        let row = f
+            .k
+            .get(start..start + t * d)
+            .ok_or(SpillError::Malformed("full cache layout"))?;
+        w.put_f32_slice(row);
+    }
+    for p in 0..planes {
+        let start = p * s_max * d;
+        let row = f
+            .v
+            .get(start..start + t * d)
+            .ok_or(SpillError::Malformed("full cache layout"))?;
+        w.put_f32_slice(row);
+    }
+    Ok(())
+}
+
+fn read_full_cache(r: &mut Reader<'_>, dims: &ModelDims) -> SpillResult<FullCache> {
+    let mut f = FullCache::new(dims);
+    let planes = r.u64()? as usize;
+    let d = r.u64()? as usize;
+    let s_max = r.u64()? as usize;
+    let t = r.u64()? as usize;
+    if planes != f.planes() || d != f.head_dim() || s_max != f.max_seq() {
+        return Err(SpillError::Incompatible("full cache does not match model dims"));
+    }
+    if t > s_max {
+        return Err(SpillError::Incompatible("seq_len exceeds max_seq"));
+    }
+    for p in 0..planes {
+        let start = p * s_max * d;
+        let row = f
+            .k
+            .get_mut(start..start + t * d)
+            .ok_or(SpillError::Malformed("full cache layout"))?;
+        r.f32_into(row)?;
+        if row.iter().any(|x| !x.is_finite()) {
+            return Err(SpillError::Malformed("non-finite cache values"));
+        }
+    }
+    for p in 0..planes {
+        let start = p * s_max * d;
+        let row = f
+            .v
+            .get_mut(start..start + t * d)
+            .ok_or(SpillError::Malformed("full cache layout"))?;
+        r.f32_into(row)?;
+        if row.iter().any(|x| !x.is_finite()) {
+            return Err(SpillError::Malformed("non-finite cache values"));
+        }
+    }
+    for p in 0..planes {
+        let m = f
+            .mask
+            .get_mut(p * s_max..p * s_max + t)
+            .ok_or(SpillError::Malformed("full cache layout"))?;
+        m.fill(1.0);
+    }
+    f.seq_len = t;
+    // Restore contract: no engine lane can hold this cache's rows, so the
+    // first post-restore assembly must be a full rescatter.
+    f.mark_all_dirty();
+    Ok(f)
+}
+
+// ----------------------------------------------------------------------
+// Session codec
+// ----------------------------------------------------------------------
+
+/// Serialize a session into a checksummed snapshot frame.
+pub fn encode_session(sess: &Session) -> SpillResult<Vec<u8>> {
+    let mut w = Writer::with_capacity(
+        sess.cache.host_bytes() / 2 + sess.tokens.len() * 8 + 256,
+    );
+    w.put_u64(sess.id);
+    w.put_u64(sess.tokens.len() as u64);
+    for &t in &sess.tokens {
+        w.put_i64(t);
+    }
+    w.put_u64(sess.prompt_len as u64);
+    w.put_i64(sess.last_token);
+    w.put_u8(sess.done as u8);
+    match (&sess.mode, &sess.cache) {
+        (CacheMode::Mikv { policy, .. }, SessionCache::Mikv(m)) => {
+            w.put_u8(0);
+            w.put_str(policy);
+            put_cache_config(&mut w, m.config());
+            m.snapshot_into(&mut w);
+        }
+        (CacheMode::Full, SessionCache::Full(f)) => {
+            w.put_u8(1);
+            put_full_cache(&mut w, f)?;
+        }
+        (CacheMode::Oracle { k }, SessionCache::Full(f)) => {
+            w.put_u8(2);
+            w.put_u64(*k as u64);
+            put_full_cache(&mut w, f)?;
+        }
+        _ => return Err(SpillError::Malformed("session mode/cache mismatch")),
+    }
+    Ok(w.into_frame())
+}
+
+/// Decode a snapshot frame back into a live session whose cache blocks are
+/// checked out of `pool`. The restored cache is bit-identical to the
+/// spilled one; its dirty tracker starts a fresh epoch (dirty-all), so the
+/// first post-restore decode assembly is a full rescatter and every
+/// subsequent delta step matches a never-spilled session exactly.
+pub fn decode_session(
+    bytes: &[u8],
+    dims: &ModelDims,
+    pool: &BufferPool,
+) -> SpillResult<Session> {
+    let mut r = open_frame(bytes)?;
+    let id = r.u64()?;
+    let n_tokens = r.u64()?;
+    let have = r.remaining();
+    if n_tokens > (have / 8) as u64 {
+        return Err(SpillError::Truncated {
+            needed: (n_tokens as usize).saturating_mul(8),
+            have,
+        });
+    }
+    let mut tokens = Vec::with_capacity(n_tokens as usize);
+    for _ in 0..n_tokens {
+        tokens.push(r.i64()?);
+    }
+    let prompt_len = r.u64()? as usize;
+    if prompt_len > tokens.len() {
+        return Err(SpillError::Malformed("prompt_len exceeds token count"));
+    }
+    let last_token = r.i64()?;
+    let done = match r.u8()? {
+        0 => false,
+        1 => true,
+        _ => return Err(SpillError::Malformed("done flag")),
+    };
+    let (mode, cache) = match r.u8()? {
+        0 => {
+            let policy_name = r.take_str()?.to_string();
+            let cfg = read_cache_config(&mut r)?;
+            if cfg.layers != dims.n_layers
+                || cfg.kv_heads != dims.n_kv_heads
+                || cfg.head_dim != dims.d_head
+                || cfg.max_seq != dims.max_seq
+            {
+                return Err(SpillError::Incompatible("cache config does not match model dims"));
+            }
+            let planes = cfg.layers * cfg.kv_heads;
+            let policy = make_policy(&policy_name, planes, cfg.max_seq, id)
+                .ok_or(SpillError::Malformed("unknown policy"))?;
+            let m = CacheManager::restore_with_pool(cfg.clone(), policy, pool.clone(), &mut r)?;
+            (
+                CacheMode::Mikv {
+                    cfg,
+                    policy: policy_name,
+                },
+                SessionCache::Mikv(m),
+            )
+        }
+        1 => (
+            CacheMode::Full,
+            SessionCache::Full(read_full_cache(&mut r, dims)?),
+        ),
+        2 => {
+            let k = r.u64()? as usize;
+            (
+                CacheMode::Oracle { k },
+                SessionCache::Full(read_full_cache(&mut r, dims)?),
+            )
+        }
+        _ => return Err(SpillError::Malformed("mode tag")),
+    };
+    r.finish()?;
+    Ok(Session {
+        id,
+        mode,
+        cache,
+        tokens,
+        prompt_len,
+        last_token,
+        done,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::manager::StepOutputs;
+    use crate::kvcache::Placement;
+    use crate::quant::packing::{pack, packed_words, unpack};
+    use crate::util::prop::{forall, gen_vec_normal, Config};
+    use crate::util::rng::Pcg32;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            vocab: 64,
+            d_model: 32,
+            n_layers: 2,
+            n_q_heads: 4,
+            n_kv_heads: 2,
+            d_head: 8,
+            d_ff: 64,
+            max_seq: 48,
+            quant_group: 4,
+            params: 0,
+        }
+    }
+
+    fn sample_frame() -> Vec<u8> {
+        let mut w = Writer::with_capacity(64);
+        w.put_u64(0xDEAD_BEEF);
+        w.put_str("hello");
+        w.put_f32(1.5);
+        w.into_frame()
+    }
+
+    #[test]
+    fn frame_round_trip() {
+        let f = sample_frame();
+        assert_eq!(&f[..4], b"MKVS");
+        let mut r = open_frame(&f).unwrap();
+        assert_eq!(r.u64().unwrap(), 0xDEAD_BEEF);
+        assert_eq!(r.take_str().unwrap(), "hello");
+        assert_eq!(r.f32().unwrap(), 1.5);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn frame_rejects_bad_magic() {
+        let mut f = sample_frame();
+        f[0] ^= 0xFF;
+        assert_eq!(open_frame(&f).err(), Some(SpillError::BadMagic));
+    }
+
+    #[test]
+    fn frame_rejects_unknown_version() {
+        let mut f = sample_frame();
+        f[4] = 99;
+        assert_eq!(
+            open_frame(&f).err(),
+            Some(SpillError::UnsupportedVersion(99))
+        );
+    }
+
+    #[test]
+    fn frame_rejects_truncation() {
+        let f = sample_frame();
+        // every truncation point fails with a structured error
+        for cut in 0..f.len() {
+            let err = open_frame(&f[..cut]).err().expect("truncated frame decodes");
+            assert!(
+                matches!(err, SpillError::Truncated { .. } | SpillError::BadMagic),
+                "cut at {cut}: {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn frame_rejects_payload_corruption_and_trailing_bytes() {
+        let mut f = sample_frame();
+        f[HEADER_LEN] ^= 0x01;
+        assert_eq!(open_frame(&f).err(), Some(SpillError::ChecksumMismatch));
+        let mut g = sample_frame();
+        g.push(0);
+        assert_eq!(
+            open_frame(&g).err(),
+            Some(SpillError::Malformed("trailing bytes after frame"))
+        );
+    }
+
+    /// The codec carries packed code words for every quantizable bit width.
+    /// [`Precision`] only exposes 2/3/4/8, so this exercises the full
+    /// `1..=8` range at the pack/serialize/unpack level.
+    #[test]
+    fn packed_words_round_trip_all_widths_1_to_8() {
+        for bits in 1..=8u32 {
+            let n = 64usize;
+            let codes: Vec<u8> = (0..n).map(|i| ((i * 7 + 3) % (1usize << bits)) as u8).collect();
+            let words = pack(&codes, bits);
+            assert_eq!(words.len(), packed_words(n, bits));
+
+            let mut w = Writer::with_capacity(words.len() * 4 + 16);
+            w.put_u64(words.len() as u64);
+            w.put_u32_slice(&words);
+            let frame = w.into_frame();
+
+            let mut r = open_frame(&frame).unwrap();
+            let m = r.u64().unwrap() as usize;
+            let mut back = vec![0u32; m];
+            r.u32_into(&mut back).unwrap();
+            r.finish().unwrap();
+            assert_eq!(back, words, "bits={bits}");
+            assert_eq!(unpack(&back, bits, n), codes, "bits={bits}");
+        }
+    }
+
+    #[test]
+    fn cache_config_codec_round_trips() {
+        let mut cfg = CacheConfig::mikv(2, 2, 8, 48, 0.25, Precision::Int3);
+        cfg.retention = RetentionMode::Evict;
+        cfg.outlier_aware = false;
+        cfg.promotion = Some(PromotionConfig {
+            max_per_step: 2,
+            min_residency: 3,
+            promote_margin: 1.5,
+        });
+        let mut w = Writer::with_capacity(64);
+        put_cache_config(&mut w, &cfg);
+        let frame = w.into_frame();
+        let mut r = open_frame(&frame).unwrap();
+        let back = read_cache_config(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(back.layers, cfg.layers);
+        assert_eq!(back.kv_heads, cfg.kv_heads);
+        assert_eq!(back.head_dim, cfg.head_dim);
+        assert_eq!(back.max_seq, cfg.max_seq);
+        assert_eq!(back.hi, cfg.hi);
+        assert_eq!(back.lo, cfg.lo);
+        assert_eq!(back.importance_ratio, cfg.importance_ratio);
+        assert_eq!(back.recent_window, cfg.recent_window);
+        assert_eq!(back.retention, cfg.retention);
+        assert_eq!(back.outlier_aware, cfg.outlier_aware);
+        assert_eq!(back.promotion, cfg.promotion);
+    }
+
+    fn bits_eq(a: &[f32], b: &[f32]) -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    }
+
+    fn compare_managers(a: &CacheManager, b: &CacheManager) -> Result<(), String> {
+        if a.seq_len() != b.seq_len() {
+            return Err(format!("seq_len {} != {}", a.seq_len(), b.seq_len()));
+        }
+        if a.capacity() != b.capacity() {
+            return Err(format!("capacity {} != {}", a.capacity(), b.capacity()));
+        }
+        if a.occupancy() != b.occupancy() {
+            return Err(format!("occupancy {:?} != {:?}", a.occupancy(), b.occupancy()));
+        }
+        if a.promotion_stats() != b.promotion_stats() {
+            return Err("promotion stats diverged".into());
+        }
+        let cfg = a.config();
+        let planes = cfg.layers * cfg.kv_heads;
+        let d = cfg.head_dim;
+        let (mut ka, mut va) = (vec![0.0f32; d], vec![0.0f32; d]);
+        let (mut kb, mut vb) = (vec![0.0f32; d], vec![0.0f32; d]);
+        for p in 0..planes {
+            for s in 0..a.seq_len() {
+                if a.placement(p, s) != b.placement(p, s) {
+                    return Err(format!(
+                        "placement ({p},{s}): {:?} != {:?}",
+                        a.placement(p, s),
+                        b.placement(p, s)
+                    ));
+                }
+                if a.residency(p, s) != b.residency(p, s) {
+                    return Err(format!("residency ({p},{s}) diverged"));
+                }
+                let ga = a.effective_kv_into(p, s, &mut ka, &mut va);
+                let gb = b.effective_kv_into(p, s, &mut kb, &mut vb);
+                if ga != gb {
+                    return Err(format!("effective_kv presence ({p},{s}) diverged"));
+                }
+                if ga && (!bits_eq(&ka, &kb) || !bits_eq(&va, &vb)) {
+                    return Err(format!("effective_kv ({p},{s}) not bit-identical"));
+                }
+            }
+        }
+        let va_ = a.decode_views();
+        let vb_ = b.decode_views();
+        let blocks = [
+            ("k_hi", va_.k_hi, vb_.k_hi),
+            ("v_hi", va_.v_hi, vb_.v_hi),
+            ("hi_mask", va_.hi_mask, vb_.hi_mask),
+            ("k_lo_codes", va_.k_lo_codes, vb_.k_lo_codes),
+            ("k_lo_scale", va_.k_lo_scale, vb_.k_lo_scale),
+            ("k_lo_zero", va_.k_lo_zero, vb_.k_lo_zero),
+            ("v_lo_codes", va_.v_lo_codes, vb_.v_lo_codes),
+            ("v_lo_scale", va_.v_lo_scale, vb_.v_lo_scale),
+            ("v_lo_zero", va_.v_lo_zero, vb_.v_lo_zero),
+            ("lo_mask", va_.lo_mask, vb_.lo_mask),
+            ("inv_balancer", va_.inv_balancer, vb_.inv_balancer),
+        ];
+        for (name, x, y) in blocks {
+            if !bits_eq(x, y) {
+                return Err(format!("decode view block {name} not bit-identical"));
+            }
+        }
+        Ok(())
+    }
+
+    /// The tentpole acceptance property: spill → restore is bit-identical
+    /// for both tiers across arbitrary admit/observe/demote/promote runs,
+    /// and — the part serving actually depends on — a restored session
+    /// continues to produce bit-identical decode-step state vs the
+    /// never-spilled original.
+    #[test]
+    fn property_snapshot_round_trip_bit_identical() {
+        forall(Config::default().cases(24).name("snapshot round trip"), |rng| {
+            let dm = dims();
+            let max_seq = dm.max_seq;
+            let ratio = *rng.choose(&[0.0f64, 0.1, 0.25, 0.5, 1.0]);
+            let lo = *rng.choose(&[
+                Precision::Int2,
+                Precision::Int3,
+                Precision::Int4,
+                Precision::Int8,
+            ]);
+            let mut cfg = CacheConfig::mikv(2, 2, 8, max_seq, ratio, lo);
+            cfg.recent_window = 1 + rng.gen_below(4) as usize;
+            cfg.outlier_aware = rng.gen_bool(0.5);
+            if rng.gen_bool(0.25) {
+                // quantized importance cache (paper §3.3)
+                cfg.hi = TierConfig::quantized(Precision::Int8, 4);
+            }
+            if rng.gen_bool(0.25) {
+                // eviction-baseline sessions spill too
+                cfg.retention = RetentionMode::Evict;
+            }
+            if rng.gen_bool(0.5) {
+                cfg.promotion = Some(PromotionConfig {
+                    max_per_step: 1 + rng.gen_below(2) as usize,
+                    min_residency: 1 + rng.gen_below(3) as usize,
+                    promote_margin: *rng.choose(&[1.2f32, 1.5, 2.0]),
+                });
+            }
+            let policy_name = *rng.choose(&["h2o", "local", "random"]);
+            let planes = cfg.layers * cfg.kv_heads;
+            let d = cfg.head_dim;
+            let id = rng.next_u64();
+            let policy = make_policy(policy_name, planes, max_seq, id).expect("known policy");
+            let mut m = CacheManager::new(cfg.clone(), policy);
+
+            // Random prefill + decode history.
+            let t0 = 1 + rng.gen_below(16) as usize;
+            let k = gen_vec_normal(rng, planes * t0 * d, 1.0, 0.05);
+            let v = gen_vec_normal(rng, planes * t0 * d, 1.0, 0.05);
+            let acc: Vec<f32> = (0..planes * t0).map(|_| rng.gen_f32()).collect();
+            let qmax: Vec<f32> = (0..planes * d).map(|_| rng.gen_f32() + 0.5).collect();
+            let kmax: Vec<f32> = (0..planes * d).map(|_| rng.gen_f32() + 0.5).collect();
+            m.ingest_prefill(t0, &k, &v, &acc, &qmax, &kmax);
+
+            let post_steps = 4usize;
+            let steps = (rng.gen_below(16) as usize).min(max_seq - t0 - post_steps);
+            for _ in 0..steps {
+                let k_new = gen_vec_normal(rng, planes * d, 1.0, 0.05);
+                let v_new = gen_vec_normal(rng, planes * d, 1.0, 0.05);
+                let mut attn_prev: Vec<f32> =
+                    (0..planes * max_seq).map(|_| rng.gen_f32() * 0.1).collect();
+                if rng.gen_bool(0.5) {
+                    let hot = rng.gen_below(m.seq_len() as u32) as usize;
+                    for p in 0..planes {
+                        attn_prev[p * max_seq + hot] = 0.9;
+                    }
+                }
+                let attn_self: Vec<f32> = (0..planes).map(|_| rng.gen_f32() * 0.1).collect();
+                m.append_token(StepOutputs {
+                    k_new: &k_new,
+                    v_new: &v_new,
+                    attn_prev: &attn_prev,
+                    attn_self: &attn_self,
+                });
+            }
+
+            // Wrap in a session, spill, restore into a fresh pool.
+            let n_tok = m.seq_len();
+            let mut sess = Session {
+                id,
+                mode: CacheMode::Mikv {
+                    cfg: cfg.clone(),
+                    policy: policy_name.to_string(),
+                },
+                cache: SessionCache::Mikv(m),
+                tokens: (0..n_tok as i64).map(|t| t * 3 + 1).collect(),
+                prompt_len: t0,
+                last_token: 41,
+                done: false,
+            };
+            let frame = encode_session(&sess).map_err(|e| e.to_string())?;
+            let pool = BufferPool::new();
+            let mut back =
+                decode_session(&frame, &dims(), &pool).map_err(|e| e.to_string())?;
+
+            crate::prop_assert!(back.id == sess.id, "id diverged");
+            crate::prop_assert!(back.tokens == sess.tokens, "tokens diverged");
+            crate::prop_assert!(back.prompt_len == sess.prompt_len, "prompt_len diverged");
+            crate::prop_assert!(back.last_token == sess.last_token, "last_token diverged");
+            crate::prop_assert!(back.done == sess.done, "done diverged");
+            {
+                let (SessionCache::Mikv(ma), SessionCache::Mikv(mb)) =
+                    (&sess.cache, &back.cache)
+                else {
+                    return Err("restored cache is not MiKV".to_string());
+                };
+                compare_managers(ma, mb).map_err(|e| format!("after restore: {e}"))?;
+                mb.check_invariants()
+                    .map_err(|e| format!("restored invariants: {e}"))?;
+            }
+
+            // Drive IDENTICAL further decode steps into both sessions: the
+            // restored one must stay bit-identical step for step (policy
+            // state, RNG stream, residency clocks and tier contents all
+            // round-tripped).
+            for step in 0..post_steps {
+                let k_new = gen_vec_normal(rng, planes * d, 1.0, 0.05);
+                let v_new = gen_vec_normal(rng, planes * d, 1.0, 0.05);
+                let mut attn_prev: Vec<f32> =
+                    (0..planes * max_seq).map(|_| rng.gen_f32() * 0.1).collect();
+                if rng.gen_bool(0.5) {
+                    let hot = rng.gen_below(sess.cache.seq_len() as u32) as usize;
+                    for p in 0..planes {
+                        attn_prev[p * max_seq + hot] = 0.9;
+                    }
+                }
+                let attn_self: Vec<f32> = (0..planes).map(|_| rng.gen_f32() * 0.1).collect();
+                for s in [&mut sess, &mut back] {
+                    s.try_ingest_step(&k_new, &v_new, &attn_prev, &attn_self)
+                        .map_err(|e| format!("post-restore step {step}: {e}"))?;
+                }
+                let (SessionCache::Mikv(ma), SessionCache::Mikv(mb)) =
+                    (&sess.cache, &back.cache)
+                else {
+                    return Err("restored cache is not MiKV".to_string());
+                };
+                compare_managers(ma, mb)
+                    .map_err(|e| format!("post-restore step {step}: {e}"))?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn full_mode_session_round_trips_and_continues_identically() {
+        let dm = dims();
+        let mut rng = Pcg32::new(77);
+        let t0 = 6usize;
+        let planes = dm.planes();
+        let d = dm.d_head;
+        let k: Vec<f32> = (0..planes * t0 * d).map(|_| rng.gen_normal()).collect();
+        let v: Vec<f32> = (0..planes * t0 * d).map(|_| rng.gen_normal()).collect();
+
+        for mode in [CacheMode::Full, CacheMode::Oracle { k: 4 }] {
+            let mut sess = Session::new(9, &dm, mode).unwrap();
+            let SessionCache::Full(f) = &mut sess.cache else {
+                panic!("full-mode session")
+            };
+            f.ingest_prefill(t0, &k, &v);
+            sess.tokens = vec![1, 2, 3, 4, 5, 6];
+            sess.prompt_len = t0;
+            sess.last_token = 6;
+
+            let frame = encode_session(&sess).unwrap();
+            let pool = BufferPool::new();
+            let mut back = decode_session(&frame, &dm, &pool).unwrap();
+            assert_eq!(back.tokens, sess.tokens);
+            assert!(matches!(
+                (&sess.mode, &back.mode),
+                (CacheMode::Full, CacheMode::Full)
+                    | (CacheMode::Oracle { .. }, CacheMode::Oracle { .. })
+            ));
+            if let (CacheMode::Oracle { k: ka }, CacheMode::Oracle { k: kb }) =
+                (&sess.mode, &back.mode)
+            {
+                assert_eq!(ka, kb);
+            }
+            {
+                let (SessionCache::Full(fa), SessionCache::Full(fb)) =
+                    (&sess.cache, &back.cache)
+                else {
+                    panic!("restored cache is not Full")
+                };
+                assert_eq!(fa.seq_len, fb.seq_len);
+                assert!(bits_eq(&fa.k, &fb.k), "K blocks not bit-identical");
+                assert!(bits_eq(&fa.v, &fb.v), "V blocks not bit-identical");
+                assert!(bits_eq(&fa.mask, &fb.mask), "masks not bit-identical");
+            }
+
+            // identical appends stay identical
+            let k_new: Vec<f32> = (0..planes * d).map(|_| rng.gen_normal()).collect();
+            let v_new: Vec<f32> = (0..planes * d).map(|_| rng.gen_normal()).collect();
+            for s in [&mut sess, &mut back] {
+                s.try_ingest_step(&k_new, &v_new, &[], &[]).unwrap();
+            }
+            let (SessionCache::Full(fa), SessionCache::Full(fb)) = (&sess.cache, &back.cache)
+            else {
+                panic!("restored cache is not Full")
+            };
+            assert!(bits_eq(&fa.k, &fb.k) && bits_eq(&fa.v, &fb.v));
+        }
+    }
+
+    #[test]
+    fn empty_session_round_trips() {
+        let dm = dims();
+        let sess = Session::new(1, &dm, CacheMode::Full).unwrap();
+        let frame = encode_session(&sess).unwrap();
+        let back = decode_session(&frame, &dm, &BufferPool::new()).unwrap();
+        assert_eq!(back.cache.seq_len(), 0);
+        assert!(back.tokens.is_empty());
+    }
+
+    #[test]
+    fn decode_rejects_incompatible_dims() {
+        let dm = dims();
+        let mut sess = Session::new(2, &dm, CacheMode::mikv(&dm, 0.25, Precision::Int4)).unwrap();
+        let SessionCache::Mikv(m) = &mut sess.cache else {
+            panic!()
+        };
+        let mut rng = Pcg32::new(5);
+        let planes = dm.planes();
+        let (t0, d) = (8usize, dm.d_head);
+        let k: Vec<f32> = (0..planes * t0 * d).map(|_| rng.gen_normal()).collect();
+        let acc: Vec<f32> = (0..planes * t0).map(|_| rng.gen_f32()).collect();
+        let qmax: Vec<f32> = (0..planes * d).map(|_| rng.gen_f32() + 0.5).collect();
+        m.ingest_prefill(t0, &k, &k, &acc, &qmax, &qmax);
+
+        let frame = encode_session(&sess).unwrap();
+        let mut other = dims();
+        other.max_seq = 32;
+        assert!(matches!(
+            decode_session(&frame, &other, &BufferPool::new()).err(),
+            Some(SpillError::Incompatible(_))
+        ));
+    }
+
+    /// A spilled MiKV session survives hostile mutation of any single byte
+    /// of its frame with a structured error — never a panic, never a
+    /// silently-wrong restore (the checksum catches payload flips, the
+    /// header fields catch the rest).
+    #[test]
+    fn mikv_snapshot_rejects_single_byte_corruption_sample() {
+        let dm = dims();
+        let mut sess = Session::new(3, &dm, CacheMode::mikv(&dm, 0.25, Precision::Int2)).unwrap();
+        let SessionCache::Mikv(m) = &mut sess.cache else {
+            panic!()
+        };
+        let mut rng = Pcg32::new(6);
+        let planes = dm.planes();
+        let (t0, d) = (10usize, dm.d_head);
+        let k: Vec<f32> = (0..planes * t0 * d).map(|_| rng.gen_normal()).collect();
+        let acc: Vec<f32> = (0..planes * t0).map(|_| rng.gen_f32()).collect();
+        let qmax: Vec<f32> = (0..planes * d).map(|_| rng.gen_f32() + 0.5).collect();
+        m.ingest_prefill(t0, &k, &k, &acc, &qmax, &qmax);
+        let frame = encode_session(&sess).unwrap();
+        let pool = BufferPool::new();
+        assert!(decode_session(&frame, &dm, &pool).is_ok());
+
+        // sample every 7th byte position (full sweep lives in the
+        // hostile-bytes integration test)
+        for pos in (0..frame.len()).step_by(7) {
+            let mut bad = frame.clone();
+            bad[pos] ^= 0x10;
+            assert!(
+                decode_session(&bad, &dm, &pool).is_err(),
+                "flip at {pos} must not decode"
+            );
+        }
+    }
+}

@@ -83,6 +83,20 @@ impl HiTier {
         Self::storage_round(&self.cfg, vs);
     }
 
+    /// Restore a slot from already-rounded values *without* re-applying
+    /// storage rounding — the snapshot-restore path. The stored vectors
+    /// were rounded when first admitted, so a raw copy reproduces the tier
+    /// bit-for-bit; routing a restore through [`Self::admit`] would round a
+    /// second time (idempotent for FP16, but not guaranteed for quantized
+    /// hi tiers, whose group min/max would be recomputed from the rounded
+    /// image).
+    pub fn set_slot_raw(&mut self, s: usize, k: &[f32], v: &[f32]) {
+        let d = self.head_dim;
+        debug_assert!(k.len() == d && v.len() == d);
+        self.k[s * d..(s + 1) * d].copy_from_slice(k);
+        self.v[s * d..(s + 1) * d].copy_from_slice(v);
+    }
+
     /// Read back the stored K/V of slot `s`.
     pub fn k_slot(&self, s: usize) -> &[f32] {
         &self.k[s * self.head_dim..(s + 1) * self.head_dim]
@@ -155,6 +169,11 @@ impl LoTier {
 
     pub fn groups(&self) -> usize {
         self.groups
+    }
+
+    /// Packed `u32` words per slot (per K or V vector).
+    pub fn words(&self) -> usize {
+        self.words
     }
 
     /// Grow storage to hold at least `slots` slots (slot-major layout, so
@@ -231,6 +250,42 @@ impl LoTier {
         for (o, &c) in out.iter_mut().zip(scratch.iter()) {
             *o = c as f32;
         }
+    }
+
+    /// Raw packed K code words of slot `s` (`[words]`) — the snapshot-spill
+    /// read path: codes leave the tier exactly as stored, no dequantization.
+    pub fn k_codes_slot(&self, s: usize) -> &[u32] {
+        &self.k_codes[s * self.words..(s + 1) * self.words]
+    }
+
+    pub fn v_codes_slot(&self, s: usize) -> &[u32] {
+        &self.v_codes[s * self.words..(s + 1) * self.words]
+    }
+
+    /// Restore a slot from raw packed codes + metadata *without*
+    /// re-quantizing — the snapshot-restore path. Re-admitting dequantized
+    /// values through [`Self::admit`] would recompute group min/max from the
+    /// quantization image and could shift codes by one step; a raw copy
+    /// reproduces the tier bit-for-bit.
+    #[allow(clippy::too_many_arguments)]
+    pub fn set_slot_raw(
+        &mut self,
+        s: usize,
+        k_codes: &[u32],
+        v_codes: &[u32],
+        k_scales: &[f32],
+        k_zeros: &[f32],
+        v_scales: &[f32],
+        v_zeros: &[f32],
+    ) {
+        debug_assert!(k_codes.len() == self.words && v_codes.len() == self.words);
+        debug_assert!(k_scales.len() == self.groups && v_zeros.len() == self.groups);
+        self.k_codes[s * self.words..(s + 1) * self.words].copy_from_slice(k_codes);
+        self.v_codes[s * self.words..(s + 1) * self.words].copy_from_slice(v_codes);
+        self.k_scales[s * self.groups..(s + 1) * self.groups].copy_from_slice(k_scales);
+        self.k_zeros[s * self.groups..(s + 1) * self.groups].copy_from_slice(k_zeros);
+        self.v_scales[s * self.groups..(s + 1) * self.groups].copy_from_slice(v_scales);
+        self.v_zeros[s * self.groups..(s + 1) * self.groups].copy_from_slice(v_zeros);
     }
 
     pub fn k_meta_slot(&self, s: usize) -> (&[f32], &[f32]) {
@@ -461,6 +516,36 @@ mod tests {
         let before = t.dequant_slot(0);
         t.take_slot_into(1, &mut got_k, &mut got_v);
         assert_eq!(t.dequant_slot(0), before);
+    }
+
+    /// Raw get→set round-trip reproduces both tiers bit-for-bit, in
+    /// contrast to re-admitting the dequantized image (which re-rounds).
+    #[test]
+    fn raw_slot_round_trip_is_bit_identical() {
+        let mut hi = HiTier::new(TierConfig::quantized(Precision::Int8, 4), 8, 2);
+        let k: Vec<f32> = (0..8).map(|i| (i as f32 * 0.9).sin() * 2.0).collect();
+        let v: Vec<f32> = (0..8).map(|i| (i as f32 * 0.4).cos()).collect();
+        hi.admit(1, &k, &v);
+        let (sk, sv) = (hi.k_slot(1).to_vec(), hi.v_slot(1).to_vec());
+        let mut hi2 = HiTier::new(TierConfig::quantized(Precision::Int8, 4), 8, 2);
+        hi2.set_slot_raw(1, &sk, &sv);
+        assert_eq!(hi2.k_slot(1), &sk[..]);
+        assert_eq!(hi2.v_slot(1), &sv[..]);
+
+        let cfg = TierConfig::quantized(Precision::Int3, 4);
+        let mut lo = LoTier::new(cfg, 8, 2);
+        lo.admit(0, &k, &v);
+        let kc = lo.k_codes_slot(0).to_vec();
+        let vc = lo.v_codes_slot(0).to_vec();
+        let (ks, kz) = lo.k_meta_slot(0);
+        let (vs, vz) = lo.v_meta_slot(0);
+        let (ks, kz, vs, vz) = (ks.to_vec(), kz.to_vec(), vs.to_vec(), vz.to_vec());
+        let mut lo2 = LoTier::new(cfg, 8, 2);
+        lo2.set_slot_raw(0, &kc, &vc, &ks, &kz, &vs, &vz);
+        assert_eq!(lo2.k_codes_slot(0), &kc[..]);
+        assert_eq!(lo2.v_codes_slot(0), &vc[..]);
+        let (a, b) = (lo.dequant_slot(0), lo2.dequant_slot(0));
+        assert_eq!(a, b);
     }
 
     #[test]

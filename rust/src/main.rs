@@ -23,11 +23,15 @@ USAGE: mikv <command> [--artifacts DIR] [--model NAME] [flags]
 COMMANDS:
   serve      --port 7777 --workers 1 --max-active 8 --max-waiting 256
              --session-ttl 120 (secs) --session-mb 512
+             --cold-dir DIR --cold-mb 256
              (Serving API v1: versioned streaming ops with multi-turn
               sessions, sharded across N engine workers with continuous
               batching per worker; see rust/src/server/proto.rs and
               EXPERIMENTS.md. --max-active/--max-waiting/--session-mb are
-              per worker.)
+              per worker. --cold-dir enables the cold tier: parked
+              sessions evicted by TTL or footprint pressure spill to disk
+              snapshots under DIR, bounded by --cold-mb per worker, and
+              are restored transparently on append.)
   generate   --prompt 1,2,3 --max-new 8 --mode mikv:0.25:int2
   eval       --task lineret --samples 25 --modes full,mikv:0.25:int2,h2o:0.25
   info       print manifest summary
@@ -131,12 +135,15 @@ fn run(args: &Args) -> anyhow::Result<()> {
         Some("serve") => {
             let port: u16 = args.get("port", 7777u16)?;
             let workers = args.get_nonzero("workers", 1)?;
+            let cold_dir = args.get_str("cold-dir", "");
             let cfg = CoordinatorConfig {
                 max_active: args.get("max-active", 8usize)?,
                 prefill_chunk: args.get("prefill-chunk", 4usize)?,
                 max_waiting: args.get("max-waiting", 256usize)?,
                 session_ttl: Duration::from_secs(args.get("session-ttl", 120u64)?),
                 max_session_bytes: args.get("session-mb", 512usize)? << 20,
+                cold_dir: (!cold_dir.is_empty()).then(|| cold_dir.clone().into()),
+                max_cold_bytes: args.get("cold-mb", 256u64)? << 20,
                 ..Default::default()
             };
             // Each worker loads its own engine on its own thread (PJRT

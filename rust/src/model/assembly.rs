@@ -23,6 +23,12 @@
 //!   to a full rescatter of the live prefix, so the fast path is never
 //!   load-bearing for correctness (property-tested below against a
 //!   from-scratch reference).
+//! * **Chunk-base lane keying** — a decode step whose group splits into
+//!   several chunks assembles the chunk at group offset `i` into arena
+//!   lanes `i..i + b` ([`assemble_mikv_at`] / [`assemble_full_at`]):
+//!   chunks own disjoint lane ranges, so a stable multi-chunk group
+//!   delta-patches every lane instead of the chunks evicting each other
+//!   from the low lanes every step.
 //!
 //! The assembly entry points are free functions over `&mut Session` so the
 //! perf bench and the equivalence tests can drive the exact engine path
@@ -153,26 +159,53 @@ impl StepArena {
     /// `b` uploads (the arena may hold more lanes than this chunk uses).
     // lint: panic-free-serving-ok(fn): i/b bounded by graph shape and ensure_shape
     pub fn block_prefix(&self, i: usize, b: usize) -> &[f32] {
-        let w = self.widths[i];
-        &self.blocks[i][..b * self.planes * self.rows * w]
+        self.block_range(i, 0, b)
+    }
+
+    /// Lanes `base..base + b` of block `i` — what a chunk assembled at
+    /// lane `base` uploads (the lane-major layout keeps any chunk's lanes
+    /// contiguous, so a mid-arena chunk is still one slice).
+    // lint: panic-free-serving-ok(fn): base + b bounded by ensure_shape for this chunk
+    pub fn block_range(&self, i: usize, base: usize, b: usize) -> &[f32] {
+        let stride = self.planes * self.rows * self.widths[i];
+        &self.blocks[i][base * stride..(base + b) * stride]
     }
 
     /// The `b`-lane prefix of the token input.
     // lint: panic-free-serving-ok(fn): b <= allocated lanes per ensure_shape
     pub fn token_prefix(&self, b: usize) -> &[i64] {
-        &self.token[..b]
+        self.token_range(0, b)
+    }
+
+    /// Lanes `base..base + b` of the token input.
+    // lint: panic-free-serving-ok(fn): base + b bounded by ensure_shape for this chunk
+    pub fn token_range(&self, base: usize, b: usize) -> &[i64] {
+        &self.token[base..base + b]
     }
 
     /// The `b`-lane prefix of the position input.
     // lint: panic-free-serving-ok(fn): b <= allocated lanes per ensure_shape
     pub fn pos_prefix(&self, b: usize) -> &[i64] {
-        &self.pos[..b]
+        self.pos_range(0, b)
+    }
+
+    /// Lanes `base..base + b` of the position input.
+    // lint: panic-free-serving-ok(fn): base + b bounded by ensure_shape for this chunk
+    pub fn pos_range(&self, base: usize, b: usize) -> &[i64] {
+        &self.pos[base..base + b]
     }
 
     /// The `b`-lane prefix of the aux input.
     // lint: panic-free-serving-ok(fn): b <= allocated lanes per ensure_shape
     pub fn extra_prefix(&self, b: usize) -> &[f32] {
-        &self.extra[..b * self.planes * self.extra_width]
+        self.extra_range(0, b)
+    }
+
+    /// Lanes `base..base + b` of the aux input.
+    // lint: panic-free-serving-ok(fn): base + b bounded by ensure_shape for this chunk
+    pub fn extra_range(&self, base: usize, b: usize) -> &[f32] {
+        let stride = self.planes * self.extra_width;
+        &self.extra[base * stride..(base + b) * stride]
     }
 
     /// Host bytes the arena pins (buffers + bookkeeping).
@@ -369,10 +402,25 @@ impl StepArena {
 /// (compiled batch size `b`; lanes `sessions.len()..b` become zero
 /// padding). Lanes whose cached `(session, sync-version)` matches take the
 /// dirty-row delta path; everything else full-rescatters the live prefix.
-// lint: panic-free-serving-ok(fn): per-session views validated against dims before scatter
 pub fn assemble_mikv(
     arena: &mut StepArena,
     dims: &ModelDims,
+    b: usize,
+    sessions: &mut [&mut Session],
+) -> crate::Result<()> {
+    assemble_mikv_at(arena, dims, 0, b, sessions)
+}
+
+/// [`assemble_mikv`] keyed to lane `base`: the chunk occupies arena lanes
+/// `base..base + b`. A multi-chunk `decode_step` passes each chunk's
+/// offset in the decode group as `base`, so every chunk owns a disjoint
+/// lane range and a stable group keeps the dirty-row delta path on every
+/// lane instead of chunks evicting each other from the low lanes.
+// lint: panic-free-serving-ok(fn): per-session views validated against dims before scatter
+pub fn assemble_mikv_at(
+    arena: &mut StepArena,
+    dims: &ModelDims,
+    base: usize,
     b: usize,
     sessions: &mut [&mut Session],
 ) -> crate::Result<()> {
@@ -380,10 +428,11 @@ pub fn assemble_mikv(
     let s = dims.max_seq;
     let ng = dims.n_groups();
     anyhow::ensure!(sessions.len() <= b, "chunk of {} > batch {b}", sessions.len());
-    arena.ensure_shape(b, planes, s);
+    arena.ensure_shape(base + b, planes, s);
     arena.stats.steps += 1;
 
-    for (lane, sess) in sessions.iter_mut().enumerate() {
+    for (k, sess) in sessions.iter_mut().enumerate() {
+        let lane = base + k;
         let sid = sess.id;
         arena.token[lane] = sess.last_token;
         arena.pos[lane] = sess.cache.seq_len() as i64;
@@ -413,7 +462,7 @@ pub fn assemble_mikv(
         ];
         arena.fill_lane(lane, sid, take, &srcs, cap, live, Some(views.inv_balancer));
     }
-    for lane in sessions.len()..b {
+    for lane in base + sessions.len()..base + b {
         arena.retire_lane(lane);
     }
     Ok(())
@@ -422,20 +471,32 @@ pub fn assemble_mikv(
 /// Assemble the `decode_full` batch inputs (k, v, mask) for full/oracle
 /// sessions into `arena`, with the same delta/full lane protocol as
 /// [`assemble_mikv`].
-// lint: panic-free-serving-ok(fn): per-session views validated against dims before scatter
 pub fn assemble_full(
     arena: &mut StepArena,
     dims: &ModelDims,
     b: usize,
     sessions: &mut [&mut Session],
 ) -> crate::Result<()> {
+    assemble_full_at(arena, dims, 0, b, sessions)
+}
+
+/// [`assemble_full`] keyed to lane `base` — see [`assemble_mikv_at`].
+// lint: panic-free-serving-ok(fn): per-session views validated against dims before scatter
+pub fn assemble_full_at(
+    arena: &mut StepArena,
+    dims: &ModelDims,
+    base: usize,
+    b: usize,
+    sessions: &mut [&mut Session],
+) -> crate::Result<()> {
     let planes = dims.planes();
     let s = dims.max_seq;
     anyhow::ensure!(sessions.len() <= b, "chunk of {} > batch {b}", sessions.len());
-    arena.ensure_shape(b, planes, s);
+    arena.ensure_shape(base + b, planes, s);
     arena.stats.steps += 1;
 
-    for (lane, sess) in sessions.iter_mut().enumerate() {
+    for (k, sess) in sessions.iter_mut().enumerate() {
+        let lane = base + k;
         let sid = sess.id;
         arena.token[lane] = sess.last_token;
         arena.pos[lane] = sess.cache.seq_len() as i64;
@@ -449,7 +510,7 @@ pub fn assemble_full(
         let srcs: [&[f32]; 3] = [&f.k, &f.v, &f.mask];
         arena.fill_lane(lane, sid, take, &srcs, cap, live, None);
     }
-    for lane in sessions.len()..b {
+    for lane in base + sessions.len()..base + b {
         arena.retire_lane(lane);
     }
     Ok(())
@@ -686,6 +747,60 @@ mod tests {
                     "no lanes assembled?"
                 );
             }
+            Ok(())
+        });
+    }
+
+    /// Multi-chunk decode shape: a group larger than the compiled batch
+    /// splits into chunks assembled at their group offsets
+    /// ([`assemble_mikv_at`]). The assembled lanes must be bit-identical
+    /// to the from-scratch reference over the whole group, and — because
+    /// each chunk owns a disjoint lane range — EVERY lane of a stable
+    /// group must take the delta path after first sight (the old
+    /// lane-per-chunk indexing rescattered the overlap every step).
+    #[test]
+    fn property_multi_chunk_assembly_bit_identical_and_delta() {
+        forall(Config::default().cases(20).name("multi-chunk assembly"), |rng| {
+            let d = dims(48);
+            let n = 3 + rng.gen_below(4) as usize; // group of 3..=6
+            let c = 1 + rng.gen_below(n as u32 - 1) as usize; // first chunk
+            let mut sessions: Vec<Session> = (0..n)
+                .map(|i| {
+                    let t = 2 + rng.gen_below(10) as usize;
+                    mikv_session(i as u64 + 1, &d, t, rng)
+                })
+                .collect();
+            let mut arena = StepArena::for_mikv(&d);
+
+            let steps = 3 + rng.gen_below(4) as usize;
+            for stepno in 0..steps {
+                for sess in sessions.iter_mut() {
+                    step(sess, &d, rng);
+                }
+                {
+                    let (head, tail) = sessions.split_at_mut(c);
+                    let mut refs: Vec<&mut Session> = head.iter_mut().collect();
+                    assemble_mikv_at(&mut arena, &d, 0, c, &mut refs)
+                        .map_err(|e| format!("chunk 1: {e}"))?;
+                    let mut refs: Vec<&mut Session> = tail.iter_mut().collect();
+                    assemble_mikv_at(&mut arena, &d, c, n - c, &mut refs)
+                        .map_err(|e| format!("chunk 2: {e}"))?;
+                }
+                let refs: Vec<&mut Session> = sessions.iter_mut().collect();
+                let expect = expected_mikv(&d, n, &refs);
+                assert_arena_matches(&arena, &expect, &format!("multi-chunk step {stepno}"));
+            }
+            crate::prop_assert!(
+                arena.stats.full_lanes == n as u64,
+                "only first sight rescatters: {} full lanes for group of {n}",
+                arena.stats.full_lanes
+            );
+            crate::prop_assert!(
+                arena.stats.delta_lanes == (n * (steps - 1)) as u64,
+                "every lane of every later step deltas: {} != {}",
+                arena.stats.delta_lanes,
+                n * (steps - 1)
+            );
             Ok(())
         });
     }

@@ -17,17 +17,17 @@
 //! Full and Oracle sessions share the `decode_full` graph when their
 //! `oracle_k` agrees.
 //!
-//! Known lane-caching limitation: arena lanes are indexed per chunk (the
-//! arena's lane capacity is the grow-only max over compiled batch sizes,
-//! so alternating chunk sizes do NOT reshape it), so when one
-//! `decode_step` splits into several chunks — or several decode groups
-//! share a graph kind in one scheduler round (e.g. concurrent distinct
-//! `oracle_k` groups on `decode_full`) — the calls share low lane indices
-//! and the overlapping lanes fall back to the (still correct) full
-//! rescatter. Single-chunk, single-group steps — the bench shape and the
-//! common serving shape — get the delta path on every lane.
+//! Arena lanes are keyed by a session's **rank in its decode group**: the
+//! chunk covering group offsets `i..i + b` assembles into arena lanes
+//! `i..i + b` (`assemble_*_at`), so a `decode_step` that splits into
+//! several chunks gives each chunk a disjoint lane range and a stable
+//! group keeps the dirty-row delta path on EVERY lane — not just the
+//! first chunk's. The remaining (correctness-preserving) fallback: when
+//! several decode groups share a graph kind in one scheduler round (e.g.
+//! concurrent distinct `oracle_k` groups on `decode_full`), each group's
+//! ranks start at 0, so the overlapping lanes full-rescatter.
 
-use super::assembly::{assemble_full, assemble_mikv, StepArena};
+use super::assembly::{assemble_full_at, assemble_mikv_at, StepArena};
 use super::sampler;
 use super::session::{CacheMode, Session, SessionCache};
 use crate::runtime::artifacts::{Manifest, ModelDims, ModelEntry};
@@ -293,10 +293,13 @@ impl Engine {
             let b = pick_batch(remaining, &avail);
             let n = b.min(remaining);
             let chunk = &mut sessions[i..i + n];
+            // `i` keys the chunk's arena lanes: each chunk of the group
+            // owns lanes `i..i + b`, so multi-chunk steps keep per-lane
+            // deltas (see the module docs).
             let rows = if kind == "decode_mikv" {
-                self.decode_chunk_mikv(chunk, &map[&b])?
+                self.decode_chunk_mikv(chunk, &map[&b], i)?
             } else {
-                self.decode_chunk_full(chunk, &map[&b])?
+                self.decode_chunk_full(chunk, &map[&b], i)?
             };
             logits_rows.extend(rows);
             i += n;
@@ -308,6 +311,7 @@ impl Engine {
         &self,
         sessions: &mut [&mut Session],
         exe: &Executable,
+        base: usize,
     ) -> crate::Result<Vec<Vec<f32>>> {
         let d = &self.entry.dims;
         let b = exe.entry.batch;
@@ -320,29 +324,29 @@ impl Engine {
         // outputs are discarded).
         let t0 = Instant::now();
         let mut arena = self.arena_mikv.borrow_mut();
-        assemble_mikv(&mut arena, d, b, sessions)?;
+        assemble_mikv_at(&mut arena, d, base, b, sessions)?;
         self.assembly_ns
             .set(self.assembly_ns.get() + t0.elapsed().as_nanos() as u64);
 
         let n_w = self.weight_bufs.len();
         let specs = &exe.entry.inputs;
-        // Upload the b-lane prefixes (the arena's lane capacity is the
-        // grow-only max over compiled batch sizes, so it may exceed this
-        // chunk's b).
+        // Upload this chunk's b-lane range (the arena's lane capacity is
+        // the grow-only max over chunk base + batch, so it may hold other
+        // chunks' lanes on either side).
         let host: Vec<HostInput<'_>> = vec![
-            HostInput::I64(arena.token_prefix(b)),
-            HostInput::I64(arena.pos_prefix(b)),
-            HostInput::F32(arena.block_prefix(0, b)), // k_hi
-            HostInput::F32(arena.block_prefix(1, b)), // v_hi
-            HostInput::F32(arena.block_prefix(2, b)), // hi_mask
-            HostInput::F32(arena.block_prefix(3, b)), // k_lo_codes
-            HostInput::F32(arena.block_prefix(4, b)), // k_lo_scale
-            HostInput::F32(arena.block_prefix(5, b)), // k_lo_zero
-            HostInput::F32(arena.block_prefix(6, b)), // v_lo_codes
-            HostInput::F32(arena.block_prefix(7, b)), // v_lo_scale
-            HostInput::F32(arena.block_prefix(8, b)), // v_lo_zero
-            HostInput::F32(arena.block_prefix(9, b)), // lo_mask
-            HostInput::F32(arena.extra_prefix(b)),    // inv_balancer
+            HostInput::I64(arena.token_range(base, b)),
+            HostInput::I64(arena.pos_range(base, b)),
+            HostInput::F32(arena.block_range(0, base, b)), // k_hi
+            HostInput::F32(arena.block_range(1, base, b)), // v_hi
+            HostInput::F32(arena.block_range(2, base, b)), // hi_mask
+            HostInput::F32(arena.block_range(3, base, b)), // k_lo_codes
+            HostInput::F32(arena.block_range(4, base, b)), // k_lo_scale
+            HostInput::F32(arena.block_range(5, base, b)), // k_lo_zero
+            HostInput::F32(arena.block_range(6, base, b)), // v_lo_codes
+            HostInput::F32(arena.block_range(7, base, b)), // v_lo_scale
+            HostInput::F32(arena.block_range(8, base, b)), // v_lo_zero
+            HostInput::F32(arena.block_range(9, base, b)), // lo_mask
+            HostInput::F32(arena.extra_range(base, b)),    // inv_balancer
         ];
         let bufs = host
             .iter()
@@ -361,6 +365,7 @@ impl Engine {
         &self,
         sessions: &mut [&mut Session],
         exe: &Executable,
+        base: usize,
     ) -> crate::Result<Vec<Vec<f32>>> {
         let d = &self.entry.dims;
         let b = exe.entry.batch;
@@ -388,7 +393,7 @@ impl Engine {
 
         let t0 = Instant::now();
         let mut arena = self.arena_full.borrow_mut();
-        assemble_full(&mut arena, d, b, sessions)?;
+        assemble_full_at(&mut arena, d, base, b, sessions)?;
         self.assembly_ns
             .set(self.assembly_ns.get() + t0.elapsed().as_nanos() as u64);
 
@@ -396,11 +401,11 @@ impl Engine {
         let specs = &exe.entry.inputs;
         let ok = [oracle_k];
         let host: Vec<HostInput<'_>> = vec![
-            HostInput::I64(arena.token_prefix(b)),
-            HostInput::I64(arena.pos_prefix(b)),
-            HostInput::F32(arena.block_prefix(0, b)), // k
-            HostInput::F32(arena.block_prefix(1, b)), // v
-            HostInput::F32(arena.block_prefix(2, b)), // mask
+            HostInput::I64(arena.token_range(base, b)),
+            HostInput::I64(arena.pos_range(base, b)),
+            HostInput::F32(arena.block_range(0, base, b)), // k
+            HostInput::F32(arena.block_range(1, base, b)), // v
+            HostInput::F32(arena.block_range(2, base, b)), // mask
             HostInput::I64(&ok),
         ];
         let bufs = host

@@ -199,6 +199,30 @@ impl FullCache {
         self.dirty.take_into(out)
     }
 
+    /// Invalidate every row for the next assembly — the snapshot-restore
+    /// contract: a cache rebuilt from a cold snapshot has no arena lane to
+    /// delta against, so the first post-restore assembly must be a full
+    /// rescatter (fresh tracker epoch ⇒ the engine's version handshake
+    /// misses and it rebuilds the lane from scratch).
+    pub fn mark_all_dirty(&mut self) {
+        self.dirty.mark_all();
+    }
+
+    /// Plane count (layers × kv-heads) — snapshot header validation.
+    pub fn planes(&self) -> usize {
+        self.planes
+    }
+
+    /// Per-head channel count.
+    pub fn head_dim(&self) -> usize {
+        self.d
+    }
+
+    /// Maximum sequence length the dense blocks are sized for.
+    pub fn max_seq(&self) -> usize {
+        self.s_max
+    }
+
     /// Host bytes pinned by the dense cache blocks (plus the dirty-row
     /// tracker's bookkeeping, mirroring `CacheManager::host_footprint`).
     pub fn host_bytes(&self) -> usize {

@@ -86,6 +86,72 @@ pub trait ImportancePolicy: Send {
         }
         best
     }
+
+    /// Serialize the policy's mutable state into `out` (appended; format is
+    /// policy-private, round-tripped only through [`Self::import_state`]).
+    /// Stateless policies append nothing — the default.
+    fn export_state(&self, _out: &mut Vec<u8>) {}
+
+    /// Restore state captured by [`Self::export_state`]. Returns `false` if
+    /// the bytes are malformed (wrong length, wrong shape) — the caller
+    /// treats that as a corrupt snapshot, so implementations must validate
+    /// rather than panic. The stateless default accepts only an empty blob.
+    fn import_state(&mut self, bytes: &[u8]) -> bool {
+        bytes.is_empty()
+    }
+}
+
+// ---- state-blob helpers (shared by the stateful policies) ----------------
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f32_vec(out: &mut Vec<u8>, xs: &[f32]) {
+    put_u64(out, xs.len() as u64);
+    for &x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+fn take_u64(bytes: &[u8], pos: &mut usize) -> Option<u64> {
+    let raw = bytes.get(*pos..*pos + 8)?;
+    *pos += 8;
+    Some(u64::from_le_bytes(raw.try_into().ok()?))
+}
+
+fn take_f32_vec(bytes: &[u8], pos: &mut usize) -> Option<Vec<f32>> {
+    let n = take_u64(bytes, pos)? as usize;
+    // cap: a plane vector can never exceed the remaining payload
+    if n > (bytes.len() - *pos) / 4 {
+        return None;
+    }
+    let mut v = Vec::with_capacity(n);
+    for _ in 0..n {
+        let raw = bytes.get(*pos..*pos + 4)?;
+        *pos += 4;
+        v.push(f32::from_le_bytes(raw.try_into().ok()?));
+    }
+    Some(v)
+}
+
+fn take_plane_vecs(bytes: &[u8], pos: &mut usize, planes: usize) -> Option<Vec<Vec<f32>>> {
+    let n = take_u64(bytes, pos)? as usize;
+    if n != planes {
+        return None;
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(take_f32_vec(bytes, pos)?);
+    }
+    Some(out)
+}
+
+fn put_plane_vecs(out: &mut Vec<u8>, planes: &[Vec<f32>]) {
+    put_u64(out, planes.len() as u64);
+    for p in planes {
+        put_f32_vec(out, p);
+    }
 }
 
 /// Accumulated-attention heavy-hitter policy (H2O).
@@ -171,6 +237,27 @@ impl ImportancePolicy for H2oPolicy {
     fn reaccess(&self, plane: usize, slot: usize) -> f32 {
         self.ema[plane].get(slot).copied().unwrap_or(0.0)
     }
+
+    fn export_state(&self, out: &mut Vec<u8>) {
+        put_plane_vecs(out, &self.acc);
+        put_plane_vecs(out, &self.ema);
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> bool {
+        let mut pos = 0usize;
+        let Some(acc) = take_plane_vecs(bytes, &mut pos, self.acc.len()) else {
+            return false;
+        };
+        let Some(ema) = take_plane_vecs(bytes, &mut pos, self.ema.len()) else {
+            return false;
+        };
+        if pos != bytes.len() {
+            return false;
+        }
+        self.acc = acc;
+        self.ema = ema;
+        true
+    }
 }
 
 /// Recency policy: importance = slot index (newest wins).
@@ -238,6 +325,30 @@ impl ImportancePolicy for RandomPolicy {
 
     fn score(&self, plane: usize, slot: usize) -> f32 {
         self.scores[plane].get(slot).copied().unwrap_or(0.0)
+    }
+
+    fn export_state(&self, out: &mut Vec<u8>) {
+        let (state, inc) = self.rng.state_parts();
+        put_u64(out, state);
+        put_u64(out, inc);
+        put_plane_vecs(out, &self.scores);
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> bool {
+        let mut pos = 0usize;
+        let (Some(state), Some(inc)) = (take_u64(bytes, &mut pos), take_u64(bytes, &mut pos))
+        else {
+            return false;
+        };
+        let Some(scores) = take_plane_vecs(bytes, &mut pos, self.scores.len()) else {
+            return false;
+        };
+        if pos != bytes.len() {
+            return false;
+        }
+        self.rng = Pcg32::from_parts(state, inc);
+        self.scores = scores;
+        true
     }
 }
 
@@ -375,6 +486,71 @@ mod tests {
         random.init_prefill(0, &[0.0; 4]);
         random.observe(0, &[0.5; 4]);
         assert_eq!(random.reaccess(0, 2), 0.0);
+    }
+
+    #[test]
+    fn h2o_state_round_trip_is_exact() {
+        let mut src = H2oPolicy::new(2, 16);
+        src.init_prefill(0, &[0.5, 0.1, 0.3]);
+        src.observe(0, &[0.1, 0.0, 0.8, 0.1]);
+        src.observe_at(1, 5, 0.7);
+        let mut blob = Vec::new();
+        src.export_state(&mut blob);
+
+        let mut dst = H2oPolicy::new(2, 16);
+        assert!(dst.import_state(&blob));
+        for plane in 0..2 {
+            for slot in 0..8 {
+                assert_eq!(src.score(plane, slot), dst.score(plane, slot));
+                assert_eq!(src.reaccess(plane, slot), dst.reaccess(plane, slot));
+            }
+        }
+        // further identical observations keep them in lockstep
+        src.observe(0, &[0.2, 0.2, 0.2, 0.2, 0.2]);
+        dst.observe(0, &[0.2, 0.2, 0.2, 0.2, 0.2]);
+        assert_eq!(src.score(0, 4), dst.score(0, 4));
+    }
+
+    #[test]
+    fn random_state_round_trip_resumes_rng_stream() {
+        let mut src = RandomPolicy::new(1, 16, 77);
+        src.init_prefill(0, &[0.0; 8]);
+        let mut blob = Vec::new();
+        src.export_state(&mut blob);
+
+        // a fresh policy with a different seed converges after import
+        let mut dst = RandomPolicy::new(1, 16, 999);
+        assert!(dst.import_state(&blob));
+        for s in 0..8 {
+            assert_eq!(src.score(0, s), dst.score(0, s));
+        }
+        // the RNG stream continues identically: next admits draw equal scores
+        src.admit(0, 8);
+        dst.admit(0, 8);
+        assert_eq!(src.score(0, 8), dst.score(0, 8));
+    }
+
+    #[test]
+    fn import_rejects_malformed_blobs() {
+        let mut src = H2oPolicy::new(2, 8);
+        src.init_prefill(0, &[0.5, 0.1]);
+        let mut blob = Vec::new();
+        src.export_state(&mut blob);
+
+        // truncated
+        let mut p = H2oPolicy::new(2, 8);
+        assert!(!p.import_state(&blob[..blob.len() - 1]));
+        // trailing garbage
+        let mut extended = blob.clone();
+        extended.push(0xAB);
+        assert!(!p.import_state(&extended));
+        // wrong plane count
+        let mut q = H2oPolicy::new(3, 8);
+        assert!(!q.import_state(&blob));
+        // stateless default accepts only empty
+        let mut local = LocalPolicy;
+        assert!(local.import_state(&[]));
+        assert!(!local.import_state(&[1, 2, 3]));
     }
 
     #[test]

@@ -135,6 +135,20 @@ pub struct LoadReport {
     pub promotions: u64,
     /// Hysteresis-suppressed promotions this run caused (same delta).
     pub thrash_suppressed: u64,
+    /// Cold-tier restores THIS run caused (delta of `restore_samples`
+    /// against the pre-run baseline; 0 unless the server has a cold tier
+    /// and sessions aged out mid-conversation).
+    pub restores: u64,
+    /// Server-reported p50 of cold-restore latency (µs) from the trailing
+    /// `stats` op (0 when unreported or no restore ever happened).
+    pub restore_us_p50: f64,
+    /// Server-reported p99 of cold-restore latency (µs).
+    pub restore_us_p99: f64,
+    /// Sessions still spilled on disk after the run (a clean run releases
+    /// every session, so nonzero means the workload left cold state).
+    pub parked_cold_sessions: usize,
+    /// Their on-disk footprint in bytes.
+    pub cold_bytes: u64,
 }
 
 /// Per-connection raw samples.
@@ -202,6 +216,11 @@ pub fn run_load(addr: &str, cfg: &LoadConfig) -> crate::Result<LoadReport> {
         thrash_suppressed: after
             .thrash_suppressed
             .saturating_sub(baseline.thrash_suppressed),
+        restores: after.restore_samples.saturating_sub(baseline.restore_samples),
+        restore_us_p50: after.restore_us_p50,
+        restore_us_p99: after.restore_us_p99,
+        parked_cold_sessions: after.parked_cold_sessions,
+        cold_bytes: after.cold_bytes,
     })
 }
 
@@ -215,6 +234,11 @@ struct StatsProbe {
     assembly_us_p99: f64,
     promotions: u64,
     thrash_suppressed: u64,
+    restore_samples: u64,
+    restore_us_p50: f64,
+    restore_us_p99: f64,
+    parked_cold_sessions: usize,
+    cold_bytes: u64,
 }
 
 fn stats_probe(addr: &str) -> StatsProbe {
@@ -238,6 +262,14 @@ fn stats_probe(addr: &str) -> StatsProbe {
         .field_i64("thrash_suppressed")
         .unwrap_or(0)
         .max(0) as u64;
+    out.restore_samples = stats.field_i64("restore_samples").unwrap_or(0).max(0) as u64;
+    out.restore_us_p50 = stats.field_f64("restore_us_p50").unwrap_or(0.0);
+    out.restore_us_p99 = stats.field_f64("restore_us_p99").unwrap_or(0.0);
+    out.parked_cold_sessions = stats
+        .field_i64("parked_cold_sessions")
+        .unwrap_or(0)
+        .max(0) as usize;
+    out.cold_bytes = stats.field_i64("cold_bytes").unwrap_or(0).max(0) as u64;
     if let Ok(rows) = stats.field_arr("workers") {
         for row in rows {
             out.counters.insert(

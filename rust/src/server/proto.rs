@@ -21,7 +21,11 @@
 //!   (+`k`) | `mikv` (+`ratio`, `lo`, `group`, `policy`, and the opt-in
 //!   boolean `promotion` enabling the lo→hi promotion pass) | `h2o`
 //!   (+`ratio`) | `rtn` (+`lo`). With `"keep":true` the session's cache
-//!   stays checked out after `done` under the returned `session` id.
+//!   stays checked out after `done` under the returned `session` id. The
+//!   optional boolean `spill` (any mode, default true) controls whether a
+//!   kept session may later spill to the on-disk cold tier when it is
+//!   evicted from the parked registry; `false` drops it instead so its KV
+//!   state never touches disk.
 //! * `append` — continue a kept session: the new prompt tokens re-ingest
 //!   into the same hi/lo tiers (`keep` defaults to true here). Session ids
 //!   are coordinator-global and carry no capability token: any connection
@@ -283,6 +287,7 @@ fn legacy_spec(v: &Json) -> CompressionSpec {
             .and_then(Json::as_i64)
             .map(|k| k.max(0) as usize),
         promotion: v.field("promotion").ok().and_then(Json::as_bool),
+        spill: v.field("spill").ok().and_then(Json::as_bool),
     }
 }
 
@@ -328,6 +333,12 @@ fn spec_from_json(c: &Json) -> Result<CompressionSpec, WireError> {
         })?),
         Err(_) => None,
     };
+    let spill = match c.field("spill") {
+        Ok(j) => Some(j.as_bool().ok_or_else(|| {
+            WireError::bad_request("compression.spill must be a boolean")
+        })?),
+        Err(_) => None,
+    };
     Ok(CompressionSpec {
         mode: str_field("mode")?.unwrap_or_else(|| "full".to_string()),
         ratio,
@@ -339,6 +350,7 @@ fn spec_from_json(c: &Json) -> Result<CompressionSpec, WireError> {
         policy: str_field("policy")?,
         k: uint_field("k")?,
         promotion,
+        spill,
     })
 }
 
@@ -368,6 +380,9 @@ fn spec_fields_into(o: &mut JsonObj, spec: &CompressionSpec) {
     }
     if let Some(p) = spec.promotion {
         o.set("promotion", p);
+    }
+    if let Some(s) = spec.spill {
+        o.set("spill", s);
     }
 }
 
@@ -425,6 +440,11 @@ pub fn encode_event(ev: &ServeEvent) -> String {
             o.set("waiting", snapshot.waiting);
             o.set("parked_sessions", snapshot.parked_sessions);
             o.set("parked_bytes", snapshot.parked_bytes);
+            // Cold tier: sessions spilled to disk, their on-disk footprint,
+            // and capacity evictions (each one a lost session context).
+            o.set("parked_cold_sessions", snapshot.parked_cold_sessions);
+            o.set("cold_bytes", snapshot.cold_bytes as i64);
+            o.set("cold_evictions", snapshot.cold_evictions as i64);
             o.set("completed", snapshot.completed);
             o.set("generated_tokens", snapshot.generated_tokens);
             o.set("throughput_tps", snapshot.throughput_tps);
@@ -435,6 +455,12 @@ pub fn encode_event(ev: &ServeEvent) -> String {
             o.set("assembly_us_p50", snapshot.assembly_us_p50);
             o.set("assembly_us_p99", snapshot.assembly_us_p99);
             o.set("assembly_samples", snapshot.assembly_samples as i64);
+            // Cold-restore latency percentiles (µs) — time to decode a
+            // spilled session's snapshot back into a pooled cache on
+            // `append`.
+            o.set("restore_us_p50", snapshot.restore_us_p50);
+            o.set("restore_us_p99", snapshot.restore_us_p99);
+            o.set("restore_samples", snapshot.restore_samples as i64);
             // Tier-lifecycle counters (the lo→hi promotion pass; 0 unless
             // sessions opted into `compression.promotion`).
             o.set("promotions", snapshot.promotions as i64);
@@ -456,12 +482,17 @@ pub fn encode_event(ev: &ServeEvent) -> String {
                     wo.set("active", w.active);
                     wo.set("waiting", w.waiting);
                     wo.set("parked_sessions", w.parked_sessions);
+                    wo.set("parked_cold_sessions", w.parked_cold_sessions);
+                    wo.set("cold_bytes", w.cold_bytes as i64);
                     wo.set("completed", w.completed);
                     wo.set("generated_tokens", w.generated_tokens);
                     wo.set("throughput_tps", w.throughput_tps);
                     wo.set("assembly_us_p50", w.assembly_us_p50);
                     wo.set("assembly_us_p99", w.assembly_us_p99);
                     wo.set("assembly_samples", w.assembly_samples as i64);
+                    wo.set("restore_us_p50", w.restore_us_p50);
+                    wo.set("restore_us_p99", w.restore_us_p99);
+                    wo.set("restore_samples", w.restore_samples as i64);
                     wo.set("promotions", w.promotions as i64);
                     wo.set("thrash_suppressed", w.thrash_suppressed as i64);
                     Json::Obj(wo)
@@ -677,7 +708,7 @@ mod tests {
         let w = submit(
             r#"{"v":1,"op":"generate","id":3,"prompt":[1,2],"max_new":4,"stop":6,
                 "keep":true,"compression":{"mode":"mikv","ratio":0.25,"lo":"int2",
-                "group":2,"policy":"local","promotion":true}}"#,
+                "group":2,"policy":"local","promotion":true,"spill":false}}"#,
         );
         assert_eq!(w.id, 3);
         assert_eq!(w.prompt, vec![1, 2]);
@@ -692,12 +723,14 @@ mod tests {
         assert_eq!(w.spec.group, Some(2));
         assert_eq!(w.spec.policy.as_deref(), Some("local"));
         assert_eq!(w.spec.promotion, Some(true));
+        assert_eq!(w.spec.spill, Some(false));
 
-        // absent promotion decodes as None (off)
+        // absent promotion/spill decode as None (off / server default)
         let w = submit(
             r#"{"v":1,"op":"generate","id":4,"prompt":[1],"compression":{"mode":"mikv"}}"#,
         );
         assert_eq!(w.spec.promotion, None);
+        assert_eq!(w.spec.spill, None);
     }
 
     #[test]
@@ -759,8 +792,9 @@ mod tests {
             (r#"{"v":1,"op":"generate","id":12,"prompt":[1],"keep":1}"#, 12),
             (r#"{"v":1,"op":"generate","id":13,"prompt":[1],"max_new":2.5}"#, 13),
             (r#"{"v":1,"op":"generate","id":14,"prompt":[1],"stop":6.5}"#, 14),
-            // promotion must be a boolean, never coerced
+            // promotion/spill must be booleans, never coerced
             (r#"{"v":1,"op":"generate","id":15,"prompt":[1],"compression":{"promotion":1}}"#, 15),
+            (r#"{"v":1,"op":"generate","id":16,"prompt":[1],"compression":{"spill":1}}"#, 16),
         ];
         for (line, want_id) in cases {
             let e = decode_line(line).expect_err(line);
@@ -790,6 +824,7 @@ mod tests {
             policy: None,
             k: None,
             promotion: None,
+            spill: None,
         };
         if rng.gen_bool(0.5) {
             spec.ratio = Some((rng.gen_f32() as f64 * 100.0).round() / 100.0);
@@ -810,6 +845,9 @@ mod tests {
         }
         if rng.gen_bool(0.3) {
             spec.promotion = Some(rng.gen_bool(0.5));
+        }
+        if rng.gen_bool(0.3) {
+            spec.spill = Some(rng.gen_bool(0.5));
         }
         spec
     }
@@ -994,17 +1032,28 @@ mod tests {
             assembly_samples: 42,
             promotions: 9,
             thrash_suppressed: 4,
+            parked_cold_sessions: 2,
+            cold_bytes: 8192,
+            cold_evictions: 1,
+            restore_us_p50: 250.0,
+            restore_us_p99: 900.5,
+            restore_samples: 6,
             workers: vec![crate::coordinator::WorkerStats {
                 worker: 1,
                 active: 2,
                 waiting: 0,
                 parked_sessions: 1,
+                parked_cold_sessions: 2,
+                cold_bytes: 8192,
                 completed: 3,
                 generated_tokens: 12,
                 throughput_tps: 4.5,
                 assembly_us_p50: 12.5,
                 assembly_us_p99: 80.25,
                 assembly_samples: 42,
+                restore_us_p50: 250.0,
+                restore_us_p99: 900.5,
+                restore_samples: 6,
                 promotions: 9,
                 thrash_suppressed: 4,
             }],
@@ -1017,6 +1066,12 @@ mod tests {
         assert_eq!(v.field_i64("assembly_samples").unwrap(), 42);
         assert_eq!(v.field_i64("promotions").unwrap(), 9);
         assert_eq!(v.field_i64("thrash_suppressed").unwrap(), 4);
+        assert_eq!(v.field_i64("parked_cold_sessions").unwrap(), 2);
+        assert_eq!(v.field_i64("cold_bytes").unwrap(), 8192);
+        assert_eq!(v.field_i64("cold_evictions").unwrap(), 1);
+        assert!((v.field_f64("restore_us_p50").unwrap() - 250.0).abs() < 1e-9);
+        assert!((v.field_f64("restore_us_p99").unwrap() - 900.5).abs() < 1e-9);
+        assert_eq!(v.field_i64("restore_samples").unwrap(), 6);
         let rows = v.field_arr("workers").unwrap();
         assert_eq!(rows.len(), 1);
         assert_eq!(rows[0].field_i64("worker").unwrap(), 1);
@@ -1027,6 +1082,10 @@ mod tests {
         assert_eq!(rows[0].field_i64("assembly_samples").unwrap(), 42);
         assert_eq!(rows[0].field_i64("promotions").unwrap(), 9);
         assert_eq!(rows[0].field_i64("thrash_suppressed").unwrap(), 4);
+        assert_eq!(rows[0].field_i64("parked_cold_sessions").unwrap(), 2);
+        assert_eq!(rows[0].field_i64("cold_bytes").unwrap(), 8192);
+        assert!((rows[0].field_f64("restore_us_p50").unwrap() - 250.0).abs() < 1e-9);
+        assert_eq!(rows[0].field_i64("restore_samples").unwrap(), 6);
 
         let line = encode_event(&ServeEvent::CancelResult {
             id: 7,

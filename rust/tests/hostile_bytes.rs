@@ -9,6 +9,10 @@
 //! of valid v1 frames (flips, truncations, insertions, splices) and raw
 //! garbage that was never JSON to begin with.
 
+use mikv::kvcache::spill::{self, Writer};
+use mikv::kvcache::{BufferPool, SpillError};
+use mikv::model::{CacheMode, Session, SessionCache};
+use mikv::runtime::ModelDims;
 use mikv::server::proto::{decode_line, RequestBuilder};
 use mikv::util::json::Json;
 use mikv::util::prop::{forall, Config};
@@ -112,4 +116,201 @@ fn adversarial_json_shapes_never_panic() {
     for c in cases {
         never_panics(c);
     }
+}
+
+// ---------------------------------------------------------------------
+// Cold-tier snapshot codec (rust/src/kvcache/spill.rs) — held to the same
+// contract as the wire surface: whatever bytes come back off disk,
+// `decode_session` must return a structured `SpillError`, never panic,
+// because restore runs on the serving path (a corrupt snapshot maps onto
+// `session_not_found`, not a downed worker).
+// ---------------------------------------------------------------------
+
+fn spill_dims() -> ModelDims {
+    ModelDims {
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_q_heads: 4,
+        n_kv_heads: 2,
+        d_head: 8,
+        d_ff: 64,
+        max_seq: 32,
+        quant_group: 4,
+        params: 0,
+    }
+}
+
+/// Build a live session of a random cache mode with a few prefilled
+/// tokens and encode it into a valid snapshot frame.
+fn valid_snapshot(rng: &mut Pcg32) -> Vec<u8> {
+    let dm = spill_dims();
+    let mode_str = *rng.choose(&["full", "oracle:4", "mikv:0.5:int4", "mikv:0.25:int2"]);
+    let mode = CacheMode::parse(mode_str, &dm).expect("parsable mode");
+    let mut sess = Session::new(rng.next_u64(), &dm, mode).expect("session");
+    let planes = dm.planes();
+    let d = dm.d_head;
+    let t0 = 2 + rng.gen_below(6) as usize;
+    let k: Vec<f32> = (0..planes * t0 * d).map(|_| rng.gen_normal()).collect();
+    let v: Vec<f32> = (0..planes * t0 * d).map(|_| rng.gen_normal()).collect();
+    match &mut sess.cache {
+        SessionCache::Mikv(m) => {
+            let acc: Vec<f32> = (0..planes * t0).map(|_| rng.gen_f32()).collect();
+            let qmax: Vec<f32> = (0..planes * d).map(|_| rng.gen_f32() + 0.5).collect();
+            let kmax: Vec<f32> = (0..planes * d).map(|_| rng.gen_f32() + 0.5).collect();
+            m.ingest_prefill(t0, &k, &v, &acc, &qmax, &kmax);
+        }
+        SessionCache::Full(f) => f.ingest_prefill(t0, &k, &v),
+    }
+    sess.tokens = (0..t0 as i64).collect();
+    sess.prompt_len = t0;
+    sess.last_token = (t0 - 1) as i64;
+    spill::encode_session(&sess).expect("valid session encodes")
+}
+
+/// Decode hostile snapshot bytes; only a panic can fail this.
+fn decode_never_panics(bytes: &[u8]) -> Result<(), SpillError> {
+    spill::decode_session(bytes, &spill_dims(), &BufferPool::new()).map(|_| ())
+}
+
+#[test]
+fn truncated_snapshots_fail_structurally_at_every_cut() {
+    let mut rng = Pcg32::new(0x51C0);
+    let frame = valid_snapshot(&mut rng);
+    assert!(decode_never_panics(&frame).is_ok(), "uncut frame must decode");
+    for cut in 0..frame.len() {
+        assert!(
+            decode_never_panics(&frame[..cut]).is_err(),
+            "truncation at {cut}/{} decoded",
+            frame.len()
+        );
+    }
+}
+
+#[test]
+fn single_byte_corruption_is_always_rejected() {
+    // Any single-byte change must be caught: in the payload by the FNV
+    // checksum, in the header by the magic/version/length/checksum checks.
+    let mut rng = Pcg32::new(0x51C1);
+    let frame = valid_snapshot(&mut rng);
+    for pos in 0..frame.len() {
+        for mask in [0x01u8, 0x80] {
+            let mut f = frame.clone();
+            f[pos] ^= mask;
+            assert!(
+                decode_never_panics(&f).is_err(),
+                "flip {mask:#x} at byte {pos} decoded"
+            );
+        }
+    }
+}
+
+#[test]
+fn mutated_snapshots_never_panic_the_decoder() {
+    forall(Config::default().cases(150).seed(0x51C2).name("mutated snapshots"), |rng| {
+        let mut bytes = valid_snapshot(rng);
+        mutate(rng, &mut bytes);
+        let _ = decode_never_panics(&bytes);
+        Ok(())
+    });
+}
+
+#[test]
+fn raw_garbage_never_panics_the_decoder() {
+    forall(Config::default().cases(300).seed(0x51C3).name("garbage snapshots"), |rng| {
+        let n = rng.gen_below(256) as usize;
+        let bytes: Vec<u8> = (0..n).map(|_| rng.next_u32() as u8).collect();
+        let _ = decode_never_panics(&bytes);
+        Ok(())
+    });
+}
+
+#[test]
+fn future_version_frames_are_rejected_with_the_version_error() {
+    let mut f = Vec::new();
+    f.extend_from_slice(&spill::MAGIC);
+    f.extend_from_slice(&2u32.to_le_bytes());
+    f.extend_from_slice(&0u64.to_le_bytes());
+    f.extend_from_slice(&spill::checksum(&[]).to_le_bytes());
+    assert_eq!(
+        decode_never_panics(&f).err(),
+        Some(SpillError::UnsupportedVersion(2))
+    );
+}
+
+#[test]
+fn checksum_valid_but_malformed_payloads_fail_structurally() {
+    // Frames whose header and checksum are perfectly valid but whose
+    // payload lies — the cases a checksum alone cannot catch.
+    let empty = Writer::with_capacity(0).into_frame();
+    assert!(matches!(
+        decode_never_panics(&empty).err(),
+        Some(SpillError::Truncated { .. })
+    ));
+
+    // Token count far beyond the payload: rejected up front, before any
+    // allocation sized from the hostile length.
+    let mut w = Writer::with_capacity(16);
+    w.put_u64(7); // id
+    w.put_u64(u64::MAX); // n_tokens
+    assert!(matches!(
+        decode_never_panics(&w.into_frame()).err(),
+        Some(SpillError::Truncated { .. })
+    ));
+
+    // Session header with an out-of-range `done` flag.
+    let mut w = Writer::with_capacity(64);
+    w.put_u64(7); // id
+    w.put_u64(1); // n_tokens
+    w.put_i64(5); // tokens[0]
+    w.put_u64(1); // prompt_len
+    w.put_i64(5); // last_token
+    w.put_u8(9); // done: not 0/1
+    assert_eq!(
+        decode_never_panics(&w.into_frame()).err(),
+        Some(SpillError::Malformed("done flag"))
+    );
+
+    // prompt_len exceeding the token history.
+    let mut w = Writer::with_capacity(64);
+    w.put_u64(7);
+    w.put_u64(1);
+    w.put_i64(5);
+    w.put_u64(10); // prompt_len > n_tokens
+    w.put_i64(5);
+    w.put_u8(0);
+    assert_eq!(
+        decode_never_panics(&w.into_frame()).err(),
+        Some(SpillError::Malformed("prompt_len exceeds token count"))
+    );
+
+    // Unknown mode tag.
+    let mut w = Writer::with_capacity(64);
+    w.put_u64(7);
+    w.put_u64(1);
+    w.put_i64(5);
+    w.put_u64(1);
+    w.put_i64(5);
+    w.put_u8(0);
+    w.put_u8(9); // mode tag: not 0/1/2
+    assert_eq!(
+        decode_never_panics(&w.into_frame()).err(),
+        Some(SpillError::Malformed("mode tag"))
+    );
+
+    // A MiKV header whose policy/config region is random bytes: must land
+    // on some structured error, whichever field trips first.
+    let mut rng = Pcg32::new(0x51C4);
+    let mut w = Writer::with_capacity(256);
+    w.put_u64(7);
+    w.put_u64(1);
+    w.put_i64(5);
+    w.put_u64(1);
+    w.put_i64(5);
+    w.put_u8(0);
+    w.put_u8(0); // MiKV mode tag
+    for _ in 0..128 {
+        w.put_u8(rng.next_u32() as u8);
+    }
+    assert!(decode_never_panics(&w.into_frame()).is_err());
 }

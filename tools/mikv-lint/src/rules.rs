@@ -36,6 +36,7 @@ pub fn panic_free_scope(path: &str) -> bool {
         || path.starts_with("rust/src/coordinator/")
         || path == "rust/src/model/session.rs"
         || path == "rust/src/model/assembly.rs"
+        || path == "rust/src/kvcache/spill.rs"
 }
 
 /// Files subject to `hot-path-alloc-free`.
@@ -45,6 +46,7 @@ pub fn alloc_free_scope(path: &str) -> bool {
         "rust/src/model/assembly.rs"
             | "rust/src/kvcache/dirty.rs"
             | "rust/src/kvcache/tier.rs"
+            | "rust/src/kvcache/spill.rs"
             | "rust/src/quant/packing.rs"
     )
 }
