@@ -23,9 +23,11 @@
 //! point, including the workers-N vs workers-1 speedup).
 
 use mikv::bench::{Cell, Table};
-use mikv::coordinator::CoordinatorConfig;
+use mikv::coordinator::{CoordinatorConfig, QosConfig};
 use mikv::model::StubEngine;
-use mikv::server::loadgen::{run_load, with_stub_stack, LoadConfig, LoadReport};
+use mikv::server::loadgen::{
+    run_load, with_stub_stack_qos, LoadConfig, LoadReport, Scenario,
+};
 use mikv::util::cli::Args;
 use mikv::util::json::{Json, JsonObj};
 use std::time::Duration;
@@ -42,12 +44,21 @@ fn main() -> anyhow::Result<()> {
     // so the wire `promotions`/`thrash_suppressed` counters (and their
     // serving-throughput cost) land in BENCH_serve.json.
     let promotion = args.flag("promotion");
+    // --scenario: arrival-process shape (steady | bursty | heavy-tail |
+    // flash-crowd | chatty); --qos boots the stack with the QoS admission
+    // layer (per-connection fair queuing + shedding), so fairness and shed
+    // counters become meaningful rows.
+    let scenario_name = args.get_str("scenario", "steady");
+    let scenario = Scenario::parse(&scenario_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown --scenario '{scenario_name}'"))?;
+    let qos = args.flag("qos").then(QosConfig::default);
     let mut load = LoadConfig {
         conns: args.get_nonzero("conns", if smoke { 4 } else { 12 })?,
         turns: args.get_nonzero("turns", if smoke { 2 } else { 3 })?,
         max_new: args.get_nonzero("max-new", if smoke { 8 } else { 24 })?,
         prompt_len: args.get_nonzero("prompt-len", 6)?,
         seed: args.get("seed", 0x5EEDu64)?,
+        scenario,
         ..LoadConfig::default()
     };
     if promotion {
@@ -59,24 +70,27 @@ fn main() -> anyhow::Result<()> {
         "End-to-end serving throughput on StubEngine (full TCP stack)",
         &[
             "workers", "tok/s", "tokens", "wall_ms", "ttft_p50_ms", "ttft_p99_ms",
-            "lat_p50_ms", "lat_p99_ms", "util",
+            "lat_p50_ms", "lat_p99_ms", "p99_spread", "shed", "util",
         ],
     );
     table.note(format!(
-        "conns={} turns={} max_new={} delay_us={} iters={} seed={:#x} (best of iters)",
+        "conns={} turns={} max_new={} delay_us={} iters={} seed={:#x} scenario={} qos={} \
+         (best of iters)",
         load.conns,
         load.turns,
         load.max_new,
         delay.as_micros(),
         iters,
-        load.seed
+        load.seed,
+        load.scenario.as_str(),
+        qos.is_some(),
     ));
 
     let mut results: Vec<(usize, LoadReport)> = Vec::new();
     for &workers in &workers_list {
         let mut best: Option<LoadReport> = None;
         for _ in 0..iters {
-            let report = run_one(workers, &load, delay)?;
+            let report = run_one(workers, &load, delay, qos.clone())?;
             let better = best
                 .as_ref()
                 .map(|b| report.tokens_per_sec > b.tokens_per_sec)
@@ -101,6 +115,9 @@ fn main() -> anyhow::Result<()> {
             Cell::F(report.ttft_p99.as_secs_f64() * 1e3, 2),
             Cell::F(report.latency_p50.as_secs_f64() * 1e3, 2),
             Cell::F(report.latency_p99.as_secs_f64() * 1e3, 2),
+            Cell::F(report.conn_p99_spread, 2),
+            ((report.shed_batch + report.shed_interactive + report.rate_limited) as usize)
+                .into(),
             util.into(),
         ]);
         results.push((workers, report));
@@ -126,6 +143,8 @@ fn main() -> anyhow::Result<()> {
     o.set("seed", load.seed as i64);
     o.set("smoke", smoke);
     o.set("promotion", promotion);
+    o.set("scenario", load.scenario.as_str());
+    o.set("qos", qos.is_some());
     let rows: Vec<Json> = results
         .iter()
         .map(|(workers, r)| {
@@ -138,6 +157,24 @@ fn main() -> anyhow::Result<()> {
             ro.set("ttft_p99_ms", r.ttft_p99.as_secs_f64() * 1e3);
             ro.set("latency_p50_ms", r.latency_p50.as_secs_f64() * 1e3);
             ro.set("latency_p99_ms", r.latency_p99.as_secs_f64() * 1e3);
+            // Fairness & shedding rows: ok/error turn split, per-conn p99
+            // spread, rejection percentiles and the QoS shed counters
+            // (all zero/1.0 on a QoS-less steady run).
+            ro.set("turns_ok", r.turns_ok);
+            ro.set("turns_err", r.turns_err);
+            ro.set("conn_p99_spread", r.conn_p99_spread);
+            ro.set(
+                "rejected_latency_p50_ms",
+                r.rejected_latency_p50.as_secs_f64() * 1e3,
+            );
+            ro.set(
+                "rejected_latency_p99_ms",
+                r.rejected_latency_p99.as_secs_f64() * 1e3,
+            );
+            ro.set("rejects_with_hint", r.rejects_with_hint);
+            ro.set("shed_batch", r.shed_batch as i64);
+            ro.set("shed_interactive", r.shed_interactive as i64);
+            ro.set("rate_limited", r.rate_limited as i64);
             // Server-side decode-assembly cost (µs percentiles from the
             // trailing stats op; 0 when the engine doesn't measure it).
             ro.set("assembly_us_p50", r.assembly_us_p50);
@@ -172,18 +209,27 @@ fn main() -> anyhow::Result<()> {
 
 /// Boot a sharded stub runtime, run the load workload against it over real
 /// sockets, and tear it down.
-fn run_one(workers: usize, load: &LoadConfig, delay: Duration) -> anyhow::Result<LoadReport> {
+fn run_one(
+    workers: usize,
+    load: &LoadConfig,
+    delay: Duration,
+    qos: Option<QosConfig>,
+) -> anyhow::Result<LoadReport> {
     let mut base = StubEngine::new(StubEngine::test_dims(256));
     base.decode_delay = delay;
     let load = load.clone();
-    let report = with_stub_stack(
+    let qos_on = qos.is_some();
+    let report = with_stub_stack_qos(
         workers,
         CoordinatorConfig::default(),
+        qos,
         base,
         move |addr| run_load(&addr, &load),
     )??;
+    // A QoS stack is *allowed* to shed under pressure (the rejections are
+    // part of what the bench measures); a stock FCFS run must stay clean.
     anyhow::ensure!(
-        report.turns_err == 0,
+        qos_on || report.turns_err == 0,
         "{} of {} turns failed",
         report.turns_err,
         report.turns_ok + report.turns_err

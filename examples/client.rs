@@ -13,7 +13,11 @@
 //!   `--turns K` turns each (`--max-new` tokens per turn). Self-hosts a
 //!   sharded stub runtime with `--workers N` engine workers (per-session
 //!   decode cost `--delay-us`), or targets a running server via `--addr`.
-//!   Prints tokens/s, TTFT/latency percentiles and per-worker utilization.
+//!   `--scenario steady|bursty|heavy-tail|flash-crowd|chatty` shapes the
+//!   arrival process; `--qos` boots the self-hosted stack with the QoS
+//!   admission layer (fair queuing + shedding), and `--priority batch`
+//!   tags every turn for the batch lane. Prints tokens/s, TTFT/latency
+//!   percentiles, per-connection p99 spread and per-worker utilization.
 //! * default — connects to a running `mikv serve` at `--addr` and runs the
 //!   same smoke workflow against the real engine.
 //!
@@ -24,9 +28,9 @@
 //! cargo run --release --example client -- --addr 127.0.0.1:7777
 //! ```
 
-use mikv::coordinator::{CompressionSpec, Coordinator, CoordinatorConfig, Op};
+use mikv::coordinator::{CompressionSpec, Coordinator, CoordinatorConfig, Op, Priority, QosConfig};
 use mikv::model::StubEngine;
-use mikv::server::loadgen::{run_load, with_stub_stack, LoadConfig};
+use mikv::server::loadgen::{run_load, with_stub_stack_qos, LoadConfig, Scenario};
 use mikv::server::{Client, RequestBuilder};
 use mikv::util::cli::Args;
 use mikv::util::json::Json;
@@ -62,17 +66,27 @@ fn main() -> anyhow::Result<()> {
 /// Load-generator mode: M concurrent connections × K turns against a
 /// sharded stub runtime (or `--addr` for an external server).
 fn load_mode(args: &Args) -> anyhow::Result<()> {
+    let scenario_name = args.get_str("scenario", "steady");
+    let scenario = Scenario::parse(&scenario_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown --scenario '{scenario_name}'"))?;
+    let priority_name = args.get_str("priority", "interactive");
+    let priority = Priority::parse(&priority_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown --priority '{priority_name}'"))?;
     let mut cfg = LoadConfig {
         conns: args.get_nonzero("conns", 8)?,
         turns: args.get_nonzero("turns", 2)?,
         max_new: args.get_nonzero("max-new", 16)?,
         prompt_len: args.get_nonzero("prompt-len", 6)?,
         seed: args.get("seed", 0x10ADu64)?,
+        scenario,
+        priority,
         ..LoadConfig::default()
     };
     if args.flag("promotion") {
         cfg.spec = cfg.spec.promoted();
     }
+    let qos = args.flag("qos").then(QosConfig::default);
+    let qos_on = qos.is_some();
     let report = if let Ok(addr) = args.require_str("addr") {
         run_load(&addr, &cfg)?
     } else {
@@ -81,9 +95,13 @@ fn load_mode(args: &Args) -> anyhow::Result<()> {
         let mut base = StubEngine::new(StubEngine::test_dims(256));
         base.decode_delay = Duration::from_micros(args.get("delay-us", 300u64)?);
         let load_cfg = cfg.clone();
-        with_stub_stack(workers, CoordinatorConfig::default(), base, move |addr| {
-            run_load(&addr, &load_cfg)
-        })??
+        with_stub_stack_qos(
+            workers,
+            CoordinatorConfig::default(),
+            qos,
+            base,
+            move |addr| run_load(&addr, &load_cfg),
+        )??
     };
     println!(
         "load: {} conns x {} turns, {} tokens in {:.1}ms -> {:.0} tok/s \
@@ -121,7 +139,22 @@ fn load_mode(args: &Args) -> anyhow::Result<()> {
             report.promotions, report.thrash_suppressed
         );
     }
-    anyhow::ensure!(report.turns_err == 0, "{} turns failed", report.turns_err);
+    println!(
+        "fairness: per-conn p99 spread {:.2}x | shed {} batch / {} interactive, \
+         {} rate-limited ({} rejections carried retry_after_ms)",
+        report.conn_p99_spread,
+        report.shed_batch,
+        report.shed_interactive,
+        report.rate_limited,
+        report.rejects_with_hint,
+    );
+    // A QoS stack is allowed to shed under pressure — those rejections are
+    // part of what the run measures. A stock FCFS run must stay clean.
+    anyhow::ensure!(
+        qos_on || report.turns_err == 0,
+        "{} turns failed",
+        report.turns_err
+    );
     Ok(())
 }
 

@@ -376,7 +376,16 @@ impl<E: StepEngine> Coordinator<E> {
         let mut closed = false;
 
         while !((closed || stop()) && waiting.is_empty() && active.is_empty()) {
-            // 1. Drain the channel (block briefly when idle).
+            // 1. Drain the channel (block briefly when idle). While work is
+            // in flight the drain is CAPPED per loop iteration: a client
+            // submitting faster than ops are handled must not keep this
+            // loop spinning and starve the decode rounds below of their
+            // turn (active sessions would stop emitting tokens entirely).
+            // `max_waiting` ops per iteration is always enough to refill
+            // the waiting queue to its bound; the rest stay in the channel
+            // for the next iteration, at most one decode round away.
+            let drain_cap = self.cfg.max_waiting.max(1);
+            let mut drained = 0usize;
             loop {
                 match if active.is_empty() && waiting.is_empty() && !closed {
                     rx.recv_timeout(self.cfg.idle_poll)
@@ -386,7 +395,12 @@ impl<E: StepEngine> Coordinator<E> {
                         .map_err(|e| e == std::sync::mpsc::TryRecvError::Disconnected)
                 } {
                     Ok(op) => {
-                        self.handle_op(op, &mut waiting, &mut active, &parked, &collector)
+                        self.handle_op(op, &mut waiting, &mut active, &parked, &collector);
+                        drained += 1;
+                        if drained >= drain_cap && !(active.is_empty() && waiting.is_empty())
+                        {
+                            break;
+                        }
                     }
                     Err(true) => {
                         closed = true;
@@ -497,6 +511,14 @@ impl<E: StepEngine> Coordinator<E> {
                     promotions: collector.promotions(),
                     thrash_suppressed: collector.thrash_suppressed(),
                     pool: self.pool.stats(),
+                    // Admission-side gauges are the scheduler's to fill in
+                    // when it folds the broadcast answers; a worker cannot
+                    // see ops still in flight toward it.
+                    admitted_in_flight: 0,
+                    qos_queued: 0,
+                    shed_batch: 0,
+                    shed_interactive: 0,
+                    rate_limited: 0,
                     workers: vec![WorkerStats {
                         worker: self.worker_id,
                         active: active.len(),
@@ -515,6 +537,7 @@ impl<E: StepEngine> Coordinator<E> {
                         restore_samples,
                         promotions: collector.promotions(),
                         thrash_suppressed: collector.thrash_suppressed(),
+                        admitted_in_flight: 0,
                     }],
                 };
                 let _ = reply.emit(ServeEvent::Stats { id, snapshot });
@@ -1043,6 +1066,8 @@ mod tests {
             spec: CompressionSpec::full(),
             session: None,
             keep: false,
+            tenant: 0,
+            priority: crate::coordinator::Priority::Interactive,
             submitted_at: Instant::now(),
             reply,
         }
@@ -1219,6 +1244,100 @@ mod tests {
         assert_eq!(ok, 1);
     }
 
+    /// Regression for the drain-loop starvation bug: step 1 of `run_until`
+    /// used to drain the op channel until it was EMPTY while work was in
+    /// flight, so a client flooding ops faster than `handle_op` processes
+    /// them kept the loop spinning and the active turn frozen mid-stream
+    /// (no decode rounds → no tokens → no terminal event). With the
+    /// per-iteration drain cap, one decode round is guaranteed between
+    /// bounded drains, so the already-active turn below completes no
+    /// matter how hard the flooders hammer the channel.
+    #[test]
+    fn flooding_submitter_does_not_stall_active_turn() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+
+        let mut dims = StubEngine::test_dims(64);
+        dims.vocab = 16;
+        let mut engine = StubEngine::new(dims);
+        // Each decode step takes ~1ms, holding the turn active long enough
+        // for the flood to saturate the channel while it streams.
+        engine.decode_delay = Duration::from_millis(1);
+        let cfg = CoordinatorConfig {
+            max_active: 4,
+            max_waiting: 4,
+            ..CoordinatorConfig::default()
+        };
+        let coordinator = Coordinator::new(engine, cfg);
+        let (tx, rx) = mpsc::channel::<Op>();
+        let stop_flood = Arc::new(AtomicBool::new(false));
+
+        let driver = std::thread::spawn({
+            let stop_flood = stop_flood.clone();
+            move || {
+                let (etx, erx) = mpsc::channel::<ServeEvent>();
+                tx.send(Op::Submit(request(1, 3, 10, sink(&etx)))).unwrap();
+                // First token proves the turn is admitted and decoding
+                // BEFORE the flood begins — progress from here on is what
+                // the drain cap must protect.
+                loop {
+                    match erx.recv_timeout(Duration::from_secs(10)) {
+                        Ok(ServeEvent::Token { .. }) => break,
+                        Ok(_) => {}
+                        Err(e) => panic!("no first token: {e:?}"),
+                    }
+                }
+                // Flooders hammer the channel with cheap ops (unknown-target
+                // cancels: handled in O(active+waiting), never admitted, so
+                // the post-test drain stays fast) until the turn completes.
+                // The send cap is a safety valve bounding memory if the
+                // starvation bug ever regresses.
+                let mut floods = Vec::new();
+                for _ in 0..3 {
+                    let tx = tx.clone();
+                    let stop_flood = stop_flood.clone();
+                    floods.push(std::thread::spawn(move || {
+                        let (ftx, frx) = mpsc::channel::<ServeEvent>();
+                        drop(frx);
+                        let mut sent = 0u64;
+                        while !stop_flood.load(Ordering::Acquire) && sent < 2_000_000 {
+                            sent += 1;
+                            if tx
+                                .send(Op::Cancel {
+                                    id: u64::MAX - sent,
+                                    target: u64::MAX - sent,
+                                    reply: Box::new(ftx.clone()),
+                                })
+                                .is_err()
+                            {
+                                break;
+                            }
+                        }
+                    }));
+                }
+                let done = loop {
+                    match erx.recv_timeout(Duration::from_secs(30)) {
+                        Ok(ServeEvent::Done(r)) => break r,
+                        Ok(_) => {}
+                        Err(e) => {
+                            stop_flood.store(true, Ordering::Release);
+                            panic!("active turn starved under op flood: {e:?}");
+                        }
+                    }
+                };
+                stop_flood.store(true, Ordering::Release);
+                for f in floods {
+                    f.join().unwrap();
+                }
+                assert!(done.error.is_none(), "{:?}", done.error);
+                assert_eq!(done.tokens.len(), 10, "full token budget delivered");
+                drop(tx);
+            }
+        });
+        coordinator.run(rx);
+        driver.join().unwrap();
+    }
+
     /// Cancelling a waiting request is deterministic: it never runs, its
     /// terminal `done` carries `cancelled: true`, and the cancel op is
     /// answered with `found: true`.
@@ -1288,6 +1407,8 @@ mod tests {
                 spec: mikv.clone(),
                 session: None,
                 keep: true,
+                tenant: 0,
+                priority: crate::coordinator::Priority::Interactive,
                 submitted_at: Instant::now(),
                 reply: Box::new(etx.clone()),
             }))
@@ -1313,6 +1434,8 @@ mod tests {
                 spec: mikv,
                 session: Some(sid),
                 keep: true,
+                tenant: 0,
+                priority: crate::coordinator::Priority::Interactive,
                 submitted_at: Instant::now(),
                 reply: Box::new(etx.clone()),
             }))
@@ -1361,6 +1484,8 @@ mod tests {
                 spec: CompressionSpec::mikv(0.5, "int4"),
                 session: None,
                 keep: true,
+                tenant: 0,
+                priority: crate::coordinator::Priority::Interactive,
                 submitted_at: Instant::now(),
                 reply: Box::new(etx.clone()),
             }))
@@ -1380,6 +1505,8 @@ mod tests {
                 spec: CompressionSpec::full(),
                 session: Some(sid),
                 keep: false,
+                tenant: 0,
+                priority: crate::coordinator::Priority::Interactive,
                 submitted_at: Instant::now(),
                 reply: Box::new(etx.clone()),
             }))
@@ -1422,6 +1549,8 @@ mod tests {
                 spec: CompressionSpec::mikv(0.5, "int4"),
                 session: None,
                 keep: true,
+                tenant: 0,
+                priority: crate::coordinator::Priority::Interactive,
                 submitted_at: Instant::now(),
                 reply: Box::new(etx.clone()),
             }))
@@ -1440,6 +1569,8 @@ mod tests {
                 spec: CompressionSpec::full(),
                 session: Some(sid),
                 keep: false,
+                tenant: 0,
+                priority: crate::coordinator::Priority::Interactive,
                 submitted_at: Instant::now(),
                 reply: Box::new(etx.clone()),
             }))
@@ -1701,6 +1832,8 @@ mod tests {
                 spec: mikv.clone(),
                 session: None,
                 keep: true,
+                tenant: 0,
+                priority: crate::coordinator::Priority::Interactive,
                 submitted_at: Instant::now(),
                 reply: Box::new(etx.clone()),
             }))
@@ -1726,6 +1859,8 @@ mod tests {
                 spec: mikv,
                 session: Some(sid),
                 keep: false,
+                tenant: 0,
+                priority: crate::coordinator::Priority::Interactive,
                 submitted_at: Instant::now(),
                 reply: Box::new(etx.clone()),
             }))
@@ -1799,6 +1934,8 @@ mod tests {
                 spec: CompressionSpec::mikv(0.5, "int4"),
                 session: None,
                 keep: true,
+                tenant: 0,
+                priority: crate::coordinator::Priority::Interactive,
                 submitted_at: Instant::now(),
                 reply: Box::new(etx.clone()),
             }))
@@ -1837,6 +1974,8 @@ mod tests {
                 spec: CompressionSpec::full(),
                 session: Some(sid),
                 keep: false,
+                tenant: 0,
+                priority: crate::coordinator::Priority::Interactive,
                 submitted_at: Instant::now(),
                 reply: Box::new(etx.clone()),
             }))
@@ -1881,6 +2020,8 @@ mod tests {
                 spec: CompressionSpec::mikv(0.5, "int4"),
                 session: None,
                 keep: true,
+                tenant: 0,
+                priority: crate::coordinator::Priority::Interactive,
                 submitted_at: Instant::now(),
                 reply: Box::new(etx.clone()),
             }))
@@ -1910,6 +2051,8 @@ mod tests {
                 spec: CompressionSpec::full(),
                 session: Some(sid),
                 keep: false,
+                tenant: 0,
+                priority: crate::coordinator::Priority::Interactive,
                 submitted_at: Instant::now(),
                 reply: Box::new(etx.clone()),
             }))
@@ -1957,6 +2100,8 @@ mod tests {
                 spec: CompressionSpec::mikv(0.5, "int4").no_spill(),
                 session: None,
                 keep: true,
+                tenant: 0,
+                priority: crate::coordinator::Priority::Interactive,
                 submitted_at: Instant::now(),
                 reply: Box::new(etx.clone()),
             }))
@@ -1980,6 +2125,8 @@ mod tests {
                 spec: CompressionSpec::full(),
                 session: Some(sid),
                 keep: false,
+                tenant: 0,
+                priority: crate::coordinator::Priority::Interactive,
                 submitted_at: Instant::now(),
                 reply: Box::new(etx.clone()),
             }))

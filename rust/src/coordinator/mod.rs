@@ -28,14 +28,16 @@
 
 pub mod batcher;
 pub mod cold;
+pub mod qos;
 pub mod request;
 pub mod scheduler;
 pub mod stats;
 
 pub use batcher::{Coordinator, CoordinatorConfig, StepEngine};
 pub use cold::ColdStore;
+pub use qos::QosConfig;
 pub use request::{
-    CompressionSpec, ErrorCode, EventSink, Op, Reply, Request, RequestMetrics, Response,
+    CompressionSpec, ErrorCode, EventSink, Op, Priority, Reply, Request, RequestMetrics, Response,
     ServeEvent, WireError,
 };
 pub use scheduler::{worker_of_session, Scheduler};

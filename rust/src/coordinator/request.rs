@@ -77,11 +77,17 @@ impl fmt::Display for ErrorCode {
 }
 
 /// A structured error delivered over the wire: a stable code plus a
-/// human-readable message.
+/// human-readable message, and (for `overloaded` rejections from the QoS
+/// admission layer) an optional client backoff hint.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WireError {
     pub code: ErrorCode,
     pub message: String,
+    /// Backoff hint in milliseconds: "retrying sooner than this is almost
+    /// certainly wasted". Set only by QoS shedding / rate limiting; absent
+    /// (`None`) on every other error, which keeps the legacy error shape
+    /// byte-identical.
+    pub retry_after_ms: Option<u64>,
 }
 
 impl WireError {
@@ -89,6 +95,7 @@ impl WireError {
         WireError {
             code,
             message: message.into(),
+            retry_after_ms: None,
         }
     }
 
@@ -98,6 +105,12 @@ impl WireError {
 
     pub fn internal(message: impl Into<String>) -> WireError {
         Self::new(ErrorCode::Internal, message)
+    }
+
+    /// Attach a retry hint (QoS shed / rate-limit rejections).
+    pub fn with_retry_after(mut self, ms: u64) -> WireError {
+        self.retry_after_ms = Some(ms);
+        self
     }
 }
 
@@ -340,6 +353,47 @@ impl EventSink for mpsc::Sender<ServeEvent> {
 pub type Reply = Box<dyn EventSink>;
 
 // ----------------------------------------------------------------------
+// Priority lanes
+// ----------------------------------------------------------------------
+
+/// Admission priority lane for a submit op. Plain data parsed by the wire
+/// layer (`"priority": "interactive" | "batch"`); interpreted only by the
+/// QoS admission layer — with QoS disabled both lanes behave identically
+/// (FCFS), so the field is inert by default.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Priority {
+    /// Latency-sensitive traffic; served first and shed last.
+    #[default]
+    Interactive,
+    /// Throughput traffic; served when the interactive lane is empty and
+    /// shed first under pressure.
+    Batch,
+}
+
+impl Priority {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Priority> {
+        Some(match s {
+            "interactive" => Priority::Interactive,
+            "batch" => Priority::Batch,
+            _ => return None,
+        })
+    }
+}
+
+impl fmt::Display for Priority {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+// ----------------------------------------------------------------------
 // Ops & requests
 // ----------------------------------------------------------------------
 
@@ -374,6 +428,12 @@ pub struct Request {
     /// Keep the session's cache checked out after `done` so a follow-up
     /// `append` can continue it.
     pub keep: bool,
+    /// Tenant identity for fair queuing and rate limits. The TCP front-end
+    /// sets this to the connection id; in-process callers default to 0
+    /// (one implicit tenant — QoS sees a single queue, i.e. FCFS).
+    pub tenant: u64,
+    /// Admission lane (inert unless the scheduler runs with QoS enabled).
+    pub priority: Priority,
     pub submitted_at: Instant,
     pub reply: Reply,
 }
@@ -602,6 +662,26 @@ mod tests {
             assert_eq!(ErrorCode::parse(code.as_str()), Some(code));
         }
         assert_eq!(ErrorCode::parse("warp"), None);
+    }
+
+    #[test]
+    fn priority_roundtrips_and_defaults_interactive() {
+        for p in [Priority::Interactive, Priority::Batch] {
+            assert_eq!(Priority::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(Priority::parse("urgent"), None);
+        assert_eq!(Priority::default(), Priority::Interactive);
+    }
+
+    #[test]
+    fn retry_after_is_absent_unless_attached() {
+        let e = WireError::new(ErrorCode::Overloaded, "full");
+        assert_eq!(e.retry_after_ms, None);
+        let e = e.with_retry_after(50);
+        assert_eq!(e.retry_after_ms, Some(50));
+        // the plain constructors never set a hint
+        assert_eq!(WireError::bad_request("x").retry_after_ms, None);
+        assert_eq!(WireError::internal("x").retry_after_ms, None);
     }
 
     #[test]

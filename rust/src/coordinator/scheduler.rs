@@ -27,16 +27,34 @@
 //! (for TCP: the connection's writer channel), so the scheduler is never
 //! on the token-streaming path — it only places work.
 //!
+//! * **Multi-tenant QoS (opt-in)** — with a [`QosConfig`]
+//!   ([`Scheduler::start_with_qos`]), admission runs through per-worker
+//!   [`qos::DrrQueue`]s: deficit round-robin fair queuing keyed by tenant
+//!   (the TCP connection id), an interactive lane strictly ahead of a
+//!   batch lane, per-tenant token-bucket rate limits, and graceful
+//!   shedding under backlog pressure — the newest *batch*-lane waiting
+//!   turn is rejected first, then the newest interactive waiting turn,
+//!   and active work is never evicted. QoS rejections reuse the
+//!   `overloaded` error and carry a `retry_after_ms` backoff hint.
+//!   Without a `QosConfig` (the default), none of this machinery is even
+//!   constructed: admission is the historical FCFS forward, byte-identical
+//!   on the wire — regression-locked by
+//!   `backpressure_rejects_overloaded_at_admission`.
+//!
 //! `Scheduler::start(1, ...)` is behaviourally the old single-loop
 //! deployment: one worker, stride 1, every op forwarded.
 
 use super::batcher::{Coordinator, CoordinatorConfig, StepEngine};
-use super::request::{ErrorCode, EventSink, Op, Reply, Request, Response, ServeEvent, WireError};
+use super::qos::{self, DrrQueue, QosConfig, RateLimiter};
+use super::request::{
+    ErrorCode, EventSink, Op, Priority, Reply, Request, Response, ServeEvent, WireError,
+};
 use super::stats::StatsSnapshot;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 /// The worker that owns session `sid` under the stride contract
 /// (`Coordinator::for_worker` assigns `w+1, w+1+N, w+1+2N, ...`).
@@ -116,9 +134,18 @@ impl EventSink for CancelShard {
 }
 
 /// Aggregates the per-worker answers to a broadcast `stats` into one
-/// merged snapshot carrying the per-worker rows.
+/// merged snapshot carrying the per-worker rows. The scheduler's own
+/// admission-side view (in-flight submits per worker, queued QoS turns,
+/// shed/rate-limit counters) is injected at fold time — workers cannot see
+/// ops still between the scheduler and their channel, which is exactly the
+/// window that matters when overloaded.
 struct StatsFanout {
     id: u64,
+    loads: Arc<Vec<AtomicUsize>>,
+    counters: Arc<SchedCounters>,
+    /// Turns waiting in the scheduler's DRR queues at broadcast time
+    /// (0 without QoS).
+    qos_queued: usize,
     state: Mutex<StatsState>,
 }
 
@@ -143,7 +170,25 @@ impl EventSink for StatsShard {
             state.parts.push(snapshot);
             state.remaining -= 1;
             if state.remaining == 0 {
-                let merged = StatsSnapshot::merged(std::mem::take(&mut state.parts));
+                let mut merged = StatsSnapshot::merged(std::mem::take(&mut state.parts));
+                for row in &mut merged.workers {
+                    row.admitted_in_flight = self
+                        .0
+                        .loads
+                        .get(row.worker)
+                        .map_or(0, |l| l.load(Ordering::Acquire));
+                }
+                merged.admitted_in_flight = self
+                    .0
+                    .loads
+                    .iter()
+                    .map(|l| l.load(Ordering::Acquire))
+                    .sum();
+                merged.qos_queued = self.0.qos_queued;
+                merged.shed_batch = self.0.counters.shed_batch.load(Ordering::Acquire);
+                merged.shed_interactive =
+                    self.0.counters.shed_interactive.load(Ordering::Acquire);
+                merged.rate_limited = self.0.counters.rate_limited.load(Ordering::Acquire);
                 if let Some(reply) = state.reply.take() {
                     return reply.emit(ServeEvent::Stats {
                         id: self.0.id,
@@ -156,6 +201,24 @@ impl EventSink for StatsShard {
     }
 }
 
+/// Monotonic QoS shed/rate-limit counters, surfaced through merged stats
+/// snapshots. All-zero (and never incremented) without a [`QosConfig`].
+#[derive(Default)]
+struct SchedCounters {
+    shed_batch: AtomicU64,
+    shed_interactive: AtomicU64,
+    rate_limited: AtomicU64,
+}
+
+/// QoS admission state — only constructed when a [`QosConfig`] was
+/// supplied at start. One DRR queue per worker; one rate limiter shared
+/// across workers (tenant buckets are global, placement is not).
+struct QosState {
+    cfg: QosConfig,
+    queues: Vec<DrrQueue>,
+    limiter: Option<RateLimiter>,
+}
+
 /// The sharded serving runtime: N worker threads behind one admission
 /// loop. Build with [`Scheduler::start`], then hand the op channel to
 /// [`Scheduler::run`] (or [`Scheduler::run_until`]) on the calling thread.
@@ -166,6 +229,10 @@ pub struct Scheduler {
     loads: Arc<Vec<AtomicUsize>>,
     handles: Vec<JoinHandle<()>>,
     cfg: CoordinatorConfig,
+    /// `Some` = QoS admission (DRR fair queuing, lanes, shedding, rate
+    /// limits); `None` = historical FCFS forward, regression-locked.
+    qos: Option<QosState>,
+    counters: Arc<SchedCounters>,
 }
 
 impl Scheduler {
@@ -176,6 +243,22 @@ impl Scheduler {
     pub fn start<E, F>(
         n_workers: usize,
         cfg: CoordinatorConfig,
+        factory: F,
+    ) -> crate::Result<Scheduler>
+    where
+        E: StepEngine + 'static,
+        F: Fn(usize) -> crate::Result<E> + Send + Sync + 'static,
+    {
+        Self::start_with_qos(n_workers, cfg, None, factory)
+    }
+
+    /// [`Self::start`] plus an optional multi-tenant QoS layer. `None`
+    /// is exactly `start`: the QoS machinery is not even constructed and
+    /// admission stays byte-identical FCFS.
+    pub fn start_with_qos<E, F>(
+        n_workers: usize,
+        cfg: CoordinatorConfig,
+        qos: Option<QosConfig>,
         factory: F,
     ) -> crate::Result<Scheduler>
     where
@@ -219,12 +302,22 @@ impl Scheduler {
                 .recv()
                 .map_err(|_| anyhow::anyhow!("worker exited before reporting readiness"))??;
         }
-        crate::log_info!("scheduler started with {n_workers} worker(s)");
+        let qos = qos.map(|qcfg| QosState {
+            queues: (0..n_workers).map(|_| DrrQueue::new()).collect(),
+            limiter: qcfg.rate.map(|r| RateLimiter::new(r, qcfg.burst)),
+            cfg: qcfg,
+        });
+        crate::log_info!(
+            "scheduler started with {n_workers} worker(s), qos {}",
+            if qos.is_some() { "on" } else { "off" }
+        );
         Ok(Scheduler {
             txs,
             loads,
             handles,
             cfg,
+            qos,
+            counters: Arc::new(SchedCounters::default()),
         })
     }
 
@@ -242,8 +335,14 @@ impl Scheduler {
     /// other than channel closure (e.g. a finished test client).
     pub fn run_until(mut self, rx: Receiver<Op>, stop: impl Fn() -> bool) {
         let idle = self.cfg.idle_poll;
+        // While QoS queues hold work the loop polls fast, so a worker slot
+        // freed by a Done is refilled within ~a millisecond instead of
+        // waiting out a full idle tick. Without QoS the queues are always
+        // empty and the historical cadence is unchanged.
+        let busy = idle.min(Duration::from_millis(1));
         loop {
-            match rx.recv_timeout(idle) {
+            let timeout = if self.queued_total() > 0 { busy } else { idle };
+            match rx.recv_timeout(timeout) {
                 Ok(op) => self.dispatch(op),
                 Err(RecvTimeoutError::Timeout) => {
                     if stop() {
@@ -257,9 +356,13 @@ impl Scheduler {
                 }
                 Err(RecvTimeoutError::Disconnected) => break,
             }
+            self.pump();
         }
-        // Closing the worker channels lets each worker drain its in-flight
-        // turns and exit.
+        // Shutdown: forward whatever the DRR queues still hold so no
+        // accepted turn is silently dropped (the workers' own queue bounds
+        // govern from here), then close the worker channels so each worker
+        // drains its in-flight turns and exits.
+        self.flush_queues();
         self.txs.clear();
         for handle in self.handles.drain(..) {
             let _ = handle.join();
@@ -269,10 +372,28 @@ impl Scheduler {
 
     /// Place one op. Submits go to one worker (affinity for appends,
     /// least-loaded otherwise); cancel/stats broadcast with aggregation.
-    fn dispatch(&self, op: Op) {
+    fn dispatch(&mut self, op: Op) {
         match op {
             Op::Submit(req) => self.dispatch_submit(req),
             Op::Cancel { id, target, reply } => {
+                // A turn still waiting in a DRR queue never reached a
+                // worker — answer the cancel here and release the queued
+                // turn's reply, no broadcast needed.
+                if let Some(queued) = self
+                    .qos
+                    .as_mut()
+                    .and_then(|q| q.queues.iter_mut().find_map(|d| d.take_by_id(target)))
+                {
+                    let _ = queued
+                        .reply
+                        .emit(ServeEvent::Done(Response::cancelled(queued.id)));
+                    let _ = reply.emit(ServeEvent::CancelResult {
+                        id,
+                        target,
+                        found: true,
+                    });
+                    return;
+                }
                 let fanout = Arc::new(CancelFanout {
                     id,
                     target,
@@ -303,6 +424,9 @@ impl Scheduler {
             Op::Stats { id, reply } => {
                 let fanout = Arc::new(StatsFanout {
                     id,
+                    loads: self.loads.clone(),
+                    counters: self.counters.clone(),
+                    qos_queued: self.queued_total(),
                     state: Mutex::new(StatsState {
                         reply: Some(reply),
                         parts: Vec::new(),
@@ -326,7 +450,18 @@ impl Scheduler {
         }
     }
 
-    fn dispatch_submit(&self, req: Request) {
+    fn dispatch_submit(&mut self, req: Request) {
+        if self.qos.is_some() {
+            self.qos_submit(req);
+        } else {
+            self.fcfs_submit(req);
+        }
+    }
+
+    /// The historical admission path: forward to the worker immediately,
+    /// bounded only by the per-worker in-flight cap. Regression-locked to
+    /// stay byte-identical on the wire when no QoS config is supplied.
+    fn fcfs_submit(&self, req: Request) {
         let w = match req.session {
             // Affinity: the append must land on the worker holding the
             // session's parked cache.
@@ -402,6 +537,194 @@ impl Scheduler {
         }
         best
     }
+
+    /// QoS admission: token-bucket check, backlog bound with
+    /// cheapest-first shedding, then DRR enqueue + an immediate pump. The
+    /// shed order is: the arrival itself if it is batch-lane (or
+    /// interactive with no batch work waiting — it is then the newest turn
+    /// in the lane that sheds first), otherwise the newest waiting
+    /// batch-lane turn. Active (dispatched) work is never evicted.
+    fn qos_submit(&mut self, req: Request) {
+        let w = match req.session {
+            Some(sid) => worker_of_session(sid, self.txs.len()),
+            None => self.least_backlogged(),
+        };
+        if self.txs.get(w).is_none() {
+            let err = WireError::internal(format!("worker {w} unavailable"));
+            let _ = req.reply.emit(ServeEvent::Done(Response::error(req.id, err)));
+            return;
+        }
+        let (hint, max_backlog) = match self.qos.as_ref() {
+            Some(q) => (q.cfg.retry_after_ms, q.cfg.max_backlog.max(1)),
+            // qos_submit is only reached when QoS state exists.
+            None => return,
+        };
+        let cost = qos::turn_cost(req.prompt.len(), req.max_new);
+        let limited = self
+            .qos
+            .as_mut()
+            .and_then(|q| q.limiter.as_mut())
+            .and_then(|l| l.try_admit(req.tenant, cost, Instant::now()).err());
+        if let Some(wait_ms) = limited {
+            self.counters.rate_limited.fetch_add(1, Ordering::AcqRel);
+            let err = WireError::new(
+                ErrorCode::Overloaded,
+                format!("tenant {} over admission rate limit", req.tenant),
+            )
+            .with_retry_after(wait_ms);
+            let _ = req.reply.emit(ServeEvent::Done(Response::error(req.id, err)));
+            return;
+        }
+        let (queued, batch_waiting) = self
+            .qos
+            .as_ref()
+            .and_then(|q| q.queues.get(w))
+            .map_or((0, 0), |d| (d.len(), d.batch_len()));
+        if queued >= max_backlog {
+            if req.priority == Priority::Batch || batch_waiting == 0 {
+                // The arrival is itself the newest turn in the first lane
+                // the shed order reaches: reject it directly.
+                let counter = match req.priority {
+                    Priority::Batch => &self.counters.shed_batch,
+                    Priority::Interactive => &self.counters.shed_interactive,
+                };
+                counter.fetch_add(1, Ordering::AcqRel);
+                let err = WireError::new(
+                    ErrorCode::Overloaded,
+                    format!("worker {w} backlog full ({queued} turns queued)"),
+                )
+                .with_retry_after(hint);
+                let _ = req.reply.emit(ServeEvent::Done(Response::error(req.id, err)));
+                return;
+            }
+            // Interactive arrival displaces the newest waiting batch turn.
+            if let Some((victim, _)) = self
+                .qos
+                .as_mut()
+                .and_then(|q| q.queues.get_mut(w))
+                .and_then(|d| d.shed_cheapest())
+            {
+                self.counters.shed_batch.fetch_add(1, Ordering::AcqRel);
+                let err = WireError::new(
+                    ErrorCode::Overloaded,
+                    format!("worker {w} backlog full ({queued} turns queued)"),
+                )
+                .with_retry_after(hint);
+                let _ = victim
+                    .reply
+                    .emit(ServeEvent::Done(Response::error(victim.id, err)));
+            }
+        }
+        if let Some(d) = self.qos.as_mut().and_then(|q| q.queues.get_mut(w)) {
+            d.push(req);
+        }
+        self.pump_worker(w);
+    }
+
+    /// Placement under QoS: least (in-flight + queued), ties to the
+    /// lowest index — a worker's DRR backlog counts against it, not just
+    /// work already dispatched.
+    fn least_backlogged(&self) -> usize {
+        let mut best = 0usize;
+        let mut best_load = usize::MAX;
+        for (w, load) in self.loads.iter().enumerate() {
+            let queued = self
+                .qos
+                .as_ref()
+                .and_then(|q| q.queues.get(w))
+                .map_or(0, DrrQueue::len);
+            let l = load.load(Ordering::Acquire).saturating_add(queued);
+            if l < best_load {
+                best = w;
+                best_load = l;
+            }
+        }
+        best
+    }
+
+    /// Turns waiting in the DRR queues across all workers (0 without QoS).
+    fn queued_total(&self) -> usize {
+        self.qos
+            .as_ref()
+            .map_or(0, |q| q.queues.iter().map(DrrQueue::len).sum())
+    }
+
+    /// Refill every worker's in-flight slots from its DRR queue (no-op
+    /// without QoS).
+    fn pump(&mut self) {
+        for w in 0..self.txs.len() {
+            self.pump_worker(w);
+        }
+    }
+
+    /// Dispatch queued turns to worker `w` in DRR order while it is under
+    /// the QoS in-flight cap.
+    fn pump_worker(&mut self, w: usize) {
+        let Scheduler {
+            txs, loads, qos, ..
+        } = self;
+        let Some(qos) = qos.as_mut() else { return };
+        let quantum = qos.cfg.quantum;
+        let cap = qos.cfg.inflight_per_worker.max(1);
+        let (Some(tx), Some(load)) = (txs.get(w), loads.get(w)) else {
+            return;
+        };
+        while load.load(Ordering::Acquire) < cap {
+            let Some(req) = qos.queues.get_mut(w).and_then(|d| d.pop_next(quantum)) else {
+                return;
+            };
+            load.fetch_add(1, Ordering::AcqRel);
+            let req = Request {
+                reply: Box::new(TrackedSink {
+                    inner: req.reply,
+                    loads: loads.clone(),
+                    worker: w,
+                }),
+                ..req
+            };
+            if let Err(send_err) = tx.send(Op::Submit(req)) {
+                // Worker gone (only during shutdown). Answer through the
+                // tracked sink so the load count is released.
+                if let Op::Submit(r) = send_err.0 {
+                    let err = WireError::internal(format!("worker {w} unavailable"));
+                    let _ = r.reply.emit(ServeEvent::Done(Response::error(r.id, err)));
+                }
+            }
+        }
+    }
+
+    /// Shutdown path: forward everything still queued, ignoring the
+    /// in-flight cap — the workers' own queue bounds govern from here and
+    /// no accepted turn is silently dropped.
+    fn flush_queues(&mut self) {
+        let Scheduler {
+            txs, loads, qos, ..
+        } = self;
+        let Some(qos) = qos.as_mut() else { return };
+        let quantum = qos.cfg.quantum;
+        for (w, queue) in qos.queues.iter_mut().enumerate() {
+            let (Some(tx), Some(load)) = (txs.get(w), loads.get(w)) else {
+                continue;
+            };
+            while let Some(req) = queue.pop_next(quantum) {
+                load.fetch_add(1, Ordering::AcqRel);
+                let req = Request {
+                    reply: Box::new(TrackedSink {
+                        inner: req.reply,
+                        loads: loads.clone(),
+                        worker: w,
+                    }),
+                    ..req
+                };
+                if let Err(send_err) = tx.send(Op::Submit(req)) {
+                    if let Op::Submit(r) = send_err.0 {
+                        let err = WireError::internal(format!("worker {w} unavailable"));
+                        let _ = r.reply.emit(ServeEvent::Done(Response::error(r.id, err)));
+                    }
+                }
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -415,6 +738,19 @@ mod tests {
     fn start(n_workers: usize, cfg: CoordinatorConfig) -> Scheduler {
         let base = StubEngine::new(StubEngine::test_dims(64));
         Scheduler::start(n_workers, cfg, move |w| Ok(base.fork(w))).unwrap()
+    }
+
+    /// QoS-enabled stack with an artificial per-decode-step delay so a
+    /// turn can be held in flight long enough to queue work behind it.
+    fn start_qos(
+        n_workers: usize,
+        cfg: CoordinatorConfig,
+        qos: QosConfig,
+        delay: Duration,
+    ) -> Scheduler {
+        let mut base = StubEngine::new(StubEngine::test_dims(64));
+        base.decode_delay = delay;
+        Scheduler::start_with_qos(n_workers, cfg, Some(qos), move |w| Ok(base.fork(w))).unwrap()
     }
 
     fn submit(
@@ -431,6 +767,31 @@ mod tests {
             spec: CompressionSpec::mikv(0.5, "int4"),
             session,
             keep,
+            tenant: 0,
+            priority: Priority::Interactive,
+            submitted_at: Instant::now(),
+            reply: Box::new(reply.clone()),
+        })
+    }
+
+    /// A submit with explicit tenant/priority/size, for QoS tests.
+    fn submit_qos(
+        id: u64,
+        tenant: u64,
+        priority: Priority,
+        max_new: usize,
+        reply: &mpsc::Sender<ServeEvent>,
+    ) -> Op {
+        Op::Submit(Request {
+            id,
+            prompt: vec![1, 2, 3],
+            max_new,
+            stop: None,
+            spec: CompressionSpec::mikv(0.5, "int4"),
+            session: None,
+            keep: false,
+            tenant,
+            priority,
             submitted_at: Instant::now(),
             reply: Box::new(reply.clone()),
         })
@@ -544,6 +905,19 @@ mod tests {
             assert_eq!(snapshot.completed, 1);
             let sum: usize = snapshot.workers.iter().map(|w| w.completed).sum();
             assert_eq!(sum, snapshot.completed);
+            // the submit completed before the stats op, so the scheduler's
+            // admission-side in-flight view is quiescent — present, zero.
+            assert_eq!(snapshot.admitted_in_flight, 0);
+            assert!(snapshot.workers.iter().all(|w| w.admitted_in_flight == 0));
+            assert_eq!(snapshot.qos_queued, 0);
+            assert_eq!(
+                (
+                    snapshot.shed_batch,
+                    snapshot.shed_interactive,
+                    snapshot.rate_limited
+                ),
+                (0, 0, 0)
+            );
             drop(tx);
         });
         sched.run(rx);
@@ -567,6 +941,256 @@ mod tests {
             let done = wait_done(&erx);
             let err = done.error.expect("rejected");
             assert_eq!(err.code, ErrorCode::Overloaded);
+            // Regression lock: without a QoS config the rejection is the
+            // historical FCFS shape — same message, no retry hint.
+            assert_eq!(err.message, "worker 0 at capacity (0 requests in flight)");
+            assert_eq!(err.retry_after_ms, None);
+            drop(tx);
+        });
+        sched.run(rx);
+        driver.join().unwrap();
+    }
+
+    /// A QoS stack with default knobs and a single tenant serves a normal
+    /// generate/append conversation exactly like the FCFS path.
+    #[test]
+    fn qos_default_knobs_serve_a_conversation() {
+        let sched = start_qos(
+            2,
+            CoordinatorConfig::default(),
+            QosConfig::default(),
+            Duration::ZERO,
+        );
+        let (tx, rx) = mpsc::channel::<Op>();
+        let driver = std::thread::spawn(move || {
+            let (etx, erx) = mpsc::channel::<ServeEvent>();
+            tx.send(submit(1, None, true, &etx)).unwrap();
+            let turn1 = wait_done(&erx);
+            assert!(turn1.error.is_none(), "{:?}", turn1.error);
+            let sid = turn1.session.expect("kept session");
+            tx.send(submit(2, Some(sid), false, &etx)).unwrap();
+            let turn2 = wait_done(&erx);
+            assert!(turn2.error.is_none(), "{:?}", turn2.error);
+            assert_eq!(turn2.session, Some(sid));
+            drop(tx);
+        });
+        sched.run(rx);
+        driver.join().unwrap();
+    }
+
+    /// Backlog pressure sheds the batch lane first, every shed rejection
+    /// carries the configured `retry_after_ms`, queued interactive work
+    /// survives and completes, and the shed counters surface in stats.
+    #[test]
+    fn qos_sheds_batch_lane_first_with_retry_hint() {
+        let qos = QosConfig {
+            inflight_per_worker: 1,
+            max_backlog: 2,
+            retry_after_ms: 25,
+            ..QosConfig::default()
+        };
+        // One worker; the active turn decodes 20 steps at 2ms each, so the
+        // whole submit sequence below lands while it is still in flight.
+        let sched = start_qos(
+            1,
+            CoordinatorConfig::default(),
+            qos,
+            Duration::from_millis(2),
+        );
+        let (tx, rx) = mpsc::channel::<Op>();
+        let driver = std::thread::spawn(move || {
+            let (etx, erx) = mpsc::channel::<ServeEvent>();
+            // A occupies the worker (in-flight cap 1).
+            tx.send(submit_qos(1, 1, Priority::Interactive, 20, &etx))
+                .unwrap();
+            // B (interactive) and C (batch) fill the backlog of 2.
+            tx.send(submit_qos(2, 2, Priority::Interactive, 1, &etx))
+                .unwrap();
+            tx.send(submit_qos(3, 3, Priority::Batch, 1, &etx)).unwrap();
+            // D (batch) arrives over the bound: it is itself the newest
+            // batch turn — rejected directly.
+            tx.send(submit_qos(4, 4, Priority::Batch, 1, &etx)).unwrap();
+            // E (interactive) arrives over the bound: the newest *waiting
+            // batch* turn (C) is shed to make room.
+            tx.send(submit_qos(5, 5, Priority::Interactive, 1, &etx))
+                .unwrap();
+            let mut ok = Vec::new();
+            let mut shed = Vec::new();
+            for _ in 0..5 {
+                let done = wait_done(&erx);
+                match done.error {
+                    None => ok.push(done.id),
+                    Some(err) => {
+                        assert_eq!(err.code, ErrorCode::Overloaded, "id {}", done.id);
+                        assert_eq!(err.retry_after_ms, Some(25), "id {}", done.id);
+                        shed.push(done.id);
+                    }
+                }
+            }
+            ok.sort_unstable();
+            shed.sort_unstable();
+            assert_eq!(ok, vec![1, 2, 5], "batch shed before interactive");
+            assert_eq!(shed, vec![3, 4]);
+            // Both sheds were batch-lane; the counters say so.
+            tx.send(Op::Stats {
+                id: 9,
+                reply: Box::new(etx.clone()),
+            })
+            .unwrap();
+            let snapshot = loop {
+                if let ServeEvent::Stats { snapshot, .. } = erx.recv().unwrap() {
+                    break snapshot;
+                }
+            };
+            assert_eq!(snapshot.shed_batch, 2);
+            assert_eq!(snapshot.shed_interactive, 0);
+            assert_eq!(snapshot.rate_limited, 0);
+            assert_eq!(snapshot.qos_queued, 0);
+            drop(tx);
+        });
+        sched.run(rx);
+        driver.join().unwrap();
+    }
+
+    /// Per-tenant token bucket: a tenant that exhausts its burst is
+    /// rejected `overloaded` with a positive retry hint while the work it
+    /// already admitted still completes.
+    #[test]
+    fn qos_rate_limit_rejects_with_retry_hint() {
+        let qos = QosConfig {
+            // burst covers exactly one small turn (prompt 3 + max_new 1);
+            // the refill rate is negligible on test timescales.
+            rate: Some(0.001),
+            burst: 4.0,
+            ..QosConfig::default()
+        };
+        let sched = start_qos(1, CoordinatorConfig::default(), qos, Duration::ZERO);
+        let (tx, rx) = mpsc::channel::<Op>();
+        let driver = std::thread::spawn(move || {
+            let (etx, erx) = mpsc::channel::<ServeEvent>();
+            tx.send(submit_qos(1, 7, Priority::Interactive, 1, &etx))
+                .unwrap();
+            tx.send(submit_qos(2, 7, Priority::Interactive, 1, &etx))
+                .unwrap();
+            // A different tenant has its own bucket and is unaffected.
+            tx.send(submit_qos(3, 8, Priority::Interactive, 1, &etx))
+                .unwrap();
+            let mut ok = Vec::new();
+            let mut limited = Vec::new();
+            for _ in 0..3 {
+                let done = wait_done(&erx);
+                match done.error {
+                    None => ok.push(done.id),
+                    Some(err) => {
+                        assert_eq!(err.code, ErrorCode::Overloaded);
+                        assert!(
+                            err.retry_after_ms.is_some_and(|ms| ms >= 1),
+                            "hint: {:?}",
+                            err.retry_after_ms
+                        );
+                        limited.push(done.id);
+                    }
+                }
+            }
+            ok.sort_unstable();
+            assert_eq!(ok, vec![1, 3]);
+            assert_eq!(limited, vec![2]);
+            drop(tx);
+        });
+        sched.run(rx);
+        driver.join().unwrap();
+    }
+
+    /// Cancel finds a turn still waiting in the DRR queue: the queued turn
+    /// is answered `cancelled` and the cancel reports `found` without a
+    /// worker broadcast.
+    #[test]
+    fn qos_cancel_reaches_queued_turn() {
+        let qos = QosConfig {
+            inflight_per_worker: 1,
+            ..QosConfig::default()
+        };
+        let sched = start_qos(
+            1,
+            CoordinatorConfig::default(),
+            qos,
+            Duration::from_millis(2),
+        );
+        let (tx, rx) = mpsc::channel::<Op>();
+        let driver = std::thread::spawn(move || {
+            let (etx, erx) = mpsc::channel::<ServeEvent>();
+            // A occupies the worker; B waits in the queue.
+            tx.send(submit_qos(1, 1, Priority::Interactive, 20, &etx))
+                .unwrap();
+            tx.send(submit_qos(2, 2, Priority::Interactive, 1, &etx))
+                .unwrap();
+            tx.send(Op::Cancel {
+                id: 10,
+                target: 2,
+                reply: Box::new(etx.clone()),
+            })
+            .unwrap();
+            let mut saw_cancel_result = false;
+            let mut b_cancelled = false;
+            let mut a_done = false;
+            while !(saw_cancel_result && b_cancelled && a_done) {
+                match erx.recv().unwrap() {
+                    ServeEvent::CancelResult { id, target, found } => {
+                        assert_eq!((id, target, found), (10, 2, true));
+                        saw_cancel_result = true;
+                    }
+                    ServeEvent::Done(r) if r.id == 2 => {
+                        assert!(r.cancelled, "queued turn answered as cancelled");
+                        b_cancelled = true;
+                    }
+                    ServeEvent::Done(r) if r.id == 1 => {
+                        assert!(r.error.is_none());
+                        a_done = true;
+                    }
+                    _ => {}
+                }
+            }
+            drop(tx);
+        });
+        sched.run(rx);
+        driver.join().unwrap();
+    }
+
+    /// While a turn is in flight, the scheduler-side `admitted_in_flight`
+    /// gauge is visible in the merged snapshot and the owning worker's row
+    /// — the queue-depth window workers themselves cannot see.
+    #[test]
+    fn stats_surface_admitted_in_flight_mid_turn() {
+        let mut base = StubEngine::new(StubEngine::test_dims(64));
+        base.decode_delay = Duration::from_millis(2);
+        let sched =
+            Scheduler::start(2, CoordinatorConfig::default(), move |w| Ok(base.fork(w))).unwrap();
+        let (tx, rx) = mpsc::channel::<Op>();
+        let driver = std::thread::spawn(move || {
+            let (etx, erx) = mpsc::channel::<ServeEvent>();
+            tx.send(submit_qos(1, 0, Priority::Interactive, 20, &etx))
+                .unwrap();
+            // First token proves the turn was admitted and is in flight.
+            loop {
+                if let Ok(ServeEvent::Token { .. }) = erx.recv() {
+                    break;
+                }
+            }
+            tx.send(Op::Stats {
+                id: 5,
+                reply: Box::new(etx.clone()),
+            })
+            .unwrap();
+            let snapshot = loop {
+                if let ServeEvent::Stats { snapshot, .. } = erx.recv().unwrap() {
+                    break snapshot;
+                }
+            };
+            assert_eq!(snapshot.admitted_in_flight, 1);
+            let per_worker: usize = snapshot.workers.iter().map(|w| w.admitted_in_flight).sum();
+            assert_eq!(per_worker, 1);
+            let done = wait_done(&erx);
+            assert!(done.error.is_none());
             drop(tx);
         });
         sched.run(rx);

@@ -47,6 +47,13 @@ pub struct WorkerStats {
     pub promotions: u64,
     /// Hysteresis-suppressed promotions across completed turns.
     pub thrash_suppressed: u64,
+    /// Submits the admission scheduler has dispatched to this worker that
+    /// have not yet reached their terminal event. Workers cannot see this
+    /// window themselves (an op may still be sitting in their channel), so
+    /// the scheduler injects it when folding the broadcast answers; it is
+    /// always 0 in a snapshot taken from a bare single-worker
+    /// `Coordinator::run` deployment.
+    pub admitted_in_flight: usize,
 }
 
 /// Point-in-time serving counters answered to the wire `stats` op:
@@ -106,6 +113,19 @@ pub struct StatsSnapshot {
     pub thrash_suppressed: u64,
     /// Buffer-pool counters (summed over the per-worker pools).
     pub pool: PoolStats,
+    /// Submits dispatched by the admission scheduler that have not yet
+    /// reached their terminal event (summed over workers; injected by the
+    /// scheduler at fold time — see [`WorkerStats::admitted_in_flight`]).
+    pub admitted_in_flight: usize,
+    /// Turns waiting in the scheduler's QoS (DRR) queues at snapshot time;
+    /// 0 without a QoS config.
+    pub qos_queued: usize,
+    /// Batch-lane turns rejected by QoS shedding (lifetime count).
+    pub shed_batch: u64,
+    /// Interactive-lane turns rejected by QoS shedding (lifetime count).
+    pub shed_interactive: u64,
+    /// Turns rejected by the per-tenant rate limiter (lifetime count).
+    pub rate_limited: u64,
     /// Per-worker breakdown, ordered by worker index.
     pub workers: Vec<WorkerStats>,
 }
@@ -152,6 +172,11 @@ impl StatsSnapshot {
             out.restore_samples += part.restore_samples;
             out.promotions += part.promotions;
             out.thrash_suppressed += part.thrash_suppressed;
+            out.admitted_in_flight += part.admitted_in_flight;
+            out.qos_queued += part.qos_queued;
+            out.shed_batch += part.shed_batch;
+            out.shed_interactive += part.shed_interactive;
+            out.rate_limited += part.rate_limited;
             out.pool.free_blocks += part.pool.free_blocks;
             out.pool.free_bytes += part.pool.free_bytes;
             out.pool.outstanding_blocks += part.pool.outstanding_blocks;
@@ -556,6 +581,32 @@ mod tests {
         let m3 = StatsSnapshot::merged(vec![old, fresh]);
         assert!((m3.assembly_us_p50 - 20.0).abs() < 1e-9, "{}", m3.assembly_us_p50);
         assert_eq!(m3.assembly_samples, 1_000_000 + super::ASSEMBLY_WINDOW as u64);
+    }
+
+    #[test]
+    fn merge_sums_admission_side_gauges() {
+        let a = StatsSnapshot {
+            admitted_in_flight: 2,
+            qos_queued: 3,
+            shed_batch: 5,
+            shed_interactive: 1,
+            rate_limited: 4,
+            ..StatsSnapshot::default()
+        };
+        let b = StatsSnapshot {
+            admitted_in_flight: 1,
+            qos_queued: 0,
+            shed_batch: 2,
+            shed_interactive: 0,
+            rate_limited: 0,
+            ..StatsSnapshot::default()
+        };
+        let m = StatsSnapshot::merged(vec![a, b]);
+        assert_eq!(m.admitted_in_flight, 3);
+        assert_eq!(m.qos_queued, 3);
+        assert_eq!(m.shed_batch, 7);
+        assert_eq!(m.shed_interactive, 1);
+        assert_eq!(m.rate_limited, 4);
     }
 
     #[test]

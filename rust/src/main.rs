@@ -8,7 +8,7 @@
 //!
 //! Run `mikv help` for flags.
 
-use mikv::coordinator::{CoordinatorConfig, Op, Scheduler};
+use mikv::coordinator::{CoordinatorConfig, Op, QosConfig, Scheduler};
 use mikv::eval::{EvalTask, Harness};
 use mikv::model::{CacheMode, Engine, Session};
 use mikv::runtime::Manifest;
@@ -24,6 +24,9 @@ COMMANDS:
   serve      --port 7777 --workers 1 --max-active 8 --max-waiting 256
              --session-ttl 120 (secs) --session-mb 512
              --cold-dir DIR --cold-mb 256
+             --qos [--qos-quantum 64 --qos-rate TOKENS_PER_SEC
+             --qos-burst 512 --qos-inflight 4 --qos-backlog 256
+             --qos-retry-ms 50]
              (Serving API v1: versioned streaming ops with multi-turn
               sessions, sharded across N engine workers with continuous
               batching per worker; see rust/src/server/proto.rs and
@@ -31,7 +34,16 @@ COMMANDS:
               per worker. --cold-dir enables the cold tier: parked
               sessions evicted by TTL or footprint pressure spill to disk
               snapshots under DIR, bounded by --cold-mb per worker, and
-              are restored transparently on append.)
+              are restored transparently on append. --qos turns on the
+              multi-tenant admission layer: per-connection deficit
+              round-robin fair queuing, an interactive lane ahead of the
+              batch lane, optional per-tenant token-bucket rate limits
+              [--qos-rate/--qos-burst in prompt+decode tokens], and
+              graceful shedding once a worker's backlog exceeds
+              --qos-backlog waiting turns — rejections carry a
+              retry_after_ms hint of --qos-retry-ms. Without --qos,
+              admission is the historical FCFS path, byte-identical on
+              the wire.)
   generate   --prompt 1,2,3 --max-new 8 --mode mikv:0.25:int2
   eval       --task lineret --samples 25 --modes full,mikv:0.25:int2,h2o:0.25
   info       print manifest summary
@@ -146,10 +158,27 @@ fn run(args: &Args) -> anyhow::Result<()> {
                 max_cold_bytes: args.get("cold-mb", 256u64)? << 20,
                 ..Default::default()
             };
+            // --qos opts into the multi-tenant admission layer; absent,
+            // the QoS machinery is not constructed and admission is the
+            // regression-locked FCFS path.
+            let qos = args.flag("qos").then(|| -> anyhow::Result<QosConfig> {
+                let defaults = QosConfig::default();
+                let rate = args.get("qos-rate", 0.0f64)?;
+                Ok(QosConfig {
+                    quantum: args.get_nonzero("qos-quantum", defaults.quantum)?,
+                    rate: (rate > 0.0).then_some(rate),
+                    burst: args.get("qos-burst", defaults.burst)?,
+                    inflight_per_worker: args
+                        .get_nonzero("qos-inflight", defaults.inflight_per_worker)?,
+                    max_backlog: args.get_nonzero("qos-backlog", defaults.max_backlog)?,
+                    retry_after_ms: args.get("qos-retry-ms", defaults.retry_after_ms)?,
+                })
+            });
+            let qos = qos.transpose()?;
             // Each worker loads its own engine on its own thread (PJRT
             // handles are not `Send`); `--workers 1` is the original
             // single-loop deployment.
-            let scheduler = Scheduler::start(workers, cfg, move |w| {
+            let scheduler = Scheduler::start_with_qos(workers, cfg, qos, move |w| {
                 let engine = Engine::load(&artifacts, &model)?;
                 mikv::log_info!("worker {w}: engine ready");
                 Ok(engine)

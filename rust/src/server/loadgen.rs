@@ -3,20 +3,33 @@
 //! Drives `conns` concurrent client connections, each running a
 //! `turns`-turn conversation (streamed `generate` with `keep`, then
 //! `append`s into the same session; the final turn releases the session so
-//! a finished run leaves no parked state behind). Per-turn TTFT and
-//! latency are measured client-side; a trailing `stats` op collects the
-//! per-worker breakdown so worker utilization is part of the report.
+//! a finished run leaves no parked state behind — including after a
+//! mid-conversation error, where the orphaned session is released with an
+//! explicit no-keep turn). Per-turn TTFT and latency are measured
+//! client-side; error turns (shed/rate-limit rejections) are tracked
+//! separately so they can't skew the ok-turn percentiles. A trailing
+//! `stats` op collects the per-worker breakdown and QoS shed counters so
+//! worker utilization and fairness are part of the report.
+//!
+//! [`Scenario`] varies the arrival process: steady (default), bursty
+//! arrivals, heavy-tailed prompt lengths, a flash crowd (every connection
+//! submits its first turn simultaneously), and an adversarial chatty
+//! connection that submits 4× the turns of its well-behaved neighbours —
+//! the workload the QoS deficit-round-robin layer exists to contain.
 //!
 //! Shared by `examples/client.rs --load` and
 //! `benches/serve_throughput.rs` so the CLI load mode and the benchmark
 //! measure exactly the same workload.
 
 use crate::bench::percentile;
-use crate::coordinator::{CompressionSpec, CoordinatorConfig, Op, Scheduler};
+use crate::coordinator::{
+    CompressionSpec, CoordinatorConfig, Op, Priority, QosConfig, Scheduler,
+};
 use crate::model::StubEngine;
 use crate::server::{Client, RequestBuilder};
 use crate::util::json::Json;
 use crate::util::rng::Pcg32;
+use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
 
 /// Boot a sharded StubEngine serving stack — scheduler + `workers` engine
@@ -41,7 +54,25 @@ where
     T: Send + 'static,
     F: FnOnce(String) -> T + Send + 'static,
 {
-    let scheduler = Scheduler::start(workers, cfg, move |w| Ok(base.fork(w)))?;
+    with_stub_stack_qos(workers, cfg, None, base, f)
+}
+
+/// [`with_stub_stack`] with an optional QoS admission layer: `Some(qos)`
+/// boots the scheduler with per-connection fair queuing, priority lanes
+/// and shedding; `None` is the stock FCFS stack (the two are behaviorally
+/// identical until a `QosConfig` is supplied).
+pub fn with_stub_stack_qos<T, F>(
+    workers: usize,
+    cfg: CoordinatorConfig,
+    qos: Option<QosConfig>,
+    base: StubEngine,
+    f: F,
+) -> crate::Result<T>
+where
+    T: Send + 'static,
+    F: FnOnce(String) -> T + Send + 'static,
+{
+    let scheduler = Scheduler::start_with_qos(workers, cfg, qos, move |w| Ok(base.fork(w)))?;
     let (tx, rx) = std::sync::mpsc::channel::<Op>();
     let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
     let addr = listener.local_addr()?.to_string();
@@ -58,6 +89,52 @@ where
         Ok(v) => Ok(v),
         // Preserve assertion panics from test closures.
         Err(panic) => std::panic::resume_unwind(panic),
+    }
+}
+
+/// Arrival-process shape of a load run. Everything stays seeded and
+/// deterministic — a scenario changes *which* prompts/pauses the per-conn
+/// RNG produces, not whether the run is reproducible.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Scenario {
+    /// Back-to-back turns on every connection (the original workload).
+    #[default]
+    Steady,
+    /// Bursty arrivals: each connection pauses a few milliseconds between
+    /// bursts of turns, so queue depth oscillates instead of saturating.
+    Bursty,
+    /// Heavy-tailed prompt lengths: most turns use `prompt_len`, ~1 in 8
+    /// uses 8× that, so per-turn cost varies by an order of magnitude.
+    HeavyTail,
+    /// Flash crowd: every connection submits its first turn at the same
+    /// instant (barrier-aligned) instead of as threads happen to start.
+    FlashCrowd,
+    /// One adversarial chatty connection (conn 0) submits 4× the turns of
+    /// its well-behaved neighbours, back to back — the workload QoS fair
+    /// queuing exists to contain.
+    Chatty,
+}
+
+impl Scenario {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Scenario::Steady => "steady",
+            Scenario::Bursty => "bursty",
+            Scenario::HeavyTail => "heavy-tail",
+            Scenario::FlashCrowd => "flash-crowd",
+            Scenario::Chatty => "chatty",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Scenario> {
+        Some(match s {
+            "steady" => Scenario::Steady,
+            "bursty" => Scenario::Bursty,
+            "heavy-tail" | "heavytail" => Scenario::HeavyTail,
+            "flash-crowd" | "flashcrowd" => Scenario::FlashCrowd,
+            "chatty" => Scenario::Chatty,
+            _ => return None,
+        })
     }
 }
 
@@ -78,6 +155,12 @@ pub struct LoadConfig {
     pub seed: u64,
     /// Exclusive upper bound for synthesized prompt token ids.
     pub vocab: i64,
+    /// Arrival-process shape (see [`Scenario`]).
+    pub scenario: Scenario,
+    /// QoS lane every turn is submitted on. `Interactive` (the default)
+    /// emits no `priority` field, so default runs produce the exact
+    /// pre-QoS wire lines.
+    pub priority: Priority,
 }
 
 impl Default for LoadConfig {
@@ -90,6 +173,8 @@ impl Default for LoadConfig {
             spec: CompressionSpec::mikv(0.25, "int4"),
             seed: 0x10AD,
             vocab: 32,
+            scenario: Scenario::Steady,
+            priority: Priority::Interactive,
         }
     }
 }
@@ -117,10 +202,33 @@ pub struct LoadReport {
     pub wall: Duration,
     /// `tokens / wall`.
     pub tokens_per_sec: f64,
+    /// Percentiles over **ok turns only** — a turn that ended in a wire
+    /// `error` never contributes here (rejections are near-instant and
+    /// used to drag the percentiles down).
     pub ttft_p50: Duration,
     pub ttft_p99: Duration,
     pub latency_p50: Duration,
     pub latency_p99: Duration,
+    /// Round-trip percentiles of **error turns** (shed / rate-limit /
+    /// other rejections), zero when no turn errored.
+    pub rejected_latency_p50: Duration,
+    pub rejected_latency_p99: Duration,
+    /// Error turns whose wire error carried a `retry_after_ms` hint (QoS
+    /// shed and rate-limit rejections always do).
+    pub rejects_with_hint: usize,
+    /// p99 ok-turn latency per connection, indexed by connection id
+    /// (zero Duration for a connection with no ok turns).
+    pub per_conn_latency_p99: Vec<Duration>,
+    /// Fairness figure: max/min ratio of per-connection p99 over the
+    /// connections that completed at least one ok turn (1.0 when uniform
+    /// or fewer than two connections qualify).
+    pub conn_p99_spread: f64,
+    /// QoS shed/rate-limit rejections THIS run caused (delta of the
+    /// trailing `stats` op against the pre-run baseline; all 0 on a
+    /// QoS-less stack).
+    pub shed_batch: u64,
+    pub shed_interactive: u64,
+    pub rate_limited: u64,
     /// Per-worker utilization from the trailing `stats` op (empty if the
     /// server predates per-worker rows).
     pub per_worker: Vec<WorkerUtil>,
@@ -151,13 +259,77 @@ pub struct LoadReport {
     pub cold_bytes: u64,
 }
 
-/// Per-connection raw samples.
+/// Per-connection raw samples. `ttfts`/`latencies` hold ok turns only;
+/// error turns land in `rejected` so they can't skew the ok percentiles.
 struct ConnResult {
     ttfts: Vec<Duration>,
     latencies: Vec<Duration>,
+    rejected: Vec<Duration>,
     tokens: usize,
     ok: usize,
     err: usize,
+    rejects_with_hint: usize,
+}
+
+/// Client-side aggregation of per-connection samples, separated from the
+/// socket work so the ok/error split is unit-testable with pinned values.
+struct Folded {
+    ttfts: Vec<Duration>,
+    latencies: Vec<Duration>,
+    rejected: Vec<Duration>,
+    per_conn_latency_p99: Vec<Duration>,
+    conn_p99_spread: f64,
+    tokens: usize,
+    ok: usize,
+    err: usize,
+    rejects_with_hint: usize,
+}
+
+fn fold_results(results: Vec<ConnResult>) -> Folded {
+    let mut out = Folded {
+        ttfts: Vec::new(),
+        latencies: Vec::new(),
+        rejected: Vec::new(),
+        per_conn_latency_p99: Vec::with_capacity(results.len()),
+        conn_p99_spread: 1.0,
+        tokens: 0,
+        ok: 0,
+        err: 0,
+        rejects_with_hint: 0,
+    };
+    for mut r in results {
+        r.latencies.sort_unstable();
+        out.per_conn_latency_p99.push(if r.latencies.is_empty() {
+            Duration::ZERO
+        } else {
+            percentile(&r.latencies, 0.99)
+        });
+        out.ttfts.extend(r.ttfts);
+        out.latencies.extend(r.latencies);
+        out.rejected.extend(r.rejected);
+        out.tokens += r.tokens;
+        out.ok += r.ok;
+        out.err += r.err;
+        out.rejects_with_hint += r.rejects_with_hint;
+    }
+    out.ttfts.sort_unstable();
+    out.latencies.sort_unstable();
+    out.rejected.sort_unstable();
+    // Spread over connections that completed at least one ok turn: the
+    // figure the fairness suite bounds (one chatty connection must not
+    // inflate its neighbours' p99 past its deficit share).
+    let qualifying: Vec<f64> = out
+        .per_conn_latency_p99
+        .iter()
+        .filter(|d| !d.is_zero())
+        .map(Duration::as_secs_f64)
+        .collect();
+    if qualifying.len() >= 2 {
+        let max = qualifying.iter().cloned().fold(f64::MIN, f64::max);
+        let min = qualifying.iter().cloned().fold(f64::MAX, f64::min);
+        out.conn_p99_spread = if min > 0.0 { max / min } else { f64::INFINITY };
+    }
+    out
 }
 
 /// Run the workload against a serving endpoint and aggregate the report.
@@ -168,47 +340,58 @@ pub fn run_load(addr: &str, cfg: &LoadConfig) -> crate::Result<LoadReport> {
     // when targeting a long-running `--addr` server).
     let baseline = stats_probe(addr);
     let started = Instant::now();
+    // Flash crowd: align every connection's first submit on a barrier so
+    // the admission path sees `conns` simultaneous arrivals.
+    let barrier = (cfg.scenario == Scenario::FlashCrowd)
+        .then(|| Arc::new(Barrier::new(cfg.conns)));
     let mut handles = Vec::with_capacity(cfg.conns);
     for conn in 0..cfg.conns {
         let addr = addr.to_string();
         let cfg = cfg.clone();
-        handles.push(std::thread::spawn(move || drive_conn(&addr, &cfg, conn)));
+        let barrier = barrier.clone();
+        handles.push(std::thread::spawn(move || {
+            drive_conn(&addr, &cfg, conn, barrier)
+        }));
     }
-    let mut ttfts = Vec::new();
-    let mut latencies = Vec::new();
-    let (mut tokens, mut ok, mut err) = (0usize, 0usize, 0usize);
+    let mut results = Vec::with_capacity(cfg.conns);
     for handle in handles {
-        let r = handle
-            .join()
-            .map_err(|_| anyhow::anyhow!("load connection panicked"))??;
-        ttfts.extend(r.ttfts);
-        latencies.extend(r.latencies);
-        tokens += r.tokens;
-        ok += r.ok;
-        err += r.err;
+        results.push(
+            handle
+                .join()
+                .map_err(|_| anyhow::anyhow!("load connection panicked"))??,
+        );
     }
     let wall = started.elapsed();
-    ttfts.sort_unstable();
-    latencies.sort_unstable();
+    let folded = fold_results(results);
 
     // Trailing stats op: per-worker utilization (as the delta against the
-    // pre-run baseline) plus the server's assembly_us percentiles.
-    // Decoration only — any failure (server gone, old server without the
-    // fields) degrades to empty/zero instead of discarding the measured
-    // run.
+    // pre-run baseline) plus the server's assembly_us percentiles and QoS
+    // shed counters. Decoration only — any failure (server gone, old
+    // server without the fields) degrades to empty/zero instead of
+    // discarding the measured run.
     let after = stats_probe(addr);
     let per_worker = worker_utilization(&baseline.counters, &after.counters);
 
     Ok(LoadReport {
-        turns_ok: ok,
-        turns_err: err,
-        tokens,
+        turns_ok: folded.ok,
+        turns_err: folded.err,
+        tokens: folded.tokens,
         wall,
-        tokens_per_sec: tokens as f64 / wall.as_secs_f64().max(1e-9),
-        ttft_p50: percentile(&ttfts, 0.5),
-        ttft_p99: percentile(&ttfts, 0.99),
-        latency_p50: percentile(&latencies, 0.5),
-        latency_p99: percentile(&latencies, 0.99),
+        tokens_per_sec: folded.tokens as f64 / wall.as_secs_f64().max(1e-9),
+        ttft_p50: percentile(&folded.ttfts, 0.5),
+        ttft_p99: percentile(&folded.ttfts, 0.99),
+        latency_p50: percentile(&folded.latencies, 0.5),
+        latency_p99: percentile(&folded.latencies, 0.99),
+        rejected_latency_p50: percentile(&folded.rejected, 0.5),
+        rejected_latency_p99: percentile(&folded.rejected, 0.99),
+        rejects_with_hint: folded.rejects_with_hint,
+        per_conn_latency_p99: folded.per_conn_latency_p99,
+        conn_p99_spread: folded.conn_p99_spread,
+        shed_batch: after.shed_batch.saturating_sub(baseline.shed_batch),
+        shed_interactive: after
+            .shed_interactive
+            .saturating_sub(baseline.shed_interactive),
+        rate_limited: after.rate_limited.saturating_sub(baseline.rate_limited),
         per_worker,
         assembly_us_p50: after.assembly_us_p50,
         assembly_us_p99: after.assembly_us_p99,
@@ -239,6 +422,9 @@ struct StatsProbe {
     restore_us_p99: f64,
     parked_cold_sessions: usize,
     cold_bytes: u64,
+    shed_batch: u64,
+    shed_interactive: u64,
+    rate_limited: u64,
 }
 
 fn stats_probe(addr: &str) -> StatsProbe {
@@ -270,6 +456,12 @@ fn stats_probe(addr: &str) -> StatsProbe {
         .unwrap_or(0)
         .max(0) as usize;
     out.cold_bytes = stats.field_i64("cold_bytes").unwrap_or(0).max(0) as u64;
+    out.shed_batch = stats.field_i64("shed_batch").unwrap_or(0).max(0) as u64;
+    out.shed_interactive = stats
+        .field_i64("shed_interactive")
+        .unwrap_or(0)
+        .max(0) as u64;
+    out.rate_limited = stats.field_i64("rate_limited").unwrap_or(0).max(0) as u64;
     if let Ok(rows) = stats.field_arr("workers") {
         for row in rows {
             out.counters.insert(
@@ -317,28 +509,67 @@ fn worker_utilization(
         .collect()
 }
 
+/// Release a session a failed turn left parked: one no-keep 1-token turn
+/// consumes the cache. Any error on the release turn (typically
+/// `session_not_found` — the server already dropped it) means the session
+/// is gone either way, so only transport failures propagate.
+fn release_session(client: &mut Client, sid: u64) -> crate::Result<()> {
+    let id = client.next_id();
+    let line = RequestBuilder::append(id, sid)
+        .prompt(&[1])
+        .max_new(1)
+        .keep(false)
+        .build();
+    client.send_line(&line)?;
+    let _ = client.read_turn(id)?;
+    Ok(())
+}
+
 /// One connection's conversation loop.
-fn drive_conn(addr: &str, cfg: &LoadConfig, conn: usize) -> crate::Result<ConnResult> {
+fn drive_conn(
+    addr: &str,
+    cfg: &LoadConfig,
+    conn: usize,
+    barrier: Option<Arc<Barrier>>,
+) -> crate::Result<ConnResult> {
     let mut client = Client::connect(addr)?;
     let mut rng = Pcg32::new(cfg.seed ^ ((conn as u64 + 1) << 20));
     let mut session: Option<u64> = None;
     let mut out = ConnResult {
         ttfts: Vec::new(),
         latencies: Vec::new(),
+        rejected: Vec::new(),
         tokens: 0,
         ok: 0,
         err: 0,
+        rejects_with_hint: 0,
     };
     let vocab = cfg.vocab.max(2);
-    for turn in 0..cfg.turns {
+    let turns = if cfg.scenario == Scenario::Chatty && conn == 0 {
+        cfg.turns * 4
+    } else {
+        cfg.turns
+    };
+    if let Some(b) = &barrier {
+        b.wait();
+    }
+    for turn in 0..turns {
+        if cfg.scenario == Scenario::Bursty && turn > 0 && turn % 2 == 0 {
+            std::thread::sleep(Duration::from_millis(1 + rng.gen_below(4) as u64));
+        }
         let id = client.next_id();
         // The final turn drops `keep`, so a completed conversation leaves
         // nothing parked (no session leak from a finished load run).
-        let keep = turn + 1 < cfg.turns;
-        let prompt: Vec<i64> = (0..cfg.prompt_len.max(1))
+        let keep = turn + 1 < turns;
+        let prompt_len = if cfg.scenario == Scenario::HeavyTail && rng.gen_bool(0.125) {
+            cfg.prompt_len.max(1) * 8
+        } else {
+            cfg.prompt_len.max(1)
+        };
+        let prompt: Vec<i64> = (0..prompt_len)
             .map(|_| rng.gen_range(1, vocab - 1))
             .collect();
-        let builder = match session {
+        let mut builder = match session {
             Some(sid) => RequestBuilder::append(id, sid)
                 .prompt(&prompt)
                 .max_new(cfg.max_new)
@@ -349,9 +580,13 @@ fn drive_conn(addr: &str, cfg: &LoadConfig, conn: usize) -> crate::Result<ConnRe
                 .keep(keep)
                 .compression(cfg.spec.clone()),
         };
+        if cfg.priority != Priority::Interactive {
+            builder = builder.priority(cfg.priority);
+        }
         let t0 = Instant::now();
         client.submit(&builder)?;
         let mut first: Option<Duration> = None;
+        let mut turn_ok = false;
         loop {
             let v = client.recv()?;
             if v.field("id").ok().and_then(Json::as_i64) != Some(id as i64) {
@@ -366,6 +601,7 @@ fn drive_conn(addr: &str, cfg: &LoadConfig, conn: usize) -> crate::Result<ConnRe
                 }
                 "done" => {
                     out.ok += 1;
+                    turn_ok = true;
                     session = v
                         .field("session")
                         .ok()
@@ -375,14 +611,107 @@ fn drive_conn(addr: &str, cfg: &LoadConfig, conn: usize) -> crate::Result<ConnRe
                 }
                 "error" => {
                     out.err += 1;
-                    session = None;
+                    if v.field("retry_after_ms").ok().and_then(Json::as_i64).is_some() {
+                        out.rejects_with_hint += 1;
+                    }
                     break;
                 }
                 other => anyhow::bail!("unexpected event '{other}' for turn {id}: {v}"),
             }
         }
-        out.latencies.push(t0.elapsed());
-        out.ttfts.push(first.unwrap_or_else(|| t0.elapsed()));
+        let elapsed = t0.elapsed();
+        if turn_ok {
+            out.latencies.push(elapsed);
+            out.ttfts.push(first.unwrap_or(elapsed));
+        } else {
+            // Error turns are sampled separately: rejections are
+            // near-instant and would otherwise drag the ok percentiles
+            // down (and a tokenless error used to be counted as a TTFT).
+            out.rejected.push(elapsed);
+            // A failed turn leaves the previous turn's session parked
+            // (this append never consumed it) — release it instead of
+            // orphaning it until TTL eviction.
+            if let Some(sid) = session.take() {
+                release_session(&mut client, sid)?;
+            }
+        }
     }
     Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ms(n: u64) -> Duration {
+        Duration::from_millis(n)
+    }
+
+    fn conn(
+        ttfts: &[u64],
+        latencies: &[u64],
+        rejected: &[u64],
+        hints: usize,
+    ) -> ConnResult {
+        ConnResult {
+            ttfts: ttfts.iter().copied().map(ms).collect(),
+            latencies: latencies.iter().copied().map(ms).collect(),
+            rejected: rejected.iter().copied().map(ms).collect(),
+            tokens: latencies.len() * 2,
+            ok: latencies.len(),
+            err: rejected.len(),
+            rejects_with_hint: hints,
+        }
+    }
+
+    /// Pinned values for the metric-skew fix: error turns contribute to
+    /// `rejected` percentiles only, never to the ok-turn ttft/latency
+    /// samples (pre-fix, a 500ms timeout-then-error turn dragged both).
+    #[test]
+    fn error_turns_do_not_skew_ok_percentiles() {
+        let folded = fold_results(vec![
+            conn(&[2], &[20], &[], 0),
+            conn(&[3], &[12], &[500], 1),
+        ]);
+        assert_eq!(folded.ok, 2);
+        assert_eq!(folded.err, 1);
+        assert_eq!(folded.rejects_with_hint, 1);
+        assert_eq!(folded.tokens, 4);
+        // ok samples are blind to the 500ms rejection...
+        assert_eq!(folded.latencies, vec![ms(12), ms(20)]);
+        assert_eq!(folded.ttfts, vec![ms(2), ms(3)]);
+        // ...which lands in the rejected track instead
+        assert_eq!(folded.rejected, vec![ms(500)]);
+        assert_eq!(percentile(&folded.rejected, 0.5), ms(500));
+        // per-conn p99 over ok turns only: 20ms vs 12ms
+        assert_eq!(folded.per_conn_latency_p99, vec![ms(20), ms(12)]);
+        assert!((folded.conn_p99_spread - 20.0 / 12.0).abs() < 1e-9);
+    }
+
+    /// A connection with zero ok turns reports a zero p99 and is excluded
+    /// from the spread instead of forcing it to infinity.
+    #[test]
+    fn all_rejected_conn_is_excluded_from_spread() {
+        let folded = fold_results(vec![
+            conn(&[1], &[10], &[], 0),
+            conn(&[], &[], &[5, 6], 2),
+        ]);
+        assert_eq!(folded.per_conn_latency_p99, vec![ms(10), Duration::ZERO]);
+        assert_eq!(folded.conn_p99_spread, 1.0);
+        assert_eq!(folded.rejects_with_hint, 2);
+    }
+
+    #[test]
+    fn scenario_names_roundtrip() {
+        for s in [
+            Scenario::Steady,
+            Scenario::Bursty,
+            Scenario::HeavyTail,
+            Scenario::FlashCrowd,
+            Scenario::Chatty,
+        ] {
+            assert_eq!(Scenario::parse(s.as_str()), Some(s));
+        }
+        assert_eq!(Scenario::parse("warp"), None);
+    }
 }

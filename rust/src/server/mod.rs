@@ -18,7 +18,7 @@ pub mod loadgen;
 pub mod proto;
 pub mod tcp;
 
-pub use loadgen::{run_load, LoadConfig, LoadReport};
+pub use loadgen::{run_load, LoadConfig, LoadReport, Scenario};
 pub use proto::{
     decode_line, encode_event, encode_legacy_response, DecodeError, RequestBuilder, WireOp,
     WireRequest,

@@ -9,7 +9,7 @@
 //!
 //! ```json
 //! {"v":1,"op":"generate","id":1,"prompt":[1,17,230],"max_new":8,
-//!  "stop":6,"keep":true,
+//!  "stop":6,"keep":true,"priority":"interactive",
 //!  "compression":{"mode":"mikv","ratio":0.25,"lo":"int2","group":16,
 //!                 "policy":"h2o","promotion":true}}
 //! {"v":1,"op":"append","id":2,"session":7,"prompt":[4,5],"max_new":8}
@@ -25,7 +25,12 @@
 //!   optional boolean `spill` (any mode, default true) controls whether a
 //!   kept session may later spill to the on-disk cold tier when it is
 //!   evicted from the parked registry; `false` drops it instead so its KV
-//!   state never touches disk.
+//!   state never touches disk. The optional string `priority` ∈
+//!   `interactive` (default) | `batch` picks the QoS lane on a sharded
+//!   deployment with QoS enabled: the batch lane is served only when the
+//!   interactive lane is empty and is shed first under pressure. Any other
+//!   value (or a non-string) is a `bad_request`; without QoS the field
+//!   parses but has no scheduling effect.
 //! * `append` — continue a kept session: the new prompt tokens re-ingest
 //!   into the same hi/lo tiers (`keep` defaults to true here). Session ids
 //!   are coordinator-global and carry no capability token: any connection
@@ -52,7 +57,10 @@
 //!
 //! Error `code`s are the stable [`crate::coordinator::ErrorCode`] set:
 //! `bad_request`, `overloaded`, `session_not_found`, `session_busy`,
-//! `cache_full`, `internal`.
+//! `cache_full`, `internal`. `overloaded` rejections from the QoS
+//! admission layer (shedding, rate limiting) additionally carry an integer
+//! `retry_after_ms` backoff hint; every other error omits the field, so
+//! pre-QoS error lines are byte-identical.
 //!
 //! # Legacy one-shot shape
 //!
@@ -70,7 +78,7 @@
 //! Prompt tokens must be integers in both shapes; a non-integer element is
 //! rejected with `bad_request` (it is never silently coerced).
 
-use crate::coordinator::{CompressionSpec, Response, ServeEvent, WireError};
+use crate::coordinator::{CompressionSpec, Priority, Response, ServeEvent, WireError};
 use crate::util::json::{Json, JsonObj};
 
 // ----------------------------------------------------------------------
@@ -88,6 +96,10 @@ pub struct WireRequest {
     /// `Some(sid)` for `append` (continue a kept session).
     pub session: Option<u64>,
     pub keep: bool,
+    /// QoS lane (`"priority"` in the v1 envelope; legacy lines are always
+    /// interactive). Plain data here — only a QoS-enabled scheduler acts
+    /// on it.
+    pub priority: Priority,
     /// Parsed from the legacy v-less one-shot shape: the reply is a single
     /// response line, no events.
     pub legacy: bool,
@@ -147,6 +159,7 @@ pub fn decode_line(line: &str) -> Result<WireOp, DecodeError> {
             spec: legacy_spec(&v),
             session: None,
             keep: false,
+            priority: Priority::Interactive,
             legacy: true,
         }));
     }
@@ -205,6 +218,19 @@ pub fn decode_line(line: &str) -> Result<WireOp, DecodeError> {
                 })?,
                 Err(_) => op == "append",
             };
+            let priority = match v.field("priority") {
+                Ok(j) => {
+                    let s = j.as_str().ok_or_else(|| {
+                        fail(WireError::bad_request("'priority' must be a string"))
+                    })?;
+                    Priority::parse(s).ok_or_else(|| {
+                        fail(WireError::bad_request(format!(
+                            "unknown priority '{s}' (expected 'interactive' or 'batch')"
+                        )))
+                    })?
+                }
+                Err(_) => Priority::Interactive,
+            };
             let spec = match v.field("compression") {
                 Ok(c) => spec_from_json(c).map_err(&fail)?,
                 Err(_) => CompressionSpec::full(),
@@ -217,6 +243,7 @@ pub fn decode_line(line: &str) -> Result<WireOp, DecodeError> {
                 spec,
                 session,
                 keep,
+                priority,
                 legacy: false,
             }))
         }
@@ -412,6 +439,12 @@ pub fn encode_event(ev: &ServeEvent) -> String {
                 o.set("id", r.id as i64);
                 o.set("code", e.code.as_str());
                 o.set("message", e.message.as_str());
+                // Only QoS shed / rate-limit rejections carry a backoff
+                // hint; omitting it otherwise keeps pre-QoS error lines
+                // byte-identical.
+                if let Some(ms) = e.retry_after_ms {
+                    o.set("retry_after_ms", ms as i64);
+                }
             }
             None => {
                 o.set("event", "done");
@@ -438,6 +471,13 @@ pub fn encode_event(ev: &ServeEvent) -> String {
             o.set("id", *id as i64);
             o.set("active", snapshot.active);
             o.set("waiting", snapshot.waiting);
+            // Admission-side gauges, injected by the scheduler at fanout
+            // fold time (all 0 from a bare single-worker Coordinator).
+            o.set("admitted_in_flight", snapshot.admitted_in_flight);
+            o.set("qos_queued", snapshot.qos_queued);
+            o.set("shed_batch", snapshot.shed_batch as i64);
+            o.set("shed_interactive", snapshot.shed_interactive as i64);
+            o.set("rate_limited", snapshot.rate_limited as i64);
             o.set("parked_sessions", snapshot.parked_sessions);
             o.set("parked_bytes", snapshot.parked_bytes);
             // Cold tier: sessions spilled to disk, their on-disk footprint,
@@ -481,6 +521,7 @@ pub fn encode_event(ev: &ServeEvent) -> String {
                     wo.set("worker", w.worker);
                     wo.set("active", w.active);
                     wo.set("waiting", w.waiting);
+                    wo.set("admitted_in_flight", w.admitted_in_flight);
                     wo.set("parked_sessions", w.parked_sessions);
                     wo.set("parked_cold_sessions", w.parked_cold_sessions);
                     wo.set("cold_bytes", w.cold_bytes as i64);
@@ -564,6 +605,7 @@ pub struct RequestBuilder {
     max_new: usize,
     stop: Option<i64>,
     keep: Option<bool>,
+    priority: Option<Priority>,
     spec: Option<CompressionSpec>,
     legacy: bool,
 }
@@ -577,6 +619,7 @@ impl RequestBuilder {
             max_new: 8,
             stop: None,
             keep: None,
+            priority: None,
             spec: None,
             legacy: false,
         }
@@ -619,6 +662,13 @@ impl RequestBuilder {
 
     pub fn keep(mut self, keep: bool) -> RequestBuilder {
         self.keep = Some(keep);
+        self
+    }
+
+    /// Pick the QoS lane (`interactive` is the wire default; the field is
+    /// emitted only when set here, so default-lane lines stay unchanged).
+    pub fn priority(mut self, priority: Priority) -> RequestBuilder {
+        self.priority = Some(priority);
         self
     }
 
@@ -671,6 +721,9 @@ impl RequestBuilder {
                 }
                 let default_keep = matches!(self.op, BuilderOp::Append { .. });
                 o.set("keep", self.keep.unwrap_or(default_keep));
+                if let Some(p) = self.priority {
+                    o.set("priority", p.as_str());
+                }
                 if let Some(spec) = &self.spec {
                     o.set("compression", spec_to_json(spec));
                 }
@@ -707,7 +760,8 @@ mod tests {
     fn decodes_v1_generate() {
         let w = submit(
             r#"{"v":1,"op":"generate","id":3,"prompt":[1,2],"max_new":4,"stop":6,
-                "keep":true,"compression":{"mode":"mikv","ratio":0.25,"lo":"int2",
+                "keep":true,"priority":"batch",
+                "compression":{"mode":"mikv","ratio":0.25,"lo":"int2",
                 "group":2,"policy":"local","promotion":true,"spill":false}}"#,
         );
         assert_eq!(w.id, 3);
@@ -717,6 +771,7 @@ mod tests {
         assert!(w.keep);
         assert!(!w.legacy);
         assert_eq!(w.session, None);
+        assert_eq!(w.priority, Priority::Batch);
         assert_eq!(w.spec.mode, "mikv");
         assert_eq!(w.spec.ratio, Some(0.25));
         assert_eq!(w.spec.lo.as_deref(), Some("int2"));
@@ -731,6 +786,8 @@ mod tests {
         );
         assert_eq!(w.spec.promotion, None);
         assert_eq!(w.spec.spill, None);
+        // absent priority decodes as the interactive (default) lane
+        assert_eq!(w.priority, Priority::Interactive);
     }
 
     #[test]
@@ -758,6 +815,7 @@ mod tests {
         assert!(w.legacy);
         assert!(!w.keep);
         assert_eq!(w.session, None);
+        assert_eq!(w.priority, Priority::Interactive);
         assert_eq!(w.spec.mode, "mikv");
         assert_eq!(w.spec.ratio, Some(0.3));
         assert_eq!(w.spec.lo.as_deref(), Some("int4"));
@@ -795,6 +853,9 @@ mod tests {
             // promotion/spill must be booleans, never coerced
             (r#"{"v":1,"op":"generate","id":15,"prompt":[1],"compression":{"promotion":1}}"#, 15),
             (r#"{"v":1,"op":"generate","id":16,"prompt":[1],"compression":{"spill":1}}"#, 16),
+            // priority must be a known lane name, never coerced
+            (r#"{"v":1,"op":"generate","id":17,"prompt":[1],"priority":1}"#, 17),
+            (r#"{"v":1,"op":"generate","id":18,"prompt":[1],"priority":"turbo"}"#, 18),
         ];
         for (line, want_id) in cases {
             let e = decode_line(line).expect_err(line);
@@ -874,6 +935,15 @@ mod tests {
                         None
                     };
                     let keep = rng.gen_bool(0.5);
+                    let priority = if rng.gen_bool(0.5) {
+                        Some(if rng.gen_bool(0.5) {
+                            Priority::Batch
+                        } else {
+                            Priority::Interactive
+                        })
+                    } else {
+                        None
+                    };
                     let spec = if rng.gen_bool(0.8) {
                         Some(arbitrary_spec(rng))
                     } else {
@@ -889,6 +959,9 @@ mod tests {
                     if let Some(s) = stop {
                         b = b.stop(s);
                     }
+                    if let Some(p) = priority {
+                        b = b.priority(p);
+                    }
                     if let Some(sp) = spec.clone() {
                         b = b.compression(sp);
                     }
@@ -900,6 +973,7 @@ mod tests {
                         spec: spec.unwrap_or_default(),
                         session: if is_append { Some(session) } else { None },
                         keep,
+                        priority: priority.unwrap_or_default(),
                         legacy: false,
                     });
                     (b, want)
@@ -944,6 +1018,7 @@ mod tests {
                 spec,
                 session: None,
                 keep: false,
+                priority: Priority::Interactive,
                 legacy: true,
             });
             crate::prop_assert!(got == want, "line {line}: {got:?} != {want:?}");
@@ -1014,6 +1089,17 @@ mod tests {
         assert_eq!(v.field_str("event").unwrap(), "error");
         assert_eq!(v.field_str("code").unwrap(), "session_not_found");
         assert!(v.field_str("message").unwrap().contains("9"));
+        // no hint, no field: the pre-QoS error shape is locked
+        assert!(v.field("retry_after_ms").is_err());
+
+        let line = encode_event(&ServeEvent::Done(Response::error(
+            5,
+            WireError::new(ErrorCode::Overloaded, "worker 0 backlog full")
+                .with_retry_after(25),
+        )));
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.field_str("code").unwrap(), "overloaded");
+        assert_eq!(v.field_i64("retry_after_ms").unwrap(), 25);
 
         let line = encode_event(&ServeEvent::Stats {
             id: 6,
@@ -1027,6 +1113,11 @@ mod tests {
         // per-worker rows of the sharded runtime encode under "workers"
         let snapshot = StatsSnapshot {
             completed: 3,
+            admitted_in_flight: 5,
+            qos_queued: 2,
+            shed_batch: 7,
+            shed_interactive: 1,
+            rate_limited: 4,
             assembly_us_p50: 12.5,
             assembly_us_p99: 80.25,
             assembly_samples: 42,
@@ -1056,11 +1147,17 @@ mod tests {
                 restore_samples: 6,
                 promotions: 9,
                 thrash_suppressed: 4,
+                admitted_in_flight: 3,
             }],
             ..StatsSnapshot::default()
         };
         let line = encode_event(&ServeEvent::Stats { id: 8, snapshot });
         let v = Json::parse(&line).unwrap();
+        assert_eq!(v.field_i64("admitted_in_flight").unwrap(), 5);
+        assert_eq!(v.field_i64("qos_queued").unwrap(), 2);
+        assert_eq!(v.field_i64("shed_batch").unwrap(), 7);
+        assert_eq!(v.field_i64("shed_interactive").unwrap(), 1);
+        assert_eq!(v.field_i64("rate_limited").unwrap(), 4);
         assert!((v.field_f64("assembly_us_p50").unwrap() - 12.5).abs() < 1e-9);
         assert!((v.field_f64("assembly_us_p99").unwrap() - 80.25).abs() < 1e-9);
         assert_eq!(v.field_i64("assembly_samples").unwrap(), 42);
@@ -1075,6 +1172,7 @@ mod tests {
         let rows = v.field_arr("workers").unwrap();
         assert_eq!(rows.len(), 1);
         assert_eq!(rows[0].field_i64("worker").unwrap(), 1);
+        assert_eq!(rows[0].field_i64("admitted_in_flight").unwrap(), 3);
         assert_eq!(rows[0].field_i64("completed").unwrap(), 3);
         assert_eq!(rows[0].field_i64("generated_tokens").unwrap(), 12);
         assert!((rows[0].field_f64("throughput_tps").unwrap() - 4.5).abs() < 1e-9);

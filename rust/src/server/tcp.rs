@@ -204,6 +204,11 @@ fn handle_conn(stream: TcpStream, tx: Sender<Op>) -> crate::Result<()> {
                 spec: w.spec,
                 session: w.session,
                 keep: w.keep,
+                // The connection is the tenant: QoS fair-queues and
+                // rate-limits per connection, so one chatty client can't
+                // starve its neighbours.
+                tenant: conn_id,
+                priority: w.priority,
                 submitted_at: Instant::now(),
                 reply: sink(w.id, w.legacy),
             }))?,

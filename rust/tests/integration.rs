@@ -5,7 +5,8 @@
 //! invariants (MiKV@100% == full cache), and the coordinator loop.
 
 use mikv::coordinator::{
-    CompressionSpec, Coordinator, CoordinatorConfig, Op, Request, Response, ServeEvent,
+    CompressionSpec, Coordinator, CoordinatorConfig, Op, Priority, Request, Response,
+    ServeEvent,
 };
 use mikv::eval::corpus;
 use mikv::model::{CacheMode, Engine, Session};
@@ -240,6 +241,8 @@ fn coordinator_serves_mixed_requests() {
             spec: spec.clone(),
             session: None,
             keep: false,
+            tenant: 0,
+            priority: Priority::Interactive,
             submitted_at: Instant::now(),
             reply: Box::new(reply_tx.clone()),
         }))

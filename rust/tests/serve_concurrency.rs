@@ -22,14 +22,15 @@
 //! in-flight turn can finish) so that cancel/placement races are resolved
 //! by protocol events, never by timing guesses.
 
-use mikv::coordinator::{CompressionSpec, CoordinatorConfig};
+use mikv::coordinator::{CompressionSpec, CoordinatorConfig, Priority, QosConfig};
 use mikv::model::StubEngine;
-use mikv::server::loadgen::with_stub_stack;
+use mikv::server::loadgen::{with_stub_stack, with_stub_stack_qos};
 use mikv::server::{Client, RequestBuilder};
 use mikv::util::json::Json;
 use mikv::util::rng::Pcg32;
 use std::collections::HashMap;
-use std::time::Duration;
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
 
 const VOCAB: i64 = 32; // StubEngine::test_dims vocab
 
@@ -45,6 +46,26 @@ fn on_stack(
     let mut base = StubEngine::new(StubEngine::test_dims(max_seq));
     base.decode_delay = delay;
     with_stub_stack(workers, cfg, base, body).expect("stack boot");
+}
+
+/// [`on_stack`] with the QoS admission layer enabled.
+fn on_stack_qos(
+    workers: usize,
+    max_seq: usize,
+    qos: QosConfig,
+    delay: Duration,
+    body: impl FnOnce(String) + Send + 'static,
+) {
+    let mut base = StubEngine::new(StubEngine::test_dims(max_seq));
+    base.decode_delay = delay;
+    with_stub_stack_qos(
+        workers,
+        CoordinatorConfig::default(),
+        Some(qos),
+        base,
+        body,
+    )
+    .expect("stack boot");
 }
 
 /// Fetch a merged stats snapshot over the wire.
@@ -542,4 +563,216 @@ fn run_cancel_broadcast(stack_addr: String) {
     let (_, v) = client.read_turn(id_u).unwrap();
     assert_eq!(v.field_str("event").unwrap(), "cancelled");
     assert_eq!(v.field("found").unwrap(), &Json::Bool(false));
+}
+
+/// Shed order over the wire, end to end: with the worker saturated and the
+/// backlog full, a batch-lane arrival is rejected outright, and an
+/// interactive arrival evicts the *newest batch* turn instead of being
+/// rejected — both with a structured `overloaded` error carrying the
+/// configured `retry_after_ms` hint. Active work is never evicted. The
+/// whole sequence is submitted back-to-back on one connection, so the
+/// scheduler processes the ops in wire order and the outcome is
+/// deterministic (no sleeps, no timing guesses).
+#[test]
+fn qos_sheds_batch_lane_first_over_the_wire() {
+    let qos = QosConfig {
+        inflight_per_worker: 1,
+        max_backlog: 2,
+        retry_after_ms: 25,
+        ..QosConfig::default()
+    };
+    on_stack_qos(1, 2048, qos, Duration::from_millis(2), run_shed_order);
+}
+
+fn run_shed_order(stack_addr: String) {
+    let mut client = Client::connect(&stack_addr).unwrap();
+    // A: long interactive turn → dispatched (inflight cap 1), occupies the
+    // worker for ~100ms of throttled decode.
+    let id_a = client.next_id();
+    client
+        .submit(&RequestBuilder::generate(id_a).prompt(&[9, 9, 9]).max_new(50))
+        .unwrap();
+    // B (interactive) and C (batch) fill the 2-slot backlog.
+    let id_b = client.next_id();
+    client
+        .submit(&RequestBuilder::generate(id_b).prompt(&[1, 2, 3]).max_new(2))
+        .unwrap();
+    let id_c = client.next_id();
+    client
+        .submit(
+            &RequestBuilder::generate(id_c)
+                .prompt(&[4, 5, 6])
+                .max_new(2)
+                .priority(Priority::Batch),
+        )
+        .unwrap();
+    // D (batch) arrives over a full backlog → rejected outright.
+    let id_d = client.next_id();
+    client
+        .submit(
+            &RequestBuilder::generate(id_d)
+                .prompt(&[7, 8, 9])
+                .max_new(2)
+                .priority(Priority::Batch),
+        )
+        .unwrap();
+    // E (interactive) arrives over a full backlog with a batch turn
+    // waiting → C is shed to make room, E is admitted.
+    let id_e = client.next_id();
+    client
+        .submit(&RequestBuilder::generate(id_e).prompt(&[2, 4, 6]).max_new(2))
+        .unwrap();
+
+    let mut terminals: HashMap<i64, Json> = HashMap::new();
+    let mut tokens: HashMap<i64, usize> = HashMap::new();
+    while terminals.len() < 5 {
+        let v = client.recv().unwrap();
+        let id = v.field_i64("id").unwrap();
+        match v.field_str("event").unwrap() {
+            "token" => *tokens.entry(id).or_default() += 1,
+            "done" | "error" => {
+                terminals.insert(id, v);
+            }
+            other => panic!("unexpected event {other}: {v}"),
+        }
+    }
+
+    for (id, want_tokens) in [(id_a, 50usize), (id_b, 2), (id_e, 2)] {
+        let v = &terminals[&(id as i64)];
+        assert_eq!(v.field_str("event").unwrap(), "done", "turn {id}: {v}");
+        assert_eq!(tokens.get(&(id as i64)), Some(&want_tokens), "turn {id}");
+    }
+    for id in [id_c, id_d] {
+        let v = &terminals[&(id as i64)];
+        assert_eq!(v.field_str("event").unwrap(), "error", "turn {id}: {v}");
+        assert_eq!(v.field_str("code").unwrap(), "overloaded", "turn {id}");
+        assert_eq!(
+            v.field_i64("retry_after_ms").unwrap(),
+            25,
+            "shed rejection carries the configured hint: {v}"
+        );
+        assert_eq!(tokens.get(&(id as i64)), None, "shed turn streamed nothing");
+    }
+
+    // Both rejections came out of the batch lane; nothing is left queued
+    // or in flight, and the interactive lane was never shed.
+    let v = stats(&stack_addr);
+    assert_eq!(v.field_i64("shed_batch").unwrap(), 2, "{v}");
+    assert_eq!(v.field_i64("shed_interactive").unwrap(), 0, "{v}");
+    assert_eq!(v.field_i64("rate_limited").unwrap(), 0, "{v}");
+    assert_eq!(v.field_i64("qos_queued").unwrap(), 0, "{v}");
+    assert_eq!(v.field_i64("admitted_in_flight").unwrap(), 0, "{v}");
+}
+
+/// Deficit-round-robin fairness at 4 workers: one adversarial connection
+/// pipelines 24 turns (one tenant hogging every queue) while 4
+/// well-behaved connections each run 4 sequential turns. With per-tenant
+/// DRR the well-behaved turns ride round-robin past the chatty backlog, so
+/// each well-behaved connection's **worst** turn latency stays a small
+/// fraction of the chatty drain time (FCFS head-of-line blocking would put
+/// the first well-behaved turn behind ~6 queued chatty turns, most of the
+/// drain). The bound is relative to the measured chatty wall-clock, so a
+/// slow machine scales both sides equally.
+#[test]
+fn qos_fair_queuing_bounds_one_chatty_connection_at_four_workers() {
+    let qos = QosConfig {
+        // quantum ≈ one turn cost (3 prompt + 4 budget): tenants alternate
+        // turn-for-turn instead of draining 9-turn quanta.
+        quantum: 8,
+        inflight_per_worker: 1,
+        ..QosConfig::default()
+    };
+    on_stack_qos(4, 128, qos, Duration::from_millis(5), run_fairness);
+}
+
+fn run_fairness(stack_addr: String) {
+    const CHATTY_TURNS: usize = 24;
+    const WB_CONNS: usize = 4;
+    const WB_TURNS: usize = 4;
+    let barrier = Arc::new(Barrier::new(WB_CONNS + 1));
+
+    let addr = stack_addr.clone();
+    let gate = barrier.clone();
+    let chatty = std::thread::spawn(move || {
+        let mut client = Client::connect(&addr).unwrap();
+        for _ in 0..CHATTY_TURNS {
+            let id = client.next_id();
+            client
+                .submit(&RequestBuilder::generate(id).prompt(&[9, 9, 9]).max_new(4))
+                .unwrap();
+        }
+        gate.wait();
+        let t0 = Instant::now();
+        let mut done = 0usize;
+        while done < CHATTY_TURNS {
+            let v = client.recv().unwrap();
+            match v.field_str("event").unwrap() {
+                "token" => {}
+                "done" => done += 1,
+                other => panic!("chatty turn failed ({other}): {v}"),
+            }
+        }
+        t0.elapsed()
+    });
+
+    let mut wb = Vec::new();
+    for conn in 0..WB_CONNS {
+        let addr = stack_addr.clone();
+        let gate = barrier.clone();
+        wb.push(std::thread::spawn(move || {
+            let mut client = Client::connect(&addr).unwrap();
+            gate.wait();
+            let mut worst = Duration::ZERO;
+            for _ in 0..WB_TURNS {
+                let id = client.next_id();
+                let t0 = Instant::now();
+                client
+                    .submit(
+                        &RequestBuilder::generate(id)
+                            .prompt(&[1 + conn as i64, 2, 3])
+                            .max_new(4),
+                    )
+                    .unwrap();
+                let (streamed, done) = client.read_turn(id).unwrap();
+                assert_eq!(done.field_str("event").unwrap(), "done", "{done}");
+                assert_eq!(streamed.len(), 4, "budget honoured under contention");
+                worst = worst.max(t0.elapsed());
+            }
+            worst
+        }));
+    }
+
+    let chatty_wall = chatty.join().expect("chatty connection");
+    let worsts: Vec<Duration> = wb
+        .into_iter()
+        .map(|h| h.join().expect("well-behaved connection"))
+        .collect();
+    let max = *worsts.iter().max().unwrap();
+    let min = *worsts.iter().min().unwrap();
+
+    // Every well-behaved p99 (worst of 4 turns) is bounded by the deficit
+    // share: a small slice of the chatty drain, not most of it.
+    assert!(
+        max < chatty_wall.mul_f64(0.6),
+        "well-behaved worst {max:?} not bounded by chatty drain {chatty_wall:?} \
+         (per-conn worsts: {worsts:?})"
+    );
+    // ...and the per-connection spread stays tight: no well-behaved
+    // connection is starved relative to another.
+    let spread = max.as_secs_f64() / min.as_secs_f64().max(1e-9);
+    assert!(
+        spread < 4.0,
+        "per-conn p99 spread {spread:.2} too wide: {worsts:?}"
+    );
+
+    // Nothing was shed to achieve this, and the stack drained clean.
+    let v = stats(&stack_addr);
+    assert_eq!(v.field_i64("shed_batch").unwrap(), 0, "{v}");
+    assert_eq!(v.field_i64("shed_interactive").unwrap(), 0, "{v}");
+    assert_eq!(
+        v.field_i64("completed").unwrap(),
+        (CHATTY_TURNS + WB_CONNS * WB_TURNS) as i64
+    );
+    assert_eq!(v.field_i64("qos_queued").unwrap(), 0);
+    assert_eq!(v.field_i64("admitted_in_flight").unwrap(), 0);
 }

@@ -39,7 +39,10 @@ pub fn panic_free_scope(path: &str) -> bool {
         || path == "rust/src/kvcache/spill.rs"
 }
 
-/// Files subject to `hot-path-alloc-free`.
+/// Files subject to `hot-path-alloc-free`. `coordinator/qos.rs` is here
+/// because the DRR pop/push and token-bucket admit run on the scheduler's
+/// admission loop for every turn — steady-state queue churn must recycle
+/// its ring/queue storage, not allocate per op.
 pub fn alloc_free_scope(path: &str) -> bool {
     matches!(
         path,
@@ -48,6 +51,7 @@ pub fn alloc_free_scope(path: &str) -> bool {
             | "rust/src/kvcache/tier.rs"
             | "rust/src/kvcache/spill.rs"
             | "rust/src/quant/packing.rs"
+            | "rust/src/coordinator/qos.rs"
     )
 }
 
@@ -365,6 +369,21 @@ mod tests {
         // assembly.rs is in both scopes; only the alloc rule fires here.
         assert_eq!(v.len(), 1);
         assert_eq!(v[0].rule, ALLOC_FREE);
+    }
+
+    #[test]
+    fn qos_module_is_in_both_scopes() {
+        // The QoS admission structures run on the scheduler's per-op
+        // admission loop: allocation there is a violation, same as the
+        // decode hot path.
+        let src = "fn f() -> Vec<u32> {\n    vec![1]\n}\n";
+        let v = violations("rust/src/coordinator/qos.rs", src);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, ALLOC_FREE);
+        let panicky = "fn g(a: &[u32]) -> u32 {\n    a[0]\n}\n";
+        let v = violations("rust/src/coordinator/qos.rs", panicky);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, PANIC_FREE);
     }
 
     #[test]
