@@ -52,6 +52,11 @@ fn main() -> anyhow::Result<()> {
     let scenario = Scenario::parse(&scenario_name)
         .ok_or_else(|| anyhow::anyhow!("unknown --scenario '{scenario_name}'"))?;
     let qos = args.flag("qos").then(QosConfig::default);
+    // Shed-aware backoff: on a QoS stack, rejections carry retry_after_ms
+    // hints, so the generator re-submits shed turns (up to --retries per
+    // turn) instead of failing them — the retries/retry_success rows
+    // record how much load the hints recovered. Default 2 with --qos,
+    // 0 (historical fail-fast) without.
     let mut load = LoadConfig {
         conns: args.get_nonzero("conns", if smoke { 4 } else { 12 })?,
         turns: args.get_nonzero("turns", if smoke { 2 } else { 3 })?,
@@ -59,6 +64,7 @@ fn main() -> anyhow::Result<()> {
         prompt_len: args.get_nonzero("prompt-len", 6)?,
         seed: args.get("seed", 0x5EEDu64)?,
         scenario,
+        max_retries: args.get("retries", if qos.is_some() { 2usize } else { 0 })?,
         ..LoadConfig::default()
     };
     if promotion {
@@ -172,9 +178,17 @@ fn main() -> anyhow::Result<()> {
                 r.rejected_latency_p99.as_secs_f64() * 1e3,
             );
             ro.set("rejects_with_hint", r.rejects_with_hint);
+            // Shed-aware backoff: re-submissions the retry_after_ms hints
+            // drove and how many shed turns they recovered.
+            ro.set("retries", r.retries);
+            ro.set("retry_success", r.retry_success);
             ro.set("shed_batch", r.shed_batch as i64);
             ro.set("shed_interactive", r.shed_interactive as i64);
             ro.set("rate_limited", r.rate_limited as i64);
+            // Fault-domain counters (all 0 on a healthy, fault-free run).
+            ro.set("worker_restarts", r.worker_restarts as i64);
+            ro.set("sessions_lost", r.sessions_lost as i64);
+            ro.set("events_dropped", r.events_dropped as i64);
             // Server-side decode-assembly cost (µs percentiles from the
             // trailing stats op; 0 when the engine doesn't measure it).
             ro.set("assembly_us_p50", r.assembly_us_p50);

@@ -18,6 +18,12 @@
 //!   admission layer (fair queuing + shedding), and `--priority batch`
 //!   tags every turn for the batch lane. Prints tokens/s, TTFT/latency
 //!   percentiles, per-connection p99 spread and per-worker utilization.
+//! * `--chaos` — fault-injection smoke (CI runs this too): boots the
+//!   sharded stub stack with a deterministic `--fault-plan` (default arms
+//!   worker panics and writer stalls), drives a load through it, and
+//!   checks that every turn reaches a terminal event, panics were
+//!   survived (restart counters reconcile with the plan), and nothing
+//!   leaks.
 //! * default — connects to a running `mikv serve` at `--addr` and runs the
 //!   same smoke workflow against the real engine.
 //!
@@ -30,14 +36,20 @@
 
 use mikv::coordinator::{CompressionSpec, Coordinator, CoordinatorConfig, Op, Priority, QosConfig};
 use mikv::model::StubEngine;
-use mikv::server::loadgen::{run_load, with_stub_stack_qos, LoadConfig, Scenario};
-use mikv::server::{Client, RequestBuilder};
+use mikv::server::loadgen::{
+    run_load, with_stub_stack_full, with_stub_stack_qos, LoadConfig, Scenario,
+};
+use mikv::server::{Client, RequestBuilder, ServeConfig};
 use mikv::util::cli::Args;
+use mikv::util::faults::{FaultPlan, FaultSite};
 use mikv::util::json::Json;
 use std::time::Duration;
 
 fn main() -> anyhow::Result<()> {
     let args = Args::from_env();
+    if args.flag("chaos") {
+        return chaos_mode(&args);
+    }
     if args.flag("load") {
         return load_mode(&args);
     }
@@ -63,6 +75,71 @@ fn main() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Fault-injection smoke (CI runs this): boots the sharded stub stack
+/// with a deterministic [`FaultPlan`] arming worker panics and writer
+/// stalls, drives a multi-turn load through it, and checks the fault-
+/// domain contract — every turn reaches a terminal event (`run_load`
+/// returning Ok means no connection hung), worker panics were survived
+/// and counted, and the run leaves no cold-tier state behind.
+fn chaos_mode(args: &Args) -> anyhow::Result<()> {
+    let spec = args.get_str(
+        "fault-plan",
+        "seed=7;engine_step_panic:every=30,limit=2;conn_stall:every=25,ms=5",
+    );
+    let plan = FaultPlan::parse(&spec)?;
+    let workers = args.get_nonzero("workers", 2)?;
+    let mut base = StubEngine::new(StubEngine::test_dims(256));
+    base.faults = plan.clone();
+    let coord_cfg = CoordinatorConfig {
+        faults: plan.clone(),
+        ..CoordinatorConfig::default()
+    };
+    let serve_cfg = ServeConfig {
+        faults: plan.clone(),
+        ..ServeConfig::default()
+    };
+    let cfg = LoadConfig {
+        conns: args.get_nonzero("conns", 6)?,
+        turns: args.get_nonzero("turns", 3)?,
+        ..LoadConfig::default()
+    };
+    let total = cfg.conns * cfg.turns;
+    let load_cfg = cfg.clone();
+    let report = with_stub_stack_full(workers, coord_cfg, None, base, serve_cfg, move |addr| {
+        run_load(&addr, &load_cfg)
+    })??;
+    println!(
+        "chaos: {} turns -> {} ok, {} err | {} worker restart(s), \
+         {} session(s) lost, {} recovered, {} event(s) shed",
+        total,
+        report.turns_ok,
+        report.turns_err,
+        report.worker_restarts,
+        report.sessions_lost,
+        report.sessions_recovered,
+        report.events_dropped,
+    );
+    anyhow::ensure!(
+        report.turns_ok + report.turns_err == total,
+        "every turn must reach a terminal event ({} + {} != {total})",
+        report.turns_ok,
+        report.turns_err,
+    );
+    anyhow::ensure!(
+        report.worker_restarts == plan.fired(FaultSite::EngineStepPanic),
+        "restarts ({}) must reconcile with injected panics ({})",
+        report.worker_restarts,
+        plan.fired(FaultSite::EngineStepPanic),
+    );
+    anyhow::ensure!(report.turns_ok > 0, "chaos run completed no turns at all");
+    anyhow::ensure!(
+        report.parked_cold_sessions == 0 && report.cold_bytes == 0,
+        "chaos run leaked cold-tier state"
+    );
+    println!("fault-injection smoke: OK");
+    Ok(())
+}
+
 /// Load-generator mode: M concurrent connections × K turns against a
 /// sharded stub runtime (or `--addr` for an external server).
 fn load_mode(args: &Args) -> anyhow::Result<()> {
@@ -80,6 +157,7 @@ fn load_mode(args: &Args) -> anyhow::Result<()> {
         seed: args.get("seed", 0x10ADu64)?,
         scenario,
         priority,
+        max_retries: args.get("retries", 0usize)?,
         ..LoadConfig::default()
     };
     if args.flag("promotion") {
@@ -148,6 +226,12 @@ fn load_mode(args: &Args) -> anyhow::Result<()> {
         report.rate_limited,
         report.rejects_with_hint,
     );
+    if report.retries > 0 {
+        println!(
+            "retries: {} shed-aware re-submissions, {} turn(s) recovered",
+            report.retries, report.retry_success
+        );
+    }
     // A QoS stack is allowed to shed under pressure — those rejections are
     // part of what the run measures. A stock FCFS run must stay clean.
     anyhow::ensure!(

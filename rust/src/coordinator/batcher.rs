@@ -42,9 +42,12 @@ use super::stats::{MetricsCollector, StatsSnapshot, WorkerStats};
 use crate::kvcache::{spill, BufferPool, PromotionStats};
 use crate::model::{sampler, CacheMode, Engine, Session};
 use crate::runtime::ModelDims;
+use crate::util::faults::FaultPlan;
 use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Coordinator tuning knobs.
@@ -72,6 +75,10 @@ pub struct CoordinatorConfig {
     /// Byte bound on this worker's cold-tier directory (0 = unbounded);
     /// the oldest-spilled snapshots are evicted beyond it.
     pub max_cold_bytes: u64,
+    /// Deterministic fault-injection plan threaded into the cold tier (and,
+    /// via the scheduler's engine factory, into the engine). Disabled by
+    /// default: a plan with no armed sites is a no-op on every probe.
+    pub faults: FaultPlan,
 }
 
 impl Default for CoordinatorConfig {
@@ -85,8 +92,33 @@ impl Default for CoordinatorConfig {
             max_session_bytes: 512 << 20,
             cold_dir: None,
             max_cold_bytes: 256 << 20,
+            faults: FaultPlan::disabled(),
         }
     }
+}
+
+/// Shared worker health state between a [`Coordinator`] and its supervisor
+/// (the scheduler). All fields are read/written across the supervisor ↔
+/// worker thread boundary, so they live behind atomics rather than a lock:
+/// every access is a single counter op on paths that must never block.
+#[derive(Debug, Default)]
+pub struct WorkerVitals {
+    /// Gauge: sessions currently parked in the worker's **hot** registry.
+    /// On a worker panic these are unwound with the loop's locals (their
+    /// pooled blocks return via `Drop`, but the KV state is gone), so the
+    /// supervisor folds this gauge into `sessions_lost`.
+    pub hot_parked: AtomicUsize,
+    /// Cold-tier snapshots adopted by a respawned worker — each is a parked
+    /// session that survived its owner's crash and stays appendable.
+    pub sessions_recovered: AtomicU64,
+    /// High-water mark of the worker's strided session-id allocator. A
+    /// respawned worker resumes from here so it never re-issues a sid that
+    /// may still name an on-disk snapshot from its previous life.
+    pub next_session: AtomicU64,
+    /// Set by the supervisor before a respawn: the next [`Coordinator::run_ref`]
+    /// opens its cold tier in recovery mode (adopt existing snapshots
+    /// instead of GC-ing the directory).
+    pub recover: AtomicBool,
 }
 
 /// The engine surface the coordinator drives. The real [`Engine`] needs
@@ -300,6 +332,9 @@ pub struct Coordinator<E: StepEngine = Engine> {
     /// `owner(sid) = (sid - 1) % n_workers` — the scheduler routes `append`
     /// ops to the owning worker without any shared registry.
     n_workers: usize,
+    /// Health state shared with the supervisor (fresh/private when the
+    /// coordinator is unsupervised).
+    vitals: Arc<WorkerVitals>,
 }
 
 impl<E: StepEngine> Coordinator<E> {
@@ -326,7 +361,17 @@ impl<E: StepEngine> Coordinator<E> {
             pool: BufferPool::new(),
             worker_id,
             n_workers,
+            vitals: Arc::new(WorkerVitals::default()),
         }
+    }
+
+    /// Share this worker's health state with a supervisor. The same
+    /// `vitals` handed to a respawned coordinator carries the dead
+    /// predecessor's sid high-water mark and recovery flag across the
+    /// panic boundary.
+    pub fn with_vitals(mut self, vitals: Arc<WorkerVitals>) -> Self {
+        self.vitals = vitals;
+        self
     }
 
     /// This worker's index in the sharded runtime (0 for single-worker).
@@ -345,19 +390,49 @@ impl<E: StepEngine> Coordinator<E> {
 
     /// Serve until the op channel closes and all work drains.
     pub fn run(&self, rx: Receiver<Op>) {
-        self.run_until(rx, || false)
+        self.run_ref(&rx)
+    }
+
+    /// Like [`Self::run`], but borrows the op channel instead of consuming
+    /// it — the supervisor's respawn loop needs the receiver to survive a
+    /// worker panic so the replacement coordinator can keep serving it.
+    pub fn run_ref(&self, rx: &Receiver<Op>) {
+        self.run_until_ref(rx, || false)
     }
 
     /// Like [`Self::run`], but also stops (after draining in-flight work)
     /// once `stop()` returns true — used when the shutdown signal is
     /// something other than channel closure (e.g. a finished test client).
     pub fn run_until(&self, rx: Receiver<Op>, stop: impl Fn() -> bool) {
+        self.run_until_ref(&rx, stop)
+    }
+
+    /// The worker loop proper ([`Self::run_until`] by reference).
+    pub fn run_until_ref(&self, rx: &Receiver<Op>, stop: impl Fn() -> bool) {
         let mut waiting: VecDeque<Request> = VecDeque::new();
         let mut active: Vec<Active> = Vec::new();
+        // Recovery mode (set by the supervisor before a respawn) adopts the
+        // dead predecessor's cold-tier snapshots instead of GC-ing them.
+        let recovering = self.vitals.recover.swap(false, Ordering::AcqRel);
         // A failed cold-tier open degrades to the historical drop-on-evict
         // registry rather than killing the worker.
         let cold = self.cfg.cold_dir.as_ref().and_then(|root| {
-            match ColdStore::open(root, self.worker_id, self.cfg.max_cold_bytes) {
+            let opened = if recovering {
+                ColdStore::open_recover(
+                    root,
+                    self.worker_id,
+                    self.cfg.max_cold_bytes,
+                    self.cfg.faults.clone(),
+                )
+            } else {
+                ColdStore::open_with_faults(
+                    root,
+                    self.worker_id,
+                    self.cfg.max_cold_bytes,
+                    self.cfg.faults.clone(),
+                )
+            };
+            match opened {
                 Ok(c) => Some(c),
                 Err(e) => {
                     crate::log_error!(
@@ -368,10 +443,26 @@ impl<E: StepEngine> Coordinator<E> {
                 }
             }
         });
+        if recovering {
+            let adopted = cold.as_ref().map(ColdStore::len).unwrap_or(0);
+            if adopted > 0 {
+                self.vitals
+                    .sessions_recovered
+                    // lint: relaxed-ordering-audit-ok: monotonic counter, no ordering dependency
+                    .fetch_add(adopted as u64, Ordering::Relaxed);
+            }
+            crate::log_info!(
+                "worker {} respawned: adopted {adopted} cold session(s)",
+                self.worker_id
+            );
+        }
         let mut parked = ParkedRegistry::new(cold);
         // Strided so the owning worker is recoverable from the id alone:
-        // worker w of N assigns w+1, w+1+N, w+1+2N, ...
-        let mut next_session: u64 = self.worker_id as u64 + 1;
+        // worker w of N assigns w+1, w+1+N, w+1+2N, ... A respawned worker
+        // resumes from its predecessor's high-water mark so sids that may
+        // still name on-disk snapshots are never re-issued.
+        let mut next_session: u64 = (self.worker_id as u64 + 1)
+            .max(self.vitals.next_session.load(Ordering::Acquire));
         let mut collector = MetricsCollector::new();
         let mut closed = false;
 
@@ -423,6 +514,10 @@ impl<E: StepEngine> Coordinator<E> {
             // before spending a decode step on them — a decode here would
             // overshoot the documented token budget by one.
             self.retire(&mut active, &mut parked, &mut next_session, &mut collector);
+            // Publish vitals BEFORE the decode round: a panicking engine
+            // step unwinds this loop's locals, and the supervisor accounts
+            // `sessions_lost` from the last-published hot-parked gauge.
+            self.publish_vitals(&parked, next_session);
 
             // 3. One decode step over the active set, grouped by graph.
             if !active.is_empty() {
@@ -432,6 +527,7 @@ impl<E: StepEngine> Coordinator<E> {
             // 4. Retire finished/failed/cancelled turns; bound the registry.
             self.retire(&mut active, &mut parked, &mut next_session, &mut collector);
             self.sweep_parked(&mut parked);
+            self.publish_vitals(&parked, next_session);
         }
         if collector.n_requests() > 0 {
             let (p50, p99) = collector.latency();
@@ -446,6 +542,12 @@ impl<E: StepEngine> Coordinator<E> {
         } else {
             crate::log_info!("coordinator drained, shutting down");
         }
+    }
+
+    /// Mirror the loop's supervisor-visible state into the shared vitals.
+    fn publish_vitals(&self, parked: &ParkedRegistry, next_session: u64) {
+        self.vitals.hot_parked.store(parked.len(), Ordering::Release);
+        self.vitals.next_session.store(next_session, Ordering::Release);
     }
 
     /// Apply one drained op to the scheduler state.
@@ -519,6 +621,17 @@ impl<E: StepEngine> Coordinator<E> {
                     shed_batch: 0,
                     shed_interactive: 0,
                     rate_limited: 0,
+                    // Supervisor-side (restarts, losses) and server-side
+                    // (dropped events) counters are injected downstream;
+                    // recovered sessions are this worker's own knowledge.
+                    worker_restarts: 0,
+                    sessions_recovered: self
+                        .vitals
+                        .sessions_recovered
+                        // lint: relaxed-ordering-audit-ok: monotonic counter snapshot
+                        .load(Ordering::Relaxed),
+                    sessions_lost: 0,
+                    events_dropped: 0,
                     workers: vec![WorkerStats {
                         worker: self.worker_id,
                         active: active.len(),
@@ -1043,6 +1156,8 @@ mod tests {
         // disk, and evicted parked sessions are dropped as before.
         assert!(c.cold_dir.is_none());
         assert!(c.max_cold_bytes > 0);
+        // Fault injection is opt-in too: the default plan never fires.
+        assert!(!c.faults.is_enabled());
     }
 
     fn test_dims() -> ModelDims {
@@ -2149,6 +2264,74 @@ mod tests {
         let stats = coordinator.pool().stats();
         assert_eq!(stats.outstanding_blocks, 0, "{stats:?}");
         driver.join().unwrap();
+        let _ = std::fs::remove_dir_all(&root);
+    }
+
+    /// The respawn contract at the coordinator level: a second coordinator
+    /// sharing the first one's vitals (recovery flag set) adopts the
+    /// predecessor's cold-tier snapshots — the old session stays appendable
+    /// under its old sid — and resumes the sid allocator past the old
+    /// high-water mark instead of re-issuing used ids.
+    #[test]
+    fn respawn_adopts_cold_sessions_and_resumes_sid_stride() {
+        let root = tmp_cold_root("respawn");
+        let vitals = Arc::new(WorkerVitals::default());
+        let cfg = CoordinatorConfig {
+            session_ttl: Duration::ZERO, // spill on the first sweep
+            cold_dir: Some(root.clone()),
+            ..CoordinatorConfig::default()
+        };
+
+        // Life 1: keep one session; the zero TTL spills it to disk.
+        let (tx, rx) = mpsc::channel::<Op>();
+        let (reply_tx, reply_rx) = mpsc::channel::<ServeEvent>();
+        let mut req = request(1, 3, 2, sink(&reply_tx));
+        req.keep = true;
+        req.spec = CompressionSpec::mikv(0.5, "int4");
+        tx.send(Op::Submit(req)).unwrap();
+        drop(tx);
+        drop(reply_tx);
+        let c1 = Coordinator::new(StubEngine::new(StubEngine::test_dims(64)), cfg.clone())
+            .with_vitals(vitals.clone());
+        c1.run(rx);
+        let sid = dones(reply_rx)
+            .pop()
+            .and_then(|r| r.session)
+            .expect("turn 1 parked a session");
+        assert_eq!(sid, 1);
+        assert!(
+            vitals.next_session.load(Ordering::Acquire) > sid,
+            "high-water mark published"
+        );
+
+        // Life 2: same vitals, recovery flagged (as the supervisor would).
+        vitals.recover.store(true, Ordering::Release);
+        let (tx, rx) = mpsc::channel::<Op>();
+        let (reply_tx, reply_rx) = mpsc::channel::<ServeEvent>();
+        let mut back = request(2, 1, 1, sink(&reply_tx));
+        back.session = Some(sid);
+        tx.send(Op::Submit(back)).unwrap();
+        let mut fresh = request(3, 2, 1, sink(&reply_tx));
+        fresh.keep = true;
+        tx.send(Op::Submit(fresh)).unwrap();
+        drop(tx);
+        drop(reply_tx);
+        let c2 = Coordinator::new(StubEngine::new(StubEngine::test_dims(64)), cfg)
+            .with_vitals(vitals.clone());
+        c2.run(rx);
+
+        let mut resps = dones(reply_rx);
+        resps.sort_by_key(|r| r.id);
+        assert_eq!(resps.len(), 2);
+        assert!(
+            resps[0].error.is_none(),
+            "append must restore the adopted snapshot: {:?}",
+            resps[0].error
+        );
+        // lint: relaxed-ordering-audit-ok: test-only read after join
+        assert_eq!(vitals.sessions_recovered.load(Ordering::Relaxed), 1);
+        let new_sid = resps[1].session.expect("fresh keep parks");
+        assert!(new_sid > sid, "sid {new_sid} must not collide with life 1");
         let _ = std::fs::remove_dir_all(&root);
     }
 }

@@ -17,12 +17,33 @@
 //! Session ids restart at every process launch, so snapshots from a
 //! previous run could alias fresh ids; [`ColdStore::open`] therefore
 //! removes every leftover file in its namespace (orphan GC) before
-//! serving.
+//! serving. The exception is supervised **respawn within one process**
+//! ([`ColdStore::open_recover`]): session ids stay valid across a worker
+//! restart, so recovery adopts the dead worker's intact `.snap` files
+//! (they restore transparently on the next `append`) and GCs only tmp
+//! debris.
+//!
+//! For crash-consistency testing, every IO point in the `put`/`take`
+//! sequence is probed through a [`FaultPlan`]
+//! (`cold_put_before_write` / `cold_put_partial_write` /
+//! `cold_put_before_rename` / `cold_put_after_rename` /
+//! `cold_take_read`), so tests can enumerate mid-sequence crashes and
+//! assert the invariants above actually hold.
 
+use crate::util::faults::{FaultPlan, FaultSite};
 use std::collections::HashMap;
 use std::fs;
 use std::io;
 use std::path::{Path, PathBuf};
+
+/// A structured IO error for an injected fault (the fault plan models
+/// the disk failing, so it surfaces exactly like one).
+fn injected(what: &str, sid: u64) -> io::Error {
+    io::Error::new(
+        io::ErrorKind::Other,
+        format!("fault plan: injected {what} for session {sid}"),
+    )
+}
 
 struct ColdEntry {
     bytes: u64,
@@ -41,12 +62,24 @@ pub struct ColdStore {
     seq: u64,
     evictions: u64,
     orphans_removed: u64,
+    /// Deterministic IO fault injection (disabled by default).
+    faults: FaultPlan,
 }
 
 impl ColdStore {
     /// Open (creating if needed) the worker's namespace under `root` and
     /// GC any leftover snapshot files from a previous run.
     pub fn open(root: &Path, worker_id: usize, max_bytes: u64) -> io::Result<ColdStore> {
+        Self::open_with_faults(root, worker_id, max_bytes, FaultPlan::disabled())
+    }
+
+    /// [`Self::open`] with a fault plan probed at every IO point.
+    pub fn open_with_faults(
+        root: &Path,
+        worker_id: usize,
+        max_bytes: u64,
+        faults: FaultPlan,
+    ) -> io::Result<ColdStore> {
         let dir = root.join(format!("worker-{worker_id}"));
         fs::create_dir_all(&dir)?;
         let mut orphans_removed = 0u64;
@@ -65,7 +98,90 @@ impl ColdStore {
             seq: 0,
             evictions: 0,
             orphans_removed,
+            faults,
         })
+    }
+
+    /// Reopen a namespace after a supervised worker respawn **within the
+    /// same process**: session ids are still live, so intact `<sid>.snap`
+    /// files are adopted back into the index (oldest first by modification
+    /// time, so the eviction clock keeps its meaning) instead of GC'd.
+    /// Only tmp debris and unparseable names are removed. Adopted
+    /// snapshots beyond `max_bytes` are evicted oldest-first on the spot.
+    pub fn open_recover(
+        root: &Path,
+        worker_id: usize,
+        max_bytes: u64,
+        faults: FaultPlan,
+    ) -> io::Result<ColdStore> {
+        let dir = root.join(format!("worker-{worker_id}"));
+        fs::create_dir_all(&dir)?;
+        let mut orphans_removed = 0u64;
+        // (sid, bytes, mtime) of every adoptable snapshot.
+        let mut found: Vec<(u64, u64, std::time::SystemTime)> = Vec::new();
+        for entry in fs::read_dir(&dir)? {
+            let entry = entry?;
+            if !entry.file_type()?.is_file() {
+                continue;
+            }
+            let path = entry.path();
+            let sid = path
+                .extension()
+                .and_then(|e| e.to_str())
+                .filter(|e| *e == "snap")
+                .and_then(|_| path.file_stem())
+                .and_then(|s| s.to_str())
+                .and_then(|s| s.parse::<u64>().ok());
+            match sid {
+                Some(sid) => {
+                    let meta = entry.metadata()?;
+                    let mtime = meta.modified().unwrap_or(std::time::UNIX_EPOCH);
+                    found.push((sid, meta.len(), mtime));
+                }
+                None => {
+                    // `.snap.tmp` debris or foreign files: GC as usual.
+                    fs::remove_file(&path)?;
+                    orphans_removed += 1;
+                }
+            }
+        }
+        found.sort_by_key(|&(sid, _, mtime)| (mtime, sid));
+        let mut store = ColdStore {
+            dir,
+            max_bytes,
+            total_bytes: 0,
+            entries: HashMap::new(),
+            seq: 0,
+            evictions: 0,
+            orphans_removed,
+            faults,
+        };
+        for (sid, bytes, _) in found {
+            store.seq += 1;
+            store.total_bytes += bytes;
+            store.entries.insert(
+                sid,
+                ColdEntry {
+                    bytes,
+                    seq: store.seq,
+                },
+            );
+        }
+        // Enforce the bound on what was adopted (a respawn may configure a
+        // smaller cold tier than what the dead worker left behind).
+        if store.max_bytes > 0 {
+            while store.total_bytes > store.max_bytes {
+                let oldest = store
+                    .entries
+                    .iter()
+                    .min_by_key(|(_, e)| e.seq)
+                    .map(|(&k, _)| k);
+                let Some(victim) = oldest else { break };
+                store.remove(victim)?;
+                store.evictions += 1;
+            }
+        }
+        Ok(store)
     }
 
     fn path(&self, sid: u64) -> PathBuf {
@@ -97,8 +213,29 @@ impl ColdStore {
             }
         }
         let tmp = self.dir.join(format!("{sid}.snap.tmp"));
+        if self.faults.should_fire(FaultSite::ColdPutBeforeWrite) {
+            return Err(injected("put failure before tmp write", sid));
+        }
+        if self.faults.should_fire(FaultSite::ColdPutPartialWrite) {
+            // A torn write: half the frame lands in the tmp file, then the
+            // "disk" fails. The orphan tmp is GC'd by the next open, and
+            // the final path was never touched.
+            let part = frame.get(..frame.len() / 2).unwrap_or(&[]);
+            fs::write(&tmp, part)?;
+            return Err(injected("partial tmp write", sid));
+        }
         fs::write(&tmp, frame)?;
+        if self.faults.should_fire(FaultSite::ColdPutBeforeRename) {
+            return Err(injected("put failure before rename", sid));
+        }
         fs::rename(&tmp, self.path(sid))?;
+        if self.faults.should_fire(FaultSite::ColdPutAfterRename) {
+            // The snapshot is durable but the index update below never
+            // runs — the crash point right after the atomic rename. The
+            // file is unreachable (not in `entries`) and is GC'd by the
+            // next open.
+            return Err(injected("put failure after rename", sid));
+        }
         if let Some(old) = self.entries.remove(&sid) {
             self.total_bytes -= old.bytes;
         }
@@ -121,6 +258,13 @@ impl ColdStore {
             return Ok(None);
         };
         self.total_bytes -= e.bytes;
+        if self.faults.should_fire(FaultSite::ColdTakeRead) {
+            // The index entry is already gone (mirroring a real read
+            // failure below): the caller sees a structured error now and
+            // `session_not_found` on retry; the unreachable file is GC'd
+            // by the next open.
+            return Err(injected("snapshot read failure", sid));
+        }
         let p = self.path(sid);
         let bytes = fs::read(&p)?;
         fs::remove_file(&p)?;
@@ -176,6 +320,7 @@ impl ColdStore {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::faults::FaultRule;
     use std::sync::atomic::{AtomicU64, Ordering};
 
     static TEST_SEQ: AtomicU64 = AtomicU64::new(0);
@@ -260,5 +405,123 @@ mod tests {
         // the other worker's namespace was untouched
         assert!(root.join("worker-1").join("5.snap").exists());
         let _ = fs::remove_dir_all(&root);
+    }
+
+    /// Crash-consistency sweep over every injected `put` fault point:
+    /// each failure surfaces as a structured error, never tears the final
+    /// snapshot path, and any debris is exactly what the next `open` GC
+    /// removes.
+    #[test]
+    fn put_fault_points_fail_clean_and_gc_recovers() {
+        // (site, tmp file left behind?, final file left behind?)
+        let cases = [
+            (FaultSite::ColdPutBeforeWrite, false, false),
+            (FaultSite::ColdPutPartialWrite, true, false),
+            (FaultSite::ColdPutBeforeRename, true, false),
+            (FaultSite::ColdPutAfterRename, false, true),
+        ];
+        for (site, tmp_left, final_left) in cases {
+            let root = tmp_root(site.as_str());
+            let plan = FaultPlan::builder().every(site, 1).build();
+            let mut c =
+                ColdStore::open_with_faults(&root, 0, 0, plan.clone()).unwrap();
+            let err = c.put(3, b"frame-bytes").unwrap_err();
+            assert!(
+                err.to_string().contains("fault plan"),
+                "{site:?}: {err}"
+            );
+            assert_eq!(plan.fired(site), 1);
+            // the failed put never entered the index or the accounting
+            assert!(!c.contains(3), "{site:?}");
+            assert_eq!(c.bytes(), 0, "{site:?}");
+            assert_eq!(
+                c.dir().join("3.snap.tmp").exists(),
+                tmp_left,
+                "{site:?} tmp debris"
+            );
+            assert_eq!(
+                c.dir().join("3.snap").exists(),
+                final_left,
+                "{site:?} final file"
+            );
+            // the session is cleanly absent, not torn: take reports None
+            assert_eq!(c.take(3).unwrap(), None, "{site:?}");
+            // a fresh open GCs every piece of debris in the namespace
+            drop(c);
+            let c = ColdStore::open(&root, 0, 0).unwrap();
+            let want_orphans = u64::from(tmp_left) + u64::from(final_left);
+            assert_eq!(c.orphans_removed(), want_orphans, "{site:?}");
+            assert!(!c.dir().join("3.snap.tmp").exists(), "{site:?}");
+            assert!(!c.dir().join("3.snap").exists(), "{site:?}");
+            let _ = fs::remove_dir_all(&root);
+        }
+    }
+
+    /// An injected `take` read failure maps to a structured error; the
+    /// session then cleanly reports not-found (never a torn restore), and
+    /// the unreachable file is debris for the next open's GC.
+    #[test]
+    fn take_read_fault_degrades_to_not_found() {
+        let root = tmp_root("take-fault");
+        let plan = FaultPlan::builder()
+            .site(
+                FaultSite::ColdTakeRead,
+                FaultRule {
+                    limit: 1,
+                    ..FaultRule::default()
+                },
+            )
+            .build();
+        let mut c = ColdStore::open_with_faults(&root, 0, 0, plan.clone()).unwrap();
+        assert!(c.put(11, b"snapshot").unwrap());
+        let err = c.take(11).unwrap_err();
+        assert!(err.to_string().contains("fault plan"), "{err}");
+        assert_eq!(plan.fired(FaultSite::ColdTakeRead), 1);
+        // retry: cleanly absent, not torn (the limit=1 rule is spent)
+        assert_eq!(c.take(11).unwrap(), None);
+        assert!(!c.contains(11));
+        assert_eq!(c.bytes(), 0);
+        drop(c);
+        let c = ColdStore::open(&root, 0, 0).unwrap();
+        assert_eq!(c.orphans_removed(), 1, "unreachable snapshot GC'd");
+        let _ = fs::remove_dir_all(&root);
+    }
+
+    /// Supervised respawn: `open_recover` adopts intact snapshots (they
+    /// stay restorable), GCs tmp debris, and enforces the byte bound on
+    /// what it adopted.
+    #[test]
+    fn open_recover_adopts_snapshots_and_gcs_tmp_debris() {
+        let root = tmp_root("recover");
+        {
+            let mut c = ColdStore::open(&root, 0, 0).unwrap();
+            assert!(c.put(4, b"four-bytes!").unwrap());
+            assert!(c.put(8, b"eight").unwrap());
+            // simulated crash debris
+            fs::write(c.dir().join("9.snap.tmp"), b"torn").unwrap();
+            fs::write(c.dir().join("junk.snap"), b"alien").unwrap();
+        }
+        let mut c =
+            ColdStore::open_recover(&root, 0, 0, FaultPlan::disabled()).unwrap();
+        assert_eq!(c.len(), 2, "both intact snapshots adopted");
+        assert_eq!(c.orphans_removed(), 2, "tmp + unparseable GC'd");
+        assert_eq!(c.bytes(), 11 + 5);
+        assert_eq!(c.take(4).unwrap().as_deref(), Some(&b"four-bytes!"[..]));
+        assert_eq!(c.take(8).unwrap().as_deref(), Some(&b"eight"[..]));
+
+        // a tighter bound on respawn evicts adopted snapshots oldest-first
+        let root2 = tmp_root("recover-bound");
+        {
+            let mut c = ColdStore::open(&root2, 0, 0).unwrap();
+            assert!(c.put(1, &[0u8; 40]).unwrap());
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            assert!(c.put(2, &[0u8; 40]).unwrap());
+        }
+        let c = ColdStore::open_recover(&root2, 0, 50, FaultPlan::disabled()).unwrap();
+        assert_eq!(c.len(), 1);
+        assert_eq!(c.evictions(), 1);
+        assert!(c.contains(2), "newest snapshot survives the bound");
+        let _ = fs::remove_dir_all(&root);
+        let _ = fs::remove_dir_all(&root2);
     }
 }

@@ -16,7 +16,10 @@
 //! keep decoding, and decode batches are re-formed every step from
 //! whatever is in flight (grouped by graph kind), so a long generation
 //! never blocks short ones behind it — and sessions retire/admit between
-//! decode steps without draining the batch.
+//! decode steps without draining the batch. Workers are **supervised**: a
+//! panicking worker is caught and respawned by the scheduler, every
+//! in-flight client gets a structured `internal` terminal event, and
+//! cold-spilled sessions survive the crash (see [`WorkerVitals`]).
 //!
 //! The serving surface is **streaming and multi-turn**: each turn's
 //! sampled tokens are pushed into its [`EventSink`] as `token` events
@@ -33,7 +36,7 @@ pub mod request;
 pub mod scheduler;
 pub mod stats;
 
-pub use batcher::{Coordinator, CoordinatorConfig, StepEngine};
+pub use batcher::{Coordinator, CoordinatorConfig, StepEngine, WorkerVitals};
 pub use cold::ColdStore;
 pub use qos::QosConfig;
 pub use request::{

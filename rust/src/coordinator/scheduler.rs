@@ -22,6 +22,17 @@
 //!   per-worker answers are merged by aggregate sinks into the single
 //!   reply the client expects (`found` OR-ed, snapshots merged with
 //!   per-worker rows, see [`StatsSnapshot::merged`]).
+//! * **Supervision** — every worker loop runs under `catch_unwind` inside
+//!   a respawn loop. A panicking worker (engine bug, injected fault) does
+//!   not strand its clients: each in-flight op on that worker is tracked
+//!   in a [`FlightRegistry`] and answered with a structured `internal`
+//!   error by the supervisor's sweep, then a fresh engine takes over the
+//!   same op channel. The replacement shares the dead life's
+//!   [`WorkerVitals`], so its sid allocator resumes past the high-water
+//!   mark and the cold tier re-opens in recovery mode — spilled sessions
+//!   survive the crash and stay appendable. `worker_restarts` /
+//!   `sessions_lost` (plus the workers' own `sessions_recovered`) surface
+//!   through merged stats.
 //!
 //! Worker results flow back through each request's own [`EventSink`]
 //! (for TCP: the connection's writer channel), so the scheduler is never
@@ -44,12 +55,13 @@
 //! `Scheduler::start(1, ...)` is behaviourally the old single-loop
 //! deployment: one worker, stride 1, every op forwarded.
 
-use super::batcher::{Coordinator, CoordinatorConfig, StepEngine};
+use super::batcher::{Coordinator, CoordinatorConfig, StepEngine, WorkerVitals};
 use super::qos::{self, DrrQueue, QosConfig, RateLimiter};
 use super::request::{
     ErrorCode, EventSink, Op, Priority, Reply, Request, Response, ServeEvent, WireError,
 };
 use super::stats::StatsSnapshot;
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
@@ -61,6 +73,31 @@ use std::time::{Duration, Instant};
 pub fn worker_of_session(sid: u64, n_workers: usize) -> usize {
     let n = n_workers.max(1) as u64;
     (sid.max(1).wrapping_sub(1) % n) as usize
+}
+
+/// Answer one op with the structured event a permanently dead worker owes
+/// it — the supervisor's degraded terminal mode when an engine rebuild
+/// fails (clients get errors, never silence).
+fn fail_op(op: Op, worker: usize) {
+    match op {
+        Op::Submit(req) => {
+            let err = WireError::internal(format!("worker {worker} unavailable"));
+            let _ = req.reply.emit(ServeEvent::Done(Response::error(req.id, err)));
+        }
+        Op::Cancel { id, target, reply } => {
+            let _ = reply.emit(ServeEvent::CancelResult {
+                id,
+                target,
+                found: false,
+            });
+        }
+        Op::Stats { id, reply } => {
+            let _ = reply.emit(ServeEvent::Stats {
+                id,
+                snapshot: StatsSnapshot::default(),
+            });
+        }
+    }
 }
 
 /// Counts a worker's in-flight submits so the Done event decrements what
@@ -83,6 +120,146 @@ impl EventSink for TrackedSink {
             }
         }
         ok
+    }
+}
+
+/// What a supervised in-flight op owes its client, so the supervisor can
+/// synthesize the right terminal event if the worker dies first.
+enum FlightKind {
+    Submit { id: u64 },
+    Cancel { id: u64, target: u64 },
+    Stats { id: u64 },
+}
+
+/// One op currently at (or en route to) a worker. The client's reply sink
+/// lives in the shared `slot`: whoever takes it — the worker's terminal
+/// event or the supervisor's post-panic sweep — answers the client, and
+/// the other side finds the slot empty and stays silent. That exchange is
+/// what guarantees exactly one terminal event per op across a crash.
+struct Flight {
+    what: FlightKind,
+    slot: Arc<Mutex<Option<Reply>>>,
+}
+
+/// Per-worker ledger of supervised in-flight ops. Registered by the
+/// dispatch paths, deregistered as terminal events pass through, drained
+/// wholesale by [`Self::fail_all`] when the worker panics.
+#[derive(Default)]
+struct FlightRegistry {
+    next_key: AtomicU64,
+    flights: Mutex<HashMap<u64, Flight>>,
+}
+
+impl FlightRegistry {
+    /// Wrap `reply` in a sink registered under a fresh key.
+    fn track(self: &Arc<Self>, what: FlightKind, reply: Reply) -> Reply {
+        let key = self.next_key.fetch_add(1, Ordering::AcqRel);
+        let slot = Arc::new(Mutex::new(Some(reply)));
+        self.flights
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .insert(
+                key,
+                Flight {
+                    what,
+                    slot: slot.clone(),
+                },
+            );
+        Box::new(SupervisedSink {
+            reg: self.clone(),
+            key,
+            slot,
+        })
+    }
+
+    fn deregister(&self, key: u64) {
+        self.flights
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .remove(&key);
+    }
+
+    /// Answer every still-open flight with a structured terminal event —
+    /// the supervisor's post-panic sweep, so no client ever hangs on a
+    /// dead worker. Returns how many flights were actually answered here
+    /// (flights whose terminal already passed through are skipped).
+    fn fail_all(&self, worker: usize) -> usize {
+        let drained: Vec<Flight> = {
+            let mut map = self
+                .flights
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+            map.drain().map(|(_, f)| f).collect()
+        };
+        let mut failed = 0usize;
+        for f in drained {
+            let taken = f
+                .slot
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner)
+                .take();
+            let Some(reply) = taken else { continue };
+            failed += 1;
+            let ev = match f.what {
+                FlightKind::Submit { id } => ServeEvent::Done(Response::error(
+                    id,
+                    WireError::internal(format!("worker {worker} restarted mid-request")),
+                )),
+                FlightKind::Cancel { id, target } => ServeEvent::CancelResult {
+                    id,
+                    target,
+                    found: false,
+                },
+                FlightKind::Stats { id } => ServeEvent::Stats {
+                    id,
+                    snapshot: StatsSnapshot::default(),
+                },
+            };
+            let _ = reply.emit(ev);
+        }
+        failed
+    }
+}
+
+/// The sink a supervised op streams through. Non-terminal events forward
+/// to the reply while it is still in the slot; the terminal event takes
+/// the reply out (deregistering the flight) so the supervisor's sweep can
+/// never answer the same op twice.
+struct SupervisedSink {
+    reg: Arc<FlightRegistry>,
+    key: u64,
+    slot: Arc<Mutex<Option<Reply>>>,
+}
+
+impl EventSink for SupervisedSink {
+    fn emit(&self, ev: ServeEvent) -> bool {
+        let terminal = matches!(
+            ev,
+            ServeEvent::Done(_) | ServeEvent::CancelResult { .. } | ServeEvent::Stats { .. }
+        );
+        if terminal {
+            let taken = self
+                .slot
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner)
+                .take();
+            self.reg.deregister(self.key);
+            match taken {
+                Some(reply) => reply.emit(ev),
+                // The supervisor already answered after a worker panic;
+                // swallow the late duplicate.
+                None => false,
+            }
+        } else {
+            let guard = self
+                .slot
+                .lock()
+                .unwrap_or_else(std::sync::PoisonError::into_inner);
+            match guard.as_ref() {
+                Some(reply) => reply.emit(ev),
+                None => false,
+            }
+        }
     }
 }
 
@@ -189,6 +366,9 @@ impl EventSink for StatsShard {
                 merged.shed_interactive =
                     self.0.counters.shed_interactive.load(Ordering::Acquire);
                 merged.rate_limited = self.0.counters.rate_limited.load(Ordering::Acquire);
+                merged.worker_restarts =
+                    self.0.counters.worker_restarts.load(Ordering::Acquire);
+                merged.sessions_lost = self.0.counters.sessions_lost.load(Ordering::Acquire);
                 if let Some(reply) = state.reply.take() {
                     return reply.emit(ServeEvent::Stats {
                         id: self.0.id,
@@ -208,6 +388,12 @@ struct SchedCounters {
     shed_batch: AtomicU64,
     shed_interactive: AtomicU64,
     rate_limited: AtomicU64,
+    /// Worker panics survived: each is one `catch_unwind` + engine rebuild
+    /// + cold-tier recovery cycle in a supervisor loop.
+    worker_restarts: AtomicU64,
+    /// Hot-parked sessions unwound with a panicking worker (their KV state
+    /// is gone; a later `append` reports `session_not_found`).
+    sessions_lost: AtomicU64,
 }
 
 /// QoS admission state — only constructed when a [`QosConfig`] was
@@ -233,6 +419,10 @@ pub struct Scheduler {
     /// limits); `None` = historical FCFS forward, regression-locked.
     qos: Option<QosState>,
     counters: Arc<SchedCounters>,
+    /// Per-worker ledgers of supervised in-flight ops (see
+    /// [`FlightRegistry`]): every op dispatched to worker `w` is tracked in
+    /// `flights[w]` until its terminal event passes through.
+    flights: Vec<Arc<FlightRegistry>>,
 }
 
 impl Scheduler {
@@ -269,15 +459,21 @@ impl Scheduler {
         let factory = Arc::new(factory);
         let loads: Arc<Vec<AtomicUsize>> =
             Arc::new((0..n_workers).map(|_| AtomicUsize::new(0)).collect());
+        let counters = Arc::new(SchedCounters::default());
         let (ready_tx, ready_rx) = channel::<crate::Result<()>>();
         let mut txs = Vec::with_capacity(n_workers);
         let mut handles = Vec::with_capacity(n_workers);
+        let mut flights = Vec::with_capacity(n_workers);
         for w in 0..n_workers {
             let (tx, rx) = channel::<Op>();
             txs.push(tx);
+            let reg = Arc::new(FlightRegistry::default());
+            flights.push(reg.clone());
+            let vitals = Arc::new(WorkerVitals::default());
             let cfg_w = cfg.clone();
             let factory = factory.clone();
             let ready = ready_tx.clone();
+            let counters_w = counters.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("mikv-worker-{w}"))
                 .spawn(move || {
@@ -291,7 +487,56 @@ impl Scheduler {
                             return;
                         }
                     };
-                    Coordinator::for_worker(engine, cfg_w, w, n_workers).run(rx);
+                    // The supervisor loop: each pass runs one coordinator
+                    // life over the SAME op channel. A panic (engine bug,
+                    // injected fault) is caught, every in-flight client is
+                    // answered with a structured `internal` error, and a
+                    // fresh engine takes over the channel — with the dead
+                    // life's vitals, so the sid allocator resumes past its
+                    // high-water mark and the cold tier is re-opened in
+                    // recovery mode (spilled sessions stay appendable).
+                    let mut engine = Some(engine);
+                    loop {
+                        let Some(e) = engine.take() else { break };
+                        let coord = Coordinator::for_worker(e, cfg_w.clone(), w, n_workers)
+                            .with_vitals(vitals.clone());
+                        let life = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            || coord.run_ref(&rx),
+                        ));
+                        drop(coord);
+                        match life {
+                            // Channel closed and drained: normal shutdown.
+                            Ok(()) => break,
+                            Err(_) => {
+                                counters_w.worker_restarts.fetch_add(1, Ordering::AcqRel);
+                                let lost = vitals.hot_parked.swap(0, Ordering::AcqRel);
+                                counters_w
+                                    .sessions_lost
+                                    .fetch_add(lost as u64, Ordering::AcqRel);
+                                let failed = reg.fail_all(w);
+                                vitals.recover.store(true, Ordering::Release);
+                                crate::log_error!(
+                                    "worker {w} panicked; failed {failed} in-flight op(s), \
+                                     lost {lost} hot-parked session(s), respawning"
+                                );
+                                match factory(w) {
+                                    Ok(fresh) => engine = Some(fresh),
+                                    Err(e) => {
+                                        crate::log_error!(
+                                            "worker {w} respawn failed: {e}; serving \
+                                             structured errors until shutdown"
+                                        );
+                                        // Degraded terminal mode: never let
+                                        // clients hang on a dead worker.
+                                        while let Ok(op) = rx.recv() {
+                                            fail_op(op, w);
+                                        }
+                                        break;
+                                    }
+                                }
+                            }
+                        }
+                    }
                 })
                 .map_err(|e| anyhow::anyhow!("spawn worker thread: {e}"))?;
             handles.push(handle);
@@ -317,7 +562,8 @@ impl Scheduler {
             handles,
             cfg,
             qos,
-            counters: Arc::new(SchedCounters::default()),
+            counters,
+            flights,
         })
     }
 
@@ -403,12 +649,13 @@ impl Scheduler {
                         found: false,
                     }),
                 });
-                for tx in &self.txs {
-                    if let Err(send_err) = tx.send(Op::Cancel {
-                        id,
-                        target,
-                        reply: Box::new(CancelShard(fanout.clone())),
-                    }) {
+                for (w, tx) in self.txs.iter().enumerate() {
+                    let shard: Reply = Box::new(CancelShard(fanout.clone()));
+                    let reply = match self.flights.get(w) {
+                        Some(reg) => reg.track(FlightKind::Cancel { id, target }, shard),
+                        None => shard,
+                    };
+                    if let Err(send_err) = tx.send(Op::Cancel { id, target, reply }) {
                         // Worker gone: account it as answered-not-found so
                         // the aggregate reply still fires.
                         if let Op::Cancel { reply, .. } = send_err.0 {
@@ -433,11 +680,13 @@ impl Scheduler {
                         remaining: self.txs.len(),
                     }),
                 });
-                for tx in &self.txs {
-                    if let Err(send_err) = tx.send(Op::Stats {
-                        id,
-                        reply: Box::new(StatsShard(fanout.clone())),
-                    }) {
+                for (w, tx) in self.txs.iter().enumerate() {
+                    let shard: Reply = Box::new(StatsShard(fanout.clone()));
+                    let reply = match self.flights.get(w) {
+                        Some(reg) => reg.track(FlightKind::Stats { id }, shard),
+                        None => shard,
+                    };
+                    if let Err(send_err) = tx.send(Op::Stats { id, reply }) {
                         if let Op::Stats { reply, .. } = send_err.0 {
                             let _ = reply.emit(ServeEvent::Stats {
                                 id,
@@ -505,14 +754,19 @@ impl Scheduler {
         if let Some(load) = self.loads.get(w) {
             load.fetch_add(1, Ordering::AcqRel);
         }
-        let req = Request {
-            reply: Box::new(TrackedSink {
-                inner: req.reply,
-                loads: self.loads.clone(),
-                worker: w,
-            }),
-            ..req
+        let id = req.id;
+        let tracked: Reply = Box::new(TrackedSink {
+            inner: req.reply,
+            loads: self.loads.clone(),
+            worker: w,
+        });
+        // Supervision wraps OUTSIDE the load tracker: a post-panic sweep
+        // answers through the tracked sink, releasing the load slot too.
+        let reply = match self.flights.get(w) {
+            Some(reg) => reg.track(FlightKind::Submit { id }, tracked),
+            None => tracked,
         };
+        let req = Request { reply, ..req };
         if let Err(send_err) = tx.send(Op::Submit(req)) {
             // Worker gone (only during shutdown). Answer through the
             // tracked sink so the load count is released.
@@ -661,7 +915,11 @@ impl Scheduler {
     /// the QoS in-flight cap.
     fn pump_worker(&mut self, w: usize) {
         let Scheduler {
-            txs, loads, qos, ..
+            txs,
+            loads,
+            qos,
+            flights,
+            ..
         } = self;
         let Some(qos) = qos.as_mut() else { return };
         let quantum = qos.cfg.quantum;
@@ -674,14 +932,17 @@ impl Scheduler {
                 return;
             };
             load.fetch_add(1, Ordering::AcqRel);
-            let req = Request {
-                reply: Box::new(TrackedSink {
-                    inner: req.reply,
-                    loads: loads.clone(),
-                    worker: w,
-                }),
-                ..req
+            let id = req.id;
+            let tracked: Reply = Box::new(TrackedSink {
+                inner: req.reply,
+                loads: loads.clone(),
+                worker: w,
+            });
+            let reply = match flights.get(w) {
+                Some(reg) => reg.track(FlightKind::Submit { id }, tracked),
+                None => tracked,
             };
+            let req = Request { reply, ..req };
             if let Err(send_err) = tx.send(Op::Submit(req)) {
                 // Worker gone (only during shutdown). Answer through the
                 // tracked sink so the load count is released.
@@ -698,7 +959,11 @@ impl Scheduler {
     /// no accepted turn is silently dropped.
     fn flush_queues(&mut self) {
         let Scheduler {
-            txs, loads, qos, ..
+            txs,
+            loads,
+            qos,
+            flights,
+            ..
         } = self;
         let Some(qos) = qos.as_mut() else { return };
         let quantum = qos.cfg.quantum;
@@ -708,14 +973,17 @@ impl Scheduler {
             };
             while let Some(req) = queue.pop_next(quantum) {
                 load.fetch_add(1, Ordering::AcqRel);
-                let req = Request {
-                    reply: Box::new(TrackedSink {
-                        inner: req.reply,
-                        loads: loads.clone(),
-                        worker: w,
-                    }),
-                    ..req
+                let id = req.id;
+                let tracked: Reply = Box::new(TrackedSink {
+                    inner: req.reply,
+                    loads: loads.clone(),
+                    worker: w,
+                });
+                let reply = match flights.get(w) {
+                    Some(reg) => reg.track(FlightKind::Submit { id }, tracked),
+                    None => tracked,
                 };
+                let req = Request { reply, ..req };
                 if let Err(send_err) = tx.send(Op::Submit(req)) {
                     if let Op::Submit(r) = send_err.0 {
                         let err = WireError::internal(format!("worker {w} unavailable"));
@@ -732,6 +1000,7 @@ mod tests {
     use super::*;
     use crate::coordinator::{CompressionSpec, Response};
     use crate::model::StubEngine;
+    use crate::util::faults::{FaultPlan, FaultRule, FaultSite};
     use std::sync::mpsc;
     use std::time::Instant;
 
@@ -1150,6 +1419,119 @@ mod tests {
                     _ => {}
                 }
             }
+            drop(tx);
+        });
+        sched.run(rx);
+        driver.join().unwrap();
+    }
+
+    /// Supervision: an injected engine panic mid-turn never strands the
+    /// client — it gets a structured `internal` terminal event — and the
+    /// respawned worker serves the next turn normally, with the restart
+    /// visible in merged stats.
+    #[test]
+    fn worker_panic_errors_in_flight_and_respawns() {
+        let plan = FaultPlan::builder()
+            .site(
+                FaultSite::EngineStepPanic,
+                FaultRule {
+                    every: 1,
+                    after: 0,
+                    limit: 1,
+                    ms: 0,
+                },
+            )
+            .build();
+        let mut base = StubEngine::new(StubEngine::test_dims(64));
+        base.faults = plan;
+        let sched =
+            Scheduler::start(1, CoordinatorConfig::default(), move |w| Ok(base.fork(w))).unwrap();
+        let (tx, rx) = mpsc::channel::<Op>();
+        let driver = std::thread::spawn(move || {
+            let (etx, erx) = mpsc::channel::<ServeEvent>();
+            tx.send(submit(1, None, false, &etx)).unwrap();
+            let done = wait_done(&erx);
+            let err = done.error.expect("the panicked turn must error, not hang");
+            assert_eq!(err.code, ErrorCode::Internal);
+            assert!(err.message.contains("restarted mid-request"), "{err}");
+
+            tx.send(submit(2, None, false, &etx)).unwrap();
+            let done = wait_done(&erx);
+            assert!(done.error.is_none(), "respawned worker serves: {:?}", done.error);
+
+            tx.send(Op::Stats {
+                id: 9,
+                reply: Box::new(etx.clone()),
+            })
+            .unwrap();
+            let snapshot = loop {
+                if let ServeEvent::Stats { snapshot, .. } = erx.recv().unwrap() {
+                    break snapshot;
+                }
+            };
+            assert_eq!(snapshot.worker_restarts, 1);
+            assert_eq!(snapshot.sessions_lost, 0);
+            assert_eq!(snapshot.completed, 1, "only the post-respawn turn completed");
+            drop(tx);
+        });
+        sched.run(rx);
+        driver.join().unwrap();
+    }
+
+    /// A panic with a hot-parked session loses exactly that session: the
+    /// loss is counted, and a follow-up `append` gets the clean
+    /// `session_not_found` (never a hang or a bogus restore).
+    #[test]
+    fn worker_panic_counts_lost_hot_sessions() {
+        // Turn 1 (prompt 3, max_new 3) takes 2 decode steps; arm the panic
+        // for the 3rd step, i.e. the first step of turn 2.
+        let plan = FaultPlan::builder()
+            .site(
+                FaultSite::EngineStepPanic,
+                FaultRule {
+                    every: 1,
+                    after: 2,
+                    limit: 1,
+                    ms: 0,
+                },
+            )
+            .build();
+        let mut base = StubEngine::new(StubEngine::test_dims(64));
+        base.faults = plan;
+        let sched =
+            Scheduler::start(1, CoordinatorConfig::default(), move |w| Ok(base.fork(w))).unwrap();
+        let (tx, rx) = mpsc::channel::<Op>();
+        let driver = std::thread::spawn(move || {
+            let (etx, erx) = mpsc::channel::<ServeEvent>();
+            tx.send(submit(1, None, true, &etx)).unwrap();
+            let turn1 = wait_done(&erx);
+            assert!(turn1.error.is_none(), "{:?}", turn1.error);
+            let sid = turn1.session.expect("kept session parked hot");
+
+            tx.send(submit(2, None, false, &etx)).unwrap();
+            let turn2 = wait_done(&erx);
+            let err = turn2.error.expect("turn 2 dies with the worker");
+            assert!(err.message.contains("restarted mid-request"), "{err}");
+
+            // The parked session unwound with the dead worker.
+            tx.send(submit(3, Some(sid), false, &etx)).unwrap();
+            let turn3 = wait_done(&erx);
+            let err = turn3.error.expect("lost session must not restore");
+            assert_eq!(err.code, ErrorCode::SessionNotFound);
+
+            tx.send(Op::Stats {
+                id: 9,
+                reply: Box::new(etx.clone()),
+            })
+            .unwrap();
+            let snapshot = loop {
+                if let ServeEvent::Stats { snapshot, .. } = erx.recv().unwrap() {
+                    break snapshot;
+                }
+            };
+            assert_eq!(snapshot.worker_restarts, 1);
+            assert_eq!(snapshot.sessions_lost, 1);
+            assert_eq!(snapshot.sessions_recovered, 0, "no cold tier configured");
             drop(tx);
         });
         sched.run(rx);

@@ -126,6 +126,20 @@ pub struct StatsSnapshot {
     pub shed_interactive: u64,
     /// Turns rejected by the per-tenant rate limiter (lifetime count).
     pub rate_limited: u64,
+    /// Worker panics survived by the supervisor (each is one
+    /// `catch_unwind` + engine rebuild + cold-tier recovery cycle;
+    /// injected by the scheduler at fold time).
+    pub worker_restarts: u64,
+    /// Cold-tier snapshots adopted by respawned workers — sessions that
+    /// survived their owner's crash and stayed appendable.
+    pub sessions_recovered: u64,
+    /// Hot-parked sessions unwound with panicking workers (their KV state
+    /// is gone; injected by the scheduler at fold time).
+    pub sessions_lost: u64,
+    /// Non-terminal `token` events dropped by slow-client backpressure
+    /// (terminal `done`/`error` events are never dropped; injected by the
+    /// TCP server at encode time).
+    pub events_dropped: u64,
     /// Per-worker breakdown, ordered by worker index.
     pub workers: Vec<WorkerStats>,
 }
@@ -177,6 +191,10 @@ impl StatsSnapshot {
             out.shed_batch += part.shed_batch;
             out.shed_interactive += part.shed_interactive;
             out.rate_limited += part.rate_limited;
+            out.worker_restarts += part.worker_restarts;
+            out.sessions_recovered += part.sessions_recovered;
+            out.sessions_lost += part.sessions_lost;
+            out.events_dropped += part.events_dropped;
             out.pool.free_blocks += part.pool.free_blocks;
             out.pool.free_bytes += part.pool.free_bytes;
             out.pool.outstanding_blocks += part.pool.outstanding_blocks;
@@ -607,6 +625,29 @@ mod tests {
         assert_eq!(m.shed_batch, 7);
         assert_eq!(m.shed_interactive, 1);
         assert_eq!(m.rate_limited, 4);
+    }
+
+    #[test]
+    fn merge_sums_fault_domain_counters() {
+        let a = StatsSnapshot {
+            worker_restarts: 2,
+            sessions_recovered: 3,
+            sessions_lost: 1,
+            events_dropped: 10,
+            ..StatsSnapshot::default()
+        };
+        let b = StatsSnapshot {
+            worker_restarts: 1,
+            sessions_recovered: 0,
+            sessions_lost: 4,
+            events_dropped: 5,
+            ..StatsSnapshot::default()
+        };
+        let m = StatsSnapshot::merged(vec![a, b]);
+        assert_eq!(m.worker_restarts, 3);
+        assert_eq!(m.sessions_recovered, 3);
+        assert_eq!(m.sessions_lost, 5);
+        assert_eq!(m.events_dropped, 15);
     }
 
     #[test]

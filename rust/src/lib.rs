@@ -20,8 +20,9 @@
 //! ## Crate layout (layer 3 of the three-layer stack)
 //!
 //! * [`util`] — substrates: JSON codec, deterministic RNG, mini property-test
-//!   harness, CLI parsing, logging (the offline image has no serde / clap /
-//!   proptest, so these are built in-tree).
+//!   harness, CLI parsing, logging, deterministic fault injection (the
+//!   offline image has no serde / clap / proptest, so these are built
+//!   in-tree).
 //! * [`tensor`] — minimal row-major host tensor used across the crate.
 //! * [`quant`] — per-token asymmetric quantization (paper eq. 1), INT2/3/4/8
 //!   bit-packing, and the dynamic outlier channel balancer (paper eq. 2–4).

@@ -12,7 +12,9 @@ use mikv::coordinator::{CoordinatorConfig, Op, QosConfig, Scheduler};
 use mikv::eval::{EvalTask, Harness};
 use mikv::model::{CacheMode, Engine, Session};
 use mikv::runtime::Manifest;
+use mikv::server::{BackpressureConfig, ServeConfig};
 use mikv::util::cli::Args;
+use mikv::util::faults::FaultPlan;
 use std::time::{Duration, Instant};
 
 const USAGE: &str = "\
@@ -27,6 +29,23 @@ COMMANDS:
              --qos [--qos-quantum 64 --qos-rate TOKENS_PER_SEC
              --qos-burst 512 --qos-inflight 4 --qos-backlog 256
              --qos-retry-ms 50]
+             --writer-queue 1024 --write-timeout-ms 5000 --stall-ms 30000
+             --fault-plan SPEC
+             (Slow clients: each connection's writer queue is bounded by
+              --writer-queue lines; when full, non-terminal token events
+              are shed (counted in the events_dropped stat) while
+              done/error lines are never shed, and a client making no
+              write progress for --stall-ms is disconnected. --fault-plan
+              arms deterministic fault injection for chaos drills, e.g.
+              'engine_step_panic:every=50,limit=2;conn_stall:every=9';
+              sites: engine_step_error, engine_step_panic,
+              cold_put_before_write, cold_put_partial_write,
+              cold_put_before_rename, cold_put_after_rename,
+              cold_take_read, conn_stall, conn_disconnect, accept_error;
+              keys: every/after/limit/ms, plus seed=N. Workers are
+              supervised either way: a panicking worker is respawned,
+              in-flight requests get structured internal errors, and
+              cold-spilled sessions are recovered.)
              (Serving API v1: versioned streaming ops with multi-turn
               sessions, sharded across N engine workers with continuous
               batching per worker; see rust/src/server/proto.rs and
@@ -148,6 +167,11 @@ fn run(args: &Args) -> anyhow::Result<()> {
             let port: u16 = args.get("port", 7777u16)?;
             let workers = args.get_nonzero("workers", 1)?;
             let cold_dir = args.get_str("cold-dir", "");
+            // Deterministic fault injection (off unless --fault-plan is
+            // given). One shared plan is threaded through the engine
+            // workers, the cold tier and the TCP front-end so a chaos
+            // drill's occurrence counts reconcile across fault domains.
+            let faults = FaultPlan::parse(&args.get_str("fault-plan", ""))?;
             let cfg = CoordinatorConfig {
                 max_active: args.get("max-active", 8usize)?,
                 prefill_chunk: args.get("prefill-chunk", 4usize)?,
@@ -156,7 +180,26 @@ fn run(args: &Args) -> anyhow::Result<()> {
                 max_session_bytes: args.get("session-mb", 512usize)? << 20,
                 cold_dir: (!cold_dir.is_empty()).then(|| cold_dir.clone().into()),
                 max_cold_bytes: args.get("cold-mb", 256u64)? << 20,
+                faults: faults.clone(),
                 ..Default::default()
+            };
+            let bp_defaults = BackpressureConfig::default();
+            let serve_cfg = ServeConfig {
+                backpressure: BackpressureConfig {
+                    queue_depth: args.get_nonzero(
+                        "writer-queue",
+                        bp_defaults.queue_depth,
+                    )?,
+                    write_timeout: Duration::from_millis(args.get(
+                        "write-timeout-ms",
+                        bp_defaults.write_timeout.as_millis() as u64,
+                    )?),
+                    stall_deadline: Duration::from_millis(args.get(
+                        "stall-ms",
+                        bp_defaults.stall_deadline.as_millis() as u64,
+                    )?),
+                },
+                faults,
             };
             // --qos opts into the multi-tenant admission layer; absent,
             // the QoS machinery is not constructed and admission is the
@@ -185,8 +228,9 @@ fn run(args: &Args) -> anyhow::Result<()> {
             })?;
             let (tx, rx) = std::sync::mpsc::channel::<Op>();
             let listener = std::net::TcpListener::bind(("127.0.0.1", port))?;
+            let stop = mikv::server::StopHandle::for_listener(&listener)?;
             std::thread::spawn(move || {
-                let _ = mikv::server::serve(listener, tx);
+                let _ = mikv::server::serve_until_with(listener, tx, stop, serve_cfg);
             });
             scheduler.run(rx);
             Ok(())

@@ -15,6 +15,7 @@
 use crate::coordinator::StepEngine;
 use crate::model::{Session, SessionCache};
 use crate::runtime::ModelDims;
+use crate::util::faults::{FaultPlan, FaultSite};
 use crate::util::rng::{Pcg32, SplitMix64};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::{Duration, Instant};
@@ -41,6 +42,12 @@ pub struct StubEngine {
     pub decode_delay: Duration,
     /// Fail every decode step (error-path and retirement tests).
     pub fail_decode: bool,
+    /// Deterministic fault injection: probed at the top of every
+    /// `decode_step` for the `engine_step_error` / `engine_step_panic`
+    /// sites. The default (disabled) plan is a single `Option` check.
+    /// Shared across clones and worker forks, so a chaos harness sees
+    /// one global occurrence sequence.
+    pub faults: FaultPlan,
     /// Host-side per-step cache work (tensor synthesis + ingest) of the
     /// most recent `decode_step`, in nanoseconds — the stub's analogue of
     /// the real engine's input-assembly time, so `assembly_us` plumbing is
@@ -57,6 +64,7 @@ impl Clone for StubEngine {
             seed: self.seed,
             decode_delay: self.decode_delay,
             fail_decode: self.fail_decode,
+            faults: self.faults.clone(),
             assembly_ns: AtomicU64::new(0),
         }
     }
@@ -69,6 +77,7 @@ impl StubEngine {
             seed: DEFAULT_SEED,
             decode_delay: Duration::ZERO,
             fail_decode: false,
+            faults: FaultPlan::disabled(),
             assembly_ns: AtomicU64::new(0),
         }
     }
@@ -159,6 +168,14 @@ impl StepEngine for StubEngine {
 
     fn decode_step(&self, sessions: &mut [&mut Session]) -> crate::Result<Vec<Vec<f32>>> {
         anyhow::ensure!(!self.fail_decode, "injected decode failure");
+        if self.faults.should_fire(FaultSite::EngineStepPanic) {
+            // Deliberate: models an engine bug taking the worker thread
+            // down; scheduler supervision catches it and respawns.
+            panic!("fault plan: injected decode panic");
+        }
+        if self.faults.should_fire(FaultSite::EngineStepError) {
+            anyhow::bail!("fault plan: injected decode fault");
+        }
         if self.decode_delay > Duration::ZERO && !sessions.is_empty() {
             // Per-session cost: this engine's work is serialized on its own
             // (emulated) accelerator, so a batch of B costs B × delay.

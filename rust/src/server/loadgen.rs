@@ -26,7 +26,7 @@ use crate::coordinator::{
     CompressionSpec, CoordinatorConfig, Op, Priority, QosConfig, Scheduler,
 };
 use crate::model::StubEngine;
-use crate::server::{Client, RequestBuilder};
+use crate::server::{Client, RequestBuilder, ServeConfig};
 use crate::util::json::Json;
 use crate::util::rng::Pcg32;
 use std::sync::{Arc, Barrier};
@@ -72,6 +72,25 @@ where
     T: Send + 'static,
     F: FnOnce(String) -> T + Send + 'static,
 {
+    with_stub_stack_full(workers, cfg, qos, base, ServeConfig::default(), f)
+}
+
+/// The fully-general boot: [`with_stub_stack_qos`] plus an explicit
+/// [`ServeConfig`] so chaos harnesses can thread a fault plan and
+/// tightened backpressure limits through the TCP front-end. The engine-
+/// and cold-tier fault sites ride in on `cfg.faults` / `base.faults`.
+pub fn with_stub_stack_full<T, F>(
+    workers: usize,
+    cfg: CoordinatorConfig,
+    qos: Option<QosConfig>,
+    base: StubEngine,
+    serve: ServeConfig,
+    f: F,
+) -> crate::Result<T>
+where
+    T: Send + 'static,
+    F: FnOnce(String) -> T + Send + 'static,
+{
     let scheduler = Scheduler::start_with_qos(workers, cfg, qos, move |w| Ok(base.fork(w)))?;
     let (tx, rx) = std::sync::mpsc::channel::<Op>();
     let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
@@ -79,7 +98,7 @@ where
     let stop = crate::server::StopHandle::for_listener(&listener)?;
     let stop_l = stop.clone();
     let accept_thread = std::thread::spawn(move || {
-        let _ = crate::server::serve_until(listener, tx, stop_l);
+        let _ = crate::server::serve_until_with(listener, tx, stop_l, serve);
     });
     let driver = std::thread::spawn(move || f(addr));
     scheduler.run_until(rx, || driver.is_finished());
@@ -161,6 +180,14 @@ pub struct LoadConfig {
     /// emits no `priority` field, so default runs produce the exact
     /// pre-QoS wire lines.
     pub priority: Priority,
+    /// Shed-aware backoff: max re-submissions per turn after an
+    /// `overloaded` rejection that carries a `retry_after_ms` hint.
+    /// 0 (the default) is the historical fail-fast behavior; rejections
+    /// without a hint (plain FCFS backpressure) are never retried.
+    pub max_retries: usize,
+    /// Cap on the server-suggested backoff honored per retry, so an
+    /// adversarial hint can't park the generator.
+    pub retry_backoff_cap: Duration,
 }
 
 impl Default for LoadConfig {
@@ -175,6 +202,8 @@ impl Default for LoadConfig {
             vocab: 32,
             scenario: Scenario::Steady,
             priority: Priority::Interactive,
+            max_retries: 0,
+            retry_backoff_cap: Duration::from_millis(50),
         }
     }
 }
@@ -214,8 +243,15 @@ pub struct LoadReport {
     pub rejected_latency_p50: Duration,
     pub rejected_latency_p99: Duration,
     /// Error turns whose wire error carried a `retry_after_ms` hint (QoS
-    /// shed and rate-limit rejections always do).
+    /// shed and rate-limit rejections always do). Counts **final**
+    /// failures only — rejections consumed by the retry ladder land in
+    /// `retries` instead.
     pub rejects_with_hint: usize,
+    /// Shed-aware re-submissions performed ([`LoadConfig::max_retries`]).
+    pub retries: usize,
+    /// Turns that failed at least once and then completed `done` within
+    /// the retry budget.
+    pub retry_success: usize,
     /// p99 ok-turn latency per connection, indexed by connection id
     /// (zero Duration for a connection with no ok turns).
     pub per_conn_latency_p99: Vec<Duration>,
@@ -257,6 +293,16 @@ pub struct LoadReport {
     pub parked_cold_sessions: usize,
     /// Their on-disk footprint in bytes.
     pub cold_bytes: u64,
+    /// Worker panics survived by scheduler supervision THIS run (delta of
+    /// the trailing `stats` against the pre-run baseline; 0 on a healthy
+    /// run).
+    pub worker_restarts: u64,
+    /// Cold-spilled sessions adopted by respawned workers this run.
+    pub sessions_recovered: u64,
+    /// Hot-parked sessions lost to worker crashes this run.
+    pub sessions_lost: u64,
+    /// `token` events shed by slow-client backpressure this run.
+    pub events_dropped: u64,
 }
 
 /// Per-connection raw samples. `ttfts`/`latencies` hold ok turns only;
@@ -269,6 +315,8 @@ struct ConnResult {
     ok: usize,
     err: usize,
     rejects_with_hint: usize,
+    retries: usize,
+    retry_success: usize,
 }
 
 /// Client-side aggregation of per-connection samples, separated from the
@@ -283,6 +331,8 @@ struct Folded {
     ok: usize,
     err: usize,
     rejects_with_hint: usize,
+    retries: usize,
+    retry_success: usize,
 }
 
 fn fold_results(results: Vec<ConnResult>) -> Folded {
@@ -296,6 +346,8 @@ fn fold_results(results: Vec<ConnResult>) -> Folded {
         ok: 0,
         err: 0,
         rejects_with_hint: 0,
+        retries: 0,
+        retry_success: 0,
     };
     for mut r in results {
         r.latencies.sort_unstable();
@@ -311,6 +363,8 @@ fn fold_results(results: Vec<ConnResult>) -> Folded {
         out.ok += r.ok;
         out.err += r.err;
         out.rejects_with_hint += r.rejects_with_hint;
+        out.retries += r.retries;
+        out.retry_success += r.retry_success;
     }
     out.ttfts.sort_unstable();
     out.latencies.sort_unstable();
@@ -385,6 +439,8 @@ pub fn run_load(addr: &str, cfg: &LoadConfig) -> crate::Result<LoadReport> {
         rejected_latency_p50: percentile(&folded.rejected, 0.5),
         rejected_latency_p99: percentile(&folded.rejected, 0.99),
         rejects_with_hint: folded.rejects_with_hint,
+        retries: folded.retries,
+        retry_success: folded.retry_success,
         per_conn_latency_p99: folded.per_conn_latency_p99,
         conn_p99_spread: folded.conn_p99_spread,
         shed_batch: after.shed_batch.saturating_sub(baseline.shed_batch),
@@ -404,6 +460,16 @@ pub fn run_load(addr: &str, cfg: &LoadConfig) -> crate::Result<LoadReport> {
         restore_us_p99: after.restore_us_p99,
         parked_cold_sessions: after.parked_cold_sessions,
         cold_bytes: after.cold_bytes,
+        worker_restarts: after
+            .worker_restarts
+            .saturating_sub(baseline.worker_restarts),
+        sessions_recovered: after
+            .sessions_recovered
+            .saturating_sub(baseline.sessions_recovered),
+        sessions_lost: after.sessions_lost.saturating_sub(baseline.sessions_lost),
+        events_dropped: after
+            .events_dropped
+            .saturating_sub(baseline.events_dropped),
     })
 }
 
@@ -425,6 +491,10 @@ struct StatsProbe {
     shed_batch: u64,
     shed_interactive: u64,
     rate_limited: u64,
+    worker_restarts: u64,
+    sessions_recovered: u64,
+    sessions_lost: u64,
+    events_dropped: u64,
 }
 
 fn stats_probe(addr: &str) -> StatsProbe {
@@ -462,6 +532,13 @@ fn stats_probe(addr: &str) -> StatsProbe {
         .unwrap_or(0)
         .max(0) as u64;
     out.rate_limited = stats.field_i64("rate_limited").unwrap_or(0).max(0) as u64;
+    out.worker_restarts = stats.field_i64("worker_restarts").unwrap_or(0).max(0) as u64;
+    out.sessions_recovered = stats
+        .field_i64("sessions_recovered")
+        .unwrap_or(0)
+        .max(0) as u64;
+    out.sessions_lost = stats.field_i64("sessions_lost").unwrap_or(0).max(0) as u64;
+    out.events_dropped = stats.field_i64("events_dropped").unwrap_or(0).max(0) as u64;
     if let Ok(rows) = stats.field_arr("workers") {
         for row in rows {
             out.counters.insert(
@@ -543,6 +620,8 @@ fn drive_conn(
         ok: 0,
         err: 0,
         rejects_with_hint: 0,
+        retries: 0,
+        retry_success: 0,
     };
     let vocab = cfg.vocab.max(2);
     let turns = if cfg.scenario == Scenario::Chatty && conn == 0 {
@@ -557,7 +636,6 @@ fn drive_conn(
         if cfg.scenario == Scenario::Bursty && turn > 0 && turn % 2 == 0 {
             std::thread::sleep(Duration::from_millis(1 + rng.gen_below(4) as u64));
         }
-        let id = client.next_id();
         // The final turn drops `keep`, so a completed conversation leaves
         // nothing parked (no session leak from a finished load run).
         let keep = turn + 1 < turns;
@@ -569,54 +647,87 @@ fn drive_conn(
         let prompt: Vec<i64> = (0..prompt_len)
             .map(|_| rng.gen_range(1, vocab - 1))
             .collect();
-        let mut builder = match session {
-            Some(sid) => RequestBuilder::append(id, sid)
-                .prompt(&prompt)
-                .max_new(cfg.max_new)
-                .keep(keep),
-            None => RequestBuilder::generate(id)
-                .prompt(&prompt)
-                .max_new(cfg.max_new)
-                .keep(keep)
-                .compression(cfg.spec.clone()),
-        };
-        if cfg.priority != Priority::Interactive {
-            builder = builder.priority(cfg.priority);
-        }
+        // Turn timing spans the whole retry ladder: a turn that was shed
+        // twice and then completed reports the latency the caller saw,
+        // backoff included.
         let t0 = Instant::now();
-        client.submit(&builder)?;
+        let mut attempts_left = cfg.max_retries;
+        let mut turn_retried = false;
         let mut first: Option<Duration> = None;
         let mut turn_ok = false;
-        loop {
-            let v = client.recv()?;
-            if v.field("id").ok().and_then(Json::as_i64) != Some(id as i64) {
-                continue; // stale line from an earlier turn
+        'attempt: loop {
+            let id = client.next_id();
+            let mut builder = match session {
+                Some(sid) => RequestBuilder::append(id, sid)
+                    .prompt(&prompt)
+                    .max_new(cfg.max_new)
+                    .keep(keep),
+                None => RequestBuilder::generate(id)
+                    .prompt(&prompt)
+                    .max_new(cfg.max_new)
+                    .keep(keep)
+                    .compression(cfg.spec.clone()),
+            };
+            if cfg.priority != Priority::Interactive {
+                builder = builder.priority(cfg.priority);
             }
-            match v.field_str("event").unwrap_or("") {
-                "token" => {
-                    if first.is_none() {
-                        first = Some(t0.elapsed());
+            client.submit(&builder)?;
+            loop {
+                let v = client.recv()?;
+                if v.field("id").ok().and_then(Json::as_i64) != Some(id as i64) {
+                    continue; // stale line from an earlier turn
+                }
+                match v.field_str("event").unwrap_or("") {
+                    "token" => {
+                        if first.is_none() {
+                            first = Some(t0.elapsed());
+                        }
+                        out.tokens += 1;
                     }
-                    out.tokens += 1;
-                }
-                "done" => {
-                    out.ok += 1;
-                    turn_ok = true;
-                    session = v
-                        .field("session")
-                        .ok()
-                        .and_then(Json::as_i64)
-                        .map(|s| s as u64);
-                    break;
-                }
-                "error" => {
-                    out.err += 1;
-                    if v.field("retry_after_ms").ok().and_then(Json::as_i64).is_some() {
-                        out.rejects_with_hint += 1;
+                    "done" => {
+                        out.ok += 1;
+                        turn_ok = true;
+                        if turn_retried {
+                            out.retry_success += 1;
+                        }
+                        session = v
+                            .field("session")
+                            .ok()
+                            .and_then(Json::as_i64)
+                            .map(|s| s as u64);
+                        break 'attempt;
                     }
-                    break;
+                    "error" => {
+                        let hint = v.field("retry_after_ms").ok().and_then(Json::as_i64);
+                        // Shed-aware backoff: an `overloaded` rejection
+                        // carrying a retry hint is a promise that capacity
+                        // frees up — honor it (capped) and re-submit the
+                        // same turn. Admission sheds happen before any
+                        // session state is touched, so the retry reuses
+                        // the session id as-is. Hint-less rejections
+                        // (plain FCFS backpressure) stay fail-fast.
+                        if attempts_left > 0
+                            && v.field_str("code").unwrap_or("") == "overloaded"
+                        {
+                            if let Some(ms) = hint {
+                                attempts_left -= 1;
+                                turn_retried = true;
+                                out.retries += 1;
+                                std::thread::sleep(
+                                    Duration::from_millis(ms.max(0) as u64)
+                                        .min(cfg.retry_backoff_cap),
+                                );
+                                continue 'attempt;
+                            }
+                        }
+                        out.err += 1;
+                        if hint.is_some() {
+                            out.rejects_with_hint += 1;
+                        }
+                        break 'attempt;
+                    }
+                    other => anyhow::bail!("unexpected event '{other}' for turn {id}: {v}"),
                 }
-                other => anyhow::bail!("unexpected event '{other}' for turn {id}: {v}"),
             }
         }
         let elapsed = t0.elapsed();
@@ -661,7 +772,25 @@ mod tests {
             ok: latencies.len(),
             err: rejected.len(),
             rejects_with_hint: hints,
+            retries: 0,
+            retry_success: 0,
         }
+    }
+
+    /// Retry counters fold across connections; a retried-then-ok turn
+    /// counts toward `ok`/`retry_success` and not toward `err`.
+    #[test]
+    fn retry_counters_fold_across_conns() {
+        let mut a = conn(&[2], &[20], &[], 0);
+        a.retries = 2;
+        a.retry_success = 1;
+        let mut b = conn(&[3], &[12], &[500], 1);
+        b.retries = 1;
+        let folded = fold_results(vec![a, b]);
+        assert_eq!(folded.retries, 3);
+        assert_eq!(folded.retry_success, 1);
+        assert_eq!(folded.ok, 2);
+        assert_eq!(folded.err, 1);
     }
 
     /// Pinned values for the metric-skew fix: error turns contribute to

@@ -10,6 +10,9 @@
 //!   forwarding decoded ops to the scheduler channel, one writer thread
 //!   acting as the connection's event sink (worker results fan back in
 //!   over it); plus a blocking [`tcp::Client`] with streaming helpers.
+//!   The writer is bounded and stall-aware ([`tcp::BackpressureConfig`]):
+//!   slow clients shed `token` events first and are disconnected only
+//!   past a hard stall deadline — terminal events are never shed.
 //! * [`loadgen`] — multi-connection load generator (M connections × K
 //!   turns) shared by `examples/client.rs --load` and the
 //!   `serve_throughput` bench.
@@ -23,4 +26,6 @@ pub use proto::{
     decode_line, encode_event, encode_legacy_response, DecodeError, RequestBuilder, WireOp,
     WireRequest,
 };
-pub use tcp::{serve, serve_until, Client, StopHandle};
+pub use tcp::{
+    serve, serve_until, serve_until_with, BackpressureConfig, Client, ServeConfig, StopHandle,
+};

@@ -478,6 +478,14 @@ pub fn encode_event(ev: &ServeEvent) -> String {
             o.set("shed_batch", snapshot.shed_batch as i64);
             o.set("shed_interactive", snapshot.shed_interactive as i64);
             o.set("rate_limited", snapshot.rate_limited as i64);
+            // Fault-domain counters: worker panics survived (scheduler
+            // supervision), parked sessions recovered from / lost to a
+            // crash, and token events shed by slow-client backpressure
+            // (folded in by the TCP front-end at encode time).
+            o.set("worker_restarts", snapshot.worker_restarts as i64);
+            o.set("sessions_recovered", snapshot.sessions_recovered as i64);
+            o.set("sessions_lost", snapshot.sessions_lost as i64);
+            o.set("events_dropped", snapshot.events_dropped as i64);
             o.set("parked_sessions", snapshot.parked_sessions);
             o.set("parked_bytes", snapshot.parked_bytes);
             // Cold tier: sessions spilled to disk, their on-disk footprint,
@@ -1118,6 +1126,10 @@ mod tests {
             shed_batch: 7,
             shed_interactive: 1,
             rate_limited: 4,
+            worker_restarts: 2,
+            sessions_recovered: 3,
+            sessions_lost: 1,
+            events_dropped: 17,
             assembly_us_p50: 12.5,
             assembly_us_p99: 80.25,
             assembly_samples: 42,
@@ -1158,6 +1170,10 @@ mod tests {
         assert_eq!(v.field_i64("shed_batch").unwrap(), 7);
         assert_eq!(v.field_i64("shed_interactive").unwrap(), 1);
         assert_eq!(v.field_i64("rate_limited").unwrap(), 4);
+        assert_eq!(v.field_i64("worker_restarts").unwrap(), 2);
+        assert_eq!(v.field_i64("sessions_recovered").unwrap(), 3);
+        assert_eq!(v.field_i64("sessions_lost").unwrap(), 1);
+        assert_eq!(v.field_i64("events_dropped").unwrap(), 17);
         assert!((v.field_f64("assembly_us_p50").unwrap() - 12.5).abs() < 1e-9);
         assert!((v.field_f64("assembly_us_p99").unwrap() - 80.25).abs() < 1e-9);
         assert_eq!(v.field_i64("assembly_samples").unwrap(), 42);

@@ -19,16 +19,35 @@
 //! other's requests. Session ids are runtime-global by design: a kept
 //! session may be continued from a different connection (it routes to the
 //! owning worker either way).
+//!
+//! **Slow-client backpressure.** The writer channel is *bounded*
+//! ([`BackpressureConfig::queue_depth`]) and the writer enforces a
+//! per-write timeout plus a hard stall deadline. When a client stops
+//! draining, degradation is laddered: non-terminal `token` events are
+//! shed first (counted in the `events_dropped` stat); terminal
+//! `done`/`error`/`stats`/`cancelled` lines are never shed; a client that
+//! stays wedged past [`BackpressureConfig::stall_deadline`] is
+//! disconnected, which unblocks both the writer and any worker waiting to
+//! enqueue a terminal event. The defaults are generous enough that a
+//! client reading at any reasonable rate sees the identical event stream
+//! as an unbounded writer would produce.
+//!
+//! **Fault injection.** [`ServeConfig::faults`] threads a deterministic
+//! [`FaultPlan`] through the listener (`accept_error`) and the per-
+//! connection writer (`conn_stall`, `conn_disconnect`). Disabled by
+//! default; enabled only by tests, the chaos soak, and
+//! `mikv serve --fault-plan`.
 
 use crate::coordinator::{CompressionSpec, EventSink, Op, Request, Response, ServeEvent};
 use crate::server::proto::{self, RequestBuilder, WireOp};
+use crate::util::faults::{FaultPlan, FaultSite};
 use crate::util::json::Json;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{self, BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::Sender;
+use std::sync::mpsc::{Sender, SyncSender, TrySendError};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 static CONN_IDS: AtomicU64 = AtomicU64::new(1);
 
@@ -77,6 +96,51 @@ impl StopHandle {
     }
 }
 
+/// Slow-client limits for a connection's writer half. The defaults are
+/// deliberately generous: a client reading at any reasonable rate never
+/// hits them, so default behavior matches the previous unbounded writer.
+#[derive(Debug, Clone, Copy)]
+pub struct BackpressureConfig {
+    /// Bounded writer-queue depth (lines). `token` events that arrive
+    /// while the queue is full are shed (counted in `events_dropped`);
+    /// terminal events block until a slot frees or the writer gives up.
+    pub queue_depth: usize,
+    /// Socket write timeout for one `write` call; on expiry the writer
+    /// re-checks the stall deadline instead of blocking forever.
+    pub write_timeout: Duration,
+    /// Hard deadline: if a connection makes **no write progress** for
+    /// this long it is disconnected (shutdown both halves).
+    pub stall_deadline: Duration,
+}
+
+impl Default for BackpressureConfig {
+    fn default() -> Self {
+        BackpressureConfig {
+            queue_depth: 1024,
+            write_timeout: Duration::from_secs(5),
+            stall_deadline: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Front-end configuration for [`serve_until_with`]. `Default` preserves
+/// the historical wire behavior: no fault injection, backpressure limits
+/// far above what a draining client ever touches.
+#[derive(Debug, Clone, Default)]
+pub struct ServeConfig {
+    pub backpressure: BackpressureConfig,
+    pub faults: FaultPlan,
+}
+
+/// Per-listener state shared by every connection it accepts.
+struct ConnShared {
+    bp: BackpressureConfig,
+    faults: FaultPlan,
+    /// Server-global count of `token` events shed by slow-client
+    /// backpressure; folded into every `stats` snapshot on the way out.
+    events_dropped: AtomicU64,
+}
+
 /// Accept-and-serve loop. Blocks the calling thread; spawn it alongside the
 /// coordinator thread. Returns only on listener error (no stop signal —
 /// the long-running `mikv serve` shape). Use [`serve_until`] when the
@@ -90,23 +154,78 @@ pub fn serve(listener: TcpListener, tx: Sender<Op>) -> crate::Result<()> {
 /// in-flight connections keep their threads, but the accept loop exits and
 /// the listener socket is released when this returns.
 pub fn serve_until(listener: TcpListener, tx: Sender<Op>, stop: StopHandle) -> crate::Result<()> {
+    serve_until_with(listener, tx, stop, ServeConfig::default())
+}
+
+/// Give up on the listener only after this many accept errors in a row
+/// (a single `Ok` resets the streak). Transient failures — EMFILE under
+/// connection churn, aborted handshakes, injected faults — must not kill
+/// the serving runtime's front door.
+const MAX_CONSECUTIVE_ACCEPT_ERRORS: u32 = 64;
+
+/// [`serve_until`] with explicit backpressure limits and fault plan.
+///
+/// A transient `accept` error no longer aborts the listener (it used to
+/// propagate immediately, silently killing the front door while workers
+/// kept running): the error is logged, the loop backs off briefly and
+/// keeps accepting, and only [`MAX_CONSECUTIVE_ACCEPT_ERRORS`] failures
+/// in a row — a dead listener socket, not a bad handshake — propagate.
+pub fn serve_until_with(
+    listener: TcpListener,
+    tx: Sender<Op>,
+    stop: StopHandle,
+    cfg: ServeConfig,
+) -> crate::Result<()> {
     let addr = listener.local_addr()?;
     crate::log_info!("serving on {addr}");
-    for stream in listener.incoming() {
+    let shared = Arc::new(ConnShared {
+        bp: cfg.backpressure,
+        faults: cfg.faults,
+        events_dropped: AtomicU64::new(0),
+    });
+    let mut consecutive_errs = 0u32;
+    loop {
         if stop.is_stopped() {
             break;
         }
-        let stream = stream?;
-        let tx = tx.clone();
-        std::thread::spawn(move || {
-            let peer = stream
-                .peer_addr()
-                .map(|a| a.to_string())
-                .unwrap_or_default();
-            if let Err(e) = handle_conn(stream, tx) {
-                crate::log_debug!("connection {peer} closed: {e}");
+        let accepted = if shared.faults.should_fire(FaultSite::AcceptError) {
+            Err(io::Error::new(
+                io::ErrorKind::ConnectionAborted,
+                "fault plan: injected accept error",
+            ))
+        } else {
+            listener.accept().map(|(s, _)| s)
+        };
+        if stop.is_stopped() {
+            break;
+        }
+        match accepted {
+            Ok(stream) => {
+                consecutive_errs = 0;
+                let tx = tx.clone();
+                let shared = shared.clone();
+                std::thread::spawn(move || {
+                    let peer = stream
+                        .peer_addr()
+                        .map(|a| a.to_string())
+                        .unwrap_or_default();
+                    if let Err(e) = handle_conn(stream, tx, shared) {
+                        crate::log_debug!("connection {peer} closed: {e}");
+                    }
+                });
             }
-        });
+            Err(e) => {
+                consecutive_errs += 1;
+                if consecutive_errs >= MAX_CONSECUTIVE_ACCEPT_ERRORS {
+                    crate::log_error!(
+                        "listener on {addr}: {consecutive_errs} consecutive accept errors, giving up: {e}"
+                    );
+                    return Err(e.into());
+                }
+                crate::log_warn!("accept error on {addr} (transient, continuing): {e}");
+                std::thread::sleep(Duration::from_millis(10));
+            }
+        }
     }
     crate::log_info!("listener on {addr} stopped");
     Ok(())
@@ -115,14 +234,24 @@ pub fn serve_until(listener: TcpListener, tx: Sender<Op>, stop: StopHandle) -> c
 /// Per-request event sink: encodes events (v1 or legacy) into lines on the
 /// connection's writer channel, rewriting coordinator-namespaced ids back
 /// to the ids the client sent.
+///
+/// The channel is bounded; this is where the degradation ladder's first
+/// rung lives. Non-terminal `token` events are sent with `try_send` and
+/// shed when the queue is full (the client is not draining; dropping
+/// stream progress is recoverable, the terminal `done` still carries the
+/// full token vector). Terminal events use a blocking `send` — they are
+/// never shed; if the writer disconnects a wedged client the send fails
+/// and the worker sees `false`, exactly as for a vanished connection.
 struct LineSink {
-    tx: Sender<String>,
+    tx: SyncSender<String>,
     wire_id: u64,
     legacy: bool,
+    shared: Arc<ConnShared>,
 }
 
 impl EventSink for LineSink {
     fn emit(&self, ev: ServeEvent) -> bool {
+        let droppable = matches!(ev, ServeEvent::Token { .. });
         let ev = match ev {
             ServeEvent::Token { index, token, .. } => ServeEvent::Token {
                 id: self.wire_id,
@@ -133,10 +262,17 @@ impl EventSink for LineSink {
                 r.id = self.wire_id;
                 ServeEvent::Done(r)
             }
-            ServeEvent::Stats { snapshot, .. } => ServeEvent::Stats {
-                id: self.wire_id,
-                snapshot,
-            },
+            ServeEvent::Stats { mut snapshot, .. } => {
+                // Backpressure sheds happen on this side of the worker
+                // boundary, so fold the listener-wide counter into the
+                // snapshot at encode time (workers always report 0).
+                // lint: relaxed-ordering-audit-ok: monotonic counter folded into a point-in-time snapshot; no ordering dependency
+                snapshot.events_dropped += self.shared.events_dropped.load(Ordering::Relaxed);
+                ServeEvent::Stats {
+                    id: self.wire_id,
+                    snapshot,
+                }
+            }
             ServeEvent::CancelResult { target, found, .. } => ServeEvent::CancelResult {
                 id: self.wire_id,
                 target: target & 0xFFFF_FFFF,
@@ -152,29 +288,90 @@ impl EventSink for LineSink {
         } else {
             proto::encode_event(&ev)
         };
-        self.tx.send(line).is_ok()
+        if droppable {
+            match self.tx.try_send(line) {
+                Ok(()) => true,
+                Err(TrySendError::Full(_)) => {
+                    // Slow client: shed the token event, keep decoding.
+                    // lint: relaxed-ordering-audit-ok: monotonic stat counter; readers only need eventual totals
+                    self.shared.events_dropped.fetch_add(1, Ordering::Relaxed);
+                    true
+                }
+                Err(TrySendError::Disconnected(_)) => false,
+            }
+        } else {
+            self.tx.send(line).is_ok()
+        }
     }
 }
 
-fn handle_conn(stream: TcpStream, tx: Sender<Op>) -> crate::Result<()> {
+/// Writer half of a connection: drain event lines in emission order,
+/// enforcing the per-write timeout and the hard stall deadline. The
+/// deadline tracks *progress*, not whole lines — a trickling client that
+/// accepts a byte every few seconds stays connected; one that accepts
+/// nothing for [`BackpressureConfig::stall_deadline`] is cut off. On exit
+/// both socket halves are shut down so the reader thread unblocks too.
+fn writer_loop(
+    mut stream: TcpStream,
+    rx: std::sync::mpsc::Receiver<String>,
+    bp: BackpressureConfig,
+    faults: FaultPlan,
+) {
+    if stream.set_write_timeout(Some(bp.write_timeout)).is_err() {
+        // Pathological socket; fall back to blocking writes rather than
+        // dropping the connection on a setsockopt failure.
+        crate::log_warn!("set_write_timeout failed; writer runs without stall detection");
+    }
+    'conn: for line in rx {
+        if faults.should_fire(FaultSite::ConnDisconnect) {
+            crate::log_warn!("fault plan: injected mid-stream disconnect");
+            break 'conn;
+        }
+        if faults.should_fire(FaultSite::ConnStall) {
+            std::thread::sleep(Duration::from_millis(faults.stall_ms(FaultSite::ConnStall)));
+        }
+        let mut buf = line.into_bytes();
+        buf.push(b'\n');
+        let mut off = 0usize;
+        let mut last_progress = Instant::now();
+        while off < buf.len() {
+            match stream.write(buf.get(off..).unwrap_or(&[])) {
+                Ok(0) => break 'conn,
+                Ok(n) => {
+                    off += n;
+                    last_progress = Instant::now();
+                }
+                Err(e)
+                    if matches!(e.kind(), io::ErrorKind::TimedOut | io::ErrorKind::WouldBlock) =>
+                {
+                    if last_progress.elapsed() >= bp.stall_deadline {
+                        crate::log_warn!(
+                            "client made no write progress for {:?}; disconnecting",
+                            bp.stall_deadline
+                        );
+                        break 'conn;
+                    }
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(_) => break 'conn,
+            }
+        }
+    }
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}
+
+fn handle_conn(stream: TcpStream, tx: Sender<Op>, shared: Arc<ConnShared>) -> crate::Result<()> {
     // lint: relaxed-ordering-audit-ok: unique-id counter — only atomicity matters; no cross-thread data is published under this fetch_add
     let conn_id = CONN_IDS.fetch_add(1, Ordering::Relaxed);
     let reader = BufReader::new(stream.try_clone()?);
-    let (line_tx, line_rx) = std::sync::mpsc::channel::<String>();
+    let (line_tx, line_rx) = std::sync::mpsc::sync_channel::<String>(shared.bp.queue_depth.max(1));
 
-    // Writer thread: deliver event lines in emission order.
-    let mut write_half = stream;
-    let writer = std::thread::spawn(move || {
-        for line in line_rx {
-            if write_half
-                .write_all(line.as_bytes())
-                .and_then(|_| write_half.write_all(b"\n"))
-                .is_err()
-            {
-                break;
-            }
-        }
-    });
+    // Writer thread: deliver event lines in emission order, under the
+    // backpressure limits (bounded queue upstream, stall deadline here).
+    let write_half = stream;
+    let bp = shared.bp;
+    let faults = shared.faults.clone();
+    let writer = std::thread::spawn(move || writer_loop(write_half, line_rx, bp, faults));
 
     // Namespace ids per connection so concurrent clients don't collide.
     let ns = |id: u64| conn_id << 32 | (id & 0xFFFF_FFFF);
@@ -184,6 +381,7 @@ fn handle_conn(stream: TcpStream, tx: Sender<Op>) -> crate::Result<()> {
             tx: line_tx.clone(),
             wire_id,
             legacy,
+            shared: shared.clone(),
         })
     };
     let send = |op: Op| -> crate::Result<()> {
@@ -325,6 +523,8 @@ impl Client {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::{StatsSnapshot, WireError};
+    use crate::util::faults::FaultRule;
     use std::sync::mpsc;
 
     /// Graceful listener shutdown: `stop()` wakes the blocked accept, the
@@ -354,5 +554,149 @@ mod tests {
             TcpStream::connect(addr).is_err(),
             "socket must be released after stop"
         );
+    }
+
+    /// Regression for the accept-loop fault domain: a transient accept
+    /// error used to propagate out of `serve_until` and silently kill the
+    /// listener while workers kept running. Now it logs, backs off, and
+    /// keeps accepting — a client connecting after a burst of injected
+    /// accept errors is still served.
+    #[test]
+    fn transient_accept_errors_do_not_kill_the_listener() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = StopHandle::for_listener(&listener).unwrap();
+        let plan = FaultPlan::builder()
+            .site(
+                FaultSite::AcceptError,
+                FaultRule {
+                    every: 1,
+                    after: 0,
+                    limit: 3,
+                    ms: 0,
+                },
+            )
+            .build();
+        let cfg = ServeConfig {
+            faults: plan.clone(),
+            ..ServeConfig::default()
+        };
+        let (tx, _rx) = mpsc::channel::<Op>();
+        let stop_l = stop.clone();
+        let server = std::thread::spawn(move || serve_until_with(listener, tx, stop_l, cfg));
+
+        // The first 3 accept attempts fail by injection; the connection
+        // sits in the kernel backlog until the loop recovers and accepts
+        // it. A malformed line is answered directly by the connection
+        // handler (no coordinator needed), proving end-to-end service.
+        let mut client = Client::connect(&addr.to_string()).unwrap();
+        client.send_line("{\"v\":1,\"op\":\"nonsense\"}").unwrap();
+        let reply = client.recv().unwrap();
+        assert_eq!(reply.field_str("event").unwrap_or(""), "error");
+        assert_eq!(plan.fired(FaultSite::AcceptError), 3);
+
+        stop.stop();
+        server.join().expect("serve thread").expect("clean exit");
+    }
+
+    /// A persistently failing accept (every attempt, no limit) must give
+    /// up with a structured error instead of spinning forever.
+    #[test]
+    fn persistent_accept_errors_eventually_propagate() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let stop = StopHandle::for_listener(&listener).unwrap();
+        let plan = FaultPlan::builder().every(FaultSite::AcceptError, 1).build();
+        let cfg = ServeConfig {
+            faults: plan,
+            ..ServeConfig::default()
+        };
+        let (tx, _rx) = mpsc::channel::<Op>();
+        let err = serve_until_with(listener, tx, stop, cfg);
+        assert!(err.is_err(), "dead listener must propagate, got {err:?}");
+    }
+
+    /// The degradation ladder's first rung: with the writer queue full,
+    /// `token` events are shed (counted, emit still returns `true` so the
+    /// worker keeps decoding) while terminal events are never shed, and
+    /// the shed count is folded into outgoing stats snapshots.
+    #[test]
+    fn slow_client_sheds_tokens_but_never_terminals() {
+        let (tx, rx) = mpsc::sync_channel::<String>(1);
+        let shared = Arc::new(ConnShared {
+            bp: BackpressureConfig::default(),
+            faults: FaultPlan::disabled(),
+            events_dropped: AtomicU64::new(0),
+        });
+        let sink = LineSink {
+            tx,
+            wire_id: 7,
+            legacy: false,
+            shared: shared.clone(),
+        };
+        // first token fills the queue's single slot
+        assert!(sink.emit(ServeEvent::Token {
+            id: 7,
+            index: 0,
+            token: 11,
+        }));
+        // queue full: further tokens are shed, not blocked on
+        for index in 1..3 {
+            assert!(sink.emit(ServeEvent::Token {
+                id: 7,
+                index,
+                token: 11 + index as i64,
+            }));
+        }
+        assert_eq!(shared.events_dropped.load(Ordering::Relaxed), 2);
+
+        // drain the slot; a terminal error then goes through intact
+        assert!(rx.recv().unwrap().contains("\"token\""));
+        assert!(sink.emit(ServeEvent::Done(Response::error(
+            7,
+            WireError::internal("boom".to_string()),
+        ))));
+        assert!(rx.recv().unwrap().contains("\"error\""));
+
+        // stats snapshots leaving this connection carry the shed count
+        assert!(sink.emit(ServeEvent::Stats {
+            id: 7,
+            snapshot: StatsSnapshot::default(),
+        }));
+        let line = rx.recv().unwrap();
+        assert!(
+            line.contains("\"events_dropped\":2"),
+            "stats line must fold in shed count: {line}"
+        );
+    }
+
+    /// An injected mid-stream disconnect tears down both socket halves:
+    /// the client observes EOF instead of a hung stream.
+    #[test]
+    fn injected_disconnect_closes_the_connection() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let stop = StopHandle::for_listener(&listener).unwrap();
+        let plan = FaultPlan::builder()
+            .every(FaultSite::ConnDisconnect, 1)
+            .build();
+        let cfg = ServeConfig {
+            faults: plan,
+            ..ServeConfig::default()
+        };
+        let (tx, _rx) = mpsc::channel::<Op>();
+        let stop_l = stop.clone();
+        let server = std::thread::spawn(move || serve_until_with(listener, tx, stop_l, cfg));
+
+        let mut client = Client::connect(&addr.to_string()).unwrap();
+        // malformed line → the handler queues a direct error reply; the
+        // writer's disconnect fault fires before it is written out
+        client.send_line("not json").unwrap();
+        assert!(
+            client.recv().is_err(),
+            "client must see EOF after injected disconnect"
+        );
+
+        stop.stop();
+        server.join().expect("serve thread").expect("clean exit");
     }
 }

@@ -1,0 +1,454 @@
+//! Deterministic fault injection for chaos-testing the serving stack.
+//!
+//! A [`FaultPlan`] is a shared schedule of injected failures, threaded
+//! through the stub engine (step errors / step panics), the cold-tier
+//! store (IO failures around the write→rename sequence), and the TCP
+//! path (accept errors, stalled writers, mid-stream disconnects).
+//! Sites fire on deterministic **occurrence counts**: the k-th probe of
+//! a given site fires iff that site's [`FaultRule`] selects k, so a
+//! chaos run with a fixed plan injects the same faults at the same
+//! structural points every run, independent of how threads interleave
+//! at *other* sites.
+//!
+//! The default plan is **disabled**: every probe is a single `Option`
+//! check against `None` — no atomics touched, no allocation — so
+//! serving paths that never opt in pay nothing. Clones share the
+//! underlying counters (one `Arc`), which is what lets the test that
+//! built a plan reconcile [`FaultPlan::fired`] totals against what the
+//! stack actually saw.
+//!
+//! Plans come from two places: test builders
+//! (`FaultPlan::builder().every(site, n).build()`) and the
+//! `mikv serve --fault-plan` CLI spec parsed by [`FaultPlan::parse`]
+//! (e.g. `engine_step_error:every=7;conn_disconnect:every=11,limit=3`).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Number of distinct injection sites (length of [`FaultSite::ALL`]).
+const N_SITES: usize = 10;
+
+/// One structural point in the serving stack where a fault can be
+/// injected. The wire names (used by `--fault-plan`) are the snake_case
+/// forms returned by [`FaultSite::as_str`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultSite {
+    /// `StubEngine::decode_step` returns an error for the whole group.
+    EngineStepError,
+    /// `StubEngine::decode_step` panics, killing the worker thread
+    /// (exercises scheduler supervision / respawn).
+    EngineStepPanic,
+    /// `ColdStore::put` fails before the tmp file is written.
+    ColdPutBeforeWrite,
+    /// `ColdStore::put` writes a truncated tmp file, then fails
+    /// (orphan `.tmp` left for the next open's GC).
+    ColdPutPartialWrite,
+    /// `ColdStore::put` fails after the tmp write, before the rename.
+    ColdPutBeforeRename,
+    /// `ColdStore::put` fails after the rename, before the index is
+    /// updated (durable file, lost accounting — a crash point).
+    ColdPutAfterRename,
+    /// `ColdStore::take` fails reading the snapshot back.
+    ColdTakeRead,
+    /// The connection's writer thread stalls (for [`FaultRule::ms`])
+    /// before a write, simulating a client that stops draining.
+    ConnStall,
+    /// The connection is dropped mid-stream (client sees EOF).
+    ConnDisconnect,
+    /// The listener's accept loop observes a transient accept error.
+    AcceptError,
+}
+
+impl FaultSite {
+    /// Every site, in declaration order (index = discriminant).
+    pub const ALL: [FaultSite; N_SITES] = [
+        FaultSite::EngineStepError,
+        FaultSite::EngineStepPanic,
+        FaultSite::ColdPutBeforeWrite,
+        FaultSite::ColdPutPartialWrite,
+        FaultSite::ColdPutBeforeRename,
+        FaultSite::ColdPutAfterRename,
+        FaultSite::ColdTakeRead,
+        FaultSite::ConnStall,
+        FaultSite::ConnDisconnect,
+        FaultSite::AcceptError,
+    ];
+
+    /// The stable wire name used by `--fault-plan` specs.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FaultSite::EngineStepError => "engine_step_error",
+            FaultSite::EngineStepPanic => "engine_step_panic",
+            FaultSite::ColdPutBeforeWrite => "cold_put_before_write",
+            FaultSite::ColdPutPartialWrite => "cold_put_partial_write",
+            FaultSite::ColdPutBeforeRename => "cold_put_before_rename",
+            FaultSite::ColdPutAfterRename => "cold_put_after_rename",
+            FaultSite::ColdTakeRead => "cold_take_read",
+            FaultSite::ConnStall => "conn_stall",
+            FaultSite::ConnDisconnect => "conn_disconnect",
+            FaultSite::AcceptError => "accept_error",
+        }
+    }
+
+    /// Inverse of [`Self::as_str`].
+    pub fn parse(s: &str) -> Option<FaultSite> {
+        Self::ALL.iter().copied().find(|site| site.as_str() == s)
+    }
+}
+
+/// When a site fires, in occurrence counts: skip the first `after`
+/// probes, then fire on every `every`-th remaining probe (`1` = each
+/// one, `0` = never), at most `limit` times (`0` = unlimited). `ms` is
+/// a site-specific magnitude — the stall duration for
+/// [`FaultSite::ConnStall`] — ignored elsewhere.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FaultRule {
+    pub every: u64,
+    pub after: u64,
+    pub limit: u64,
+    pub ms: u64,
+}
+
+/// A rule that never fires — the builder's initial state for every
+/// site, so a plan only arms the sites it names.
+const DISARMED: FaultRule = FaultRule {
+    every: 0,
+    after: 0,
+    limit: 0,
+    ms: 0,
+};
+
+impl Default for FaultRule {
+    /// Fire on every occurrence, unlimited, no magnitude.
+    fn default() -> FaultRule {
+        FaultRule {
+            every: 1,
+            after: 0,
+            limit: 0,
+            ms: 0,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct SiteState {
+    rule: FaultRule,
+    /// Probes observed (monotonic).
+    seen: AtomicU64,
+    /// Probes that actually fired (monotonic, `<= seen`).
+    fired: AtomicU64,
+}
+
+#[derive(Debug)]
+struct PlanInner {
+    seed: u64,
+    sites: [SiteState; N_SITES],
+}
+
+/// A shared, deterministic fault-injection schedule. `Default` (and
+/// [`FaultPlan::disabled`]) is the always-off plan; see the module docs
+/// for the firing model and the zero-cost-when-disabled contract.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    inner: Option<Arc<PlanInner>>,
+}
+
+impl FaultPlan {
+    /// The always-off plan (also `Default`): every probe is one `None`
+    /// check.
+    pub fn disabled() -> FaultPlan {
+        FaultPlan { inner: None }
+    }
+
+    /// Whether any site is armed (`false` for the default plan).
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Start building a plan; disarmed until sites are added.
+    pub fn builder() -> FaultPlanBuilder {
+        FaultPlanBuilder {
+            seed: 0,
+            rules: [DISARMED; N_SITES],
+        }
+    }
+
+    /// Seed recorded when the plan was built (0 when disabled). The
+    /// firing schedule itself is count-based; the seed is carried so a
+    /// chaos harness can derive its traffic seed from the same knob.
+    pub fn seed(&self) -> u64 {
+        self.inner.as_ref().map_or(0, |i| i.seed)
+    }
+
+    /// Probe an injection site: returns `true` iff the site's rule
+    /// selects this occurrence. Counts are shared across clones, so
+    /// concurrent probers divide one global occurrence sequence.
+    pub fn should_fire(&self, site: FaultSite) -> bool {
+        let Some(inner) = self.inner.as_ref() else {
+            return false;
+        };
+        let Some(st) = inner.sites.get(site as usize) else {
+            return false;
+        };
+        if st.rule.every == 0 {
+            return false;
+        }
+        // lint: relaxed-ordering-audit-ok: monotonic occurrence counter; no cross-site ordering is implied
+        let n = st.seen.fetch_add(1, Ordering::Relaxed) + 1;
+        if n <= st.rule.after || (n - st.rule.after) % st.rule.every != 0 {
+            return false;
+        }
+        if st.rule.limit == 0 {
+            // lint: relaxed-ordering-audit-ok: monotonic fired counter, read only for post-run reconciliation
+            st.fired.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        // The closure keeps `fired` exact under the limit even when
+        // several threads race the last slot.
+        // lint: relaxed-ordering-audit-ok: counter-only CAS loop; the closure enforces the bound, ordering carries no data
+        st.fired
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |f| {
+                (f < st.rule.limit).then_some(f + 1)
+            })
+            .is_ok()
+    }
+
+    /// Stall duration (ms) configured for `site`; defaults to 50 when
+    /// the rule left `ms` at 0 so an armed `conn_stall` always stalls.
+    pub fn stall_ms(&self, site: FaultSite) -> u64 {
+        self.inner
+            .as_ref()
+            .and_then(|i| i.sites.get(site as usize))
+            .map_or(0, |st| if st.rule.ms == 0 { 50 } else { st.rule.ms })
+    }
+
+    /// Times `site` has fired so far (0 when disabled).
+    pub fn fired(&self, site: FaultSite) -> u64 {
+        self.inner
+            .as_ref()
+            .and_then(|i| i.sites.get(site as usize))
+            // lint: relaxed-ordering-audit-ok: reconciliation read of a monotonic counter after the run quiesced
+            .map_or(0, |st| st.fired.load(Ordering::Relaxed))
+    }
+
+    /// Times `site` has been probed so far (0 when disabled).
+    pub fn seen(&self, site: FaultSite) -> u64 {
+        self.inner
+            .as_ref()
+            .and_then(|i| i.sites.get(site as usize))
+            // lint: relaxed-ordering-audit-ok: reconciliation read of a monotonic counter after the run quiesced
+            .map_or(0, |st| st.seen.load(Ordering::Relaxed))
+    }
+
+    /// Parse a `--fault-plan` spec. Grammar: `;`-separated segments,
+    /// each either `seed=N` or `site[:key=val[,key=val...]]` with keys
+    /// `every` / `after` / `limit` / `ms`; a site with no params fires
+    /// on every occurrence. An empty spec builds the disabled plan.
+    pub fn parse(spec: &str) -> crate::Result<FaultPlan> {
+        let mut b = FaultPlan::builder();
+        for seg in spec.split(';').map(str::trim).filter(|s| !s.is_empty()) {
+            if let Some(seed) = seg.strip_prefix("seed=") {
+                let seed = seed
+                    .trim()
+                    .parse::<u64>()
+                    .map_err(|_| anyhow::anyhow!("fault plan: bad seed '{seed}'"))?;
+                b = b.seed(seed);
+                continue;
+            }
+            let (name, params) = match seg.split_once(':') {
+                Some((n, p)) => (n.trim(), p),
+                None => (seg, ""),
+            };
+            let site = FaultSite::parse(name)
+                .ok_or_else(|| anyhow::anyhow!("fault plan: unknown site '{name}'"))?;
+            let mut rule = FaultRule::default();
+            for kv in params.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+                let (k, v) = kv
+                    .split_once('=')
+                    .ok_or_else(|| anyhow::anyhow!("fault plan: expected key=value in '{kv}'"))?;
+                let n: u64 = v.trim().parse().map_err(|_| {
+                    anyhow::anyhow!("fault plan: bad integer '{}' for '{}'", v.trim(), k.trim())
+                })?;
+                match k.trim() {
+                    "every" => rule.every = n,
+                    "after" => rule.after = n,
+                    "limit" => rule.limit = n,
+                    "ms" => rule.ms = n,
+                    other => anyhow::bail!("fault plan: unknown key '{other}'"),
+                }
+            }
+            b = b.site(site, rule);
+        }
+        Ok(b.build())
+    }
+}
+
+/// Builds a [`FaultPlan`] site by site; see [`FaultPlan::builder`].
+#[derive(Debug, Clone)]
+pub struct FaultPlanBuilder {
+    seed: u64,
+    rules: [FaultRule; N_SITES],
+}
+
+impl FaultPlanBuilder {
+    /// Record a seed on the plan (carried, not consumed — see
+    /// [`FaultPlan::seed`]).
+    pub fn seed(mut self, seed: u64) -> FaultPlanBuilder {
+        self.seed = seed;
+        self
+    }
+
+    /// Arm `site` with an explicit rule (replacing any earlier one).
+    pub fn site(mut self, site: FaultSite, rule: FaultRule) -> FaultPlanBuilder {
+        if let Some(slot) = self.rules.get_mut(site as usize) {
+            *slot = rule;
+        }
+        self
+    }
+
+    /// Arm `site` to fire on every `every`-th occurrence (0 disarms).
+    pub fn every(self, site: FaultSite, every: u64) -> FaultPlanBuilder {
+        self.site(
+            site,
+            FaultRule {
+                every,
+                ..FaultRule::default()
+            },
+        )
+    }
+
+    /// Finish; a builder with no armed site builds the disabled plan.
+    pub fn build(self) -> FaultPlan {
+        if self.rules.iter().all(|r| r.every == 0) {
+            return FaultPlan::disabled();
+        }
+        let rules = self.rules;
+        FaultPlan {
+            inner: Some(Arc::new(PlanInner {
+                seed: self.seed,
+                sites: std::array::from_fn(|i| SiteState {
+                    rule: rules.get(i).copied().unwrap_or(DISARMED),
+                    seen: AtomicU64::new(0),
+                    fired: AtomicU64::new(0),
+                }),
+            })),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_plan_never_fires() {
+        let plan = FaultPlan::default();
+        assert!(!plan.is_enabled());
+        for site in FaultSite::ALL {
+            for _ in 0..3 {
+                assert!(!plan.should_fire(site));
+            }
+            assert_eq!(plan.seen(site), 0);
+            assert_eq!(plan.fired(site), 0);
+        }
+        // a builder that armed nothing is also the disabled plan
+        assert!(!FaultPlan::builder().seed(7).build().is_enabled());
+    }
+
+    #[test]
+    fn every_after_limit_schedule_is_deterministic() {
+        let plan = FaultPlan::builder()
+            .site(
+                FaultSite::EngineStepError,
+                FaultRule {
+                    every: 3,
+                    after: 2,
+                    limit: 2,
+                    ms: 0,
+                },
+            )
+            .build();
+        // occurrences 1..=12: skip 2, then every 3rd → fires at 5, 8
+        // (11 would be third, but limit=2 stops it).
+        let fires: Vec<bool> = (1..=12)
+            .map(|_| plan.should_fire(FaultSite::EngineStepError))
+            .collect();
+        let want: Vec<bool> = (1..=12).map(|n| n == 5 || n == 8).collect();
+        assert_eq!(fires, want);
+        assert_eq!(plan.seen(FaultSite::EngineStepError), 12);
+        assert_eq!(plan.fired(FaultSite::EngineStepError), 2);
+        // unarmed sites never fire and are not even counted as armed
+        assert!(!plan.should_fire(FaultSite::AcceptError));
+        assert_eq!(plan.fired(FaultSite::AcceptError), 0);
+    }
+
+    #[test]
+    fn clones_share_one_occurrence_sequence() {
+        let plan = FaultPlan::builder()
+            .every(FaultSite::ConnDisconnect, 2)
+            .build();
+        let other = plan.clone();
+        // alternating probes across the two handles still fire every
+        // 2nd occurrence globally
+        assert!(!plan.should_fire(FaultSite::ConnDisconnect));
+        assert!(other.should_fire(FaultSite::ConnDisconnect));
+        assert!(!plan.should_fire(FaultSite::ConnDisconnect));
+        assert!(other.should_fire(FaultSite::ConnDisconnect));
+        assert_eq!(plan.fired(FaultSite::ConnDisconnect), 2);
+        assert_eq!(other.seen(FaultSite::ConnDisconnect), 4);
+    }
+
+    #[test]
+    fn stall_ms_defaults_when_unset() {
+        let plan = FaultPlan::builder().every(FaultSite::ConnStall, 1).build();
+        assert_eq!(plan.stall_ms(FaultSite::ConnStall), 50);
+        let plan = FaultPlan::builder()
+            .site(
+                FaultSite::ConnStall,
+                FaultRule {
+                    ms: 120,
+                    ..FaultRule::default()
+                },
+            )
+            .build();
+        assert_eq!(plan.stall_ms(FaultSite::ConnStall), 120);
+        assert_eq!(FaultPlan::disabled().stall_ms(FaultSite::ConnStall), 0);
+    }
+
+    #[test]
+    fn parse_roundtrips_the_cli_grammar() {
+        let plan = FaultPlan::parse(
+            "engine_step_error:every=7; conn_disconnect:every=11,limit=3; \
+             conn_stall:every=5,ms=20; accept_error; seed=42",
+        )
+        .unwrap();
+        assert!(plan.is_enabled());
+        assert_eq!(plan.seed(), 42);
+        // every=7 → first fire on the 7th probe
+        for n in 1..=7 {
+            assert_eq!(
+                plan.should_fire(FaultSite::EngineStepError),
+                n == 7,
+                "probe {n}"
+            );
+        }
+        // bare site name = fire every time
+        assert!(plan.should_fire(FaultSite::AcceptError));
+        assert_eq!(plan.stall_ms(FaultSite::ConnStall), 20);
+        // empty spec = disabled
+        assert!(!FaultPlan::parse("").unwrap().is_enabled());
+        // errors are structured, not panics
+        assert!(FaultPlan::parse("warp_core:every=1").is_err());
+        assert!(FaultPlan::parse("engine_step_error:every=x").is_err());
+        assert!(FaultPlan::parse("engine_step_error:often=1").is_err());
+        assert!(FaultPlan::parse("seed=banana").is_err());
+    }
+
+    #[test]
+    fn site_names_roundtrip() {
+        for site in FaultSite::ALL {
+            assert_eq!(FaultSite::parse(site.as_str()), Some(site));
+        }
+        assert_eq!(FaultSite::parse("nope"), None);
+    }
+}

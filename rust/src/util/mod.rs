@@ -1,8 +1,10 @@
 //! Substrate utilities built in-tree because the offline image ships no
 //! serde / clap / proptest / rand: a JSON codec, deterministic RNGs, a mini
-//! property-testing harness, a CLI argument parser, and a leveled logger.
+//! property-testing harness, a CLI argument parser, a leveled logger, and a
+//! deterministic fault-injection seam for chaos testing.
 
 pub mod cli;
+pub mod faults;
 pub mod json;
 pub mod log;
 pub mod prop;

@@ -1,0 +1,215 @@
+//! Seeded chaos soak over the full serving stack (the fault-domain
+//! hardening headline test).
+//!
+//! Boots the sharded TCP runtime with a deterministic [`FaultPlan`]
+//! arming every recoverable fault domain at once — engine step errors,
+//! worker panics (scheduler supervision + respawn), cold-tier IO faults
+//! around the spill/restore path (with `session_ttl = 0` so every parked
+//! session round-trips through disk), and stalled connection writers —
+//! then drives a multi-turn load through it and asserts the contract the
+//! hardening exists for:
+//!
+//! * **every turn reaches a terminal event** (`run_load` returning `Ok`
+//!   means no client ever hung on a silent stream);
+//! * **injected panics reconcile**: the server-reported `worker_restarts`
+//!   delta equals the plan's fired count for `engine_step_panic` (plan
+//!   clones share one occurrence sequence, so the test's handle sees
+//!   exactly what the workers' handles fired);
+//! * **nothing leaks**: the run leaves no cold-tier sessions or bytes
+//!   behind.
+//!
+//! The schedule is occurrence-count based (see `util::faults`), so a
+//! given plan injects faults at the same structural points every run —
+//! which request absorbs each fault may vary with thread interleaving,
+//! but the invariants above hold for every interleaving.
+
+use mikv::coordinator::{CoordinatorConfig, QosConfig};
+use mikv::model::StubEngine;
+use mikv::server::loadgen::{run_load, with_stub_stack_full, LoadConfig};
+use mikv::server::ServeConfig;
+use mikv::util::faults::{FaultPlan, FaultRule, FaultSite};
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// Unique per-test cold-tier root under the OS temp dir.
+fn tmp_cold_root(tag: &str) -> PathBuf {
+    let p = std::env::temp_dir().join(format!("mikv-chaos-{}-{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&p);
+    p
+}
+
+fn rule(every: u64, after: u64, limit: u64) -> FaultRule {
+    FaultRule {
+        every,
+        after,
+        limit,
+        ms: 0,
+    }
+}
+
+#[test]
+fn seeded_chaos_soak_reaches_terminal_events_and_leaks_nothing() {
+    let plan = FaultPlan::builder()
+        .seed(0xC405)
+        // Engine: recoverable step errors early, then two worker panics
+        // spaced so the respawned worker takes real traffic too. The
+        // panic thresholds stay well under the workload's guaranteed
+        // decode-round count so both fire on every interleaving.
+        .site(FaultSite::EngineStepError, rule(19, 4, 3))
+        .site(FaultSite::EngineStepPanic, rule(15, 4, 2))
+        // Cold tier: one failure at each crash point of the put sequence
+        // and one read-back failure (session_ttl = 0 below forces every
+        // parked session through the spill/restore path).
+        .site(FaultSite::ColdPutBeforeWrite, rule(5, 0, 1))
+        .site(FaultSite::ColdPutPartialWrite, rule(7, 0, 1))
+        .site(FaultSite::ColdPutBeforeRename, rule(9, 0, 1))
+        .site(FaultSite::ColdPutAfterRename, rule(11, 0, 1))
+        .site(FaultSite::ColdTakeRead, rule(6, 0, 2))
+        // TCP: brief writer stalls, often enough to hit several turns.
+        .site(
+            FaultSite::ConnStall,
+            FaultRule {
+                every: 13,
+                after: 0,
+                limit: 0,
+                ms: 5,
+            },
+        )
+        .build();
+
+    let cold_root = tmp_cold_root("soak");
+    let mut base = StubEngine::new(StubEngine::test_dims(256));
+    base.faults = plan.clone();
+    let coord_cfg = CoordinatorConfig {
+        // Spill every parked session to disk immediately, so multi-turn
+        // conversations exercise the cold path (and its faults) on every
+        // turn boundary.
+        session_ttl: Duration::ZERO,
+        cold_dir: Some(cold_root.clone()),
+        faults: plan.clone(),
+        ..CoordinatorConfig::default()
+    };
+    let serve_cfg = ServeConfig {
+        faults: plan.clone(),
+        ..ServeConfig::default()
+    };
+    let cfg = LoadConfig {
+        conns: 8,
+        turns: 3,
+        max_new: 12,
+        seed: plan.seed(),
+        ..LoadConfig::default()
+    };
+    let total = cfg.conns * cfg.turns;
+
+    let load_cfg = cfg.clone();
+    let report = with_stub_stack_full(2, coord_cfg, None, base, serve_cfg, move |addr| {
+        run_load(&addr, &load_cfg)
+    })
+    .expect("stack boot")
+    .expect("every connection must drive to completion (no hung streams)");
+
+    // Every turn reached a terminal event: ok and error turns partition
+    // the workload exactly.
+    assert_eq!(
+        report.turns_ok + report.turns_err,
+        total,
+        "turns must partition into ok ({}) + err ({})",
+        report.turns_ok,
+        report.turns_err
+    );
+    // The run made real progress despite the faults.
+    assert!(
+        report.turns_ok > 0,
+        "chaos soak completed no turns at all ({} errors)",
+        report.turns_err
+    );
+    // Supervision reconciliation: restarts seen on the wire equal panics
+    // the shared plan actually fired — and the workload is sized so the
+    // panic schedule is guaranteed to trigger at least once.
+    assert_eq!(
+        report.worker_restarts,
+        plan.fired(FaultSite::EngineStepPanic),
+        "worker_restarts must reconcile with injected panics"
+    );
+    assert!(
+        report.worker_restarts >= 1,
+        "the soak must actually exercise a worker respawn"
+    );
+    // No leaked cold state beyond "ghost" snapshots: a put that failed
+    // *after* its rename and a failed take-read both leave a durable
+    // file the owning registry no longer tracks, and a later respawn's
+    // recovery scan may legitimately re-adopt it. Anything beyond that
+    // budget is a real leak (a live conversation's session that nobody
+    // consumed or released).
+    let ghost_budget =
+        plan.fired(FaultSite::ColdPutAfterRename) + plan.fired(FaultSite::ColdTakeRead);
+    assert!(
+        report.parked_cold_sessions as u64 <= ghost_budget,
+        "cold sessions left behind ({}) exceed the re-adopted-ghost budget ({ghost_budget})",
+        report.parked_cold_sessions
+    );
+    if report.parked_cold_sessions == 0 {
+        assert_eq!(report.cold_bytes, 0, "cold bytes with no cold sessions");
+    }
+    // Loss accounting is bounded by what the workload could lose: at
+    // most one parked session per connection per crash.
+    assert!(
+        report.sessions_lost <= (report.worker_restarts * cfg.conns as u64),
+        "sessions_lost ({}) exceeds plausible bound",
+        report.sessions_lost
+    );
+    let _ = std::fs::remove_dir_all(&cold_root);
+}
+
+/// Shed-aware backoff end to end: a QoS stack with a tiny backlog sheds
+/// under a flash of concurrent turns, every rejection carries a
+/// `retry_after_ms` hint, and the generator's retry ladder re-submits
+/// instead of failing the turn. Whatever mix of shed/served the timing
+/// produces, the invariants hold: terminal events partition the turns,
+/// recovered turns never exceed attempted retries, and with retries on,
+/// hint-less final failures cannot appear (every QoS rejection hints).
+#[test]
+fn qos_shed_retries_honor_retry_after_hints() {
+    let qos = QosConfig {
+        max_backlog: 1,
+        retry_after_ms: 5,
+        ..QosConfig::default()
+    };
+    let mut base = StubEngine::new(StubEngine::test_dims(256));
+    base.decode_delay = Duration::from_micros(400);
+    let cfg = LoadConfig {
+        conns: 8,
+        turns: 2,
+        max_new: 10,
+        max_retries: 4,
+        ..LoadConfig::default()
+    };
+    let total = cfg.conns * cfg.turns;
+    let load_cfg = cfg.clone();
+    let report = with_stub_stack_full(
+        1,
+        CoordinatorConfig::default(),
+        Some(qos),
+        base,
+        ServeConfig::default(),
+        move |addr| run_load(&addr, &load_cfg),
+    )
+    .expect("stack boot")
+    .expect("connections must drive to completion");
+
+    assert_eq!(report.turns_ok + report.turns_err, total);
+    assert!(
+        report.retry_success <= report.retries,
+        "recovered turns ({}) cannot exceed retries ({})",
+        report.retry_success,
+        report.retries
+    );
+    // A turn that still failed after the ladder carried a hint on its
+    // final rejection (QoS sheds always hint) — so every error turn is
+    // accounted as hinted.
+    assert_eq!(
+        report.rejects_with_hint, report.turns_err,
+        "every final QoS rejection must carry retry_after_ms"
+    );
+}
