@@ -1,11 +1,14 @@
 //! Ablation: importance policy choice for the hi tier (paper Fig. 4 notes
 //! MiKV is policy-agnostic — H2O, FastGen-style, etc. plug in).
 //!
-//! Compares H2O (accumulated attention), local (recency), and random
-//! importance at a fixed budget, for both MiKV retention and pure
-//! eviction. The gap between policies under *eviction* vs under *MiKV*
-//! is the paper's core robustness argument: retention makes the system
-//! far less sensitive to the policy being wrong.
+//! Compares H2O (accumulated attention), local (recency), random, and
+//! LagKV (attention-free, lag-relative KV statistics) importance at a
+//! fixed budget, for both MiKV retention and pure eviction. The gap
+//! between policies under *eviction* vs under *MiKV* is the paper's core
+//! robustness argument: retention makes the system far less sensitive to
+//! the policy being wrong. Worst-bucket and p10 columns surface the tail
+//! failures a mean can hide (see `benches/fragility_grid.rs` for the
+//! dedicated fragility race).
 
 mod common;
 
@@ -23,7 +26,7 @@ fn main() {
     let task = EvalTask::LineRet { n_lines: 20, filler: 0 };
 
     let mut modes: Vec<(String, CacheMode)> = Vec::new();
-    for policy in ["h2o", "local", "random"] {
+    for policy in ["h2o", "local", "random", "lagkv"] {
         let retain = format!("mikv:0.2:int2:policy={policy}");
         modes.push((retain.clone(), CacheMode::parse(&retain, &dims).unwrap()));
         // eviction with the same policy
@@ -38,7 +41,15 @@ fn main() {
     let mut t = Table::new(
         "ablation_policies",
         "Importance-policy sensitivity: retention vs eviction at 20% budget",
-        &["Policy", "Unimportant KVs", "Cache size", "Acc.", "Fidelity vs full"],
+        &[
+            "Policy",
+            "Unimportant KVs",
+            "Cache size",
+            "Acc.",
+            "Worst bucket",
+            "p10",
+            "Fidelity vs full",
+        ],
     );
     for o in &outcomes {
         let (policy, handling) = if o.mode_name.starts_with("mikv") {
@@ -51,6 +62,8 @@ fn main() {
             handling.into(),
             Cell::Pct(o.cache_pct, 1),
             Cell::Pct(100.0 * o.accuracy, 1),
+            Cell::Pct(100.0 * o.worst_bucket, 1),
+            Cell::Pct(100.0 * o.p10_score, 1),
             Cell::Pct(100.0 * o.fidelity, 1),
         ]);
     }

@@ -1,0 +1,194 @@
+//! Fragility grid bench: race every importance policy × every retention
+//! arm on the failure modes mean-agreement hides (`BENCH_fragility.json`).
+//!
+//! Runs [`mikv::eval::fragility`]'s scenario grid — needle retrieval at
+//! pinned depths, keyed recall over many facts, and multi-turn drift
+//! through the real park/append session lifecycle — for every importance
+//! policy (`h2o`, `local`, `random`, `lagkv`) under three retention arms:
+//!
+//! * `evict` — hi-only eviction (the baselines the paper argues against),
+//! * `mikv`  — mixed-precision retention (demoted tokens kept in the lo
+//!   tier),
+//! * `merge` — WeightedKV-style fold into a retained neighbor.
+//!
+//! Scores are reported per depth bucket with the worst bucket alongside
+//! the mean, because the paper's headline contrast lives in the tail:
+//! eviction looks fine on average while silently destroying the oldest
+//! context. Two gates enforce that contrast in-bench:
+//!
+//! 1. aggregated over every needle cell, `mikv` ≥ `evict` on **every**
+//!    populated depth bucket, and
+//! 2. `mikv` strictly beats `evict` on the deepest bucket (depth 0% =
+//!    oldest context — the positions eviction reclaims first).
+//!
+//! The grid is deterministic for a given seed at any `--workers` count
+//! (regression-locked in `eval::fragility` tests), so
+//! `BENCH_fragility.json` diffs are meaningful.
+//!
+//! ```sh
+//! cargo bench --bench fragility_grid              # full grid
+//! cargo bench --bench fragility_grid -- --smoke   # CI grid
+//! cargo bench --bench fragility_grid -- --workers 4 --seed 7
+//! ```
+//!
+//! Outputs: `bench_out/fragility_grid.{md,json}` and
+//! `BENCH_fragility.json` at the repo root (schema in EXPERIMENTS.md
+//! §Fragility).
+
+use mikv::bench::{Cell, Table};
+use mikv::eval::fragility::{aggregate_buckets, run_grid_workers, GridSpec};
+use mikv::eval::harness::DEPTH_BUCKETS;
+use mikv::util::cli::Args;
+use mikv::util::json::{Json, JsonObj};
+
+fn bucket_arr(v: &[f64; DEPTH_BUCKETS]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::Num(x)).collect())
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let smoke = args.flag("smoke");
+    let seed: u64 = args.get("seed", 0xF2A6_11D0u64)?;
+    let workers = args.get_nonzero("workers", 2)?;
+    let spec = if smoke {
+        GridSpec::smoke(seed)
+    } else {
+        GridSpec::full_grid(seed)
+    };
+
+    println!(
+        "fragility grid: {} tasks × {} policies × {} arms, {} samples/cell, {} workers{}",
+        spec.tasks.len(),
+        spec.policies.len(),
+        spec.arms.len(),
+        spec.samples,
+        workers,
+        if smoke { " (smoke)" } else { "" }
+    );
+    let results = run_grid_workers(&spec, workers)?;
+
+    let mut table = Table::new(
+        "fragility_grid",
+        "Fragility grid: probe accuracy per task × policy × retention arm",
+        &[
+            "Task", "Policy", "Arm", "Probes", "Mean", "Worst bucket", "p10", "Cache %", "Merges",
+        ],
+    );
+    for r in &results {
+        table.row(vec![
+            r.task.clone().into(),
+            r.policy.clone().into(),
+            r.arm.into(),
+            r.n_probes.into(),
+            Cell::F(r.mean, 3),
+            Cell::F(r.worst_bucket, 3),
+            Cell::F(r.p10, 3),
+            Cell::Pct(r.cache_pct, 1),
+            Cell::Int(r.merges as i64),
+        ]);
+    }
+
+    // The headline contrast, aggregated over every needle cell (all
+    // policies): per-depth-bucket accuracy of each arm.
+    let (evict_b, evict_n) = aggregate_buckets(&results, "needle", "evict");
+    let (mikv_b, mikv_n) = aggregate_buckets(&results, "needle", "mikv");
+    let (merge_b, _) = aggregate_buckets(&results, "needle", "merge");
+    anyhow::ensure!(
+        evict_n[0] > 0 && mikv_n[0] > 0,
+        "deepest needle bucket must be populated (grid must pin a depth-0 needle)"
+    );
+    for b in 0..DEPTH_BUCKETS {
+        if evict_n[b] > 0 && mikv_n[b] > 0 {
+            anyhow::ensure!(
+                mikv_b[b] + 1e-9 >= evict_b[b],
+                "mixed precision must not lose to eviction on any needle bucket: \
+                 bucket {b} mikv {:.3} < evict {:.3}",
+                mikv_b[b],
+                evict_b[b]
+            );
+        }
+    }
+    anyhow::ensure!(
+        mikv_b[0] > evict_b[0] + 0.05,
+        "the paper's recovery claim: mixed precision must strictly beat eviction \
+         on the deepest needle bucket: mikv {:.3} vs evict {:.3}",
+        mikv_b[0],
+        evict_b[0]
+    );
+    let total_merges: u64 = results
+        .iter()
+        .filter(|r| r.arm == "merge")
+        .map(|r| r.merges)
+        .sum();
+    anyhow::ensure!(total_merges > 0, "merge arm never folded a token");
+
+    table.note(format!(
+        "needle buckets (deepest→newest): evict {evict_b:.3?} vs mikv {mikv_b:.3?} vs merge \
+         {merge_b:.3?}; depth 0% = oldest context; gates: mikv ≥ evict everywhere, strictly \
+         better at bucket 0"
+    ));
+    table.emit()?;
+
+    let mut o = JsonObj::new();
+    o.set("bench", "fragility_grid");
+    o.set("pending", false);
+    o.set("smoke", smoke);
+    o.set("seed", seed as i64);
+    o.set("workers", workers);
+    o.set("samples_per_cell", spec.samples);
+    o.set("max_seq", spec.max_seq);
+    o.set("ratio", spec.ratio);
+    o.set("recent_window", spec.recent_window);
+    o.set(
+        "policies",
+        Json::Arr(spec.policies.iter().map(|p| Json::Str(p.clone())).collect()),
+    );
+    o.set(
+        "arms",
+        Json::Arr(
+            spec.arms
+                .iter()
+                .map(|a| Json::Str(a.name().to_string()))
+                .collect(),
+        ),
+    );
+    let mut nb = JsonObj::new();
+    nb.set("evict", bucket_arr(&evict_b));
+    nb.set("mikv", bucket_arr(&mikv_b));
+    nb.set("merge", bucket_arr(&merge_b));
+    nb.set(
+        "probes",
+        Json::Arr(mikv_n.iter().map(|&n| Json::Int(n as i64)).collect()),
+    );
+    o.set("needle_buckets", Json::Obj(nb));
+    let cells: Vec<Json> = results
+        .iter()
+        .map(|r| {
+            let mut c = JsonObj::new();
+            c.set("task", r.task.clone());
+            c.set("family", r.family);
+            match r.depth_pct {
+                Some(d) => c.set("depth_pct", d as i64),
+                None => c.set("depth_pct", Json::Null),
+            };
+            c.set("policy", r.policy.clone());
+            c.set("arm", r.arm);
+            c.set("n_probes", r.n_probes);
+            c.set("mean", r.mean);
+            c.set("worst_bucket", r.worst_bucket);
+            c.set("p10", r.p10);
+            c.set("bucket_scores", bucket_arr(&r.bucket_scores));
+            c.set(
+                "bucket_probes",
+                Json::Arr(r.bucket_counts.iter().map(|&n| Json::Int(n as i64)).collect()),
+            );
+            c.set("cache_size_pct", r.cache_pct);
+            c.set("merges", r.merges as i64);
+            Json::Obj(c)
+        })
+        .collect();
+    o.set("cells", Json::Arr(cells));
+    std::fs::write("BENCH_fragility.json", Json::Obj(o).to_string_pretty())?;
+    println!("wrote BENCH_fragility.json");
+    Ok(())
+}

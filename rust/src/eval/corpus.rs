@@ -58,6 +58,11 @@ pub struct EvalSample {
     pub prompt: Vec<i64>,
     pub answer: Vec<i64>,
     pub family: &'static str,
+    /// Where the fact being queried sits in the prompt, as a percentage of
+    /// the prompt length (0 = oldest context). `None` for task families
+    /// without a single well-defined fact position; `Some` feeds the
+    /// per-depth-bucket fragility scores ([`crate::eval::harness`]).
+    pub depth_pct: Option<u8>,
 }
 
 fn key(rng: &mut Pcg32) -> Vec<i64> {
@@ -120,6 +125,7 @@ pub fn gen_lineret(rng: &mut Pcg32, n_lines: usize, filler_between: usize) -> Ev
         prompt,
         answer: vals[qi].clone(),
         family: "lineret",
+        depth_pct: None,
     }
 }
 
@@ -154,6 +160,7 @@ pub fn gen_multihop(rng: &mut Pcg32, n_lines: usize) -> EvalSample {
         prompt,
         answer: vals[qi].clone(),
         family: "multihop",
+        depth_pct: None,
     }
 }
 
@@ -173,6 +180,7 @@ pub fn gen_pattern(rng: &mut Pcg32, motif_len: usize, repeats: usize) -> EvalSam
         prompt,
         answer: full[cut..].to_vec(),
         family: "pattern",
+        depth_pct: None,
     }
 }
 
@@ -187,6 +195,105 @@ pub fn gen_lm(rng: &mut Pcg32, n_context: usize, n_answer: usize) -> EvalSample 
         prompt,
         answer: stream[n_context..].to_vec(),
         family: "filler",
+        depth_pct: None,
+    }
+}
+
+// ----------------------------------------------------------------------
+// Fragility tasks: the scenarios where compression schemes actually break
+// (needle position, long-session drift, uniform keyed recall). Each sample
+// records `depth_pct` so scores can be bucketed by fact position.
+// ----------------------------------------------------------------------
+
+/// Needle-in-a-haystack at a controlled depth: one `[REC, k, v…]` record
+/// inside `haystack` filler tokens, with `depth_pct`% of the filler before
+/// it (0 = oldest context — the position eviction policies destroy first).
+/// The prompt ends `[QUERY, k]`; the answer is the needle's value.
+pub fn gen_needle_at_depth(rng: &mut Pcg32, depth_pct: u8, haystack: usize) -> EvalSample {
+    let depth_pct = depth_pct.min(100);
+    let k = key(rng);
+    let v = val(rng);
+    let before = haystack * depth_pct as usize / 100;
+    let mut prompt = vec![BOS];
+    prompt.extend(gen_filler(rng, before));
+    prompt.push(REC);
+    prompt.extend(&k);
+    prompt.extend(&v);
+    prompt.extend(gen_filler(rng, haystack - before));
+    prompt.push(QUERY);
+    prompt.extend(&k);
+    EvalSample {
+        prompt,
+        answer: v,
+        family: "needle",
+        depth_pct: Some(depth_pct),
+    }
+}
+
+/// Keyed recall: `n_keys` back-to-back records, query a uniformly random
+/// one. Per-sample `depth_pct` is the queried record's position, so a run
+/// of samples populates every depth bucket — the mean hides positional
+/// failure, the worst bucket exposes it.
+pub fn gen_keyed_recall(rng: &mut Pcg32, n_keys: usize) -> EvalSample {
+    let keys = distinct_keys(rng, n_keys);
+    let vals: Vec<Vec<i64>> = (0..n_keys).map(|_| val(rng)).collect();
+    let mut prompt = vec![BOS];
+    let mut starts = Vec::with_capacity(n_keys);
+    for (k, v) in keys.iter().zip(&vals) {
+        starts.push(prompt.len());
+        prompt.push(REC);
+        prompt.extend(k);
+        prompt.extend(v);
+    }
+    let qi = rng.gen_below(n_keys as u32) as usize;
+    prompt.push(QUERY);
+    prompt.extend(&keys[qi]);
+    let depth = 100 * starts[qi] / prompt.len();
+    EvalSample {
+        prompt,
+        answer: vals[qi].clone(),
+        family: "keyedrecall",
+        depth_pct: Some(depth as u8),
+    }
+}
+
+/// Multi-turn drift transcript: turn 0 plants the target record; every
+/// later turn opens with `SEP`, plants its *own* record, and adds filler
+/// chatter; every `probe_every`-th turn additionally rehearses the current
+/// turn's record as `[QUERY, k_t, ANS, v_t…]` — recency traffic that
+/// competes for the importance budget exactly the way live sessions do.
+/// The final query asks for the turn-0 record, whose depth drifts toward
+/// 0% as turns accumulate.
+pub fn gen_multiturn_drift(rng: &mut Pcg32, turns: usize, probe_every: usize) -> EvalSample {
+    let turns = turns.max(1);
+    let keys = distinct_keys(rng, turns + 1);
+    let vals: Vec<Vec<i64>> = (0..turns + 1).map(|_| val(rng)).collect();
+    let mut prompt = vec![BOS, REC];
+    let target_pos = prompt.len();
+    prompt.extend(&keys[0]);
+    prompt.extend(&vals[0]);
+    prompt.extend(gen_filler(rng, 3));
+    for t in 1..=turns {
+        prompt.push(SEP);
+        prompt.push(REC);
+        prompt.extend(&keys[t]);
+        prompt.extend(&vals[t]);
+        prompt.extend(gen_filler(rng, 3));
+        if probe_every > 0 && t % probe_every == 0 {
+            prompt.push(QUERY);
+            prompt.extend(&keys[t]);
+            prompt.push(ANS);
+            prompt.extend(&vals[t]);
+        }
+    }
+    prompt.push(QUERY);
+    prompt.extend(&keys[0]);
+    let depth = 100 * target_pos / prompt.len();
+    EvalSample {
+        prompt,
+        answer: vals[0].clone(),
+        family: "drift",
+        depth_pct: Some(depth as u8),
     }
 }
 
@@ -290,5 +397,87 @@ mod tests {
         let b = gen_lineret(&mut Pcg32::new(9), 5, 1);
         assert_eq!(a.prompt, b.prompt);
         assert_eq!(a.answer, b.answer);
+    }
+
+    #[test]
+    fn needle_sits_at_requested_depth() {
+        for depth in [0u8, 25, 50, 75, 100] {
+            let mut rng = Pcg32::new(21 + depth as u64);
+            let s = gen_needle_at_depth(&mut rng, depth, 80);
+            assert_eq!(s.depth_pct, Some(depth));
+            let rec = s.prompt.iter().position(|&t| t == REC).unwrap();
+            // REC lands right after `depth%` of the 80 filler tokens (+BOS)
+            assert_eq!(rec, 1 + 80 * depth as usize / 100);
+            // prompt ends [QUERY, k]; k's value follows the record key
+            let qpos = s.prompt.len() - 1 - KEY_TOKS;
+            assert_eq!(s.prompt[qpos], QUERY);
+            assert_eq!(
+                s.prompt[rec + 1..rec + 1 + KEY_TOKS],
+                s.prompt[qpos + 1..qpos + 1 + KEY_TOKS]
+            );
+            assert_eq!(
+                &s.prompt[rec + 1 + KEY_TOKS..rec + 1 + KEY_TOKS + VAL_TOKS],
+                &s.answer[..]
+            );
+        }
+    }
+
+    #[test]
+    fn keyed_recall_depth_matches_queried_record() {
+        let mut seen_buckets = [false; 4];
+        for seed in 0..40u64 {
+            let s = gen_keyed_recall(&mut Pcg32::new(seed), 12);
+            let depth = s.depth_pct.expect("keyed recall records depth");
+            assert!(depth <= 100);
+            seen_buckets[(depth as usize / 25).min(3)] = true;
+            // queried key resolves to the answer
+            let qpos = s.prompt.len() - 1 - KEY_TOKS;
+            assert_eq!(s.prompt[qpos], QUERY);
+            let qkey = &s.prompt[qpos + 1..qpos + 1 + KEY_TOKS];
+            let mut found = 0;
+            for i in 0..qpos {
+                if s.prompt[i] == REC && &s.prompt[i + 1..i + 1 + KEY_TOKS] == qkey {
+                    assert_eq!(
+                        &s.prompt[i + 1 + KEY_TOKS..i + 1 + KEY_TOKS + VAL_TOKS],
+                        &s.answer[..]
+                    );
+                    // depth_pct is the record's position percentile
+                    assert_eq!(depth as usize, 100 * i / s.prompt.len());
+                    found += 1;
+                }
+            }
+            assert_eq!(found, 1);
+        }
+        assert!(
+            seen_buckets.iter().all(|&b| b),
+            "uniform queries must populate every depth bucket: {seen_buckets:?}"
+        );
+    }
+
+    #[test]
+    fn multiturn_drift_targets_turn_zero() {
+        let mut rng = Pcg32::new(31);
+        let s = gen_multiturn_drift(&mut rng, 8, 2);
+        // the target record is the first one, so its depth is near zero
+        assert!(s.depth_pct.unwrap() < 10, "depth {:?}", s.depth_pct);
+        assert_eq!(s.prompt.iter().filter(|&&t| t == SEP).count(), 8);
+        // rehearsal probes: turns 2,4,6,8 → 4 in-prompt QUERYs + the final one
+        assert_eq!(s.prompt.iter().filter(|&&t| t == QUERY).count(), 5);
+        // final query resolves to the turn-0 value
+        let qpos = s.prompt.len() - 1 - KEY_TOKS;
+        assert_eq!(s.prompt[qpos], QUERY);
+        assert_eq!(
+            s.prompt[qpos + 1..qpos + 1 + KEY_TOKS],
+            s.prompt[2..2 + KEY_TOKS]
+        );
+        assert_eq!(&s.prompt[2 + KEY_TOKS..2 + KEY_TOKS + VAL_TOKS], &s.answer[..]);
+        // the turn-0 key never reappears before the final query (no
+        // rehearsal leak: recalling it is genuinely hard)
+        let k0 = s.prompt[2];
+        assert_eq!(
+            s.prompt[..qpos].iter().filter(|&&t| t == k0).count(),
+            1,
+            "target key must appear exactly once before the final query"
+        );
     }
 }

@@ -1,0 +1,766 @@
+//! Fragility scenario grid: race every importance policy × every retention
+//! arm on the failure modes that matter, without compiled artifacts.
+//!
+//! The engine-based harness needs a trained model; this module instead
+//! builds a *content-addressable memory* directly on [`CacheManager`]:
+//! token `t` gets a deterministic ±1/√d embedding, slot `i` of a transcript
+//! stores `K_i = embed(tok_i)`, `V_i = embed(tok_{i+1})` (the induction-head
+//! association), and a probe for key `k` is a sharpened-softmax attention
+//! readout over the cache's *effective* (dequantized / surviving) KV rows,
+//! decoded by argmax against the vocabulary embeddings. Retrieval therefore
+//! degrades exactly the way the cache does: an evicted needle cannot be
+//! read back, a lo-tier needle survives through its quantized rows, and a
+//! merged needle survives only as attention-weighted mass in its neighbor.
+//!
+//! Scenarios come from the fragility task families in
+//! [`super::corpus`] / [`super::harness`] (needle-at-depth, keyed recall,
+//! multi-turn drift); drift transcripts are driven through the *real*
+//! session lifecycle — prefill, per-token appends with honest attention
+//! rows, a probe of the turn-0 fact at the end of every turn, and a
+//! park/unpark (spill-to-bytes + restore) every other turn.
+//!
+//! Every grid cell (task × policy × arm) is seeded independently via
+//! [`SplitMix64`] from the cell index, so [`run_grid`] and
+//! [`run_grid_workers`] produce **byte-identical** scores for any worker
+//! count — the determinism contract `benches/fragility_grid.rs` and CI
+//! depend on.
+
+use super::corpus::{self, QUERY, SEP};
+use super::harness::{depth_bucket, p10_score, worst_bucket_score, EvalTask, DEPTH_BUCKETS};
+use crate::kvcache::spill::{decode_session, encode_session};
+use crate::kvcache::{BufferPool, CacheConfig, CacheManager, MergeConfig, RetentionMode};
+use crate::model::{CacheMode, Session, SessionCache};
+use crate::quant::Precision;
+use crate::runtime::ModelDims;
+use crate::util::rng::{Pcg32, SplitMix64};
+
+const LAYERS: usize = 2;
+const KV_HEADS: usize = 2;
+const D_HEAD: usize = 32;
+/// Softmax sharpness of the honest attention rows fed to the policies.
+const PRE_SCALE: f32 = 4.0;
+/// Softmax sharpness of the retrieval probe (match sim ≈ 1, noise ≈ ±1/√d,
+/// so scale 8 makes the matching slot dominate the readout).
+const PROBE_SCALE: f32 = 8.0;
+const EMBED_SALT: u64 = 0xE11B_ED5A;
+
+/// How demoted (non-important) tokens are handled — the race's third axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arm {
+    /// Hi-only eviction baseline: demoted tokens are dropped.
+    EvictOnly,
+    /// MiKV mixed precision: demoted tokens are retained in the lo tier.
+    MixedPrecision,
+    /// WeightedKV-style merge: demoted tokens fold into a retained
+    /// neighbor ([`MergeConfig`]).
+    MergeInsteadOfDrop,
+}
+
+impl Arm {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Arm::EvictOnly => "evict",
+            Arm::MixedPrecision => "mikv",
+            Arm::MergeInsteadOfDrop => "merge",
+        }
+    }
+}
+
+/// One fragility grid: the cross product of tasks × policies × arms.
+#[derive(Debug, Clone)]
+pub struct GridSpec {
+    pub seed: u64,
+    /// Samples per cell (drift samples contribute one probe per turn).
+    pub samples: usize,
+    pub max_seq: usize,
+    /// Hi-tier importance ratio shared by every arm.
+    pub ratio: f64,
+    pub recent_window: usize,
+    pub tasks: Vec<EvalTask>,
+    pub policies: Vec<String>,
+    pub arms: Vec<Arm>,
+}
+
+impl GridSpec {
+    /// The full grid raced by `benches/fragility_grid.rs`.
+    pub fn full_grid(seed: u64) -> Self {
+        GridSpec {
+            seed,
+            samples: 6,
+            max_seq: 192,
+            ratio: 0.2,
+            recent_window: 8,
+            tasks: vec![
+                EvalTask::NeedleAtDepth { depth_pct: 0, haystack: 120 },
+                EvalTask::NeedleAtDepth { depth_pct: 25, haystack: 120 },
+                EvalTask::NeedleAtDepth { depth_pct: 50, haystack: 120 },
+                EvalTask::NeedleAtDepth { depth_pct: 75, haystack: 120 },
+                EvalTask::NeedleAtDepth { depth_pct: 95, haystack: 120 },
+                EvalTask::KeyedRecall { n_keys: 24 },
+                EvalTask::MultiTurnDrift { turns: 10, probe_every: 2 },
+            ],
+            policies: ["h2o", "local", "random", "lagkv"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+            arms: vec![Arm::EvictOnly, Arm::MixedPrecision, Arm::MergeInsteadOfDrop],
+        }
+    }
+
+    /// CI-sized grid: same axes, smaller contexts and sample counts.
+    pub fn smoke(seed: u64) -> Self {
+        GridSpec {
+            samples: 3,
+            max_seq: 128,
+            tasks: vec![
+                EvalTask::NeedleAtDepth { depth_pct: 0, haystack: 72 },
+                EvalTask::NeedleAtDepth { depth_pct: 50, haystack: 72 },
+                EvalTask::NeedleAtDepth { depth_pct: 95, haystack: 72 },
+                EvalTask::KeyedRecall { n_keys: 16 },
+                EvalTask::MultiTurnDrift { turns: 6, probe_every: 2 },
+            ],
+            ..Self::full_grid(seed)
+        }
+    }
+}
+
+/// Scores of one grid cell. Floats are deterministic down to the bit for a
+/// given [`GridSpec`] — the determinism regression tests compare `to_bits`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellResult {
+    pub cell: usize,
+    /// Task label, e.g. `needle@75`.
+    pub task: String,
+    /// Task family ([`EvalTask::name`]).
+    pub family: &'static str,
+    /// The pinned needle depth for needle cells.
+    pub depth_pct: Option<u8>,
+    pub policy: String,
+    pub arm: &'static str,
+    pub n_probes: usize,
+    pub mean: f64,
+    pub worst_bucket: f64,
+    pub p10: f64,
+    /// Mean probe score per depth bucket (0.0 where the bucket is empty).
+    pub bucket_scores: [f64; DEPTH_BUCKETS],
+    pub bucket_counts: [usize; DEPTH_BUCKETS],
+    pub cache_pct: f64,
+    /// Total merge-ledger folds across the cell's sessions (merge arm only).
+    pub merges: u64,
+}
+
+/// Deterministic ±1/√d embedding per vocabulary token.
+pub struct EmbedTable {
+    d: usize,
+    rows: Vec<f32>,
+}
+
+impl EmbedTable {
+    pub fn new(seed: u64, d: usize) -> Self {
+        let n = corpus::VOCAB as usize;
+        let mut rows = vec![0.0f32; n * d];
+        let a = 1.0 / (d as f32).sqrt();
+        for t in 0..n {
+            let mut rng = Pcg32::new(seed ^ (t as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            for x in &mut rows[t * d..(t + 1) * d] {
+                *x = if rng.gen_bool(0.5) { a } else { -a };
+            }
+        }
+        EmbedTable { d, rows }
+    }
+
+    fn row(&self, tok: i64) -> &[f32] {
+        &self.rows[tok as usize * self.d..(tok as usize + 1) * self.d]
+    }
+}
+
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+fn model_dims(max_seq: usize) -> ModelDims {
+    ModelDims {
+        vocab: corpus::VOCAB as usize,
+        d_model: LAYERS * D_HEAD,
+        n_layers: LAYERS,
+        n_q_heads: 2 * KV_HEADS,
+        n_kv_heads: KV_HEADS,
+        d_head: D_HEAD,
+        d_ff: 2 * LAYERS * D_HEAD,
+        max_seq,
+        quant_group: D_HEAD / 2,
+        params: 0,
+    }
+}
+
+fn manager(sess: &Session) -> &CacheManager {
+    match &sess.cache {
+        SessionCache::Mikv(m) => m,
+        SessionCache::Full(_) => unreachable!("fragility sessions are MiKV"),
+    }
+}
+
+fn build_session(
+    spec: &GridSpec,
+    policy: &str,
+    arm: Arm,
+    id: u64,
+    dims: &ModelDims,
+) -> crate::Result<Session> {
+    let mut cfg = CacheConfig::mikv(
+        LAYERS,
+        KV_HEADS,
+        D_HEAD,
+        spec.max_seq,
+        spec.ratio,
+        Precision::Int2,
+    );
+    cfg.recent_window = spec.recent_window;
+    match arm {
+        Arm::MixedPrecision => {}
+        Arm::EvictOnly => cfg.retention = RetentionMode::Evict,
+        Arm::MergeInsteadOfDrop => {
+            cfg.retention = RetentionMode::Evict;
+            cfg.merge = Some(MergeConfig::default());
+        }
+    }
+    Session::new(
+        id,
+        dims,
+        CacheMode::Mikv {
+            cfg,
+            policy: policy.to_string(),
+        },
+    )
+}
+
+/// Accumulated causal attention over the stream (one plane; replicated):
+/// position `j` attends content-addressably over `0..j` with its own
+/// embedding as the query — the honest importance signal policies rank by.
+fn causal_attention_acc(et: &EmbedTable, stream: &[i64]) -> Vec<f32> {
+    let t = stream.len();
+    let mut acc = vec![0.0f32; t];
+    let mut sims = vec![0.0f32; t];
+    for j in 1..t {
+        let q = et.row(stream[j]);
+        let mut mx = f32::NEG_INFINITY;
+        for i in 0..j {
+            sims[i] = PRE_SCALE * dot(q, et.row(stream[i]));
+            if sims[i] > mx {
+                mx = sims[i];
+            }
+        }
+        let mut z = 0.0f32;
+        for i in 0..j {
+            sims[i] = (sims[i] - mx).exp();
+            z += sims[i];
+        }
+        for i in 0..j {
+            acc[i] += sims[i] / z;
+        }
+    }
+    acc
+}
+
+/// One append step's attention row (softmax over the `i` existing slots).
+fn append_attention_row(et: &EmbedTable, stream: &[i64], i: usize) -> Vec<f32> {
+    let q = et.row(stream[i]);
+    let mut w = vec![0.0f32; i];
+    let mut mx = f32::NEG_INFINITY;
+    for (s, ws) in w.iter_mut().enumerate() {
+        *ws = PRE_SCALE * dot(q, et.row(stream[s]));
+        if *ws > mx {
+            mx = *ws;
+        }
+    }
+    let mut z = 0.0f32;
+    for ws in w.iter_mut() {
+        *ws = (*ws - mx).exp();
+        z += *ws;
+    }
+    for ws in w.iter_mut() {
+        *ws /= z;
+    }
+    w
+}
+
+/// Prefill the stream's induction associations into the session's cache:
+/// `K_i = embed(stream[i])`, `V_i = embed(prompt[i+1])` (the prompt always
+/// extends one token past the stream, so the last association is defined).
+fn ingest_prefill_stream(
+    et: &EmbedTable,
+    dims: &ModelDims,
+    sess: &mut Session,
+    stream: &[i64],
+    prompt: &[i64],
+) {
+    let t0 = stream.len();
+    let planes = dims.planes();
+    let d = D_HEAD;
+    let mut k = vec![0.0f32; planes * t0 * d];
+    let mut v = vec![0.0f32; planes * t0 * d];
+    for (s, &tok) in stream.iter().enumerate() {
+        let krow = et.row(tok);
+        let vrow = et.row(prompt[s + 1]);
+        for p in 0..planes {
+            k[(p * t0 + s) * d..(p * t0 + s + 1) * d].copy_from_slice(krow);
+            v[(p * t0 + s) * d..(p * t0 + s + 1) * d].copy_from_slice(vrow);
+        }
+    }
+    let acc1 = causal_attention_acc(et, stream);
+    let mut acc = vec![0.0f32; planes * t0];
+    for p in 0..planes {
+        acc[p * t0..(p + 1) * t0].copy_from_slice(&acc1);
+    }
+    let a = 1.0 / (d as f32).sqrt();
+    let qmax = vec![a; planes * d];
+    let kmax = vec![a; planes * d];
+    match &mut sess.cache {
+        SessionCache::Mikv(m) => m.ingest_prefill(t0, &k, &v, &acc, &qmax, &kmax),
+        SessionCache::Full(_) => unreachable!("fragility sessions are MiKV"),
+    }
+    sess.tokens = stream.to_vec();
+    sess.prompt_len = t0;
+    sess.last_token = stream[t0 - 1];
+}
+
+/// Sharpened-softmax retrieval probe through the cache's *effective* KV
+/// rows, decoded against the vocabulary embeddings. Pure readout — policy
+/// and tier state are untouched.
+fn probe_argmax(m: &CacheManager, et: &EmbedTable, q_tok: i64, planes: usize) -> i64 {
+    let d = D_HEAD;
+    let t = m.seq_len();
+    let q = et.row(q_tok);
+    let mut kb = vec![0.0f32; d];
+    let mut vb = vec![0.0f32; d];
+    let mut read = vec![0.0f32; d];
+    let mut sims: Vec<(usize, f32)> = Vec::with_capacity(t);
+    for p in 0..planes {
+        sims.clear();
+        let mut mx = f32::NEG_INFINITY;
+        for s in 0..t {
+            if m.effective_kv_into(p, s, &mut kb, &mut vb) {
+                let x = PROBE_SCALE * dot(q, &kb);
+                sims.push((s, x));
+                if x > mx {
+                    mx = x;
+                }
+            }
+        }
+        if sims.is_empty() {
+            continue;
+        }
+        let mut z = 0.0f32;
+        for (_, x) in sims.iter_mut() {
+            *x = (*x - mx).exp();
+            z += *x;
+        }
+        for &(s, w) in sims.iter() {
+            let _ = m.effective_kv_into(p, s, &mut kb, &mut vb);
+            for (r, &x) in read.iter_mut().zip(vb.iter()) {
+                *r += (w / z) * x;
+            }
+        }
+    }
+    let mut best = 0i64;
+    let mut best_v = f32::NEG_INFINITY;
+    for tok in 0..corpus::VOCAB {
+        let s = dot(et.row(tok), &read);
+        if s > best_v {
+            best_v = s;
+            best = tok;
+        }
+    }
+    best
+}
+
+/// Split a sample into its ingestible stream and the queried key token.
+fn split_query(sample: &corpus::EvalSample) -> crate::Result<(&[i64], i64)> {
+    let qpos = sample.prompt.len() - 1 - corpus::KEY_TOKS;
+    anyhow::ensure!(
+        sample.prompt[qpos] == QUERY,
+        "fragility samples must end [QUERY, key]"
+    );
+    Ok((&sample.prompt[..qpos], sample.prompt[qpos + 1]))
+}
+
+/// Single-shot scenario: prefill the whole stream, probe once.
+fn run_single_sample(
+    et: &EmbedTable,
+    dims: &ModelDims,
+    sess: &mut Session,
+    sample: &corpus::EvalSample,
+) -> crate::Result<(f64, Option<u8>)> {
+    let (stream, key_tok) = split_query(sample)?;
+    ingest_prefill_stream(et, dims, sess, stream, &sample.prompt);
+    let got = probe_argmax(manager(sess), et, key_tok, dims.planes());
+    let score = if got == sample.answer[0] { 1.0 } else { 0.0 };
+    Ok((score, sample.depth_pct))
+}
+
+/// Multi-turn drift scenario through the real session lifecycle: prefill
+/// turn 0, append each later turn token-by-token with honest attention
+/// rows, probe the turn-0 fact at the end of every turn, and park/unpark
+/// (spill + restore) the session every other turn.
+fn run_drift_sample(
+    et: &EmbedTable,
+    dims: &ModelDims,
+    sess: &mut Session,
+    sample: &corpus::EvalSample,
+    scores: &mut Vec<f64>,
+    depths: &mut Vec<Option<u8>>,
+) -> crate::Result<()> {
+    let (stream, key_tok) = split_query(sample)?;
+    let t0 = stream.iter().position(|&t| t == SEP).unwrap_or(stream.len());
+    // the target fact's key sits at slot 2: [BOS, REC, k0, v0…]
+    anyhow::ensure!(stream[2] == key_tok, "drift query must target turn 0");
+    ingest_prefill_stream(et, dims, sess, &stream[..t0], &sample.prompt);
+
+    let planes = dims.planes();
+    let d = D_HEAD;
+    let pool = BufferPool::new();
+    let mut turn = 0usize;
+    for i in t0..stream.len() {
+        let mut k_new = vec![0.0f32; planes * d];
+        let mut v_new = vec![0.0f32; planes * d];
+        for p in 0..planes {
+            k_new[p * d..(p + 1) * d].copy_from_slice(et.row(stream[i]));
+            v_new[p * d..(p + 1) * d].copy_from_slice(et.row(sample.prompt[i + 1]));
+        }
+        let w = append_attention_row(et, stream, i);
+        let mut attn_prev = vec![0.0f32; planes * dims.max_seq];
+        for p in 0..planes {
+            attn_prev[p * dims.max_seq..p * dims.max_seq + i].copy_from_slice(&w);
+        }
+        let attn_self = vec![0.02f32; planes];
+        sess.try_ingest_step(&k_new, &v_new, &attn_prev, &attn_self)?;
+        sess.tokens.push(stream[i]);
+        sess.last_token = stream[i];
+
+        let end_of_turn = i + 1 == stream.len() || stream[i + 1] == SEP;
+        if end_of_turn {
+            turn += 1;
+            let got = probe_argmax(manager(sess), et, key_tok, planes);
+            let t_now = sess.cache.seq_len();
+            scores.push(if got == sample.answer[0] { 1.0 } else { 0.0 });
+            depths.push(Some((100 * 2 / t_now) as u8));
+            if turn % 2 == 0 {
+                let frame =
+                    encode_session(sess).map_err(|e| anyhow::anyhow!("park: {e}"))?;
+                *sess = decode_session(&frame, dims, &pool)
+                    .map_err(|e| anyhow::anyhow!("unpark: {e}"))?;
+            }
+        }
+    }
+    Ok(())
+}
+
+fn task_label(task: &EvalTask) -> String {
+    match task {
+        EvalTask::NeedleAtDepth { depth_pct, .. } => format!("needle@{depth_pct}"),
+        other => other.name().to_string(),
+    }
+}
+
+fn enumerate_cells(spec: &GridSpec) -> Vec<(EvalTask, String, Arm)> {
+    let mut cells = Vec::with_capacity(spec.tasks.len() * spec.policies.len() * spec.arms.len());
+    for task in &spec.tasks {
+        for policy in &spec.policies {
+            for &arm in &spec.arms {
+                cells.push((task.clone(), policy.clone(), arm));
+            }
+        }
+    }
+    cells
+}
+
+fn cell_seeds(seed: u64, n: usize) -> Vec<u64> {
+    let mut sm = SplitMix64::new(seed);
+    (0..n).map(|_| sm.split()).collect()
+}
+
+fn run_cell(
+    spec: &GridSpec,
+    et: &EmbedTable,
+    idx: usize,
+    task: &EvalTask,
+    policy: &str,
+    arm: Arm,
+    seed: u64,
+) -> crate::Result<CellResult> {
+    let dims = model_dims(spec.max_seq);
+    let mut rng = Pcg32::new(seed);
+    let mut scores: Vec<f64> = Vec::new();
+    let mut depths: Vec<Option<u8>> = Vec::new();
+    let mut cache_pct_sum = 0.0f64;
+    let mut merges = 0u64;
+    for i in 0..spec.samples {
+        let sample = task.gen(&mut rng);
+        anyhow::ensure!(
+            sample.prompt.len() + 2 <= spec.max_seq,
+            "task {} sample ({} tokens) exceeds max_seq {}",
+            task.name(),
+            sample.prompt.len(),
+            spec.max_seq
+        );
+        let mut sess = build_session(spec, policy, arm, (idx * spec.samples + i) as u64, &dims)?;
+        match task {
+            EvalTask::MultiTurnDrift { .. } => {
+                run_drift_sample(et, &dims, &mut sess, &sample, &mut scores, &mut depths)?
+            }
+            _ => {
+                let (s, dp) = run_single_sample(et, &dims, &mut sess, &sample)?;
+                scores.push(s);
+                depths.push(dp);
+            }
+        }
+        cache_pct_sum += sess.cache.cache_size_pct();
+        merges += manager(&sess).merge_ledger().merges;
+    }
+
+    let mut bsum = [0.0f64; DEPTH_BUCKETS];
+    let mut bn = [0usize; DEPTH_BUCKETS];
+    for (&s, &dp) in scores.iter().zip(&depths) {
+        if let Some(dp) = dp {
+            let b = depth_bucket(dp);
+            bsum[b] += s;
+            bn[b] += 1;
+        }
+    }
+    let mut bucket_scores = [0.0f64; DEPTH_BUCKETS];
+    for b in 0..DEPTH_BUCKETS {
+        if bn[b] > 0 {
+            bucket_scores[b] = bsum[b] / bn[b] as f64;
+        }
+    }
+    Ok(CellResult {
+        cell: idx,
+        task: task_label(task),
+        family: task.name(),
+        depth_pct: match *task {
+            EvalTask::NeedleAtDepth { depth_pct, .. } => Some(depth_pct),
+            _ => None,
+        },
+        policy: policy.to_string(),
+        arm: arm.name(),
+        n_probes: scores.len(),
+        mean: scores.iter().sum::<f64>() / (scores.len().max(1)) as f64,
+        worst_bucket: worst_bucket_score(&scores, &depths),
+        p10: p10_score(&scores),
+        bucket_scores,
+        bucket_counts: bn,
+        cache_pct: cache_pct_sum / spec.samples as f64,
+        merges,
+    })
+}
+
+/// Run the grid in-process, cell by cell.
+pub fn run_grid(spec: &GridSpec) -> crate::Result<Vec<CellResult>> {
+    let cells = enumerate_cells(spec);
+    let seeds = cell_seeds(spec.seed, cells.len());
+    let et = EmbedTable::new(spec.seed ^ EMBED_SALT, D_HEAD);
+    cells
+        .iter()
+        .enumerate()
+        .map(|(i, (task, policy, arm))| run_cell(spec, &et, i, task, policy, *arm, seeds[i]))
+        .collect()
+}
+
+/// Run the grid across `workers` threads. Cells are independently seeded
+/// by index and reassembled in cell order, so the result is byte-identical
+/// to [`run_grid`] for every worker count.
+pub fn run_grid_workers(spec: &GridSpec, workers: usize) -> crate::Result<Vec<CellResult>> {
+    let workers = workers.max(1);
+    let cells = enumerate_cells(spec);
+    let seeds = cell_seeds(spec.seed, cells.len());
+    let et = EmbedTable::new(spec.seed ^ EMBED_SALT, D_HEAD);
+    let mut slots: Vec<Option<CellResult>> = Vec::new();
+    slots.resize_with(cells.len(), || None);
+    let chunks: Vec<crate::Result<Vec<(usize, CellResult)>>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                let (cells, seeds, et) = (&cells, &seeds, &et);
+                s.spawn(move || -> crate::Result<Vec<(usize, CellResult)>> {
+                    let mut out = Vec::new();
+                    for i in (w..cells.len()).step_by(workers) {
+                        let (task, policy, arm) = &cells[i];
+                        out.push((i, run_cell(spec, et, i, task, policy, *arm, seeds[i])?));
+                    }
+                    Ok(out)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err(anyhow::anyhow!("fragility worker panicked")))
+            })
+            .collect()
+    });
+    for chunk in chunks {
+        for (i, r) in chunk? {
+            slots[i] = Some(r);
+        }
+    }
+    Ok(slots
+        .into_iter()
+        .map(|o| o.expect("every cell runs exactly once"))
+        .collect())
+}
+
+/// Probe-weighted per-bucket score aggregated over every cell of one task
+/// family under one arm — the numbers the bench gates compare.
+pub fn aggregate_buckets(
+    results: &[CellResult],
+    family: &str,
+    arm: &str,
+) -> ([f64; DEPTH_BUCKETS], [usize; DEPTH_BUCKETS]) {
+    let mut sum = [0.0f64; DEPTH_BUCKETS];
+    let mut n = [0usize; DEPTH_BUCKETS];
+    for r in results.iter().filter(|r| r.family == family && r.arm == arm) {
+        for b in 0..DEPTH_BUCKETS {
+            sum[b] += r.bucket_scores[b] * r.bucket_counts[b] as f64;
+            n[b] += r.bucket_counts[b];
+        }
+    }
+    let mut mean = [0.0f64; DEPTH_BUCKETS];
+    for b in 0..DEPTH_BUCKETS {
+        if n[b] > 0 {
+            mean[b] = sum[b] / n[b] as f64;
+        }
+    }
+    (mean, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_spec() -> GridSpec {
+        GridSpec {
+            seed: 0xF7A6,
+            samples: 2,
+            max_seq: 64,
+            ratio: 0.25,
+            recent_window: 4,
+            tasks: vec![
+                EvalTask::NeedleAtDepth { depth_pct: 0, haystack: 40 },
+                EvalTask::NeedleAtDepth { depth_pct: 90, haystack: 40 },
+                EvalTask::KeyedRecall { n_keys: 8 },
+                EvalTask::MultiTurnDrift { turns: 4, probe_every: 2 },
+            ],
+            policies: vec!["h2o".into(), "local".into()],
+            arms: vec![Arm::EvictOnly, Arm::MixedPrecision, Arm::MergeInsteadOfDrop],
+        }
+    }
+
+    fn fingerprint(results: &[CellResult]) -> Vec<(usize, String, u64, u64, u64)> {
+        results
+            .iter()
+            .map(|r| {
+                (
+                    r.cell,
+                    format!("{}/{}/{}", r.task, r.policy, r.arm),
+                    r.mean.to_bits(),
+                    r.worst_bucket.to_bits(),
+                    r.cache_pct.to_bits(),
+                )
+            })
+            .collect()
+    }
+
+    /// Satellite: same seed ⇒ byte-identical grid scores across two runs
+    /// and across in-process vs 1 vs 2 workers.
+    #[test]
+    fn grid_is_deterministic_across_runs_and_workers() {
+        let spec = tiny_spec();
+        let a = run_grid(&spec).unwrap();
+        let b = run_grid(&spec).unwrap();
+        assert_eq!(fingerprint(&a), fingerprint(&b), "two in-process runs");
+        let w1 = run_grid_workers(&spec, 1).unwrap();
+        assert_eq!(fingerprint(&a), fingerprint(&w1), "in-process vs 1 worker");
+        let w2 = run_grid_workers(&spec, 2).unwrap();
+        assert_eq!(fingerprint(&a), fingerprint(&w2), "1 worker vs 2 workers");
+        assert_eq!(a.len(), spec.tasks.len() * 2 * 3);
+    }
+
+    /// A full-budget hi-only cache retrieves the needle at every depth —
+    /// the probe machinery itself is sound.
+    #[test]
+    fn full_budget_cache_retrieves_every_depth() {
+        let spec = GridSpec {
+            ratio: 1.0,
+            tasks: vec![
+                EvalTask::NeedleAtDepth { depth_pct: 0, haystack: 40 },
+                EvalTask::NeedleAtDepth { depth_pct: 50, haystack: 40 },
+                EvalTask::NeedleAtDepth { depth_pct: 95, haystack: 40 },
+            ],
+            policies: vec!["h2o".into()],
+            arms: vec![Arm::MixedPrecision],
+            ..tiny_spec()
+        };
+        for cell in run_grid(&spec).unwrap() {
+            assert_eq!(cell.mean, 1.0, "cell {}: {:?}", cell.task, cell);
+        }
+    }
+
+    /// The headline contrast at a compressed budget: a recency policy with
+    /// hi-only eviction destroys the oldest needle; MiKV mixed precision
+    /// retrieves it through the lo tier.
+    #[test]
+    fn eviction_destroys_deep_needle_mixed_precision_recovers() {
+        let spec = GridSpec {
+            tasks: vec![EvalTask::NeedleAtDepth { depth_pct: 0, haystack: 40 }],
+            policies: vec!["local".into()],
+            arms: vec![Arm::EvictOnly, Arm::MixedPrecision],
+            samples: 3,
+            ..tiny_spec()
+        };
+        let results = run_grid(&spec).unwrap();
+        let evict = results.iter().find(|r| r.arm == "evict").unwrap();
+        let mikv = results.iter().find(|r| r.arm == "mikv").unwrap();
+        assert!(
+            evict.mean < 0.5,
+            "recency eviction must lose the oldest needle: {evict:?}"
+        );
+        assert_eq!(
+            mikv.mean, 1.0,
+            "mixed precision must retrieve through the lo tier: {mikv:?}"
+        );
+        // worst_bucket == mean here: every probe lands in bucket 0
+        assert_eq!(mikv.worst_bucket, mikv.mean);
+    }
+
+    /// The merge arm actually folds (ledger moves) and drift parking
+    /// round-trips merge state through the snapshot codec.
+    #[test]
+    fn merge_arm_folds_and_survives_parking() {
+        let spec = GridSpec {
+            tasks: vec![EvalTask::MultiTurnDrift { turns: 4, probe_every: 2 }],
+            policies: vec!["h2o".into()],
+            arms: vec![Arm::MergeInsteadOfDrop, Arm::EvictOnly],
+            ..tiny_spec()
+        };
+        let results = run_grid(&spec).unwrap();
+        let merge = results.iter().find(|r| r.arm == "merge").unwrap();
+        let evict = results.iter().find(|r| r.arm == "evict").unwrap();
+        assert!(merge.merges > 0, "merge arm must fold at least once");
+        assert_eq!(evict.merges, 0, "evict arm must never fold");
+        assert!(merge.n_probes == evict.n_probes && merge.n_probes > 0);
+    }
+
+    #[test]
+    fn aggregate_buckets_weights_by_probe_count() {
+        let spec = tiny_spec();
+        let results = run_grid(&spec).unwrap();
+        let (mean, n) = aggregate_buckets(&results, "needle", "mikv");
+        // needle@0 populates bucket 0, needle@90 bucket 3
+        assert!(n[0] > 0 && n[3] > 0, "needle buckets populated: {n:?}");
+        for b in 0..DEPTH_BUCKETS {
+            assert!((0.0..=1.0).contains(&mean[b]), "bucket {b}: {}", mean[b]);
+        }
+        let (_, none) = aggregate_buckets(&results, "nosuch", "mikv");
+        assert_eq!(none, [0usize; DEPTH_BUCKETS]);
+    }
+}

@@ -22,6 +22,18 @@ pub enum EvalTask {
     Pattern { motif: usize, repeats: usize },
     /// Markov continuation (MMLU proxy — scored by agreement vs full cache).
     Lm { context: usize, answer: usize },
+    /// Fragility: needle-in-a-haystack with the needle pinned at
+    /// `depth_pct`% of the context (0 = oldest — the position eviction
+    /// destroys first).
+    NeedleAtDepth { depth_pct: u8, haystack: usize },
+    /// Fragility: a long multi-turn transcript; the query asks for the
+    /// turn-0 fact after `turns` turns of drift, with recency-rehearsal
+    /// probes every `probe_every` turns competing for the budget.
+    MultiTurnDrift { turns: usize, probe_every: usize },
+    /// Fragility: `n_keys` keyed facts, query a uniformly random one —
+    /// samples populate every depth bucket, so the worst bucket exposes
+    /// positional failure the mean hides.
+    KeyedRecall { n_keys: usize },
 }
 
 impl EvalTask {
@@ -31,6 +43,9 @@ impl EvalTask {
             EvalTask::MultiHop { .. } => "multihop",
             EvalTask::Pattern { .. } => "pattern",
             EvalTask::Lm { .. } => "lm",
+            EvalTask::NeedleAtDepth { .. } => "needle",
+            EvalTask::MultiTurnDrift { .. } => "drift",
+            EvalTask::KeyedRecall { .. } => "keyedrecall",
         }
     }
 
@@ -40,6 +55,13 @@ impl EvalTask {
             EvalTask::MultiHop { n_lines } => corpus::gen_multihop(rng, n_lines),
             EvalTask::Pattern { motif, repeats } => corpus::gen_pattern(rng, motif, repeats),
             EvalTask::Lm { context, answer } => corpus::gen_lm(rng, context, answer),
+            EvalTask::NeedleAtDepth { depth_pct, haystack } => {
+                corpus::gen_needle_at_depth(rng, depth_pct, haystack)
+            }
+            EvalTask::MultiTurnDrift { turns, probe_every } => {
+                corpus::gen_multiturn_drift(rng, turns, probe_every)
+            }
+            EvalTask::KeyedRecall { n_keys } => corpus::gen_keyed_recall(rng, n_keys),
         }
     }
 
@@ -50,6 +72,55 @@ impl EvalTask {
     }
 }
 
+// ----------------------------------------------------------------------
+// Fragility scoring: mean accuracy hides positional failure (a cache that
+// answers every recent query and no deep one still scores 75% on a uniform
+// mix). Scores are therefore also bucketed by fact depth, and the *worst*
+// bucket is reported alongside the mean.
+// ----------------------------------------------------------------------
+
+/// Number of depth buckets: [0,25) [25,50) [50,75) [75,100].
+pub const DEPTH_BUCKETS: usize = 4;
+
+/// Bucket index for a fact depth percentage.
+pub fn depth_bucket(depth_pct: u8) -> usize {
+    ((depth_pct as usize) / 25).min(DEPTH_BUCKETS - 1)
+}
+
+/// Mean score of the worst-scoring populated depth bucket. Samples with no
+/// recorded depth share one extra bucket, so for depth-less task families
+/// this degenerates to the overall mean. Returns 0.0 for an empty slice.
+pub fn worst_bucket_score(scores: &[f64], depths: &[Option<u8>]) -> f64 {
+    debug_assert_eq!(scores.len(), depths.len());
+    let mut sum = [0.0f64; DEPTH_BUCKETS + 1];
+    let mut n = [0usize; DEPTH_BUCKETS + 1];
+    for (&s, &d) in scores.iter().zip(depths) {
+        let b = d.map_or(DEPTH_BUCKETS, |d| depth_bucket(d));
+        sum[b] += s;
+        n[b] += 1;
+    }
+    let worst = (0..=DEPTH_BUCKETS)
+        .filter(|&b| n[b] > 0)
+        .map(|b| sum[b] / n[b] as f64)
+        .fold(f64::INFINITY, f64::min);
+    if worst.is_finite() {
+        worst
+    } else {
+        0.0
+    }
+}
+
+/// 10th-percentile per-sample score (lower tail of the distribution — the
+/// reliability number the paper's "no token left behind" claim is about).
+pub fn p10_score(scores: &[f64]) -> f64 {
+    if scores.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = scores.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("finite scores"));
+    sorted[(sorted.len() - 1) * 10 / 100]
+}
+
 /// Result of evaluating one cache mode on one task.
 #[derive(Debug, Clone)]
 pub struct EvalOutcome {
@@ -58,6 +129,12 @@ pub struct EvalOutcome {
     pub n_samples: usize,
     /// Mean per-sample score in [0, 1] (exact match or agreement).
     pub accuracy: f64,
+    /// Mean score of the worst-scoring populated depth bucket
+    /// ([`worst_bucket_score`]) — equals `accuracy` for task families that
+    /// don't record fact depth.
+    pub worst_bucket: f64,
+    /// 10th-percentile per-sample score ([`p10_score`]).
+    pub p10_score: f64,
     /// Mean token agreement with the FULL-cache generation in [0, 1] —
     /// measures how faithfully the compressed cache preserves the model's
     /// behaviour, independent of task accuracy.
@@ -117,38 +194,47 @@ impl<'e> Harness<'e> {
         // mode, and the accuracy target for agreement-scored tasks.
         let reference = self.generate_mode(&samples, &prefills, &CacheMode::Full)?.0;
 
+        let depths: Vec<Option<u8>> = samples.iter().map(|s| s.depth_pct).collect();
         let mut outcomes = Vec::with_capacity(modes.len());
         for (name, mode) in modes {
             let (gens, cache_pct) = self.generate_mode(&samples, &prefills, mode)?;
+            // Per-sample scores: agreement-vs-reference for stochastic
+            // tasks, exact match otherwise.
+            let scores: Vec<f64> = if task.scored_by_agreement() {
+                gens.iter()
+                    .zip(&reference)
+                    .map(|(g, r)| super::agreement::token_agreement(g, r))
+                    .collect()
+            } else {
+                gens.iter()
+                    .zip(&samples)
+                    .map(|(g, s)| if g[..] == s.answer[..] { 1.0 } else { 0.0 })
+                    .collect()
+            };
             let fidelity: f64 = gens
                 .iter()
                 .zip(&reference)
                 .map(|(g, r)| super::agreement::token_agreement(g, r))
                 .sum::<f64>()
                 / samples.len() as f64;
-            let accuracy: f64 = if task.scored_by_agreement() {
-                fidelity
-            } else {
-                gens.iter()
-                    .zip(&samples)
-                    .map(|(g, s)| if g[..] == s.answer[..] { 1.0 } else { 0.0 })
-                    .sum::<f64>()
-                    / samples.len() as f64
-            };
+            let accuracy = scores.iter().sum::<f64>() / samples.len() as f64;
             outcomes.push(EvalOutcome {
                 mode_name: name.clone(),
                 task: task.name(),
                 n_samples: samples.len(),
                 accuracy,
+                worst_bucket: worst_bucket_score(&scores, &depths),
+                p10_score: p10_score(&scores),
                 fidelity,
                 cache_pct,
                 generations: gens,
             });
             crate::log_info!(
-                "eval {} / {}: acc {:.1}% fidelity {:.1}% cache {:.1}%",
+                "eval {} / {}: acc {:.1}% worst-bucket {:.1}% fidelity {:.1}% cache {:.1}%",
                 task.name(),
                 name,
                 100.0 * accuracy,
+                100.0 * worst_bucket_score(&scores, &depths),
                 100.0 * fidelity,
                 cache_pct
             );
@@ -202,5 +288,74 @@ impl<'e> Harness<'e> {
             })
             .collect();
         Ok((gens, cache_sum / sessions.len() as f64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Pinned values for the fragility scoring helpers: one perfect bucket
+    /// must not rescue a destroyed one.
+    #[test]
+    fn worst_bucket_pinned_values() {
+        // one sample per bucket: buckets score 1.0 / 1.0 / 0.5 / 0.0
+        let scores = [1.0, 1.0, 0.5, 0.0];
+        let depths = [Some(0u8), Some(30), Some(60), Some(90)];
+        assert_eq!(worst_bucket_score(&scores, &depths), 0.0);
+
+        // same scores, all depth-less → single bucket → the plain mean
+        let none = [None; 4];
+        assert_eq!(worst_bucket_score(&scores, &none), 0.625);
+
+        // bucket boundaries: 24 → bucket 0, 25 → bucket 1, 100 → bucket 3
+        assert_eq!(depth_bucket(24), 0);
+        assert_eq!(depth_bucket(25), 1);
+        assert_eq!(depth_bucket(74), 2);
+        assert_eq!(depth_bucket(75), 3);
+        assert_eq!(depth_bucket(100), 3);
+
+        // two samples in one bucket average before the min is taken
+        let scores = [0.0, 1.0, 1.0];
+        let depths = [Some(10u8), Some(12), Some(80)];
+        assert_eq!(worst_bucket_score(&scores, &depths), 0.5);
+
+        assert_eq!(worst_bucket_score(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn p10_pinned_values() {
+        // 10 samples: p10 lands on the 2nd-smallest ((10-1)*10/100 = 0 → min)
+        let scores = [1.0, 1.0, 1.0, 0.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0];
+        assert_eq!(p10_score(&scores), 0.0);
+        // 21 samples: index (21-1)*10/100 = 2 → third smallest
+        let mut scores: Vec<f64> = (0..21).map(|i| i as f64 / 20.0).collect();
+        scores.reverse();
+        assert_eq!(p10_score(&scores), 0.1);
+        assert_eq!(p10_score(&[]), 0.0);
+        assert_eq!(p10_score(&[0.7]), 0.7);
+    }
+
+    /// The `EvalOutcome` fields thread through hand-built construction —
+    /// the reporting fix locked as a regression test: `worst_bucket` and
+    /// `p10_score` exist alongside the mean and need not agree with it.
+    #[test]
+    fn outcome_reports_worst_bucket_alongside_mean() {
+        let scores = [1.0, 1.0, 1.0, 0.0];
+        let depths = [Some(5u8), Some(40), Some(60), Some(95)];
+        let o = EvalOutcome {
+            mode_name: "mikv:0.2:int2".into(),
+            task: "needle",
+            n_samples: scores.len(),
+            accuracy: scores.iter().sum::<f64>() / scores.len() as f64,
+            worst_bucket: worst_bucket_score(&scores, &depths),
+            p10_score: p10_score(&scores),
+            fidelity: 1.0,
+            cache_pct: 32.0,
+            generations: Vec::new(),
+        };
+        assert_eq!(o.accuracy, 0.75);
+        assert_eq!(o.worst_bucket, 0.0, "the deep-needle failure must surface");
+        assert!(o.accuracy > o.worst_bucket, "mean hides what worst exposes");
     }
 }

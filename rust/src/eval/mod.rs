@@ -9,9 +9,15 @@
 //! * [`agreement`] — generation-agreement metric vs the full-cache output
 //!   (the deterministic stand-in for the paper's GPT-4-judged AlpacaEval
 //!   win rate, Table 4).
+//! * [`fragility`] — the artifact-free fragility scenario grid: every
+//!   importance policy × every retention arm (evict / mixed-precision /
+//!   merge) raced on needle-at-depth, keyed recall, and multi-turn drift,
+//!   with deterministic multi-worker execution.
 
 pub mod agreement;
 pub mod corpus;
+pub mod fragility;
 pub mod harness;
 
+pub use fragility::{Arm, CellResult, GridSpec};
 pub use harness::{EvalOutcome, EvalTask, Harness};

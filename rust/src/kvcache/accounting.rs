@@ -124,6 +124,7 @@ mod tests {
             retention,
             outlier_aware: true,
             promotion: None,
+            merge: None,
         }
     }
 

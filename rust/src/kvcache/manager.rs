@@ -36,6 +36,7 @@
 
 use super::accounting::{self, HostFootprint, Occupancy};
 use super::dirty::{DirtyTake, DirtyTracker};
+use super::merge::{fold_v_into, nearest_retained, MergeConfig, MergeLedger};
 use super::pool::{BufferPool, PooledBuf};
 use super::tier::{HiTier, LoTier};
 use super::{CacheConfig, Placement, RetentionMode};
@@ -137,6 +138,11 @@ pub struct CacheManager {
     /// Decode steps ingested since prefill (the residency clock).
     step: u32,
     promo: PromotionStats,
+    /// Accumulated merge mass per slot, `[planes, cap]` (same stride as
+    /// `placement`); nonzero only for slots that have participated in a
+    /// WeightedKV-style fold (see [`super::merge`]).
+    merge_mass: Vec<f32>,
+    ledger: MergeLedger,
     seq_len: usize,
     scratch_u8: Vec<u8>,
     scratch_f32: Vec<f32>,
@@ -144,6 +150,11 @@ pub struct CacheManager {
     // `to_vec()`s the split-borrow workaround used to make).
     scratch_k: Vec<f32>,
     scratch_v: Vec<f32>,
+    // `[d]` staging for the merge fold: the victim's row rides in
+    // `scratch_k`/`scratch_v` during `demote`, so the neighbor needs its
+    // own pair.
+    merge_k: Vec<f32>,
+    merge_v: Vec<f32>,
     /// Shadow rows touched since the engine last synchronized this session
     /// (see [`crate::kvcache::dirty`] for the delta-assembly protocol).
     dirty: DirtyTracker,
@@ -195,11 +206,15 @@ impl CacheManager {
             tier_since: Vec::new(),
             step: 0,
             promo: PromotionStats::default(),
+            merge_mass: Vec::new(),
+            ledger: MergeLedger::default(),
             seq_len: 0,
             scratch_u8: vec![0; d],
             scratch_f32: vec![0.0; d],
             scratch_k: vec![0.0; d],
             scratch_v: vec![0.0; d],
+            merge_k: vec![0.0; d],
+            merge_v: vec![0.0; d],
             dirty: DirtyTracker::new(),
             cfg,
             policy,
@@ -253,6 +268,18 @@ impl CacheManager {
     /// Cumulative promotion counters for this session.
     pub fn promotion_stats(&self) -> PromotionStats {
         self.promo
+    }
+
+    /// Cumulative merge-lifecycle counters for this session (all zero
+    /// unless [`CacheConfig::merge`] is set and folds have fired).
+    pub fn merge_ledger(&self) -> MergeLedger {
+        self.ledger
+    }
+
+    /// Accumulated merge mass of `(plane, s)`: 0.0 unless the slot has
+    /// absorbed at least one WeightedKV-style fold.
+    pub fn merge_mass(&self, plane: usize, s: usize) -> f32 {
+        self.merge_mass[self.slot_idx(plane, s)]
     }
 
     // ------------------------------------------------------------------
@@ -309,14 +336,18 @@ impl CacheManager {
 
         let mut placement = vec![Placement::Empty; planes * new_cap];
         let mut tier_since = vec![0u32; planes * new_cap];
+        let mut merge_mass = vec![0.0f32; planes * new_cap];
         for p in 0..planes {
             placement[p * new_cap..p * new_cap + live]
                 .copy_from_slice(&self.placement[p * old_cap..p * old_cap + live]);
             tier_since[p * new_cap..p * new_cap + live]
                 .copy_from_slice(&self.tier_since[p * old_cap..p * old_cap + live]);
+            merge_mass[p * new_cap..p * new_cap + live]
+                .copy_from_slice(&self.merge_mass[p * old_cap..p * old_cap + live]);
         }
         self.placement = placement;
         self.tier_since = tier_since;
+        self.merge_mass = merge_mass;
 
         for hi in &mut self.hi {
             hi.ensure_capacity(new_cap);
@@ -374,6 +405,18 @@ impl CacheManager {
         for p in 0..self.planes {
             let acc = &attn_acc[p * seq_len..(p + 1) * seq_len];
             self.policy.init_prefill(p, acc);
+            // Attention-free signal channel: stream every prefill KV row to
+            // the policy before ranking, so KV-statistics policies (LagKV)
+            // score from the same prompt attention policies see via `acc`.
+            for s in 0..seq_len {
+                let kv_off = (p * seq_len + s) * self.d;
+                self.policy.observe_kv(
+                    p,
+                    s,
+                    &k[kv_off..kv_off + self.d],
+                    &v[kv_off..kv_off + self.d],
+                );
+            }
 
             // Rank slots: recency-protected slots are always hi; the rest of
             // the budget goes to the highest-scoring slots.
@@ -399,15 +442,24 @@ impl CacheManager {
                 is_hi[s] = true;
             }
 
-            for s in 0..seq_len {
+            // Hi admissions first, the demoted remainder second: a merge
+            // fold (Evict retention + `merge`) lands in the nearest
+            // *already retained* slot, so the hi set must be in place
+            // before any victim is dropped. Per-slot placement is
+            // order-independent otherwise, so the merge-off paths stay
+            // byte-identical.
+            for s in (0..seq_len).filter(|&s| is_hi[s]) {
                 let kv_off = (p * seq_len + s) * self.d;
-                let kt = &k[kv_off..kv_off + self.d];
-                let vt = &v[kv_off..kv_off + self.d];
-                if is_hi[s] {
-                    self.admit_hi(p, s, kt, vt);
-                } else {
-                    self.place_lo_or_evict(p, s, kt, vt);
-                }
+                self.admit_hi(p, s, &k[kv_off..kv_off + self.d], &v[kv_off..kv_off + self.d]);
+            }
+            for s in (0..seq_len).filter(|&s| !is_hi[s]) {
+                let kv_off = (p * seq_len + s) * self.d;
+                self.place_lo_or_evict(
+                    p,
+                    s,
+                    &k[kv_off..kv_off + self.d],
+                    &v[kv_off..kv_off + self.d],
+                );
             }
         }
     }
@@ -454,11 +506,18 @@ impl CacheManager {
             self.policy.observe(p, row);
             self.policy.admit(p, t);
             self.policy.observe_at(p, t, out.attn_self[p]);
+            // Attention-free signal channel (no-op for attention policies).
+            let off = p * self.d;
+            self.policy.observe_kv(
+                p,
+                t,
+                &out.k_new[off..off + self.d],
+                &out.v_new[off..off + self.d],
+            );
 
             // The new token always enters hi (recent tokens are important).
             // `out` borrows caller data (not self), so the slices pass
             // straight through — no staging copy, no allocation.
-            let off = p * self.d;
             self.admit_hi(
                 p,
                 t,
@@ -548,9 +607,12 @@ impl CacheManager {
     fn place_lo_or_evict(&mut self, p: usize, s: usize, k: &[f32], v: &[f32]) {
         let idx = self.slot_idx(p, s);
         match self.cfg.retention {
-            RetentionMode::Evict => {
-                self.placement[idx] = Placement::Evicted;
-            }
+            RetentionMode::Evict => match self.cfg.merge {
+                // Merge-instead-of-drop: fold the victim's value mass into
+                // its nearest retained neighbor (see [`super::merge`]).
+                Some(mc) => self.merge_into_neighbor(p, s, v, mc),
+                None => self.placement[idx] = Placement::Evicted,
+            },
             RetentionMode::Retain => {
                 // Balance the key before quantization (paper eq. 3).
                 let k_bal = self.balancers[p].balance_key(k);
@@ -564,6 +626,71 @@ impl CacheManager {
         // Both arms changed row `s` of the shadow (the hi clear in
         // `demote`, and/or the lo write here).
         self.dirty.mark(s);
+    }
+
+    /// The third lifecycle outcome (opt-in via [`CacheConfig::merge`]): in
+    /// Evict retention, fold a demotion victim's V row into its nearest
+    /// retained neighbor with attention-mass weighting instead of dropping
+    /// it (WeightedKV-style — see [`super::merge`] for the math and the
+    /// mass-conservation contract). In Evict mode the hi tier is the only
+    /// retained tier, so the neighbor is always a hi slot: its K row is
+    /// untouched (queries keep addressing it where they always did), its V
+    /// row becomes the mass-weighted average re-rounded at hi precision,
+    /// and the victim is marked [`Placement::Merged`]. Allocation-free —
+    /// the neighbor's rows stage through the dedicated `merge_k`/`merge_v`
+    /// scratch pair; the victim's row is the caller's `v` slice.
+    fn merge_into_neighbor(&mut self, p: usize, s: usize, v: &[f32], mc: MergeConfig) {
+        let idx = self.slot_idx(p, s);
+        let base = p * self.cap;
+        let plane_placement = &self.placement[base..base + self.cap];
+        let neighbor = nearest_retained(s, self.cap, mc.neighbor_window, |x| {
+            plane_placement[x] == Placement::Hi
+        });
+        let Some(n) = neighbor else {
+            // Unreachable in practice: prefill places the hi set before any
+            // victim, and the hi tier is never empty while tokens exist.
+            // But a fold with nowhere to land must degrade to the plain
+            // evict, not corrupt a mass accumulator.
+            self.placement[idx] = Placement::Evicted;
+            return;
+        };
+        let nidx = base + n;
+
+        // Fold weights: a slot that already absorbed folds carries its own
+        // mass inside the accumulator; otherwise seed its live importance
+        // score now (floored at `min_mass`, and guarded finite, so weights
+        // stay strictly positive whatever the policy emits).
+        let mut m_v = self.merge_mass[idx];
+        if m_v <= 0.0 {
+            let own = self.policy.score(p, s).max(mc.min_mass);
+            let own = if own.is_finite() { own } else { mc.min_mass };
+            self.ledger.seeded_mass += own as f64;
+            m_v = own;
+        }
+        let mut m_n = self.merge_mass[nidx];
+        if m_n <= 0.0 {
+            let own = self.policy.score(p, n).max(mc.min_mass);
+            let own = if own.is_finite() { own } else { mc.min_mass };
+            self.ledger.seeded_mass += own as f64;
+            m_n = own;
+        }
+
+        // Stage the neighbor's rows, fold, and re-admit at hi precision
+        // (storage-rounding the folded V exactly like a fresh admit).
+        self.merge_k.copy_from_slice(self.hi[p].k_slot(n));
+        self.merge_v.copy_from_slice(self.hi[p].v_slot(n));
+        let total = fold_v_into(&mut self.merge_v, v, m_n, m_v);
+        self.hi[p].admit(n, &self.merge_k, &self.merge_v);
+        let noff = nidx * self.d;
+        self.k_hi_buf[noff..noff + self.d].copy_from_slice(self.hi[p].k_slot(n));
+        self.v_hi_buf[noff..noff + self.d].copy_from_slice(self.hi[p].v_slot(n));
+        self.dirty.mark(n);
+
+        self.merge_mass[nidx] = total;
+        self.merge_mass[idx] = 0.0;
+        self.placement[idx] = Placement::Merged;
+        self.ledger.merges += 1;
+        self.ledger.folded_mass += m_v as f64;
     }
 
     /// Promote a lo slot back into the hi tier: stage its dequantized K/V
@@ -779,7 +906,8 @@ impl CacheManager {
     /// Allocation-free [`Self::effective_kv`]: write the effective K/V of
     /// `(plane, slot)` into caller buffers (each `[head_dim]`), borrowing
     /// hi slots directly and fused-dequantizing lo slots. Returns `false`
-    /// (buffers untouched) if the slot is evicted/empty.
+    /// (buffers untouched) if the slot is evicted/merged/empty — a merged
+    /// slot's own row is gone; its mass is read through its neighbor.
     pub fn effective_kv_into(
         &self,
         p: usize,
@@ -821,7 +949,10 @@ impl CacheManager {
                 match self.placement(p, s) {
                     Placement::Hi => occ.hi_slots += 1,
                     Placement::Lo => occ.lo_slots += 1,
-                    Placement::Evicted => occ.evicted_slots += 1,
+                    // A merged slot stores no bits of its own (its value
+                    // mass lives inside its neighbor's row), so for memory
+                    // accounting it counts with the evicted slots.
+                    Placement::Evicted | Placement::Merged => occ.evicted_slots += 1,
                     Placement::Empty => {}
                 }
             }
@@ -858,6 +989,8 @@ impl CacheManager {
             + self.scratch_u8.len()
             + self.scratch_f32.len() * f32b
             + (self.scratch_k.len() + self.scratch_v.len()) * f32b
+            + (self.merge_k.len() + self.merge_v.len()) * f32b
+            + self.merge_mass.len() * f32b
             + self.dirty.host_bytes();
         HostFootprint {
             shadow_bytes,
@@ -891,11 +1024,15 @@ impl CacheManager {
                             return Err(format!("lo slot ({p},{s}) masks ({hm},{lm})"));
                         }
                     }
-                    Placement::Evicted | Placement::Empty => {
+                    Placement::Evicted | Placement::Merged | Placement::Empty => {
                         if hm != 0.0 || lm != 0.0 {
-                            return Err(format!("empty slot ({p},{s}) masks ({hm},{lm})"));
+                            return Err(format!("storageless slot ({p},{s}) masks ({hm},{lm})"));
                         }
                     }
+                }
+                let mass = self.merge_mass[idx];
+                if !mass.is_finite() || mass < 0.0 {
+                    return Err(format!("slot ({p},{s}) merge mass {mass}"));
                 }
             }
             if hi_n != self.hi_count[p] {
@@ -927,6 +1064,13 @@ impl CacheManager {
         w.put_u32(self.step);
         w.put_u64(self.promo.promotions);
         w.put_u64(self.promo.thrash_suppressed);
+        if self.cfg.merge.is_some() {
+            // Merge ledger; the f64 totals travel as raw bits so the
+            // round trip is exact.
+            w.put_u64(self.ledger.merges);
+            w.put_u64(self.ledger.folded_mass.to_bits());
+            w.put_u64(self.ledger.seeded_mass.to_bits());
+        }
         for p in 0..self.planes {
             w.put_f32_slice(&self.balancers[p].b);
         }
@@ -939,8 +1083,12 @@ impl CacheManager {
                     Placement::Lo => 1,
                     Placement::Evicted => 2,
                     Placement::Empty => 3,
+                    Placement::Merged => 4,
                 });
                 w.put_u32(self.tier_since[idx]);
+                if self.cfg.merge.is_some() {
+                    w.put_f32(self.merge_mass[idx]);
+                }
                 match pl {
                     Placement::Hi => {
                         w.put_f32_slice(self.hi[p].k_slot(s));
@@ -956,7 +1104,7 @@ impl CacheManager {
                         w.put_f32_slice(vs);
                         w.put_f32_slice(vz);
                     }
-                    Placement::Evicted | Placement::Empty => {}
+                    Placement::Evicted | Placement::Merged | Placement::Empty => {}
                 }
             }
         }
@@ -993,6 +1141,18 @@ impl CacheManager {
         m.step = r.u32()?;
         m.promo.promotions = r.u64()?;
         m.promo.thrash_suppressed = r.u64()?;
+        if m.cfg.merge.is_some() {
+            m.ledger.merges = r.u64()?;
+            m.ledger.folded_mass = f64::from_bits(r.u64()?);
+            m.ledger.seeded_mass = f64::from_bits(r.u64()?);
+            if !m.ledger.folded_mass.is_finite()
+                || !m.ledger.seeded_mass.is_finite()
+                || m.ledger.folded_mass < 0.0
+                || m.ledger.seeded_mass < 0.0
+            {
+                return Err(SpillError::Malformed("merge ledger"));
+            }
+        }
         // Sizes the blocks exactly as the live manager had them: capacity
         // growth is monotone in seq_len, so round_cap(seq_len) is the cap
         // the spilled manager ended at.
@@ -1025,6 +1185,13 @@ impl CacheManager {
                 let idx = p * m.cap + s;
                 let tag = r.u8()?;
                 m.tier_since[idx] = r.u32()?;
+                if m.cfg.merge.is_some() {
+                    let mass = r.f32()?;
+                    if !mass.is_finite() || mass < 0.0 {
+                        return Err(SpillError::Malformed("merge mass"));
+                    }
+                    m.merge_mass[idx] = mass;
+                }
                 match tag {
                     0 => {
                         r.f32_into(&mut kbuf)?;
@@ -1064,6 +1231,9 @@ impl CacheManager {
                         m.placement[idx] = Placement::Lo;
                     }
                     2 => m.placement[idx] = Placement::Evicted,
+                    // A merged slot can only be produced with merge on; a
+                    // tag-4 slot in a merge-off snapshot is hostile bytes.
+                    4 if m.cfg.merge.is_some() => m.placement[idx] = Placement::Merged,
                     _ => return Err(SpillError::Malformed("placement tag")),
                 }
             }
@@ -1085,7 +1255,7 @@ impl CacheManager {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::kvcache::PromotionConfig;
+    use crate::kvcache::{MergeConfig, MergeLedger, PromotionConfig};
     use crate::policies::{make_policy, H2oPolicy};
     use crate::quant::Precision;
     use crate::util::rng::Pcg32;
@@ -1919,6 +2089,282 @@ mod tests {
             m.promotion_stats().promotions > 0,
             "the run must actually exercise promotion"
         );
+    }
+
+    // ------------------------------------------------------------------
+    // Merge (the third lifecycle outcome)
+    // ------------------------------------------------------------------
+
+    /// Default-off regression lock: without `merge` in the config the
+    /// Evict lifecycle is exactly the historical drop-on-demote — zero
+    /// ledger, no `Merged` placements, no mass accumulators.
+    #[test]
+    fn merge_off_is_inert() {
+        let mut m = manager(0.25, RetentionMode::Evict);
+        let mut rng = Pcg32::new(52);
+        let t0 = 16;
+        let (k, v, acc, qmax, kmax) = prefill_data(m.config(), t0, &mut rng);
+        m.ingest_prefill(t0, &k, &v, &acc, &qmax, &kmax);
+        let planes = 4usize;
+        let (d, s_max) = (8usize, 32usize);
+        for _ in 0..6 {
+            let k_new: Vec<f32> = (0..planes * d).map(|_| rng.gen_normal()).collect();
+            let attn_prev: Vec<f32> = (0..planes * s_max).map(|_| rng.gen_f32() * 0.1).collect();
+            let attn_self: Vec<f32> = (0..planes).map(|_| rng.gen_f32() * 0.1).collect();
+            m.append_token(StepOutputs {
+                k_new: &k_new,
+                v_new: &k_new,
+                attn_prev: &attn_prev,
+                attn_self: &attn_self,
+            });
+        }
+        assert_eq!(m.merge_ledger(), MergeLedger::default());
+        for p in 0..planes {
+            for s in 0..m.seq_len() {
+                assert_ne!(m.placement(p, s), Placement::Merged, "({p},{s})");
+                assert_eq!(m.merge_mass(p, s), 0.0, "({p},{s})");
+            }
+        }
+        assert!(m.occupancy().evicted_slots > 0, "the run must actually evict");
+    }
+
+    /// The fold itself, against a merge-off twin fed identical inputs:
+    /// every slot the baseline evicts is `Merged` instead (tier decisions
+    /// are untouched by the feature), K rows are bit-identical everywhere
+    /// (a fold never moves a key), at least one neighbor V row absorbed
+    /// mass, and the mass ledger balances against the live accumulators.
+    #[test]
+    fn merge_folds_victim_into_neighbor() {
+        let mut cfg = small_cfg(0.25, RetentionMode::Evict);
+        cfg.merge = Some(MergeConfig::default());
+        let planes = cfg.layers * cfg.kv_heads;
+        let policy_on = Box::new(H2oPolicy::new(planes, cfg.max_seq));
+        let policy_off = Box::new(H2oPolicy::new(planes, cfg.max_seq));
+        let mut on = CacheManager::new(cfg, policy_on);
+        let mut off = CacheManager::new(small_cfg(0.25, RetentionMode::Evict), policy_off);
+
+        let mut rng = Pcg32::new(51);
+        let t0 = 16;
+        let (k, v, acc, qmax, kmax) = prefill_data(on.config(), t0, &mut rng);
+        on.ingest_prefill(t0, &k, &v, &acc, &qmax, &kmax);
+        off.ingest_prefill(t0, &k, &v, &acc, &qmax, &kmax);
+        let (d, s_max) = (8usize, 32usize);
+        for _ in 0..6 {
+            let k_new: Vec<f32> = (0..planes * d).map(|_| rng.gen_normal()).collect();
+            let v_new: Vec<f32> = (0..planes * d).map(|_| rng.gen_normal()).collect();
+            let attn_prev: Vec<f32> = (0..planes * s_max).map(|_| rng.gen_f32() * 0.1).collect();
+            let attn_self: Vec<f32> = (0..planes).map(|_| rng.gen_f32() * 0.1).collect();
+            on.append_token(StepOutputs {
+                k_new: &k_new,
+                v_new: &v_new,
+                attn_prev: &attn_prev,
+                attn_self: &attn_self,
+            });
+            off.append_token(StepOutputs {
+                k_new: &k_new,
+                v_new: &v_new,
+                attn_prev: &attn_prev,
+                attn_self: &attn_self,
+            });
+        }
+        on.check_invariants().unwrap();
+
+        let ledger = on.merge_ledger();
+        assert!(ledger.merges > 0, "the run must actually fold");
+        assert_eq!(off.merge_ledger(), MergeLedger::default());
+        let t = on.seq_len();
+        let mut merged_n = 0u64;
+        let mut live_mass = 0.0f64;
+        let mut v_diff = false;
+        for p in 0..planes {
+            for s in 0..t {
+                live_mass += on.merge_mass(p, s) as f64;
+                match off.placement(p, s) {
+                    Placement::Evicted => {
+                        assert_eq!(on.placement(p, s), Placement::Merged, "({p},{s})");
+                        merged_n += 1;
+                        assert!(on.effective_kv(p, s).is_none(), "({p},{s})");
+                    }
+                    Placement::Hi => {
+                        assert_eq!(on.placement(p, s), Placement::Hi, "({p},{s})");
+                        let (k_on, v_on) = on.effective_kv(p, s).unwrap();
+                        let (k_off, v_off) = off.effective_kv(p, s).unwrap();
+                        assert_eq!(k_on, k_off, "({p},{s}): a fold must never touch a K row");
+                        assert!(k_on.iter().chain(v_on.iter()).all(|x| x.is_finite()));
+                        if v_on != v_off {
+                            v_diff = true;
+                        }
+                    }
+                    other => panic!("baseline ({p},{s}) is {other:?} under Evict"),
+                }
+            }
+        }
+        assert_eq!(merged_n, ledger.merges, "every fold leaves exactly one Merged slot");
+        assert!(v_diff, "at least one neighbor V row absorbed folded mass");
+        let expect = ledger.expected_live_mass();
+        assert!(
+            (live_mass - expect).abs() <= expect.abs() * 1e-3 + 1e-6,
+            "mass conservation: live {live_mass} vs seeded {expect}"
+        );
+    }
+
+    /// Merge lifecycle property (paper's "no token left behind" for the
+    /// Evict+merge arm): after arbitrary prefill/append runs — random
+    /// ratio, recency window, neighbor window, policy (including the
+    /// attention-free lagkv) —
+    ///
+    /// * structural invariants and the hi budget hold after every step;
+    /// * nothing is ever plain-`Evicted`: every victim folds (a retained
+    ///   neighbor always exists), so `Merged` count == ledger merges;
+    /// * merged mass is conserved into neighbors: Σ live accumulators ==
+    ///   Σ seeded mass (folds move mass, never mint or drop it);
+    /// * every surviving slot dequantizes finite.
+    #[test]
+    fn property_merge_lifecycle_invariants() {
+        use crate::util::prop::{forall, Config};
+
+        forall(Config::default().cases(30).name("merge lifecycle"), |rng| {
+            let max_seq = 48usize;
+            let ratio = *rng.choose(&[0.1f64, 0.25, 0.5]);
+            let mut cfg = CacheConfig::mikv(2, 2, 8, max_seq, ratio, Precision::Int4);
+            cfg.retention = RetentionMode::Evict;
+            cfg.recent_window = 1 + rng.gen_below(4) as usize;
+            cfg.merge = Some(MergeConfig {
+                neighbor_window: *rng.choose(&[0usize, 2, 8, 64]),
+                min_mass: 1e-6,
+            });
+            let planes = cfg.layers * cfg.kv_heads;
+            let policy_name = *rng.choose(&["h2o", "local", "random", "lagkv"]);
+            let policy = make_policy(policy_name, planes, max_seq, rng.next_u64())
+                .expect("known policy");
+            let mut m = CacheManager::new(cfg, policy);
+
+            let t0 = 1 + rng.gen_below(16) as usize;
+            let (k, v, acc, qmax, kmax) = prefill_data(m.config(), t0, rng);
+            m.ingest_prefill(t0, &k, &v, &acc, &qmax, &kmax);
+
+            let d = m.config().head_dim;
+            let steps = (rng.gen_below(24) as usize).min(max_seq - t0);
+            for step in 0..=steps {
+                if step > 0 {
+                    let k_new: Vec<f32> = (0..planes * d).map(|_| rng.gen_normal()).collect();
+                    let v_new: Vec<f32> = (0..planes * d).map(|_| rng.gen_normal()).collect();
+                    let attn_prev: Vec<f32> =
+                        (0..planes * max_seq).map(|_| rng.gen_f32() * 0.1).collect();
+                    let attn_self: Vec<f32> = (0..planes).map(|_| rng.gen_f32() * 0.1).collect();
+                    m.append_token(StepOutputs {
+                        k_new: &k_new,
+                        v_new: &v_new,
+                        attn_prev: &attn_prev,
+                        attn_self: &attn_self,
+                    });
+                }
+                m.check_invariants().map_err(|e| format!("step {step}: {e}"))?;
+                let t = m.seq_len();
+                let budget = m.config().hi_budget(t);
+                let mut merged_n = 0u64;
+                let mut live_mass = 0.0f64;
+                for p in 0..planes {
+                    let mut hi_n = 0usize;
+                    for s in 0..t {
+                        live_mass += m.merge_mass(p, s) as f64;
+                        match m.placement(p, s) {
+                            Placement::Hi => {
+                                hi_n += 1;
+                                let (kk, vv) =
+                                    m.effective_kv(p, s).ok_or("hi slot unreadable")?;
+                                crate::prop_assert!(
+                                    kk.iter().chain(vv.iter()).all(|x| x.is_finite()),
+                                    "({p},{s}) non-finite after folds"
+                                );
+                            }
+                            Placement::Merged => merged_n += 1,
+                            other => {
+                                return Err(format!(
+                                    "step {step}: ({p},{s}) is {other:?} under Evict+merge"
+                                ))
+                            }
+                        }
+                    }
+                    crate::prop_assert!(
+                        hi_n <= budget,
+                        "plane {p}: hi {hi_n} > budget {budget} at t={t}"
+                    );
+                }
+                let ledger = m.merge_ledger();
+                crate::prop_assert!(
+                    merged_n == ledger.merges,
+                    "Merged slots {merged_n} != ledger merges {}",
+                    ledger.merges
+                );
+                let expect = ledger.expected_live_mass();
+                crate::prop_assert!(
+                    (live_mass - expect).abs() <= expect.abs() * 1e-3 + 1e-6,
+                    "mass leak at step {step}: live {live_mass} vs seeded {expect}"
+                );
+            }
+            Ok(())
+        });
+    }
+
+    /// Merge mutations are delta-trackable: with folds firing, the drained
+    /// dirty rows applied to a stale shadow copy reproduce the live shadow
+    /// bit-for-bit — the victim's hi clear AND the neighbor's folded V row
+    /// both land in the take (the same contract locked for append/demote
+    /// and promotion).
+    #[test]
+    fn dirty_rows_cover_merge_mutations() {
+        let mut cfg = small_cfg(0.25, RetentionMode::Evict);
+        cfg.merge = Some(MergeConfig::default());
+        let planes = cfg.layers * cfg.kv_heads;
+        let policy = Box::new(H2oPolicy::new(planes, cfg.max_seq));
+        let mut m = CacheManager::new(cfg, policy);
+        let mut rng = Pcg32::new(53);
+        let t0 = 12;
+        let (k, v, acc, qmax, kmax) = prefill_data(m.config(), t0, &mut rng);
+        m.ingest_prefill(t0, &k, &v, &acc, &qmax, &kmax);
+
+        let mut rows = Vec::new();
+        assert!(m.take_dirty_into(&mut rows).all);
+
+        let snap = |m: &CacheManager| -> Vec<Vec<f32>> {
+            let vs = m.decode_views();
+            vec![
+                vs.k_hi.to_vec(), vs.v_hi.to_vec(), vs.hi_mask.to_vec(),
+                vs.k_lo_codes.to_vec(), vs.k_lo_scale.to_vec(), vs.k_lo_zero.to_vec(),
+                vs.v_lo_codes.to_vec(), vs.v_lo_scale.to_vec(), vs.v_lo_zero.to_vec(),
+                vs.lo_mask.to_vec(),
+            ]
+        };
+        let widths = [8usize, 8, 1, 8, 2, 2, 8, 2, 2, 1];
+        let mut stale = snap(&m);
+        let cap = m.capacity();
+
+        for _ in 0..3 {
+            let k_new: Vec<f32> = (0..planes * 8).map(|_| rng.gen_normal()).collect();
+            let attn_prev: Vec<f32> = (0..planes * 32).map(|_| rng.gen_f32() * 0.1).collect();
+            let attn_self: Vec<f32> = (0..planes).map(|_| rng.gen_f32() * 0.1).collect();
+            m.append_token(StepOutputs {
+                k_new: &k_new,
+                v_new: &k_new,
+                attn_prev: &attn_prev,
+                attn_self: &attn_self,
+            });
+            let take = m.take_dirty_into(&mut rows);
+            assert!(!take.all, "append+merge stays delta-trackable");
+            assert_eq!(m.capacity(), cap, "stride stable for the patch");
+            let now = snap(&m);
+            for (b, &w) in widths.iter().enumerate() {
+                for p in 0..planes {
+                    for &r in &rows {
+                        let o = (p * cap + r) * w;
+                        stale[b][o..o + w].copy_from_slice(&now[b][o..o + w]);
+                    }
+                }
+                assert_eq!(stale[b], now[b], "block {b}: dirty rows incomplete");
+            }
+        }
+        assert!(m.merge_ledger().merges > 0, "the run must actually fold");
     }
 
     #[test]

@@ -1,0 +1,186 @@
+//! Merge-instead-of-drop: the WeightedKV-style third lifecycle outcome.
+//!
+//! In `RetentionMode::Evict` a demotion victim is normally discarded — the
+//! failure mode the paper's headline contrast is built on. With the opt-in
+//! [`MergeConfig`] the victim instead *folds into its nearest retained
+//! neighbor*: the neighbor keeps its own K row (queries keep addressing it
+//! where they always did) while its V row becomes the attention-mass-weighted
+//! average of both V rows (WeightedKV, PAPERS.md). Each retained slot carries
+//! an accumulated merge mass so repeated folds stay correctly weighted:
+//!
+//! ```text
+//!   V_n' = (m_n · V_n + m_v · V_v) / (m_n + m_v)      m_n' = m_n + m_v
+//! ```
+//!
+//! where `m` is the policy's attention mass (floored at
+//! [`MergeConfig::min_mass`] so signal-free policies still fold finitely),
+//! plus whatever mass the slot already absorbed. The fold kernels here are
+//! allocation-free — they run inside `CacheManager::append_token`'s budget
+//! enforcement loop, which is decode-hot-path code (this module is in the
+//! `mikv-lint` `hot-path-alloc-free` scope) — and the mass bookkeeping is
+//! exact: `CacheManager`'s property suite checks that the total mass seeded
+//! plus folded equals the mass held by live slots, i.e. no victim's
+//! contribution is silently lost.
+
+/// Opt-in configuration of the merge lifecycle. Meaningful only in
+/// `RetentionMode::Evict` (in `Retain` mode demotions land in the lo tier
+/// and nothing is ever dropped); `None` keeps drop-on-demote bit-identical.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MergeConfig {
+    /// Preferred neighbor search radius in slot-index distance. The nearest
+    /// retained slot within the window is the fold target; if none exists
+    /// the search widens to the whole sequence (there is always at least
+    /// one retained slot — the hi tier is never empty while tokens exist),
+    /// so a victim's mass is never dropped. `0` means unbounded from the
+    /// start.
+    pub neighbor_window: usize,
+    /// Floor on a slot's attention mass when used as a fold weight. Keeps
+    /// weights strictly positive (and the fold finite) under policies whose
+    /// scores can be 0 — e.g. `local`'s slot 0, or `lagkv` before its lag
+    /// window fills.
+    pub min_mass: f32,
+}
+
+impl Default for MergeConfig {
+    fn default() -> Self {
+        Self {
+            neighbor_window: 64,
+            min_mass: 1e-6,
+        }
+    }
+}
+
+/// Fold a victim V row into a retained neighbor V row, in place:
+/// `v_neighbor ← (m_n·v_neighbor + m_v·v_victim) / (m_n + m_v)`.
+/// Both masses must be strictly positive (caller floors via
+/// [`MergeConfig::min_mass`]). Returns the neighbor's new accumulated mass.
+pub fn fold_v_into(v_neighbor: &mut [f32], v_victim: &[f32], m_n: f32, m_v: f32) -> f32 {
+    debug_assert!(v_neighbor.len() == v_victim.len());
+    debug_assert!(m_n > 0.0 && m_v > 0.0);
+    let total = m_n + m_v;
+    let wn = m_n / total;
+    let wv = m_v / total;
+    for (n, &v) in v_neighbor.iter_mut().zip(v_victim.iter()) {
+        *n = wn * *n + wv * v;
+    }
+    total
+}
+
+/// Nearest retained slot to `victim` among `is_retained` candidates,
+/// preferring the `neighbor_window` radius and widening to the whole range
+/// when the window is empty. Ties (equal distance left/right) break toward
+/// the *older* (lower-index) slot, matching WeightedKV's fold direction.
+/// Returns `None` only when no slot except the victim is retained.
+pub fn nearest_retained<F>(
+    victim: usize,
+    seq_len: usize,
+    neighbor_window: usize,
+    is_retained: F,
+) -> Option<usize>
+where
+    F: Fn(usize) -> bool,
+{
+    let window = if neighbor_window == 0 {
+        seq_len
+    } else {
+        neighbor_window
+    };
+    for radius in 1..seq_len.max(1) {
+        let widened = radius > window;
+        let below = victim.checked_sub(radius);
+        let above = victim + radius;
+        if let Some(b) = below {
+            if is_retained(b) {
+                return Some(b);
+            }
+        }
+        if above < seq_len && is_retained(above) {
+            return Some(above);
+        }
+        // Window exhausted with no hit: keep widening — dropping mass is
+        // worse than a far fold. (`widened` only documents the phase.)
+        let _ = widened;
+    }
+    None
+}
+
+/// Running totals of the merge lifecycle, reported through session stats
+/// and checked by the mass-conservation property test.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MergeLedger {
+    /// Completed folds (victim → neighbor).
+    pub merges: u64,
+    /// Σ of victim masses moved into neighbors (flow diagnostic; a victim
+    /// that had itself absorbed earlier folds moves its whole accumulator).
+    pub folded_mass: f64,
+    /// Σ of first-touch masses: a slot's *own* attention mass enters the
+    /// accumulator system exactly once, the first time it participates in
+    /// a fold (as victim or as neighbor). Folds after that only move
+    /// already-seeded mass around, so this is the conserved total.
+    pub seeded_mass: f64,
+}
+
+impl MergeLedger {
+    /// The mass the live per-slot accumulators must sum to (up to f32
+    /// accumulation error): exactly what was seeded — folds move mass
+    /// between accumulators, they never create or destroy it.
+    pub fn expected_live_mass(&self) -> f64 {
+        self.seeded_mass
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fold_is_weighted_average() {
+        let mut n = [1.0f32, 0.0, 2.0];
+        let v = [3.0f32, 4.0, 2.0];
+        let total = fold_v_into(&mut n, &v, 1.0, 3.0);
+        assert_eq!(total, 4.0);
+        assert!((n[0] - (0.25 * 1.0 + 0.75 * 3.0)).abs() < 1e-6);
+        assert!((n[1] - 3.0).abs() < 1e-6);
+        assert!((n[2] - 2.0).abs() < 1e-6, "equal rows are a fixed point");
+    }
+
+    #[test]
+    fn fold_mass_accumulates_across_repeated_folds() {
+        // folding three unit-mass victims one by one equals the 4-way mean
+        let mut n = [0.0f32];
+        let mut m = 1.0f32;
+        for &x in &[4.0f32, 8.0, 12.0] {
+            m = fold_v_into(&mut n, &[x], m, 1.0);
+        }
+        assert_eq!(m, 4.0);
+        assert!((n[0] - 6.0).abs() < 1e-5, "got {}", n[0]);
+    }
+
+    #[test]
+    fn nearest_prefers_window_then_widens() {
+        let retained = [false, false, true, false, false, false, false, true];
+        let f = |s: usize| retained[s];
+        // victim 4: slot 2 at distance 2 beats slot 7 at distance 3
+        assert_eq!(nearest_retained(4, 8, 64, f), Some(2));
+        // tight window of 1 finds nothing near victim 5 → widens to slot 7
+        assert_eq!(nearest_retained(5, 8, 1, f), Some(7));
+        // equal distances tie toward the older slot
+        let both = [false, false, true, false, true];
+        assert_eq!(nearest_retained(3, 5, 64, |s| both[s]), Some(2));
+        // nothing retained at all
+        assert_eq!(nearest_retained(3, 8, 64, |_| false), None);
+        // unbounded window
+        assert_eq!(nearest_retained(0, 8, 0, f), Some(2));
+    }
+
+    #[test]
+    fn ledger_expectation_is_conserved_seeded_mass() {
+        let l = MergeLedger {
+            merges: 3,
+            folded_mass: 2.5,
+            seeded_mass: 1.25,
+        };
+        assert_eq!(l.expected_live_mass(), 1.25, "folds move mass, never mint it");
+        assert_eq!(MergeLedger::default().expected_live_mass(), 0.0);
+    }
+}

@@ -30,6 +30,7 @@
 pub mod accounting;
 pub mod dirty;
 pub mod manager;
+pub mod merge;
 pub mod pool;
 pub mod spill;
 pub mod tier;
@@ -37,6 +38,7 @@ pub mod tier;
 pub use accounting::HostFootprint;
 pub use dirty::{DirtyTake, DirtyTracker};
 pub use manager::{CacheManager, PromotionStats, StepOutputs};
+pub use merge::{MergeConfig, MergeLedger};
 pub use pool::{BufferPool, PoolStats, PooledBuf};
 pub use spill::{SpillError, SpillResult};
 
@@ -113,6 +115,11 @@ pub enum Placement {
     Hi,
     Lo,
     Evicted,
+    /// Folded into a retained neighbor by the opt-in WeightedKV-style merge
+    /// lifecycle ([`MergeConfig`]): the slot's own storage is gone (like
+    /// `Evicted`) but its value mass lives on, attention-weighted, inside
+    /// the neighbor's V row.
+    Merged,
     /// Slot beyond the current sequence length.
     Empty,
 }
@@ -140,6 +147,11 @@ pub struct CacheConfig {
     /// Opt-in lo→hi promotion on re-access. `None` (the default in every
     /// preset) keeps the historical one-way hi→lo lifecycle exactly.
     pub promotion: Option<PromotionConfig>,
+    /// Opt-in WeightedKV-style merge: in `Evict` retention, a demotion
+    /// victim folds into its nearest retained neighbor instead of being
+    /// dropped (see [`MergeConfig`]). `None` (the default in every preset)
+    /// keeps the drop-on-demote lifecycle bit-for-bit.
+    pub merge: Option<MergeConfig>,
 }
 
 impl CacheConfig {
@@ -163,6 +175,7 @@ impl CacheConfig {
             retention: RetentionMode::Retain,
             outlier_aware: true,
             promotion: None,
+            merge: None,
         }
     }
 
@@ -188,6 +201,7 @@ impl CacheConfig {
             retention: RetentionMode::Retain,
             outlier_aware: true,
             promotion: None,
+            merge: None,
         }
     }
 
@@ -276,5 +290,22 @@ mod tests {
         assert!(p.max_per_step >= 1);
         assert!(p.min_residency >= 1);
         assert!(p.promote_margin > 1.0, "margin must open a hysteresis band");
+    }
+
+    /// Merge is opt-in: every preset leaves it off (the default-off
+    /// regression lock — drop-on-demote stays bit-identical), and the
+    /// default knobs are sane.
+    #[test]
+    fn merge_is_off_in_every_preset() {
+        assert_eq!(CacheConfig::full(2, 2, 8, 32).merge, None);
+        assert_eq!(
+            CacheConfig::mikv(2, 2, 8, 32, 0.25, Precision::Int4).merge,
+            None
+        );
+        assert_eq!(CacheConfig::h2o(2, 2, 8, 32, 0.25).merge, None);
+        assert_eq!(CacheConfig::rtn(2, 2, 8, 32, Precision::Int8).merge, None);
+
+        let m = MergeConfig::default();
+        assert!(m.min_mass > 0.0, "mass floor keeps fold weights finite");
     }
 }

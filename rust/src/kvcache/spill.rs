@@ -30,7 +30,7 @@
 
 use super::manager::CacheManager;
 use super::pool::BufferPool;
-use super::{CacheConfig, PromotionConfig, RetentionMode, TierConfig};
+use super::{CacheConfig, MergeConfig, PromotionConfig, RetentionMode, TierConfig};
 use crate::model::session::{CacheMode, FullCache, Session, SessionCache};
 use crate::policies::make_policy;
 use crate::quant::Precision;
@@ -40,7 +40,9 @@ use crate::runtime::ModelDims;
 pub const MAGIC: [u8; 4] = *b"MKVS";
 /// Current snapshot format version. Bump on any layout change; decoders
 /// reject other versions with [`SpillError::UnsupportedVersion`].
-pub const VERSION: u32 = 1;
+/// v2: cache config gained the merge flag byte (and merge-enabled
+/// snapshots carry the ledger + per-slot fold masses).
+pub const VERSION: u32 = 2;
 /// Frame header length in bytes (magic + version + payload len + checksum).
 pub const HEADER_LEN: usize = 24;
 
@@ -389,6 +391,14 @@ fn put_cache_config(w: &mut Writer, c: &CacheConfig) {
             w.put_f32(p.promote_margin);
         }
     }
+    match c.merge {
+        None => w.put_u8(0),
+        Some(m) => {
+            w.put_u8(1);
+            w.put_u64(m.neighbor_window as u64);
+            w.put_f32(m.min_mass);
+        }
+    }
 }
 
 fn read_cache_config(r: &mut Reader<'_>) -> SpillResult<CacheConfig> {
@@ -436,6 +446,21 @@ fn read_cache_config(r: &mut Reader<'_>) -> SpillResult<CacheConfig> {
         }
         _ => return Err(SpillError::Malformed("promotion flag")),
     };
+    let merge = match r.u8()? {
+        0 => None,
+        1 => {
+            let neighbor_window = r.u64()? as usize;
+            let min_mass = r.f32()?;
+            if !min_mass.is_finite() || min_mass <= 0.0 {
+                return Err(SpillError::Malformed("merge min_mass"));
+            }
+            Some(MergeConfig {
+                neighbor_window,
+                min_mass,
+            })
+        }
+        _ => return Err(SpillError::Malformed("merge flag")),
+    };
     Ok(CacheConfig {
         layers,
         kv_heads,
@@ -448,6 +473,7 @@ fn read_cache_config(r: &mut Reader<'_>) -> SpillResult<CacheConfig> {
         retention,
         outlier_aware,
         promotion,
+        merge,
     })
 }
 
@@ -772,6 +798,10 @@ mod tests {
             min_residency: 3,
             promote_margin: 1.5,
         });
+        cfg.merge = Some(MergeConfig {
+            neighbor_window: 8,
+            min_mass: 1e-5,
+        });
         let mut w = Writer::with_capacity(64);
         put_cache_config(&mut w, &cfg);
         let frame = w.into_frame();
@@ -789,6 +819,17 @@ mod tests {
         assert_eq!(back.retention, cfg.retention);
         assert_eq!(back.outlier_aware, cfg.outlier_aware);
         assert_eq!(back.promotion, cfg.promotion);
+        assert_eq!(back.merge, cfg.merge);
+
+        // merge: None round-trips too (the default-off lock).
+        cfg.merge = None;
+        let mut w = Writer::with_capacity(64);
+        put_cache_config(&mut w, &cfg);
+        let frame = w.into_frame();
+        let mut r = open_frame(&frame).unwrap();
+        let back = read_cache_config(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(back.merge, None);
     }
 
     fn bits_eq(a: &[f32], b: &[f32]) -> bool {
@@ -808,6 +849,13 @@ mod tests {
         if a.promotion_stats() != b.promotion_stats() {
             return Err("promotion stats diverged".into());
         }
+        if a.merge_ledger() != b.merge_ledger() {
+            return Err(format!(
+                "merge ledger {:?} != {:?}",
+                a.merge_ledger(),
+                b.merge_ledger()
+            ));
+        }
         let cfg = a.config();
         let planes = cfg.layers * cfg.kv_heads;
         let d = cfg.head_dim;
@@ -824,6 +872,9 @@ mod tests {
                 }
                 if a.residency(p, s) != b.residency(p, s) {
                     return Err(format!("residency ({p},{s}) diverged"));
+                }
+                if a.merge_mass(p, s).to_bits() != b.merge_mass(p, s).to_bits() {
+                    return Err(format!("merge mass ({p},{s}) not bit-identical"));
                 }
                 let ga = a.effective_kv_into(p, s, &mut ka, &mut va);
                 let gb = b.effective_kv_into(p, s, &mut kb, &mut vb);
@@ -885,6 +936,13 @@ mod tests {
             if rng.gen_bool(0.25) {
                 // eviction-baseline sessions spill too
                 cfg.retention = RetentionMode::Evict;
+                if rng.gen_bool(0.5) {
+                    // ... and merge-enabled ones carry ledger + fold masses
+                    cfg.merge = Some(MergeConfig {
+                        neighbor_window: *rng.choose(&[0usize, 8, 64]),
+                        min_mass: 1e-6,
+                    });
+                }
             }
             if rng.gen_bool(0.5) {
                 cfg.promotion = Some(PromotionConfig {
@@ -893,7 +951,7 @@ mod tests {
                     promote_margin: *rng.choose(&[1.2f32, 1.5, 2.0]),
                 });
             }
-            let policy_name = *rng.choose(&["h2o", "local", "random"]);
+            let policy_name = *rng.choose(&["h2o", "local", "random", "lagkv"]);
             let planes = cfg.layers * cfg.kv_heads;
             let d = cfg.head_dim;
             let id = rng.next_u64();

@@ -141,6 +141,17 @@ fn run(args: &Args) -> anyhow::Result<()> {
                     context: args.get("context", 96usize)?,
                     answer: args.get("answer", 8usize)?,
                 },
+                "needle" => EvalTask::NeedleAtDepth {
+                    depth_pct: args.get("depth", 0u8)?,
+                    haystack: args.get("haystack", 96usize)?,
+                },
+                "drift" => EvalTask::MultiTurnDrift {
+                    turns: args.get("turns", 8usize)?,
+                    probe_every: args.get("probe-every", 2usize)?,
+                },
+                "keyedrecall" => EvalTask::KeyedRecall {
+                    n_keys: args.get("keys", 16usize)?,
+                },
                 other => anyhow::bail!("unknown task '{other}'"),
             };
             let names: Vec<String> =
@@ -153,10 +164,11 @@ fn run(args: &Args) -> anyhow::Result<()> {
             let harness = Harness::new(&engine);
             for o in harness.run(&task, &modes, n)? {
                 println!(
-                    "{:<18} {:<9} acc {:>6.1}%  cache {:>6.1}%  (n={})",
+                    "{:<18} {:<9} acc {:>6.1}%  worst-bucket {:>6.1}%  cache {:>6.1}%  (n={})",
                     o.mode_name,
                     o.task,
                     100.0 * o.accuracy,
+                    100.0 * o.worst_bucket,
                     o.cache_pct,
                     o.n_samples
                 );

@@ -81,7 +81,10 @@ impl CacheMode {
     /// `mikv:<ratio>:<lo>[:<flag>...]` with flags `nobal` (disable outlier
     /// awareness), `hi=<prec>` (quantized importance cache, paper §3.3),
     /// `policy=<name>`, `recent=<n>`, `group=<n>`, `promote` (enable the
-    /// lo→hi promotion pass with default knobs).
+    /// lo→hi promotion pass with default knobs), `evict` (drop demoted
+    /// tokens instead of retaining them lo — the eviction baseline with
+    /// every other knob still addressable), `merge` (WeightedKV-style
+    /// merge-instead-of-drop with default knobs; meaningful with `evict`).
     pub fn parse(s: &str, dims: &ModelDims) -> crate::Result<CacheMode> {
         let parts: Vec<&str> = s.split(':').collect();
         let prec = |p: &str| {
@@ -114,6 +117,10 @@ impl CacheMode {
                         } else if *flag == "promote" {
                             cfg.promotion =
                                 Some(crate::kvcache::PromotionConfig::default());
+                        } else if *flag == "evict" {
+                            cfg.retention = crate::kvcache::RetentionMode::Evict;
+                        } else if *flag == "merge" {
+                            cfg.merge = Some(crate::kvcache::MergeConfig::default());
                         } else if let Some(p) = flag.strip_prefix("hi=") {
                             let hp = prec(p)?;
                             cfg.hi = if hp.is_quantized() {
@@ -487,6 +494,28 @@ mod tests {
         // promotion stats are zero for the Full baseline
         let s = Session::new(1, &d, CacheMode::Full).unwrap();
         assert_eq!(s.cache.promotion_stats(), PromotionStats::default());
+    }
+
+    #[test]
+    fn mode_parse_evict_and_merge_flags() {
+        let d = dims();
+        match CacheMode::parse("mikv:0.25:int4:evict:merge:policy=lagkv", &d).unwrap() {
+            CacheMode::Mikv { cfg, policy } => {
+                assert_eq!(cfg.retention, crate::kvcache::RetentionMode::Evict);
+                assert_eq!(cfg.merge, Some(crate::kvcache::MergeConfig::default()));
+                assert_eq!(policy, "lagkv");
+            }
+            other => panic!("not mikv: {other:?}"),
+        }
+        // without the flags, retention stays Retain and merge stays off —
+        // the default-off regression lock at the wire grammar level
+        match CacheMode::parse("mikv:0.25:int4", &d).unwrap() {
+            CacheMode::Mikv { cfg, .. } => {
+                assert_eq!(cfg.retention, crate::kvcache::RetentionMode::Retain);
+                assert_eq!(cfg.merge, None);
+            }
+            other => panic!("not mikv: {other:?}"),
+        }
     }
 
     #[test]

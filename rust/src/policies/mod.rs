@@ -11,6 +11,12 @@
 //! * [`LocalPolicy`] — recency (StreamingLLM / window attention style):
 //!   newer is more important.
 //! * [`RandomPolicy`] — uniformly random importance; the ablation control.
+//! * [`LagKvPolicy`] — lag-relative importance from KV statistics only
+//!   (LagKV, PAPERS.md): a slot's K/V rows are min-max normalized against a
+//!   trailing window of recent rows and scored by their channel-wise spread.
+//!   Consumes [`ImportancePolicy::observe_kv`] exclusively — no attention
+//!   plumbing — so it ranks identically under engines that never surface
+//!   attention rows (contract-tested below).
 //!
 //! The **oracle** policy of paper Fig. 3b is not an online policy — it
 //! computes the full-cache attention map first and imposes top-k sparsity
@@ -55,6 +61,13 @@ pub trait ImportancePolicy: Send {
     /// Register that a new token occupies slot `s` (called on every decode
     /// step after `observe`).
     fn admit(&mut self, plane: usize, slot: usize);
+
+    /// Observe the raw K/V rows of a newly admitted slot (prefill and
+    /// decode). This is the attention-free signal channel: engines that
+    /// never surface attention rows still call this, so KV-statistics
+    /// policies ([`LagKvPolicy`]) rank tokens without any attention
+    /// plumbing. Attention-based policies ignore it — the default no-op.
+    fn observe_kv(&mut self, _plane: usize, _slot: usize, _k: &[f32], _v: &[f32]) {}
 
     /// Current importance score of a slot (higher = keep in hi tier).
     fn score(&self, plane: usize, slot: usize) -> f32;
@@ -352,6 +365,209 @@ impl ImportancePolicy for RandomPolicy {
     }
 }
 
+/// Trailing-window length of [`LagKvPolicy`]: a new slot's K/V rows are
+/// normalized against the statistics of the previous `LAG_WINDOW` rows.
+/// Matches the partition size regime of the LagKV paper (small relative to
+/// typical sequence lengths, large enough for stable per-channel min/max).
+pub const LAG_WINDOW: usize = 16;
+
+/// Lag-relative KV-statistics importance (LagKV, PAPERS.md).
+///
+/// The paper scores each token by min-max normalizing its K and V rows
+/// against a *lag* partition of neighboring tokens and taking the standard
+/// deviation across channels: tokens whose rows deviate from the local
+/// typical range are informative, tokens inside it are redundant. The paper
+/// uses the *next* partition as the reference; an online policy cannot see
+/// the future, so this implementation uses the trailing `LAG_WINDOW` rows —
+/// the same lag-relative signal, causal.
+///
+/// Crucially the signal is derived from the KV rows alone
+/// ([`ImportancePolicy::observe_kv`]); `init_prefill`/`observe`/`observe_at`
+/// are no-ops, so the ranking is identical whether or not the engine
+/// surfaces attention.
+pub struct LagKvPolicy {
+    /// `[plane][slot]` frozen score, computed once at `observe_kv` time.
+    scores: Vec<Vec<f32>>,
+    /// `[plane]` ring of the last `LAG_WINDOW` K rows (`[LAG_WINDOW × d]`,
+    /// grown lazily once the head dim is known).
+    k_ring: Vec<Vec<f32>>,
+    v_ring: Vec<Vec<f32>>,
+    /// `[plane]` total rows observed (ring fill = min(seen, LAG_WINDOW)).
+    seen: Vec<u64>,
+    /// Head dim, discovered at the first `observe_kv`.
+    dim: usize,
+    /// Reusable `[d]` channel min/max scratch (transient, not serialized).
+    mins: Vec<f32>,
+    maxs: Vec<f32>,
+}
+
+impl LagKvPolicy {
+    pub fn new(planes: usize, _max_slots: usize) -> Self {
+        Self {
+            scores: vec![Vec::new(); planes],
+            k_ring: vec![Vec::new(); planes],
+            v_ring: vec![Vec::new(); planes],
+            seen: vec![0; planes],
+            dim: 0,
+            mins: Vec::new(),
+            maxs: Vec::new(),
+        }
+    }
+
+    /// Channel-wise min-max over the filled part of a ring (`rows` rows of
+    /// width `d`), written into `mins`/`maxs`.
+    fn ring_min_max(ring: &[f32], rows: usize, d: usize, mins: &mut [f32], maxs: &mut [f32]) {
+        mins.fill(f32::INFINITY);
+        maxs.fill(f32::NEG_INFINITY);
+        for r in 0..rows {
+            for c in 0..d {
+                let x = ring[r * d + c];
+                if x < mins[c] {
+                    mins[c] = x;
+                }
+                if x > maxs[c] {
+                    maxs[c] = x;
+                }
+            }
+        }
+    }
+
+    /// Std over channels of the min-max-normalized row — the LagKV spread
+    /// statistic. `mins`/`maxs` come from the reference window.
+    fn normalized_std(row: &[f32], mins: &[f32], maxs: &[f32]) -> f32 {
+        let d = row.len();
+        if d == 0 {
+            return 0.0;
+        }
+        let mut sum = 0.0f32;
+        let mut sum2 = 0.0f32;
+        for c in 0..d {
+            let span = maxs[c] - mins[c];
+            let z = if span > 1e-12 {
+                (row[c] - mins[c]) / span
+            } else {
+                0.0
+            };
+            sum += z;
+            sum2 += z * z;
+        }
+        let mean = sum / d as f32;
+        (sum2 / d as f32 - mean * mean).max(0.0).sqrt()
+    }
+}
+
+impl ImportancePolicy for LagKvPolicy {
+    fn name(&self) -> &'static str {
+        "lagkv"
+    }
+
+    // Attention inputs are deliberately ignored: the LagKV contract is that
+    // the ranking is a pure function of the observed KV rows.
+    fn init_prefill(&mut self, _plane: usize, _acc: &[f32]) {}
+    fn observe(&mut self, _plane: usize, _attn: &[f32]) {}
+    fn observe_at(&mut self, _plane: usize, _slot: usize, _mass: f32) {}
+    fn admit(&mut self, _plane: usize, _slot: usize) {}
+
+    fn observe_kv(&mut self, plane: usize, slot: usize, k: &[f32], v: &[f32]) {
+        if self.dim == 0 {
+            self.dim = k.len();
+        }
+        let d = self.dim;
+        debug_assert!(k.len() == d && v.len() == d);
+        if self.k_ring[plane].is_empty() {
+            self.k_ring[plane].resize(LAG_WINDOW * d, 0.0);
+            self.v_ring[plane].resize(LAG_WINDOW * d, 0.0);
+        }
+        let filled = (self.seen[plane] as usize).min(LAG_WINDOW);
+        let score = if filled == 0 {
+            // No reference window yet (the very first row of the plane):
+            // nothing to deviate from.
+            0.0
+        } else {
+            if self.mins.len() < d {
+                self.mins.resize(d, 0.0);
+                self.maxs.resize(d, 0.0);
+            }
+            Self::ring_min_max(&self.k_ring[plane], filled, d, &mut self.mins, &mut self.maxs);
+            let sk = Self::normalized_std(&k[..d], &self.mins[..d], &self.maxs[..d]);
+            Self::ring_min_max(&self.v_ring[plane], filled, d, &mut self.mins, &mut self.maxs);
+            let sv = Self::normalized_std(&v[..d], &self.mins[..d], &self.maxs[..d]);
+            sk + sv
+        };
+        let mine = &mut self.scores[plane];
+        if mine.len() <= slot {
+            mine.resize(slot + 1, 0.0);
+        }
+        mine[slot] = score;
+        // Rotate the row into the window.
+        let pos = (self.seen[plane] as usize % LAG_WINDOW) * d;
+        self.k_ring[plane][pos..pos + d].copy_from_slice(&k[..d]);
+        self.v_ring[plane][pos..pos + d].copy_from_slice(&v[..d]);
+        self.seen[plane] += 1;
+    }
+
+    fn score(&self, plane: usize, slot: usize) -> f32 {
+        self.scores[plane].get(slot).copied().unwrap_or(0.0)
+    }
+
+    fn export_state(&self, out: &mut Vec<u8>) {
+        put_u64(out, self.dim as u64);
+        put_u64(out, self.seen.len() as u64);
+        for &s in &self.seen {
+            put_u64(out, s);
+        }
+        put_plane_vecs(out, &self.scores);
+        put_plane_vecs(out, &self.k_ring);
+        put_plane_vecs(out, &self.v_ring);
+    }
+
+    fn import_state(&mut self, bytes: &[u8]) -> bool {
+        let planes = self.scores.len();
+        let mut pos = 0usize;
+        let Some(dim) = take_u64(bytes, &mut pos) else {
+            return false;
+        };
+        let Some(n_seen) = take_u64(bytes, &mut pos) else {
+            return false;
+        };
+        if n_seen as usize != planes {
+            return false;
+        }
+        let mut seen = Vec::with_capacity(planes);
+        for _ in 0..planes {
+            match take_u64(bytes, &mut pos) {
+                Some(s) => seen.push(s),
+                None => return false,
+            }
+        }
+        let Some(scores) = take_plane_vecs(bytes, &mut pos, planes) else {
+            return false;
+        };
+        let Some(k_ring) = take_plane_vecs(bytes, &mut pos, planes) else {
+            return false;
+        };
+        let Some(v_ring) = take_plane_vecs(bytes, &mut pos, planes) else {
+            return false;
+        };
+        if pos != bytes.len() {
+            return false;
+        }
+        let d = dim as usize;
+        for (kr, vr) in k_ring.iter().zip(&v_ring) {
+            let want = if kr.is_empty() { 0 } else { LAG_WINDOW * d };
+            if kr.len() != want || vr.len() != want {
+                return false;
+            }
+        }
+        self.dim = d;
+        self.seen = seen;
+        self.scores = scores;
+        self.k_ring = k_ring;
+        self.v_ring = v_ring;
+        true
+    }
+}
+
 /// Policy factory by name.
 pub fn make_policy(
     name: &str,
@@ -363,6 +579,7 @@ pub fn make_policy(
         "h2o" => Box::new(H2oPolicy::new(planes, max_slots)),
         "local" => Box::new(LocalPolicy),
         "random" => Box::new(RandomPolicy::new(planes, max_slots, seed)),
+        "lagkv" => Box::new(LagKvPolicy::new(planes, max_slots)),
         _ => return None,
     })
 }
@@ -412,11 +629,127 @@ mod tests {
 
     #[test]
     fn factory_resolves_names() {
-        for name in ["h2o", "local", "random"] {
+        for name in ["h2o", "local", "random", "lagkv"] {
             let p = make_policy(name, 2, 8, 1).unwrap();
             assert_eq!(p.name(), name);
         }
         assert!(make_policy("oracle", 1, 1, 0).is_none()); // lives in the graph
+    }
+
+    /// Deterministic K/V row for LagKV tests: filler rows live in a narrow
+    /// band, the "needle" row is far outside it.
+    fn lag_row(i: usize, needle: bool, d: usize) -> Vec<f32> {
+        (0..d)
+            .map(|c| {
+                if needle {
+                    if c % 2 == 0 {
+                        4.0
+                    } else {
+                        -4.0
+                    }
+                } else {
+                    0.1 * ((i * 7 + c * 3) % 5) as f32
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn lagkv_scores_distinct_row_above_filler() {
+        let d = 16;
+        let mut p = LagKvPolicy::new(1, 64);
+        for s in 0..24 {
+            let needle = s == 20;
+            let row = lag_row(s, needle, d);
+            p.observe_kv(0, s, &row, &row);
+        }
+        let needle_score = p.score(0, 20);
+        // every scored filler slot past the warmup window ranks below it
+        for s in LAG_WINDOW..24 {
+            if s == 20 {
+                continue;
+            }
+            assert!(
+                p.score(0, s) < needle_score,
+                "filler slot {s} ({}) >= needle ({needle_score})",
+                p.score(0, s)
+            );
+        }
+    }
+
+    /// The LagKV contract from the paper: the ranking is a pure function of
+    /// the KV rows. Feeding one policy a full attention stream
+    /// (prefill seed + dense rows + point updates) while the other gets
+    /// none must produce bit-identical scores — the StubEngine/no-attention
+    /// path ranks exactly like the attention-surfacing path.
+    #[test]
+    fn lagkv_ranking_is_attention_free() {
+        let d = 8;
+        let mut with_attn = LagKvPolicy::new(2, 32);
+        let mut without = LagKvPolicy::new(2, 32);
+        with_attn.init_prefill(0, &[0.5; 16]);
+        for s in 0..24 {
+            let k = lag_row(s, s % 9 == 0, d);
+            let v = lag_row(s + 1, s % 7 == 0, d);
+            with_attn.observe_kv(0, s, &k, &v);
+            without.observe_kv(0, s, &k, &v);
+            // attention stream goes only to one of them
+            with_attn.observe(0, &vec![1.0 / (s + 1) as f32; s + 1]);
+            with_attn.observe_at(0, s, 0.9);
+            with_attn.admit(0, s);
+        }
+        for s in 0..24 {
+            assert_eq!(
+                with_attn.score(0, s).to_bits(),
+                without.score(0, s).to_bits(),
+                "slot {s}"
+            );
+        }
+        // and the victim choice (the decision that matters) agrees
+        let candidates: Vec<usize> = (0..24).collect();
+        assert_eq!(
+            with_attn.select_victim(0, &candidates),
+            without.select_victim(0, &candidates)
+        );
+    }
+
+    #[test]
+    fn lagkv_state_round_trip_is_exact() {
+        let d = 8;
+        let mut src = LagKvPolicy::new(2, 32);
+        for s in 0..20 {
+            let k = lag_row(s, s == 10, d);
+            src.observe_kv(0, s, &k, &k);
+        }
+        src.observe_kv(1, 0, &lag_row(0, false, d), &lag_row(1, false, d));
+        let mut blob = Vec::new();
+        src.export_state(&mut blob);
+
+        let mut dst = LagKvPolicy::new(2, 32);
+        assert!(dst.import_state(&blob));
+        for s in 0..20 {
+            assert_eq!(src.score(0, s).to_bits(), dst.score(0, s).to_bits());
+        }
+        // the ring resumed too: the next observation scores identically
+        let next = lag_row(21, false, d);
+        src.observe_kv(0, 20, &next, &next);
+        dst.observe_kv(0, 20, &next, &next);
+        assert_eq!(src.score(0, 20).to_bits(), dst.score(0, 20).to_bits());
+
+        // malformed blobs are rejected
+        let mut q = LagKvPolicy::new(2, 32);
+        assert!(!q.import_state(&blob[..blob.len() - 1]));
+        let mut wrong_planes = LagKvPolicy::new(3, 32);
+        assert!(!wrong_planes.import_state(&blob));
+    }
+
+    #[test]
+    fn lagkv_default_signals_are_inert() {
+        // reaccess stays 0 (promotion is a no-op under LagKV) and scores of
+        // never-observed slots are 0, not a panic.
+        let p = LagKvPolicy::new(1, 4096);
+        assert_eq!(p.reaccess(0, 3), 0.0);
+        assert_eq!(p.score(0, 4000), 0.0);
     }
 
     #[test]

@@ -45,13 +45,17 @@ pub fn panic_free_scope(path: &str) -> bool {
 /// Files subject to `hot-path-alloc-free`. `coordinator/qos.rs` is here
 /// because the DRR pop/push and token-bucket admit run on the scheduler's
 /// admission loop for every turn — steady-state queue churn must recycle
-/// its ring/queue storage, not allocate per op.
+/// its ring/queue storage, not allocate per op. `kvcache/merge.rs` is here
+/// because the fold/nearest-neighbor helpers run inside the per-token
+/// demotion pass of `append_token` — merge must fold in place, never
+/// allocate per evicted slot.
 pub fn alloc_free_scope(path: &str) -> bool {
     matches!(
         path,
         "rust/src/model/assembly.rs"
             | "rust/src/kvcache/dirty.rs"
             | "rust/src/kvcache/tier.rs"
+            | "rust/src/kvcache/merge.rs"
             | "rust/src/kvcache/spill.rs"
             | "rust/src/quant/packing.rs"
             | "rust/src/coordinator/qos.rs"
@@ -372,6 +376,21 @@ mod tests {
         // assembly.rs is in both scopes; only the alloc rule fires here.
         assert_eq!(v.len(), 1);
         assert_eq!(v[0].rule, ALLOC_FREE);
+    }
+
+    #[test]
+    fn merge_module_is_in_alloc_scope() {
+        // The merge fold runs inside the per-token demotion pass: it must
+        // fold into the neighbor's existing storage, never allocate per
+        // evicted slot. It is *not* in the panic-free scope (the manager
+        // validates slot indices before calling in).
+        let src = "fn f() -> Vec<f32> {\n    vec![0.0; 8]\n}\n";
+        let v = violations("rust/src/kvcache/merge.rs", src);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, ALLOC_FREE);
+        let panicky = "fn g(a: &[f32]) -> f32 {\n    a[0]\n}\n";
+        let v = violations("rust/src/kvcache/merge.rs", panicky);
+        assert!(v.is_empty(), "{v:?}");
     }
 
     #[test]
